@@ -1,0 +1,74 @@
+//! Quickstart: load the trained artifacts and translate a few sentences
+//! with both precisions and both backends.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! This is the smallest end-to-end demonstration that the three layers
+//! compose: the Pallas int8 kernels (L1) were lowered into the JAX
+//! translate graph (L2), exported as HLO text, and are executed here by
+//! the Rust coordinator via PJRT (L3) — Python is not involved.
+
+use quantnmt::coordinator::{Backend, Service, ServiceConfig};
+use quantnmt::data::bleu::strip_special;
+use quantnmt::data::Lexicon;
+use quantnmt::quant::calibrate::CalibrationMode;
+use quantnmt::runtime::RtPrecision;
+
+fn main() -> anyhow::Result<()> {
+    let svc = Service::open_default()?;
+    println!("artifacts: {}", svc.dir.display());
+    println!(
+        "model: {} params, {} MatMul sites, calibration census {:?}\n",
+        svc.weights.param_count(),
+        svc.model_cfg.matmul_site_names().len(),
+        svc.calibration.class_census()
+    );
+
+    let ds = svc.dataset()?;
+    let lex = Lexicon::build(&Default::default());
+    let pairs: Vec<_> = ds.test[..6].to_vec();
+
+    for backend in [
+        Backend::EngineF32,
+        Backend::EngineInt8(CalibrationMode::Symmetric),
+        Backend::Runtime(RtPrecision::Fp32),
+        Backend::Runtime(RtPrecision::Int8),
+    ] {
+        let cfg = ServiceConfig {
+            backend,
+            parallel: false,
+            batch_size: 8,
+            ..Default::default()
+        };
+        let (metrics, outputs) = svc.run(&pairs, &cfg)?;
+        let exact = pairs
+            .iter()
+            .zip(&outputs)
+            .filter(|(p, o)| *o == &strip_special(&p.ref_ids))
+            .count();
+        println!(
+            "[{:22}] {}/{} exact, BLEU {:.2}, {:.1} sent/s",
+            backend.label(),
+            exact,
+            pairs.len(),
+            metrics.bleu,
+            metrics.sentences_per_sec()
+        );
+    }
+
+    println!("\nsample translations (engine-int8-symmetric):");
+    let cfg = ServiceConfig {
+        backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+        parallel: false,
+        batch_size: 8,
+        ..Default::default()
+    };
+    let (_, outputs) = svc.run(&pairs, &cfg)?;
+    for (p, o) in pairs.iter().zip(&outputs) {
+        println!("  src: {}", p.text);
+        println!("  out: {}", lex.detokenize(o));
+    }
+    Ok(())
+}

@@ -1,0 +1,226 @@
+"""AOT compile path: dataset -> train -> calibrate -> export -> HLO text.
+
+Run as ``python -m compile.aot --out ../artifacts`` (the Makefile's
+``make artifacts``).  Python never runs again after this: the Rust
+coordinator loads the HLO executables via PJRT and the Rust engine loads
+weights.bin directly.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax>=0.5
+emits HloModuleProto with 64-bit instruction ids that xla_extension
+0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Exports into --out:
+
+  dataset.json       lexicon + valid/test splits + calibration indices
+  weights.bin        trained FP32 parameters (f32 LE)
+  manifest.json      tensor name/shape/offset index into weights.bin
+  calibration.json   per-site histogram class + KL thresholds (all modes)
+  config.json        every constant the Rust side must agree on
+  train_log.json     loss curve (EXPERIMENTS.md provenance)
+  translate_{prec}_b{B}.hlo.txt   greedy-translate executables
+  hlo_index.json     bucket -> file map for runtime::artifacts
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .common import (
+    AotConfig,
+    DataConfig,
+    ModelConfig,
+    TrainConfig,
+    config_dict,
+    EOS_ID,
+    PAD_ID,
+)
+from . import calibrate as C
+from . import datagen
+from . import export
+from . import model as M
+from . import train as T
+from .bleu import corpus_bleu, strip_special
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the only proto-safe path).
+
+    ``print_large_constants=True`` is essential: the default printer
+    elides big literals as ``constant({...})`` and the downstream text
+    parser silently zero-fills them — the baked-in trained weights would
+    arrive in Rust as all-zeros.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions.short_parsable()
+    opts.print_large_constants = True
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_translate(params, cfg: ModelConfig, qctx, batch: int, src_len: int,
+                    tgt_len: int):
+    """Close over weights (-> HLO constants) and lower translate_greedy."""
+
+    def fn(src_ids):
+        out, lengths = M.translate_greedy(params, cfg, src_ids, qctx=qctx,
+                                          max_len=tgt_len)
+        return out, lengths
+
+    spec = jax.ShapeDtypeStruct((batch, src_len), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def quick_bleu(params, cfg, pairs, qctx=None, batch: int = 64, limit: int = 256):
+    """Greedy-translate a subset and score corpus BLEU (sanity signal)."""
+    pairs = pairs[:limit]
+    jit_fn = jax.jit(
+        lambda s: M.translate_greedy(params, cfg, s, qctx=qctx,
+                                     max_len=cfg.max_tgt_len)
+    )
+    hyps, refs = [], []
+    for i in range(0, len(pairs), batch):
+        chunk = pairs[i : i + batch]
+        src = datagen.pad_batch([p["src"] for p in chunk], cfg.max_src_len)
+        out, _ = jit_fn(src)
+        out = np.asarray(out)
+        for row, p in zip(out, chunk):
+            hyps.append(strip_special(row.tolist(), EOS_ID, PAD_ID))
+            refs.append(strip_special(p["ref"], EOS_ID, PAD_ID))
+    return corpus_bleu(hyps, refs)
+
+
+def lower_all(out, params, model_cfg, aot_cfg, qctx):
+    """Lower fp32 + int8 executables for every batch bucket."""
+    index = {"buckets": [], "src_len": aot_cfg.src_bucket,
+             "tgt_len": aot_cfg.tgt_bucket}
+    for batch in aot_cfg.batch_buckets:
+        for prec, ctx in (("fp32", None), ("int8", qctx)):
+            name = f"translate_{prec}_b{batch}.hlo.txt"
+            t1 = time.time()
+            text = lower_translate(params, model_cfg, ctx, batch,
+                                   aot_cfg.src_bucket, aot_cfg.tgt_bucket)
+            with open(os.path.join(out, name), "w") as f:
+                f.write(text)
+            index["buckets"].append(
+                {"file": name, "precision": prec, "batch": batch,
+                 "src_len": aot_cfg.src_bucket, "tgt_len": aot_cfg.tgt_bucket}
+            )
+            print(f"   {name}: {len(text)} chars ({time.time() - t1:.0f}s)")
+    export.write_json(index, out, "hlo_index.json")
+
+
+def hlo_only(out):
+    """Re-lower executables from existing weights + calibration."""
+    model_cfg = ModelConfig()
+    aot_cfg = AotConfig()
+    params = {k: jnp.asarray(v) for k, v in export.load_weights(out).items()}
+    cals, wscales = C.load_calibration(os.path.join(out, "calibration.json"))
+    table = C.build_site_table(model_cfg, cals, wscales, "symmetric")
+    qctx = M.make_qctx(table)
+    print("== HLO lowering (hlo-only) ==")
+    lower_all(out, params, model_cfg, aot_cfg, qctx)
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=None, help="override train steps")
+    ap.add_argument("--force", action="store_true", help="rebuild everything")
+    ap.add_argument("--skip-hlo", action="store_true",
+                    help="stop after calibration export (tests use this)")
+    ap.add_argument("--hlo-only", action="store_true",
+                    help="re-lower HLO from existing weights+calibration")
+    args = ap.parse_args(argv)
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    stamp = os.path.join(out, ".complete")
+    if args.hlo_only:
+        return hlo_only(out)
+    if os.path.exists(stamp) and not args.force:
+        print("artifacts up to date (use --force to rebuild)")
+        return 0
+
+    model_cfg = ModelConfig()
+    data_cfg = DataConfig()
+    train_cfg = TrainConfig()
+    aot_cfg = AotConfig()
+    if args.steps is not None:
+        train_cfg.steps = args.steps
+
+    t0 = time.time()
+    print("== dataset ==")
+    splits = datagen.export_splits(data_cfg, model_cfg)
+    export.write_json(splits, out, "dataset.json")
+    print(f"   valid={len(splits['valid'])} test={len(splits['test'])} "
+          f"calib={len(splits['calibration_indices'])}")
+
+    print("== train ==")
+    have_weights = (
+        os.path.exists(os.path.join(out, "weights.bin"))
+        and os.path.exists(os.path.join(out, "manifest.json"))
+        and not args.force
+    )
+    if have_weights:
+        print("   reusing existing weights.bin")
+        params = {k: jnp.asarray(v) for k, v in export.load_weights(out).items()}
+        history = []
+    else:
+        params, history = T.train(model_cfg, data_cfg, train_cfg)
+        export.write_weights({k: np.asarray(v) for k, v in params.items()}, out)
+    export.write_json(history, out, "train_log.json")
+
+    print("== fp32 sanity BLEU ==")
+    bleu_fp32 = quick_bleu(params, model_cfg, splits["test"])
+    print(f"   fp32 BLEU (256-sentence subset) = {bleu_fp32:.2f}")
+
+    print("== calibration ==")
+    calib_pairs = [splits["valid"][i] for i in splits["calibration_indices"]]
+    cals = C.calibrate_model(params, model_cfg, calib_pairs)
+    wscales = C.weight_scales(params, model_cfg)
+    export.write_json(
+        {
+            "sites": {k: v.to_dict() for k, v in cals.items()},
+            "weight_scales": wscales,
+        },
+        out,
+        "calibration.json",
+    )
+
+    print("== config ==")
+    cfgd = config_dict()
+    cfgd["fp32_bleu_subset"] = bleu_fp32
+    export.write_json(cfgd, out, "config.json")
+
+    if args.skip_hlo:
+        print("== skipping HLO lowering (--skip-hlo) ==")
+        return 0
+
+    print("== int8 sanity BLEU (symmetric) ==")
+    table = C.build_site_table(model_cfg, cals, wscales, "symmetric")
+    qctx = M.make_qctx(table)
+    bleu_int8 = quick_bleu(params, model_cfg, splits["test"], qctx=qctx)
+    print(f"   int8 BLEU (256-sentence subset) = {bleu_int8:.2f}")
+
+    print("== HLO lowering ==")
+    lower_all(out, params, model_cfg, aot_cfg, qctx)
+
+    with open(stamp, "w") as f:
+        f.write(f"built in {time.time() - t0:.0f}s\n")
+    print(f"== done in {time.time() - t0:.0f}s ==")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

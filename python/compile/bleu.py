@@ -1,0 +1,45 @@
+"""Corpus BLEU over token-id sequences (mirrors rust/src/data/bleu.rs).
+
+Standard BLEU-4: modified n-gram precision with clipping, geometric
+mean, brevity penalty.  Operates on token ids (the paper's BLEU is over
+tokenized text; ours is over subword ids, which is equivalent for a
+synthetic language).
+"""
+
+import math
+from collections import Counter
+
+
+def ngrams(seq, n):
+    return Counter(tuple(seq[i : i + n]) for i in range(len(seq) - n + 1))
+
+
+def corpus_bleu(hyps, refs, max_n: int = 4) -> float:
+    """hyps/refs: lists of token-id lists (without EOS/PAD). Returns 0..100."""
+    assert len(hyps) == len(refs)
+    clipped = [0] * max_n
+    total = [0] * max_n
+    hyp_len = ref_len = 0
+    for hyp, ref in zip(hyps, refs):
+        hyp_len += len(hyp)
+        ref_len += len(ref)
+        for n in range(1, max_n + 1):
+            h, r = ngrams(hyp, n), ngrams(ref, n)
+            total[n - 1] += max(len(hyp) - n + 1, 0)
+            clipped[n - 1] += sum(min(c, r[g]) for g, c in h.items())
+    if min(total) == 0 or min(clipped) == 0:
+        return 0.0
+    log_p = sum(math.log(clipped[i] / total[i]) for i in range(max_n)) / max_n
+    bp = 1.0 if hyp_len > ref_len else math.exp(1.0 - ref_len / max(hyp_len, 1))
+    return 100.0 * bp * math.exp(log_p)
+
+
+def strip_special(ids, eos_id: int, pad_id: int):
+    """Truncate at first EOS and drop PADs."""
+    out = []
+    for t in ids:
+        if t == eos_id:
+            break
+        if t != pad_id:
+            out.append(int(t))
+    return out

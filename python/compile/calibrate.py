@@ -1,0 +1,371 @@
+"""Post-training calibration: histograms, KL thresholds, tensor classes.
+
+Implements §4.2 of the paper end to end (mirrored in rust/src/quant):
+
+1. run the trained FP32 model over the 600-sentence calibration subset,
+   collecting per-MatMul-site activation histograms (two passes: one for
+   ranges, one to fill fixed-range histograms);
+2. classify each site's distribution as sparse / narrow / Gaussian
+   (Fig 2) — sparse sites are left unquantized;
+3. search saturation thresholds that minimize the KL divergence between
+   the FP32 histogram and its int8 quantization (Migacz'17 procedure),
+   under the paper's three modes:
+
+   * ``symmetric``   — KL on the |x| distribution, Tmin = -Tmax
+   * ``independent`` — separate KL searches for the negative and
+                       positive halves (non-zero zero point)
+   * ``conjugate``   — independent, then Tmax = max(|Tmin|, |Tmax|)
+
+   plus ``naive`` (absolute min/max, §4.1) as the failing baseline.
+"""
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .common import (
+    HIST_BINS,
+    QUANT_BINS,
+    INT8_MAX,
+    DataConfig,
+    ModelConfig,
+)
+from . import model as M
+from .datagen import pad_batch
+
+EPS = 1e-12
+
+# classifier knobs (Fig 2); mirrored in rust/src/quant/classify.rs
+SPARSE_ZERO_FRAC = 0.50    # >50% of samples exactly/near zero -> sparse
+NARROW_RANGE = 1.5         # dynamic range below this -> narrow
+NEAR_ZERO = 1e-6
+
+
+@dataclass
+class SiteStats:
+    """Streaming per-site statistics + fixed-range histogram."""
+
+    min: float = math.inf
+    max: float = -math.inf
+    count: int = 0
+    zeros: int = 0
+    sum: float = 0.0
+    sumsq: float = 0.0
+    # filled in pass 2:
+    hist_pos: np.ndarray = None   # histogram of x > 0 over [0, max]
+    hist_neg: np.ndarray = None   # histogram of -x for x < 0 over [0, -min]
+    hist_abs: np.ndarray = None   # histogram of |x| over [0, absmax]
+
+    def observe_range(self, x: np.ndarray):
+        x = x.ravel()
+        self.min = min(self.min, float(x.min()))
+        self.max = max(self.max, float(x.max()))
+        self.count += x.size
+        self.zeros += int((np.abs(x) < NEAR_ZERO).sum())
+        self.sum += float(x.sum())
+        self.sumsq += float((x * x).sum())
+
+    @property
+    def absmax(self):
+        return max(abs(self.min), abs(self.max), EPS)
+
+    def observe_hist(self, x: np.ndarray):
+        if self.hist_abs is None:
+            self.hist_abs = np.zeros(HIST_BINS)
+            self.hist_pos = np.zeros(HIST_BINS)
+            self.hist_neg = np.zeros(HIST_BINS)
+        x = x.ravel()
+        # exclude (near-)zeros from all three histograms: zeros quantize
+        # to 0 exactly under any threshold, and their spike otherwise
+        # dominates P and skews the KL search toward over-tight clips
+        # (visible on one-sided post-ReLU tensors).
+        ax = np.abs(x[np.abs(x) > NEAR_ZERO])
+        self.hist_abs += np.histogram(ax, bins=HIST_BINS, range=(0, self.absmax))[0]
+        pos = x[x > NEAR_ZERO]
+        neg = -x[x < -NEAR_ZERO]
+        if pos.size and self.max > 0:
+            self.hist_pos += np.histogram(pos, bins=HIST_BINS, range=(0, max(self.max, EPS)))[0]
+        if neg.size and self.min < 0:
+            self.hist_neg += np.histogram(neg, bins=HIST_BINS, range=(0, -min(self.min, -EPS)))[0]
+
+    def classify(self) -> str:
+        """sparse / narrow / gaussian (Fig 2)."""
+        if self.count == 0:
+            return "narrow"
+        if self.zeros / self.count > SPARSE_ZERO_FRAC:
+            return "sparse"
+        if (self.max - self.min) < NARROW_RANGE:
+            return "narrow"
+        return "gaussian"
+
+
+def kl_divergence(p: np.ndarray, q: np.ndarray) -> float:
+    """KL(P||Q) with smoothing over empty Q bins (TensorRT recipe)."""
+    p = p.astype(np.float64)
+    q = q.astype(np.float64)
+    ps = p.sum()
+    qs = q.sum()
+    if ps <= 0 or qs <= 0:
+        return math.inf
+    p = p / ps
+    q = q / qs
+    mask = p > 0
+    q = np.where(q > 0, q, EPS)
+    return float(np.sum(p[mask] * np.log(p[mask] / q[mask])))
+
+
+def quantize_hist(ref: np.ndarray, levels: int = QUANT_BINS) -> np.ndarray:
+    """Collapse ``ref`` into ``levels`` buckets and re-expand, preserving
+    mass only over originally non-empty bins (Migacz'17)."""
+    n = len(ref)
+    out = np.zeros(n)
+    edges = np.linspace(0, n, levels + 1).astype(int)
+    for lo, hi in zip(edges[:-1], edges[1:]):
+        if hi <= lo:
+            continue
+        chunk = ref[lo:hi]
+        nz = chunk > 0
+        k = int(nz.sum())
+        if k == 0:
+            continue
+        out[lo:hi][nz] = chunk[nz].sum() / k
+    return out
+
+
+def kl_threshold(hist: np.ndarray, bin_width: float,
+                 min_bins: int = QUANT_BINS, stride: int = 16) -> float:
+    """Find the saturation threshold minimizing KL(P||Q).
+
+    hist: histogram of non-negative magnitudes over [0, bins*bin_width].
+    Scans candidate clip points i in [min_bins, len(hist)]; outlier mass
+    beyond i is folded into the last kept bin of P (saturation).
+    """
+    total = hist.sum()
+    if total <= 0:
+        return max(bin_width * len(hist), EPS)
+    best_i, best_kl = len(hist), math.inf
+    for i in range(min_bins, len(hist) + 1, stride):
+        # P: clipped histogram with the outlier mass folded into the edge
+        # bin (that is what saturation does to the real distribution).
+        p = hist[:i].astype(np.float64).copy()
+        outliers = hist[i:].sum()
+        p[-1] += outliers
+        # Q: quantized from the *unfolded* clipped histogram — the
+        # asymmetry (P sees the fold, Q does not) is what penalizes
+        # aggressive clipping; quantizing the folded P instead makes
+        # i=min_bins trivially optimal (KL=0) and wrecks accuracy.
+        q = quantize_hist(hist[:i].astype(np.float64))
+        kl = kl_divergence(p, q)
+        if kl < best_kl:
+            best_kl, best_i = kl, i
+    return best_i * bin_width
+
+
+@dataclass
+class SiteCalibration:
+    """Everything the quantizer needs for one MatMul site (JSON-exported)."""
+
+    name: str
+    klass: str                      # sparse | narrow | gaussian
+    amin: float
+    amax: float
+    thr_symmetric: float            # T: range [-T, T]
+    thr_independent: tuple          # (Tmin, Tmax)
+    thr_conjugate: float
+    count: int
+    zero_frac: float
+    mean: float
+    std: float
+
+    def to_dict(self):
+        return {
+            "name": self.name,
+            "class": self.klass,
+            "min": self.amin,
+            "max": self.amax,
+            "symmetric": self.thr_symmetric,
+            "independent": list(self.thr_independent),
+            "conjugate": self.thr_conjugate,
+            "count": self.count,
+            "zero_frac": self.zero_frac,
+            "mean": self.mean,
+            "std": self.std,
+        }
+
+
+def calibrate_site(name: str, st: SiteStats) -> SiteCalibration:
+    t_sym = kl_threshold(st.hist_abs, st.absmax / HIST_BINS)
+    t_pos = (
+        kl_threshold(st.hist_pos, max(st.max, EPS) / HIST_BINS)
+        if st.max > 0 else EPS
+    )
+    t_neg = (
+        kl_threshold(st.hist_neg, max(-st.min, EPS) / HIST_BINS)
+        if st.min < 0 else EPS
+    )
+    mean = st.sum / max(st.count, 1)
+    var = max(st.sumsq / max(st.count, 1) - mean * mean, 0.0)
+    return SiteCalibration(
+        name=name,
+        klass=st.classify(),
+        amin=st.min,
+        amax=st.max,
+        thr_symmetric=t_sym,
+        thr_independent=(-t_neg, t_pos),
+        thr_conjugate=max(t_pos, t_neg),
+        count=st.count,
+        zero_frac=st.zeros / max(st.count, 1),
+        mean=mean,
+        std=math.sqrt(var),
+    )
+
+
+# --------------------------------------------------------------------------
+# scale/zero-point derivation per mode (mirrors rust quant::scheme)
+# --------------------------------------------------------------------------
+
+def scale_for_mode(cal: SiteCalibration, mode: str):
+    """Returns (a_scale, a_zero) for quantizing the site's A operand."""
+    if mode == "naive":
+        lo, hi = cal.amin, cal.amax
+        t = max(abs(lo), abs(hi), EPS)
+        return t / INT8_MAX, 0
+    if mode == "symmetric":
+        return max(cal.thr_symmetric, EPS) / INT8_MAX, 0
+    if mode == "conjugate":
+        return max(cal.thr_conjugate, EPS) / INT8_MAX, 0
+    if mode == "independent":
+        tmin, tmax = cal.thr_independent
+        tmin = min(tmin, -EPS)
+        tmax = max(tmax, EPS)
+        scale = (tmax - tmin) / 255.0
+        zero = int(round(-128 - tmin / scale))
+        zero = max(-128, min(127, zero))
+        return scale, zero
+    raise ValueError(mode)
+
+
+def collect_statistics(params, cfg: ModelConfig, calib_pairs, batch_size: int = 64,
+                       log=print):
+    """Two-pass histogram collection over the calibration set.
+
+    Runs the *teacher-forced* FP32 forward (same MatMul sites and
+    activation distributions as inference) un-jitted so the collector
+    callback sees concrete values.
+    """
+    import jax.numpy as jnp  # noqa: F401  (model functions use jnp)
+
+    stats: dict = {}
+
+    def make_collector(phase):
+        def collect(site_side, tensor):
+            site, side = site_side.rsplit(".", 1)
+            wname = M.weight_for_site(cfg, site)
+            if side == "b" and wname is not None:
+                return  # weights are calibrated from their own values
+            key = site if side == "a" else site_side
+            st = stats.setdefault(key, SiteStats())
+            x = np.asarray(tensor)
+            if phase == "range":
+                st.observe_range(x)
+            else:
+                st.observe_hist(x)
+        return collect
+
+    def run(phase):
+        for i in range(0, len(calib_pairs), batch_size):
+            chunk = calib_pairs[i : i + batch_size]
+            src = pad_batch([p["src"] for p in chunk], cfg.max_src_len)
+            tgt_in = pad_batch([p["ref"][:-1] for p in chunk], cfg.max_tgt_len,
+                               bos=True)
+            M.forward_teacher(params, cfg, src, tgt_in,
+                              collect=make_collector(phase))
+            log(f"  calib {phase}: {min(i + batch_size, len(calib_pairs))}"
+                f"/{len(calib_pairs)}")
+
+    run("range")
+    run("hist")
+    return stats
+
+
+def calibrate_model(params, cfg: ModelConfig, calib_pairs, log=print):
+    """Full calibration: returns {site -> SiteCalibration} for A sides and
+    dynamic-B sides (keys 'site' and 'site.b' respectively)."""
+    stats = collect_statistics(params, cfg, calib_pairs, log=log)
+    out = {}
+    for key, st in stats.items():
+        out[key] = calibrate_site(key, st)
+        log(f"  site {key:24s} class={out[key].klass:8s} "
+            f"range=[{st.min:+.3f},{st.max:+.3f}] Tsym={out[key].thr_symmetric:.3f}")
+    return out
+
+
+def load_calibration(path):
+    """Inverse of the aot.py export: calibration.json -> (cals, wscales)."""
+    import json
+
+    with open(path) as f:
+        j = json.load(f)
+    cals = {}
+    for name, s in j["sites"].items():
+        cals[name] = SiteCalibration(
+            name=s["name"],
+            klass=s["class"],
+            amin=s["min"],
+            amax=s["max"],
+            thr_symmetric=s["symmetric"],
+            thr_independent=tuple(s["independent"]),
+            thr_conjugate=s["conjugate"],
+            count=s["count"],
+            zero_frac=s["zero_frac"],
+            mean=s["mean"],
+            std=s["std"],
+        )
+    return cals, j["weight_scales"]
+
+
+def weight_scales(params, cfg: ModelConfig):
+    """Symmetric per-tensor u8 scales for every weight MatMul operand."""
+    scales = {}
+    for site in M.matmul_site_names(cfg):
+        wname = M.weight_for_site(cfg, site)
+        if wname is None:
+            continue
+        w = params["embed"].T if wname == "embed.T" else params[wname]
+        absmax = float(np.abs(np.asarray(w)).max())
+        scales[site] = max(absmax, EPS) / INT8_MAX
+    return scales
+
+
+def build_site_table(cfg: ModelConfig, cals: dict, wscales: dict, mode: str,
+                     skip_sparse: bool = True):
+    """Assemble the model.make_qctx input for a calibration mode.
+
+    Sparse-classified sites are left unquantized (paper: 12/97 MatMuls).
+    For dynamic (tensor x tensor) sites the B operand uses its own
+    calibrated symmetric threshold.
+    """
+    table = {}
+    for site in M.matmul_site_names(cfg):
+        cal = cals.get(site)
+        if cal is None:
+            continue
+        if skip_sparse and cal.klass == "sparse":
+            table[site] = None
+            continue
+        a_scale, a_zero = scale_for_mode(cal, mode)
+        if site in wscales:
+            b_scale = wscales[site]
+        else:
+            bcal = cals.get(site + ".b")
+            if bcal is None:
+                table[site] = None
+                continue
+            if skip_sparse and bcal.klass == "sparse":
+                table[site] = None
+                continue
+            b_mode = mode if mode != "independent" else "conjugate"
+            b_scale, _ = scale_for_mode(bcal, b_mode)
+        table[site] = (a_scale, a_zero, b_scale)
+    return table

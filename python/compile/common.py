@@ -1,0 +1,112 @@
+"""Shared configuration for the quantnmt compile path.
+
+Everything the Rust side needs to agree on (special token ids, model
+dimensions, dataset sizes, quantization constants) is defined here and
+exported into ``artifacts/`` by ``aot.py`` so the two halves can never
+drift silently.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+# --- special tokens (mirrored in rust/src/data/vocab.rs) -------------------
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+FIRST_CONTENT_ID = 3
+
+# --- quantization constants (mirrored in rust/src/quant/scheme.rs) ---------
+HIST_BINS = 2048          # calibration histogram resolution
+QUANT_BINS = 128          # target int8 positive range used by KL calibration
+INT8_MAX = 127.0
+UINT8_ZERO_POINT = 128    # u8 zero point used for the B operand (weights)
+
+
+@dataclass
+class ModelConfig:
+    """Transformer-base-shaped (scaled down) encoder-decoder config.
+
+    The paper quantizes the Transformer *base* model (d_model=512, 6+6
+    layers, 8 heads).  We keep the exact architecture — post-LN residual
+    blocks, scaled dot-product multi-head attention, learned embeddings
+    shared with the output projection — at a size a CPU can train in
+    minutes.  All the quantization phenomena of interest (long-tailed
+    activations, sparse ReLU tensors, Softmax/LayerNorm precision
+    sensitivity) are present at this scale.
+    """
+
+    vocab_size: int = 96
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 256
+    n_enc_layers: int = 2
+    n_dec_layers: int = 2
+    max_src_len: int = 64
+    max_tgt_len: int = 64
+    dropout: float = 0.0          # inference-focused repro; no dropout
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+@dataclass
+class DataConfig:
+    """Synthetic parallel-corpus config (see datagen.py).
+
+    newstest2014 has 3003 sentences; the paper calibrates on 600 random
+    validation sentences.  We mirror both counts exactly.
+    """
+
+    n_words: int = 256            # word lexicon size
+    min_words: int = 3            # words per sentence
+    max_words: int = 12
+    min_spell: int = 1            # subword tokens per word
+    max_spell: int = 4
+    zipf_s: float = 1.1           # word frequency skew (natural-language-ish)
+    n_valid: int = 3003
+    n_test: int = 3003
+    n_calibration: int = 600
+    seed: int = 20190610          # paper's workshop date
+
+
+@dataclass
+class TrainConfig:
+    batch_size: int = 64
+    steps: int = 1000
+    warmup: int = 200
+    peak_lr: float = 3e-3
+    label_smoothing: float = 0.0
+    seed: int = 7
+
+
+@dataclass
+class AotConfig:
+    """Which (batch, src_len) buckets get AOT-compiled executables.
+
+    PJRT executables are static-shaped; the Rust runtime picks the
+    smallest bucket that fits a batch (pipeline::padding handles the
+    padding).  The paper uses mini-batch 64 throughout §6.
+    """
+
+    batch_buckets: tuple = (1, 16, 64)
+    src_bucket: int = 48          # fits p99 of the synthetic corpus
+    tgt_bucket: int = 56
+
+
+def config_dict():
+    return {
+        "pad_id": PAD_ID,
+        "bos_id": BOS_ID,
+        "eos_id": EOS_ID,
+        "hist_bins": HIST_BINS,
+        "int8_max": INT8_MAX,
+        "uint8_zero_point": UINT8_ZERO_POINT,
+        "model": asdict(ModelConfig()),
+        "data": asdict(DataConfig()),
+        "train": asdict(TrainConfig()),
+        "aot": {
+            "batch_buckets": list(AotConfig().batch_buckets),
+            "src_bucket": AotConfig().src_bucket,
+            "tgt_bucket": AotConfig().tgt_bucket,
+        },
+    }

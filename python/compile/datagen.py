@@ -1,0 +1,213 @@
+"""Synthetic parallel corpus standing in for WMT'14 En->De / newstest2014.
+
+The paper evaluates on the 3003-sentence newstest2014 set with a
+Transformer trained on WMT.  We do not have WMT, so we build a synthetic
+"language pair" that preserves every property the paper's experiments
+exercise:
+
+* **Words vs tokens.**  Sentences are sequences of *words* drawn from a
+  Zipf-distributed lexicon; each word deterministically "spells" into
+  1..4 *subword tokens*.  This makes word-count sorting and token-count
+  sorting genuinely different orders (needed for the §5.4 +28% result).
+
+* **Variable lengths.**  3..12 words => roughly 3..48 tokens, so batches
+  have real padding waste and per-batch decode cost varies (needed for
+  parallel batching, §5.6).
+
+* **A learnable translation.**  The target is the *reversed* source token
+  sequence mapped through a fixed permutation of the content vocabulary.
+  Reversal forces the encoder-decoder attention to do real long-range
+  work (a copy task would let the model ignore the encoder), while still
+  being learnable to near-100 BLEU in ~1.5k steps — giving a crisp
+  accuracy baseline to measure quantization drop against, exactly like
+  the paper's 27.68 BLEU starting point.
+
+Determinism: everything derives from DataConfig.seed via SplitMix64, so
+the Rust side (rust/src/data/synthetic.rs) can regenerate identical
+corpora for its own benches without reading the JSON exports.
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .common import (
+    BOS_ID,
+    EOS_ID,
+    FIRST_CONTENT_ID,
+    DataConfig,
+    ModelConfig,
+)
+
+_MASK = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Tiny deterministic PRNG, implemented identically in Rust.
+
+    (numpy's Generators are not stable across versions and cannot be
+    reimplemented compactly in Rust; SplitMix64 is 5 lines in both.)
+    """
+
+    def __init__(self, seed: int):
+        self.state = seed & _MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & _MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4B9FD) & _MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK
+        return (z ^ (z >> 31)) & _MASK
+
+    def below(self, n: int) -> int:
+        """Uniform integer in [0, n) (modulo bias negligible for n << 2^64)."""
+        return self.next_u64() % n
+
+    def range(self, lo: int, hi: int) -> int:
+        """Uniform integer in [lo, hi] inclusive."""
+        return lo + self.below(hi - lo + 1)
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+_CONSONANTS = "bcdfghjklmnpqrstvwz"
+_VOWELS = "aeiou"
+
+
+@dataclass
+class Lexicon:
+    """Word lexicon: surface strings, subword spellings, Zipf weights."""
+
+    words: list          # surface strings
+    spellings: list      # list[list[int]] token ids per word
+    cum_weights: np.ndarray  # cumulative Zipf probabilities
+
+    @property
+    def n_words(self) -> int:
+        return len(self.words)
+
+
+def content_vocab_size(model: ModelConfig) -> int:
+    return model.vocab_size - FIRST_CONTENT_ID
+
+
+def build_lexicon(data: DataConfig, model: ModelConfig) -> Lexicon:
+    rng = SplitMix64(data.seed)
+    n_content = content_vocab_size(model)
+    words, spellings, seen = [], [], set()
+    while len(words) < data.n_words:
+        n_tok = rng.range(data.min_spell, data.max_spell)
+        spelling = tuple(FIRST_CONTENT_ID + rng.below(n_content) for _ in range(n_tok))
+        if spelling in seen:
+            continue
+        seen.add(spelling)
+        # a pronounceable surface form derived from the spelling
+        surf = "".join(
+            _CONSONANTS[t % len(_CONSONANTS)] + _VOWELS[(t // 7) % len(_VOWELS)]
+            for t in spelling
+        )
+        # disambiguate homographs deterministically
+        if any(w == surf for w in words):
+            surf = f"{surf}{len(words)}"
+        words.append(surf)
+        spellings.append(list(spelling))
+    ranks = np.arange(1, data.n_words + 1, dtype=np.float64)
+    w = ranks ** (-data.zipf_s)
+    return Lexicon(words, spellings, np.cumsum(w / w.sum()))
+
+
+def translation_permutation(data: DataConfig, model: ModelConfig) -> np.ndarray:
+    """Fixed content-token permutation (Fisher-Yates under SplitMix64)."""
+    rng = SplitMix64(data.seed ^ 0xABCDEF)
+    n = content_vocab_size(model)
+    perm = np.arange(n, dtype=np.int64)
+    for i in range(n - 1, 0, -1):
+        j = rng.below(i + 1)
+        perm[i], perm[j] = perm[j], perm[i]
+    return perm
+
+
+@dataclass
+class Pair:
+    src: list       # token ids, EOS-terminated, no BOS
+    ref: list       # token ids, EOS-terminated
+    n_words: int    # word count of the source (for §5.4 word-sorting)
+    text: str       # surface form of the source sentence
+
+
+def translate_tokens(src_content: list, perm: np.ndarray) -> list:
+    """Reference translation rule: reverse + permute content tokens."""
+    return [int(perm[t - FIRST_CONTENT_ID]) + FIRST_CONTENT_ID for t in reversed(src_content)]
+
+
+def sample_pair(rng: SplitMix64, lex: Lexicon, perm: np.ndarray, data: DataConfig) -> Pair:
+    n_words = rng.range(data.min_words, data.max_words)
+    idxs = [int(np.searchsorted(lex.cum_weights, rng.f64())) for _ in range(n_words)]
+    idxs = [min(i, lex.n_words - 1) for i in idxs]
+    src_content = [t for i in idxs for t in lex.spellings[i]]
+    tgt_content = translate_tokens(src_content, perm)
+    return Pair(
+        src=src_content + [EOS_ID],
+        ref=tgt_content + [EOS_ID],
+        n_words=n_words,
+        text=" ".join(lex.words[i] for i in idxs),
+    )
+
+
+def make_split(split_seed: int, n: int, lex: Lexicon, perm: np.ndarray, data: DataConfig):
+    rng = SplitMix64(split_seed)
+    return [sample_pair(rng, lex, perm, data) for _ in range(n)]
+
+
+def pad_batch(seqs, max_len: int, pad=0, bos=False) -> np.ndarray:
+    """Right-pad (optionally BOS-prefixed) sequences into an i32 [B, max_len]."""
+    out = np.full((len(seqs), max_len), pad, dtype=np.int32)
+    for r, s in enumerate(seqs):
+        s = ([BOS_ID] + list(s)) if bos else list(s)
+        s = s[:max_len]
+        out[r, : len(s)] = s
+    return out
+
+
+class TrainStream:
+    """Infinite stream of padded training batches (teacher forcing)."""
+
+    def __init__(self, data: DataConfig, model: ModelConfig, batch: int, seed: int):
+        self.lex = build_lexicon(data, model)
+        self.perm = translation_permutation(data, model)
+        self.rng = SplitMix64(seed)
+        self.data, self.model, self.batch = data, model, batch
+
+    def next_batch(self):
+        pairs = [sample_pair(self.rng, self.lex, self.perm, self.data) for _ in range(self.batch)]
+        src = pad_batch([p.src for p in pairs], self.model.max_src_len)
+        # decoder input: BOS + ref[:-1]; target: ref
+        tgt_in = pad_batch([p.ref[:-1] for p in pairs], self.model.max_tgt_len, bos=True)
+        tgt_out = pad_batch([p.ref for p in pairs], self.model.max_tgt_len)
+        return src, tgt_in, tgt_out
+
+
+def export_splits(data: DataConfig, model: ModelConfig):
+    """valid/test splits + lexicon, as plain dicts for JSON export."""
+    lex = build_lexicon(data, model)
+    perm = translation_permutation(data, model)
+    valid = make_split(data.seed ^ 0x1111, data.n_valid, lex, perm, data)
+    test = make_split(data.seed ^ 0x2222, data.n_test, lex, perm, data)
+    calib_rng = SplitMix64(data.seed ^ 0x3333)
+    calib_idx = sorted(set(calib_rng.below(data.n_valid) for _ in range(data.n_calibration * 3)))
+    calib_idx = calib_idx[: data.n_calibration]
+
+    def dump(pairs):
+        return [
+            {"src": p.src, "ref": p.ref, "n_words": p.n_words, "text": p.text}
+            for p in pairs
+        ]
+
+    return {
+        "lexicon": {"words": lex.words, "spellings": lex.spellings},
+        "permutation": perm.tolist(),
+        "valid": dump(valid),
+        "test": dump(test),
+        "calibration_indices": calib_idx,
+    }

@@ -1,0 +1,51 @@
+"""Artifact writers: weights.bin + manifest.json + JSON helpers.
+
+The Rust side (rust/src/model/weights.rs, rust/src/runtime/artifacts.rs)
+parses exactly these formats:
+
+* ``weights.bin``   — all parameter tensors, f32 little-endian, padded
+                      to no alignment, concatenated in manifest order;
+* ``manifest.json`` — [{"name", "shape", "offset"}] with offset in f32
+                      elements into weights.bin;
+* everything else   — plain JSON (config.json, calibration.json,
+                      dataset.json, hlo_index.json).
+"""
+
+import json
+import os
+
+import numpy as np
+
+
+def write_weights(params: dict, out_dir: str):
+    names = sorted(params.keys())
+    manifest = []
+    offset = 0
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for name in names:
+            arr = np.asarray(params[name], dtype=np.float32)
+            manifest.append(
+                {"name": name, "shape": list(arr.shape), "offset": offset}
+            )
+            f.write(arr.tobytes())  # C-order little-endian
+            offset += arr.size
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({"dtype": "f32", "total": offset, "tensors": manifest}, f, indent=1)
+    return offset
+
+
+def load_weights(out_dir: str):
+    """Inverse of write_weights (used by aot.py to resume without retraining)."""
+    with open(os.path.join(out_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = np.fromfile(os.path.join(out_dir, "weights.bin"), dtype="<f4")
+    params = {}
+    for t in manifest["tensors"]:
+        n = int(np.prod(t["shape"])) if t["shape"] else 1
+        params[t["name"]] = flat[t["offset"] : t["offset"] + n].reshape(t["shape"])
+    return params
+
+
+def write_json(obj, out_dir: str, name: str):
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(obj, f)

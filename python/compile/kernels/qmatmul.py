@@ -1,0 +1,225 @@
+"""Layer-1 Pallas kernels: the quantized-GEMM hot-spot of the paper.
+
+The paper's hot-spot is the VNNI ``QuantizedMatMul`` (s8 x u8 -> s32 with
+a float requantization epilogue).  On TPU the analogous structure is a
+tiled MXU matmul whose operand tiles live in VMEM; ``BlockSpec`` below
+expresses the HBM->VMEM schedule that the paper expressed with
+register/cache blocking on Cascade Lake.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode (which lowers to
+plain HLO) is the correctness path; TPU efficiency is *estimated* from
+the BlockSpec footprint in DESIGN.md §Perf.
+
+Kernels:
+
+* ``quantize_s8_pallas``   — FP32 -> s8 with a given scale (eq. 5)
+* ``dequantize_s8_pallas`` — s8  -> FP32 (eq. 6)
+* ``qmatmul_pallas``       — s8 x u8 -> f32 tiled GEMM with i32
+                             accumulation and zero-point corrections
+* ``matmul_pallas``        — f32 tiled GEMM (the FP32 baseline)
+* ``fake_quant_matmul``    — quantize -> qmatmul fusion used by model.py
+
+Semantics are pinned by kernels/ref.py; python/tests/test_kernels.py
+sweeps shapes and scales with hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import UINT8_ZERO_POINT
+
+
+def _grid_dim(total: int, block: int) -> int:
+    return (total + block - 1) // block
+
+
+# --------------------------------------------------------------------------
+# element-wise quantize / dequantize
+# --------------------------------------------------------------------------
+
+def _quantize_s8_kernel(x_ref, o_ref, *, inv_scale, zero_point):
+    x = x_ref[...]
+    q = jnp.round(x * inv_scale) + zero_point
+    o_ref[...] = jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def quantize_s8_pallas(x, scale: float, zero_point: int = 0, block: int = 512):
+    """FP32 -> s8 (paper eq. 5), tiled along the flattened dimension.
+
+    The O(N) cost of this operation is exactly the "quantization
+    overhead" the paper's §4.1/§5.5 work to minimize.
+    """
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    out = pl.pallas_call(
+        functools.partial(
+            _quantize_s8_kernel, inv_scale=1.0 / scale, zero_point=zero_point
+        ),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.int8),
+        grid=(_grid_dim(flat.shape[0], block),),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(flat)
+    return out[:n].reshape(orig_shape)
+
+
+def _dequantize_s8_kernel(q_ref, o_ref, *, scale, zero_point):
+    q = q_ref[...].astype(jnp.float32)
+    o_ref[...] = (q - zero_point) * scale
+
+
+def dequantize_s8_pallas(q, scale: float, zero_point: int = 0, block: int = 512):
+    """s8 -> FP32 (paper eq. 6), tiled along the flattened dimension."""
+    orig_shape = q.shape
+    flat = q.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    out = pl.pallas_call(
+        functools.partial(_dequantize_s8_kernel, scale=scale, zero_point=zero_point),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        grid=(_grid_dim(flat.shape[0], block),),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(flat)
+    return out[:n].reshape(orig_shape)
+
+
+# --------------------------------------------------------------------------
+# quantized GEMM
+# --------------------------------------------------------------------------
+
+def _qmatmul_kernel(a_ref, b_ref, o_ref, *, za):
+    """One (bm, bn) output tile; the k grid axis accumulates into o_ref.
+
+    VMEM budget per step: bm*bk (s8) + bk*bn (u8) + bm*bn*4 (i32 out
+    tile) — the BlockSpec schedule that stands in for the paper's cache
+    blocking.  Both zero-point corrections are folded per k-block::
+
+        sum (a - za)(b - 128)
+      = sum a*b - 128*rowsum(a) - za*colsum(b) + za*128*bk
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.int32)            # [bm, bk] s8 -> i32
+    b = b_ref[...].astype(jnp.int32)            # [bk, bn] u8 -> i32
+    acc = jnp.dot(a, b, preferred_element_type=jnp.int32)
+    rowsum = jnp.sum(a, axis=1, keepdims=True)
+    colsum = jnp.sum(b, axis=0, keepdims=True)
+    bk = a.shape[1]
+    o_ref[...] += (
+        acc - UINT8_ZERO_POINT * rowsum - za * colsum + za * UINT8_ZERO_POINT * bk
+    )
+
+
+def qmatmul_i32_pallas(a_q, b_q, za: int = 0, bm: int = 32, bn: int = 64, bk: int = 64):
+    """Integer core: s8 [M,K] x u8 [K,N] -> zero-point-corrected i32 [M,N].
+
+    K padding uses a_pad=0 / b_pad=128 which contribute
+    ``(0 - za)*(128 - 128) = 0`` to every corrected product, so padded
+    and unpadded results agree exactly.
+    """
+    m, k = a_q.shape
+    k2, n = b_q.shape
+    assert k == k2, (a_q.shape, b_q.shape)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    if pm or pk:
+        a_q = jnp.pad(a_q, ((0, pm), (0, pk)))
+    if pk or pn:
+        b_q = jnp.pad(b_q, ((0, pk), (0, pn)), constant_values=UINT8_ZERO_POINT)
+    gm, gn, gk = a_q.shape[0] // bm, b_q.shape[1] // bn, a_q.shape[1] // bk
+
+    acc = pl.pallas_call(
+        functools.partial(_qmatmul_kernel, za=za),
+        out_shape=jax.ShapeDtypeStruct((a_q.shape[0], b_q.shape[1]), jnp.int32),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(a_q, b_q)
+    return acc[:m, :n]
+
+
+def qmatmul_pallas(a_q, b_q, sa: float, sb: float, za: int = 0, **blocks):
+    """Tiled s8 x u8 -> f32 GEMM matching ``ref.qmatmul_ref`` exactly.
+
+    The float epilogue (one multiply by sa*sb) is left to XLA to fuse —
+    mirroring the paper's §5.5 optimization of dequantizing the INT32
+    accumulator directly to FP32 instead of requantizing first.
+    """
+    acc = qmatmul_i32_pallas(a_q, b_q, za=za, **blocks)
+    return acc.astype(jnp.float32) * (sa * sb)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def matmul_pallas(a, b, bm: int = 32, bn: int = 64, bk: int = 64):
+    """Tiled f32 GEMM — the FP32 baseline the paper compares against."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    gm, gn, gk = a.shape[0] // bm, b.shape[1] // bn, a.shape[1] // bk
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[1]), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out[:m, :n]
+
+
+def quantize_u8_weights(b, scale: float):
+    """AOT-time weight quantization: f32 -> u8 with zero point 128."""
+    q = jnp.round(b / scale) + UINT8_ZERO_POINT
+    return jnp.clip(q, 0, 255).astype(jnp.uint8)
+
+
+def fake_quant_matmul(a, b, a_scale: float, b_scale: float, a_zero: int = 0, **blocks):
+    """float A x float B through the full int8 path (quantize -> qmatmul).
+
+    This is what model.py inserts at every quantized MatMul site: the A
+    quantization happens at run time (it is an activation), the B
+    quantization folds into the AOT graph as a constant because B is a
+    weight (the §5.5 "thresholds become Const" optimization).
+    """
+    a2 = a.reshape(-1, a.shape[-1])
+    a_q = quantize_s8_pallas(a2, a_scale, a_zero)
+    b_q = quantize_u8_weights(b, b_scale)
+    out = qmatmul_pallas(a_q, b_q, a_scale, b_scale, a_zero, **blocks)
+    return out.reshape(*a.shape[:-1], b.shape[-1])

@@ -1,0 +1,75 @@
+"""Pure-jnp reference oracle for the quantization kernels.
+
+This is the single source of truth for *numerics*: the Pallas kernels
+(qmatmul.py), the JAX quantized model (model.py) and the Rust engine
+(rust/src/quant, rust/src/gemm) are all tested against the semantics
+defined here.
+
+Quantization scheme (matches the paper §4 / §5.2 and MKL's s8*u8->s32
+GEMM contract):
+
+* the A operand (activation) is quantized to **signed** int8 with an
+  affine map ``a_q = clip(round(a / sa) + za, -128, 127)``; for the
+  symmetric/conjugate calibration modes ``za == 0``.
+* the B operand (weight) is quantized to **unsigned** uint8 as
+  ``b_q = clip(round(b / sb) + 128, 0, 255)`` — i.e. symmetric signed
+  int8 shifted by the fixed zero point 128 (common MKL/oneDNN trick the
+  paper alludes to when it says one tensor must be made unsigned).
+* the product accumulates in int32; the float result is recovered as
+  ``sa * sb * (acc - corrections)`` where the corrections remove the two
+  zero points (the za correction needs the column sums of B_q, the 128
+  correction needs the row sums of A_q).
+"""
+
+import jax.numpy as jnp
+
+from ..common import UINT8_ZERO_POINT
+
+
+def quantize_s8(a, scale, zero_point=0):
+    """FP32 -> signed int8 (paper eq. 5). ``scale`` is the quantization step."""
+    q = jnp.round(a / scale) + zero_point
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def quantize_u8(b, scale):
+    """FP32 -> unsigned uint8 with fixed zero point 128."""
+    q = jnp.round(b / scale) + UINT8_ZERO_POINT
+    return jnp.clip(q, 0, 255).astype(jnp.uint8)
+
+
+def dequantize_s8(q, scale, zero_point=0):
+    """Signed int8 -> FP32 (paper eq. 6)."""
+    return (q.astype(jnp.float32) - zero_point) * scale
+
+
+def qmatmul_ref(a_q, b_q, sa, sb, za=0):
+    """int8 x uint8 -> fp32 reference GEMM.
+
+    a_q: [M, K] int8, b_q: [K, N] uint8 (zero point 128), accumulate i32::
+
+        acc[m,n]   = sum_k a_q[m,k] * b_q[k,n]
+        rowsum[m]  = sum_k a_q[m,k]
+        colsum[n]  = sum_k b_q[k,n]
+        out[m,n]   = sa*sb * (acc - 128*rowsum[m] - za*colsum[n]
+                              + K*za*128)
+    """
+    a32 = a_q.astype(jnp.int32)
+    b32 = b_q.astype(jnp.int32)
+    k = a_q.shape[-1]
+    acc = a32 @ b32
+    rowsum = jnp.sum(a32, axis=-1, keepdims=True)          # [M, 1]
+    colsum = jnp.sum(b32, axis=-2, keepdims=True)          # [1, N]
+    acc = acc - UINT8_ZERO_POINT * rowsum - za * colsum + k * za * UINT8_ZERO_POINT
+    return acc.astype(jnp.float32) * (sa * sb)
+
+
+def fake_quant_matmul_ref(a, b, a_scale, b_scale, a_zero=0):
+    """End-to-end float->int8->GEMM->float reference used by the model."""
+    a_q = quantize_s8(a, a_scale, a_zero)
+    b_q = quantize_u8(b, b_scale)
+    return qmatmul_ref(a_q, b_q, a_scale, b_scale, a_zero)
+
+
+def matmul_ref(a, b):
+    return jnp.matmul(a, b)

@@ -1,0 +1,401 @@
+"""Layer-2: the Transformer NMT model in JAX (fwd + greedy decode).
+
+Architecture = Vaswani et al. scaled down (see common.ModelConfig):
+post-LN residual blocks, sinusoidal positions, multi-head scaled
+dot-product attention, ReLU FFN, tied input/output embeddings.
+
+Every MatMul in the network goes through ``_mm`` which consults an
+optional *quantization context* mapping site names to calibrated
+thresholds.  This is the JAX analogue of the paper's TensorFlow graph
+transform (Fig 1 -> Fig 5): with ``qctx=None`` the graph is the FP32
+original; with a context, selected MatMuls are rewritten into
+quantize -> int8 GEMM -> dequantize with **constant** thresholds (the
+§5.5 "thresholds become Const nodes" optimization — no Min/Max ops in
+the lowered HLO).
+
+Shape-aware kernel choice (§5.2): encoder weight MatMuls have large M
+(= batch * seq) and use the Pallas tiled kernel (kernels/qmatmul.py);
+decoder per-step MatMuls have M = batch and attention tensor x tensor
+MatMuls are batched per head, so they use the pure-jnp int8 emulation
+(kernels/ref.py) with identical numerics — quantizing them all, as the
+paper does, while matching kernel shape to matrix shape.
+
+The auto-regressive greedy decode is a ``lax.while_loop`` with a
+statically-shaped KV cache, so the whole translate function lowers to a
+single HLO executable (runtime/ loads it from Rust).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import BOS_ID, EOS_ID, PAD_ID, ModelConfig
+from .kernels import qmatmul as pk
+from .kernels import ref as kref
+
+NEG_INF = -1e9
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    """Xavier-ish init; returns a flat dict name -> array.
+
+    Names are the contract with the Rust engine (model::weights) and the
+    calibration table; do not rename without bumping both.
+    """
+    params = {}
+
+    def dense(k, shape):
+        fan_in = shape[0]
+        return jax.random.normal(k, shape, jnp.float32) / math.sqrt(fan_in)
+
+    keys = iter(jax.random.split(key, 1024))
+    params["embed"] = jax.random.normal(next(keys), (cfg.vocab_size, cfg.d_model)) * 0.02
+
+    def attn_block(prefix):
+        for w in ("wq", "wk", "wv", "wo"):
+            params[f"{prefix}.{w}"] = dense(next(keys), (cfg.d_model, cfg.d_model))
+
+    def ln_block(prefix):
+        params[f"{prefix}.gamma"] = jnp.ones((cfg.d_model,))
+        params[f"{prefix}.beta"] = jnp.zeros((cfg.d_model,))
+
+    def ffn_block(prefix):
+        params[f"{prefix}.w1"] = dense(next(keys), (cfg.d_model, cfg.d_ff))
+        params[f"{prefix}.b1"] = jnp.zeros((cfg.d_ff,))
+        params[f"{prefix}.w2"] = dense(next(keys), (cfg.d_ff, cfg.d_model))
+        params[f"{prefix}.b2"] = jnp.zeros((cfg.d_model,))
+
+    for i in range(cfg.n_enc_layers):
+        attn_block(f"enc.{i}.attn")
+        ln_block(f"enc.{i}.ln1")
+        ffn_block(f"enc.{i}.ffn")
+        ln_block(f"enc.{i}.ln2")
+    for i in range(cfg.n_dec_layers):
+        attn_block(f"dec.{i}.self")
+        ln_block(f"dec.{i}.ln1")
+        attn_block(f"dec.{i}.cross")
+        ln_block(f"dec.{i}.ln2")
+        ffn_block(f"dec.{i}.ffn")
+        ln_block(f"dec.{i}.ln3")
+    return params
+
+
+def positional_encoding(max_len: int, d_model: int):
+    """Sinusoidal positions, identical formula in rust model::embedding."""
+    pos = jnp.arange(max_len)[:, None].astype(jnp.float32)
+    i = jnp.arange(d_model // 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, 2.0 * i / d_model)
+    pe = jnp.zeros((max_len, d_model))
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# --------------------------------------------------------------------------
+# quantization-aware matmul dispatch
+# --------------------------------------------------------------------------
+
+class QuantSite:
+    """Calibrated thresholds for one MatMul site.
+
+    a_scale/a_zero quantize the A (activation) operand to s8; b_scale
+    quantizes the B operand to u8 (zero point 128).  For weight sites,
+    b_scale comes from the weight's own |max|; for dynamic sites (QK^T,
+    attn x V) it comes from activation calibration of the B side.
+    """
+
+    __slots__ = ("a_scale", "a_zero", "b_scale")
+
+    def __init__(self, a_scale, a_zero, b_scale):
+        self.a_scale = float(a_scale)
+        self.a_zero = int(a_zero)
+        self.b_scale = float(b_scale)
+
+
+def _mm(site: str, a, b, qctx, collect=None, pallas_ok=False):
+    """MatMul with optional quantization and calibration hooks.
+
+    collect(site_side, tensor) feeds the calibration histogram pass.
+    pallas_ok selects the Pallas tiled kernel for 2D large-M sites.
+    """
+    if collect is not None:
+        collect(site + ".a", a)
+        collect(site + ".b", b)
+    q = None if qctx is None else qctx.get(site)
+    if q is None:
+        return jnp.matmul(a, b)
+    if pallas_ok and a.ndim == 2 and b.ndim == 2:
+        return pk.fake_quant_matmul(a, b, q.a_scale, q.b_scale, q.a_zero)
+    return kref.fake_quant_matmul_ref(a, b, q.a_scale, q.b_scale, q.a_zero)
+
+
+def _dense(site, x, w, qctx, collect=None, pallas_ok=True):
+    """x [..., D_in] @ w [D_in, D_out] through a 2D reshape."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _mm(site, x2, w, qctx, collect, pallas_ok=pallas_ok)
+    return y.reshape(*lead, w.shape[-1])
+
+
+# --------------------------------------------------------------------------
+# building blocks
+# --------------------------------------------------------------------------
+
+def layer_norm(x, gamma, beta, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def _split_heads(x, n_heads):
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def attention_core(prefix, qh, kh, vh, mask, cfg, qctx, collect=None):
+    """scores = QK^T/sqrt(dk) -> softmax (always FP32, §3) -> @V.
+
+    Both tensor x tensor MatMuls are quantization sites ("both inputs
+    signed FP32" in the paper's words).
+    """
+    scores = _mm(f"{prefix}.qk", qh, kh.transpose(0, 1, 3, 2), qctx, collect)
+    scores = scores / math.sqrt(cfg.d_head)
+    if mask is not None:
+        scores = scores + mask
+    probs = jax.nn.softmax(scores, axis=-1)          # FP32 on purpose
+    return _mm(f"{prefix}.pv", probs, vh, qctx, collect)
+
+
+def mha(prefix, params, cfg: ModelConfig, q_in, kv_in, mask, qctx, collect=None,
+        pallas_ok=True):
+    """Multi-head attention (paper eq. 1-2). mask: [B,1,Tq,Tk] additive."""
+    q = _dense(f"{prefix}.q", q_in, params[f"{prefix}.wq"], qctx, collect, pallas_ok)
+    k = _dense(f"{prefix}.k", kv_in, params[f"{prefix}.wk"], qctx, collect, pallas_ok)
+    v = _dense(f"{prefix}.v", kv_in, params[f"{prefix}.wv"], qctx, collect, pallas_ok)
+    qh, kh, vh = (_split_heads(t, cfg.n_heads) for t in (q, k, v))
+    ctx = attention_core(prefix, qh, kh, vh, mask, cfg, qctx, collect)
+    return _dense(f"{prefix}.o", _merge_heads(ctx), params[f"{prefix}.wo"], qctx,
+                  collect, pallas_ok)
+
+
+def ffn(prefix, params, x, qctx, collect=None, pallas_ok=True):
+    h = _dense(f"{prefix}.h", x, params[f"{prefix}.w1"], qctx, collect, pallas_ok)
+    h = jax.nn.relu(h + params[f"{prefix}.b1"])
+    # post-ReLU input: the paper's canonical *sparse* histogram (Fig 2);
+    # calibration normally leaves this site unquantized.
+    y = _dense(f"{prefix}.y", h, params[f"{prefix}.w2"], qctx, collect, pallas_ok)
+    return y + params[f"{prefix}.b2"]
+
+
+def _ln(prefix, params, x):
+    return layer_norm(x, params[f"{prefix}.gamma"], params[f"{prefix}.beta"])
+
+
+# --------------------------------------------------------------------------
+# encoder / decoder
+# --------------------------------------------------------------------------
+
+def src_pad_mask(src_ids):
+    """[B,1,1,S] additive mask hiding PAD positions."""
+    is_pad = (src_ids == PAD_ID)[:, None, None, :]
+    return jnp.where(is_pad, NEG_INF, 0.0)
+
+
+def embed(params, cfg, ids):
+    pe = positional_encoding(max(cfg.max_src_len, cfg.max_tgt_len), cfg.d_model)
+    x = params["embed"][ids] * math.sqrt(cfg.d_model)
+    return x + pe[: ids.shape[1]]
+
+
+def encode(params, cfg: ModelConfig, src_ids, qctx=None, collect=None):
+    """src token ids [B,S] -> memory [B,S,D]."""
+    mask = src_pad_mask(src_ids)
+    x = embed(params, cfg, src_ids)
+    for i in range(cfg.n_enc_layers):
+        p = f"enc.{i}"
+        a = mha(f"{p}.attn", params, cfg, x, x, mask, qctx, collect, pallas_ok=True)
+        x = _ln(f"{p}.ln1", params, x + a)
+        f = ffn(f"{p}.ffn", params, x, qctx, collect, pallas_ok=True)
+        x = _ln(f"{p}.ln2", params, x + f)
+    return x
+
+
+def decode_train(params, cfg: ModelConfig, memory, src_ids, tgt_in,
+                 qctx=None, collect=None):
+    """Teacher-forced decoder: tgt_in [B,T] -> logits [B,T,V].
+
+    Used for training, calibration collection, and logit-parity tests.
+    Decoder sites use pallas_ok=False (jnp int8 emulation) to match the
+    per-step decode graph numerics exactly.
+    """
+    b, t = tgt_in.shape
+    causal = jnp.where(
+        jnp.arange(t)[None, :] > jnp.arange(t)[:, None], NEG_INF, 0.0
+    )[None, None, :, :]
+    mem_mask = src_pad_mask(src_ids)
+    x = embed(params, cfg, tgt_in)
+    for i in range(cfg.n_dec_layers):
+        p = f"dec.{i}"
+        a = mha(f"{p}.self", params, cfg, x, x, causal, qctx, collect, pallas_ok=False)
+        x = _ln(f"{p}.ln1", params, x + a)
+        c = mha(f"{p}.cross", params, cfg, x, memory, mem_mask, qctx, collect,
+                pallas_ok=False)
+        x = _ln(f"{p}.ln2", params, x + c)
+        f = ffn(f"{p}.ffn", params, x, qctx, collect, pallas_ok=False)
+        x = _ln(f"{p}.ln3", params, x + f)
+    return _dense("logits", x, params["embed"].T, qctx, collect, pallas_ok=False)
+
+
+def forward_teacher(params, cfg, src_ids, tgt_in, qctx=None, collect=None):
+    memory = encode(params, cfg, src_ids, qctx, collect)
+    return decode_train(params, cfg, memory, src_ids, tgt_in, qctx, collect)
+
+
+# --------------------------------------------------------------------------
+# greedy auto-regressive decode (lowers to one HLO while-loop)
+# --------------------------------------------------------------------------
+
+def _decode_step(params, cfg, qctx, memory, mem_mask, cache_k, cache_v, tok, pos):
+    """One decoder step for tokens [B] at position ``pos``.
+
+    cache_k/cache_v: [L, B, H, Tmax, dh] statically-shaped self-attention
+    KV caches; this step's K/V are written at index ``pos`` (the
+    dynamic-update that, together with the beam gather, is the paper's
+    GatherNd territory, §5.3).
+    """
+    pe = positional_encoding(cfg.max_tgt_len, cfg.d_model)
+    x = params["embed"][tok[:, None]] * math.sqrt(cfg.d_model)
+    x = x + lax.dynamic_slice_in_dim(pe, pos, 1, axis=0)[None, 0:1, :].reshape(1, 1, -1)
+
+    t_max = cache_k.shape[3]
+    # causal-by-construction: attend only to cache positions <= pos
+    step_mask = jnp.where(jnp.arange(t_max)[None, None, None, :] > pos, NEG_INF, 0.0)
+
+    for i in range(cfg.n_dec_layers):
+        p = f"dec.{i}"
+        q = _dense(f"{p}.self.q", x, params[f"{p}.self.wq"], qctx, pallas_ok=False)
+        k = _dense(f"{p}.self.k", x, params[f"{p}.self.wk"], qctx, pallas_ok=False)
+        v = _dense(f"{p}.self.v", x, params[f"{p}.self.wv"], qctx, pallas_ok=False)
+        kh = _split_heads(k, cfg.n_heads)            # [B,H,1,dh]
+        vh = _split_heads(v, cfg.n_heads)
+        cache_k = lax.dynamic_update_slice(cache_k, kh[None], (i, 0, 0, pos, 0))
+        cache_v = lax.dynamic_update_slice(cache_v, vh[None], (i, 0, 0, pos, 0))
+        qh = _split_heads(q, cfg.n_heads)
+        ctx = attention_core(f"{p}.self", qh, cache_k[i], cache_v[i],
+                             step_mask, cfg, qctx)
+        a = _dense(f"{p}.self.o", _merge_heads(ctx), params[f"{p}.self.wo"],
+                   qctx, pallas_ok=False)
+        x = _ln(f"{p}.ln1", params, x + a)
+        c = mha(f"{p}.cross", params, cfg, x, memory, mem_mask, qctx,
+                pallas_ok=False)
+        x = _ln(f"{p}.ln2", params, x + c)
+        f = ffn(f"{p}.ffn", params, x, qctx, pallas_ok=False)
+        x = _ln(f"{p}.ln3", params, x + f)
+
+    logits = _dense("logits", x, params["embed"].T, qctx, pallas_ok=False)
+    return logits[:, 0, :], cache_k, cache_v
+
+
+def translate_greedy(params, cfg: ModelConfig, src_ids, qctx=None, max_len=None):
+    """src [B,S] i32 -> (out [B,Tmax] i32, lengths [B] i32).
+
+    Greedy decode inside lax.while_loop; stops early when every sentence
+    has emitted EOS (the paper's "failed to emit a stop token" pathology
+    for naive quantization shows up here as rows that never finish).
+    """
+    b = src_ids.shape[0]
+    t_max = max_len or cfg.max_tgt_len
+    memory = encode(params, cfg, src_ids, qctx)
+    mem_mask = src_pad_mask(src_ids)
+    cache_k = jnp.zeros((cfg.n_dec_layers, b, cfg.n_heads, t_max, cfg.d_head))
+    cache_v = jnp.zeros_like(cache_k)
+    out = jnp.full((b, t_max), PAD_ID, jnp.int32)
+    tok = jnp.full((b,), BOS_ID, jnp.int32)
+    fin = jnp.zeros((b,), jnp.bool_)
+
+    def cond(state):
+        pos, _, _, _, _, fin = state
+        return jnp.logical_and(pos < t_max, jnp.logical_not(jnp.all(fin)))
+
+    def body(state):
+        pos, tok, out, ck, cv, fin = state
+        logits, ck, cv = _decode_step(
+            params, cfg, qctx, memory, mem_mask, ck, cv, tok, pos
+        )
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt = jnp.where(fin, PAD_ID, nxt)
+        out = lax.dynamic_update_slice(out, nxt[:, None], (0, pos))
+        fin = jnp.logical_or(fin, nxt == EOS_ID)
+        return pos + 1, nxt, out, ck, cv, fin
+
+    _, _, out, _, _, _ = lax.while_loop(
+        cond, body, (jnp.int32(0), tok, out, cache_k, cache_v, fin)
+    )
+    lengths = jnp.sum(jnp.cumsum((out == EOS_ID).astype(jnp.int32), axis=1) == 0,
+                      axis=1) + 1
+    lengths = jnp.minimum(lengths, t_max)
+    return out, lengths
+
+
+# --------------------------------------------------------------------------
+# loss (build-time training only)
+# --------------------------------------------------------------------------
+
+def loss_fn(params, cfg, src, tgt_in, tgt_out):
+    logits = forward_teacher(params, cfg, src, tgt_in)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt_out[..., None], axis=-1)[..., 0]
+    mask = (tgt_out != PAD_ID).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_qctx(site_table):
+    """site_table: dict name -> (a_scale, a_zero, b_scale) or None."""
+    return {
+        k: (None if v is None else QuantSite(*v)) for k, v in site_table.items()
+    }
+
+
+def matmul_site_names(cfg: ModelConfig):
+    """Every quantizable MatMul site in graph order (the paper's "97
+    MatMuls" census for our model; used by calibration and the graph IR)."""
+    sites = []
+    for i in range(cfg.n_enc_layers):
+        p = f"enc.{i}"
+        sites += [f"{p}.attn.{s}" for s in ("q", "k", "v", "qk", "pv", "o")]
+        sites += [f"{p}.ffn.h", f"{p}.ffn.y"]
+    for i in range(cfg.n_dec_layers):
+        p = f"dec.{i}"
+        sites += [f"{p}.self.{s}" for s in ("q", "k", "v", "qk", "pv", "o")]
+        sites += [f"{p}.cross.{s}" for s in ("q", "k", "v", "qk", "pv", "o")]
+        sites += [f"{p}.ffn.h", f"{p}.ffn.y"]
+    sites.append("logits")
+    return sites
+
+
+def weight_for_site(cfg: ModelConfig, site: str):
+    """Weight-tensor name for a weight-MatMul site, or None if dynamic.
+
+    ("logits" uses the tied embedding, transposed.)
+    """
+    if site == "logits":
+        return "embed.T"
+    head, leaf = site.rsplit(".", 1)
+    if leaf in ("q", "k", "v", "o"):
+        return f"{head}.w{leaf}"
+    if leaf == "h":
+        return f"{head}.w1"
+    if leaf == "y":
+        return f"{head}.w2"
+    return None  # qk / pv are tensor x tensor

@@ -1,0 +1,115 @@
+"""AOT pipeline tests: export formats + HLO text invariants.
+
+The full pipeline (train + calibrate + lower) runs in `make artifacts`;
+these tests exercise the pieces cheaply and, when artifacts exist,
+validate the exported files' invariants that the Rust side relies on.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import export, model as M
+from compile.aot import to_hlo_text
+from compile.common import ModelConfig
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_weights_roundtrip(tmp_path):
+    params = {
+        "b": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "a": np.asarray([1.5], dtype=np.float32),
+    }
+    export.write_weights(params, str(tmp_path))
+    back = export.load_weights(str(tmp_path))
+    assert set(back) == {"a", "b"}
+    np.testing.assert_array_equal(back["b"], params["b"])
+    np.testing.assert_array_equal(back["a"], params["a"])
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    # sorted order contract (rust reads offsets in manifest order)
+    assert [t["name"] for t in manifest["tensors"]] == ["a", "b"]
+    assert manifest["total"] == 7
+
+
+def test_hlo_text_contains_full_constants():
+    """print_large_constants must be in effect — elided constants would
+    silently zero the weights on the Rust side."""
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((40, 8)), jnp.float32)
+
+    def fn(i):
+        return (jnp.sum(w[i]),)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((2,), jnp.int32))
+    txt = to_hlo_text(lowered)
+    assert "constant({...})" not in txt
+    assert txt.count("constant({") >= 1
+
+
+def test_hlo_text_is_tupled():
+    def fn(x):
+        return (x + 1.0, x * 2.0)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((2,), jnp.float32))
+    txt = to_hlo_text(lowered)
+    assert "tuple(" in txt or "(f32[2]" in txt
+
+
+def test_tiny_translate_lowering_has_while_loop():
+    cfg = ModelConfig(
+        vocab_size=16, d_model=16, n_heads=2, d_ff=32,
+        n_enc_layers=1, n_dec_layers=1, max_src_len=8, max_tgt_len=8,
+    )
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    def fn(src):
+        return M.translate_greedy(params, cfg, src, max_len=8)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((1, 8), jnp.int32))
+    txt = to_hlo_text(lowered)
+    assert "while" in txt
+    assert "constant({...})" not in txt
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "hlo_index.json")),
+    reason="artifacts not built",
+)
+class TestBuiltArtifacts:
+    def test_index_files_exist(self):
+        idx = json.load(open(os.path.join(ARTIFACTS, "hlo_index.json")))
+        assert len(idx["buckets"]) == 6  # {1,16,64} x {fp32,int8}
+        for b in idx["buckets"]:
+            path = os.path.join(ARTIFACTS, b["file"])
+            assert os.path.exists(path), b["file"]
+            head = open(path).read(200000)
+            assert "HloModule" in head
+
+    def test_no_elided_constants_in_artifacts(self):
+        idx = json.load(open(os.path.join(ARTIFACTS, "hlo_index.json")))
+        for b in idx["buckets"]:
+            txt = open(os.path.join(ARTIFACTS, b["file"])).read()
+            assert "constant({...})" not in txt, b["file"]
+
+    def test_calibration_export_schema(self):
+        cal = json.load(open(os.path.join(ARTIFACTS, "calibration.json")))
+        assert "sites" in cal and "weight_scales" in cal
+        for name, s in cal["sites"].items():
+            assert s["class"] in ("sparse", "narrow", "gaussian")
+            assert s["independent"][0] <= 0 <= s["independent"][1]
+            assert s["symmetric"] > 0
+        # every weight site has a scale
+        cfg = ModelConfig()
+        for site in M.matmul_site_names(cfg):
+            if M.weight_for_site(cfg, site) is not None:
+                assert site in cal["weight_scales"], site
+
+    def test_config_matches_defaults(self):
+        cfgd = json.load(open(os.path.join(ARTIFACTS, "config.json")))
+        assert cfgd["model"]["d_model"] == ModelConfig().d_model
+        assert cfgd["pad_id"] == 0 and cfgd["eos_id"] == 2

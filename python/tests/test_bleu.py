@@ -1,0 +1,55 @@
+"""BLEU scorer tests (mirrored by rust/src/data/bleu.rs)."""
+
+from hypothesis import given, settings, strategies as st
+
+from compile.bleu import corpus_bleu, strip_special
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+
+def test_perfect_is_100():
+    seqs = [[3, 4, 5, 6, 7]]
+    assert abs(corpus_bleu(seqs, seqs) - 100.0) < 1e-9
+
+
+def test_disjoint_is_0():
+    assert corpus_bleu([[3, 4, 5, 6]], [[7, 8, 9, 10]]) == 0.0
+
+
+def test_brevity_penalty():
+    ref = [[3, 4, 5, 6, 7, 8, 9, 10]]
+    short = [[3, 4, 5, 6, 7]]
+    assert corpus_bleu(short, ref) < corpus_bleu(ref, ref)
+
+
+def test_rust_parity_case():
+    """Same case asserted in rust data::bleu tests."""
+    h = [[10, 11, 12, 13, 14, 15, 16, 17]]
+    r = [[10, 11, 12, 13, 14, 15, 16, 99]]
+    b = corpus_bleu(h, r)
+    assert 50.0 < b < 100.0
+
+
+@given(
+    seqs=st.lists(
+        st.lists(st.integers(3, 95), min_size=4, max_size=20),
+        min_size=1,
+        max_size=5,
+    )
+)
+def test_identity_is_100_for_4gram_capable(seqs):
+    # corpora with any sequence shorter than 4 tokens legitimately score
+    # 0 (no 4-grams), so restrict to >=4-token sequences here
+    assert abs(corpus_bleu(seqs, seqs) - 100.0) < 1e-9
+
+
+def test_short_corpus_scores_zero():
+    # standard BLEU-4 behaviour: no 4-grams -> 0
+    assert corpus_bleu([[3]], [[3]]) == 0.0
+
+
+def test_strip_special():
+    assert strip_special([3, 4, 2, 5], eos_id=2, pad_id=0) == [3, 4]
+    assert strip_special([0, 3, 0], eos_id=2, pad_id=0) == [3]
+    assert strip_special([2], eos_id=2, pad_id=0) == []

@@ -1,0 +1,117 @@
+"""Calibration machinery tests: KL search, classification, modes."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import calibrate as C
+from compile.common import HIST_BINS
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def stats_of(data):
+    st_ = C.SiteStats()
+    st_.observe_range(data)
+    st_.observe_hist(data)
+    return st_
+
+
+class TestKL:
+    def test_kl_zero_for_identical(self):
+        p = np.asarray([1.0, 2.0, 3.0])
+        assert C.kl_divergence(p, p) < 1e-12
+
+    def test_kl_positive_for_different(self):
+        p = np.asarray([3.0, 2.0, 1.0])
+        q = np.asarray([1.0, 2.0, 3.0])
+        assert C.kl_divergence(p, q) > 0
+
+    def test_kl_inf_for_empty(self):
+        assert math.isinf(C.kl_divergence(np.zeros(4), np.ones(4)))
+
+    def test_quantize_hist_preserves_mass(self):
+        ref = np.asarray([float(i % 7) for i in range(512)])
+        q = C.quantize_hist(ref)
+        assert abs(ref.sum() - q.sum()) < 1e-9 * ref.sum()
+
+    def test_quantize_hist_keeps_zero_bins_zero(self):
+        ref = np.zeros(256)
+        ref[3] = 5.0
+        q = C.quantize_hist(ref)
+        assert q[3] > 0
+        assert (q[np.arange(256) != 3] == 0).all()
+
+    def test_longtail_clips_below_max(self):
+        rng = np.random.default_rng(0)
+        data = rng.standard_normal(300_000).astype(np.float32)
+        data[rng.random(300_000) < 0.001] *= 50
+        st_ = stats_of(data)
+        t = C.kl_threshold(st_.hist_abs, st_.absmax / HIST_BINS)
+        assert t < st_.absmax * 0.5
+        assert t > 1.0
+
+    def test_uniform_keeps_range(self):
+        rng = np.random.default_rng(1)
+        data = (rng.random(100_000).astype(np.float32) * 6 - 3)
+        st_ = stats_of(data)
+        t = C.kl_threshold(st_.hist_abs, st_.absmax / HIST_BINS)
+        assert t > 2.4
+
+
+class TestClassify:
+    def test_relu_like_is_sparse(self):
+        rng = np.random.default_rng(2)
+        data = np.maximum(rng.standard_normal(50_000), 0).astype(np.float32)
+        data[:15_000] = 0.0
+        assert stats_of(data).classify() == "sparse"
+
+    def test_probs_are_narrow(self):
+        rng = np.random.default_rng(3)
+        data = rng.random(50_000).astype(np.float32) * 0.9 + 0.05
+        assert stats_of(data).classify() == "narrow"
+
+    def test_activations_are_gaussian(self):
+        rng = np.random.default_rng(4)
+        data = (rng.standard_normal(50_000) * 2).astype(np.float32)
+        assert stats_of(data).classify() == "gaussian"
+
+
+class TestModes:
+    @pytest.fixture(scope="class")
+    def cal(self):
+        rng = np.random.default_rng(5)
+        data = rng.standard_normal(200_000).astype(np.float32)
+        data[rng.random(200_000) < 0.0005] *= 40
+        return C.calibrate_site("t", stats_of(data))
+
+    def test_threshold_ordering(self, cal):
+        assert 0 < cal.thr_symmetric <= cal.absmax()
+
+    def test_mode_scales(self, cal):
+        s_naive, z_naive = C.scale_for_mode(cal, "naive")
+        s_sym, z_sym = C.scale_for_mode(cal, "symmetric")
+        s_ind, z_ind = C.scale_for_mode(cal, "independent")
+        s_con, z_con = C.scale_for_mode(cal, "conjugate")
+        assert z_naive == 0 and z_sym == 0 and z_con == 0
+        # naive covers outliers -> coarser (bigger) scale
+        assert s_naive > s_sym
+        # conjugate >= each independent half in magnitude terms
+        assert cal.thr_conjugate >= cal.thr_independent[1] - 1e-9
+        assert cal.thr_conjugate >= -cal.thr_independent[0] - 1e-9
+        assert -128 <= z_ind <= 127
+
+    def test_unknown_mode_raises(self, cal):
+        with pytest.raises(ValueError):
+            C.scale_for_mode(cal, "bogus")
+
+
+def _absmax(self):
+    return max(abs(self.amin), abs(self.amax))
+
+
+# convenience used above
+C.SiteCalibration.absmax = _absmax

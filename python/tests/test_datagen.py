@@ -1,0 +1,91 @@
+"""Synthetic corpus tests: determinism, structure, rust parity contract."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import datagen
+from compile.common import DataConfig, ModelConfig, EOS_ID, FIRST_CONTENT_ID
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+CFG = DataConfig()
+MODEL = ModelConfig()
+
+
+def test_splitmix_golden_values():
+    """Must match rust/src/util/rng.rs golden values exactly."""
+    assert datagen.SplitMix64(0).next_u64() == 0x91A20293E6B0FF96
+    assert datagen.SplitMix64(1).next_u64() == 0x77DEAE211FEB5FD2
+
+
+def test_lexicon_deterministic_and_unique():
+    a = datagen.build_lexicon(CFG, MODEL)
+    b = datagen.build_lexicon(CFG, MODEL)
+    assert a.words == b.words
+    assert a.spellings == b.spellings
+    assert len(set(map(tuple, a.spellings))) == CFG.n_words
+
+
+def test_permutation_is_bijection():
+    perm = datagen.translation_permutation(CFG, MODEL)
+    n = MODEL.vocab_size - FIRST_CONTENT_ID
+    assert sorted(perm.tolist()) == list(range(n))
+
+
+def test_pairs_structure():
+    lex = datagen.build_lexicon(CFG, MODEL)
+    perm = datagen.translation_permutation(CFG, MODEL)
+    pairs = datagen.make_split(99, 50, lex, perm, CFG)
+    for p in pairs:
+        assert p.src[-1] == EOS_ID
+        assert p.ref[-1] == EOS_ID
+        assert len(p.src) == len(p.ref)
+        assert CFG.min_words <= p.n_words <= CFG.max_words
+        # translation rule: ref = reversed permuted src
+        body = p.src[:-1]
+        expect = datagen.translate_tokens(body, perm)
+        assert p.ref[:-1] == expect
+
+
+@given(seed=st.integers(0, 2**32))
+def test_splits_are_seed_deterministic(seed):
+    lex = datagen.build_lexicon(CFG, MODEL)
+    perm = datagen.translation_permutation(CFG, MODEL)
+    a = datagen.make_split(seed, 3, lex, perm, CFG)
+    b = datagen.make_split(seed, 3, lex, perm, CFG)
+    assert [p.src for p in a] == [p.src for p in b]
+
+
+def test_pad_batch_shapes():
+    out = datagen.pad_batch([[3, 4, 2], [5, 2]], 6)
+    assert out.shape == (2, 6)
+    assert out.dtype == np.int32
+    assert out[0].tolist() == [3, 4, 2, 0, 0, 0]
+    assert out[1].tolist() == [5, 2, 0, 0, 0, 0]
+    bos = datagen.pad_batch([[3, 4]], 4, bos=True)
+    assert bos[0].tolist() == [1, 3, 4, 0]
+
+
+def test_pad_batch_truncates():
+    out = datagen.pad_batch([[3] * 10], 4)
+    assert out.shape == (1, 4)
+
+
+def test_export_splits_counts():
+    small = DataConfig(n_valid=20, n_test=10, n_calibration=5)
+    splits = datagen.export_splits(small, MODEL)
+    assert len(splits["valid"]) == 20
+    assert len(splits["test"]) == 10
+    assert len(splits["calibration_indices"]) == 5
+    assert all(0 <= i < 20 for i in splits["calibration_indices"])
+
+
+def test_train_stream_batches():
+    stream = datagen.TrainStream(CFG, MODEL, batch=4, seed=1)
+    src, tgt_in, tgt_out = stream.next_batch()
+    assert src.shape == (4, MODEL.max_src_len)
+    assert tgt_in.shape == (4, MODEL.max_tgt_len)
+    assert (tgt_in[:, 0] == 1).all()  # BOS
+    # tgt_out is tgt_in shifted left by one
+    assert (tgt_in[:, 1:10] == tgt_out[:, :9]).all()

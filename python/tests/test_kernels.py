@@ -1,0 +1,117 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the core kernel-correctness signal: hypothesis sweeps shapes,
+scales and zero points; every Pallas output must match the reference
+semantics exactly (integer domain) / to float tolerance (epilogue).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import qmatmul as pk
+from compile.kernels import ref as kref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+dims = st.integers(min_value=1, max_value=33)
+scales = st.floats(min_value=1e-3, max_value=0.5, allow_nan=False)
+zeros = st.integers(min_value=-20, max_value=20)
+
+
+def rand(shape, scale=1.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+class TestQuantizeKernels:
+    @given(n=st.integers(1, 700), scale=scales, zero=zeros)
+    def test_quantize_s8_matches_ref(self, n, scale, zero):
+        x = rand((n,), 1.0, seed=n)
+        got = pk.quantize_s8_pallas(jnp.asarray(x), scale, zero, block=64)
+        want = kref.quantize_s8(jnp.asarray(x), scale, zero)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @given(n=st.integers(1, 700), scale=scales)
+    def test_dequantize_s8_matches_ref(self, n, scale):
+        q = (np.random.default_rng(n).integers(-128, 128, n)).astype(np.int8)
+        got = pk.dequantize_s8_pallas(jnp.asarray(q), scale, 0, block=64)
+        want = kref.dequantize_s8(jnp.asarray(q), scale, 0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    def test_quantize_saturates(self):
+        x = jnp.asarray([1e6, -1e6, 0.0], jnp.float32)
+        q = np.asarray(pk.quantize_s8_pallas(x, 0.1))
+        assert q.tolist() == [127, -128, 0]
+
+    def test_quantize_preserves_shape(self):
+        x = jnp.zeros((3, 5, 7), jnp.float32)
+        q = pk.quantize_s8_pallas(x, 0.1)
+        assert q.shape == (3, 5, 7)
+        assert q.dtype == jnp.int8
+
+
+class TestQMatmul:
+    @given(m=dims, k=dims, n=dims, za=zeros)
+    def test_qmatmul_integer_exact_vs_ref(self, m, k, n, za):
+        rng = np.random.default_rng(m * 1000 + k * 10 + n)
+        a_q = rng.integers(-128, 128, (m, k)).astype(np.int8)
+        b_q = rng.integers(0, 256, (k, n)).astype(np.uint8)
+        got = pk.qmatmul_pallas(jnp.asarray(a_q), jnp.asarray(b_q), 0.02, 0.03,
+                                za, bm=8, bn=8, bk=8)
+        want = kref.qmatmul_ref(jnp.asarray(a_q), jnp.asarray(b_q), 0.02, 0.03, za)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    @given(m=dims, k=dims, n=dims, sa=scales, sb=scales)
+    def test_fake_quant_matmul_matches_ref(self, m, k, n, sa, sb):
+        a = rand((m, k), 1.0, seed=m + k)
+        b = rand((k, n), 1.0, seed=k + n)
+        got = pk.fake_quant_matmul(jnp.asarray(a), jnp.asarray(b), sa, sb,
+                                   bm=8, bn=8, bk=8)
+        want = kref.fake_quant_matmul_ref(jnp.asarray(a), jnp.asarray(b), sa, sb)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    @given(blocks=st.sampled_from([(8, 8, 8), (16, 32, 8), (32, 64, 64), (128, 128, 128)]))
+    def test_block_shape_invariance(self, blocks):
+        """Different BlockSpec tilings must not change the numbers."""
+        bm, bn, bk = blocks
+        a_q = np.arange(-40, 40, dtype=np.int8).reshape(16, 5)
+        b_q = (np.arange(16 * 5).reshape(5, 16) % 256).astype(np.uint8)
+        base = kref.qmatmul_ref(jnp.asarray(a_q), jnp.asarray(b_q), 0.1, 0.1, 0)
+        got = pk.qmatmul_pallas(jnp.asarray(a_q), jnp.asarray(b_q), 0.1, 0.1, 0,
+                                bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(base), rtol=1e-6)
+
+    def test_k_padding_uses_neutral_values(self):
+        """K not a multiple of bk: padded region must contribute zero."""
+        a_q = np.full((4, 7), 5, np.int8)
+        b_q = np.full((7, 4), 200, np.uint8)
+        got = pk.qmatmul_pallas(jnp.asarray(a_q), jnp.asarray(b_q), 1.0, 1.0, 0,
+                                bm=4, bn=4, bk=4)
+        want = kref.qmatmul_ref(jnp.asarray(a_q), jnp.asarray(b_q), 1.0, 1.0, 0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+    def test_quantized_tracks_float_product(self):
+        """End-to-end fake-quant must approximate the float matmul."""
+        a = rand((24, 48), 0.5, seed=1)
+        b = rand((48, 16), 0.5, seed=2)
+        exact = a @ b
+        sa = float(np.abs(a).max()) / 127.0
+        sb = float(np.abs(b).max()) / 127.0
+        got = np.asarray(pk.fake_quant_matmul(jnp.asarray(a), jnp.asarray(b), sa, sb))
+        err = np.abs(got - exact).mean()
+        assert err < 0.05, f"mean abs err {err}"
+
+
+class TestMatmulPallas:
+    @given(m=dims, k=dims, n=dims)
+    def test_matmul_matches_jnp(self, m, k, n):
+        a = rand((m, k), 1.0, seed=m)
+        b = rand((k, n), 1.0, seed=n)
+        got = pk.matmul_pallas(jnp.asarray(a), jnp.asarray(b), bm=8, bn=8, bk=8)
+        np.testing.assert_allclose(np.asarray(got), a @ b, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,73 @@
+//! Table 1 reproduction as a bench target (accuracy + calibration cost).
+//!
+//! Reports BLEU per calibration mode on the full test set (the Table 1
+//! rows) and times the Rust KL-threshold search itself (the §4.2
+//! calibration workflow cost the paper folds into its pipeline).
+//!
+//! ```bash
+//! cargo bench --bench calibration
+//! ```
+
+use quantnmt::coordinator::{Backend, Service, ServiceConfig};
+use quantnmt::quant::calibrate::{CalibrationMode, SiteCalibration};
+use quantnmt::quant::histogram::Histogram;
+use quantnmt::util::bench::{black_box, Bench};
+use quantnmt::util::rng::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let svc = Service::open_default()?;
+    let ds = svc.dataset()?;
+    let n = if quick { 256 } else { 1024.min(ds.test.len()) };
+    let pairs = &ds.test[..n];
+
+    println!("== Table 1: calibration mode vs BLEU ({n} sentences) ==\n");
+    let base_cfg = ServiceConfig {
+        backend: Backend::EngineF32,
+        parallel: false,
+        ..Default::default()
+    };
+    let (m, _) = svc.run(pairs, &base_cfg)?;
+    let base = m.bleu;
+    println!("{:14} BLEU {:7.2}  (paper 27.68)", "fp32", base);
+    for mode in CalibrationMode::all() {
+        let cfg = ServiceConfig {
+            backend: Backend::EngineInt8(mode),
+            parallel: false,
+            ..Default::default()
+        };
+        let (m, _) = svc.run(pairs, &cfg)?;
+        println!(
+            "{:14} BLEU {:7.2}  drop {:+5.2}   (paper: sym 27.30 / indep 27.33 / conj 27.26 / naive NA)",
+            mode.as_str(),
+            m.bleu,
+            base - m.bleu
+        );
+    }
+
+    // cost of the KL threshold search itself (2048-bin histogram)
+    println!("\n== KL threshold search cost ==");
+    let mut rng = SplitMix64::new(3);
+    let data: Vec<f32> = (0..500_000)
+        .map(|_| {
+            let x = rng.normal() as f32;
+            if rng.f64() < 0.001 {
+                x * 30.0
+            } else {
+                x
+            }
+        })
+        .collect();
+    let mut h = Histogram::new(2048);
+    h.observe_range(&data);
+    h.observe_fill(&data);
+    let b = if quick { Bench::quick() } else { Bench::default() };
+    let stats = b.run("kl-search", || {
+        black_box(SiteCalibration::from_histogram("bench", &h, 16));
+    });
+    println!(
+        "KL search (3 thresholds, 2048 bins, stride 16): {:.2} ms median",
+        stats.median * 1e3
+    );
+    Ok(())
+}

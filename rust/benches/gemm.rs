@@ -1,0 +1,95 @@
+//! Figure 3 reproduction: INT8 vs FP32 GEMM speedups.
+//!
+//! * Fig 3a — square matrices, the generic-shape sweep (paper: 3.7x
+//!   peak with VNNI vs FP32 AVX-512);
+//! * Fig 3b — the Transformer model's actual GEMM shapes at batch 64
+//!   (paper: 2.4x average).
+//!
+//! We benchmark our own `gemm::sgemm` (FP32 baseline) against
+//! `gemm::igemm` (software-VNNI int8); absolute times are this
+//! machine's, the *ratios* are the reproduction target.
+//!
+//! ```bash
+//! cargo bench --bench gemm
+//! ```
+
+use quantnmt::gemm::{igemm, sgemm};
+use quantnmt::model::shapes::{model_shapes, square_shapes, GemmShape};
+use quantnmt::model::ModelConfig;
+use quantnmt::util::bench::{black_box, Bench};
+use quantnmt::util::rng::SplitMix64;
+
+fn bench_shape(b: &Bench, shape: &GemmShape) -> (f64, f64) {
+    let (m, k, n) = (shape.m, shape.k, shape.n);
+    let mut rng = SplitMix64::new(42);
+    let mut af = vec![0.0f32; m * k];
+    let mut bf = vec![0.0f32; k * n];
+    rng.fill_uniform_f32(&mut af, 1.0);
+    rng.fill_uniform_f32(&mut bf, 1.0);
+    let ai: Vec<i8> = (0..m * k).map(|_| rng.next_u64() as i8).collect();
+    let bi: Vec<u8> = (0..k * n).map(|_| rng.next_u64() as u8).collect();
+    let mut cf = vec![0.0f32; m * n];
+    let mut ci = vec![0i32; m * n];
+
+    let f32_stats = b.run("f32", || {
+        sgemm(m, k, n, black_box(&af), black_box(&bf), &mut cf);
+        black_box(&cf);
+    });
+    let i8_stats = b.run("i8", || {
+        igemm(m, k, n, black_box(&ai), black_box(&bi), &mut ci);
+        black_box(&ci);
+    });
+    (f32_stats.median, i8_stats.median)
+}
+
+fn report_table(title: &str, shapes: &[GemmShape], b: &Bench) -> f64 {
+    println!("\n== {title} ==");
+    println!(
+        "{:10} {:>6} {:>6} {:>6} {:>12} {:>12} {:>8}",
+        "site", "m", "k", "n", "f32", "int8", "speedup"
+    );
+    let mut speedups = Vec::new();
+    for s in shapes {
+        let (tf, ti) = bench_shape(b, s);
+        let speedup = tf / ti;
+        speedups.push(speedup);
+        println!(
+            "{:10} {:>6} {:>6} {:>6} {:>9.1} µs {:>9.1} µs {:>7.2}x",
+            s.site,
+            s.m,
+            s.k,
+            s.n,
+            tf * 1e6,
+            ti * 1e6,
+            speedup
+        );
+    }
+    let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    let peak = speedups.iter().fold(0.0f64, |m, &x| m.max(x));
+    println!("average speedup: {avg:.2}x   peak: {peak:.2}x");
+    avg
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bench::quick() } else { Bench::default() };
+
+    // Fig 3a: square sizes (paper sweeps generic GEMM sizes)
+    let squares = square_shapes(&[64, 128, 256, 384, 512, 768, 1024]);
+    let avg_a = report_table(
+        "Fig 3a: square GEMM int8 vs f32 (paper: up to 3.7x)",
+        &squares,
+        &b,
+    );
+
+    // Fig 3b: the model's real shapes at the paper's batch 64
+    let cfg = ModelConfig::default();
+    let shapes = model_shapes(&cfg, 64, 32, 16);
+    let avg_b = report_table(
+        "Fig 3b: Transformer GEMM shapes at batch 64 (paper: 2.4x avg)",
+        &shapes,
+        &b,
+    );
+
+    println!("\nsummary: square avg {avg_a:.2}x, model-shape avg {avg_b:.2}x");
+}

@@ -1,0 +1,85 @@
+//! Figure 7 reproduction: per-op time distribution, FP32 vs INT8.
+//!
+//! The instrumented engine brackets every op family; this bench runs
+//! identical workloads through the FP32 and INT8 engines with the
+//! profiler enabled and prints the percentage breakdowns side by side —
+//! the paper's stacked-bar figure as a table.  Expected shape: MatMul
+//! dominates FP32 (paper: 43%); the INT8 graph replaces most of it with
+//! QuantizedMatMul while gaining Quantize/Dequantize overhead.
+//!
+//! ```bash
+//! cargo bench --bench op_distribution
+//! ```
+
+use quantnmt::coordinator::Service;
+use quantnmt::model::profiler::{OpKind, Profiler};
+use quantnmt::model::{beam, Engine};
+use quantnmt::quant::calibrate::CalibrationMode;
+use quantnmt::specials::PAD_ID;
+
+fn profile(engine: &mut Engine, pairs: &[quantnmt::data::Pair], use_beam: bool) -> Profiler {
+    engine.profiler = Profiler::enabled();
+    for chunk in pairs.chunks(64) {
+        let max = chunk.iter().map(|p| p.src.len()).max().unwrap();
+        let src: Vec<Vec<u32>> = chunk
+            .iter()
+            .map(|p| {
+                let mut s = p.src.clone();
+                s.resize(max, PAD_ID);
+                s
+            })
+            .collect();
+        if use_beam {
+            beam::translate_beam(engine, &src, beam::BeamConfig::default());
+        } else {
+            engine.translate_greedy(&src, 56);
+        }
+    }
+    std::mem::take(&mut engine.profiler)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let svc = Service::open_default()?;
+    let ds = svc.dataset()?;
+    let n = if quick { 128 } else { 512.min(ds.test.len()) };
+    let pairs = &ds.test[..n];
+    let use_beam = true; // the paper decodes with beam search (GatherNd traffic)
+
+    let mut fp32 = Engine::fp32(svc.model_cfg.clone(), svc.weights.clone())?;
+    let p_fp32 = profile(&mut fp32, pairs, use_beam);
+    let mut int8 = Engine::int8(
+        svc.model_cfg.clone(),
+        svc.weights.clone(),
+        &svc.calibration,
+        CalibrationMode::Symmetric,
+        false,
+    )?;
+    let p_int8 = profile(&mut int8, pairs, use_beam);
+
+    println!("== Fig 7: operation-time distribution ({n} sentences, beam 4) ==\n");
+    println!("{:20} {:>12} {:>12}", "op", "FP32 %", "INT8 %");
+    let pct = |p: &Profiler, k: OpKind| {
+        let total = p.grand_total().as_secs_f64();
+        if total <= 0.0 {
+            0.0
+        } else {
+            100.0 * p.total(k).as_secs_f64() / total
+        }
+    };
+    for k in OpKind::all() {
+        let a = pct(&p_fp32, k);
+        let b = pct(&p_int8, k);
+        if a > 0.005 || b > 0.005 {
+            println!("{:20} {:>11.1}% {:>11.1}%", k.label(), a, b);
+        }
+    }
+    println!(
+        "\ntotals: fp32 {:.2}s, int8 {:.2}s  (ratio {:.2}x)",
+        p_fp32.grand_total().as_secs_f64(),
+        p_int8.grand_total().as_secs_f64(),
+        p_fp32.grand_total().as_secs_f64() / p_int8.grand_total().as_secs_f64()
+    );
+    println!("paper Fig 7: FP32 MatMul 43% -> INT8 shrinks MatMul share, adds Quantize/Dequantize");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Figure 8 reproduction: the end-to-end throughput ladder.
+//!
+//! Fig 8a climbs from out-of-the-box FP32 (word-sorted, serial, 1
+//! stream) to fully-optimized INT8 (token-sorted, parallel batching,
+//! 2-8 streams): paper peak 4.5x.  Fig 8b compares the best INT8
+//! configuration against the *best FP32* configuration: paper 1.51x.
+//!
+//! ```bash
+//! cargo bench --bench throughput
+//! ```
+
+use quantnmt::coordinator::{Backend, Service, ServiceConfig};
+use quantnmt::data::sorting::SortOrder;
+use quantnmt::quant::calibrate::CalibrationMode;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let svc = Service::open_default()?;
+    let ds = svc.dataset()?;
+    let n = if quick { 256 } else { ds.test.len() };
+    let pairs = &ds.test[..n.min(ds.test.len())];
+    let mode = CalibrationMode::Symmetric;
+
+    let fp32 = |sort, parallel, streams| ServiceConfig {
+        backend: Backend::EngineF32,
+        sort,
+        parallel,
+        streams,
+        ..Default::default()
+    };
+    let int8 = |sort, parallel, streams| ServiceConfig {
+        backend: Backend::EngineInt8(mode),
+        sort,
+        parallel,
+        streams,
+        ..Default::default()
+    };
+
+    // Fig 8a ladder: (label, config)
+    let ladder: Vec<(&str, ServiceConfig)> = vec![
+        ("fp32 word-sorted serial (out-of-box)", fp32(SortOrder::Words, false, 1)),
+        ("fp32 token-sorted serial", fp32(SortOrder::Tokens, false, 1)),
+        ("fp32 token-sorted parallel x2", fp32(SortOrder::Tokens, true, 2)),
+        ("fp32 token-sorted parallel x4", fp32(SortOrder::Tokens, true, 4)),
+        ("int8 word-sorted serial", int8(SortOrder::Words, false, 1)),
+        ("int8 token-sorted serial", int8(SortOrder::Tokens, false, 1)),
+        ("int8 token-sorted parallel x2", int8(SortOrder::Tokens, true, 2)),
+        ("int8 token-sorted parallel x4", int8(SortOrder::Tokens, true, 4)),
+        ("int8 token-sorted parallel x8", int8(SortOrder::Tokens, true, 8)),
+    ];
+
+    println!("== Fig 8a: throughput ladder ({} sentences) ==\n", pairs.len());
+    let mut rates = Vec::new();
+    let mut base = None;
+    for (label, cfg) in &ladder {
+        let (m, _) = svc.run(pairs, cfg)?;
+        let rate = m.sentences_per_sec();
+        let b = *base.get_or_insert(rate);
+        println!("{}   x{:.2}", m.row(), rate / b);
+        rates.push((label.to_string(), rate, m.bleu));
+    }
+
+    // Fig 8b: best INT8 vs best FP32
+    let best_fp32 = rates
+        .iter()
+        .filter(|(l, _, _)| l.starts_with("fp32"))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    let best_int8 = rates
+        .iter()
+        .filter(|(l, _, _)| l.starts_with("int8"))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    println!("\n== Fig 8b: best-vs-best ==");
+    println!("best fp32: {} at {:.2} sent/s (BLEU {:.2})", best_fp32.0, best_fp32.1, best_fp32.2);
+    println!("best int8: {} at {:.2} sent/s (BLEU {:.2})", best_int8.0, best_int8.1, best_int8.2);
+    println!(
+        "int8/fp32 = {:.2}x   (paper: 1.51x; vs out-of-box: {:.2}x, paper 4.5x)",
+        best_int8.1 / best_fp32.1,
+        best_int8.1 / rates[0].1
+    );
+    Ok(())
+}

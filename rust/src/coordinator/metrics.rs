@@ -1,0 +1,139 @@
+//! Serving metrics: latency distribution + throughput summary.
+
+use std::time::Duration;
+
+/// Latency statistics over recorded samples (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples.push(d.as_secs_f64());
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+}
+
+/// One corpus run's metrics (what the Fig 8 ladder reports per config).
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub config: String,
+    pub sentences: usize,
+    pub tokens: usize,
+    pub wall_secs: f64,
+    pub batch_latency: LatencyStats,
+    pub utilization: f64,
+    pub bleu: f64,
+}
+
+impl RunMetrics {
+    pub fn sentences_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.sentences as f64 / self.wall_secs
+    }
+
+    /// Table row for the bench reports.
+    pub fn row(&self) -> String {
+        format!(
+            "{:44} {:>8.2} sent/s  {:>7.1} tok/s  util {:>5.1}%  p50 {:>7.1}ms  p95 {:>7.1}ms  BLEU {:>6.2}",
+            self.config,
+            self.sentences_per_sec(),
+            self.tokens as f64 / self.wall_secs.max(1e-9),
+            self.utilization * 100.0,
+            self.batch_latency.p50() * 1e3,
+            self.batch_latency.p95() * 1e3,
+            self.bleu,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = LatencyStats::default();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.p99(), 0.0);
+        assert_eq!(s.count(), 0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut s = LatencyStats::default();
+        for i in 1..=100 {
+            s.record(Duration::from_millis(i));
+        }
+        assert!(s.p50() <= s.p95());
+        assert!(s.p95() <= s.p99());
+        assert!((s.mean() - 0.0505).abs() < 1e-3);
+        assert!((s.p50() - 0.050).abs() < 2e-3);
+    }
+
+    #[test]
+    fn merge_combines_samples() {
+        let mut a = LatencyStats::default();
+        let mut b = LatencyStats::default();
+        a.record(Duration::from_millis(1));
+        b.record(Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean() - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_metrics_row_formats() {
+        let m = RunMetrics {
+            config: "int8 2-streams token-sorted".into(),
+            sentences: 100,
+            tokens: 2000,
+            wall_secs: 2.0,
+            batch_latency: LatencyStats::default(),
+            utilization: 0.8,
+            bleu: 97.5,
+        };
+        assert_eq!(m.sentences_per_sec(), 50.0);
+        assert!(m.row().contains("50.00 sent/s"));
+        assert!(m.row().contains("BLEU  97.50"));
+    }
+}

@@ -1,0 +1,15 @@
+//! The translation-service coordinator (Layer 3 tie-together).
+//!
+//! Owns the serving configuration — precision, backend (instrumented
+//! engine vs AOT/PJRT fast path), input ordering, batch size, stream
+//! count — and drives the pipeline end to end: order -> batch ->
+//! queue -> parallel streams -> BLEU/throughput/latency metrics.
+//!
+//! * [`service`] — [`service::Service`]: configuration + corpus runs;
+//! * [`metrics`] — latency/throughput accounting.
+
+pub mod metrics;
+pub mod service;
+
+pub use metrics::{LatencyStats, RunMetrics};
+pub use service::{Backend, Service, ServiceConfig};

@@ -1,0 +1,320 @@
+//! The translation service: configuration + end-to-end corpus runs.
+//!
+//! A [`Service`] resolves the artifacts directory once (weights,
+//! calibration, datasets, AOT index) and then executes *runs*: given a
+//! corpus and a [`ServiceConfig`] (backend, precision, sorting, batch
+//! size, streams, pinning), it produces translations plus
+//! [`RunMetrics`].  This is the entry point `main.rs`, the examples and
+//! the Fig 6/8 benches all share, so every number in EXPERIMENTS.md
+//! flows through one code path.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::metrics::{LatencyStats, RunMetrics};
+use crate::data::bleu::{corpus_bleu, strip_special};
+use crate::data::dataset::{Dataset, Pair};
+use crate::data::sorting::{sort_indices, SortOrder};
+use crate::model::{Engine, ModelConfig, Weights};
+use crate::pipeline::batch::{make_batches, Batch};
+use crate::pipeline::parallel::{run_parallel, run_serial, ThroughputReport};
+use crate::quant::calibrate::{CalibrationMode, SiteTable};
+use crate::runtime::{ArtifactIndex, RtPrecision, TranslateExecutable};
+
+/// Which inference backend serves requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// pure-Rust instrumented engine, FP32
+    EngineF32,
+    /// pure-Rust engine, selectively-INT8 with a calibration mode
+    EngineInt8(CalibrationMode),
+    /// AOT/PJRT fused executable (fp32 or int8 graphs)
+    Runtime(RtPrecision),
+}
+
+impl Backend {
+    pub fn label(&self) -> String {
+        match self {
+            Backend::EngineF32 => "engine-fp32".into(),
+            Backend::EngineInt8(m) => format!("engine-int8-{}", m.as_str()),
+            Backend::Runtime(p) => format!("pjrt-{}", p.as_str()),
+        }
+    }
+}
+
+/// One run's configuration (a bar in Fig 8).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub backend: Backend,
+    pub sort: SortOrder,
+    pub batch_size: usize,
+    pub streams: usize,
+    /// parallel batching on/off (§5.6); off = serial baseline
+    pub parallel: bool,
+    pub pin_cores: bool,
+    pub max_decode_len: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+            sort: SortOrder::Tokens,
+            batch_size: 64,
+            streams: 2,
+            parallel: true,
+            pin_cores: true,
+            max_decode_len: 56,
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn label(&self) -> String {
+        format!(
+            "{} {} b{} {}{}",
+            self.backend.label(),
+            self.sort.as_str(),
+            self.batch_size,
+            if self.parallel {
+                format!("{}-streams", self.streams)
+            } else {
+                "serial".into()
+            },
+            if self.pin_cores && self.parallel { " pinned" } else { "" },
+        )
+    }
+}
+
+/// Per-stream executable cache.
+///
+/// SAFETY of the `Send` impl: `TranslateExecutable` wraps `Rc`-based
+/// PJRT handles and is not `Send` in general.  The cache is created
+/// *empty* on the coordinator thread, moved into exactly one worker
+/// stream, and only ever filled and used on that stream's thread (each
+/// stream compiles against its own thread-local PJRT client), so no Rc
+/// is ever shared across threads.
+struct ExeCache(Vec<TranslateExecutable>);
+unsafe impl Send for ExeCache {}
+
+impl ExeCache {
+    fn get_or_compile(
+        &mut self,
+        index: &ArtifactIndex,
+        prec: RtPrecision,
+        batch_len: usize,
+    ) -> &TranslateExecutable {
+        let bucket = index.select(prec, batch_len).expect("no AOT bucket");
+        if !self.0.iter().any(|e| e.bucket.batch == bucket.batch) {
+            self.0
+                .push(TranslateExecutable::compile(bucket).expect("HLO compile"));
+        }
+        self.0
+            .iter()
+            .find(|e| e.bucket.batch == bucket.batch)
+            .unwrap()
+    }
+}
+
+/// The resolved artifacts + shared state.
+pub struct Service {
+    pub dir: PathBuf,
+    pub model_cfg: ModelConfig,
+    pub weights: Weights,
+    pub calibration: SiteTable,
+    pub aot_index: Option<ArtifactIndex>,
+}
+
+impl Service {
+    /// Load everything from an artifacts directory.
+    pub fn open(dir: PathBuf) -> anyhow::Result<Service> {
+        let model_cfg = ModelConfig::load(&dir.join("config.json"))?;
+        let weights = Weights::load(&dir)?;
+        let calibration = SiteTable::load(&dir.join("calibration.json"))?;
+        let aot_index = ArtifactIndex::load(&dir).ok();
+        Ok(Service {
+            dir,
+            model_cfg,
+            weights,
+            calibration,
+            aot_index,
+        })
+    }
+
+    /// Open the default artifacts directory.
+    pub fn open_default() -> anyhow::Result<Service> {
+        Service::open(crate::default_artifacts_dir())
+    }
+
+    pub fn dataset(&self) -> anyhow::Result<Dataset> {
+        Dataset::load(&self.dir.join("dataset.json"))
+    }
+
+    /// Build a per-stream engine for a backend.
+    fn build_engine(&self, backend: Backend) -> anyhow::Result<Engine> {
+        match backend {
+            Backend::EngineF32 => Engine::fp32(self.model_cfg.clone(), self.weights.clone()),
+            Backend::EngineInt8(mode) => Engine::int8(
+                self.model_cfg.clone(),
+                self.weights.clone(),
+                &self.calibration,
+                mode,
+                false,
+            ),
+            Backend::Runtime(_) => anyhow::bail!("runtime backend builds executables"),
+        }
+    }
+
+    /// Translate one corpus under a config; returns (metrics, outputs in
+    /// corpus order).
+    pub fn run(
+        &self,
+        pairs: &[Pair],
+        cfg: &ServiceConfig,
+    ) -> anyhow::Result<(RunMetrics, Vec<Vec<u32>>)> {
+        let order = sort_indices(pairs, cfg.sort);
+        let batches = make_batches(pairs, &order, cfg.batch_size);
+        let latencies = Mutex::new(LatencyStats::default());
+        let max_len = cfg.max_decode_len;
+
+        let report: ThroughputReport = match cfg.backend {
+            Backend::EngineF32 | Backend::EngineInt8(_) => {
+                if cfg.parallel {
+                    run_parallel(batches, cfg.streams, cfg.pin_cores, |_id: usize| {
+                        let mut engine = self
+                            .build_engine(cfg.backend)
+                            .expect("engine construction");
+                        let latencies = &latencies;
+                        move |b: &Batch| {
+                            let t0 = Instant::now();
+                            let out = engine.translate_greedy(&b.src, max_len);
+                            latencies.lock().unwrap().record(t0.elapsed());
+                            out
+                        }
+                    })
+                } else {
+                    let mut engine = self.build_engine(cfg.backend)?;
+                    run_serial(&batches, |b| {
+                        let t0 = Instant::now();
+                        let out = engine.translate_greedy(&b.src, max_len);
+                        latencies.lock().unwrap().record(t0.elapsed());
+                        out
+                    })
+                }
+            }
+            Backend::Runtime(prec) => {
+                let index = self
+                    .aot_index
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("no hlo_index.json in artifacts"))?;
+                if cfg.parallel {
+                    run_parallel(batches, cfg.streams, cfg.pin_cores, |_id: usize| {
+                        let index = index.clone();
+                        let latencies = &latencies;
+                        // per-stream compile (thread-bound PJRT client)
+                        let mut cache = ExeCache(Vec::new());
+                        move |b: &Batch| {
+                            let exe = cache.get_or_compile(&index, prec, b.len());
+                            let t0 = Instant::now();
+                            let out = exe.translate(&b.src).expect("translate");
+                            latencies.lock().unwrap().record(t0.elapsed());
+                            out
+                        }
+                    })
+                } else {
+                    let mut cache = ExeCache(Vec::new());
+                    run_serial(&batches, |b| {
+                        let exe = cache.get_or_compile(index, prec, b.len());
+                        let t0 = Instant::now();
+                        let out = exe.translate(&b.src).expect("translate");
+                        latencies.lock().unwrap().record(t0.elapsed());
+                        out
+                    })
+                }
+            }
+        };
+
+        // reassemble corpus order + score
+        let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); pairs.len()];
+        for (idx, o) in &report.outputs {
+            outputs[*idx] = o.clone();
+        }
+        let refs: Vec<Vec<u32>> = pairs.iter().map(|p| strip_special(&p.ref_ids)).collect();
+        let bleu = corpus_bleu(&outputs, &refs);
+        let metrics = RunMetrics {
+            config: cfg.label(),
+            sentences: report.sentences,
+            tokens: report.tokens,
+            wall_secs: report.wall_secs,
+            batch_latency: latencies.into_inner().unwrap(),
+            utilization: report.utilization(),
+            bleu,
+        };
+        Ok((metrics, outputs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn service() -> Option<Service> {
+        let dir = crate::default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return None;
+        }
+        Some(Service::open(dir).unwrap())
+    }
+
+    #[test]
+    fn serial_engine_run_scores_bleu() {
+        let Some(svc) = service() else { return };
+        let ds = svc.dataset().unwrap();
+        let cfg = ServiceConfig {
+            backend: Backend::EngineF32,
+            parallel: false,
+            batch_size: 16,
+            ..Default::default()
+        };
+        let (m, outputs) = svc.run(&ds.test[..32], &cfg).unwrap();
+        assert_eq!(outputs.len(), 32);
+        assert!(m.bleu > 90.0, "BLEU {}", m.bleu);
+        assert!(m.sentences_per_sec() > 0.0);
+        assert_eq!(m.batch_latency.count(), 2);
+    }
+
+    #[test]
+    fn parallel_engine_run_preserves_outputs() {
+        let Some(svc) = service() else { return };
+        let ds = svc.dataset().unwrap();
+        let cfg_serial = ServiceConfig {
+            backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+            parallel: false,
+            batch_size: 16,
+            ..Default::default()
+        };
+        let cfg_par = ServiceConfig {
+            parallel: true,
+            streams: 2,
+            pin_cores: false,
+            batch_size: 16,
+            ..cfg_serial.clone()
+        };
+        let (_, out_s) = svc.run(&ds.test[..32], &cfg_serial).unwrap();
+        let (_, out_p) = svc.run(&ds.test[..32], &cfg_par).unwrap();
+        assert_eq!(out_s, out_p, "parallel must not change results");
+    }
+
+    #[test]
+    fn config_labels_are_distinct() {
+        let a = ServiceConfig::default().label();
+        let b = ServiceConfig {
+            sort: SortOrder::Words,
+            ..Default::default()
+        }
+        .label();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,153 @@
+//! Corpus BLEU-4 (mirrors python/compile/bleu.py).
+//!
+//! Modified n-gram precision with clipping, geometric mean over
+//! n = 1..4, brevity penalty.  Operates on token ids; the accuracy
+//! metric behind Table 1.
+
+use std::collections::HashMap;
+
+use crate::specials::{EOS_ID, PAD_ID};
+
+/// n-gram counts of a sequence.
+fn ngrams(seq: &[u32], n: usize) -> HashMap<&[u32], usize> {
+    let mut m: HashMap<&[u32], usize> = HashMap::new();
+    if seq.len() >= n {
+        for w in seq.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Corpus BLEU over hypothesis/reference id sequences. Returns 0..100.
+pub fn corpus_bleu(hyps: &[Vec<u32>], refs: &[Vec<u32>]) -> f64 {
+    assert_eq!(hyps.len(), refs.len(), "hyp/ref count mismatch");
+    const MAX_N: usize = 4;
+    let mut clipped = [0usize; MAX_N];
+    let mut total = [0usize; MAX_N];
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+    for (hyp, rf) in hyps.iter().zip(refs) {
+        hyp_len += hyp.len();
+        ref_len += rf.len();
+        for n in 1..=MAX_N {
+            let h = ngrams(hyp, n);
+            let r = ngrams(rf, n);
+            total[n - 1] += hyp.len().saturating_sub(n - 1);
+            for (g, c) in h {
+                clipped[n - 1] += c.min(*r.get(g).unwrap_or(&0));
+            }
+        }
+    }
+    if total.iter().any(|&t| t == 0) || clipped.iter().any(|&c| c == 0) {
+        return 0.0;
+    }
+    let log_p: f64 = (0..MAX_N)
+        .map(|i| (clipped[i] as f64 / total[i] as f64).ln())
+        .sum::<f64>()
+        / MAX_N as f64;
+    let bp = if hyp_len > ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len.max(1) as f64).exp()
+    };
+    100.0 * bp * log_p.exp()
+}
+
+/// Truncate at the first EOS and drop PADs (mirrors python strip_special).
+pub fn strip_special(ids: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(ids.len());
+    for &t in ids {
+        if t == EOS_ID {
+            break;
+        }
+        if t != PAD_ID {
+            out.push(t);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_match_is_100() {
+        let seqs = vec![vec![3, 4, 5, 6, 7], vec![8, 9, 10, 11]];
+        let b = corpus_bleu(&seqs, &seqs);
+        assert!((b - 100.0).abs() < 1e-9, "{b}");
+    }
+
+    #[test]
+    fn disjoint_is_0() {
+        let h = vec![vec![3, 4, 5, 6]];
+        let r = vec![vec![7, 8, 9, 10]];
+        assert_eq!(corpus_bleu(&h, &r), 0.0);
+    }
+
+    #[test]
+    fn partial_overlap_between_0_and_100() {
+        // shares the 4-gram (3,4,5,6) but diverges afterwards
+        let h = vec![vec![3, 4, 5, 6, 7, 99, 8]];
+        let r = vec![vec![3, 4, 5, 6, 7, 8]];
+        let b = corpus_bleu(&h, &r);
+        assert!(b > 0.0 && b < 100.0, "{b}");
+    }
+
+    #[test]
+    fn brevity_penalty_punishes_short_hyps() {
+        let full = vec![vec![3, 4, 5, 6, 7, 8, 9, 10]];
+        let short_h = vec![vec![3, 4, 5, 6, 7]];
+        let b_short = corpus_bleu(&short_h, &full);
+        let b_full = corpus_bleu(&full, &full);
+        assert!(b_short < b_full);
+    }
+
+    #[test]
+    fn repeated_ngrams_are_clipped() {
+        // hyp repeats a token more often than the ref: clipping limits credit
+        let h = vec![vec![3, 3, 3, 3, 3]];
+        let r = vec![vec![3, 4, 5, 6, 7]];
+        let b = corpus_bleu(&h, &r);
+        assert_eq!(b, 0.0); // no 2-gram overlap at all
+    }
+
+    #[test]
+    fn strip_special_truncates_at_eos() {
+        assert_eq!(strip_special(&[3, 4, 2, 5, 6]), vec![3, 4]);
+        assert_eq!(strip_special(&[0, 3, 0, 4, 2]), vec![3, 4]);
+        assert_eq!(strip_special(&[2, 3]), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn bounds_property() {
+        use crate::util::prop::{check, gen};
+        check("bleu-in-[0,100]", 23, 48, |rng, _| {
+            let n = rng.range(1, 5) as usize;
+            let hyps: Vec<Vec<u32>> =
+                (0..n).map(|_| gen::token_seq(rng, 20, 96)).collect();
+            let refs: Vec<Vec<u32>> =
+                (0..n).map(|_| gen::token_seq(rng, 20, 96)).collect();
+            let b = corpus_bleu(&hyps, &refs);
+            if !(0.0..=100.0 + 1e-9).contains(&b) {
+                return Err(format!("bleu {b} out of range"));
+            }
+            Ok(())
+        });
+    }
+
+    /// Mirror of the python doctest values to keep the two in lockstep.
+    #[test]
+    fn matches_python_reference_case() {
+        let h = vec![vec![10, 11, 12, 13, 14, 15]];
+        let r = vec![vec![10, 11, 12, 99, 14, 15]];
+        let b = corpus_bleu(&h, &r);
+        // 1-gram: 5/6, 2-gram: 3/5, 3-gram: 1/4, 4-gram: 0/3 -> clipped 0 -> 0
+        assert_eq!(b, 0.0);
+        let h2 = vec![vec![10, 11, 12, 13, 14, 15, 16, 17]];
+        let r2 = vec![vec![10, 11, 12, 13, 14, 15, 16, 99]];
+        let b2 = corpus_bleu(&h2, &r2);
+        assert!(b2 > 50.0 && b2 < 100.0);
+    }
+}

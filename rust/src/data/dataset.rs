@@ -1,0 +1,180 @@
+//! Loader for `artifacts/dataset.json` (written by python datagen).
+//!
+//! The JSON export is the authority for evaluation (it is what the
+//! model was trained against); `data::synthetic` regenerates the same
+//! corpus for workload generation, and `cross_check` asserts the two
+//! agree.
+
+use std::path::Path;
+
+use super::synthetic::Generator;
+use super::vocab::DataConfig;
+use crate::util::json::Json;
+
+/// A source sentence with its reference translation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pair {
+    /// source token ids, EOS-terminated
+    pub src: Vec<u32>,
+    /// reference target ids, EOS-terminated
+    pub ref_ids: Vec<u32>,
+    /// word count of the source (for §5.4 word sorting)
+    pub n_words: usize,
+    /// surface text (logs/demos)
+    pub text: String,
+}
+
+impl Pair {
+    /// Token count (the §5.4 token-sorting key).
+    pub fn n_tokens(&self) -> usize {
+        self.src.len()
+    }
+}
+
+/// The exported dataset: valid/test splits + calibration subset indices.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub valid: Vec<Pair>,
+    pub test: Vec<Pair>,
+    pub calibration_indices: Vec<usize>,
+    /// content-token translation permutation (parity checks)
+    pub permutation: Vec<u32>,
+}
+
+fn parse_pairs(j: &Json) -> anyhow::Result<Vec<Pair>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected array of pairs"))?;
+    arr.iter()
+        .map(|p| {
+            Ok(Pair {
+                src: p
+                    .get("src")
+                    .and_then(Json::as_u32_vec)
+                    .ok_or_else(|| anyhow::anyhow!("pair missing src"))?,
+                ref_ids: p
+                    .get("ref")
+                    .and_then(Json::as_u32_vec)
+                    .ok_or_else(|| anyhow::anyhow!("pair missing ref"))?,
+                n_words: p
+                    .get("n_words")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0),
+                text: p
+                    .get("text")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Dataset {
+    /// Load from `artifacts/dataset.json`.
+    pub fn load(path: &Path) -> anyhow::Result<Dataset> {
+        let j = Json::parse_file(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(Dataset {
+            valid: parse_pairs(
+                j.get("valid")
+                    .ok_or_else(|| anyhow::anyhow!("dataset.json: missing valid"))?,
+            )?,
+            test: parse_pairs(
+                j.get("test")
+                    .ok_or_else(|| anyhow::anyhow!("dataset.json: missing test"))?,
+            )?,
+            calibration_indices: j
+                .get("calibration_indices")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            permutation: j
+                .get("permutation")
+                .and_then(Json::as_u32_vec)
+                .unwrap_or_default(),
+        })
+    }
+
+    /// The calibration subset (paper: 600 random validation sentences).
+    pub fn calibration(&self) -> Vec<&Pair> {
+        self.calibration_indices
+            .iter()
+            .filter_map(|&i| self.valid.get(i))
+            .collect()
+    }
+
+    /// Assert the Rust generator reproduces this dataset exactly
+    /// (first `n` pairs of each split).
+    pub fn cross_check(&self, cfg: &DataConfig, n: usize) -> anyhow::Result<()> {
+        let g = Generator::new(cfg.clone());
+        let valid = g.split(cfg.seed ^ 0x1111, n.min(self.valid.len()));
+        for (i, (mine, theirs)) in valid.iter().zip(&self.valid).enumerate() {
+            if mine.src != theirs.src || mine.ref_ids != theirs.ref_ids {
+                anyhow::bail!(
+                    "valid[{i}] mismatch: rust {:?} vs python {:?}",
+                    mine.src,
+                    theirs.src
+                );
+            }
+        }
+        let test = g.split(cfg.seed ^ 0x2222, n.min(self.test.len()));
+        for (i, (mine, theirs)) in test.iter().zip(&self.test).enumerate() {
+            if mine.src != theirs.src || mine.ref_ids != theirs.ref_ids {
+                anyhow::bail!("test[{i}] mismatch");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tiny_dataset() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("quantnmt_test_ds");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("dataset.json");
+        std::fs::write(
+            &p,
+            r#"{
+              "valid": [{"src": [3,4,2], "ref": [5,6,2], "n_words": 1, "text": "ba"}],
+              "test":  [{"src": [7,2],   "ref": [8,2],   "n_words": 1, "text": "co"}],
+              "calibration_indices": [0],
+              "permutation": [1, 0]
+            }"#,
+        )
+        .unwrap();
+        p
+    }
+
+    #[test]
+    fn load_parses_fields() {
+        let ds = Dataset::load(&write_tiny_dataset()).unwrap();
+        assert_eq!(ds.valid.len(), 1);
+        assert_eq!(ds.test.len(), 1);
+        assert_eq!(ds.valid[0].src, vec![3, 4, 2]);
+        assert_eq!(ds.valid[0].n_tokens(), 3);
+        assert_eq!(ds.calibration().len(), 1);
+        assert_eq!(ds.permutation, vec![1, 0]);
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Dataset::load(Path::new("/nonexistent/ds.json")).is_err());
+    }
+
+    #[test]
+    fn calibration_indices_out_of_range_are_skipped() {
+        let dir = std::env::temp_dir().join("quantnmt_test_ds2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("dataset.json");
+        std::fs::write(
+            &p,
+            r#"{"valid": [], "test": [], "calibration_indices": [5], "permutation": []}"#,
+        )
+        .unwrap();
+        let ds = Dataset::load(&p).unwrap();
+        assert!(ds.calibration().is_empty());
+    }
+}

@@ -1,0 +1,20 @@
+//! Data substrate: vocabulary, synthetic corpus, BLEU, sorting, dataset IO.
+//!
+//! * [`vocab`]     — special ids + the word lexicon (surface forms and
+//!   subword spellings), regenerated bit-identically to
+//!   `python/compile/datagen.py` via [`crate::util::rng::SplitMix64`];
+//! * [`synthetic`] — the synthetic parallel corpus standing in for
+//!   WMT'14 / newstest2014 (see DESIGN.md §2 for why);
+//! * [`bleu`]      — corpus BLEU-4 with brevity penalty;
+//! * [`sorting`]   — §5.4 input ordering strategies (word-count vs
+//!   token-count vs unsorted);
+//! * [`dataset`]   — loader for `artifacts/dataset.json`.
+
+pub mod bleu;
+pub mod dataset;
+pub mod sorting;
+pub mod synthetic;
+pub mod vocab;
+
+pub use dataset::{Dataset, Pair};
+pub use vocab::{DataConfig, Lexicon};

@@ -1,0 +1,153 @@
+//! Synthetic parallel corpus generation (mirrors python datagen).
+//!
+//! Source sentences are Zipf-sampled word sequences spelled into
+//! subword tokens; the reference translation reverses the token
+//! sequence and maps it through a fixed content permutation.  The
+//! generator is bit-identical to Python's, so benches can create
+//! arbitrary-size workloads without artifact round-trips.
+
+use super::dataset::Pair;
+use super::vocab::{translation_permutation, DataConfig, Lexicon};
+use crate::specials::{EOS_ID, FIRST_CONTENT_ID};
+use crate::util::rng::SplitMix64;
+
+/// Corpus generator with a persistent lexicon/permutation.
+#[derive(Debug, Clone)]
+pub struct Generator {
+    pub cfg: DataConfig,
+    pub lexicon: Lexicon,
+    pub permutation: Vec<u32>,
+}
+
+impl Generator {
+    pub fn new(cfg: DataConfig) -> Self {
+        let lexicon = Lexicon::build(&cfg);
+        let permutation = translation_permutation(&cfg);
+        Self {
+            cfg,
+            lexicon,
+            permutation,
+        }
+    }
+
+    /// The translation rule: reverse + permute content tokens.
+    pub fn translate(&self, src_content: &[u32]) -> Vec<u32> {
+        src_content
+            .iter()
+            .rev()
+            .map(|&t| self.permutation[(t - FIRST_CONTENT_ID) as usize] + FIRST_CONTENT_ID)
+            .collect()
+    }
+
+    /// One sentence pair from the rng stream (mirrors python sample_pair).
+    pub fn sample_pair(&self, rng: &mut SplitMix64) -> Pair {
+        let n_words = rng.range(self.cfg.min_words as u64, self.cfg.max_words as u64) as usize;
+        let idxs: Vec<usize> = (0..n_words).map(|_| self.lexicon.sample(rng.f64())).collect();
+        let mut src: Vec<u32> = Vec::new();
+        for &i in &idxs {
+            src.extend_from_slice(self.lexicon.spell(i));
+        }
+        let mut ref_ids = self.translate(&src);
+        src.push(EOS_ID);
+        ref_ids.push(EOS_ID);
+        let text = idxs
+            .iter()
+            .map(|&i| self.lexicon.words[i].as_str())
+            .collect::<Vec<_>>()
+            .join(" ");
+        Pair {
+            src,
+            ref_ids,
+            n_words,
+            text,
+        }
+    }
+
+    /// A split of `n` pairs from a named seed (python make_split).
+    pub fn split(&self, split_seed: u64, n: usize) -> Vec<Pair> {
+        let mut rng = SplitMix64::new(split_seed);
+        (0..n).map(|_| self.sample_pair(&mut rng)).collect()
+    }
+
+    /// The validation split (python: seed ^ 0x1111).
+    pub fn valid_split(&self) -> Vec<Pair> {
+        self.split(self.cfg.seed ^ 0x1111, self.cfg.n_valid)
+    }
+
+    /// The test split (python: seed ^ 0x2222).
+    pub fn test_split(&self) -> Vec<Pair> {
+        self.split(self.cfg.seed ^ 0x2222, self.cfg.n_test)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::specials::EOS_ID;
+
+    fn generator() -> Generator {
+        Generator::new(DataConfig::default())
+    }
+
+    #[test]
+    fn pairs_are_deterministic() {
+        let g = generator();
+        let a = g.split(123, 10);
+        let b = g.split(123, 10);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.src, y.src);
+            assert_eq!(x.ref_ids, y.ref_ids);
+        }
+    }
+
+    #[test]
+    fn translation_is_reverse_permute() {
+        let g = generator();
+        let pair = &g.split(7, 1)[0];
+        let src_content = &pair.src[..pair.src.len() - 1];
+        let ref_content = &pair.ref_ids[..pair.ref_ids.len() - 1];
+        assert_eq!(ref_content.len(), src_content.len());
+        // applying the rule twice with the inverse permutation restores:
+        // check position-wise: ref[i] = perm(src[n-1-i])
+        for (i, &r) in ref_content.iter().enumerate() {
+            let s = src_content[src_content.len() - 1 - i];
+            assert_eq!(
+                r,
+                g.permutation[(s - 3) as usize] + 3,
+                "mismatch at {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn sequences_are_eos_terminated() {
+        let g = generator();
+        for p in g.split(9, 50) {
+            assert_eq!(*p.src.last().unwrap(), EOS_ID);
+            assert_eq!(*p.ref_ids.last().unwrap(), EOS_ID);
+            assert!(p.src[..p.src.len() - 1].iter().all(|&t| t >= 3));
+        }
+    }
+
+    #[test]
+    fn lengths_within_configured_bounds() {
+        let g = generator();
+        for p in g.split(11, 200) {
+            assert!((3..=12).contains(&p.n_words));
+            // tokens: 1..4 per word + EOS
+            assert!(p.src.len() >= p.n_words + 1);
+            assert!(p.src.len() <= p.n_words * 4 + 1);
+        }
+    }
+
+    #[test]
+    fn splits_differ() {
+        let g = generator();
+        let v = g.split(1, 5);
+        let t = g.split(2, 5);
+        assert_ne!(
+            v.iter().map(|p| p.src.clone()).collect::<Vec<_>>(),
+            t.iter().map(|p| p.src.clone()).collect::<Vec<_>>()
+        );
+    }
+}

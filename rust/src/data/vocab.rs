@@ -1,0 +1,238 @@
+//! Vocabulary: special tokens and the synthetic word lexicon.
+//!
+//! The lexicon is derived deterministically from the data seed with the
+//! same SplitMix64 stream as `python/compile/datagen.build_lexicon`, so
+//! Rust and Python agree on every word without reading the JSON export
+//! (dataset.json remains the authority; `data::dataset` cross-checks).
+
+use crate::specials::FIRST_CONTENT_ID;
+use crate::util::rng::SplitMix64;
+
+const CONSONANTS: &[u8] = b"bcdfghjklmnpqrstvwz";
+const VOWELS: &[u8] = b"aeiou";
+
+/// Data-generation parameters (mirrors python common.DataConfig).
+#[derive(Debug, Clone)]
+pub struct DataConfig {
+    pub n_words: usize,
+    pub min_words: usize,
+    pub max_words: usize,
+    pub min_spell: usize,
+    pub max_spell: usize,
+    pub zipf_s: f64,
+    pub n_valid: usize,
+    pub n_test: usize,
+    pub n_calibration: usize,
+    pub seed: u64,
+    pub vocab_size: u32,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        Self {
+            n_words: 256,
+            min_words: 3,
+            max_words: 12,
+            min_spell: 1,
+            max_spell: 4,
+            zipf_s: 1.1,
+            n_valid: 3003,
+            n_test: 3003,
+            n_calibration: 600,
+            seed: 20190610,
+            vocab_size: 96,
+        }
+    }
+}
+
+impl DataConfig {
+    pub fn content_vocab(&self) -> u32 {
+        self.vocab_size - FIRST_CONTENT_ID
+    }
+}
+
+/// The word lexicon: surface strings, subword spellings, Zipf weights.
+#[derive(Debug, Clone)]
+pub struct Lexicon {
+    pub words: Vec<String>,
+    pub spellings: Vec<Vec<u32>>,
+    /// cumulative Zipf probabilities for sampling
+    pub cum_weights: Vec<f64>,
+}
+
+impl Lexicon {
+    /// Regenerate from the seed (identical to python build_lexicon).
+    pub fn build(cfg: &DataConfig) -> Lexicon {
+        let mut rng = SplitMix64::new(cfg.seed);
+        let n_content = cfg.content_vocab() as u64;
+        let mut words: Vec<String> = Vec::with_capacity(cfg.n_words);
+        let mut spellings: Vec<Vec<u32>> = Vec::with_capacity(cfg.n_words);
+        let mut seen = std::collections::HashSet::new();
+        while words.len() < cfg.n_words {
+            let n_tok = rng.range(cfg.min_spell as u64, cfg.max_spell as u64) as usize;
+            let spelling: Vec<u32> = (0..n_tok)
+                .map(|_| FIRST_CONTENT_ID + rng.below(n_content) as u32)
+                .collect();
+            if !seen.insert(spelling.clone()) {
+                continue;
+            }
+            let mut surf = String::new();
+            for &t in &spelling {
+                surf.push(CONSONANTS[t as usize % CONSONANTS.len()] as char);
+                surf.push(VOWELS[(t as usize / 7) % VOWELS.len()] as char);
+            }
+            if words.iter().any(|w| *w == surf) {
+                surf = format!("{surf}{}", words.len());
+            }
+            words.push(surf);
+            spellings.push(spelling);
+        }
+        // Zipf cumulative weights
+        let mut w: Vec<f64> = (1..=cfg.n_words)
+            .map(|r| (r as f64).powf(-cfg.zipf_s))
+            .collect();
+        let total: f64 = w.iter().sum();
+        let mut acc = 0.0;
+        for x in w.iter_mut() {
+            acc += *x / total;
+            *x = acc;
+        }
+        Lexicon {
+            words,
+            spellings,
+            cum_weights: w,
+        }
+    }
+
+    pub fn n_words(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Zipf-sample a word index (mirrors numpy searchsorted semantics:
+    /// first index whose cumulative weight is >= u... numpy's
+    /// `searchsorted(a, v)` with default side='left' returns the first
+    /// i with a[i] >= v).
+    pub fn sample(&self, u: f64) -> usize {
+        let idx = self.cum_weights.partition_point(|&c| c < u);
+        idx.min(self.n_words() - 1)
+    }
+
+    /// Tokenize a known word index into its subword ids.
+    pub fn spell(&self, word_idx: usize) -> &[u32] {
+        &self.spellings[word_idx]
+    }
+
+    /// Surface form of a token sequence: best-effort greedy detokenizer
+    /// (for logs/demos; exact inverses are not needed by the system).
+    pub fn detokenize(&self, ids: &[u32]) -> String {
+        let mut out = String::new();
+        let mut i = 0;
+        'outer: while i < ids.len() {
+            // longest-match against spellings
+            for len in (1..=4usize).rev() {
+                if i + len <= ids.len() {
+                    if let Some(w) = self
+                        .spellings
+                        .iter()
+                        .position(|s| s.len() == len && s[..] == ids[i..i + len])
+                    {
+                        if !out.is_empty() {
+                            out.push(' ');
+                        }
+                        out.push_str(&self.words[w]);
+                        i += len;
+                        continue 'outer;
+                    }
+                }
+            }
+            if !out.is_empty() {
+                out.push(' ');
+            }
+            out.push_str(&format!("<{}>", ids[i]));
+            i += 1;
+        }
+        out
+    }
+}
+
+/// The fixed content-token translation permutation (Fisher-Yates,
+/// mirrors python translation_permutation).
+pub fn translation_permutation(cfg: &DataConfig) -> Vec<u32> {
+    let mut rng = SplitMix64::new(cfg.seed ^ 0xABCDEF);
+    let n = cfg.content_vocab() as usize;
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    for i in (1..n).rev() {
+        let j = rng.below(i as u64 + 1) as usize;
+        perm.swap(i, j);
+    }
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexicon_is_deterministic() {
+        let cfg = DataConfig::default();
+        let a = Lexicon::build(&cfg);
+        let b = Lexicon::build(&cfg);
+        assert_eq!(a.words, b.words);
+        assert_eq!(a.spellings, b.spellings);
+        assert_eq!(a.n_words(), 256);
+    }
+
+    #[test]
+    fn spellings_are_unique_and_bounded() {
+        let cfg = DataConfig::default();
+        let lex = Lexicon::build(&cfg);
+        let mut seen = std::collections::HashSet::new();
+        for s in &lex.spellings {
+            assert!((1..=4).contains(&s.len()));
+            assert!(s.iter().all(|&t| (3..96).contains(&t)));
+            assert!(seen.insert(s.clone()), "duplicate spelling {s:?}");
+        }
+    }
+
+    #[test]
+    fn zipf_weights_monotone_and_normalized() {
+        let cfg = DataConfig::default();
+        let lex = Lexicon::build(&cfg);
+        for w in lex.cum_weights.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!((lex.cum_weights.last().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampling_respects_zipf_head() {
+        let cfg = DataConfig::default();
+        let lex = Lexicon::build(&cfg);
+        // low u -> head words
+        assert_eq!(lex.sample(0.0), 0);
+        assert!(lex.sample(0.999999) >= 200);
+    }
+
+    #[test]
+    fn permutation_is_a_bijection() {
+        let cfg = DataConfig::default();
+        let perm = translation_permutation(&cfg);
+        let mut seen = vec![false; perm.len()];
+        for &p in &perm {
+            assert!(!seen[p as usize]);
+            seen[p as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn detokenize_roundtrips_single_words() {
+        let cfg = DataConfig::default();
+        let lex = Lexicon::build(&cfg);
+        let ids: Vec<u32> = lex.spell(5).to_vec();
+        let text = lex.detokenize(&ids);
+        // greedy longest-match may pick a different homograph, but must
+        // produce a single word from the lexicon
+        assert!(lex.words.contains(&text));
+    }
+}

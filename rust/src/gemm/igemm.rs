@@ -1,0 +1,364 @@
+//! Quantized GEMM: `s8 x u8 -> i32`, the software analogue of VNNI.
+//!
+//! Cascade Lake's `vpdpbusd` fuses 4 u8*s8 products + i32 add into one
+//! instruction per lane; GEMMLOWP (what stock TensorFlow used) does the
+//! same arithmetic scalar-by-scalar, which is why the paper swapped in
+//! MKL's kernel.  Our inner loop mirrors the vpdpbusd dataflow — an
+//! unrolled quad MAC over a k-packed B panel — which rustc lowers to
+//! `pmaddubsw`/`pmaddwd`-style vector code on AVX2+ targets, and which
+//! beats the f32 kernel on memory traffic 4:1 exactly as VNNI does.
+//!
+//! Entry points:
+//! * [`igemm`]            — raw `A_s8 [m,k] * B_u8 [k,n] -> C_i32 [m,n]`
+//! * [`igemm_corrected`]  — subtracts the zero-point corrections
+//! * [`quantized_matmul`] — full f32 -> int8 -> f32 path matching
+//!   `python/compile/kernels/ref.py::fake_quant_matmul_ref`
+
+use super::UINT8_ZERO_POINT;
+
+const MC: usize = 64;
+const KC: usize = 256;
+const NC: usize = 512;
+
+/// `c = a * b` with i32 accumulation (c fully overwritten).
+///
+/// Dispatches to the AVX-512 VNNI kernel when the CPU supports it
+/// (packing B on the fly); otherwise runs the portable blocked
+/// quad-MAC kernel.
+pub fn igemm(m: usize, k: usize, n: usize, a: &[i8], b: &[u8], c: &mut [i32]) {
+    assert_eq!(a.len(), m * k, "a len");
+    assert_eq!(b.len(), k * n, "b len");
+    assert_eq!(c.len(), m * n, "c len");
+    c.fill(0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    // Shape-aware kernel choice (§5.2): packing B costs one O(k*n) pass,
+    // amortized over m output rows — below ~2 rows the portable kernel
+    // wins (the paper likewise picks kernels by matrix shape).
+    if m >= 2 && use_vnni() {
+        let bp = super::vnni::PackedB::pack(b, k, n);
+        // SAFETY: feature presence checked by use_vnni().
+        unsafe { super::vnni::igemm_vnni(m, k, a, &bp, c) };
+        return;
+    }
+    igemm_portable(m, k, n, a, b, c);
+}
+
+/// `c = a * B_packed` against a pre-packed B (weights are packed once).
+pub fn igemm_prepacked(m: usize, k: usize, a: &[i8], bp: &super::vnni::PackedB, c: &mut [i32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(c.len(), m * bp.n);
+    c.fill(0);
+    if m == 0 || k == 0 || bp.n == 0 {
+        return;
+    }
+    debug_assert!(use_vnni());
+    // SAFETY: PackedB construction is gated on use_vnni() by callers.
+    unsafe { super::vnni::igemm_vnni(m, k, a, bp, c) };
+}
+
+/// Cached VNNI availability.
+pub fn use_vnni() -> bool {
+    use std::sync::OnceLock;
+    static AVAIL: OnceLock<bool> = OnceLock::new();
+    *AVAIL.get_or_init(|| {
+        std::env::var("QUANTNMT_NO_VNNI").is_err() && super::vnni::vnni_available()
+    })
+}
+
+/// Portable blocked kernel (also the reference for the VNNI path).
+pub fn igemm_portable(m: usize, k: usize, n: usize, a: &[i8], b: &[u8], c: &mut [i32]) {
+    for jc in (0..n).step_by(NC) {
+        let nb = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kb = KC.min(k - pc);
+            for ic in (0..m).step_by(MC) {
+                let mb = MC.min(m - ic);
+                block(k, n, a, b, c, ic, pc, jc, mb, kb, nb);
+            }
+        }
+    }
+}
+
+/// Register-tiled micro-kernel.
+///
+/// Output tiles of NR=32 i32 lanes (two zmm registers on AVX-512) are
+/// accumulated in a stack tile across the whole k-block before touching
+/// C — the same register-blocking MKL's VNNI kernel uses, with the
+/// quad-MAC inner statement (4 byte products into an i32 lane) that
+/// `vpdpbusd` hard-wires.
+const NR: usize = 32;
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn block(
+    k: usize,
+    n: usize,
+    a: &[i8],
+    b: &[u8],
+    c: &mut [i32],
+    ic: usize,
+    pc: usize,
+    jc: usize,
+    mb: usize,
+    kb: usize,
+    nb: usize,
+) {
+    let mut j = 0;
+    while j < nb {
+        let nr = NR.min(nb - j);
+        if nr == NR {
+            for i in 0..mb {
+                let r = ic + i;
+                let arow = &a[r * k + pc..r * k + pc + kb];
+                let mut acc = [0i32; NR];
+                let mut p = 0;
+                // quad-unrolled k loop: one "software vpdpbusd" per 4 rows
+                while p + 4 <= kb {
+                    let a0 = arow[p] as i32;
+                    let a1 = arow[p + 1] as i32;
+                    let a2 = arow[p + 2] as i32;
+                    let a3 = arow[p + 3] as i32;
+                    let b0 = &b[(pc + p) * n + jc + j..][..NR];
+                    let b1 = &b[(pc + p + 1) * n + jc + j..][..NR];
+                    let b2 = &b[(pc + p + 2) * n + jc + j..][..NR];
+                    let b3 = &b[(pc + p + 3) * n + jc + j..][..NR];
+                    for x in 0..NR {
+                        acc[x] += a0 * b0[x] as i32
+                            + a1 * b1[x] as i32
+                            + a2 * b2[x] as i32
+                            + a3 * b3[x] as i32;
+                    }
+                    p += 4;
+                }
+                while p < kb {
+                    let av = arow[p] as i32;
+                    let brow = &b[(pc + p) * n + jc + j..][..NR];
+                    for x in 0..NR {
+                        acc[x] += av * brow[x] as i32;
+                    }
+                    p += 1;
+                }
+                let crow = &mut c[r * n + jc + j..][..NR];
+                for x in 0..NR {
+                    crow[x] += acc[x];
+                }
+            }
+        } else {
+            // ragged right edge: plain quad-MAC into C
+            for i in 0..mb {
+                let r = ic + i;
+                let arow = &a[r * k + pc..r * k + pc + kb];
+                let crow = &mut c[r * n + jc + j..r * n + jc + j + nr];
+                for (p, &av) in arow.iter().enumerate() {
+                    let brow = &b[(pc + p) * n + jc + j..][..nr];
+                    let av = av as i32;
+                    for x in 0..nr {
+                        crow[x] += av * brow[x] as i32;
+                    }
+                }
+            }
+        }
+        j += nr;
+    }
+}
+
+/// Zero-point-corrected int GEMM:
+///
+/// `out[m,n] = sum_k (a[m,k] - za) * (b[k,n] - 128)` computed as the raw
+/// product minus row/col-sum corrections (one pass, no materialized
+/// shifted operands):
+///
+/// `raw - 128*rowsum(a) - za*colsum(b) + k*za*128`
+pub fn igemm_corrected(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    za: i32,
+    b: &[u8],
+    c: &mut [i32],
+) {
+    igemm(m, k, n, a, b, c);
+    // rowsum(a): [m]
+    let mut rowsum = vec![0i32; m];
+    for i in 0..m {
+        let mut s = 0i32;
+        for p in 0..k {
+            s += a[i * k + p] as i32;
+        }
+        rowsum[i] = s;
+    }
+    // colsum(b): [n] — only needed when za != 0 (paper §4.2: symmetric
+    // mode keeps the offset zero to use the faster kernel)
+    let mut colsum = vec![0i32; 0];
+    if za != 0 {
+        colsum = vec![0i32; n];
+        for p in 0..k {
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                colsum[j] += brow[j] as i32;
+            }
+        }
+    }
+    let kz = k as i32 * za * UINT8_ZERO_POINT;
+    for i in 0..m {
+        let corr_row = UINT8_ZERO_POINT * rowsum[i];
+        let crow = &mut c[i * n..(i + 1) * n];
+        if za == 0 {
+            for cx in crow.iter_mut() {
+                *cx -= corr_row;
+            }
+        } else {
+            for (j, cx) in crow.iter_mut().enumerate() {
+                *cx = *cx - corr_row - za * colsum[j] + kz;
+            }
+        }
+    }
+}
+
+/// Reusable buffers for the quantize -> igemm -> dequantize path, so the
+/// engine's hot loop performs no allocation (perf pass, EXPERIMENTS §Perf).
+#[derive(Default)]
+pub struct QGemmScratch {
+    pub a_q: Vec<i8>,
+    pub b_q: Vec<u8>,
+    pub acc: Vec<i32>,
+}
+
+/// Full quantized MatMul: quantize A (s8, affine) and B (u8, zp 128),
+/// multiply with i32 accumulation, dequantize to f32.
+///
+/// Matches `kernels/ref.py::fake_quant_matmul_ref` bit-for-bit in the
+/// integer domain (float rounding of the final scale may differ in ulp).
+#[allow(clippy::too_many_arguments)]
+pub fn quantized_matmul(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    a_scale: f32,
+    a_zero: i32,
+    b: &[f32],
+    b_scale: f32,
+    out: &mut [f32],
+    scratch: &mut QGemmScratch,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    scratch.a_q.resize(m * k, 0);
+    scratch.b_q.resize(k * n, 0);
+    scratch.acc.resize(m * n, 0);
+    quantize_s8(a, a_scale, a_zero, &mut scratch.a_q);
+    quantize_u8(b, b_scale, &mut scratch.b_q);
+    igemm_corrected(m, k, n, &scratch.a_q, a_zero, &scratch.b_q, &mut scratch.acc);
+    let s = a_scale * b_scale;
+    for (o, &acc) in out.iter_mut().zip(scratch.acc.iter()) {
+        *o = acc as f32 * s;
+    }
+}
+
+/// Quantize f32 -> s8 (paper eq. 5): `clip(round(x/scale) + zero, -128, 127)`.
+pub fn quantize_s8(src: &[f32], scale: f32, zero: i32, dst: &mut [i8]) {
+    assert_eq!(src.len(), dst.len());
+    let inv = 1.0 / scale;
+    for (d, &x) in dst.iter_mut().zip(src) {
+        let q = (x * inv).round() as i32 + zero;
+        *d = q.clamp(-128, 127) as i8;
+    }
+}
+
+/// Quantize f32 -> u8 with fixed zero point 128.
+pub fn quantize_u8(src: &[f32], scale: f32, dst: &mut [u8]) {
+    assert_eq!(src.len(), dst.len());
+    let inv = 1.0 / scale;
+    for (d, &x) in dst.iter_mut().zip(src) {
+        let q = (x * inv).round() as i32 + UINT8_ZERO_POINT;
+        *d = q.clamp(0, 255) as u8;
+    }
+}
+
+/// Dequantize s8 -> f32 (paper eq. 6).
+pub fn dequantize_s8(src: &[i8], scale: f32, zero: i32, dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &q) in dst.iter_mut().zip(src) {
+        *d = (q as i32 - zero) as f32 * scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corrected_equals_shifted_reference() {
+        // igemm_corrected must equal sum (a - za)(b - 128) exactly
+        let (m, k, n) = (3, 7, 5);
+        let a: Vec<i8> = (0..m * k).map(|i| (i as i32 * 37 % 251 - 125) as i8).collect();
+        let b: Vec<u8> = (0..k * n).map(|i| (i * 83 % 256) as u8).collect();
+        for za in [0i32, 9, -5] {
+            let mut c = vec![0i32; m * n];
+            igemm_corrected(m, k, n, &a, za, &b, &mut c);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut expect = 0i32;
+                    for p in 0..k {
+                        expect += (a[i * k + p] as i32 - za)
+                            * (b[p * n + j] as i32 - UINT8_ZERO_POINT);
+                    }
+                    assert_eq!(c[i * n + j], expect, "za={za} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_s8_clips_and_rounds() {
+        let src = vec![0.0, 0.26, -0.26, 100.0, -100.0, 0.24];
+        let mut dst = vec![0i8; 6];
+        quantize_s8(&src, 0.5, 0, &mut dst);
+        assert_eq!(dst, vec![0, 1, -1, 127, -128, 0]);
+    }
+
+    #[test]
+    fn quantize_u8_zero_point() {
+        let src = vec![0.0, 0.5, -0.5, 1000.0, -1000.0];
+        let mut dst = vec![0u8; 5];
+        quantize_u8(&src, 0.5, &mut dst);
+        assert_eq!(dst, vec![128, 129, 127, 255, 0]);
+    }
+
+    #[test]
+    fn dequantize_roundtrip_error_within_half_step() {
+        let scale = 0.02f32;
+        let src: Vec<f32> = (-100..100).map(|i| i as f32 * 0.011).collect();
+        let mut q = vec![0i8; src.len()];
+        quantize_s8(&src, scale, 0, &mut q);
+        let mut back = vec![0f32; src.len()];
+        dequantize_s8(&q, scale, 0, &mut back);
+        for (x, y) in src.iter().zip(&back) {
+            if x.abs() < 127.0 * scale {
+                assert!((x - y).abs() <= scale * 0.5 + 1e-6, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_no_stale_data() {
+        let mut scratch = QGemmScratch::default();
+        let a = vec![1.0f32; 4];
+        let b = vec![1.0f32; 4];
+        let mut out = vec![0.0f32; 4];
+        quantized_matmul(2, 2, 2, &a, 0.01, 0, &b, 0.01, &mut out, &mut scratch);
+        let first = out.clone();
+        // second call with same inputs must give identical results
+        quantized_matmul(2, 2, 2, &a, 0.01, 0, &b, 0.01, &mut out, &mut scratch);
+        assert_eq!(first, out);
+        // smaller problem after larger: buffers shrink logically
+        let mut out1 = vec![0.0f32; 1];
+        quantized_matmul(1, 1, 1, &[2.0], 0.1, 0, &[3.0], 0.1, &mut out1, &mut scratch);
+        assert!((out1[0] - 6.0).abs() < 0.2);
+    }
+}

@@ -1,0 +1,149 @@
+//! Blocked FP32 GEMM — the paper's "AVX-512 FP32 MatMul" baseline.
+//!
+//! Row-major `C[m,n] = A[m,k] * B[k,n]`.  Strategy:
+//!
+//! * L2-sized blocking over (M, K, N);
+//! * within a block, a 4-row micro-kernel walks B rows sequentially
+//!   (unit stride) and keeps 4 running C rows in registers — rustc
+//!   auto-vectorizes the inner `n` loop into AVX FMAs;
+//! * `C` is accumulated in place, so callers must zero it (the public
+//!   entry point does).
+
+const MC: usize = 64; // rows of A per block
+const KC: usize = 256; // depth per block
+const NC: usize = 512; // cols of B per block
+
+/// `c = a * b` (c fully overwritten).
+pub fn sgemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "a len");
+    assert_eq!(b.len(), k * n, "b len");
+    assert_eq!(c.len(), m * n, "c len");
+    c.fill(0.0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    for jc in (0..n).step_by(NC) {
+        let nb = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kb = KC.min(k - pc);
+            for ic in (0..m).step_by(MC) {
+                let mb = MC.min(m - ic);
+                block(m, k, n, a, b, c, ic, pc, jc, mb, kb, nb);
+            }
+        }
+    }
+}
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn block(
+    _m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    ic: usize,
+    pc: usize,
+    jc: usize,
+    mb: usize,
+    kb: usize,
+    nb: usize,
+) {
+    let mut i = 0;
+    // 4-row micro-kernel
+    while i + 4 <= mb {
+        let (r0, r1, r2, r3) = (ic + i, ic + i + 1, ic + i + 2, ic + i + 3);
+        for p in 0..kb
+        {
+            let bp = &b[(pc + p) * n + jc..(pc + p) * n + jc + nb];
+            let a0 = a[r0 * k + pc + p];
+            let a1 = a[r1 * k + pc + p];
+            let a2 = a[r2 * k + pc + p];
+            let a3 = a[r3 * k + pc + p];
+            // split C rows via split_at_mut-free unsafe-free approach:
+            // process rows one at a time to satisfy borrowck, relying on
+            // the optimizer to keep bp in registers/L1.
+            let c0 = &mut c[r0 * n + jc..r0 * n + jc + nb];
+            for (cx, &bx) in c0.iter_mut().zip(bp) {
+                *cx += a0 * bx;
+            }
+            let c1 = &mut c[r1 * n + jc..r1 * n + jc + nb];
+            for (cx, &bx) in c1.iter_mut().zip(bp) {
+                *cx += a1 * bx;
+            }
+            let c2 = &mut c[r2 * n + jc..r2 * n + jc + nb];
+            for (cx, &bx) in c2.iter_mut().zip(bp) {
+                *cx += a2 * bx;
+            }
+            let c3 = &mut c[r3 * n + jc..r3 * n + jc + nb];
+            for (cx, &bx) in c3.iter_mut().zip(bp) {
+                *cx += a3 * bx;
+            }
+        }
+        i += 4;
+    }
+    // remainder rows
+    while i < mb {
+        let r = ic + i;
+        for p in 0..kb {
+            let av = a[r * k + pc + p];
+            let bp = &b[(pc + p) * n + jc..(pc + p) * n + jc + nb];
+            let cr = &mut c[r * n + jc..r * n + jc + nb];
+            for (cx, &bx) in cr.iter_mut().zip(bp) {
+                *cx += av * bx;
+            }
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity() {
+        let n = 8;
+        let mut b = vec![0.0f32; n * n];
+        for i in 0..n {
+            b[i * n + i] = 1.0;
+        }
+        let a: Vec<f32> = (0..n * n).map(|i| i as f32).collect();
+        let mut c = vec![0.0f32; n * n];
+        sgemm(n, n, n, &a, &b, &mut c);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn known_product() {
+        // [1 2; 3 4] * [5 6; 7 8] = [19 22; 43 50]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        let mut c = vec![0.0; 4];
+        sgemm(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn non_multiple_of_block_dims() {
+        // exercise remainder paths (m=5 -> one 4-row block + 1 remainder)
+        let (m, k, n) = (5, 3, 2);
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 7) as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 5) as f32).collect();
+        let mut c = vec![0.0; m * n];
+        let mut expect = vec![0.0; m * n];
+        sgemm(m, k, n, &a, &b, &mut c);
+        super::super::matmul_naive(m, k, n, &a, &b, &mut expect);
+        assert_eq!(c, expect);
+    }
+
+    #[test]
+    fn overwrites_stale_c() {
+        let a = vec![1.0];
+        let b = vec![2.0];
+        let mut c = vec![99.0];
+        sgemm(1, 1, 1, &a, &b, &mut c);
+        assert_eq!(c, vec![2.0]);
+    }
+}

@@ -1,0 +1,328 @@
+//! A small dataflow-graph IR modelling the paper's TensorFlow graph.
+//!
+//! Nodes carry an [`Op`] and an output [`DType`]; edges are the
+//! `inputs` lists.  `transformer_graph` builds the inference graph of
+//! our Transformer (same MatMul census as `model.matmul_site_names`),
+//! which the passes in `passes.rs` then rewrite exactly the way the
+//! paper rewrites the TF graph (Fig 1 naive form, Fig 5 optimized form).
+
+use std::collections::BTreeMap;
+
+/// Tensor element type flowing along an edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    U8,
+    I32,
+}
+
+/// Graph operations (a TF-flavoured vocabulary; §4.1/§5.5 names).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Op {
+    /// Graph input placeholder.
+    Input,
+    /// Weight/threshold constant.
+    Const,
+    MatMul,
+    /// s8 x u8 -> s32 quantized MatMul (paper: QuantizedMatMul).
+    QuantizedMatMul,
+    /// f32 -> int8 (paper: QuantizeV2). Inputs: tensor, min, max.
+    Quantize,
+    /// int -> f32 (paper: Dequantize).
+    Dequantize,
+    /// i32 -> i8 under new range (paper: Requantize).
+    Requantize,
+    /// i32 range scan (paper: RequantizationRange).
+    RequantizationRange,
+    /// runtime min reduction (naive quantization needs these).
+    Min,
+    /// runtime max reduction.
+    Max,
+    Reshape,
+    Softmax,
+    LayerNorm,
+    Relu,
+    Add,
+    GatherNd,
+    /// anything else we don't rewrite (embeddings, argmax, ...).
+    Other(String),
+}
+
+impl Op {
+    /// Census label (Fig 7 bucket).
+    pub fn label(&self) -> &str {
+        match self {
+            Op::Input => "Input",
+            Op::Const => "Const",
+            Op::MatMul => "MatMul",
+            Op::QuantizedMatMul => "QuantizedMatMul",
+            Op::Quantize => "QuantizeV2",
+            Op::Dequantize => "Dequantize",
+            Op::Requantize => "Requantize",
+            Op::RequantizationRange => "RequantizationRange",
+            Op::Min => "Min",
+            Op::Max => "Max",
+            Op::Reshape => "Reshape",
+            Op::Softmax => "Softmax",
+            Op::LayerNorm => "LayerNorm",
+            Op::Relu => "Relu",
+            Op::Add => "Add",
+            Op::GatherNd => "GatherNd",
+            Op::Other(s) => s,
+        }
+    }
+}
+
+pub type NodeId = usize;
+
+/// One graph node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: Op,
+    pub dtype: DType,
+    pub inputs: Vec<NodeId>,
+}
+
+/// A directed acyclic dataflow graph.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn add(&mut self, name: impl Into<String>, op: Op, dtype: DType, inputs: &[NodeId]) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            id,
+            name: name.into(),
+            op,
+            dtype,
+            inputs: inputs.to_vec(),
+        });
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// ids of nodes consuming `id`.
+    pub fn consumers(&self, id: NodeId) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| n.inputs.contains(&id))
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Count of live (reachable-from-any-sink) nodes per op label.
+    pub fn op_census(&self) -> BTreeMap<String, usize> {
+        let mut census = BTreeMap::new();
+        for n in &self.nodes {
+            *census.entry(n.op.label().to_string()).or_insert(0) += 1;
+        }
+        census
+    }
+
+    pub fn count_op(&self, op: &Op) -> usize {
+        self.nodes.iter().filter(|n| &n.op == op).count()
+    }
+
+    /// Verify dataflow dtype rules (used by property tests):
+    /// * QuantizedMatMul inputs must be I8/U8 (plus F32 range consts);
+    /// * MatMul inputs must be F32;
+    /// * Quantize input F32, output I8/U8;
+    /// * Dequantize input I8/I32, output F32.
+    pub fn check_types(&self) -> Result<(), String> {
+        for n in &self.nodes {
+            match &n.op {
+                Op::MatMul => {
+                    for &i in n.inputs.iter().take(2) {
+                        if self.node(i).dtype != DType::F32 {
+                            return Err(format!("MatMul {} has non-f32 input {}", n.name, i));
+                        }
+                    }
+                }
+                Op::QuantizedMatMul => {
+                    let a = self.node(n.inputs[0]).dtype;
+                    let b = self.node(n.inputs[1]).dtype;
+                    if a != DType::I8 || b != DType::U8 {
+                        return Err(format!(
+                            "QuantizedMatMul {} wants s8 x u8, got {a:?} x {b:?}",
+                            n.name
+                        ));
+                    }
+                    if n.dtype != DType::I32 {
+                        return Err(format!("QuantizedMatMul {} must output i32", n.name));
+                    }
+                }
+                Op::Quantize => {
+                    if self.node(n.inputs[0]).dtype != DType::F32 {
+                        return Err(format!("Quantize {} input must be f32", n.name));
+                    }
+                    if !matches!(n.dtype, DType::I8 | DType::U8) {
+                        return Err(format!("Quantize {} must output int8", n.name));
+                    }
+                }
+                Op::Dequantize => {
+                    if !matches!(self.node(n.inputs[0]).dtype, DType::I8 | DType::I32) {
+                        return Err(format!("Dequantize {} input must be int", n.name));
+                    }
+                    if n.dtype != DType::F32 {
+                        return Err(format!("Dequantize {} must output f32", n.name));
+                    }
+                }
+                Op::Requantize => {
+                    if self.node(n.inputs[0]).dtype != DType::I32 {
+                        return Err(format!("Requantize {} input must be i32", n.name));
+                    }
+                }
+                _ => {}
+            }
+            for &i in &n.inputs {
+                if i >= n.id {
+                    return Err(format!("node {} has forward edge to {}", n.name, i));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Configuration for building the Transformer inference graph.
+#[derive(Debug, Clone, Copy)]
+pub struct GraphConfig {
+    pub n_enc_layers: usize,
+    pub n_dec_layers: usize,
+    /// GatherNd ops per decoder layer in the beam-search loop (the
+    /// paper counts 40 total in the Transformer-base while loop).
+    pub gathers_per_dec_layer: usize,
+}
+
+impl Default for GraphConfig {
+    fn default() -> Self {
+        Self {
+            n_enc_layers: 2,
+            n_dec_layers: 2,
+            gathers_per_dec_layer: 4,
+        }
+    }
+}
+
+/// Build the FP32 Transformer inference graph (one decode step view,
+/// mirroring the TF graph the paper transforms).
+pub fn transformer_graph(cfg: GraphConfig) -> Graph {
+    let mut g = Graph::default();
+    let src = g.add("src_ids", Op::Input, DType::F32, &[]);
+    let mut x = g.add("src_embed", Op::Other("Embed".into()), DType::F32, &[src]);
+
+    let attn = |g: &mut Graph, prefix: &str, q_in: NodeId, kv_in: NodeId| -> NodeId {
+        let wq = g.add(format!("{prefix}.wq"), Op::Const, DType::F32, &[]);
+        let wk = g.add(format!("{prefix}.wk"), Op::Const, DType::F32, &[]);
+        let wv = g.add(format!("{prefix}.wv"), Op::Const, DType::F32, &[]);
+        let wo = g.add(format!("{prefix}.wo"), Op::Const, DType::F32, &[]);
+        let q = g.add(format!("{prefix}.q"), Op::MatMul, DType::F32, &[q_in, wq]);
+        let k = g.add(format!("{prefix}.k"), Op::MatMul, DType::F32, &[kv_in, wk]);
+        let v = g.add(format!("{prefix}.v"), Op::MatMul, DType::F32, &[kv_in, wv]);
+        let qk = g.add(format!("{prefix}.qk"), Op::MatMul, DType::F32, &[q, k]);
+        let sm = g.add(format!("{prefix}.softmax"), Op::Softmax, DType::F32, &[qk]);
+        let pv = g.add(format!("{prefix}.pv"), Op::MatMul, DType::F32, &[sm, v]);
+        g.add(format!("{prefix}.o"), Op::MatMul, DType::F32, &[pv, wo])
+    };
+    let ffn = |g: &mut Graph, prefix: &str, x: NodeId| -> NodeId {
+        let w1 = g.add(format!("{prefix}.w1"), Op::Const, DType::F32, &[]);
+        let w2 = g.add(format!("{prefix}.w2"), Op::Const, DType::F32, &[]);
+        let h = g.add(format!("{prefix}.h"), Op::MatMul, DType::F32, &[x, w1]);
+        let r = g.add(format!("{prefix}.relu"), Op::Relu, DType::F32, &[h]);
+        g.add(format!("{prefix}.y"), Op::MatMul, DType::F32, &[r, w2])
+    };
+    let ln = |g: &mut Graph, prefix: &str, a: NodeId, b: NodeId| -> NodeId {
+        let add = g.add(format!("{prefix}.res"), Op::Add, DType::F32, &[a, b]);
+        g.add(format!("{prefix}.ln"), Op::LayerNorm, DType::F32, &[add])
+    };
+
+    for i in 0..cfg.n_enc_layers {
+        let p = format!("enc.{i}");
+        let a = attn(&mut g, &format!("{p}.attn"), x, x);
+        x = ln(&mut g, &format!("{p}.ln1"), x, a);
+        let f = ffn(&mut g, &format!("{p}.ffn"), x);
+        x = ln(&mut g, &format!("{p}.ln2"), x, f);
+    }
+    let memory = x;
+
+    let tgt = g.add("tgt_ids", Op::Input, DType::F32, &[]);
+    let mut y = g.add("tgt_embed", Op::Other("Embed".into()), DType::F32, &[tgt]);
+    for i in 0..cfg.n_dec_layers {
+        let p = format!("dec.{i}");
+        // beam-search cache gathers (§5.3) feed the self-attention
+        for gidx in 0..cfg.gathers_per_dec_layer {
+            let idx = g.add(
+                format!("{p}.beam_idx.{gidx}"),
+                Op::Input,
+                DType::F32,
+                &[],
+            );
+            y = g.add(
+                format!("{p}.gather.{gidx}"),
+                Op::GatherNd,
+                DType::F32,
+                &[y, idx],
+            );
+        }
+        let a = attn(&mut g, &format!("{p}.self"), y, y);
+        y = ln(&mut g, &format!("{p}.ln1"), y, a);
+        let c = attn(&mut g, &format!("{p}.cross"), y, memory);
+        y = ln(&mut g, &format!("{p}.ln2"), y, c);
+        let f = ffn(&mut g, &format!("{p}.ffn"), y);
+        y = ln(&mut g, &format!("{p}.ln3"), y, f);
+    }
+    let we = g.add("embed.T", Op::Const, DType::F32, &[]);
+    g.add("logits", Op::MatMul, DType::F32, &[y, we]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_counts_match_model() {
+        let g = transformer_graph(GraphConfig::default());
+        // 2 enc layers x 6 + 2 dec layers x 12 + logits = 37 MatMuls
+        // (mirrors model.matmul_site_names: 6/attn incl qk+pv, 2/ffn)
+        let matmuls = g.count_op(&Op::MatMul);
+        assert_eq!(matmuls, 2 * 8 + 2 * 14 + 1);
+        assert_eq!(g.count_op(&Op::GatherNd), 2 * 4);
+        assert!(g.check_types().is_ok());
+    }
+
+    #[test]
+    fn census_sums_to_node_count() {
+        let g = transformer_graph(GraphConfig::default());
+        let census = g.op_census();
+        let total: usize = census.values().sum();
+        assert_eq!(total, g.nodes.len());
+    }
+
+    #[test]
+    fn consumers_are_found() {
+        let mut g = Graph::default();
+        let a = g.add("a", Op::Input, DType::F32, &[]);
+        let b = g.add("b", Op::Relu, DType::F32, &[a]);
+        let c = g.add("c", Op::Relu, DType::F32, &[a]);
+        assert_eq!(g.consumers(a), vec![b, c]);
+        assert!(g.consumers(c).is_empty());
+    }
+
+    #[test]
+    fn type_checker_catches_bad_quantized_matmul() {
+        let mut g = Graph::default();
+        let a = g.add("a", Op::Input, DType::F32, &[]);
+        let b = g.add("b", Op::Const, DType::F32, &[]);
+        g.add("qmm", Op::QuantizedMatMul, DType::I32, &[a, b]);
+        assert!(g.check_types().is_err());
+    }
+}

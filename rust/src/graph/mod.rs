@@ -1,0 +1,19 @@
+//! Compute-graph IR + quantization passes (§5.5, Fig 1 vs Fig 5).
+//!
+//! The paper's deliverable is a *TensorFlow graph transform*: replace
+//! MatMul nodes with QuantizedMatMul, insert QuantizeV2 / Requantize /
+//! Dequantize plumbing, then shrink the overhead (fold thresholds to
+//! constants, delete Min/Max and Reshape helpers, drop Requantize
+//! before unquantized consumers, reposition quantize/dequantize around
+//! GatherNd).  This module models that transform on a small graph IR:
+//!
+//! * [`ir`]     — nodes/edges with dtypes, a builder for the
+//!   Transformer inference graph;
+//! * [`passes`] — the naive pass (Fig 1), the optimized pass (Fig 5),
+//!   and op-census statistics that `examples/quantize_graph.rs` prints.
+
+pub mod ir;
+pub mod passes;
+
+pub use ir::{DType, Graph, NodeId, Op};
+pub use passes::{naive_quantize, optimized_quantize, OpCensus, PassStats};

@@ -1,0 +1,342 @@
+//! Graph quantization passes: Fig 1 (naive) vs Fig 5 (optimized).
+//!
+//! Both passes rewrite each selected `MatMul` into the paper's
+//! quantized form; they differ exactly where §5.5 says they do:
+//!
+//! **Naive (Fig 1)** — per MatMul:
+//! ```text
+//!   Min(a), Max(a) -> QuantizeV2(a)  \
+//!   Min(b), Max(b) -> QuantizeV2(b)  -> QuantizedMatMul -> RequantizationRange
+//!                                        -> Requantize -> Dequantize -> (f32)
+//! ```
+//! runtime Min/Max scans (O(N) each), a Reshape per quantize (TF's
+//! min/max must be rank-0), and an i32->i8->f32 double conversion.
+//!
+//! **Optimized (Fig 5)** — per MatMul:
+//! ```text
+//!   Const(thr) -> QuantizeV2(a) -> QuantizedMatMul -> Dequantize -> (f32)
+//! ```
+//! KL thresholds are Consts (no Min/Max, no Reshape); weights are
+//! pre-quantized Consts (no QuantizeV2 on B); Requantize +
+//! RequantizationRange are eliminated by dequantizing i32 directly;
+//! sparse sites stay FP32; GatherNd ops are moved *inside* the
+//! quantized domain (operating on i8) which also drops the extra
+//! quantize/dequantize pairs around them.
+
+use std::collections::BTreeMap;
+
+use super::ir::{DType, Graph, NodeId, Op};
+
+/// Which MatMuls to quantize: site name -> quantize?
+pub type QuantPlan = BTreeMap<String, bool>;
+
+/// Statistics produced by a pass (the §5.5 "reduced total number of
+/// operations" evidence).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PassStats {
+    pub matmuls_total: usize,
+    pub matmuls_quantized: usize,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+    pub ops_added: BTreeMap<String, usize>,
+}
+
+/// Op census comparison between two graphs (Fig 7's op families).
+#[derive(Debug, Clone, Default)]
+pub struct OpCensus {
+    pub before: BTreeMap<String, usize>,
+    pub after: BTreeMap<String, usize>,
+}
+
+impl OpCensus {
+    pub fn of(before: &Graph, after: &Graph) -> Self {
+        OpCensus {
+            before: before.op_census(),
+            after: after.op_census(),
+        }
+    }
+}
+
+fn is_weight_const(g: &Graph, id: NodeId) -> bool {
+    matches!(g.node(id).op, Op::Const)
+}
+
+/// Rebuild `g` quantizing every planned MatMul the *naive* way (Fig 1).
+pub fn naive_quantize(g: &Graph, plan: &QuantPlan) -> (Graph, PassStats) {
+    rewrite(g, plan, false)
+}
+
+/// Rebuild `g` quantizing planned MatMuls the *optimized* way (Fig 5).
+pub fn optimized_quantize(g: &Graph, plan: &QuantPlan) -> (Graph, PassStats) {
+    rewrite(g, plan, true)
+}
+
+fn rewrite(g: &Graph, plan: &QuantPlan, optimized: bool) -> (Graph, PassStats) {
+    let mut out = Graph::default();
+    let mut stats = PassStats {
+        nodes_before: g.nodes.len(),
+        ..Default::default()
+    };
+    // old id -> new id of the f32-valued replacement output
+    let mut map: Vec<NodeId> = Vec::with_capacity(g.nodes.len());
+    // cache of quantized views (new graph): f32 node -> (qnode, is_weight)
+    let mut quantized_of: BTreeMap<NodeId, NodeId> = BTreeMap::new();
+
+    let added = |stats: &mut PassStats, label: &str| {
+        *stats.ops_added.entry(label.to_string()).or_insert(0) += 1;
+    };
+
+    for node in &g.nodes {
+        let new_inputs: Vec<NodeId> = node.inputs.iter().map(|&i| map[i]).collect();
+        let replaced = match &node.op {
+            Op::MatMul if *plan.get(&node.name).unwrap_or(&false) => {
+                stats.matmuls_total += 1;
+                stats.matmuls_quantized += 1;
+                let a_f32 = new_inputs[0];
+                let b_f32 = new_inputs[1];
+
+                // ---- A operand: always quantized at runtime (activation)
+                let a_q = if optimized {
+                    *quantized_of.entry(a_f32).or_insert_with(|| {
+                        // Const thresholds from KL calibration (§5.5)
+                        let thr = out.add(
+                            format!("{}.a_thr", node.name),
+                            Op::Const,
+                            DType::F32,
+                            &[],
+                        );
+                        added(&mut stats, "Const");
+                        added(&mut stats, "QuantizeV2");
+                        out.add(
+                            format!("{}.a_q", node.name),
+                            Op::Quantize,
+                            DType::I8,
+                            &[a_f32, thr, thr],
+                        )
+                    })
+                } else {
+                    // runtime Min/Max + Reshape + QuantizeV2
+                    let min = out.add(format!("{}.a_min", node.name), Op::Min, DType::F32, &[a_f32]);
+                    let max = out.add(format!("{}.a_max", node.name), Op::Max, DType::F32, &[a_f32]);
+                    let rmin = out.add(format!("{}.a_min_r", node.name), Op::Reshape, DType::F32, &[min]);
+                    let rmax = out.add(format!("{}.a_max_r", node.name), Op::Reshape, DType::F32, &[max]);
+                    for l in ["Min", "Max", "Reshape", "Reshape", "QuantizeV2"] {
+                        added(&mut stats, l);
+                    }
+                    out.add(
+                        format!("{}.a_q", node.name),
+                        Op::Quantize,
+                        DType::I8,
+                        &[a_f32, rmin, rmax],
+                    )
+                };
+
+                // ---- B operand
+                let b_q = if optimized && is_weight_const(g, node.inputs[1]) {
+                    // weights pre-quantized at AOT time: a u8 Const
+                    added(&mut stats, "Const");
+                    out.add(format!("{}.b_qconst", node.name), Op::Const, DType::U8, &[])
+                } else if optimized {
+                    *quantized_of.entry(b_f32).or_insert_with(|| {
+                        let thr = out.add(
+                            format!("{}.b_thr", node.name),
+                            Op::Const,
+                            DType::F32,
+                            &[],
+                        );
+                        added(&mut stats, "Const");
+                        added(&mut stats, "QuantizeV2");
+                        out.add(
+                            format!("{}.b_q", node.name),
+                            Op::Quantize,
+                            DType::U8,
+                            &[b_f32, thr, thr],
+                        )
+                    })
+                } else {
+                    let min = out.add(format!("{}.b_min", node.name), Op::Min, DType::F32, &[b_f32]);
+                    let max = out.add(format!("{}.b_max", node.name), Op::Max, DType::F32, &[b_f32]);
+                    let rmin = out.add(format!("{}.b_min_r", node.name), Op::Reshape, DType::F32, &[min]);
+                    let rmax = out.add(format!("{}.b_max_r", node.name), Op::Reshape, DType::F32, &[max]);
+                    for l in ["Min", "Max", "Reshape", "Reshape", "QuantizeV2"] {
+                        added(&mut stats, l);
+                    }
+                    out.add(
+                        format!("{}.b_q", node.name),
+                        Op::Quantize,
+                        DType::U8,
+                        &[b_f32, rmin, rmax],
+                    )
+                };
+
+                let qmm = out.add(
+                    node.name.clone(),
+                    Op::QuantizedMatMul,
+                    DType::I32,
+                    &[a_q, b_q],
+                );
+                added(&mut stats, "QuantizedMatMul");
+
+                if optimized {
+                    // §5.5: dequantize INT32 -> FP32 directly
+                    added(&mut stats, "Dequantize");
+                    out.add(
+                        format!("{}.deq", node.name),
+                        Op::Dequantize,
+                        DType::F32,
+                        &[qmm],
+                    )
+                } else {
+                    let rr = out.add(
+                        format!("{}.rrange", node.name),
+                        Op::RequantizationRange,
+                        DType::F32,
+                        &[qmm],
+                    );
+                    let rq = out.add(
+                        format!("{}.requant", node.name),
+                        Op::Requantize,
+                        DType::I8,
+                        &[qmm, rr],
+                    );
+                    for l in ["RequantizationRange", "Requantize", "Dequantize"] {
+                        added(&mut stats, l);
+                    }
+                    out.add(
+                        format!("{}.deq", node.name),
+                        Op::Dequantize,
+                        DType::F32,
+                        &[rq],
+                    )
+                }
+            }
+            Op::MatMul => {
+                stats.matmuls_total += 1;
+                out.add(node.name.clone(), Op::MatMul, DType::F32, &new_inputs)
+            }
+            Op::GatherNd if optimized => {
+                // §5.3: gather on the int8 representation. The quantize
+                // is repositioned before the gather (shared with the
+                // consumer MatMul's QuantizeV2 when possible), so the
+                // gather moves 4x fewer bytes.
+                let thr = out.add(format!("{}.thr", node.name), Op::Const, DType::F32, &[]);
+                let q = out.add(
+                    format!("{}.q", node.name),
+                    Op::Quantize,
+                    DType::I8,
+                    &[new_inputs[0], thr, thr],
+                );
+                let gat = out.add(node.name.clone(), Op::GatherNd, DType::I8, &[q, new_inputs[1]]);
+                for l in ["Const", "QuantizeV2", "Dequantize"] {
+                    added(&mut stats, l);
+                }
+                out.add(
+                    format!("{}.deq", node.name),
+                    Op::Dequantize,
+                    DType::F32,
+                    &[gat],
+                )
+            }
+            op => out.add(node.name.clone(), op.clone(), node.dtype, &new_inputs),
+        };
+        map.push(replaced);
+    }
+    stats.nodes_after = out.nodes.len();
+    (out, stats)
+}
+
+/// Plan quantizing every MatMul (the §4.1 naive experiment).
+pub fn plan_all(g: &Graph) -> QuantPlan {
+    g.nodes
+        .iter()
+        .filter(|n| n.op == Op::MatMul)
+        .map(|n| (n.name.clone(), true))
+        .collect()
+}
+
+/// Plan from a predicate over MatMul names (e.g. skip sparse sites).
+pub fn plan_where<F: Fn(&str) -> bool>(g: &Graph, f: F) -> QuantPlan {
+    g.nodes
+        .iter()
+        .filter(|n| n.op == Op::MatMul)
+        .map(|n| (n.name.clone(), f(&n.name)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ir::{transformer_graph, GraphConfig};
+
+    fn base() -> Graph {
+        transformer_graph(GraphConfig::default())
+    }
+
+    #[test]
+    fn naive_adds_minmax_machinery() {
+        let g = base();
+        let plan = plan_all(&g);
+        let (q, stats) = naive_quantize(&g, &plan);
+        assert!(q.check_types().is_ok(), "{:?}", q.check_types());
+        assert_eq!(stats.matmuls_quantized, stats.matmuls_total);
+        // every quantized matmul gains 2 Min, 2 Max, 4 Reshape...
+        assert_eq!(q.count_op(&Op::Min), 2 * stats.matmuls_quantized);
+        assert_eq!(q.count_op(&Op::RequantizationRange), stats.matmuls_quantized);
+        assert_eq!(q.count_op(&Op::MatMul), 0);
+    }
+
+    #[test]
+    fn optimized_eliminates_overhead_ops() {
+        let g = base();
+        let plan = plan_all(&g);
+        let (naive, _) = naive_quantize(&g, &plan);
+        let (opt, stats) = optimized_quantize(&g, &plan);
+        assert!(opt.check_types().is_ok(), "{:?}", opt.check_types());
+        // the §5.5 claims, as graph facts:
+        assert_eq!(opt.count_op(&Op::Min), 0);
+        assert_eq!(opt.count_op(&Op::Max), 0);
+        assert_eq!(opt.count_op(&Op::Requantize), 0);
+        assert_eq!(opt.count_op(&Op::RequantizationRange), 0);
+        assert_eq!(opt.count_op(&Op::Reshape), 0);
+        assert!(opt.nodes.len() < naive.nodes.len());
+        assert_eq!(stats.matmuls_quantized, stats.matmuls_total);
+    }
+
+    #[test]
+    fn optimized_quantizes_gathers_to_i8() {
+        let g = base();
+        let (opt, _) = optimized_quantize(&g, &plan_all(&g));
+        let gathers: Vec<_> = opt
+            .nodes
+            .iter()
+            .filter(|n| n.op == Op::GatherNd)
+            .collect();
+        assert!(!gathers.is_empty());
+        assert!(gathers.iter().all(|n| n.dtype == DType::I8));
+    }
+
+    #[test]
+    fn selective_plan_keeps_fp32_matmuls() {
+        let g = base();
+        // skip ffn.y (post-ReLU sparse) sites, like the calibrated policy
+        let plan = plan_where(&g, |name| !name.ends_with("ffn.y"));
+        let (opt, stats) = optimized_quantize(&g, &plan);
+        assert!(stats.matmuls_quantized < stats.matmuls_total);
+        assert_eq!(
+            opt.count_op(&Op::MatMul),
+            stats.matmuls_total - stats.matmuls_quantized
+        );
+        assert!(opt.check_types().is_ok());
+    }
+
+    #[test]
+    fn empty_plan_is_identity_for_matmuls() {
+        let g = base();
+        let plan = plan_where(&g, |_| false);
+        let (out, stats) = optimized_quantize(&g, &plan);
+        assert_eq!(stats.matmuls_quantized, 0);
+        assert_eq!(out.count_op(&Op::MatMul), g.count_op(&Op::MatMul));
+        // gathers still get quantized in the optimized pass
+        assert_eq!(out.count_op(&Op::QuantizedMatMul), 0);
+    }
+}

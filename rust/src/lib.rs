@@ -1,0 +1,73 @@
+//! # quantnmt
+//!
+//! Reproduction of *"Efficient 8-Bit Quantization of Transformer Neural
+//! Machine Language Translation Model"* (Bhandare et al., ICML 2019
+//! Joint Workshop on On-Device ML) as a three-layer Rust + JAX + Pallas
+//! system.
+//!
+//! The crate provides, bottom-up:
+//!
+//! * [`tensor`] — a small dense-tensor substrate (f32 / i8 / u8 / i32);
+//! * [`gemm`] — blocked FP32 GEMM and the VNNI-style `s8 x u8 -> i32`
+//!   quantized GEMM that is the paper's §5.2 hot-spot;
+//! * [`quant`] — quantization schemes, calibration histograms, the
+//!   KL-divergence threshold search and the sparse/narrow/Gaussian
+//!   tensor classifier of §4.2 / Fig 2;
+//! * [`graph`] — a compute-graph IR of the Transformer with the paper's
+//!   naive (Fig 1) and optimized (Fig 5) quantization passes plus the
+//!   §5.5 op-elimination statistics;
+//! * [`model`] — an instrumented, op-by-op Transformer inference engine
+//!   (FP32 and selectively-INT8) with KV caches, greedy + beam decode
+//!   and the per-op profiler behind Fig 7;
+//! * [`data`] — vocabulary, the synthetic parallel corpus standing in
+//!   for WMT/newstest2014, corpus BLEU, and §5.4 sentence sorting;
+//! * [`pipeline`] — batch construction, the batch queue and the §5.6
+//!   parallel-stream executor (Fig 6);
+//! * [`runtime`] — the PJRT fast path: loads the AOT-compiled HLO
+//!   executables produced by `python/compile/aot.py`;
+//! * [`coordinator`] — the translation service tying it together
+//!   (request router, scheduler, metrics, CLI).
+//!
+//! Build-time Python (`python/compile/`) trains the model, calibrates
+//! the quantizer and exports artifacts; it is **never** on the request
+//! path.
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for
+//! measured-vs-paper results.
+
+pub mod coordinator;
+pub mod data;
+pub mod gemm;
+pub mod graph;
+pub mod model;
+pub mod pipeline;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Special token ids shared with `python/compile/common.py`.
+pub mod specials {
+    pub const PAD_ID: u32 = 0;
+    pub const BOS_ID: u32 = 1;
+    pub const EOS_ID: u32 = 2;
+    pub const FIRST_CONTENT_ID: u32 = 3;
+}
+
+/// Default artifacts directory: `$QUANTNMT_ARTIFACTS`, else the nearest
+/// `artifacts/` directory walking up from the current directory.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("QUANTNMT_ARTIFACTS") {
+        return d.into();
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! quantnmt CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!
+//! ```text
+//! quantnmt info                         artifact + platform summary
+//! quantnmt translate  [--limit N]       translate test sentences, show text
+//! quantnmt serve      [--streams N]     corpus throughput run (one Fig-8 bar)
+//! quantnmt ladder                       the full Fig-8 configuration ladder
+//! quantnmt calibrate                    print the calibration table (§4.2)
+//! quantnmt graph-stats                  §5.5 op-census of naive vs optimized passes
+//! ```
+//!
+//! Common flags: `--artifacts DIR`, `--backend engine-fp32|engine-int8|pjrt-fp32|pjrt-int8`,
+//! `--mode naive|symmetric|independent|conjugate`, `--batch N`, `--streams N`,
+//! `--sort unsorted|words|tokens`, `--serial`, `--no-pin`, `--limit N`.
+
+use quantnmt::coordinator::{Backend, Service, ServiceConfig};
+use quantnmt::data::sorting::SortOrder;
+use quantnmt::quant::calibrate::CalibrationMode;
+use quantnmt::runtime::RtPrecision;
+use quantnmt::util::cli::Args;
+
+fn parse_backend(args: &Args) -> Backend {
+    let mode = CalibrationMode::from_str(args.get_or("mode", "symmetric"))
+        .unwrap_or(CalibrationMode::Symmetric);
+    match args.get_or("backend", "engine-int8") {
+        "engine-fp32" => Backend::EngineF32,
+        "engine-int8" => Backend::EngineInt8(mode),
+        "pjrt-fp32" => Backend::Runtime(RtPrecision::Fp32),
+        "pjrt-int8" => Backend::Runtime(RtPrecision::Int8),
+        other => {
+            eprintln!("unknown backend '{other}', using engine-int8");
+            Backend::EngineInt8(mode)
+        }
+    }
+}
+
+fn parse_config(args: &Args) -> ServiceConfig {
+    ServiceConfig {
+        backend: parse_backend(args),
+        sort: match args.get_or("sort", "tokens") {
+            "unsorted" => SortOrder::Unsorted,
+            "words" => SortOrder::Words,
+            _ => SortOrder::Tokens,
+        },
+        batch_size: args.get_usize("batch", 64),
+        streams: args.get_usize("streams", 2),
+        parallel: !args.flag("serial"),
+        pin_cores: !args.flag("no-pin"),
+        max_decode_len: args.get_usize("max-len", 56),
+    }
+}
+
+fn open_service(args: &Args) -> anyhow::Result<Service> {
+    match args.get("artifacts") {
+        Some(dir) => Service::open(dir.into()),
+        None => Service::open_default(),
+    }
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let svc = open_service(args)?;
+    println!("artifacts:  {}", svc.dir.display());
+    println!(
+        "model:      d_model={} heads={} enc={} dec={} vocab={}",
+        svc.model_cfg.d_model,
+        svc.model_cfg.n_heads,
+        svc.model_cfg.n_enc_layers,
+        svc.model_cfg.n_dec_layers,
+        svc.model_cfg.vocab_size
+    );
+    println!("params:     {}", svc.weights.param_count());
+    println!("matmul sites: {}", svc.model_cfg.matmul_site_names().len());
+    println!("class census: {:?}", svc.calibration.class_census());
+    match &svc.aot_index {
+        Some(idx) => {
+            println!("AOT buckets:");
+            for b in &idx.buckets {
+                println!(
+                    "  {:6} b{:<3} [{}x{}] {}",
+                    b.precision.as_str(),
+                    b.batch,
+                    b.src_len,
+                    b.tgt_len,
+                    b.file.file_name().unwrap().to_string_lossy()
+                );
+            }
+        }
+        None => println!("AOT buckets: (none — run make artifacts)"),
+    }
+    println!(
+        "platform:   {}",
+        quantnmt::runtime::client::platform_info().unwrap_or_else(|e| format!("({e})"))
+    );
+    Ok(())
+}
+
+fn cmd_translate(args: &Args) -> anyhow::Result<()> {
+    let svc = open_service(args)?;
+    let cfg = parse_config(args);
+    let lex = quantnmt::data::Lexicon::build(&Default::default());
+    let ds = svc.dataset()?;
+    let limit = args.get_usize("limit", 8);
+    let pairs: Vec<_> = ds.test.into_iter().take(limit).collect();
+    let (metrics, outputs) = svc.run(&pairs, &cfg)?;
+    for (pair, out) in pairs.iter().zip(&outputs) {
+        println!("src: {}", pair.text);
+        println!("out: {}", lex.detokenize(out));
+        let ok = out == &quantnmt::data::bleu::strip_special(&pair.ref_ids);
+        println!("ref match: {}\n", if ok { "yes" } else { "NO" });
+    }
+    println!("{}", metrics.row());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let svc = open_service(args)?;
+    let cfg = parse_config(args);
+    let ds = svc.dataset()?;
+    let limit = args.get_usize("limit", ds.test.len());
+    let (metrics, _) = svc.run(&ds.test[..limit.min(ds.test.len())], &cfg)?;
+    println!("{}", metrics.row());
+    Ok(())
+}
+
+fn cmd_ladder(args: &Args) -> anyhow::Result<()> {
+    let svc = open_service(args)?;
+    let ds = svc.dataset()?;
+    let limit = args.get_usize("limit", 512);
+    let pairs = &ds.test[..limit.min(ds.test.len())];
+    let mode = CalibrationMode::Symmetric;
+    // the Fig-8a configuration ladder, out-of-the-box -> fully optimized
+    let ladder: Vec<ServiceConfig> = vec![
+        ServiceConfig {
+            backend: Backend::EngineF32,
+            sort: SortOrder::Words,
+            parallel: false,
+            ..Default::default()
+        },
+        ServiceConfig {
+            backend: Backend::EngineF32,
+            sort: SortOrder::Tokens,
+            parallel: false,
+            ..Default::default()
+        },
+        ServiceConfig {
+            backend: Backend::EngineF32,
+            sort: SortOrder::Tokens,
+            streams: 2,
+            parallel: true,
+            ..Default::default()
+        },
+        ServiceConfig {
+            backend: Backend::EngineInt8(mode),
+            sort: SortOrder::Words,
+            parallel: false,
+            ..Default::default()
+        },
+        ServiceConfig {
+            backend: Backend::EngineInt8(mode),
+            sort: SortOrder::Tokens,
+            parallel: false,
+            ..Default::default()
+        },
+        ServiceConfig {
+            backend: Backend::EngineInt8(mode),
+            sort: SortOrder::Tokens,
+            streams: 2,
+            parallel: true,
+            ..Default::default()
+        },
+        ServiceConfig {
+            backend: Backend::EngineInt8(mode),
+            sort: SortOrder::Tokens,
+            streams: 4,
+            parallel: true,
+            ..Default::default()
+        },
+    ];
+    let mut base = None;
+    for cfg in &ladder {
+        let (m, _) = svc.run(pairs, cfg)?;
+        let rate = m.sentences_per_sec();
+        let base_rate = *base.get_or_insert(rate);
+        println!("{}   x{:.2}", m.row(), rate / base_rate);
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
+    let svc = open_service(args)?;
+    let table = &svc.calibration;
+    println!(
+        "{:28} {:9} {:>10} {:>10} {:>20}",
+        "site", "class", "|range|", "T_sym", "T_indep"
+    );
+    for (name, cal) in &table.sites {
+        println!(
+            "{:28} {:9} {:>10.3} {:>10.3} ({:>8.3},{:>8.3})",
+            name,
+            cal.class.as_str(),
+            cal.max.max(-cal.min),
+            cal.thr_symmetric,
+            cal.thr_independent.0,
+            cal.thr_independent.1,
+        );
+    }
+    println!("census: {:?}", table.class_census());
+    Ok(())
+}
+
+fn cmd_graph_stats(_args: &Args) -> anyhow::Result<()> {
+    use quantnmt::graph::ir::{transformer_graph, GraphConfig};
+    use quantnmt::graph::passes::plan_all;
+    use quantnmt::graph::{naive_quantize, optimized_quantize};
+    let g = transformer_graph(GraphConfig::default());
+    let plan = plan_all(&g);
+    let (naive, ns) = naive_quantize(&g, &plan);
+    let (opt, os) = optimized_quantize(&g, &plan);
+    println!("fp32 graph:       {} nodes", g.nodes.len());
+    println!("naive quantized:  {} nodes (Fig 1 form)", naive.nodes.len());
+    println!("optimized:        {} nodes (Fig 5 form)", opt.nodes.len());
+    println!("\nnaive census:     {:?}", naive.op_census());
+    println!("\noptimized census: {:?}", opt.op_census());
+    println!("\nops added naive: {:?}", ns.ops_added);
+    println!("ops added opt:   {:?}", os.ops_added);
+    Ok(())
+}
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("info");
+    let result = match cmd {
+        "info" => cmd_info(&args),
+        "translate" => cmd_translate(&args),
+        "serve" => cmd_serve(&args),
+        "ladder" => cmd_ladder(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "graph-stats" => cmd_graph_stats(&args),
+        other => {
+            eprintln!("unknown command '{other}'");
+            eprintln!("usage: quantnmt [info|translate|serve|ladder|calibrate|graph-stats]");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,143 @@
+//! Model hyperparameters (mirrors `python/compile/common.ModelConfig`).
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Transformer dimensions; defaults match the trained artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_enc_layers: usize,
+    pub n_dec_layers: usize,
+    pub max_src_len: usize,
+    pub max_tgt_len: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self {
+            vocab_size: 96,
+            d_model: 128,
+            n_heads: 4,
+            d_ff: 256,
+            n_enc_layers: 2,
+            n_dec_layers: 2,
+            max_src_len: 64,
+            max_tgt_len: 64,
+        }
+    }
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Load from `artifacts/config.json` (written by aot.py), so the
+    /// engine can never disagree with the trained weights.
+    pub fn load(config_json: &Path) -> anyhow::Result<Self> {
+        let j = Json::parse_file(config_json).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let m = j
+            .get("model")
+            .ok_or_else(|| anyhow::anyhow!("config.json: missing model"))?;
+        let g = |k: &str| -> anyhow::Result<usize> {
+            m.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("config.json: missing model.{k}"))
+        };
+        Ok(ModelConfig {
+            vocab_size: g("vocab_size")?,
+            d_model: g("d_model")?,
+            n_heads: g("n_heads")?,
+            d_ff: g("d_ff")?,
+            n_enc_layers: g("n_enc_layers")?,
+            n_dec_layers: g("n_dec_layers")?,
+            max_src_len: g("max_src_len")?,
+            max_tgt_len: g("max_tgt_len")?,
+        })
+    }
+
+    /// Every quantizable MatMul site in graph order (the paper's "97
+    /// MatMuls" census; mirrors python model.matmul_site_names).
+    pub fn matmul_site_names(&self) -> Vec<String> {
+        let mut sites = Vec::new();
+        for i in 0..self.n_enc_layers {
+            let p = format!("enc.{i}");
+            for s in ["q", "k", "v", "qk", "pv", "o"] {
+                sites.push(format!("{p}.attn.{s}"));
+            }
+            sites.push(format!("{p}.ffn.h"));
+            sites.push(format!("{p}.ffn.y"));
+        }
+        for i in 0..self.n_dec_layers {
+            let p = format!("dec.{i}");
+            for blk in ["self", "cross"] {
+                for s in ["q", "k", "v", "qk", "pv", "o"] {
+                    sites.push(format!("{p}.{blk}.{s}"));
+                }
+            }
+            sites.push(format!("{p}.ffn.h"));
+            sites.push(format!("{p}.ffn.y"));
+        }
+        sites.push("logits".to_string());
+        sites
+    }
+
+    /// Weight tensor name for a weight-MatMul site (None for qk/pv).
+    pub fn weight_for_site(&self, site: &str) -> Option<String> {
+        if site == "logits" {
+            return Some("embed.T".to_string());
+        }
+        let (head, leaf) = site.rsplit_once('.')?;
+        match leaf {
+            "q" | "k" | "v" | "o" => Some(format!("{head}.w{leaf}")),
+            "h" => Some(format!("{head}.w1")),
+            "y" => Some(format!("{head}.w2")),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn site_census_matches_architecture() {
+        let cfg = ModelConfig::default();
+        let sites = cfg.matmul_site_names();
+        // enc: 2 layers x 8; dec: 2 layers x 14; +logits
+        assert_eq!(sites.len(), 2 * 8 + 2 * 14 + 1);
+        assert!(sites.contains(&"enc.0.attn.qk".to_string()));
+        assert!(sites.contains(&"logits".to_string()));
+    }
+
+    #[test]
+    fn weight_mapping() {
+        let cfg = ModelConfig::default();
+        assert_eq!(
+            cfg.weight_for_site("enc.0.attn.q").as_deref(),
+            Some("enc.0.attn.wq")
+        );
+        assert_eq!(
+            cfg.weight_for_site("dec.1.ffn.h").as_deref(),
+            Some("dec.1.ffn.w1")
+        );
+        assert_eq!(
+            cfg.weight_for_site("dec.1.ffn.y").as_deref(),
+            Some("dec.1.ffn.w2")
+        );
+        assert_eq!(cfg.weight_for_site("enc.0.attn.qk"), None);
+        assert_eq!(cfg.weight_for_site("logits").as_deref(), Some("embed.T"));
+    }
+
+    #[test]
+    fn d_head_divides() {
+        let cfg = ModelConfig::default();
+        assert_eq!(cfg.d_head() * cfg.n_heads, cfg.d_model);
+    }
+}

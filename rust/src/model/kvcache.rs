@@ -1,0 +1,234 @@
+//! KV caches with FP32 and INT8 storage + beam reordering (§5.3).
+//!
+//! The decoder keeps, per layer, the self-attention keys/values of all
+//! generated positions ([slots, H, Tmax, dh]) and the cross-attention
+//! keys/values of the encoder memory ([slots, H, S, dh]).  Beam search
+//! reorders the *slot* axis every step according to the surviving
+//! beams — the paper's GatherNd.  Storing the cache quantized (u8,
+//! zero-point 128, per-site scale) cuts the copied bytes 4x, which is
+//! the §5.3 optimization (3.8x copy reduction, 5x op speedup in the
+//! paper's mix).
+
+use crate::gemm::UINT8_ZERO_POINT;
+use crate::tensor::gather::{gather_rows_f32, gather_rows_i8};
+
+/// Cache storage precision.
+#[derive(Debug, Clone)]
+pub enum CacheStore {
+    F32(Vec<f32>),
+    /// u8 with fixed zero point 128 and a per-tensor scale
+    U8 { data: Vec<u8>, scale: f32 },
+}
+
+/// One cache tensor: [slots, rows_per_slot * dh] with slot-level gather.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub slots: usize,
+    /// elements per slot (= H * T_max * dh)
+    pub slot_len: usize,
+    pub store: CacheStore,
+    scratch_f32: Vec<f32>,
+    scratch_u8: Vec<u8>,
+}
+
+impl KvCache {
+    pub fn new_f32(slots: usize, slot_len: usize) -> Self {
+        KvCache {
+            slots,
+            slot_len,
+            store: CacheStore::F32(vec![0.0; slots * slot_len]),
+            scratch_f32: Vec::new(),
+            scratch_u8: Vec::new(),
+        }
+    }
+
+    pub fn new_u8(slots: usize, slot_len: usize, scale: f32) -> Self {
+        KvCache {
+            slots,
+            slot_len,
+            store: CacheStore::U8 {
+                data: vec![UINT8_ZERO_POINT as u8; slots * slot_len],
+                scale,
+            },
+            scratch_f32: Vec::new(),
+            scratch_u8: Vec::new(),
+        }
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        matches!(self.store, CacheStore::U8 { .. })
+    }
+
+    /// Bytes per slot actually stored (the §5.3 copy-size metric).
+    pub fn slot_bytes(&self) -> usize {
+        match &self.store {
+            CacheStore::F32(_) => self.slot_len * 4,
+            CacheStore::U8 { .. } => self.slot_len,
+        }
+    }
+
+    /// Write `values` (f32) at element offset `off` within slot `slot`,
+    /// quantizing on the way in if the store is u8.
+    pub fn write(&mut self, slot: usize, off: usize, values: &[f32]) {
+        assert!(off + values.len() <= self.slot_len, "cache write oob");
+        let base = slot * self.slot_len + off;
+        match &mut self.store {
+            CacheStore::F32(data) => {
+                data[base..base + values.len()].copy_from_slice(values);
+            }
+            CacheStore::U8 { data, scale } => {
+                let inv = 1.0 / *scale;
+                for (d, &x) in data[base..base + values.len()].iter_mut().zip(values) {
+                    let q = (x * inv).round() as i32 + UINT8_ZERO_POINT;
+                    *d = q.clamp(0, 255) as u8;
+                }
+            }
+        }
+    }
+
+    /// Read `len` f32 elements from slot offset (dequantizing if u8).
+    pub fn read_into(&self, slot: usize, off: usize, len: usize, out: &mut [f32]) {
+        assert!(off + len <= self.slot_len);
+        assert_eq!(out.len(), len);
+        let base = slot * self.slot_len + off;
+        match &self.store {
+            CacheStore::F32(data) => out.copy_from_slice(&data[base..base + len]),
+            CacheStore::U8 { data, scale } => {
+                for (o, &q) in out.iter_mut().zip(&data[base..base + len]) {
+                    *o = (q as i32 - UINT8_ZERO_POINT) as f32 * scale;
+                }
+            }
+        }
+    }
+
+    /// Raw u8 view of a slot range (quantized attention reads this
+    /// directly — no dequantize on the hot path).
+    pub fn raw_u8(&self, slot: usize, off: usize, len: usize) -> (&[u8], f32) {
+        match &self.store {
+            CacheStore::U8 { data, scale } => {
+                let base = slot * self.slot_len + off;
+                (&data[base..base + len], *scale)
+            }
+            CacheStore::F32(_) => panic!("raw_u8 on f32 cache"),
+        }
+    }
+
+    /// Raw f32 view of a slot range.
+    pub fn raw_f32(&self, slot: usize, off: usize, len: usize) -> &[f32] {
+        match &self.store {
+            CacheStore::F32(data) => {
+                let base = slot * self.slot_len + off;
+                &data[base..base + len]
+            }
+            CacheStore::U8 { .. } => panic!("raw_f32 on u8 cache"),
+        }
+    }
+
+    /// Beam reorder: `self[slot s] = old self[beam_src[s]]` — the §5.3
+    /// GatherNd.  Returns bytes moved (for the bench's accounting).
+    pub fn beam_gather(&mut self, beam_src: &[usize]) -> usize {
+        assert_eq!(beam_src.len(), self.slots);
+        let slot_len = self.slot_len;
+        match &mut self.store {
+            CacheStore::F32(data) => {
+                self.scratch_f32.resize(data.len(), 0.0);
+                gather_rows_f32(data, slot_len, beam_src, &mut self.scratch_f32);
+                std::mem::swap(data, &mut self.scratch_f32);
+                2 * data.len() * 4
+            }
+            CacheStore::U8 { data, .. } => {
+                self.scratch_u8.resize(data.len(), 0);
+                // same row-gather over 1-byte elements
+                let src: &[i8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const i8, data.len())
+                };
+                let dst: &mut [i8] = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        self.scratch_u8.as_mut_ptr() as *mut i8,
+                        self.scratch_u8.len(),
+                    )
+                };
+                gather_rows_i8(src, slot_len, beam_src, dst);
+                std::mem::swap(data, &mut self.scratch_u8);
+                2 * data.len()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_write_read_roundtrip() {
+        let mut c = KvCache::new_f32(2, 8);
+        c.write(1, 2, &[1.0, 2.0, 3.0]);
+        let mut out = vec![0.0; 3];
+        c.read_into(1, 2, 3, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+        // untouched region stays zero
+        c.read_into(0, 0, 2, &mut out[..2].to_vec());
+    }
+
+    #[test]
+    fn u8_roundtrip_within_one_step() {
+        let scale = 0.05;
+        let mut c = KvCache::new_u8(1, 16, scale);
+        let vals = vec![0.0, 0.5, -0.5, 1.0, -1.0];
+        c.write(0, 0, &vals);
+        let mut out = vec![0.0; 5];
+        c.read_into(0, 0, 5, &mut out);
+        for (x, y) in vals.iter().zip(&out) {
+            assert!((x - y).abs() <= scale * 0.5 + 1e-6, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn u8_saturates_gracefully() {
+        let mut c = KvCache::new_u8(1, 4, 0.01);
+        c.write(0, 0, &[100.0, -100.0]);
+        let mut out = vec![0.0; 2];
+        c.read_into(0, 0, 2, &mut out);
+        assert!((out[0] - 1.27).abs() < 1e-6);
+        assert!((out[1] + 1.28).abs() < 1e-6);
+    }
+
+    #[test]
+    fn beam_gather_reorders_slots() {
+        let mut c = KvCache::new_f32(3, 2);
+        c.write(0, 0, &[0.0, 0.1]);
+        c.write(1, 0, &[1.0, 1.1]);
+        c.write(2, 0, &[2.0, 2.1]);
+        let bytes = c.beam_gather(&[2, 2, 0]);
+        assert_eq!(bytes, 2 * 6 * 4);
+        let mut out = vec![0.0; 2];
+        c.read_into(0, 0, 2, &mut out);
+        assert_eq!(out, vec![2.0, 2.1]);
+        c.read_into(1, 0, 2, &mut out);
+        assert_eq!(out, vec![2.0, 2.1]);
+        c.read_into(2, 0, 2, &mut out);
+        assert_eq!(out, vec![0.0, 0.1]);
+    }
+
+    #[test]
+    fn beam_gather_u8_moves_4x_fewer_bytes() {
+        let mut cf = KvCache::new_f32(4, 64);
+        let mut cq = KvCache::new_u8(4, 64, 0.1);
+        let bf = cf.beam_gather(&[0, 1, 2, 3]);
+        let bq = cq.beam_gather(&[0, 1, 2, 3]);
+        assert_eq!(bf, 4 * bq);
+    }
+
+    #[test]
+    fn u8_gather_preserves_quantized_values() {
+        let mut c = KvCache::new_u8(2, 4, 0.1);
+        c.write(0, 0, &[0.3, -0.3, 0.7, -0.7]);
+        let mut before = vec![0.0; 4];
+        c.read_into(0, 0, 4, &mut before);
+        c.beam_gather(&[0, 0]);
+        let mut after = vec![0.0; 4];
+        c.read_into(1, 0, 4, &mut after);
+        assert_eq!(before, after);
+    }
+}

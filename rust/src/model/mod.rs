@@ -1,0 +1,37 @@
+//! The instrumented Transformer inference engine.
+//!
+//! A pure-Rust, op-by-op implementation of the exact model trained by
+//! `python/compile/train.py` (same weights via `weights.bin`, same
+//! architecture, same quantization semantics as `kernels/ref.py`).
+//! Where the PJRT runtime (`crate::runtime`) executes the whole fused
+//! HLO graph, this engine executes one op at a time, which is what
+//! enables:
+//!
+//! * per-op timing (Fig 7's operation-time distribution);
+//! * per-site precision control (Table 1's calibration-mode sweep);
+//! * the §5.3 KV-cache gather experiment (FP32 vs INT8 cache);
+//! * beam search (the paper's decoder uses beam search; the AOT'd HLO
+//!   fast path uses greedy decode).
+//!
+//! Modules:
+//! * [`config`]   — model hyperparameters (mirrors python ModelConfig);
+//! * [`weights`]  — `weights.bin` + `manifest.json` loader;
+//! * [`profiler`] — per-op wall-time accounting;
+//! * [`kvcache`]  — FP32/INT8 KV caches with beam reordering;
+//! * [`engine`]   — encoder + greedy decoder;
+//! * [`beam`]     — beam-search decoder;
+//! * [`shapes`]   — the model's GEMM shapes (Fig 3b's benchmark set).
+
+pub mod beam;
+pub mod config;
+pub mod engine;
+pub mod kvcache;
+pub mod profiler;
+pub mod shapes;
+pub mod testutil;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use engine::{Engine, Precision};
+pub use profiler::Profiler;
+pub use weights::Weights;

@@ -1,0 +1,217 @@
+//! Per-op wall-time accounting (the instrument behind Fig 7).
+//!
+//! The engine brackets every operation with `profiler.scope(op)`; the
+//! accumulated per-op totals, normalized, reproduce the paper's
+//! "distribution of percentage operation times" comparison between the
+//! FP32 and INT8 graphs.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Operation categories (the Fig 7 legend).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OpKind {
+    MatMul,
+    QuantizedMatMul,
+    Quantize,
+    Dequantize,
+    Softmax,
+    LayerNorm,
+    GatherNd,
+    Embed,
+    Other,
+}
+
+impl OpKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            OpKind::MatMul => "MatMul",
+            OpKind::QuantizedMatMul => "QuantizedMatMul",
+            OpKind::Quantize => "QuantizeV2",
+            OpKind::Dequantize => "Dequantize",
+            OpKind::Softmax => "Softmax",
+            OpKind::LayerNorm => "LayerNorm",
+            OpKind::GatherNd => "GatherNd",
+            OpKind::Embed => "Embed",
+            OpKind::Other => "Other",
+        }
+    }
+
+    pub fn all() -> [OpKind; 9] {
+        [
+            OpKind::MatMul,
+            OpKind::QuantizedMatMul,
+            OpKind::Quantize,
+            OpKind::Dequantize,
+            OpKind::Softmax,
+            OpKind::LayerNorm,
+            OpKind::GatherNd,
+            OpKind::Embed,
+            OpKind::Other,
+        ]
+    }
+}
+
+/// Accumulating per-op profiler. Disabled by default (zero overhead on
+/// the serving path); the Fig 7 bench enables it.
+#[derive(Debug, Default, Clone)]
+pub struct Profiler {
+    pub enabled: bool,
+    totals: BTreeMap<OpKind, Duration>,
+    counts: BTreeMap<OpKind, u64>,
+}
+
+/// RAII timing scope.
+pub struct Scope<'a> {
+    profiler: &'a mut Profiler,
+    kind: OpKind,
+    start: Option<Instant>,
+}
+
+impl Profiler {
+    pub fn enabled() -> Self {
+        Profiler {
+            enabled: true,
+            ..Default::default()
+        }
+    }
+
+    /// Time a closure under an op kind.
+    #[inline]
+    pub fn time<T>(&mut self, kind: OpKind, f: impl FnOnce() -> T) -> T {
+        if !self.enabled {
+            return f();
+        }
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed();
+        *self.totals.entry(kind).or_default() += dt;
+        *self.counts.entry(kind).or_default() += 1;
+        out
+    }
+
+    /// Explicit begin/end (for non-closure-friendly call sites).
+    pub fn scope(&mut self, kind: OpKind) -> Scope<'_> {
+        let start = if self.enabled { Some(Instant::now()) } else { None };
+        Scope {
+            profiler: self,
+            kind,
+            start,
+        }
+    }
+
+    pub fn add(&mut self, kind: OpKind, dt: Duration) {
+        if self.enabled {
+            *self.totals.entry(kind).or_default() += dt;
+            *self.counts.entry(kind).or_default() += 1;
+        }
+    }
+
+    pub fn total(&self, kind: OpKind) -> Duration {
+        self.totals.get(&kind).copied().unwrap_or_default()
+    }
+
+    pub fn count(&self, kind: OpKind) -> u64 {
+        self.counts.get(&kind).copied().unwrap_or_default()
+    }
+
+    pub fn grand_total(&self) -> Duration {
+        self.totals.values().sum()
+    }
+
+    /// Percentage share per op kind (Fig 7 rows); sums to ~100.
+    pub fn percentages(&self) -> Vec<(OpKind, f64)> {
+        let total = self.grand_total().as_secs_f64();
+        if total <= 0.0 {
+            return Vec::new();
+        }
+        OpKind::all()
+            .iter()
+            .filter_map(|&k| {
+                let t = self.total(k).as_secs_f64();
+                (t > 0.0).then_some((k, 100.0 * t / total))
+            })
+            .collect()
+    }
+
+    pub fn reset(&mut self) {
+        self.totals.clear();
+        self.counts.clear();
+    }
+
+    /// Merge another profiler's totals into this one.
+    pub fn merge(&mut self, other: &Profiler) {
+        for (&k, &d) in &other.totals {
+            *self.totals.entry(k).or_default() += d;
+        }
+        for (&k, &c) in &other.counts {
+            *self.counts.entry(k).or_default() += c;
+        }
+    }
+}
+
+impl Drop for Scope<'_> {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            let dt = start.elapsed();
+            *self.profiler.totals.entry(self.kind).or_default() += dt;
+            *self.profiler.counts.entry(self.kind).or_default() += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_profiler_collects_nothing() {
+        let mut p = Profiler::default();
+        p.time(OpKind::MatMul, || std::thread::sleep(Duration::from_millis(1)));
+        assert_eq!(p.grand_total(), Duration::ZERO);
+        assert!(p.percentages().is_empty());
+    }
+
+    #[test]
+    fn enabled_profiler_accumulates() {
+        let mut p = Profiler::enabled();
+        p.time(OpKind::MatMul, || std::thread::sleep(Duration::from_millis(2)));
+        p.time(OpKind::Softmax, || std::thread::sleep(Duration::from_millis(1)));
+        p.time(OpKind::MatMul, || {});
+        assert!(p.total(OpKind::MatMul) >= Duration::from_millis(2));
+        assert_eq!(p.count(OpKind::MatMul), 2);
+        let pct = p.percentages();
+        let sum: f64 = pct.iter().map(|(_, v)| v).sum();
+        assert!((sum - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scope_raii_records() {
+        let mut p = Profiler::enabled();
+        {
+            let _s = p.scope(OpKind::GatherNd);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(p.total(OpKind::GatherNd) >= Duration::from_millis(1));
+        assert_eq!(p.count(OpKind::GatherNd), 1);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Profiler::enabled();
+        let mut b = Profiler::enabled();
+        a.add(OpKind::MatMul, Duration::from_millis(3));
+        b.add(OpKind::MatMul, Duration::from_millis(4));
+        a.merge(&b);
+        assert_eq!(a.total(OpKind::MatMul), Duration::from_millis(7));
+        assert_eq!(a.count(OpKind::MatMul), 2);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut p = Profiler::enabled();
+        p.add(OpKind::Embed, Duration::from_millis(1));
+        p.reset();
+        assert_eq!(p.grand_total(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,90 @@
+//! The model's actual GEMM shapes (Fig 3b's benchmark set).
+//!
+//! The paper profiles the Transformer workload, captures the matrix
+//! dimensions that actually occur, and benchmarks INT8 vs FP32 GEMM on
+//! exactly those shapes (Fig 3b), reporting a 2.4x average speedup.
+//! This module enumerates the shapes our model runs, parameterized by
+//! batch and sequence length, so `rust/benches/gemm.rs` can do the same.
+
+use super::config::ModelConfig;
+
+/// One GEMM invocation shape (row-major `[m,k] x [k,n]`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// human label for the bench report
+    pub site: &'static str,
+}
+
+impl GemmShape {
+    pub fn flops(&self) -> usize {
+        2 * self.m * self.k * self.n
+    }
+}
+
+/// The distinct GEMM shapes of one encoder pass + one decode step
+/// (batch `b`, source length `s`, decode position `t`).
+pub fn model_shapes(cfg: &ModelConfig, b: usize, s: usize, t: usize) -> Vec<GemmShape> {
+    let d = cfg.d_model;
+    let f = cfg.d_ff;
+    let v = cfg.vocab_size;
+    let dh = cfg.d_head();
+    vec![
+        // encoder projections: [B*S, D] x [D, D]
+        GemmShape { m: b * s, k: d, n: d, site: "enc.proj" },
+        // encoder attention per head: [S, dh] x [dh, S] and [S, S] x [S, dh]
+        GemmShape { m: s, k: dh, n: s, site: "enc.qk" },
+        GemmShape { m: s, k: s, n: dh, site: "enc.pv" },
+        // encoder FFN
+        GemmShape { m: b * s, k: d, n: f, site: "enc.ffn1" },
+        GemmShape { m: b * s, k: f, n: d, site: "enc.ffn2" },
+        // decode-step projections: [B, D] x [D, D]
+        GemmShape { m: b, k: d, n: d, site: "dec.proj" },
+        // decode-step attention: [1, dh] x [dh, t] per (b, head)
+        GemmShape { m: 1, k: dh, n: t, site: "dec.qk" },
+        GemmShape { m: 1, k: t, n: dh, site: "dec.pv" },
+        // decode-step FFN + logits
+        GemmShape { m: b, k: d, n: f, site: "dec.ffn1" },
+        GemmShape { m: b, k: f, n: d, site: "dec.ffn2" },
+        GemmShape { m: b, k: d, n: v, site: "logits" },
+    ]
+}
+
+/// Square shapes for the Fig 3a sweep.
+pub fn square_shapes(sizes: &[usize]) -> Vec<GemmShape> {
+    sizes
+        .iter()
+        .map(|&n| GemmShape {
+            m: n,
+            k: n,
+            n,
+            site: "square",
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_cover_the_model() {
+        let cfg = ModelConfig::default();
+        let shapes = model_shapes(&cfg, 64, 32, 16);
+        assert!(shapes.iter().any(|s| s.site == "logits" && s.n == 96));
+        assert!(shapes.iter().any(|s| s.site == "enc.proj" && s.m == 64 * 32));
+        for s in &shapes {
+            assert!(s.m > 0 && s.k > 0 && s.n > 0);
+            assert!(s.flops() > 0);
+        }
+    }
+
+    #[test]
+    fn square_sweep() {
+        let s = square_shapes(&[64, 128]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[1].flops(), 2 * 128 * 128 * 128);
+    }
+}

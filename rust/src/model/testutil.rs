@@ -1,0 +1,93 @@
+//! Synthetic model fixtures for tests and benches.
+//!
+//! Real runs load trained weights from `artifacts/`; unit tests and
+//! micro-benches that only need *a* structurally-valid model (not a
+//! trained one) build random weights here instead, so they run without
+//! artifacts present.
+
+use std::collections::BTreeMap;
+
+use super::config::ModelConfig;
+use super::weights::Weights;
+use crate::quant::calibrate::SiteQuant;
+use crate::quant::QuantParams;
+use crate::tensor::TensorF;
+use crate::util::rng::SplitMix64;
+
+/// A tiny config that keeps unit tests fast.
+pub fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        vocab_size: 16,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 32,
+        n_enc_layers: 1,
+        n_dec_layers: 1,
+        max_src_len: 8,
+        max_tgt_len: 8,
+    }
+}
+
+/// Random (untrained) weights matching a config.
+pub fn random_weights(cfg: &ModelConfig, seed: u64) -> Weights {
+    let mut rng = SplitMix64::new(seed);
+    let mut w = Weights::default();
+    let d = cfg.d_model;
+    {
+        let mut data = vec![0.0f32; cfg.vocab_size * d];
+        rng.fill_uniform_f32(&mut data, 0.1);
+        w.insert("embed", TensorF::from_vec(&[cfg.vocab_size, d], data));
+    }
+    let attn = |w: &mut Weights, p: &str, rng: &mut SplitMix64| {
+        for s in ["wq", "wk", "wv", "wo"] {
+            let mut data = vec![0.0f32; d * d];
+            rng.fill_uniform_f32(&mut data, 1.0 / (d as f32).sqrt());
+            w.insert(&format!("{p}.{s}"), TensorF::from_vec(&[d, d], data));
+        }
+    };
+    let ln = |w: &mut Weights, p: &str| {
+        w.insert(&format!("{p}.gamma"), TensorF::full(&[d], 1.0));
+        w.insert(&format!("{p}.beta"), TensorF::zeros(&[d]));
+    };
+    let ffn = |w: &mut Weights, p: &str, rng: &mut SplitMix64| {
+        let mut w1 = vec![0.0f32; d * cfg.d_ff];
+        rng.fill_uniform_f32(&mut w1, 1.0 / (d as f32).sqrt());
+        w.insert(&format!("{p}.w1"), TensorF::from_vec(&[d, cfg.d_ff], w1));
+        w.insert(&format!("{p}.b1"), TensorF::zeros(&[cfg.d_ff]));
+        let mut w2 = vec![0.0f32; cfg.d_ff * d];
+        rng.fill_uniform_f32(&mut w2, 1.0 / (cfg.d_ff as f32).sqrt());
+        w.insert(&format!("{p}.w2"), TensorF::from_vec(&[cfg.d_ff, d], w2));
+        w.insert(&format!("{p}.b2"), TensorF::zeros(&[d]));
+    };
+    for i in 0..cfg.n_enc_layers {
+        attn(&mut w, &format!("enc.{i}.attn"), &mut rng);
+        ln(&mut w, &format!("enc.{i}.ln1"));
+        ffn(&mut w, &format!("enc.{i}.ffn"), &mut rng);
+        ln(&mut w, &format!("enc.{i}.ln2"));
+    }
+    for i in 0..cfg.n_dec_layers {
+        attn(&mut w, &format!("dec.{i}.self"), &mut rng);
+        ln(&mut w, &format!("dec.{i}.ln1"));
+        attn(&mut w, &format!("dec.{i}.cross"), &mut rng);
+        ln(&mut w, &format!("dec.{i}.ln2"));
+        ffn(&mut w, &format!("dec.{i}.ffn"), &mut rng);
+        ln(&mut w, &format!("dec.{i}.ln3"));
+    }
+    w
+}
+
+/// A quantize-everything plan with loose symmetric thresholds (no
+/// calibration data needed; numerically benign).
+pub fn loose_plan(cfg: &ModelConfig) -> BTreeMap<String, Option<SiteQuant>> {
+    let mut plan = BTreeMap::new();
+    for site in cfg.matmul_site_names() {
+        plan.insert(
+            site,
+            Some(SiteQuant {
+                a: QuantParams::symmetric(8.0),
+                b_scale: 1.0 / 127.0,
+            }),
+        );
+    }
+    plan
+}

@@ -1,0 +1,156 @@
+//! Loader for `weights.bin` + `manifest.json` (python export.write_weights).
+//!
+//! weights.bin is raw little-endian f32, tensors concatenated in
+//! manifest order; the manifest gives name/shape/offset (in elements).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::tensor::TensorF;
+use crate::util::json::Json;
+
+/// All model parameters by name.
+#[derive(Debug, Clone, Default)]
+pub struct Weights {
+    tensors: BTreeMap<String, TensorF>,
+}
+
+impl Weights {
+    /// Load from an artifacts directory containing manifest.json + weights.bin.
+    pub fn load(dir: &Path) -> anyhow::Result<Weights> {
+        let manifest = Json::parse_file(&dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let raw = std::fs::read(dir.join("weights.bin"))?;
+        if raw.len() % 4 != 0 {
+            anyhow::bail!("weights.bin length {} not a multiple of 4", raw.len());
+        }
+        let flat: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let total = manifest
+            .get("total")
+            .and_then(Json::as_usize)
+            .unwrap_or(flat.len());
+        if total != flat.len() {
+            anyhow::bail!("manifest total {total} != weights.bin elements {}", flat.len());
+        }
+        let mut tensors = BTreeMap::new();
+        let list = manifest
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest.json: missing tensors"))?;
+        for t in list {
+            let name = t
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("tensor missing name"))?;
+            let shape: Vec<usize> = t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("tensor {name} missing shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let offset = t
+                .get("offset")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("tensor {name} missing offset"))?;
+            let n: usize = shape.iter().product();
+            if offset + n > flat.len() {
+                anyhow::bail!("tensor {name} out of bounds");
+            }
+            tensors.insert(
+                name.to_string(),
+                TensorF::from_vec(&shape, flat[offset..offset + n].to_vec()),
+            );
+        }
+        Ok(Weights { tensors })
+    }
+
+    /// Insert/replace a tensor (tests build synthetic weight sets).
+    pub fn insert(&mut self, name: &str, t: TensorF) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&TensorF> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing weight tensor '{name}'"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.tensors.values().map(|t| t.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        // two tensors: a [2,2] at 0 and b [3] at 4
+        let data: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.join("weights.bin"), bytes).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"dtype":"f32","total":7,"tensors":[
+                {"name":"a","shape":[2,2],"offset":0},
+                {"name":"b","shape":[3],"offset":4}]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join("quantnmt_test_weights");
+        write_fixture(&dir);
+        let w = Weights::load(&dir).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.param_count(), 7);
+        assert_eq!(w.get("a").unwrap().shape(), &[2, 2]);
+        assert_eq!(w.get("a").unwrap().data(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(w.get("b").unwrap().data(), &[5.0, 6.0, 7.0]);
+        assert!(w.get("missing").is_err());
+    }
+
+    #[test]
+    fn corrupt_manifest_total_errors() {
+        let dir = std::env::temp_dir().join("quantnmt_test_weights_bad");
+        write_fixture(&dir);
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"dtype":"f32","total":99,"tensors":[]}"#,
+        )
+        .unwrap();
+        assert!(Weights::load(&dir).is_err());
+    }
+
+    #[test]
+    fn out_of_bounds_tensor_errors() {
+        let dir = std::env::temp_dir().join("quantnmt_test_weights_oob");
+        write_fixture(&dir);
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"dtype":"f32","total":7,"tensors":[
+                {"name":"a","shape":[100],"offset":0}]}"#,
+        )
+        .unwrap();
+        assert!(Weights::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Padded-batch construction.
+//!
+//! Sentences are packed in the given order into fixed-size batches;
+//! each batch is padded to its own longest sentence (the per-batch
+//! padding the §5.4 sorting minimizes).
+
+use crate::data::dataset::Pair;
+use crate::specials::PAD_ID;
+
+/// One padded inference batch.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// batch id (queue order)
+    pub id: usize,
+    /// original corpus indices of the rows
+    pub indices: Vec<usize>,
+    /// padded source rows (all the same length)
+    pub src: Vec<Vec<u32>>,
+    /// the padded length
+    pub max_len: usize,
+    /// total non-pad tokens (utilization accounting)
+    pub tokens: usize,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.src.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.src.is_empty()
+    }
+
+    /// Fraction of the padded matrix that is real tokens.
+    pub fn fill_ratio(&self) -> f64 {
+        if self.src.is_empty() || self.max_len == 0 {
+            return 0.0;
+        }
+        self.tokens as f64 / (self.len() * self.max_len) as f64
+    }
+}
+
+/// Pack `order` (corpus indices) into padded batches of `batch_size`.
+pub fn make_batches(pairs: &[Pair], order: &[usize], batch_size: usize) -> Vec<Batch> {
+    assert!(batch_size > 0);
+    let mut out = Vec::new();
+    for (id, chunk) in order.chunks(batch_size).enumerate() {
+        let max_len = chunk.iter().map(|&i| pairs[i].src.len()).max().unwrap_or(0);
+        let mut src = Vec::with_capacity(chunk.len());
+        let mut tokens = 0;
+        for &i in chunk {
+            let mut row = pairs[i].src.clone();
+            tokens += row.len();
+            row.resize(max_len, PAD_ID);
+            src.push(row);
+        }
+        out.push(Batch {
+            id,
+            indices: chunk.to_vec(),
+            src,
+            max_len,
+            tokens,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sorting::{sort_indices, SortOrder};
+    use crate::data::synthetic::Generator;
+    use crate::data::vocab::DataConfig;
+
+    fn corpus(n: usize) -> Vec<Pair> {
+        Generator::new(DataConfig::default()).split(5, n)
+    }
+
+    #[test]
+    fn batches_cover_every_sentence_once() {
+        let pairs = corpus(130);
+        let order: Vec<usize> = (0..pairs.len()).collect();
+        let batches = make_batches(&pairs, &order, 64);
+        assert_eq!(batches.len(), 3);
+        let total: usize = batches.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 130);
+        let mut seen = vec![false; pairs.len()];
+        for b in &batches {
+            for &i in &b.indices {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn rows_padded_to_batch_max() {
+        let pairs = corpus(64);
+        let order: Vec<usize> = (0..pairs.len()).collect();
+        let batches = make_batches(&pairs, &order, 16);
+        for b in &batches {
+            assert!(b.src.iter().all(|r| r.len() == b.max_len));
+            let expect_max = b.indices.iter().map(|&i| pairs[i].src.len()).max().unwrap();
+            assert_eq!(b.max_len, expect_max);
+            assert!(b.fill_ratio() > 0.0 && b.fill_ratio() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn sorted_batches_have_higher_fill() {
+        let pairs = corpus(512);
+        let unsorted = make_batches(&pairs, &sort_indices(&pairs, SortOrder::Unsorted), 64);
+        let sorted = make_batches(&pairs, &sort_indices(&pairs, SortOrder::Tokens), 64);
+        let fill = |bs: &[Batch]| {
+            bs.iter().map(|b| b.fill_ratio()).sum::<f64>() / bs.len() as f64
+        };
+        assert!(fill(&sorted) > fill(&unsorted));
+    }
+
+    #[test]
+    fn remainder_batch_is_small() {
+        let pairs = corpus(65);
+        let order: Vec<usize> = (0..65).collect();
+        let batches = make_batches(&pairs, &order, 64);
+        assert_eq!(batches[1].len(), 1);
+        assert_eq!(batches[1].id, 1);
+    }
+}

@@ -1,0 +1,22 @@
+//! Batching pipeline: padding, batch queue, serial & parallel execution.
+//!
+//! Implements the paper's input-pipeline and §5.6 parallel-batching
+//! design: a parent orders the input set (§5.4 token sorting), packs it
+//! into padded batches, and pushes them onto a shared queue; worker
+//! *streams* — threads pinned to disjoint CPU core subsets, each owning
+//! a private engine/executable (like the paper's affinitized child
+//! processes with private TF sessions) — dequeue asynchronously and
+//! run inference.  Long and short batches therefore overlap, recovering
+//! the CPU utilization that serial execution leaves idle (Fig 6).
+//!
+//! * [`batch`]    — padded-batch construction from an ordered corpus;
+//! * [`queue`]    — the bounded MPMC batch queue (condvar-based);
+//! * [`parallel`] — serial vs parallel stream executors + affinity.
+
+pub mod batch;
+pub mod parallel;
+pub mod queue;
+
+pub use batch::{make_batches, Batch};
+pub use parallel::{run_parallel, run_serial, StreamReport, ThroughputReport};
+pub use queue::BatchQueue;

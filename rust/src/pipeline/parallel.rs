@@ -1,0 +1,323 @@
+//! Serial vs parallel stream execution (§5.6, Fig 6).
+//!
+//! `run_serial` executes batches one after another on a single stream —
+//! the baseline whose CPU utilization collapses on short-sentence
+//! batches.  `run_parallel` spawns N worker streams over a shared
+//! [`BatchQueue`]; each stream is (best-effort) affinitized to a
+//! disjoint core subset via `sched_setaffinity`, mirroring the paper's
+//! core/NUMA-pinned child processes.  Batches of long and short
+//! sentences overlap across streams, lifting utilization and
+//! throughput (the paper measures +43%).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::batch::Batch;
+use super::queue::BatchQueue;
+
+/// Work function: translate one batch, return per-row translations.
+pub type TranslateFn<'a> = dyn FnMut(&Batch) -> Vec<Vec<u32>> + 'a;
+
+/// Factory building a per-stream translate function (each stream owns
+/// its engine/executable, like the paper's per-process sessions).
+pub trait StreamFactory: Sync {
+    type Fn: FnMut(&Batch) -> Vec<Vec<u32>> + Send;
+    fn make(&self, stream_id: usize) -> Self::Fn;
+}
+
+impl<F, G> StreamFactory for F
+where
+    F: Fn(usize) -> G + Sync,
+    G: FnMut(&Batch) -> Vec<Vec<u32>> + Send,
+{
+    type Fn = G;
+    fn make(&self, stream_id: usize) -> G {
+        self(stream_id)
+    }
+}
+
+/// Per-stream execution statistics.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    pub stream_id: usize,
+    pub batches: usize,
+    pub sentences: usize,
+    pub tokens: usize,
+    pub busy_secs: f64,
+}
+
+/// Whole-run throughput report (the Fig 6 / Fig 8 measurement unit).
+#[derive(Debug, Clone)]
+pub struct ThroughputReport {
+    pub mode: String,
+    pub streams: Vec<StreamReport>,
+    pub wall_secs: f64,
+    pub sentences: usize,
+    pub tokens: usize,
+    /// corpus-index -> translation
+    pub outputs: Vec<(usize, Vec<u32>)>,
+}
+
+impl ThroughputReport {
+    pub fn sentences_per_sec(&self) -> f64 {
+        self.sentences as f64 / self.wall_secs
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.wall_secs
+    }
+
+    /// Mean fraction of wall time the streams were busy (utilization —
+    /// the quantity Fig 6's parallel batching improves).
+    pub fn utilization(&self) -> f64 {
+        if self.streams.is_empty() || self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        let busy: f64 = self.streams.iter().map(|s| s.busy_secs).sum();
+        busy / (self.wall_secs * self.streams.len() as f64)
+    }
+}
+
+/// Pin the current thread to a core subset (best effort; ignored when
+/// the OS denies it, e.g. in restricted containers).
+pub fn set_affinity(cores: &[usize]) -> bool {
+    if cores.is_empty() {
+        return false;
+    }
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_ZERO(&mut set);
+        for &c in cores {
+            libc::CPU_SET(c, &mut set);
+        }
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) == 0
+    }
+}
+
+/// Number of online CPUs.
+pub fn num_cpus() -> usize {
+    // SAFETY: sysconf is async-signal-safe and always valid to call.
+    let n = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
+    if n <= 0 {
+        1
+    } else {
+        n as usize
+    }
+}
+
+/// Partition `total_cores` into `streams` disjoint contiguous subsets.
+pub fn core_partition(total_cores: usize, streams: usize) -> Vec<Vec<usize>> {
+    let streams = streams.max(1);
+    let per = (total_cores / streams).max(1);
+    (0..streams)
+        .map(|s| {
+            let lo = (s * per).min(total_cores.saturating_sub(1));
+            let hi = (((s + 1) * per).min(total_cores)).max(lo + 1);
+            (lo..hi).collect()
+        })
+        .collect()
+}
+
+/// Serial baseline: one stream, batches in order.
+pub fn run_serial<F>(batches: &[Batch], mut translate: F) -> ThroughputReport
+where
+    F: FnMut(&Batch) -> Vec<Vec<u32>>,
+{
+    let t0 = Instant::now();
+    let mut outputs = Vec::new();
+    let mut busy = 0.0;
+    let mut sentences = 0;
+    let mut tokens = 0;
+    for b in batches {
+        let bt = Instant::now();
+        let outs = translate(b);
+        busy += bt.elapsed().as_secs_f64();
+        sentences += b.len();
+        tokens += b.tokens;
+        for (idx, o) in b.indices.iter().zip(outs) {
+            outputs.push((*idx, o));
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    ThroughputReport {
+        mode: "serial".into(),
+        streams: vec![StreamReport {
+            stream_id: 0,
+            batches: batches.len(),
+            sentences,
+            tokens,
+            busy_secs: busy,
+        }],
+        wall_secs: wall,
+        sentences,
+        tokens,
+        outputs,
+    }
+}
+
+/// Parallel batching: `n_streams` workers over a shared queue (§5.6).
+pub fn run_parallel<F>(
+    batches: Vec<Batch>,
+    n_streams: usize,
+    pin_cores: bool,
+    factory: F,
+) -> ThroughputReport
+where
+    F: StreamFactory,
+{
+    let n_streams = n_streams.max(1);
+    let queue = Arc::new(BatchQueue::<Batch>::new(n_streams * 2));
+    let outputs = Arc::new(Mutex::new(Vec::new()));
+    let pinned_ok = AtomicUsize::new(0);
+    let partitions = core_partition(num_cpus(), n_streams);
+    let t0 = Instant::now();
+
+    let reports: Vec<StreamReport> = crossbeam_utils::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for stream_id in 0..n_streams {
+            let queue = queue.clone();
+            let outputs = outputs.clone();
+            let cores = partitions[stream_id % partitions.len()].clone();
+            let pinned_ok = &pinned_ok;
+            let mut translate = factory.make(stream_id);
+            handles.push(scope.spawn(move |_| {
+                if pin_cores && set_affinity(&cores) {
+                    pinned_ok.fetch_add(1, Ordering::Relaxed);
+                }
+                let mut rep = StreamReport {
+                    stream_id,
+                    batches: 0,
+                    sentences: 0,
+                    tokens: 0,
+                    busy_secs: 0.0,
+                };
+                while let Some(batch) = queue.pop() {
+                    let bt = Instant::now();
+                    let outs = translate(&batch);
+                    rep.busy_secs += bt.elapsed().as_secs_f64();
+                    rep.batches += 1;
+                    rep.sentences += batch.len();
+                    rep.tokens += batch.tokens;
+                    let mut g = outputs.lock().unwrap();
+                    for (idx, o) in batch.indices.iter().zip(outs) {
+                        g.push((*idx, o));
+                    }
+                }
+                rep
+            }));
+        }
+        // producer: enqueue in order (§5.4: already sorted by tokens desc)
+        for b in batches {
+            let _ = queue.push(b);
+        }
+        queue.close();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+    .unwrap();
+
+    let wall = t0.elapsed().as_secs_f64();
+    let sentences = reports.iter().map(|r| r.sentences).sum();
+    let tokens = reports.iter().map(|r| r.tokens).sum();
+    let outputs = Arc::try_unwrap(outputs).unwrap().into_inner().unwrap();
+    ThroughputReport {
+        mode: format!("parallel x{n_streams}"),
+        streams: reports,
+        wall_secs: wall,
+        sentences,
+        tokens,
+        outputs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::Generator;
+    use crate::data::vocab::DataConfig;
+    use crate::pipeline::batch::make_batches;
+
+    fn batches(n: usize, bs: usize) -> Vec<Batch> {
+        let pairs = Generator::new(DataConfig::default()).split(3, n);
+        let order: Vec<usize> = (0..pairs.len()).collect();
+        make_batches(&pairs, &order, bs)
+    }
+
+    /// Fake translate: echo the source (sleeping proportional to tokens
+    /// to model compute).
+    fn echo_with_delay(b: &Batch, nanos_per_token: u64) -> Vec<Vec<u32>> {
+        std::thread::sleep(std::time::Duration::from_nanos(
+            b.tokens as u64 * nanos_per_token,
+        ));
+        b.src.clone()
+    }
+
+    #[test]
+    fn serial_translates_everything_in_order() {
+        let bs = batches(50, 8);
+        let rep = run_serial(&bs, |b| echo_with_delay(b, 5_000));
+        assert_eq!(rep.sentences, 50);
+        assert_eq!(rep.outputs.len(), 50);
+        assert!(rep.utilization() > 0.5, "utilization {}", rep.utilization());
+    }
+
+    #[test]
+    fn parallel_preserves_every_sentence() {
+        let bs = batches(100, 8);
+        let rep = run_parallel(bs, 4, false, |_id: usize| {
+            move |b: &Batch| echo_with_delay(b, 100)
+        });
+        assert_eq!(rep.sentences, 100);
+        let mut idx: Vec<usize> = rep.outputs.iter().map(|(i, _)| *i).collect();
+        idx.sort_unstable();
+        assert_eq!(idx, (0..100).collect::<Vec<_>>());
+        // outputs match the corpus rows
+        let pairs = Generator::new(DataConfig::default()).split(3, 100);
+        for (i, o) in &rep.outputs {
+            let mut expect = pairs[*i].src.clone();
+            expect.resize(o.len(), crate::specials::PAD_ID);
+            assert_eq!(o, &expect);
+        }
+    }
+
+    #[test]
+    fn parallel_beats_serial_on_sleep_workload() {
+        let bs = batches(64, 4);
+        let serial = run_serial(&bs.clone(), |b| echo_with_delay(b, 20_000));
+        let parallel = run_parallel(bs, 4, false, |_id: usize| {
+            move |b: &Batch| echo_with_delay(b, 20_000)
+        });
+        assert!(
+            parallel.wall_secs < serial.wall_secs,
+            "parallel {:.3}s vs serial {:.3}s",
+            parallel.wall_secs,
+            serial.wall_secs
+        );
+    }
+
+    #[test]
+    fn core_partition_is_disjoint_and_covers() {
+        let parts = core_partition(8, 4);
+        assert_eq!(parts.len(), 4);
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), parts.iter().map(Vec::len).sum::<usize>());
+        // more streams than cores degrades gracefully
+        let parts = core_partition(2, 8);
+        assert_eq!(parts.len(), 8);
+        for p in parts {
+            assert!(!p.is_empty());
+        }
+    }
+
+    #[test]
+    fn zero_streams_clamps_to_one() {
+        let bs = batches(10, 4);
+        let rep = run_parallel(bs, 0, false, |_id: usize| {
+            move |b: &Batch| b.src.clone()
+        });
+        assert_eq!(rep.streams.len(), 1);
+        assert_eq!(rep.sentences, 10);
+    }
+}

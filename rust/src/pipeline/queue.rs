@@ -1,0 +1,175 @@
+//! Bounded MPMC batch queue (§5.6's "batch queue").
+//!
+//! Mutex + condvar; supports blocking pop with close semantics and
+//! bounded push for backpressure (a producer generating batches faster
+//! than the streams drain them must not balloon memory).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// A bounded multi-producer multi-consumer queue.
+pub struct BatchQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    pushed: u64,
+    popped: u64,
+}
+
+impl<T> BatchQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        BatchQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::new(),
+                closed: false,
+                pushed: 0,
+                popped: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Blocking push; returns Err(item) if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                g.pushed += 1;
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Blocking pop; returns None once closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                g.popped += 1;
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close the queue: producers fail, consumers drain then get None.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (pushed, popped) counters — conservation checks in tests.
+    pub fn counters(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.pushed, g.popped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let q = BatchQueue::new(10);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn push_after_close_fails() {
+        let q = BatchQueue::new(2);
+        q.close();
+        assert_eq!(q.push(7), Err(7));
+    }
+
+    #[test]
+    fn bounded_capacity_blocks_then_drains() {
+        let q = Arc::new(BatchQueue::new(2));
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || q2.push(3).is_ok());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.len(), 2); // producer blocked
+        assert_eq!(q.pop(), Some(1));
+        assert!(producer.join().unwrap());
+        q.close();
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn conservation_under_parallel_consumers() {
+        use crate::util::prop::check;
+        check("queue-conservation", 31, 8, |rng, _| {
+            let n = rng.range(10, 200) as usize;
+            let workers = rng.range(1, 6) as usize;
+            let q = Arc::new(BatchQueue::new(8));
+            let consumed = Arc::new(Mutex::new(Vec::new()));
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let q = q.clone();
+                    let consumed = consumed.clone();
+                    std::thread::spawn(move || {
+                        while let Some(x) = q.pop() {
+                            consumed.lock().unwrap().push(x);
+                        }
+                    })
+                })
+                .collect();
+            for i in 0..n {
+                q.push(i).map_err(|_| "closed early".to_string())?;
+            }
+            q.close();
+            for h in handles {
+                h.join().map_err(|_| "worker panicked".to_string())?;
+            }
+            let mut got = consumed.lock().unwrap().clone();
+            got.sort_unstable();
+            let expect: Vec<usize> = (0..n).collect();
+            if got != expect {
+                return Err(format!("lost/duplicated items: got {} of {n}", got.len()));
+            }
+            let (pushed, popped) = q.counters();
+            if pushed != popped {
+                return Err(format!("pushed {pushed} != popped {popped}"));
+            }
+            Ok(())
+        });
+    }
+}

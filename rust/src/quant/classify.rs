@@ -1,0 +1,123 @@
+//! Tensor-distribution classifier (Fig 2).
+//!
+//! The paper buckets MatMul input tensors into three histogram shapes —
+//! *sparse* (a spike at zero plus scattered values; post-ReLU and hard
+//! attention probabilities), *narrow* (tiny dynamic range, e.g. softmax
+//! outputs), and *Gaussian* (the typical residual-stream activations) —
+//! and only quantizes the latter two; sparse tensors (12 of 97 MatMuls)
+//! stay FP32 because quantizing them wrecks accuracy.
+//!
+//! Thresholds mirror `python/compile/calibrate.py`.
+
+use super::histogram::Histogram;
+
+/// Distribution class of a calibration tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorClass {
+    Sparse,
+    Narrow,
+    Gaussian,
+}
+
+/// Fraction of exact/near zeros above which a tensor is *sparse*.
+pub const SPARSE_ZERO_FRAC: f64 = 0.50;
+/// Dynamic range below which a tensor is *narrow*.
+pub const NARROW_RANGE: f32 = 1.5;
+
+impl TensorClass {
+    pub fn classify(h: &Histogram) -> TensorClass {
+        if h.count == 0 {
+            return TensorClass::Narrow;
+        }
+        if h.zero_frac() > SPARSE_ZERO_FRAC {
+            return TensorClass::Sparse;
+        }
+        if (h.max - h.min) < NARROW_RANGE {
+            return TensorClass::Narrow;
+        }
+        TensorClass::Gaussian
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TensorClass::Sparse => "sparse",
+            TensorClass::Narrow => "narrow",
+            TensorClass::Gaussian => "gaussian",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<TensorClass> {
+        match s {
+            "sparse" => Some(TensorClass::Sparse),
+            "narrow" => Some(TensorClass::Narrow),
+            "gaussian" => Some(TensorClass::Gaussian),
+            _ => None,
+        }
+    }
+
+    /// Whether the paper's policy quantizes this class.
+    pub fn quantizable(&self) -> bool {
+        !matches!(self, TensorClass::Sparse)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn hist_of(data: &[f32]) -> Histogram {
+        let mut h = Histogram::new(256);
+        h.observe_range(data);
+        h.observe_fill(data);
+        h
+    }
+
+    #[test]
+    fn relu_output_is_sparse() {
+        let mut rng = SplitMix64::new(1);
+        let data: Vec<f32> = (0..10_000)
+            .map(|_| (rng.normal() as f32).max(0.0)) // ~50% zeros + positives
+            .collect();
+        // force > 50% zeros like deep-layer ReLUs
+        let mut data = data;
+        for x in data.iter_mut().take(2000) {
+            *x = 0.0;
+        }
+        let h = hist_of(&data);
+        assert_eq!(TensorClass::classify(&h), TensorClass::Sparse);
+        assert!(!TensorClass::classify(&h).quantizable());
+    }
+
+    #[test]
+    fn softmax_probs_are_narrow() {
+        // probabilities live in [0, 1): range < 1.5
+        let mut rng = SplitMix64::new(2);
+        let data: Vec<f32> = (0..10_000).map(|_| rng.f64() as f32).collect();
+        let h = hist_of(&data);
+        assert_eq!(TensorClass::classify(&h), TensorClass::Narrow);
+        assert!(TensorClass::classify(&h).quantizable());
+    }
+
+    #[test]
+    fn activations_are_gaussian() {
+        let mut rng = SplitMix64::new(3);
+        let data: Vec<f32> = (0..10_000).map(|_| rng.normal() as f32 * 2.0).collect();
+        let h = hist_of(&data);
+        assert_eq!(TensorClass::classify(&h), TensorClass::Gaussian);
+    }
+
+    #[test]
+    fn empty_defaults_to_narrow() {
+        let h = Histogram::new(16);
+        assert_eq!(TensorClass::classify(&h), TensorClass::Narrow);
+    }
+
+    #[test]
+    fn str_roundtrip() {
+        for c in [TensorClass::Sparse, TensorClass::Narrow, TensorClass::Gaussian] {
+            assert_eq!(TensorClass::from_str(c.as_str()), Some(c));
+        }
+        assert_eq!(TensorClass::from_str("bogus"), None);
+    }
+}

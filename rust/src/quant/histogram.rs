@@ -1,0 +1,180 @@
+//! Fixed-range calibration histograms.
+//!
+//! The calibration workflow (§4.2) histograms every MatMul input over
+//! the calibration dataset.  Collection is two-pass — a range pass
+//! (min/max/moments) followed by a fill pass — matching
+//! `python/compile/calibrate.SiteStats`.
+
+/// Streaming range/moment statistics plus (after the fill pass) three
+/// magnitude histograms: |x|, positive x, negative -x.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub bins: usize,
+    pub min: f32,
+    pub max: f32,
+    pub count: u64,
+    pub zeros: u64,
+    pub sum: f64,
+    pub sumsq: f64,
+    pub hist_abs: Vec<u64>,
+    pub hist_pos: Vec<u64>,
+    pub hist_neg: Vec<u64>,
+}
+
+/// Values with |x| below this count as "zero" for sparsity purposes.
+pub const NEAR_ZERO: f32 = 1e-6;
+
+impl Histogram {
+    pub fn new(bins: usize) -> Self {
+        Self {
+            bins,
+            min: f32::INFINITY,
+            max: f32::NEG_INFINITY,
+            count: 0,
+            zeros: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+            hist_abs: vec![0; bins],
+            hist_pos: vec![0; bins],
+            hist_neg: vec![0; bins],
+        }
+    }
+
+    /// Pass 1: extend ranges and moments.
+    pub fn observe_range(&mut self, data: &[f32]) {
+        for &x in data {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+            self.sum += x as f64;
+            self.sumsq += (x as f64) * (x as f64);
+            if x.abs() < NEAR_ZERO {
+                self.zeros += 1;
+            }
+        }
+        self.count += data.len() as u64;
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.min.abs().max(self.max.abs()).max(f32::MIN_POSITIVE)
+    }
+
+    /// Pass 2: fill the fixed-range histograms (call after all
+    /// `observe_range` calls).
+    pub fn observe_fill(&mut self, data: &[f32]) {
+        let abs_max = self.abs_max();
+        let pos_max = self.max.max(f32::MIN_POSITIVE);
+        let neg_max = (-self.min).max(f32::MIN_POSITIVE);
+        let sa = self.bins as f32 / abs_max;
+        let sp = self.bins as f32 / pos_max;
+        let sn = self.bins as f32 / neg_max;
+        let last = self.bins - 1;
+        // (near-)zeros are excluded from all three histograms: they
+        // quantize to 0 exactly under any threshold, and their spike
+        // otherwise dominates P and skews the KL search toward
+        // over-tight clips (mirrors python calibrate.SiteStats).
+        for &x in data {
+            if x > NEAR_ZERO {
+                self.hist_abs[((x * sa) as usize).min(last)] += 1;
+                self.hist_pos[((x * sp) as usize).min(last)] += 1;
+            } else if x < -NEAR_ZERO {
+                self.hist_abs[((-x * sa) as usize).min(last)] += 1;
+                self.hist_neg[((-x * sn) as usize).min(last)] += 1;
+            }
+        }
+    }
+
+    pub fn zero_frac(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.zeros as f64 / self.count as f64
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sumsq / self.count as f64 - m * m).max(0.0).sqrt()
+    }
+
+    /// Bin width of the |x| histogram.
+    pub fn abs_bin_width(&self) -> f32 {
+        self.abs_max() / self.bins as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_pass_collection() {
+        let mut h = Histogram::new(64);
+        let data = vec![-2.0, -1.0, 0.0, 1.0, 4.0];
+        h.observe_range(&data);
+        assert_eq!(h.min, -2.0);
+        assert_eq!(h.max, 4.0);
+        assert_eq!(h.count, 5);
+        assert_eq!(h.zeros, 1);
+        h.observe_fill(&data);
+        // the exact zero is excluded from all histograms
+        assert_eq!(h.hist_abs.iter().sum::<u64>(), 4);
+        assert_eq!(h.hist_pos.iter().sum::<u64>(), 2);
+        assert_eq!(h.hist_neg.iter().sum::<u64>(), 2);
+    }
+
+    #[test]
+    fn max_value_lands_in_last_bin() {
+        let mut h = Histogram::new(16);
+        let data = vec![1.0, -1.0];
+        h.observe_range(&data);
+        h.observe_fill(&data);
+        assert_eq!(h.hist_abs[15], 2);
+    }
+
+    #[test]
+    fn moments() {
+        let mut h = Histogram::new(8);
+        let data = vec![1.0, 3.0];
+        h.observe_range(&data);
+        assert!((h.mean() - 2.0).abs() < 1e-9);
+        assert!((h.std() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let h = Histogram::new(8);
+        assert_eq!(h.zero_frac(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert!(h.abs_max() > 0.0);
+    }
+
+    #[test]
+    fn incremental_equals_batch() {
+        let mut h1 = Histogram::new(32);
+        let mut h2 = Histogram::new(32);
+        let data: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) / 10.0).collect();
+        h1.observe_range(&data);
+        for chunk in data.chunks(7) {
+            h2.observe_range(chunk);
+        }
+        assert_eq!(h1.min, h2.min);
+        assert_eq!(h1.max, h2.max);
+        assert_eq!(h1.count, h2.count);
+        h1.observe_fill(&data);
+        for chunk in data.chunks(7) {
+            h2.observe_fill(chunk);
+        }
+        assert_eq!(h1.hist_abs, h2.hist_abs);
+    }
+}

@@ -1,0 +1,182 @@
+//! KL-divergence threshold search (§4.2, after Migacz, GTC'17).
+//!
+//! Given a magnitude histogram, scan candidate saturation points `i`;
+//! for each, fold the outlier mass into the last kept bin (that is what
+//! clipping does), quantize the kept distribution to 128 levels,
+//! re-expand, and measure KL(P||Q).  The candidate minimizing the
+//! divergence wins.  Mirrors `python/compile/calibrate.py` exactly.
+
+use super::QUANT_BINS;
+
+const EPS: f64 = 1e-12;
+
+/// KL(P||Q) over raw (unnormalized) histograms, with Q smoothing.
+pub fn kl_divergence(p: &[f64], q: &[f64]) -> f64 {
+    let ps: f64 = p.iter().sum();
+    let qs: f64 = q.iter().sum();
+    if ps <= 0.0 || qs <= 0.0 {
+        return f64::INFINITY;
+    }
+    let mut kl = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        let pn = pi / ps;
+        if pn <= 0.0 {
+            continue;
+        }
+        let qn = (qi / qs).max(EPS);
+        kl += pn * (pn / qn).ln();
+    }
+    kl
+}
+
+/// Collapse `reference` into `levels` buckets and re-expand, spreading
+/// each bucket's mass uniformly over its originally non-empty bins.
+pub fn quantize_hist(reference: &[f64], levels: usize) -> Vec<f64> {
+    let n = reference.len();
+    let mut out = vec![0.0; n];
+    for l in 0..levels {
+        let lo = l * n / levels;
+        let hi = ((l + 1) * n / levels).max(lo + 1).min(n);
+        let slice = &reference[lo..hi];
+        let mass: f64 = slice.iter().sum();
+        let nonzero = slice.iter().filter(|&&x| x > 0.0).count();
+        if nonzero == 0 {
+            continue;
+        }
+        let share = mass / nonzero as f64;
+        for (i, &x) in slice.iter().enumerate() {
+            if x > 0.0 {
+                out[lo + i] = share;
+            }
+        }
+    }
+    out
+}
+
+/// Find the saturation threshold minimizing KL(P||Q).
+///
+/// `hist` covers magnitudes `[0, bins * bin_width]`; returns the
+/// optimal clip value.  `stride` trades search resolution for time
+/// (16 matches the Python side).
+pub fn kl_threshold(hist: &[u64], bin_width: f32, stride: usize) -> f32 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return (bin_width * hist.len() as f32).max(f32::MIN_POSITIVE);
+    }
+    let mut best_i = hist.len();
+    let mut best_kl = f64::INFINITY;
+    let mut i = QUANT_BINS;
+    while i <= hist.len() {
+        // P: clipped histogram with outlier mass folded into the edge bin
+        // (what saturation does to the real distribution).
+        let mut p: Vec<f64> = hist[..i].iter().map(|&x| x as f64).collect();
+        let unfolded = p.clone();
+        let outliers: u64 = hist[i..].iter().sum();
+        *p.last_mut().unwrap() += outliers as f64;
+        // Q: quantized from the *unfolded* clipped histogram — the
+        // asymmetry is what penalizes aggressive clipping (quantizing
+        // the folded P makes i=QUANT_BINS trivially optimal).
+        let q = quantize_hist(&unfolded, QUANT_BINS);
+        let kl = kl_divergence(&p, &q);
+        if kl < best_kl {
+            best_kl = kl;
+            best_i = i;
+        }
+        i += stride;
+    }
+    best_i as f32 * bin_width
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::histogram::Histogram;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn kl_zero_for_identical() {
+        let p = vec![1.0, 2.0, 3.0, 4.0];
+        assert!(kl_divergence(&p, &p) < 1e-12);
+    }
+
+    #[test]
+    fn kl_positive_for_different() {
+        let p = vec![4.0, 3.0, 2.0, 1.0];
+        let q = vec![1.0, 2.0, 3.0, 4.0];
+        assert!(kl_divergence(&p, &q) > 0.0);
+    }
+
+    #[test]
+    fn kl_infinite_for_empty() {
+        assert!(kl_divergence(&[0.0], &[1.0]).is_infinite());
+    }
+
+    #[test]
+    fn quantize_hist_preserves_mass() {
+        let reference: Vec<f64> = (0..512).map(|i| (i % 7) as f64).collect();
+        let q = quantize_hist(&reference, 128);
+        let m1: f64 = reference.iter().sum();
+        let m2: f64 = q.iter().sum();
+        assert!((m1 - m2).abs() < 1e-6 * m1);
+    }
+
+    #[test]
+    fn quantize_hist_keeps_zeros_empty() {
+        let mut reference = vec![0.0; 256];
+        reference[10] = 5.0;
+        let q = quantize_hist(&reference, 128);
+        for (i, &x) in q.iter().enumerate() {
+            if i != 10 {
+                assert_eq!(x, 0.0);
+            }
+        }
+    }
+
+    /// A long-tailed distribution must get clipped well below its max —
+    /// this is the whole point of §4.2 (naive min/max fails).
+    #[test]
+    fn longtail_clips_below_max() {
+        let mut rng = SplitMix64::new(42);
+        let mut h = Histogram::new(2048);
+        let data: Vec<f32> = (0..200_000)
+            .map(|_| {
+                let x = rng.normal() as f32;
+                if rng.f64() < 0.001 {
+                    x * 50.0 // rare huge outliers
+                } else {
+                    x
+                }
+            })
+            .collect();
+        h.observe_range(&data);
+        h.observe_fill(&data);
+        let t = kl_threshold(&h.hist_abs, h.abs_bin_width(), 16);
+        let max = h.abs_max();
+        assert!(
+            t < max * 0.5,
+            "threshold {t} should clip the tail (abs max {max})"
+        );
+        assert!(t > 1.0, "threshold {t} must keep the gaussian body");
+    }
+
+    /// A uniform (no-outlier) distribution should keep ~full range.
+    #[test]
+    fn uniform_keeps_range() {
+        let mut rng = SplitMix64::new(7);
+        let mut h = Histogram::new(2048);
+        let data: Vec<f32> = (0..100_000)
+            .map(|_| (rng.f64() * 2.0 - 1.0) as f32 * 3.0)
+            .collect();
+        h.observe_range(&data);
+        h.observe_fill(&data);
+        let t = kl_threshold(&h.hist_abs, h.abs_bin_width(), 16);
+        assert!(t > 2.4, "uniform should not be clipped hard, got {t}");
+    }
+
+    #[test]
+    fn empty_hist_returns_full_range() {
+        let h = vec![0u64; 2048];
+        let t = kl_threshold(&h, 0.001, 16);
+        assert!(t > 0.0);
+    }
+}

@@ -1,0 +1,28 @@
+//! Quantization core (§4 of the paper).
+//!
+//! * [`scheme`]    — affine/symmetric int8 schemes, the paper's eq. 4-6;
+//! * [`histogram`] — fixed-range calibration histograms;
+//! * [`kl`]        — Kullback-Leibler divergence and the Migacz'17
+//!   threshold search (§4.2);
+//! * [`classify`]  — the Fig 2 sparse/narrow/Gaussian tensor classifier;
+//! * [`calibrate`] — the calibration driver producing per-site
+//!   thresholds in the paper's four modes (naive / symmetric /
+//!   independent / conjugate) and loading `artifacts/calibration.json`.
+
+pub mod calibrate;
+pub mod classify;
+pub mod histogram;
+pub mod kl;
+pub mod scheme;
+
+pub use calibrate::{CalibrationMode, SiteCalibration, SiteTable};
+pub use classify::TensorClass;
+pub use histogram::Histogram;
+pub use scheme::QuantParams;
+
+/// Histogram resolution (mirrors python common.HIST_BINS).
+pub const HIST_BINS: usize = 2048;
+/// Target quantized positive levels used in the KL search.
+pub const QUANT_BINS: usize = 128;
+/// int8 positive max.
+pub const INT8_MAX: f32 = 127.0;

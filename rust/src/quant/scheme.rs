@@ -1,0 +1,130 @@
+//! Quantization schemes: the paper's eq. 4-6 made precise.
+//!
+//! A [`QuantParams`] maps f32 to s8 via `q = clip(round(x/scale) + zero)`.
+//! The four calibration modes differ only in how `(scale, zero)` are
+//! derived from the calibrated thresholds — see `calibrate.rs`.
+
+use super::INT8_MAX;
+
+/// Affine int8 quantization parameters for one tensor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero: i32,
+}
+
+impl QuantParams {
+    /// Symmetric from a single threshold T: range [-T, T] -> [-127, 127].
+    pub fn symmetric(threshold: f32) -> Self {
+        let t = threshold.max(f32::MIN_POSITIVE);
+        QuantParams {
+            scale: t / INT8_MAX,
+            zero: 0,
+        }
+    }
+
+    /// Affine from an asymmetric range [min, max] -> [-128, 127]
+    /// (the paper's *independent* mode: non-zero offset, slower kernel).
+    pub fn affine(min: f32, max: f32) -> Self {
+        let lo = min.min(-f32::MIN_POSITIVE);
+        let hi = max.max(f32::MIN_POSITIVE);
+        let scale = (hi - lo) / 255.0;
+        let zero = (-128.0 - lo / scale).round() as i32;
+        QuantParams {
+            scale,
+            zero: zero.clamp(-128, 127),
+        }
+    }
+
+    /// Quantize one value.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i8 {
+        ((x / self.scale).round() as i32 + self.zero).clamp(-128, 127) as i8
+    }
+
+    /// Dequantize one value (eq. 6).
+    #[inline]
+    pub fn dequantize(&self, q: i8) -> f32 {
+        (q as i32 - self.zero) as f32 * self.scale
+    }
+
+    /// The representable f32 range.
+    pub fn range(&self) -> (f32, f32) {
+        (
+            self.dequantize(i8::MIN),
+            self.dequantize(i8::MAX),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn symmetric_zero_is_exact() {
+        let q = QuantParams::symmetric(3.0);
+        assert_eq!(q.zero, 0);
+        assert_eq!(q.quantize(0.0), 0);
+        assert_eq!(q.dequantize(0), 0.0);
+    }
+
+    #[test]
+    fn symmetric_threshold_maps_to_127() {
+        let q = QuantParams::symmetric(2.54);
+        assert_eq!(q.quantize(2.54), 127);
+        assert_eq!(q.quantize(-2.54), -127);
+        assert_eq!(q.quantize(10.0), 127); // saturates
+    }
+
+    #[test]
+    fn affine_covers_asymmetric_range() {
+        let q = QuantParams::affine(-1.0, 3.0);
+        assert_eq!(q.quantize(-1.0), -128);
+        assert_eq!(q.quantize(3.0), 127);
+        // zero must be representable with small error
+        assert!(q.dequantize(q.quantize(0.0)).abs() <= q.scale);
+    }
+
+    #[test]
+    fn roundtrip_error_half_step_prop() {
+        check("quant-roundtrip", 17, 64, |rng, _| {
+            let t = (rng.f64() * 10.0 + 0.01) as f32;
+            let q = QuantParams::symmetric(t);
+            for _ in 0..64 {
+                let x = ((rng.f64() * 2.0 - 1.0) as f32) * t;
+                let back = q.dequantize(q.quantize(x));
+                if (x - back).abs() > q.scale * 0.5 + 1e-6 {
+                    return Err(format!("x={x} back={back} scale={}", q.scale));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn affine_roundtrip_prop() {
+        check("affine-roundtrip", 19, 64, |rng, _| {
+            let lo = -(rng.f64() as f32) * 5.0 - 0.01;
+            let hi = (rng.f64() as f32) * 5.0 + 0.01;
+            let q = QuantParams::affine(lo, hi);
+            for _ in 0..32 {
+                let x = lo + (rng.f64() as f32) * (hi - lo);
+                let back = q.dequantize(q.quantize(x));
+                // affine zero rounding can add up to one extra step
+                if (x - back).abs() > q.scale * 1.5 {
+                    return Err(format!("x={x} back={back} range=({lo},{hi})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn degenerate_threshold_does_not_divide_by_zero() {
+        let q = QuantParams::symmetric(0.0);
+        assert!(q.scale > 0.0);
+        let _ = q.quantize(1.0);
+    }
+}

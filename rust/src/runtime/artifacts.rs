@@ -1,0 +1,148 @@
+//! Artifact discovery and bucket selection.
+//!
+//! `hlo_index.json` maps (precision, batch bucket) -> HLO text file.
+//! PJRT executables are static-shaped, so the runtime picks the
+//! smallest bucket that fits a batch and pads up to it (the padding
+//! cost is exactly why §5.4's sorted batching matters).
+
+use std::path::{Path, PathBuf};
+
+use super::RtPrecision;
+use crate::util::json::Json;
+
+/// One AOT-compiled translate executable's metadata.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    pub file: PathBuf,
+    pub precision: RtPrecision,
+    pub batch: usize,
+    pub src_len: usize,
+    pub tgt_len: usize,
+}
+
+/// The parsed `hlo_index.json`.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactIndex {
+    pub buckets: Vec<Bucket>,
+}
+
+impl ArtifactIndex {
+    pub fn load(dir: &Path) -> anyhow::Result<ArtifactIndex> {
+        let j = Json::parse_file(&dir.join("hlo_index.json"))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let arr = j
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("hlo_index.json: missing buckets"))?;
+        let mut buckets = Vec::new();
+        for b in arr {
+            let file = b
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("bucket missing file"))?;
+            let precision = b
+                .get("precision")
+                .and_then(Json::as_str)
+                .and_then(RtPrecision::from_str)
+                .ok_or_else(|| anyhow::anyhow!("bucket missing precision"))?;
+            buckets.push(Bucket {
+                file: dir.join(file),
+                precision,
+                batch: b.get("batch").and_then(Json::as_usize).unwrap_or(1),
+                src_len: b.get("src_len").and_then(Json::as_usize).unwrap_or(48),
+                tgt_len: b.get("tgt_len").and_then(Json::as_usize).unwrap_or(56),
+            });
+        }
+        anyhow::ensure!(!buckets.is_empty(), "hlo_index.json has no buckets");
+        Ok(ArtifactIndex { buckets })
+    }
+
+    /// Smallest bucket of `precision` whose batch >= `batch` (or the
+    /// largest available if none fits — caller then splits the batch).
+    pub fn select(&self, precision: RtPrecision, batch: usize) -> Option<&Bucket> {
+        let mut fitting: Vec<&Bucket> = self
+            .buckets
+            .iter()
+            .filter(|b| b.precision == precision && b.batch >= batch)
+            .collect();
+        fitting.sort_by_key(|b| b.batch);
+        if let Some(b) = fitting.first() {
+            return Some(b);
+        }
+        self.buckets
+            .iter()
+            .filter(|b| b.precision == precision)
+            .max_by_key(|b| b.batch)
+    }
+
+    /// All batch sizes available for a precision (ascending).
+    pub fn batch_buckets(&self, precision: RtPrecision) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .buckets
+            .iter()
+            .filter(|b| b.precision == precision)
+            .map(|b| b.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> ArtifactIndex {
+        let mk = |p: RtPrecision, batch: usize| Bucket {
+            file: PathBuf::from(format!("translate_{}_b{batch}.hlo.txt", p.as_str())),
+            precision: p,
+            batch,
+            src_len: 48,
+            tgt_len: 56,
+        };
+        ArtifactIndex {
+            buckets: vec![
+                mk(RtPrecision::Fp32, 1),
+                mk(RtPrecision::Fp32, 16),
+                mk(RtPrecision::Fp32, 64),
+                mk(RtPrecision::Int8, 1),
+                mk(RtPrecision::Int8, 16),
+                mk(RtPrecision::Int8, 64),
+            ],
+        }
+    }
+
+    #[test]
+    fn select_smallest_fitting() {
+        let idx = fixture();
+        assert_eq!(idx.select(RtPrecision::Fp32, 1).unwrap().batch, 1);
+        assert_eq!(idx.select(RtPrecision::Fp32, 2).unwrap().batch, 16);
+        assert_eq!(idx.select(RtPrecision::Fp32, 16).unwrap().batch, 16);
+        assert_eq!(idx.select(RtPrecision::Int8, 17).unwrap().batch, 64);
+    }
+
+    #[test]
+    fn select_oversized_returns_largest() {
+        let idx = fixture();
+        assert_eq!(idx.select(RtPrecision::Fp32, 1000).unwrap().batch, 64);
+    }
+
+    #[test]
+    fn batch_buckets_sorted() {
+        let idx = fixture();
+        assert_eq!(idx.batch_buckets(RtPrecision::Int8), vec![1, 16, 64]);
+    }
+
+    #[test]
+    fn load_real_index_if_present() {
+        let dir = crate::default_artifacts_dir();
+        if !dir.join("hlo_index.json").exists() {
+            return;
+        }
+        let idx = ArtifactIndex::load(&dir).unwrap();
+        assert!(!idx.buckets.is_empty());
+        for b in &idx.buckets {
+            assert!(b.file.exists(), "{:?}", b.file);
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Per-thread PJRT CPU client.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`/`Sync`), so
+//! each worker thread owns its own client and compiles its own
+//! executables.  This mirrors the paper's §5.6 deployment exactly: the
+//! parent spawns affinitized child *processes*, each with a private
+//! TensorFlow session; our parallel streams are threads, each with a
+//! private PJRT client.
+
+use std::cell::RefCell;
+
+thread_local! {
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// This thread's PJRT CPU client (created on first use; cheap clone of
+/// an internal `Rc` afterwards).
+pub fn cpu_client() -> anyhow::Result<xla::PjRtClient> {
+    CLIENT.with(|c| {
+        let mut slot = c.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(xla::PjRtClient::cpu()?);
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    })
+}
+
+/// Human-readable platform string (for logs / smoke tests).
+pub fn platform_info() -> anyhow::Result<String> {
+    let c = cpu_client()?;
+    Ok(format!(
+        "{} ({} devices)",
+        c.platform_name(),
+        c.device_count()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_initializes_and_is_reused() {
+        let _a = cpu_client().unwrap();
+        let _b = cpu_client().unwrap();
+        let info = platform_info().unwrap();
+        assert!(!info.is_empty());
+    }
+
+    #[test]
+    fn each_thread_gets_its_own_client() {
+        let h = std::thread::spawn(|| cpu_client().map(|_| ()).is_ok());
+        assert!(h.join().unwrap());
+    }
+}

@@ -1,0 +1,118 @@
+//! Compiled translate executable (HLO text -> PJRT -> run).
+//!
+//! The AOT'd function is `translate(src_ids i32[B,S]) -> (out i32[B,T],
+//! lengths i32[B])` with weights baked in as constants.  Lowered with
+//! `return_tuple=True`, so the single output is a 2-tuple.
+
+use std::path::Path;
+use std::time::Instant;
+
+use super::artifacts::Bucket;
+use super::client::cpu_client;
+use crate::data::bleu::strip_special;
+use crate::specials::PAD_ID;
+
+/// One compiled (precision, batch-bucket) translate executable.
+pub struct TranslateExecutable {
+    pub bucket: Bucket,
+    exe: xla::PjRtLoadedExecutable,
+    /// wall time spent compiling the HLO (startup cost, logged once)
+    pub compile_secs: f64,
+}
+
+impl TranslateExecutable {
+    /// Load HLO text and compile on the shared CPU client.
+    pub fn compile(bucket: &Bucket) -> anyhow::Result<TranslateExecutable> {
+        let client = cpu_client()?;
+        let t0 = Instant::now();
+        let path: &Path = &bucket.file;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(TranslateExecutable {
+            bucket: bucket.clone(),
+            exe,
+            compile_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Translate a batch (<= bucket.batch rows).  Rows are padded to
+    /// the bucket's static [B, S] shape; outputs are EOS-stripped.
+    pub fn translate(&self, src: &[Vec<u32>]) -> anyhow::Result<Vec<Vec<u32>>> {
+        let b = self.bucket.batch;
+        let s = self.bucket.src_len;
+        anyhow::ensure!(
+            src.len() <= b,
+            "batch {} exceeds bucket {b}",
+            src.len()
+        );
+        // marshal into a padded i32 [B, S] literal
+        let mut flat = vec![PAD_ID as i32; b * s];
+        for (i, row) in src.iter().enumerate() {
+            anyhow::ensure!(
+                row.len() <= s,
+                "sentence of {} tokens exceeds bucket src_len {s}",
+                row.len()
+            );
+            for (j, &t) in row.iter().enumerate() {
+                flat[i * s + j] = t as i32;
+            }
+        }
+        let lit = xla::Literal::vec1(&flat).reshape(&[b as i64, s as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let (out_ids, _lengths) = result.to_tuple2()?;
+        let ids = out_ids.to_vec::<i32>()?;
+        let t = self.bucket.tgt_len;
+        let mut out = Vec::with_capacity(src.len());
+        for i in 0..src.len() {
+            let row: Vec<u32> = ids[i * t..(i + 1) * t].iter().map(|&x| x as u32).collect();
+            out.push(strip_special(&row));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ArtifactIndex, RtPrecision};
+
+    /// Full AOT round-trip against the real artifacts (skipped without them).
+    #[test]
+    fn compile_and_translate_fp32_b1() {
+        let dir = crate::default_artifacts_dir();
+        if !dir.join("hlo_index.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let idx = ArtifactIndex::load(&dir).unwrap();
+        let bucket = idx.select(RtPrecision::Fp32, 1).unwrap();
+        let exe = TranslateExecutable::compile(bucket).unwrap();
+        assert!(exe.compile_secs > 0.0);
+        // translate one real test sentence and compare to its reference
+        let ds = crate::data::Dataset::load(&dir.join("dataset.json")).unwrap();
+        let pair = &ds.test[0];
+        let out = exe.translate(&[pair.src.clone()]).unwrap();
+        let expect = strip_special(&pair.ref_ids);
+        assert_eq!(out[0], expect, "AOT fp32 must translate test[0] correctly");
+    }
+
+    #[test]
+    fn batch_too_large_is_rejected() {
+        let dir = crate::default_artifacts_dir();
+        if !dir.join("hlo_index.json").exists() {
+            return;
+        }
+        let idx = ArtifactIndex::load(&dir).unwrap();
+        let bucket = idx.select(RtPrecision::Fp32, 1).unwrap();
+        if bucket.batch > 1 {
+            return;
+        }
+        let exe = TranslateExecutable::compile(bucket).unwrap();
+        let two = vec![vec![3, 2], vec![4, 2]];
+        assert!(exe.translate(&two).is_err());
+    }
+}

@@ -1,0 +1,43 @@
+//! PJRT runtime: the AOT fast path.
+//!
+//! Loads the HLO-text executables produced by `python/compile/aot.py`
+//! (`translate_{fp32,int8}_b{B}.hlo.txt`), compiles them once on the
+//! PJRT CPU client, and executes whole translate calls — encoder +
+//! greedy-decode while-loop fused into one XLA computation, with the
+//! Pallas int8 kernels lowered inline.  Python never runs here.
+//!
+//! * [`artifacts`] — `hlo_index.json` discovery + bucket selection;
+//! * [`executable`] — compiled executable wrapper (marshals token
+//!   batches in/out of `xla::Literal`s);
+//! * [`client`] — the process-wide PJRT CPU client.
+
+pub mod artifacts;
+pub mod client;
+pub mod executable;
+
+pub use artifacts::{ArtifactIndex, Bucket};
+pub use executable::TranslateExecutable;
+
+/// Runtime precision of an AOT executable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RtPrecision {
+    Fp32,
+    Int8,
+}
+
+impl RtPrecision {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RtPrecision::Fp32 => "fp32",
+            RtPrecision::Int8 => "int8",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "fp32" => Some(RtPrecision::Fp32),
+            "int8" => Some(RtPrecision::Int8),
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! Dense tensor substrate.
+//!
+//! A deliberately small row-major tensor type parameterized over its
+//! element type, with exactly the operations the Transformer engine and
+//! the quantization library need: elementwise maps, transpose, 2-D
+//! views, softmax/layernorm helpers and the §5.3 gather primitives.
+//!
+//! No broadcasting engine — call sites are explicit about shapes, which
+//! keeps the inference engine's inner loops transparent to profile.
+
+pub mod gather;
+pub mod ops;
+
+use std::fmt;
+
+/// Row-major dense tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+pub type TensorF = Tensor<f32>;
+pub type TensorI8 = Tensor<i8>;
+pub type TensorU8 = Tensor<u8>;
+pub type TensorI32 = Tensor<i32>;
+
+impl<T: Copy + Default> Tensor<T> {
+    /// Zero-filled tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![T::default(); n],
+        }
+    }
+
+    /// Build from data; panics if the element count mismatches the shape.
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(
+            n,
+            data.len(),
+            "shape {shape:?} wants {n} elements, got {}",
+            data.len()
+        );
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Filled with a constant.
+    pub fn full(shape: &[usize], value: T) -> Self {
+        let n: usize = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![value; n],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {shape:?}", self.shape);
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[T] {
+        assert_eq!(self.ndim(), 2);
+        let cols = self.shape[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        assert_eq!(self.ndim(), 2);
+        let cols = self.shape[1];
+        &mut self.data[i * cols..(i + 1) * cols]
+    }
+
+    /// Flat offset of a multi-index.
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&ix, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(ix < dim, "index {idx:?} out of shape {:?} at axis {i}", self.shape);
+            off = off * dim + ix;
+        }
+        off
+    }
+
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[self.offset(idx)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: T) {
+        let off = self.offset(idx);
+        self.data[off] = v;
+    }
+
+    /// Contiguous slice along the first axis: `self[i]` as a sub-tensor view
+    /// (copy-free slice of the flat data).
+    pub fn slab(&self, i: usize) -> &[T] {
+        let inner: usize = self.shape[1..].iter().product();
+        &self.data[i * inner..(i + 1) * inner]
+    }
+
+    pub fn slab_mut(&mut self, i: usize) -> &mut [T] {
+        let inner: usize = self.shape[1..].iter().product();
+        &mut self.data[i * inner..(i + 1) * inner]
+    }
+}
+
+impl TensorF {
+    /// 2-D transpose (copies).
+    pub fn transpose2(&self) -> TensorF {
+        assert_eq!(self.ndim(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = TensorF::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn min_max(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in &self.data {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        (lo, hi)
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Tensor<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)
+        } else {
+            write!(f, " [{:?}, {:?}, ...]", self.data[0], self.data[1])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = TensorF::zeros(&[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn from_vec_and_index() {
+        let t = TensorF::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.at(&[0, 1]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+        assert_eq!(t.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "wants 4 elements")]
+    fn from_vec_shape_mismatch_panics() {
+        TensorF::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn reshape_roundtrip() {
+        let t = TensorF::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect());
+        let r = t.clone().reshape(&[3, 2]);
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.data(), t.data());
+    }
+
+    #[test]
+    fn transpose2() {
+        let t = TensorF::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose2();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.data(), &[1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn slab_views() {
+        let t = TensorF::from_vec(&[2, 2, 2], (0..8).map(|i| i as f32).collect());
+        assert_eq!(t.slab(1), &[4., 5., 6., 7.]);
+    }
+
+    #[test]
+    fn min_max_and_abs() {
+        let t = TensorF::from_vec(&[4], vec![-3.0, 1.0, 2.5, -0.5]);
+        assert_eq!(t.min_max(), (-3.0, 2.5));
+        assert_eq!(t.max_abs(), 3.0);
+    }
+
+    #[test]
+    fn empty_tensor() {
+        let t = TensorF::zeros(&[0, 4]);
+        assert!(t.is_empty());
+        assert_eq!(t.len(), 0);
+    }
+}

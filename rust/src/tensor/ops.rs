@@ -1,0 +1,168 @@
+//! Elementwise and normalization ops on [`TensorF`] slices.
+//!
+//! These are the non-MatMul operations the paper keeps in FP32 (§3):
+//! Softmax (division), LayerNorm (mean/variance/rsqrt), plus ReLU and
+//! the residual adds.  They operate on plain slices so the engine can
+//! apply them to tensor sub-views without copies.
+
+/// Numerically-stable softmax over the last `cols` elements of each row.
+pub fn softmax_rows(data: &mut [f32], cols: usize) {
+    assert!(cols > 0 && data.len() % cols == 0);
+    for row in data.chunks_mut(cols) {
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - max).exp();
+            sum += *x;
+        }
+        let inv = 1.0 / sum;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+/// LayerNorm over the last `cols` elements of each row:
+/// `(x - mean) / sqrt(var + eps) * gamma + beta`.
+pub fn layer_norm_rows(data: &mut [f32], cols: usize, gamma: &[f32], beta: &[f32], eps: f32) {
+    assert_eq!(gamma.len(), cols);
+    assert_eq!(beta.len(), cols);
+    for row in data.chunks_mut(cols) {
+        let mean = row.iter().sum::<f32>() / cols as f32;
+        let var = row.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (x, (&g, &b)) in row.iter_mut().zip(gamma.iter().zip(beta)) {
+            *x = (*x - mean) * inv * g + b;
+        }
+    }
+}
+
+/// In-place ReLU.
+pub fn relu(data: &mut [f32]) {
+    for x in data {
+        if *x < 0.0 {
+            *x = 0.0;
+        }
+    }
+}
+
+/// `dst += src` (residual connection).
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// `dst += bias` broadcast over rows of width `cols`.
+pub fn add_bias(dst: &mut [f32], bias: &[f32]) {
+    let cols = bias.len();
+    assert!(dst.len() % cols == 0);
+    for row in dst.chunks_mut(cols) {
+        for (d, &b) in row.iter_mut().zip(bias) {
+            *d += b;
+        }
+    }
+}
+
+/// Scale all elements.
+pub fn scale(data: &mut [f32], s: f32) {
+    for x in data {
+        *x *= s;
+    }
+}
+
+/// Argmax index of a slice (first maximum on ties).
+pub fn argmax(data: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in data.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Mean absolute difference between two slices (parity testing).
+pub fn mean_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x - y).abs())
+        .sum::<f32>()
+        / a.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < tol, "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut d = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut d, 3);
+        assert!((d[0..3].iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!((d[3..6].iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(d[2] > d[1] && d[1] > d[0]);
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let mut d = vec![1000.0, 1001.0];
+        softmax_rows(&mut d, 2);
+        assert!(d.iter().all(|x| x.is_finite()));
+        assert!((d[0] + d[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut d = vec![1.0, 2.0, 3.0, 4.0];
+        let gamma = vec![1.0; 4];
+        let beta = vec![0.0; 4];
+        layer_norm_rows(&mut d, 4, &gamma, &beta, 1e-6);
+        let mean: f32 = d.iter().sum::<f32>() / 4.0;
+        let var: f32 = d.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn layernorm_gamma_beta() {
+        let mut d = vec![1.0, 2.0];
+        layer_norm_rows(&mut d, 2, &[2.0, 2.0], &[1.0, 1.0], 1e-6);
+        // normalized = [-1, 1] -> *2 + 1 = [-1, 3]
+        assert_close(&d, &[-1.0, 3.0], 1e-2);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut d = vec![-1.0, 0.0, 2.0];
+        relu(&mut d);
+        assert_eq!(d, vec![0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn bias_broadcast() {
+        let mut d = vec![0.0; 6];
+        add_bias(&mut d, &[1.0, 2.0, 3.0]);
+        assert_eq!(d, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn argmax_first_max_on_ties() {
+        assert_eq!(argmax(&[1.0, 5.0, 5.0, 0.0]), 1);
+        assert_eq!(argmax(&[-2.0]), 0);
+    }
+}

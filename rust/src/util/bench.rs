@@ -1,0 +1,141 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warmup + repeated timed runs, reporting min/median/mean/p95 and a
+//! derived throughput.  Used by every `rust/benches/*.rs` target
+//! (compiled with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement summary (times in seconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+    pub p95: f64,
+}
+
+impl Stats {
+    /// items processed per second at the median time.
+    pub fn per_sec(&self, items: f64) -> f64 {
+        items / self.median
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    pub max_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: 3,
+            iters: 15,
+            max_time: Duration::from_secs(20),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup: 1,
+            iters: 5,
+            max_time: Duration::from_secs(8),
+        }
+    }
+
+    /// Time `f` repeatedly; returns summary stats.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        let start = Instant::now();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+            if start.elapsed() > self.max_time && times.len() >= 3 {
+                break;
+            }
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len();
+        Stats {
+            name: name.to_string(),
+            iters: n,
+            min: times[0],
+            median: times[n / 2],
+            mean: times.iter().sum::<f64>() / n as f64,
+            p95: times[((n as f64 * 0.95) as usize).min(n - 1)],
+        }
+    }
+}
+
+/// Pretty time formatting.
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Print a standard result row: name, median, throughput-ish extra.
+pub fn report(stats: &Stats, extra: &str) {
+    println!(
+        "{:44} median {:>12}  min {:>12}  {}",
+        stats.name,
+        fmt_time(stats.median),
+        fmt_time(stats.min),
+        extra
+    );
+}
+
+/// A black-box sink preventing the optimizer from deleting benchmarked work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_reports_sane_stats() {
+        let b = Bench {
+            warmup: 1,
+            iters: 5,
+            max_time: Duration::from_secs(5),
+        };
+        let mut acc = 0u64;
+        let s = b.run("spin", || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(s.iters >= 3);
+        assert!(s.min <= s.median && s.median <= s.p95);
+        assert!(s.min > 0.0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,108 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = iter.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn flags_and_options() {
+        let a = parse("serve --batch 64 --int8 --mode=symmetric input.txt");
+        assert_eq!(a.positional, vec!["serve", "input.txt"]);
+        assert_eq!(a.get("batch"), Some("64"));
+        assert_eq!(a.get("mode"), Some("symmetric"));
+        assert!(a.flag("int8"));
+        assert!(!a.flag("fp32"));
+    }
+
+    #[test]
+    fn numeric_defaults() {
+        let a = parse("--batch 32");
+        assert_eq!(a.get_usize("batch", 1), 32);
+        assert_eq!(a.get_usize("streams", 4), 4);
+        assert_eq!(a.get_f64("frac", 0.5), 0.5);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--verbose");
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn option_followed_by_flag() {
+        let a = parse("--out dir --quiet");
+        assert_eq!(a.get("out"), Some("dir"));
+        assert!(a.flag("quiet"));
+    }
+}

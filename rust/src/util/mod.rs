@@ -1,0 +1,17 @@
+//! Dependency-light utilities.
+//!
+//! This environment is offline: only the `xla` crate's dependency
+//! closure is available, so JSON, CLI parsing, the bench harness and
+//! property-testing support are implemented here instead of pulling
+//! serde/clap/criterion/proptest.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Monotonic seconds since an arbitrary epoch (wraps `std::time::Instant`).
+pub fn now() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,117 @@
+//! Minimal property-testing support (proptest is unavailable offline).
+//!
+//! `check` runs a property over `n` random cases from a seeded
+//! [`SplitMix64`]; on failure it retries with progressively simpler
+//! inputs is not attempted (no shrinking) but the failing seed and case
+//! index are reported so the case is exactly reproducible.
+
+use super::rng::SplitMix64;
+
+/// Number of cases per property (overridable via `QUANTNMT_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("QUANTNMT_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` for `n` random cases; panics with seed + case on failure.
+///
+/// `prop` receives a per-case RNG and the case index and returns
+/// `Result<(), String>`; `Err` fails the property with the message.
+pub fn check<F>(name: &str, seed: u64, n: usize, mut prop: F)
+where
+    F: FnMut(&mut SplitMix64, usize) -> Result<(), String>,
+{
+    for case in 0..n {
+        // each case gets an independent, reconstructible stream
+        let mut rng = SplitMix64::new(seed ^ (case as u64).wrapping_mul(0x9E3779B9));
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {msg}\n\
+                 reproduce with SplitMix64::new({seed} ^ ({case}u64 * 0x9E3779B9))"
+            );
+        }
+    }
+}
+
+/// Generators for common shapes.
+pub mod gen {
+    use super::SplitMix64;
+
+    /// Vec of f32 in [-scale, scale] of length in [min_len, max_len].
+    pub fn f32_vec(rng: &mut SplitMix64, min_len: usize, max_len: usize, scale: f32) -> Vec<f32> {
+        let n = rng.range(min_len as u64, max_len as u64) as usize;
+        (0..n)
+            .map(|_| ((rng.f64() * 2.0 - 1.0) as f32) * scale)
+            .collect()
+    }
+
+    /// Vec with occasional large-magnitude outliers (long-tailed, like
+    /// the paper's Fig 2 activations).
+    pub fn f32_vec_longtail(rng: &mut SplitMix64, len: usize, scale: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| {
+                let base = (rng.normal() as f32) * scale;
+                if rng.f64() < 0.01 {
+                    base * 20.0
+                } else {
+                    base
+                }
+            })
+            .collect()
+    }
+
+    /// Random (m, k, n) GEMM dims within bounds.
+    pub fn gemm_dims(rng: &mut SplitMix64, max: usize) -> (usize, usize, usize) {
+        (
+            rng.range(1, max as u64) as usize,
+            rng.range(1, max as u64) as usize,
+            rng.range(1, max as u64) as usize,
+        )
+    }
+
+    /// Random token-id sequence (content ids only).
+    pub fn token_seq(rng: &mut SplitMix64, max_len: usize, vocab: u32) -> Vec<u32> {
+        let n = rng.range(1, max_len as u64) as usize;
+        (0..n)
+            .map(|_| crate::specials::FIRST_CONTENT_ID + rng.below((vocab - 3) as u64) as u32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 1, 32, |rng, _| {
+            let a = rng.f64();
+            let b = rng.f64();
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("non-commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports() {
+        check("always-fails", 2, 8, |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = SplitMix64::new(9);
+        for _ in 0..50 {
+            let v = gen::f32_vec(&mut rng, 1, 10, 2.0);
+            assert!((1..=10).contains(&v.len()));
+            assert!(v.iter().all(|x| x.abs() <= 2.0));
+            let (m, k, n) = gen::gemm_dims(&mut rng, 32);
+            assert!(m >= 1 && k >= 1 && n >= 1 && m <= 32 && k <= 32 && n <= 32);
+        }
+    }
+}

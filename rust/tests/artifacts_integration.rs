@@ -1,0 +1,120 @@
+//! Integration tests against the real trained artifacts.
+//!
+//! These load `artifacts/` (built by `make artifacts`) and verify the
+//! whole Rust stack against the trained model: weights load, the
+//! dataset cross-checks against the Rust generator, the FP32 engine
+//! translates at high BLEU, and the INT8 engines stay within the
+//! paper's accuracy envelope.
+//!
+//! Skipped (with a message) when artifacts are absent so `cargo test`
+//! still works on a fresh checkout.
+
+use quantnmt::data::bleu::{corpus_bleu, strip_special};
+use quantnmt::data::{DataConfig, Dataset};
+use quantnmt::model::{Engine, ModelConfig, Weights};
+use quantnmt::quant::calibrate::{CalibrationMode, SiteTable};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = quantnmt::default_artifacts_dir();
+    if dir.join("manifest.json").exists() && dir.join("dataset.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts at {}", dir.display());
+        None
+    }
+}
+
+#[test]
+fn weights_load_and_have_expected_census() {
+    let Some(dir) = artifacts() else { return };
+    let w = Weights::load(&dir).unwrap();
+    let cfg = ModelConfig::load(&dir.join("config.json")).unwrap();
+    // embed + per-enc-layer (4 attn + 2x2 ln + 4 ffn) + per-dec-layer (8 attn + 3x2 ln + 4 ffn)
+    let expect = 1
+        + cfg.n_enc_layers * (4 + 4 + 4)
+        + cfg.n_dec_layers * (8 + 6 + 4);
+    assert_eq!(w.len(), expect, "tensor census");
+    assert!(w.param_count() > 500_000, "param count {}", w.param_count());
+}
+
+#[test]
+fn dataset_crosschecks_with_rust_generator() {
+    let Some(dir) = artifacts() else { return };
+    let ds = Dataset::load(&dir.join("dataset.json")).unwrap();
+    assert_eq!(ds.valid.len(), 3003);
+    assert_eq!(ds.test.len(), 3003);
+    assert_eq!(ds.calibration().len(), 600);
+    ds.cross_check(&DataConfig::default(), 200).unwrap();
+}
+
+fn pad(batch: &[&quantnmt::data::Pair], len: usize) -> Vec<Vec<u32>> {
+    batch
+        .iter()
+        .map(|p| {
+            let mut s = p.src.clone();
+            s.resize(len.max(s.len()), quantnmt::specials::PAD_ID);
+            s
+        })
+        .collect()
+}
+
+fn engine_bleu(engine: &mut Engine, ds: &Dataset, n: usize) -> f64 {
+    let mut hyps = Vec::new();
+    let mut refs = Vec::new();
+    for chunk in ds.test[..n].chunks(32) {
+        let refs_chunk: Vec<&quantnmt::data::Pair> = chunk.iter().collect();
+        let max_len = refs_chunk.iter().map(|p| p.src.len()).max().unwrap();
+        let src = pad(&refs_chunk, max_len);
+        let out = engine.translate_greedy(&src, 56);
+        for (o, p) in out.into_iter().zip(chunk) {
+            hyps.push(o);
+            refs.push(strip_special(&p.ref_ids));
+        }
+    }
+    corpus_bleu(&hyps, &refs)
+}
+
+#[test]
+fn fp32_engine_reaches_training_bleu() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = ModelConfig::load(&dir.join("config.json")).unwrap();
+    let w = Weights::load(&dir).unwrap();
+    let mut e = Engine::fp32(cfg, w).unwrap();
+    let ds = Dataset::load(&dir.join("dataset.json")).unwrap();
+    let bleu = engine_bleu(&mut e, &ds, 128);
+    // python-side sanity BLEU was ~97; allow engine/runtime numerics slack
+    assert!(bleu > 90.0, "fp32 engine BLEU {bleu}");
+}
+
+#[test]
+fn int8_modes_stay_within_accuracy_envelope() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = ModelConfig::load(&dir.join("config.json")).unwrap();
+    let ds = Dataset::load(&dir.join("dataset.json")).unwrap();
+    let table = SiteTable::load(&dir.join("calibration.json")).unwrap();
+    let w = Weights::load(&dir).unwrap();
+
+    let mut fp32 = Engine::fp32(cfg.clone(), w.clone()).unwrap();
+    let base = engine_bleu(&mut fp32, &ds, 96);
+
+    for mode in [CalibrationMode::Symmetric, CalibrationMode::Independent, CalibrationMode::Conjugate] {
+        let mut e = Engine::int8(cfg.clone(), w.clone(), &table, mode, false).unwrap();
+        assert!(e.quantized_site_count() > 30, "{mode:?} plan too small");
+        let bleu = engine_bleu(&mut e, &ds, 96);
+        // paper: <0.5% drop; we allow 3 BLEU of slack on the small subset
+        assert!(
+            bleu > base - 3.0,
+            "{mode:?} BLEU {bleu} vs fp32 {base}"
+        );
+    }
+}
+
+#[test]
+fn calibration_census_has_sparse_sites() {
+    let Some(dir) = artifacts() else { return };
+    let table = SiteTable::load(&dir.join("calibration.json")).unwrap();
+    let census = table.class_census();
+    // the paper found 12/97 sparse; our model shows the same pattern
+    assert!(*census.get("sparse").unwrap_or(&0) > 0, "{census:?}");
+    assert!(*census.get("gaussian").unwrap_or(&0) > 20, "{census:?}");
+}

@@ -1,0 +1,186 @@
+//! Integration tests over the batching pipeline + coordinator without
+//! requiring artifacts: synthetic corpus + a stub translate function.
+
+use quantnmt::data::sorting::{sort_indices, SortOrder};
+use quantnmt::data::synthetic::Generator;
+use quantnmt::data::vocab::DataConfig;
+use quantnmt::pipeline::batch::{make_batches, Batch};
+use quantnmt::pipeline::parallel::{run_parallel, run_serial};
+use quantnmt::specials::EOS_ID;
+
+/// The ground-truth translation as the stub "model".
+fn oracle_translate(generator: &Generator, b: &Batch) -> Vec<Vec<u32>> {
+    b.src
+        .iter()
+        .map(|row| {
+            let content: Vec<u32> = row
+                .iter()
+                .copied()
+                .take_while(|&t| t != EOS_ID)
+                .filter(|&t| t != 0)
+                .collect();
+            generator.translate(&content)
+        })
+        .collect()
+}
+
+#[test]
+fn end_to_end_pipeline_translates_correctly_in_any_order() {
+    let generator = Generator::new(DataConfig::default());
+    let pairs = generator.split(41, 300);
+    for order_kind in [SortOrder::Unsorted, SortOrder::Words, SortOrder::Tokens] {
+        let order = sort_indices(&pairs, order_kind);
+        let batches = make_batches(&pairs, &order, 32);
+        let report = run_parallel(batches, 3, false, |_| {
+            let generator = Generator::new(DataConfig::default());
+            move |b: &Batch| oracle_translate(&generator, b)
+        });
+        assert_eq!(report.sentences, 300);
+        // every output must equal the reference translation
+        for (idx, out) in &report.outputs {
+            let expect: Vec<u32> = pairs[*idx].ref_ids[..pairs[*idx].ref_ids.len() - 1].to_vec();
+            assert_eq!(out, &expect, "order {order_kind:?} idx {idx}");
+        }
+    }
+}
+
+#[test]
+fn parallel_and_serial_agree() {
+    let generator = Generator::new(DataConfig::default());
+    let pairs = generator.split(43, 200);
+    let order = sort_indices(&pairs, SortOrder::Tokens);
+    let batches = make_batches(&pairs, &order, 16);
+
+    let serial = run_serial(&batches, |b| oracle_translate(&generator, b));
+    let parallel = run_parallel(batches, 4, false, |_| {
+        let generator = Generator::new(DataConfig::default());
+        move |b: &Batch| oracle_translate(&generator, b)
+    });
+    let mut s: Vec<_> = serial.outputs.clone();
+    let mut p: Vec<_> = parallel.outputs.clone();
+    s.sort();
+    p.sort();
+    assert_eq!(s, p);
+}
+
+#[test]
+fn sorted_order_reduces_padded_token_count() {
+    let pairs = Generator::new(DataConfig::default()).split(47, 1024);
+    let padded_total = |order: SortOrder| -> usize {
+        let idx = sort_indices(&pairs, order);
+        make_batches(&pairs, &idx, 64)
+            .iter()
+            .map(|b| b.len() * b.max_len)
+            .sum()
+    };
+    let unsorted = padded_total(SortOrder::Unsorted);
+    let words = padded_total(SortOrder::Words);
+    let tokens = padded_total(SortOrder::Tokens);
+    assert!(tokens < words, "{tokens} vs {words}");
+    assert!(words < unsorted, "{words} vs {unsorted}");
+}
+
+#[test]
+fn stream_reports_cover_all_batches() {
+    let pairs = Generator::new(DataConfig::default()).split(53, 100);
+    let order: Vec<usize> = (0..pairs.len()).collect();
+    let batches = make_batches(&pairs, &order, 8);
+    let n_batches = batches.len();
+    let report = run_parallel(batches, 4, false, |_| {
+        move |b: &Batch| b.src.clone()
+    });
+    let total: usize = report.streams.iter().map(|s| s.batches).sum();
+    assert_eq!(total, n_batches);
+    assert!(report.utilization() >= 0.0 && report.utilization() <= 1.0);
+}
+
+// ---------------------------------------------------------------------------
+// cross-layer consistency checks
+// ---------------------------------------------------------------------------
+
+#[test]
+fn graph_ir_matmul_census_matches_engine_sites() {
+    use quantnmt::graph::ir::{transformer_graph, GraphConfig};
+    use quantnmt::graph::Op;
+    use quantnmt::model::ModelConfig;
+    let cfg = ModelConfig::default();
+    let g = transformer_graph(GraphConfig {
+        n_enc_layers: cfg.n_enc_layers,
+        n_dec_layers: cfg.n_dec_layers,
+        gathers_per_dec_layer: 4,
+    });
+    // the graph IR counts decoder self+cross per full layer like the
+    // engine's site list; both must agree on the MatMul census
+    assert_eq!(
+        g.count_op(&Op::MatMul),
+        cfg.matmul_site_names().len(),
+        "graph IR and engine disagree on the MatMul census"
+    );
+}
+
+#[test]
+fn quantization_plan_census_is_stable() {
+    // resolved plans must cover every site exactly once per mode
+    use quantnmt::quant::calibrate::{CalibrationMode, SiteCalibration, SiteTable};
+    use quantnmt::quant::histogram::Histogram;
+    use quantnmt::util::rng::SplitMix64;
+    let mut table = SiteTable::default();
+    let mut rng = SplitMix64::new(4);
+    let cfg = quantnmt::model::ModelConfig::default();
+    for site in cfg.matmul_site_names() {
+        let data: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+        let mut h = Histogram::new(256);
+        h.observe_range(&data);
+        h.observe_fill(&data);
+        table
+            .sites
+            .insert(site.clone(), SiteCalibration::from_histogram(&site, &h, 64));
+        if cfg.weight_for_site(&site).is_some() {
+            table.weight_scales.insert(site, 0.01);
+        } else {
+            // dynamic sites need a B-side entry
+            let mut hb = Histogram::new(256);
+            hb.observe_range(&data);
+            hb.observe_fill(&data);
+            table.sites.insert(
+                format!("{}.b", cfg.matmul_site_names().last().unwrap()),
+                SiteCalibration::from_histogram("b", &hb, 64),
+            );
+        }
+    }
+    for mode in CalibrationMode::all() {
+        let plan = table.plan(mode, false);
+        // every non-.b site appears in the plan
+        for site in cfg.matmul_site_names() {
+            assert!(plan.contains_key(&site), "{mode:?} missing {site}");
+        }
+    }
+}
+
+#[test]
+fn service_label_roundtrip_distinctness() {
+    use quantnmt::coordinator::{Backend, ServiceConfig};
+    use quantnmt::data::sorting::SortOrder;
+    use quantnmt::quant::calibrate::CalibrationMode;
+    use quantnmt::runtime::RtPrecision;
+    let mut labels = std::collections::HashSet::new();
+    for backend in [
+        Backend::EngineF32,
+        Backend::EngineInt8(CalibrationMode::Symmetric),
+        Backend::EngineInt8(CalibrationMode::Naive),
+        Backend::Runtime(RtPrecision::Fp32),
+        Backend::Runtime(RtPrecision::Int8),
+    ] {
+        for sort in [SortOrder::Unsorted, SortOrder::Words, SortOrder::Tokens] {
+            for parallel in [false, true] {
+                let cfg = ServiceConfig {
+                    backend,
+                    sort,
+                    parallel,
+                    ..Default::default()
+                };
+                assert!(labels.insert(cfg.label()), "duplicate label {}", cfg.label());
+            }
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Integration tests for the AOT/PJRT fast path against the Rust engine:
+//! both backends must produce the same translations from the same
+//! weights (the critical three-layer-composition check).
+//!
+//! Skipped when artifacts are absent.
+
+use quantnmt::coordinator::{Backend, Service, ServiceConfig};
+use quantnmt::quant::calibrate::CalibrationMode;
+use quantnmt::runtime::{ArtifactIndex, RtPrecision, TranslateExecutable};
+
+fn service() -> Option<Service> {
+    let dir = quantnmt::default_artifacts_dir();
+    if !dir.join("hlo_index.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return None;
+    }
+    Some(Service::open(dir).unwrap())
+}
+
+#[test]
+fn engine_and_pjrt_fp32_agree_on_translations() {
+    let Some(svc) = service() else { return };
+    let ds = svc.dataset().unwrap();
+    let pairs = &ds.test[..48];
+    let mk = |backend| ServiceConfig {
+        backend,
+        parallel: false,
+        batch_size: 16,
+        ..Default::default()
+    };
+    let (me, out_engine) = svc.run(pairs, &mk(Backend::EngineF32)).unwrap();
+    let (mp, out_pjrt) = svc
+        .run(pairs, &mk(Backend::Runtime(RtPrecision::Fp32)))
+        .unwrap();
+    // numerics differ in summation order; translations must agree on
+    // the overwhelming majority of sentences and BLEU must match closely
+    let agree = out_engine
+        .iter()
+        .zip(&out_pjrt)
+        .filter(|(a, b)| a == b)
+        .count();
+    assert!(
+        agree * 100 >= pairs.len() * 90,
+        "only {agree}/{} translations agree",
+        pairs.len()
+    );
+    assert!((me.bleu - mp.bleu).abs() < 3.0, "{} vs {}", me.bleu, mp.bleu);
+}
+
+#[test]
+fn pjrt_int8_stays_within_accuracy_envelope() {
+    let Some(svc) = service() else { return };
+    let ds = svc.dataset().unwrap();
+    let pairs = &ds.test[..48];
+    let mk = |backend| ServiceConfig {
+        backend,
+        parallel: false,
+        batch_size: 16,
+        ..Default::default()
+    };
+    let (mf, _) = svc
+        .run(pairs, &mk(Backend::Runtime(RtPrecision::Fp32)))
+        .unwrap();
+    let (mq, _) = svc
+        .run(pairs, &mk(Backend::Runtime(RtPrecision::Int8)))
+        .unwrap();
+    assert!(mq.bleu > mf.bleu - 3.0, "int8 {} vs fp32 {}", mq.bleu, mf.bleu);
+}
+
+#[test]
+fn pjrt_int8_matches_engine_int8_symmetric() {
+    let Some(svc) = service() else { return };
+    let ds = svc.dataset().unwrap();
+    let pairs = &ds.test[..32];
+    let mk = |backend| ServiceConfig {
+        backend,
+        parallel: false,
+        batch_size: 16,
+        ..Default::default()
+    };
+    // both implement the same symmetric-mode quantized graph
+    let (_, a) = svc
+        .run(pairs, &mk(Backend::EngineInt8(CalibrationMode::Symmetric)))
+        .unwrap();
+    let (_, b) = svc
+        .run(pairs, &mk(Backend::Runtime(RtPrecision::Int8)))
+        .unwrap();
+    let agree = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+    assert!(
+        agree * 100 >= pairs.len() * 85,
+        "only {agree}/{} int8 translations agree",
+        pairs.len()
+    );
+}
+
+#[test]
+fn bucket_padding_is_transparent() {
+    // translating 3 sentences through a b16 bucket must equal 3x b1 runs
+    let Some(svc) = service() else { return };
+    let ds = svc.dataset().unwrap();
+    let idx = ArtifactIndex::load(&svc.dir).unwrap();
+    let b16 = idx.select(RtPrecision::Fp32, 16).unwrap();
+    let b1 = idx.select(RtPrecision::Fp32, 1).unwrap();
+    if b16.batch == b1.batch {
+        return;
+    }
+    let exe16 = TranslateExecutable::compile(b16).unwrap();
+    let exe1 = TranslateExecutable::compile(b1).unwrap();
+    let batch: Vec<Vec<u32>> = ds.test[..3].iter().map(|p| p.src.clone()).collect();
+    let out16 = exe16.translate(&batch).unwrap();
+    for (i, row) in batch.iter().enumerate() {
+        let out1 = exe1.translate(std::slice::from_ref(row)).unwrap();
+        assert_eq!(out16[i], out1[0], "row {i}");
+    }
+}
+
+#[test]
+fn parallel_pjrt_streams_work() {
+    let Some(svc) = service() else { return };
+    let ds = svc.dataset().unwrap();
+    let pairs = &ds.test[..48];
+    let cfg = ServiceConfig {
+        backend: Backend::Runtime(RtPrecision::Fp32),
+        parallel: true,
+        streams: 2,
+        pin_cores: false,
+        batch_size: 16,
+        ..Default::default()
+    };
+    let (m, outputs) = svc.run(pairs, &cfg).unwrap();
+    assert_eq!(outputs.len(), 48);
+    assert!(m.bleu > 90.0, "BLEU {}", m.bleu);
+}
