@@ -1,5 +1,8 @@
 //! Quickstart: load the trained artifacts and translate a few sentences
-//! with both precisions and both backends.
+//! with both precisions and both backends, then show how a batching
+//! policy is selected (`ServiceConfig { policy, token_budget, .. }` —
+//! the CLI equivalent is `--policy fixed|token-budget|bin-pack
+//! --token-budget N`).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
@@ -13,6 +16,7 @@
 use quantnmt::coordinator::{Backend, Service, ServiceConfig};
 use quantnmt::data::bleu::strip_special;
 use quantnmt::data::Lexicon;
+use quantnmt::pipeline::policy::PolicyKind;
 use quantnmt::quant::calibrate::CalibrationMode;
 use quantnmt::runtime::RtPrecision;
 
@@ -55,6 +59,28 @@ fn main() -> anyhow::Result<()> {
             pairs.len(),
             metrics.bleu,
             metrics.sentences_per_sec()
+        );
+    }
+
+    // batching-policy selection: the same run under each batch shaper
+    // (short corpora show fill-ratio differences, not speed)
+    println!("\nbatching policies (engine-int8-symmetric, 16 sentences):");
+    let policy_pairs: Vec<_> = ds.test[..16].to_vec();
+    for policy in PolicyKind::all() {
+        let cfg = ServiceConfig {
+            backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+            parallel: false,
+            batch_size: 8,
+            policy,
+            token_budget: 128,
+            ..Default::default()
+        };
+        let (m, _) = svc.run(&policy_pairs, &cfg)?;
+        println!(
+            "  [{:12}] fill {:>5.1}%  {} batches",
+            policy.as_str(),
+            m.fill_ratio() * 100.0,
+            m.batch_latency.count()
         );
     }
 

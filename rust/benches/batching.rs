@@ -1,15 +1,22 @@
-//! Figure 6 reproduction: serial vs parallel batch execution.
+//! Figure 6/8a reproduction: batching policy x sort order sweep, plus
+//! the serial-vs-parallel stream ladder.
 //!
 //! The paper's parent/children parallel-batching design lifted
 //! throughput 43% by overlapping long- and short-sentence batches
-//! across affinitized streams.  We run the same corpus serially and
-//! with 2/4/8 parallel streams and report throughput + utilization.
+//! across affinitized streams, and its bin-packing batch shaping
+//! maximizes the fill of every padded batch.  We sweep the three
+//! batching policies (fixed-count, token-budget greedy, bin-pack FFD)
+//! against the three §5.4 sort orders and report fill ratio and
+//! sentences/sec per cell, then run the stream-count ladder under the
+//! best policy.
 //!
 //! ```bash
-//! cargo bench --bench batching
+//! cargo bench --bench batching [-- --quick]
 //! ```
 
 use quantnmt::coordinator::{Backend, Service, ServiceConfig};
+use quantnmt::data::sorting::SortOrder;
+use quantnmt::pipeline::policy::PolicyKind;
 use quantnmt::quant::calibrate::CalibrationMode;
 
 fn main() -> anyhow::Result<()> {
@@ -19,11 +26,47 @@ fn main() -> anyhow::Result<()> {
     let n = if quick { 256 } else { 1024.min(ds.test.len()) };
     let pairs = &ds.test[..n];
 
-    println!("corpus: {n} sentences, batch 64, INT8 engine\n");
+    // --- policy x sort sweep (Fig 8a style: fill ratio + sent/s) ----
+    println!("corpus: {n} sentences, batch cap 64, token budget 1024, INT8 engine, 2 streams\n");
+    println!(
+        "{:14} {:>22} {:>22} {:>22}",
+        "policy \\ sort", "unsorted", "word-sorted", "token-sorted"
+    );
+    for policy in PolicyKind::all() {
+        let mut cells = Vec::new();
+        for sort in [SortOrder::Unsorted, SortOrder::Words, SortOrder::Tokens] {
+            let cfg = ServiceConfig {
+                backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+                sort,
+                policy,
+                batch_size: 64,
+                streams: 2,
+                parallel: true,
+                ..Default::default()
+            };
+            let (m, _) = svc.run(pairs, &cfg)?;
+            cells.push(format!(
+                "fill {:>5.1}% {:>7.1}/s",
+                m.fill_ratio() * 100.0,
+                m.sentences_per_sec()
+            ));
+        }
+        println!(
+            "{:14} {:>22} {:>22} {:>22}",
+            policy.as_str(),
+            cells[0],
+            cells[1],
+            cells[2]
+        );
+    }
+
+    // --- stream ladder under the bin-pack policy (Fig 6) ------------
+    println!("\nstream ladder (bin-pack, token-sorted):");
     let mut serial_rate = None;
     for (parallel, streams) in [(false, 1), (true, 2), (true, 4), (true, 8)] {
         let cfg = ServiceConfig {
             backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+            policy: PolicyKind::BinPack,
             parallel,
             streams,
             batch_size: 64,
@@ -35,5 +78,6 @@ fn main() -> anyhow::Result<()> {
         println!("{}   x{:.2}", m.row(), rate / base);
     }
     println!("\npaper Fig 6: parallel batching +43% over serial");
+    println!("regenerate the EXPERIMENTS.md table with: cargo bench --bench batching");
     Ok(())
 }

@@ -56,7 +56,10 @@ impl LatencyStats {
 pub struct RunMetrics {
     pub config: String,
     pub sentences: usize,
+    /// real (non-pad) tokens processed
     pub tokens: usize,
+    /// padded matrix area processed (`sum rows x max_len` over batches)
+    pub padded_tokens: usize,
     pub wall_secs: f64,
     pub batch_latency: LatencyStats,
     pub utilization: f64,
@@ -71,13 +74,23 @@ impl RunMetrics {
         self.sentences as f64 / self.wall_secs
     }
 
+    /// Aggregate padding efficiency: real tokens / padded tokens over
+    /// the whole run (1.0 = the batching policy wasted nothing).
+    pub fn fill_ratio(&self) -> f64 {
+        if self.padded_tokens == 0 {
+            return 0.0;
+        }
+        self.tokens as f64 / self.padded_tokens as f64
+    }
+
     /// Table row for the bench reports.
     pub fn row(&self) -> String {
         format!(
-            "{:44} {:>8.2} sent/s  {:>7.1} tok/s  util {:>5.1}%  p50 {:>7.1}ms  p95 {:>7.1}ms  BLEU {:>6.2}",
+            "{:44} {:>8.2} sent/s  {:>7.1} tok/s  fill {:>5.1}%  util {:>5.1}%  p50 {:>7.1}ms  p95 {:>7.1}ms  BLEU {:>6.2}",
             self.config,
             self.sentences_per_sec(),
             self.tokens as f64 / self.wall_secs.max(1e-9),
+            self.fill_ratio() * 100.0,
             self.utilization * 100.0,
             self.batch_latency.p50() * 1e3,
             self.batch_latency.p95() * 1e3,
@@ -127,13 +140,32 @@ mod tests {
             config: "int8 2-streams token-sorted".into(),
             sentences: 100,
             tokens: 2000,
+            padded_tokens: 2500,
             wall_secs: 2.0,
             batch_latency: LatencyStats::default(),
             utilization: 0.8,
             bleu: 97.5,
         };
         assert_eq!(m.sentences_per_sec(), 50.0);
+        assert!((m.fill_ratio() - 0.8).abs() < 1e-12);
         assert!(m.row().contains("50.00 sent/s"));
+        assert!(m.row().contains("fill  80.0%"));
         assert!(m.row().contains("BLEU  97.50"));
+    }
+
+    #[test]
+    fn fill_ratio_of_empty_run_is_zero() {
+        let m = RunMetrics {
+            config: "empty".into(),
+            sentences: 0,
+            tokens: 0,
+            padded_tokens: 0,
+            wall_secs: 0.0,
+            batch_latency: LatencyStats::default(),
+            utilization: 0.0,
+            bleu: 0.0,
+        };
+        assert_eq!(m.fill_ratio(), 0.0);
+        assert_eq!(m.sentences_per_sec(), 0.0);
     }
 }

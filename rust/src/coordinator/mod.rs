@@ -1,9 +1,10 @@
 //! The translation-service coordinator (Layer 3 tie-together).
 //!
 //! Owns the serving configuration — precision, backend (instrumented
-//! engine vs AOT/PJRT fast path), input ordering, batch size, stream
-//! count — and drives the pipeline end to end: order -> batch ->
-//! queue -> parallel streams -> BLEU/throughput/latency metrics.
+//! engine vs AOT/PJRT fast path), input ordering, batching policy
+//! (fixed-count / token-budget / bin-pack) and stream count — and
+//! drives the pipeline end to end: order -> policy-shaped batches ->
+//! queue -> parallel streams -> BLEU/throughput/latency/fill metrics.
 //!
 //! * [`service`] — [`service::Service`]: configuration + corpus runs;
 //! * [`metrics`] — latency/throughput accounting.

@@ -2,8 +2,9 @@
 //!
 //! A [`Service`] resolves the artifacts directory once (weights,
 //! calibration, datasets, AOT index) and then executes *runs*: given a
-//! corpus and a [`ServiceConfig`] (backend, precision, sorting, batch
-//! size, streams, pinning), it produces translations plus
+//! corpus and a [`ServiceConfig`] (backend, precision, sorting,
+//! batching policy + batch size/token budget, streams, pinning), it
+//! produces translations plus
 //! [`RunMetrics`].  This is the entry point `main.rs`, the examples and
 //! the Fig 6/8 benches all share, so every number in EXPERIMENTS.md
 //! flows through one code path.
@@ -17,8 +18,9 @@ use crate::data::bleu::{corpus_bleu, strip_special};
 use crate::data::dataset::{Dataset, Pair};
 use crate::data::sorting::{sort_indices, SortOrder};
 use crate::model::{Engine, ModelConfig, Weights};
-use crate::pipeline::batch::{make_batches, Batch};
+use crate::pipeline::batch::Batch;
 use crate::pipeline::parallel::{run_parallel, run_serial, ThroughputReport};
+use crate::pipeline::policy::{BatchPolicy, PolicyKind};
 use crate::quant::calibrate::{CalibrationMode, SiteTable};
 use crate::runtime::{ArtifactIndex, RtPrecision, TranslateExecutable};
 
@@ -43,12 +45,22 @@ impl Backend {
     }
 }
 
+/// Default padded-token budget for the budget batching policies
+/// (~64 rows x 16 tokens, comparable capacity to `batch_size: 64`).
+pub const DEFAULT_TOKEN_BUDGET: usize = 1024;
+
 /// One run's configuration (a bar in Fig 8).
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     pub backend: Backend,
     pub sort: SortOrder,
+    /// rows per batch (`FixedCount`), and the row cap for the budget
+    /// policies (AOT buckets are compiled per row count)
     pub batch_size: usize,
+    /// how batches are shaped from the ordered corpus
+    pub policy: PolicyKind,
+    /// padded-token budget per batch (`TokenBudget`/`BinPack` only)
+    pub token_budget: usize,
     pub streams: usize,
     /// parallel batching on/off (§5.6); off = serial baseline
     pub parallel: bool,
@@ -62,6 +74,8 @@ impl Default for ServiceConfig {
             backend: Backend::EngineInt8(CalibrationMode::Symmetric),
             sort: SortOrder::Tokens,
             batch_size: 64,
+            policy: PolicyKind::FixedCount,
+            token_budget: DEFAULT_TOKEN_BUDGET,
             streams: 2,
             parallel: true,
             pin_cores: true,
@@ -71,12 +85,23 @@ impl Default for ServiceConfig {
 }
 
 impl ServiceConfig {
+    /// Instantiate this config's batching policy.
+    pub fn make_policy(&self) -> Box<dyn BatchPolicy> {
+        self.policy.build(self.batch_size, self.token_budget)
+    }
+
     pub fn label(&self) -> String {
+        // the default FixedCount path keeps the historical label
+        let policy = match self.policy {
+            PolicyKind::FixedCount => String::new(),
+            p => format!(" {}@{}", p.as_str(), self.token_budget),
+        };
         format!(
-            "{} {} b{} {}{}",
+            "{} {} b{}{} {}{}",
             self.backend.label(),
             self.sort.as_str(),
             self.batch_size,
+            policy,
             if self.parallel {
                 format!("{}-streams", self.streams)
             } else {
@@ -174,7 +199,7 @@ impl Service {
         cfg: &ServiceConfig,
     ) -> anyhow::Result<(RunMetrics, Vec<Vec<u32>>)> {
         let order = sort_indices(pairs, cfg.sort);
-        let batches = make_batches(pairs, &order, cfg.batch_size);
+        let batches = cfg.make_policy().pack(pairs, &order);
         let latencies = Mutex::new(LatencyStats::default());
         let max_len = cfg.max_decode_len;
 
@@ -246,6 +271,7 @@ impl Service {
             config: cfg.label(),
             sentences: report.sentences,
             tokens: report.tokens,
+            padded_tokens: report.padded_tokens,
             wall_secs: report.wall_secs,
             batch_latency: latencies.into_inner().unwrap(),
             utilization: report.utilization(),
@@ -316,5 +342,44 @@ mod tests {
         }
         .label();
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn default_label_has_no_policy_suffix() {
+        // the FixedCount default keeps the historical label text
+        let label = ServiceConfig::default().label();
+        assert!(!label.contains("fixed"), "{label}");
+        assert!(!label.contains('@'), "{label}");
+        let budget = ServiceConfig {
+            policy: PolicyKind::BinPack,
+            token_budget: 512,
+            ..Default::default()
+        }
+        .label();
+        assert!(budget.contains("bin-pack@512"), "{budget}");
+    }
+
+    #[test]
+    fn policy_run_translates_same_outputs_as_fixed() {
+        let Some(svc) = service() else { return };
+        let ds = svc.dataset().unwrap();
+        let fixed = ServiceConfig {
+            backend: Backend::EngineF32,
+            parallel: false,
+            batch_size: 16,
+            ..Default::default()
+        };
+        let packed = ServiceConfig {
+            policy: PolicyKind::BinPack,
+            token_budget: 256,
+            ..fixed.clone()
+        };
+        let (mf, out_f) = svc.run(&ds.test[..32], &fixed).unwrap();
+        let (mp, out_p) = svc.run(&ds.test[..32], &packed).unwrap();
+        assert_eq!(out_f, out_p, "batch shaping must not change results");
+        // both runs report padding efficiency (the unsorted-corpus
+        // fill superiority is asserted in pipeline::policy tests)
+        assert!(mf.fill_ratio() > 0.0 && mf.fill_ratio() <= 1.0);
+        assert!(mp.fill_ratio() > 0.0 && mp.fill_ratio() <= 1.0);
     }
 }

@@ -21,7 +21,8 @@
 //!   and the per-op profiler behind Fig 7;
 //! * [`data`] — vocabulary, the synthetic parallel corpus standing in
 //!   for WMT/newstest2014, corpus BLEU, and §5.4 sentence sorting;
-//! * [`pipeline`] — batch construction, the batch queue and the §5.6
+//! * [`pipeline`] — pluggable batching policies (fixed-count,
+//!   token-budget, bin-packing), the batch queue and the §5.6
 //!   parallel-stream executor (Fig 6);
 //! * [`runtime`] — the PJRT fast path: loads the AOT-compiled HLO
 //!   executables produced by `python/compile/aot.py`;

@@ -13,10 +13,14 @@
 //!
 //! Common flags: `--artifacts DIR`, `--backend engine-fp32|engine-int8|pjrt-fp32|pjrt-int8`,
 //! `--mode naive|symmetric|independent|conjugate`, `--batch N`, `--streams N`,
-//! `--sort unsorted|words|tokens`, `--serial`, `--no-pin`, `--limit N`.
+//! `--sort unsorted|words|tokens`, `--policy fixed|token-budget|bin-pack`,
+//! `--token-budget N` (padded-token budget per batch for the budget
+//! policies), `--serial`, `--no-pin`, `--limit N`.
 
+use quantnmt::coordinator::service::DEFAULT_TOKEN_BUDGET;
 use quantnmt::coordinator::{Backend, Service, ServiceConfig};
 use quantnmt::data::sorting::SortOrder;
+use quantnmt::pipeline::policy::PolicyKind;
 use quantnmt::quant::calibrate::CalibrationMode;
 use quantnmt::runtime::RtPrecision;
 use quantnmt::util::cli::Args;
@@ -37,6 +41,7 @@ fn parse_backend(args: &Args) -> Backend {
 }
 
 fn parse_config(args: &Args) -> ServiceConfig {
+    let policy = PolicyKind::parse_or(args.get("policy"), PolicyKind::FixedCount);
     ServiceConfig {
         backend: parse_backend(args),
         sort: match args.get_or("sort", "tokens") {
@@ -45,6 +50,8 @@ fn parse_config(args: &Args) -> ServiceConfig {
             _ => SortOrder::Tokens,
         },
         batch_size: args.get_usize("batch", 64),
+        policy,
+        token_budget: args.get_usize("token-budget", DEFAULT_TOKEN_BUDGET),
         streams: args.get_usize("streams", 2),
         parallel: !args.flag("serial"),
         pin_cores: !args.flag("no-pin"),
@@ -175,6 +182,15 @@ fn cmd_ladder(args: &Args) -> anyhow::Result<()> {
             sort: SortOrder::Tokens,
             streams: 4,
             parallel: true,
+            ..Default::default()
+        },
+        // + bin-packing batch shaping (the paper's §5.6 technique)
+        ServiceConfig {
+            backend: Backend::EngineInt8(mode),
+            sort: SortOrder::Tokens,
+            streams: 4,
+            parallel: true,
+            policy: PolicyKind::BinPack,
             ..Default::default()
         },
     ];

@@ -2,13 +2,15 @@
 //!
 //! Sentences are packed in the given order into fixed-size batches;
 //! each batch is padded to its own longest sentence (the per-batch
-//! padding the §5.4 sorting minimizes).
+//! padding the §5.4 sorting minimizes).  `make_batches` is the legacy
+//! fixed-count packer; [`super::policy`] wraps it as one of several
+//! pluggable batching policies.
 
 use crate::data::dataset::Pair;
 use crate::specials::PAD_ID;
 
 /// One padded inference batch.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Batch {
     /// batch id (queue order)
     pub id: usize,
@@ -31,38 +33,50 @@ impl Batch {
         self.src.is_empty()
     }
 
+    /// Size of the padded matrix (`rows x max_len`) — what the engine
+    /// actually computes over, real tokens or not.
+    pub fn padded_tokens(&self) -> usize {
+        self.len() * self.max_len
+    }
+
     /// Fraction of the padded matrix that is real tokens.
     pub fn fill_ratio(&self) -> f64 {
         if self.src.is_empty() || self.max_len == 0 {
             return 0.0;
         }
-        self.tokens as f64 / (self.len() * self.max_len) as f64
+        self.tokens as f64 / self.padded_tokens() as f64
+    }
+}
+
+/// Pad one group of corpus indices into a [`Batch`] (the single
+/// batch-materialization point shared by every batching policy).
+pub fn pad_batch(pairs: &[Pair], id: usize, indices: Vec<usize>) -> Batch {
+    let max_len = indices.iter().map(|&i| pairs[i].src.len()).max().unwrap_or(0);
+    let mut src = Vec::with_capacity(indices.len());
+    let mut tokens = 0;
+    for &i in &indices {
+        let mut row = pairs[i].src.clone();
+        tokens += row.len();
+        row.resize(max_len, PAD_ID);
+        src.push(row);
+    }
+    Batch {
+        id,
+        indices,
+        src,
+        max_len,
+        tokens,
     }
 }
 
 /// Pack `order` (corpus indices) into padded batches of `batch_size`.
 pub fn make_batches(pairs: &[Pair], order: &[usize], batch_size: usize) -> Vec<Batch> {
     assert!(batch_size > 0);
-    let mut out = Vec::new();
-    for (id, chunk) in order.chunks(batch_size).enumerate() {
-        let max_len = chunk.iter().map(|&i| pairs[i].src.len()).max().unwrap_or(0);
-        let mut src = Vec::with_capacity(chunk.len());
-        let mut tokens = 0;
-        for &i in chunk {
-            let mut row = pairs[i].src.clone();
-            tokens += row.len();
-            row.resize(max_len, PAD_ID);
-            src.push(row);
-        }
-        out.push(Batch {
-            id,
-            indices: chunk.to_vec(),
-            src,
-            max_len,
-            tokens,
-        });
-    }
-    out
+    order
+        .chunks(batch_size)
+        .enumerate()
+        .map(|(id, chunk)| pad_batch(pairs, id, chunk.to_vec()))
+        .collect()
 }
 
 #[cfg(test)]

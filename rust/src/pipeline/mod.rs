@@ -10,13 +10,18 @@
 //! the CPU utilization that serial execution leaves idle (Fig 6).
 //!
 //! * [`batch`]    — padded-batch construction from an ordered corpus;
+//! * [`policy`]   — pluggable batching policies: fixed-count,
+//!   token-budget greedy fill, and first-fit-decreasing bin-packing
+//!   (the paper's bin-packing parallel batching);
 //! * [`queue`]    — the bounded MPMC batch queue (condvar-based);
 //! * [`parallel`] — serial vs parallel stream executors + affinity.
 
 pub mod batch;
 pub mod parallel;
+pub mod policy;
 pub mod queue;
 
 pub use batch::{make_batches, Batch};
 pub use parallel::{run_parallel, run_serial, StreamReport, ThroughputReport};
+pub use policy::{aggregate_fill, BatchPolicy, BinPack, FixedCount, PolicyKind, TokenBudget};
 pub use queue::BatchQueue;

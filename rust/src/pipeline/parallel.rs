@@ -44,6 +44,9 @@ pub struct StreamReport {
     pub batches: usize,
     pub sentences: usize,
     pub tokens: usize,
+    /// padded matrix area actually computed (`sum rows x max_len`) —
+    /// the denominator of the batching policy's fill ratio
+    pub padded_tokens: usize,
     pub busy_secs: f64,
 }
 
@@ -55,6 +58,8 @@ pub struct ThroughputReport {
     pub wall_secs: f64,
     pub sentences: usize,
     pub tokens: usize,
+    /// total padded matrix area across all batches
+    pub padded_tokens: usize,
     /// corpus-index -> translation
     pub outputs: Vec<(usize, Vec<u32>)>,
 }
@@ -66,6 +71,16 @@ impl ThroughputReport {
 
     pub fn tokens_per_sec(&self) -> f64 {
         self.tokens as f64 / self.wall_secs
+    }
+
+    /// Fraction of the computed padded area that was real tokens —
+    /// the quantity the batching policies (token-budget / bin-pack)
+    /// maximize upstream of the streams.
+    pub fn fill_ratio(&self) -> f64 {
+        if self.padded_tokens == 0 {
+            return 0.0;
+        }
+        self.tokens as f64 / self.padded_tokens as f64
     }
 
     /// Mean fraction of wall time the streams were busy (utilization —
@@ -129,12 +144,14 @@ where
     let mut busy = 0.0;
     let mut sentences = 0;
     let mut tokens = 0;
+    let mut padded_tokens = 0;
     for b in batches {
         let bt = Instant::now();
         let outs = translate(b);
         busy += bt.elapsed().as_secs_f64();
         sentences += b.len();
         tokens += b.tokens;
+        padded_tokens += b.padded_tokens();
         for (idx, o) in b.indices.iter().zip(outs) {
             outputs.push((*idx, o));
         }
@@ -147,11 +164,13 @@ where
             batches: batches.len(),
             sentences,
             tokens,
+            padded_tokens,
             busy_secs: busy,
         }],
         wall_secs: wall,
         sentences,
         tokens,
+        padded_tokens,
         outputs,
     }
 }
@@ -190,6 +209,7 @@ where
                     batches: 0,
                     sentences: 0,
                     tokens: 0,
+                    padded_tokens: 0,
                     busy_secs: 0.0,
                 };
                 while let Some(batch) = queue.pop() {
@@ -199,6 +219,7 @@ where
                     rep.batches += 1;
                     rep.sentences += batch.len();
                     rep.tokens += batch.tokens;
+                    rep.padded_tokens += batch.padded_tokens();
                     let mut g = outputs.lock().unwrap();
                     for (idx, o) in batch.indices.iter().zip(outs) {
                         g.push((*idx, o));
@@ -207,7 +228,10 @@ where
                 rep
             }));
         }
-        // producer: enqueue in order (§5.4: already sorted by tokens desc)
+        // producer: enqueue in the policy's emission order (§5.4/§5.6:
+        // long batches first — guaranteed by bin-pack, and by the
+        // other policies whenever the corpus was length-sorted — so
+        // streams overlap long and short work)
         for b in batches {
             let _ = queue.push(b);
         }
@@ -219,6 +243,7 @@ where
     let wall = t0.elapsed().as_secs_f64();
     let sentences = reports.iter().map(|r| r.sentences).sum();
     let tokens = reports.iter().map(|r| r.tokens).sum();
+    let padded_tokens = reports.iter().map(|r| r.padded_tokens).sum();
     let outputs = Arc::try_unwrap(outputs).unwrap().into_inner().unwrap();
     ThroughputReport {
         mode: format!("parallel x{n_streams}"),
@@ -226,6 +251,7 @@ where
         wall_secs: wall,
         sentences,
         tokens,
+        padded_tokens,
         outputs,
     }
 }
@@ -309,6 +335,22 @@ mod tests {
         for p in parts {
             assert!(!p.is_empty());
         }
+    }
+
+    #[test]
+    fn padded_token_accounting_matches_batches() {
+        let bs = batches(60, 8);
+        let expect_padded: usize = bs.iter().map(|b| b.padded_tokens()).sum();
+        let expect_real: usize = bs.iter().map(|b| b.tokens).sum();
+        let serial = run_serial(&bs.clone(), |b| b.src.clone());
+        assert_eq!(serial.padded_tokens, expect_padded);
+        assert_eq!(serial.tokens, expect_real);
+        let parallel = run_parallel(bs, 3, false, |_id: usize| {
+            move |b: &Batch| b.src.clone()
+        });
+        assert_eq!(parallel.padded_tokens, expect_padded);
+        assert!(parallel.fill_ratio() > 0.0 && parallel.fill_ratio() <= 1.0);
+        assert!((parallel.fill_ratio() - expect_real as f64 / expect_padded as f64).abs() < 1e-12);
     }
 
     #[test]

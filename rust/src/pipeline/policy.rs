@@ -1,0 +1,472 @@
+//! Pluggable batch-construction policies (§5.4 + §5.6 bin-packing).
+//!
+//! The paper's "bin-packing parallel batching technique" shapes batches
+//! so the padded `rows x max_len` matrix wastes as little compute as
+//! possible before the batches ever reach the parallel streams.  This
+//! module turns batch construction into a policy layer:
+//!
+//! * [`FixedCount`]   — the legacy behavior: chunk the ordered corpus
+//!   into batches of exactly `batch_size` rows (delegates to
+//!   [`make_batches`], so its output is bit-for-bit the historical one);
+//! * [`TokenBudget`]  — greedy fill in corpus order up to a *padded*
+//!   token budget (`rows x max_len <= budget`), so short sentences form
+//!   large batches and long sentences small ones;
+//! * [`BinPack`]      — first-fit-decreasing over token lengths: sort
+//!   the order's indices by descending length, then drop each sentence
+//!   into the first open bin it fits under the budget.  This is the
+//!   paper's bin-packing batching, minimizing padded-token waste.
+//!
+//! Batch ids are queue (drain) order.  [`FixedCount`] and
+//! [`TokenBudget`] preserve the caller's order — long-first when the
+//! corpus was §5.4 token/word-sorted (the default), corpus order when
+//! unsorted — while [`BinPack`] always emits long-first regardless of
+//! input order, so the §5.6 streams overlap long and short batches
+//! even on unsorted input.  [`PolicyKind`] is the `Copy` config-level
+//! selector threaded through `ServiceConfig` and the CLI;
+//! [`PolicyKind::build`] instantiates the boxed policy.
+
+use super::batch::{make_batches, pad_batch, Batch};
+use crate::data::dataset::Pair;
+
+/// Config-level policy selector (what `ServiceConfig`/`--policy` carry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// fixed row count per batch (legacy `make_batches`)
+    FixedCount,
+    /// greedy padded-token budget fill, in the given order
+    TokenBudget,
+    /// first-fit-decreasing bin-packing under the padded-token budget
+    BinPack,
+}
+
+impl PolicyKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PolicyKind::FixedCount => "fixed",
+            PolicyKind::TokenBudget => "token-budget",
+            PolicyKind::BinPack => "bin-pack",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<PolicyKind> {
+        match s {
+            "fixed" | "fixed-count" => Some(PolicyKind::FixedCount),
+            "token-budget" | "budget" => Some(PolicyKind::TokenBudget),
+            "bin-pack" | "binpack" => Some(PolicyKind::BinPack),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [PolicyKind; 3] {
+        [
+            PolicyKind::FixedCount,
+            PolicyKind::TokenBudget,
+            PolicyKind::BinPack,
+        ]
+    }
+
+    /// Parse an optional `--policy` value (the one CLI entry point, so
+    /// every binary accepts the same names and aliases): `None` means
+    /// the flag was absent; unknown values warn on stderr and fall
+    /// back to `default`.
+    pub fn parse_or(s: Option<&str>, default: PolicyKind) -> PolicyKind {
+        match s {
+            None => default,
+            Some(v) => PolicyKind::from_str(v).unwrap_or_else(|| {
+                eprintln!(
+                    "unknown policy '{v}' (choices: fixed|token-budget|bin-pack), using {}",
+                    default.as_str()
+                );
+                default
+            }),
+        }
+    }
+
+    /// Instantiate the policy.  `batch_size` caps rows per batch for
+    /// every policy (AOT buckets are compiled per row count);
+    /// `token_budget` is the padded-token budget for the budget
+    /// policies and ignored by [`FixedCount`].
+    pub fn build(&self, batch_size: usize, token_budget: usize) -> Box<dyn BatchPolicy> {
+        match self {
+            PolicyKind::FixedCount => Box::new(FixedCount { batch_size }),
+            PolicyKind::TokenBudget => Box::new(TokenBudget {
+                budget: token_budget,
+                max_rows: batch_size,
+            }),
+            PolicyKind::BinPack => Box::new(BinPack {
+                budget: token_budget,
+                max_rows: batch_size,
+            }),
+        }
+    }
+}
+
+/// A batch-construction strategy: pack `order` (corpus indices into
+/// `pairs`) into padded batches, ids in drain (queue) order.
+pub trait BatchPolicy: Send + Sync {
+    fn pack(&self, pairs: &[Pair], order: &[usize]) -> Vec<Batch>;
+    fn name(&self) -> &'static str;
+}
+
+/// Aggregate fill ratio over a batching: real tokens / padded tokens.
+/// This is the corpus-level utilization quantity the budget policies
+/// maximize (1.0 = zero padding waste).
+pub fn aggregate_fill(batches: &[Batch]) -> f64 {
+    let real: usize = batches.iter().map(|b| b.tokens).sum();
+    let padded: usize = batches.iter().map(|b| b.padded_tokens()).sum();
+    if padded == 0 {
+        0.0
+    } else {
+        real as f64 / padded as f64
+    }
+}
+
+/// Legacy fixed-row-count chunking (the historical `make_batches`).
+#[derive(Debug, Clone, Copy)]
+pub struct FixedCount {
+    pub batch_size: usize,
+}
+
+impl BatchPolicy for FixedCount {
+    fn pack(&self, pairs: &[Pair], order: &[usize]) -> Vec<Batch> {
+        make_batches(pairs, order, self.batch_size)
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+}
+
+/// Greedy padded-token budget fill, preserving the given order.
+///
+/// A sentence joins the open batch unless doing so would push the
+/// padded matrix `(rows + 1) * max(max_len, len)` over `budget` or the
+/// row count over `max_rows`; then the batch is flushed and a new one
+/// opened.  A single sentence longer than the budget still forms its
+/// own singleton batch (nothing is dropped).
+#[derive(Debug, Clone, Copy)]
+pub struct TokenBudget {
+    /// padded-token budget per batch (`rows x max_len`)
+    pub budget: usize,
+    /// row cap (AOT bucket ceiling), same role as `batch_size`
+    pub max_rows: usize,
+}
+
+impl BatchPolicy for TokenBudget {
+    fn pack(&self, pairs: &[Pair], order: &[usize]) -> Vec<Batch> {
+        assert!(self.budget > 0 && self.max_rows > 0);
+        let mut out = Vec::new();
+        let mut cur: Vec<usize> = Vec::new();
+        let mut cur_max = 0usize;
+        for &i in order {
+            let len = pairs[i].src.len();
+            let new_max = cur_max.max(len);
+            let over_budget = (cur.len() + 1) * new_max > self.budget;
+            if !cur.is_empty() && (over_budget || cur.len() >= self.max_rows) {
+                let id = out.len();
+                out.push(pad_batch(pairs, id, std::mem::take(&mut cur)));
+                cur_max = 0;
+            }
+            cur_max = cur_max.max(len);
+            cur.push(i);
+        }
+        if !cur.is_empty() {
+            let id = out.len();
+            out.push(pad_batch(pairs, id, cur));
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "token-budget"
+    }
+}
+
+/// First-fit-decreasing bin-packing under the padded-token budget
+/// (the paper's bin-packing parallel batching).
+///
+/// Indices are sorted by descending token length (stable, so equal
+/// lengths keep the caller's order) and each sentence is placed in the
+/// first bin where `(rows + 1) * max(max_len, len) <= budget` and
+/// `rows < max_rows`; otherwise a new bin opens.  Bins are emitted in
+/// creation order, which descends in length — the long-first drain
+/// order §5.6's parallel streams rely on to overlap long and short
+/// batches.
+#[derive(Debug, Clone, Copy)]
+pub struct BinPack {
+    /// padded-token budget per batch (`rows x max_len`)
+    pub budget: usize,
+    /// row cap (AOT bucket ceiling), same role as `batch_size`
+    pub max_rows: usize,
+}
+
+impl BatchPolicy for BinPack {
+    fn pack(&self, pairs: &[Pair], order: &[usize]) -> Vec<Batch> {
+        assert!(self.budget > 0 && self.max_rows > 0);
+        let mut sorted: Vec<usize> = order.to_vec();
+        sorted.sort_by(|&a, &b| pairs[b].src.len().cmp(&pairs[a].src.len()));
+        // open bins: (indices, current max_len)
+        let mut bins: Vec<(Vec<usize>, usize)> = Vec::new();
+        for i in sorted {
+            let len = pairs[i].src.len();
+            let slot = bins.iter().position(|(rows, max_len)| {
+                rows.len() < self.max_rows && (rows.len() + 1) * (*max_len).max(len) <= self.budget
+            });
+            match slot {
+                Some(j) => {
+                    let (rows, max_len) = &mut bins[j];
+                    rows.push(i);
+                    *max_len = (*max_len).max(len);
+                }
+                None => bins.push((vec![i], len)),
+            }
+        }
+        bins.into_iter()
+            .enumerate()
+            .map(|(id, (rows, _))| pad_batch(pairs, id, rows))
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "bin-pack"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::Generator;
+    use crate::data::vocab::DataConfig;
+    use crate::specials::EOS_ID;
+    use crate::util::prop::{check, default_cases, gen};
+    use crate::util::rng::SplitMix64;
+
+    fn corpus(n: usize) -> Vec<Pair> {
+        Generator::new(DataConfig::default()).split(17, n)
+    }
+
+    /// Random corpus straight from token sequences (wider length range
+    /// than the generator's word-spelling path).
+    fn rand_pairs(rng: &mut SplitMix64, n: usize, max_len: usize) -> Vec<Pair> {
+        (0..n)
+            .map(|_| {
+                let mut src = gen::token_seq(rng, max_len, 64);
+                src.push(EOS_ID);
+                Pair {
+                    n_words: src.len(),
+                    src,
+                    ref_ids: vec![EOS_ID],
+                    text: String::new(),
+                }
+            })
+            .collect()
+    }
+
+    /// A length-skewed corpus: mostly short sentences with a long tail
+    /// (the regime where fixed-count batching wastes the most padding).
+    fn skewed_pairs(rng: &mut SplitMix64, n: usize) -> Vec<Pair> {
+        (0..n)
+            .map(|_| {
+                let max = if rng.f64() < 0.85 { 6 } else { 56 };
+                let mut src = gen::token_seq(rng, max, 64);
+                src.push(EOS_ID);
+                Pair {
+                    n_words: src.len(),
+                    src,
+                    ref_ids: vec![EOS_ID],
+                    text: String::new(),
+                }
+            })
+            .collect()
+    }
+
+    fn batch_indices(batches: &[Batch]) -> Vec<usize> {
+        let mut all: Vec<usize> = batches.iter().flat_map(|b| b.indices.clone()).collect();
+        all.sort_unstable();
+        all
+    }
+
+    #[test]
+    fn kind_string_roundtrip() {
+        for kind in PolicyKind::all() {
+            assert_eq!(PolicyKind::from_str(kind.as_str()), Some(kind));
+            assert_eq!(kind.build(8, 128).name(), kind.as_str());
+        }
+        assert_eq!(PolicyKind::from_str("nope"), None);
+        assert_eq!(PolicyKind::from_str("binpack"), Some(PolicyKind::BinPack));
+    }
+
+    #[test]
+    fn parse_or_accepts_aliases_and_falls_back() {
+        let d = PolicyKind::FixedCount;
+        assert_eq!(PolicyKind::parse_or(None, d), d);
+        assert_eq!(PolicyKind::parse_or(Some("budget"), d), PolicyKind::TokenBudget);
+        assert_eq!(PolicyKind::parse_or(Some("binpack"), d), PolicyKind::BinPack);
+        assert_eq!(PolicyKind::parse_or(Some("zig-zag"), d), d);
+    }
+
+    #[test]
+    fn in_order_policies_preserve_caller_order() {
+        // FixedCount and TokenBudget keep the §5.4 sorted order the
+        // caller chose (BinPack re-sorts; see bin_pack_emits_longest_first)
+        let pairs = corpus(100);
+        let order: Vec<usize> = (0..pairs.len()).rev().collect();
+        for kind in [PolicyKind::FixedCount, PolicyKind::TokenBudget] {
+            let batches = kind.build(16, 256).pack(&pairs, &order);
+            let flat: Vec<usize> = batches.iter().flat_map(|b| b.indices.clone()).collect();
+            assert_eq!(flat, order, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn fixed_count_matches_legacy_make_batches_exactly() {
+        let pairs = corpus(130);
+        let order: Vec<usize> = (0..pairs.len()).collect();
+        for bs in [1, 7, 64] {
+            let legacy = make_batches(&pairs, &order, bs);
+            let policy = FixedCount { batch_size: bs }.pack(&pairs, &order);
+            assert_eq!(policy, legacy);
+        }
+    }
+
+    #[test]
+    fn empty_order_yields_no_batches() {
+        let pairs = corpus(4);
+        for kind in PolicyKind::all() {
+            // FixedCount/make_batches on an empty order emits nothing
+            let batches = kind.build(8, 64).pack(&pairs, &[]);
+            assert!(batches.is_empty(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn oversize_sentence_forms_singleton_batch() {
+        let mut rng = SplitMix64::new(3);
+        let pairs = rand_pairs(&mut rng, 10, 40);
+        let order: Vec<usize> = (0..pairs.len()).collect();
+        // budget below every sentence length: everything is a singleton
+        for kind in [PolicyKind::TokenBudget, PolicyKind::BinPack] {
+            let batches = kind.build(64, 1).pack(&pairs, &order);
+            assert_eq!(batches.len(), pairs.len(), "{kind:?}");
+            assert!(batches.iter().all(|b| b.len() == 1));
+        }
+    }
+
+    #[test]
+    fn bin_pack_emits_longest_first() {
+        let mut rng = SplitMix64::new(5);
+        let pairs = rand_pairs(&mut rng, 200, 56);
+        let order: Vec<usize> = (0..pairs.len()).collect();
+        let batches = BinPack {
+            budget: 256,
+            max_rows: 64,
+        }
+        .pack(&pairs, &order);
+        for w in batches.windows(2) {
+            assert!(
+                w[0].max_len >= w[1].max_len,
+                "drain order must be long-first: {} then {}",
+                w[0].max_len,
+                w[1].max_len
+            );
+        }
+    }
+
+    #[test]
+    fn prop_policies_emit_valid_batchings() {
+        check("policy-batching-invariants", 0xBA7C, default_cases(), |rng, _| {
+            let n = rng.range(1, 200) as usize;
+            let pairs = rand_pairs(rng, n, 56);
+            let order: Vec<usize> = (0..n).collect();
+            let batch_size = rng.range(1, 32) as usize;
+            let budget = rng.range(8, 512) as usize;
+            for kind in PolicyKind::all() {
+                let batches = kind.build(batch_size, budget).pack(&pairs, &order);
+                // (1) together the batches are a permutation of the input
+                if batch_indices(&batches) != order {
+                    return Err(format!("{kind:?}: not a permutation"));
+                }
+                // (2) ids are queue order
+                for (pos, b) in batches.iter().enumerate() {
+                    if b.id != pos {
+                        return Err(format!("{kind:?}: id {} at pos {pos}", b.id));
+                    }
+                }
+                for b in &batches {
+                    // (3) the row cap holds for every policy
+                    if b.len() > batch_size {
+                        return Err(format!("{kind:?}: {} rows > cap {batch_size}", b.len()));
+                    }
+                    // (4) budget policies: padded area within budget
+                    //     unless a single oversize sentence forced it
+                    if kind != PolicyKind::FixedCount
+                        && b.padded_tokens() > budget
+                        && b.len() > 1
+                    {
+                        return Err(format!(
+                            "{kind:?}: {} padded tokens > budget {budget} in a {}-row batch",
+                            b.padded_tokens(),
+                            b.len()
+                        ));
+                    }
+                    // (5) fill ratio in (0, 1]
+                    if !(b.fill_ratio() > 0.0 && b.fill_ratio() <= 1.0) {
+                        return Err(format!("{kind:?}: fill {}", b.fill_ratio()));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fixed_count_equals_legacy_on_random_orders() {
+        check("fixed-count-legacy-parity", 0xF1CED, default_cases(), |rng, _| {
+            let n = rng.range(1, 150) as usize;
+            let pairs = rand_pairs(rng, n, 40);
+            // a random subset in random order, not just 0..n
+            let mut order: Vec<usize> = (0..n).filter(|_| rng.f64() < 0.8).collect();
+            for i in (1..order.len()).rev() {
+                order.swap(i, rng.below(i as u64 + 1) as usize);
+            }
+            let bs = rng.range(1, 32) as usize;
+            let legacy = make_batches(&pairs, &order, bs);
+            let policy = PolicyKind::FixedCount.build(bs, 999).pack(&pairs, &order);
+            if policy != legacy {
+                return Err(format!("diverged on {} pairs, bs {bs}", order.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn budget_policies_beat_fixed_fill_on_skewed_unsorted_corpus() {
+        // the ISSUE acceptance criterion: on an unsorted length-skewed
+        // corpus, TokenBudget and BinPack measurably raise aggregate
+        // fill ratio over FixedCount at comparable capacity.
+        let mut rng = SplitMix64::new(0x5EED);
+        let pairs = skewed_pairs(&mut rng, 1024);
+        let order: Vec<usize> = (0..pairs.len()).collect(); // unsorted
+        let fixed = aggregate_fill(&PolicyKind::FixedCount.build(64, 1024).pack(&pairs, &order));
+        let budget = aggregate_fill(&PolicyKind::TokenBudget.build(64, 1024).pack(&pairs, &order));
+        let binpack = aggregate_fill(&PolicyKind::BinPack.build(64, 1024).pack(&pairs, &order));
+        assert!(
+            budget > fixed + 0.05,
+            "token-budget fill {budget:.3} vs fixed {fixed:.3}"
+        );
+        assert!(
+            binpack > fixed + 0.05,
+            "bin-pack fill {binpack:.3} vs fixed {fixed:.3}"
+        );
+        // FFD packs at least as tightly as greedy in-order fill here
+        assert!(
+            binpack >= budget,
+            "bin-pack fill {binpack:.3} vs token-budget {budget:.3}"
+        );
+    }
+
+    #[test]
+    fn aggregate_fill_of_empty_is_zero() {
+        assert_eq!(aggregate_fill(&[]), 0.0);
+    }
+}

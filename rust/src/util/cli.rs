@@ -65,6 +65,25 @@ impl Args {
             .and_then(|s| s.parse().ok())
             .unwrap_or(default)
     }
+
+    /// Value of `--name` constrained to `allowed`; unknown values warn
+    /// on stderr and fall back to `default` (used for enum-like flags
+    /// such as `--policy fixed|token-budget|bin-pack`).
+    pub fn get_choice<'a>(&'a self, name: &str, allowed: &[&'a str], default: &'a str) -> &'a str {
+        match self.get(name) {
+            None => default,
+            Some(v) => match allowed.iter().copied().find(|&a| a == v) {
+                Some(a) => a,
+                None => {
+                    eprintln!(
+                        "unknown --{name} '{v}' (choices: {}), using {default}",
+                        allowed.join("|")
+                    );
+                    default
+                }
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -104,5 +123,18 @@ mod tests {
         let a = parse("--out dir --quiet");
         assert_eq!(a.get("out"), Some("dir"));
         assert!(a.flag("quiet"));
+    }
+
+    #[test]
+    fn choice_flags() {
+        let allowed = ["fixed", "token-budget", "bin-pack"];
+        let a = parse("--policy bin-pack --token-budget 1024");
+        assert_eq!(a.get_choice("policy", &allowed, "fixed"), "bin-pack");
+        assert_eq!(a.get_usize("token-budget", 512), 1024);
+        // missing and unknown values fall back to the default
+        let b = parse("--policy zig-zag");
+        assert_eq!(b.get_choice("policy", &allowed, "fixed"), "fixed");
+        let c = parse("");
+        assert_eq!(c.get_choice("policy", &allowed, "fixed"), "fixed");
     }
 }

@@ -6,6 +6,7 @@ use quantnmt::data::synthetic::Generator;
 use quantnmt::data::vocab::DataConfig;
 use quantnmt::pipeline::batch::{make_batches, Batch};
 use quantnmt::pipeline::parallel::{run_parallel, run_serial};
+use quantnmt::pipeline::policy::{aggregate_fill, PolicyKind};
 use quantnmt::specials::EOS_ID;
 
 /// The ground-truth translation as the stub "model".
@@ -78,6 +79,45 @@ fn sorted_order_reduces_padded_token_count() {
     let tokens = padded_total(SortOrder::Tokens);
     assert!(tokens < words, "{tokens} vs {words}");
     assert!(words < unsorted, "{words} vs {unsorted}");
+}
+
+#[test]
+fn every_policy_translates_correctly_through_parallel_streams() {
+    // the policy layer must be invisible to correctness: any batch
+    // shaping, any order, same translations out
+    let generator = Generator::new(DataConfig::default());
+    let pairs = generator.split(59, 300);
+    for policy in PolicyKind::all() {
+        for order_kind in [SortOrder::Unsorted, SortOrder::Tokens] {
+            let order = sort_indices(&pairs, order_kind);
+            let batches = policy.build(32, 512).pack(&pairs, &order);
+            let report = run_parallel(batches, 3, false, |_| {
+                let generator = Generator::new(DataConfig::default());
+                move |b: &Batch| oracle_translate(&generator, b)
+            });
+            assert_eq!(report.sentences, 300, "{policy:?}/{order_kind:?}");
+            assert!(report.fill_ratio() > 0.0 && report.fill_ratio() <= 1.0);
+            for (idx, out) in &report.outputs {
+                let expect: Vec<u32> =
+                    pairs[*idx].ref_ids[..pairs[*idx].ref_ids.len() - 1].to_vec();
+                assert_eq!(out, &expect, "{policy:?}/{order_kind:?} idx {idx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn budget_policies_raise_fill_on_unsorted_corpus() {
+    // the ISSUE acceptance criterion at the pipeline level: on the
+    // unsorted synthetic test corpus, batch shaping beats fixed chunks
+    let pairs = Generator::new(DataConfig::default()).split(61, 1024);
+    let order = sort_indices(&pairs, SortOrder::Unsorted);
+    let fill = |kind: PolicyKind| aggregate_fill(&kind.build(64, 1024).pack(&pairs, &order));
+    let fixed = fill(PolicyKind::FixedCount);
+    let budget = fill(PolicyKind::TokenBudget);
+    let binpack = fill(PolicyKind::BinPack);
+    assert!(budget > fixed, "token-budget {budget:.3} vs fixed {fixed:.3}");
+    assert!(binpack > fixed, "bin-pack {binpack:.3} vs fixed {fixed:.3}");
 }
 
 #[test]
