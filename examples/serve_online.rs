@@ -1,0 +1,122 @@
+//! Online-serving latency experiment (the EXPERIMENTS.md §Online run).
+//!
+//! Replays a synthetic Poisson arrival trace through the online server
+//! (`coordinator::server`) at several offered loads and prints the
+//! latency/throughput table: p50/p90/p99 total latency, queueing delay,
+//! dynamic-batch fill ratio and the shed rate per load rung.  This is
+//! the open-loop serving counterpart of `serve_parallel.rs`'s offline
+//! corpus run: as the offered load grows, the dynamic batcher forms
+//! fuller batches (fill rises, throughput rises) until the shard pool
+//! saturates and latency/shedding take over — the latency/throughput
+//! trade the max-wait deadline governs.
+//!
+//! Runs against trained artifacts when they exist; otherwise degrades
+//! to a synthetic tiny model so the harness is exercisable anywhere.
+//!
+//! Flags:
+//! * `--limit N`          requests per load rung (default 256)
+//! * `--rate R`           base offered load, req/s (default 100)
+//! * `--shards N`         worker streams (default 2)
+//! * `--max-wait-ms MS`   batching deadline (default 20)
+//! * `--token-budget N`   padded-token budget per batch (default 512)
+//! * `--seed S`           arrival-trace seed
+//!
+//! ```bash
+//! cargo run --release --example serve_online -- --rate 200 --shards 4
+//! ```
+
+use std::time::Duration;
+
+use quantnmt::coordinator::server::{self, poisson_offsets, replay_trace, TranslateRequest};
+use quantnmt::coordinator::{Backend, ServerConfig, Service};
+use quantnmt::model::testutil::{random_weights, tiny_cfg};
+use quantnmt::model::Engine;
+use quantnmt::pipeline::batch::Batch;
+use quantnmt::quant::calibrate::CalibrationMode;
+use quantnmt::specials::EOS_ID;
+use quantnmt::util::cli::Args;
+use quantnmt::util::prop::gen;
+use quantnmt::util::rng::SplitMix64;
+
+const LOAD_MULTIPLIERS: [f64; 4] = [0.5, 1.0, 2.0, 4.0];
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("limit", 256);
+    let base_rate = args.get_f64("rate", 100.0);
+    let seed = args.get_usize("seed", 0x5EED) as u64;
+    let mut cfg = ServerConfig {
+        backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+        shards: args.get_usize("shards", 2),
+        max_wait: Duration::from_secs_f64(args.get_f64("max-wait-ms", 20.0) / 1e3),
+        token_budget: args.get_usize("token-budget", 512),
+        max_batch_rows: 64,
+        queue_capacity: 1024,
+        max_src_len: None,
+        pin_cores: false,
+        max_decode_len: 56,
+    };
+
+    match Service::open_default() {
+        Ok(svc) => {
+            let ds = svc.dataset()?;
+            let n = n.min(ds.test.len());
+            println!(
+                "online serving, trained artifacts: {n} requests/rung, {} shards, \
+                 wait {}ms, budget {}\n",
+                cfg.shards,
+                cfg.max_wait.as_millis(),
+                cfg.token_budget
+            );
+            for (rung, m) in LOAD_MULTIPLIERS.iter().enumerate() {
+                let rate = base_rate * m;
+                let reqs = TranslateRequest::from_pairs(&ds.test[..n]);
+                let offsets = poisson_offsets(seed ^ rung as u64, n, rate);
+                let (metrics, _, _) =
+                    svc.serve(&cfg, |client| replay_trace(client, reqs, &offsets))?;
+                println!("rate {rate:>7.0}/s  {}", metrics.row());
+            }
+        }
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e}); using a synthetic tiny model\n");
+            cfg.backend = Backend::EngineF32;
+            cfg.max_decode_len = 8;
+            let model_cfg = tiny_cfg();
+            let weights = random_weights(&model_cfg, 7);
+            // a tiny model is fast: scale the offered load up so the
+            // batcher actually has to form multi-row batches
+            let base_rate = base_rate * 20.0;
+            println!(
+                "online serving, synthetic model: {n} requests/rung, {} shards, \
+                 wait {}ms, budget {}\n",
+                cfg.shards,
+                cfg.max_wait.as_millis(),
+                cfg.token_budget
+            );
+            for (rung, m) in LOAD_MULTIPLIERS.iter().enumerate() {
+                let rate = base_rate * m;
+                let mut rng = SplitMix64::new(seed ^ 0xABCD ^ rung as u64);
+                let reqs: Vec<TranslateRequest> = (0..n)
+                    .map(|i| {
+                        let mut src = gen::token_seq(&mut rng, model_cfg.max_src_len - 1, 16);
+                        src.push(EOS_ID);
+                        TranslateRequest { id: i, src }
+                    })
+                    .collect();
+                let offsets = poisson_offsets(seed ^ rung as u64, n, rate);
+                let factory = |_id: usize| {
+                    let mut engine =
+                        Engine::fp32(model_cfg.clone(), weights.clone()).expect("engine");
+                    let max_len = cfg.max_decode_len;
+                    move |b: &Batch| engine.translate_greedy(&b.src, max_len)
+                };
+                let (metrics, _, _) =
+                    server::serve(&cfg, factory, |client| replay_trace(client, reqs, &offsets));
+                println!("rate {rate:>7.0}/s  {}", metrics.row());
+            }
+        }
+    }
+    println!("\nreading: p50/p99 grow and shed kicks in as offered load crosses capacity;");
+    println!("fill ratio rises with load (fuller dynamic batches) — EXPERIMENTS.md §Online");
+    Ok(())
+}

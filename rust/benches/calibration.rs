@@ -16,7 +16,9 @@ use quantnmt::util::rng::SplitMix64;
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
-    let svc = Service::open_default()?;
+    let Some(svc) = Service::open_default_or_skip() else {
+        return Ok(());
+    };
     let ds = svc.dataset()?;
     let n = if quick { 256 } else { 1024.min(ds.test.len()) };
     let pairs = &ds.test[..n];

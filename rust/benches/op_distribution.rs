@@ -40,7 +40,9 @@ fn profile(engine: &mut Engine, pairs: &[quantnmt::data::Pair], use_beam: bool) 
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
-    let svc = Service::open_default()?;
+    let Some(svc) = Service::open_default_or_skip() else {
+        return Ok(());
+    };
     let ds = svc.dataset()?;
     let n = if quick { 128 } else { 512.min(ds.test.len()) };
     let pairs = &ds.test[..n];

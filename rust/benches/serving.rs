@@ -1,0 +1,58 @@
+//! Online-serving offered-load sweep: p50/p99 latency vs Poisson load.
+//!
+//! The serving counterpart of `benches/batching.rs`: instead of packing
+//! a known corpus up front, requests arrive one by one on a Poisson
+//! clock and the dynamic batcher (`coordinator::server`) must trade
+//! batching delay (bounded by `--max-wait-ms`) against batch fill.  The
+//! sweep reports, per offered load: completed req/s, p50/p90/p99 total
+//! latency, queueing p50, dynamic-batch fill and the shed rate.
+//!
+//! ```bash
+//! cargo bench --bench serving [-- --quick]
+//! ```
+
+use std::time::Duration;
+
+use quantnmt::coordinator::server::{poisson_offsets, replay_trace, TranslateRequest};
+use quantnmt::coordinator::{Backend, ServerConfig, Service};
+use quantnmt::quant::calibrate::CalibrationMode;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "--test");
+    let Some(svc) = Service::open_default_or_skip() else {
+        return Ok(());
+    };
+    let ds = svc.dataset()?;
+    let n = if quick { 128 } else { 512.min(ds.test.len()) };
+    let n = n.min(ds.test.len());
+    let rates = if quick {
+        vec![50.0, 200.0]
+    } else {
+        vec![25.0, 50.0, 100.0, 200.0, 400.0]
+    };
+
+    for wait_ms in [5u64, 20, 80] {
+        let cfg = ServerConfig {
+            backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+            shards: 2,
+            max_wait: Duration::from_millis(wait_ms),
+            token_budget: 1024,
+            max_batch_rows: 64,
+            queue_capacity: 1024,
+            max_src_len: None,
+            pin_cores: false,
+            max_decode_len: 56,
+        };
+        println!("max-wait {wait_ms}ms, {n} requests per rung:");
+        for (rung, &rate) in rates.iter().enumerate() {
+            let reqs = TranslateRequest::from_pairs(&ds.test[..n]);
+            let offsets = poisson_offsets(0x10AD ^ rung as u64, n, rate);
+            let (metrics, _, _) =
+                svc.serve(&cfg, |client| replay_trace(client, reqs, &offsets))?;
+            println!("  rate {rate:>6.0}/s  {}", metrics.row());
+        }
+        println!();
+    }
+    println!("regenerate the EXPERIMENTS.md online table with: cargo bench --bench serving");
+    Ok(())
+}

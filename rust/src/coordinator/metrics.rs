@@ -38,6 +38,10 @@ impl LatencyStats {
         self.percentile(50.0)
     }
 
+    pub fn p90(&self) -> f64 {
+        self.percentile(90.0)
+    }
+
     pub fn p95(&self) -> f64 {
         self.percentile(95.0)
     }
@@ -99,6 +103,93 @@ impl RunMetrics {
     }
 }
 
+/// One online-serving run's metrics (what `quantnmt serve` and the
+/// Poisson replay report): request-level latency percentiles plus the
+/// dynamic batcher's shaping and shedding behavior.
+///
+/// Latency is broken into the two stages a request passes through:
+/// *queue* (enqueue -> batch close, the batching delay the max-wait
+/// deadline bounds) and *total* (enqueue -> translation done, what the
+/// caller experiences).  `batch_latency` is the per-batch shard
+/// execution time — the same quantity [`RunMetrics::batch_latency`]
+/// records offline.
+#[derive(Debug, Clone)]
+pub struct ServerMetrics {
+    pub config: String,
+    pub shards: usize,
+    /// requests admitted and completed
+    pub requests: usize,
+    /// requests rejected at admission: backpressure (queue full) or
+    /// malformed (empty / longer than the backend can decode)
+    pub shed: usize,
+    /// dynamic batches formed
+    pub batches: usize,
+    /// real (non-pad) tokens processed
+    pub tokens: usize,
+    /// padded matrix area processed (`sum rows x max_len` over batches)
+    pub padded_tokens: usize,
+    pub wall_secs: f64,
+    /// mean fraction of wall time the shards were busy
+    pub utilization: f64,
+    /// enqueue -> batch close, per request
+    pub queue_latency: LatencyStats,
+    /// enqueue -> done, per request
+    pub total_latency: LatencyStats,
+    /// per-batch shard execution time
+    pub batch_latency: LatencyStats,
+}
+
+impl ServerMetrics {
+    pub fn requests_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.requests as f64 / self.wall_secs
+    }
+
+    /// Aggregate padding efficiency of the dynamically formed batches.
+    pub fn fill_ratio(&self) -> f64 {
+        if self.padded_tokens == 0 {
+            return 0.0;
+        }
+        self.tokens as f64 / self.padded_tokens as f64
+    }
+
+    /// Mean rows per dynamic batch (how full the former ran).
+    pub fn mean_batch_rows(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / self.batches as f64
+    }
+
+    /// Fraction of offered requests shed by backpressure.
+    pub fn shed_ratio(&self) -> f64 {
+        let offered = self.requests + self.shed;
+        if offered == 0 {
+            return 0.0;
+        }
+        self.shed as f64 / offered as f64
+    }
+
+    /// Table row for the serving reports (one row per offered load).
+    pub fn row(&self) -> String {
+        format!(
+            "{:40} {:>8.1} req/s  p50 {:>7.1}ms  p90 {:>7.1}ms  p99 {:>7.1}ms  \
+             queue p50 {:>6.1}ms  fill {:>5.1}%  rows/batch {:>5.1}  shed {:>4.1}%",
+            self.config,
+            self.requests_per_sec(),
+            self.total_latency.p50() * 1e3,
+            self.total_latency.p90() * 1e3,
+            self.total_latency.p99() * 1e3,
+            self.queue_latency.p50() * 1e3,
+            self.fill_ratio() * 100.0,
+            self.mean_batch_rows(),
+            self.shed_ratio() * 100.0,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,7 +208,8 @@ mod tests {
         for i in 1..=100 {
             s.record(Duration::from_millis(i));
         }
-        assert!(s.p50() <= s.p95());
+        assert!(s.p50() <= s.p90());
+        assert!(s.p90() <= s.p95());
         assert!(s.p95() <= s.p99());
         assert!((s.mean() - 0.0505).abs() < 1e-3);
         assert!((s.p50() - 0.050).abs() < 2e-3);
@@ -151,6 +243,47 @@ mod tests {
         assert!(m.row().contains("50.00 sent/s"));
         assert!(m.row().contains("fill  80.0%"));
         assert!(m.row().contains("BLEU  97.50"));
+    }
+
+    fn server_metrics(requests: usize, shed: usize, batches: usize) -> ServerMetrics {
+        ServerMetrics {
+            config: "online test".into(),
+            shards: 2,
+            requests,
+            shed,
+            batches,
+            tokens: 800,
+            padded_tokens: 1000,
+            wall_secs: 2.0,
+            utilization: 0.5,
+            queue_latency: LatencyStats::default(),
+            total_latency: LatencyStats::default(),
+            batch_latency: LatencyStats::default(),
+        }
+    }
+
+    #[test]
+    fn server_metrics_ratios() {
+        let m = server_metrics(90, 10, 9);
+        assert_eq!(m.requests_per_sec(), 45.0);
+        assert!((m.fill_ratio() - 0.8).abs() < 1e-12);
+        assert!((m.mean_batch_rows() - 10.0).abs() < 1e-12);
+        assert!((m.shed_ratio() - 0.1).abs() < 1e-12);
+        let row = m.row();
+        assert!(row.contains("45.0 req/s"), "{row}");
+        assert!(row.contains("fill  80.0%"), "{row}");
+    }
+
+    #[test]
+    fn server_metrics_empty_run_is_all_zero() {
+        let mut m = server_metrics(0, 0, 0);
+        m.tokens = 0;
+        m.padded_tokens = 0;
+        m.wall_secs = 0.0;
+        assert_eq!(m.requests_per_sec(), 0.0);
+        assert_eq!(m.fill_ratio(), 0.0);
+        assert_eq!(m.mean_batch_rows(), 0.0);
+        assert_eq!(m.shed_ratio(), 0.0);
     }
 
     #[test]

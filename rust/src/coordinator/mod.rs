@@ -6,11 +6,16 @@
 //! drives the pipeline end to end: order -> policy-shaped batches ->
 //! queue -> parallel streams -> BLEU/throughput/latency/fill metrics.
 //!
-//! * [`service`] — [`service::Service`]: configuration + corpus runs;
-//! * [`metrics`] — latency/throughput accounting.
+//! * [`service`] — [`service::Service`]: configuration + offline corpus
+//!   runs;
+//! * [`server`]  — the online request path: bounded admission,
+//!   latency-aware dynamic batching, shard pool;
+//! * [`metrics`] — latency/throughput accounting for both paths.
 
 pub mod metrics;
+pub mod server;
 pub mod service;
 
-pub use metrics::{LatencyStats, RunMetrics};
+pub use metrics::{LatencyStats, RunMetrics, ServerMetrics};
+pub use server::{ServerClient, ServerConfig, TranslateRequest, TranslateResponse};
 pub use service::{Backend, Service, ServiceConfig};

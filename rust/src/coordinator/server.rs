@@ -1,0 +1,934 @@
+//! Online serving: latency-aware dynamic batching over the INT8 engine.
+//!
+//! `Service::run` consumes a whole corpus up front — the offline
+//! throughput path behind every Fig 6/8 number.  This module adds the
+//! *request* path the ROADMAP's "heavy traffic" north star needs:
+//!
+//! ```text
+//! submit() -> [AdmissionQueue]  -> [BatchFormer] -> [BatchQueue] -> shard 0 (Engine)
+//!   bounded, sheds when full       closes a batch     bounded        shard 1 (Engine)
+//!                                  on token budget                   ...
+//!                                  or max-wait deadline
+//! ```
+//!
+//! * [`AdmissionQueue`] — bounded request queue; `try_admit` never
+//!   blocks the caller and *sheds* (rejects) when full, so overload
+//!   degrades by dropping requests instead of ballooning memory;
+//! * [`BatchFormer`] — the dynamic batcher: an open batch accepts
+//!   requests under the same padded-token admission rule as the offline
+//!   policies ([`fits_budget`]) and is dispatched at the latest
+//!   max-wait after it opened, however unfilled — the knob that trades
+//!   per-request latency against batch fill;
+//! * [`serve`] — the shard pool: N worker streams over a shared
+//!   [`BatchQueue`], each owning its own engine/executable via the same
+//!   [`StreamFactory`] abstraction the offline parallel runner uses.
+//!
+//! Per-request latency is recorded in two stages (enqueue -> batch
+//! close, enqueue -> done) and aggregated into
+//! [`ServerMetrics`] p50/p90/p99 histograms.  [`poisson_offsets`] +
+//! [`replay_trace`] generate and replay synthetic open-loop arrival
+//! traces (`examples/serve_online.rs`, `benches/serving.rs`).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::{LatencyStats, ServerMetrics};
+use crate::coordinator::service::{Backend, DEFAULT_TOKEN_BUDGET};
+use crate::data::dataset::Pair;
+use crate::pipeline::batch::{pad_rows, Batch};
+use crate::pipeline::parallel::{core_partition, num_cpus, set_affinity, StreamFactory};
+use crate::pipeline::policy::fits_budget;
+use crate::pipeline::queue::BatchQueue;
+use crate::quant::calibrate::CalibrationMode;
+use crate::util::rng::SplitMix64;
+
+/// Online-serving configuration (the `serve` subcommand's knobs).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// which engine each shard owns
+    pub backend: Backend,
+    /// worker streams, each with its own engine/executable
+    pub shards: usize,
+    /// deadline: an open batch is dispatched at most this long after it
+    /// opened, however empty it still is
+    pub max_wait: Duration,
+    /// padded-token budget per dynamic batch (same meaning as the
+    /// offline `TokenBudget`/`BinPack` policies)
+    pub token_budget: usize,
+    /// row cap per dynamic batch (AOT buckets are compiled per row count)
+    pub max_batch_rows: usize,
+    /// admission-queue bound: requests beyond this are shed
+    pub queue_capacity: usize,
+    /// longest source (in tokens) admission accepts; longer requests
+    /// are shed rather than allowed to crash a shard downstream.
+    /// `Service::serve` clamps this to what the backend can actually
+    /// decode (the model's `max_src_len` / the AOT buckets' `src_len`);
+    /// `None` means no explicit cap.
+    pub max_src_len: Option<usize>,
+    pub pin_cores: bool,
+    pub max_decode_len: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+            shards: 2,
+            max_wait: Duration::from_millis(20),
+            token_budget: DEFAULT_TOKEN_BUDGET,
+            max_batch_rows: 64,
+            queue_capacity: 256,
+            max_src_len: None,
+            pin_cores: false,
+            max_decode_len: 56,
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn label(&self) -> String {
+        format!(
+            "online {} {}sh wait{}ms tb{}",
+            self.backend.label(),
+            self.shards.max(1),
+            self.max_wait.as_millis(),
+            self.token_budget,
+        )
+    }
+}
+
+/// An individual translation request admitted to the server.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TranslateRequest {
+    /// caller-chosen identity, echoed in the response (corpus index in
+    /// the replay harnesses)
+    pub id: usize,
+    pub src: Vec<u32>,
+}
+
+impl TranslateRequest {
+    /// One request per corpus pair, ids = slice indices — the replay
+    /// harnesses' convention (CLI `serve`, `examples/serve_online.rs`,
+    /// `benches/serving.rs`).
+    pub fn from_pairs(pairs: &[Pair]) -> Vec<TranslateRequest> {
+        pairs
+            .iter()
+            .enumerate()
+            .map(|(i, p)| TranslateRequest {
+                id: i,
+                src: p.src.clone(),
+            })
+            .collect()
+    }
+}
+
+/// A completed request with its latency breakdown (seconds).
+#[derive(Debug, Clone)]
+pub struct TranslateResponse {
+    pub id: usize,
+    pub out: Vec<u32>,
+    /// enqueue -> batch close: time spent waiting in the dynamic batcher
+    pub queue_secs: f64,
+    /// enqueue -> translation done: what the caller experiences
+    pub total_secs: f64,
+}
+
+/// A request waiting in the admission queue / open batch.
+struct Pending {
+    req: TranslateRequest,
+    enqueued: Instant,
+}
+
+/// A closed batch heading to a shard, with per-request enqueue times.
+pub struct FormedBatch {
+    pub batch: Batch,
+    /// per-row enqueue instants (parallel to `batch.indices`)
+    enqueued: Vec<Instant>,
+    /// when the batcher sealed this batch
+    closed_at: Instant,
+}
+
+// ---------------------------------------------------------------------------
+// admission queue
+// ---------------------------------------------------------------------------
+
+struct AdmissionInner {
+    items: VecDeque<Pending>,
+    closed: bool,
+    accepted: u64,
+    shed: u64,
+}
+
+/// Bounded request queue with non-blocking, load-shedding admission.
+pub struct AdmissionQueue {
+    inner: Mutex<AdmissionInner>,
+    not_empty: Condvar,
+    capacity: usize,
+    /// longest admissible source; over-long (or empty) requests are
+    /// shed here instead of panicking a shard downstream
+    max_src_len: Option<usize>,
+}
+
+enum Popped {
+    Item(Pending),
+    TimedOut,
+    Closed,
+}
+
+impl AdmissionQueue {
+    fn new(capacity: usize, max_src_len: Option<usize>) -> Self {
+        AdmissionQueue {
+            inner: Mutex::new(AdmissionInner {
+                items: VecDeque::new(),
+                closed: false,
+                accepted: 0,
+                shed: 0,
+            }),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+            max_src_len,
+        }
+    }
+
+    /// Admit a request, or shed it (returning `false`) when the queue
+    /// is at capacity or closed, or the request is malformed (empty, or
+    /// longer than the backend can decode).  Never blocks the caller.
+    fn try_admit(&self, req: TranslateRequest) -> bool {
+        let malformed =
+            req.src.is_empty() || self.max_src_len.is_some_and(|cap| req.src.len() > cap);
+        let mut g = self.inner.lock().unwrap();
+        if malformed || g.closed || g.items.len() >= self.capacity {
+            g.shed += 1;
+            return false;
+        }
+        g.items.push_back(Pending {
+            req,
+            enqueued: Instant::now(),
+        });
+        g.accepted += 1;
+        self.not_empty.notify_one();
+        true
+    }
+
+    fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+    }
+
+    fn shed(&self) -> u64 {
+        self.inner.lock().unwrap().shed
+    }
+
+    fn accepted(&self) -> u64 {
+        self.inner.lock().unwrap().accepted
+    }
+
+    /// Batcher-side pop: wait for the next request, the deadline
+    /// (when one is given), or close-and-drained — whichever first.
+    fn pop_until(&self, deadline: Option<Instant>) -> Popped {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(p) = g.items.pop_front() {
+                return Popped::Item(p);
+            }
+            if g.closed {
+                return Popped::Closed;
+            }
+            match deadline {
+                None => g = self.not_empty.wait(g).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Popped::TimedOut;
+                    }
+                    g = self.not_empty.wait_timeout(g, d - now).unwrap().0;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dynamic batch former
+// ---------------------------------------------------------------------------
+
+/// The dynamic batcher: accumulates admitted requests into an open
+/// batch and closes it when (a) the next request no longer fits the
+/// padded-token budget / row cap — the exact [`fits_budget`] rule the
+/// offline `TokenBudget` policy packs by — or (b) the max-wait deadline
+/// expires, bounding the batching delay of the oldest waiting request.
+pub struct BatchFormer {
+    token_budget: usize,
+    max_rows: usize,
+    max_wait: Duration,
+    open: Vec<Pending>,
+    open_max_len: usize,
+    opened_at: Option<Instant>,
+    formed: usize,
+}
+
+impl BatchFormer {
+    pub fn new(token_budget: usize, max_rows: usize, max_wait: Duration) -> Self {
+        assert!(token_budget > 0 && max_rows > 0);
+        BatchFormer {
+            token_budget,
+            max_rows,
+            max_wait,
+            open: Vec::new(),
+            open_max_len: 0,
+            opened_at: None,
+            formed: 0,
+        }
+    }
+
+    /// Offer a request (with its admission time).  When the open batch
+    /// cannot also hold it, that batch is closed and returned; the
+    /// request then opens a fresh batch.  A single request longer than
+    /// the whole budget still forms its own singleton batch — nothing
+    /// is ever dropped past admission.
+    pub fn offer(&mut self, req: TranslateRequest, enqueued: Instant) -> Option<FormedBatch> {
+        let len = req.src.len();
+        let mut closed = None;
+        if !self.open.is_empty()
+            && !fits_budget(
+                self.open.len(),
+                self.open_max_len,
+                len,
+                self.token_budget,
+                self.max_rows,
+            )
+        {
+            closed = self.flush();
+        }
+        if self.open.is_empty() {
+            self.opened_at = Some(Instant::now());
+        }
+        self.open_max_len = self.open_max_len.max(len);
+        self.open.push(Pending { req, enqueued });
+        closed
+    }
+
+    /// The open batch can accept no further request: the row cap is
+    /// reached, or even a 1-token row would break the padded budget
+    /// (e.g. an over-budget singleton).  Waiting longer cannot improve
+    /// fill, only latency.
+    fn saturated(&self) -> bool {
+        !self.open.is_empty()
+            && !fits_budget(self.open.len(), self.open_max_len, 1, self.token_budget, self.max_rows)
+    }
+
+    /// When the open batch must be dispatched at the latest: its open
+    /// instant plus the max wait — or immediately once the batch is
+    /// [`saturated`](Self::saturated), so a full batch never idles out
+    /// the deadline waiting for a request it could not take anyway.
+    /// `None` while no batch is open.
+    pub fn deadline(&self) -> Option<Instant> {
+        let opened = self.opened_at?;
+        if self.saturated() {
+            return Some(opened);
+        }
+        Some(opened + self.max_wait)
+    }
+
+    /// Rows currently waiting in the open batch.
+    pub fn open_rows(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Close and return the open batch (deadline expiry or shutdown).
+    pub fn flush(&mut self) -> Option<FormedBatch> {
+        if self.open.is_empty() {
+            return None;
+        }
+        let pend = std::mem::take(&mut self.open);
+        self.open_max_len = 0;
+        self.opened_at = None;
+        let id = self.formed;
+        self.formed += 1;
+        let mut indices = Vec::with_capacity(pend.len());
+        let mut rows = Vec::with_capacity(pend.len());
+        let mut enqueued = Vec::with_capacity(pend.len());
+        for p in pend {
+            indices.push(p.req.id);
+            rows.push(p.req.src);
+            enqueued.push(p.enqueued);
+        }
+        Some(FormedBatch {
+            batch: pad_rows(id, indices, rows),
+            enqueued,
+            closed_at: Instant::now(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the server
+// ---------------------------------------------------------------------------
+
+/// Caller-side handle: submit requests while the shard pool runs.
+pub struct ServerClient<'a> {
+    admission: &'a AdmissionQueue,
+}
+
+impl ServerClient<'_> {
+    /// Submit one request; `false` means it was shed (backpressure).
+    pub fn submit(&self, id: usize, src: Vec<u32>) -> bool {
+        self.submit_request(TranslateRequest { id, src })
+    }
+
+    pub fn submit_request(&self, req: TranslateRequest) -> bool {
+        self.admission.try_admit(req)
+    }
+
+    /// Requests shed so far.
+    pub fn shed(&self) -> u64 {
+        self.admission.shed()
+    }
+
+    /// Requests admitted so far.
+    pub fn accepted(&self) -> u64 {
+        self.admission.accepted()
+    }
+}
+
+/// Per-shard accumulation (identical shape to the offline
+/// [`crate::pipeline::parallel::StreamReport`] accounting).
+#[derive(Default)]
+struct ShardStats {
+    batches: usize,
+    requests: usize,
+    tokens: usize,
+    padded_tokens: usize,
+    busy_secs: f64,
+}
+
+/// Close a [`BatchQueue`] when dropped.  Every stage of the serving
+/// pipeline holds one of these: if a stage panics, its peers would
+/// otherwise block forever on a queue nobody will touch again, turning
+/// the panic into a hung scope join.  On normal exit the repeat close
+/// is a no-op.
+struct CloseQueueOnDrop<'a, T>(&'a BatchQueue<T>);
+
+impl<T> Drop for CloseQueueOnDrop<'_, T> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// [`CloseQueueOnDrop`] for the admission queue: closes it when the
+/// drive stage exits, normally *or* by panic.
+struct CloseAdmissionOnDrop<'a>(&'a AdmissionQueue);
+
+impl Drop for CloseAdmissionOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// Run an online server: a dynamic batcher plus `cfg.shards` worker
+/// streams, each owning the translate function `factory` builds for it
+/// (an `Engine` or a PJRT executable — the same [`StreamFactory`]
+/// contract as the offline parallel runner).
+///
+/// `drive` runs on the calling thread with a [`ServerClient`] and
+/// represents the outside world submitting requests; when it returns,
+/// admission closes, the queues drain, the shards join, and the
+/// completed responses (sorted by request id) are returned with the
+/// run's [`ServerMetrics`].
+pub fn serve<F, D, R>(
+    cfg: &ServerConfig,
+    factory: F,
+    drive: D,
+) -> (ServerMetrics, Vec<TranslateResponse>, R)
+where
+    F: StreamFactory,
+    D: FnOnce(&ServerClient<'_>) -> R,
+{
+    let shards = cfg.shards.max(1);
+    let admission = AdmissionQueue::new(cfg.queue_capacity, cfg.max_src_len);
+    let dispatch: BatchQueue<FormedBatch> = BatchQueue::new(shards * 2);
+    let done: Mutex<Vec<TranslateResponse>> = Mutex::new(Vec::new());
+    let queue_lat = Mutex::new(LatencyStats::default());
+    let total_lat = Mutex::new(LatencyStats::default());
+    let batch_lat = Mutex::new(LatencyStats::default());
+    let partitions = core_partition(num_cpus(), shards);
+    let pin_cores = cfg.pin_cores;
+    let t0 = Instant::now();
+
+    let (drive_out, shard_stats) = crossbeam_utils::thread::scope(|scope| {
+        // panic backstop: if anything on this thread panics (a shard
+        // factory, the drive closure, a join unwrap), close both queues
+        // during unwind so the spawned threads can drain and exit —
+        // otherwise the scope's implicit join would hang forever
+        // instead of propagating the panic.  On the normal path both
+        // queues are already closed by the time these drop (no-ops).
+        let _admission_guard = CloseAdmissionOnDrop(&admission);
+        let _dispatch_guard = CloseQueueOnDrop(&dispatch);
+
+        // shard workers: drain formed batches until the queue closes
+        let mut handles = Vec::new();
+        for shard_id in 0..shards {
+            let dispatch = &dispatch;
+            let done = &done;
+            let queue_lat = &queue_lat;
+            let total_lat = &total_lat;
+            let batch_lat = &batch_lat;
+            let cores = partitions[shard_id % partitions.len()].clone();
+            let mut translate = factory.make(shard_id);
+            handles.push(scope.spawn(move |_| {
+                let _guard = CloseQueueOnDrop(dispatch);
+                if pin_cores {
+                    set_affinity(&cores);
+                }
+                let mut stats = ShardStats::default();
+                while let Some(fb) = dispatch.pop() {
+                    let bt = Instant::now();
+                    let outs = translate(&fb.batch);
+                    assert_eq!(
+                        outs.len(),
+                        fb.batch.len(),
+                        "translate must return one output row per batch row"
+                    );
+                    let exec = bt.elapsed();
+                    batch_lat.lock().unwrap().record(exec);
+                    stats.batches += 1;
+                    stats.requests += fb.batch.len();
+                    stats.tokens += fb.batch.tokens;
+                    stats.padded_tokens += fb.batch.padded_tokens();
+                    stats.busy_secs += exec.as_secs_f64();
+                    let now = Instant::now();
+                    let mut d = done.lock().unwrap();
+                    let mut ql = queue_lat.lock().unwrap();
+                    let mut tl = total_lat.lock().unwrap();
+                    let rows = fb.batch.indices.iter().zip(&fb.enqueued).zip(outs);
+                    for ((&id, &enq), out) in rows {
+                        let total = now.saturating_duration_since(enq);
+                        let queued = fb.closed_at.saturating_duration_since(enq);
+                        ql.record(queued);
+                        tl.record(total);
+                        d.push(TranslateResponse {
+                            id,
+                            out,
+                            queue_secs: queued.as_secs_f64(),
+                            total_secs: total.as_secs_f64(),
+                        });
+                    }
+                }
+                stats
+            }));
+        }
+
+        // the batcher: admission queue -> dynamic batches -> dispatch.
+        // A failed push means a panicking shard closed the queue early
+        // (see CloseQueueOnDrop): the batch is dropped while the panic
+        // propagates, so latency is only ever recorded for batches a
+        // shard actually executed.
+        let batcher = {
+            let admission = &admission;
+            let dispatch = &dispatch;
+            let mut former = BatchFormer::new(cfg.token_budget, cfg.max_batch_rows, cfg.max_wait);
+            scope.spawn(move |_| {
+                // closes dispatch on exit — normal (drained) or panic
+                let _guard = CloseQueueOnDrop(dispatch);
+                loop {
+                    match admission.pop_until(former.deadline()) {
+                        Popped::Item(p) => {
+                            if let Some(fb) = former.offer(p.req, p.enqueued) {
+                                let _ = dispatch.push(fb);
+                            }
+                        }
+                        Popped::TimedOut => {
+                            if let Some(fb) = former.flush() {
+                                let _ = dispatch.push(fb);
+                            }
+                        }
+                        Popped::Closed => {
+                            if let Some(fb) = former.flush() {
+                                let _ = dispatch.push(fb);
+                            }
+                            break;
+                        }
+                    }
+                }
+            })
+        };
+
+        // the outside world, on the calling thread
+        let client = ServerClient {
+            admission: &admission,
+        };
+        let out = drive(&client);
+        admission.close();
+        batcher.join().unwrap();
+        let stats: Vec<ShardStats> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        (out, stats)
+    })
+    .unwrap();
+
+    let wall = t0.elapsed().as_secs_f64();
+    let mut responses = done.into_inner().unwrap();
+    responses.sort_by_key(|r| r.id);
+    let busy: f64 = shard_stats.iter().map(|s| s.busy_secs).sum();
+    let metrics = ServerMetrics {
+        config: cfg.label(),
+        shards,
+        requests: shard_stats.iter().map(|s| s.requests).sum(),
+        shed: admission.shed() as usize,
+        batches: shard_stats.iter().map(|s| s.batches).sum(),
+        tokens: shard_stats.iter().map(|s| s.tokens).sum(),
+        padded_tokens: shard_stats.iter().map(|s| s.padded_tokens).sum(),
+        wall_secs: wall,
+        utilization: if wall > 0.0 {
+            busy / (wall * shards as f64)
+        } else {
+            0.0
+        },
+        queue_latency: queue_lat.into_inner().unwrap(),
+        total_latency: total_lat.into_inner().unwrap(),
+        batch_latency: batch_lat.into_inner().unwrap(),
+    };
+    (metrics, responses, drive_out)
+}
+
+// ---------------------------------------------------------------------------
+// synthetic arrival traces
+// ---------------------------------------------------------------------------
+
+/// Arrival offsets (from trace start) of a Poisson process at `rate`
+/// requests/second: i.i.d. exponential inter-arrival gaps, seeded so a
+/// trace is exactly reproducible.
+pub fn poisson_offsets(seed: u64, n: usize, rate: f64) -> Vec<Duration> {
+    assert!(rate > 0.0, "offered load must be positive");
+    let mut rng = SplitMix64::new(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            let u = rng.f64().max(1e-12);
+            t += -u.ln() / rate;
+            Duration::from_secs_f64(t)
+        })
+        .collect()
+}
+
+/// Replay `reqs` open-loop against the server: request `i` is submitted
+/// `offsets[i]` after the replay starts, regardless of completions
+/// (shed requests are *not* retried).  Returns (submitted, shed).
+pub fn replay_trace(
+    client: &ServerClient<'_>,
+    reqs: Vec<TranslateRequest>,
+    offsets: &[Duration],
+) -> (usize, usize) {
+    assert_eq!(reqs.len(), offsets.len(), "one offset per request");
+    let t0 = Instant::now();
+    let mut submitted = 0usize;
+    let mut shed = 0usize;
+    for (req, &off) in reqs.into_iter().zip(offsets) {
+        if let Some(wait) = off.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        if client.submit_request(req) {
+            submitted += 1;
+        } else {
+            shed += 1;
+        }
+    }
+    (submitted, shed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, len: usize) -> TranslateRequest {
+        TranslateRequest {
+            id,
+            src: vec![3; len],
+        }
+    }
+
+    /// Stub shard: echo the (padded) source rows back.
+    fn echo_factory(_id: usize) -> impl FnMut(&Batch) -> Vec<Vec<u32>> + Send {
+        |b: &Batch| b.src.clone()
+    }
+
+    fn echo_cfg() -> ServerConfig {
+        ServerConfig {
+            shards: 2,
+            max_wait: Duration::from_millis(5),
+            token_budget: 64,
+            max_batch_rows: 8,
+            queue_capacity: 1024,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn former_closes_on_token_budget() {
+        // budget 32, rows of 8 tokens: the 5th row would make 5*8 = 40
+        let mut f = BatchFormer::new(32, 64, Duration::from_secs(10));
+        let now = Instant::now();
+        for i in 0..4 {
+            assert!(f.offer(req(i, 8), now).is_none(), "row {i} must fit");
+        }
+        let closed = f.offer(req(4, 8), now).expect("budget must close batch");
+        assert_eq!(closed.batch.len(), 4);
+        assert_eq!(closed.batch.padded_tokens(), 32);
+        assert_eq!(f.open_rows(), 1, "overflow row opens the next batch");
+    }
+
+    #[test]
+    fn former_closes_on_row_cap() {
+        let mut f = BatchFormer::new(1_000_000, 3, Duration::from_secs(10));
+        let now = Instant::now();
+        assert!(f.offer(req(0, 2), now).is_none());
+        assert!(f.offer(req(1, 2), now).is_none());
+        assert!(f.offer(req(2, 2), now).is_none());
+        let closed = f.offer(req(3, 2), now).expect("row cap must close batch");
+        assert_eq!(closed.batch.len(), 3);
+    }
+
+    #[test]
+    fn former_repad_counts_against_budget() {
+        // 2 rows of 4 tokens (padded 8), then a 16-token row: it would
+        // re-pad the batch to 3 x 16 = 48 > 32, so the batch closes
+        let mut f = BatchFormer::new(32, 64, Duration::from_secs(10));
+        let now = Instant::now();
+        assert!(f.offer(req(0, 4), now).is_none());
+        assert!(f.offer(req(1, 4), now).is_none());
+        let closed = f.offer(req(2, 16), now).expect("re-pad must close");
+        assert_eq!(closed.batch.len(), 2);
+        assert_eq!(closed.batch.max_len, 4);
+    }
+
+    #[test]
+    fn former_oversize_request_forms_singleton() {
+        let mut f = BatchFormer::new(8, 64, Duration::from_secs(10));
+        let now = Instant::now();
+        assert!(f.offer(req(0, 100), now).is_none(), "nothing to close yet");
+        let closed = f.flush().expect("open singleton");
+        assert_eq!(closed.batch.len(), 1);
+        assert!(closed.batch.padded_tokens() > 8, "oversize is kept whole");
+    }
+
+    #[test]
+    fn former_deadline_tracks_batch_open() {
+        let mut f = BatchFormer::new(1024, 64, Duration::from_millis(50));
+        assert!(f.deadline().is_none(), "no open batch, no deadline");
+        let before = Instant::now();
+        f.offer(req(0, 4), before);
+        let d = f.deadline().expect("open batch has a deadline");
+        assert!(d >= before + Duration::from_millis(50));
+        assert!(d <= Instant::now() + Duration::from_millis(50));
+        f.flush();
+        assert!(f.deadline().is_none(), "flush clears the deadline");
+    }
+
+    #[test]
+    fn former_ids_are_sequential() {
+        let mut f = BatchFormer::new(16, 1, Duration::from_secs(1));
+        let now = Instant::now();
+        let mut ids = Vec::new();
+        for i in 0..5 {
+            if let Some(fb) = f.offer(req(i, 4), now) {
+                ids.push(fb.batch.id);
+            }
+        }
+        if let Some(fb) = f.flush() {
+            ids.push(fb.batch.id);
+        }
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn admission_sheds_at_capacity() {
+        let q = AdmissionQueue::new(2, None);
+        assert!(q.try_admit(req(0, 4)));
+        assert!(q.try_admit(req(1, 4)));
+        assert!(!q.try_admit(req(2, 4)), "third must shed");
+        assert_eq!(q.accepted(), 2);
+        assert_eq!(q.shed(), 1);
+        q.close();
+        assert!(!q.try_admit(req(3, 4)), "closed queue sheds");
+    }
+
+    #[test]
+    fn admission_sheds_malformed_requests() {
+        // a malformed request must be shed, never panic a shard
+        let q = AdmissionQueue::new(8, Some(10));
+        assert!(q.try_admit(req(0, 10)), "at the cap is fine");
+        assert!(!q.try_admit(req(1, 11)), "over-long must shed");
+        assert!(!q.try_admit(req(2, 0)), "empty must shed");
+        assert_eq!(q.accepted(), 1);
+        assert_eq!(q.shed(), 2);
+        // with no cap, only emptiness is malformed
+        let q = AdmissionQueue::new(8, None);
+        assert!(q.try_admit(req(0, 10_000)));
+        assert!(!q.try_admit(req(1, 0)));
+    }
+
+    #[test]
+    fn former_saturated_batch_is_due_immediately() {
+        // row cap reached: no future request can join, dispatch now
+        let mut f = BatchFormer::new(1024, 1, Duration::from_secs(10));
+        f.offer(req(0, 4), Instant::now());
+        assert!(f.deadline().unwrap() <= Instant::now());
+        // over-budget singleton: same
+        let mut f = BatchFormer::new(8, 64, Duration::from_secs(10));
+        f.offer(req(1, 100), Instant::now());
+        assert!(f.deadline().unwrap() <= Instant::now());
+        // an unsaturated batch keeps the max-wait deadline
+        let mut f = BatchFormer::new(1024, 64, Duration::from_secs(10));
+        f.offer(req(2, 4), Instant::now());
+        assert!(f.deadline().unwrap() > Instant::now() + Duration::from_secs(5));
+    }
+
+    #[test]
+    fn admission_pop_times_out_then_drains() {
+        let q = AdmissionQueue::new(8, None);
+        let deadline = Some(Instant::now() + Duration::from_millis(10));
+        match q.pop_until(deadline) {
+            Popped::TimedOut => {}
+            _ => panic!("empty queue must time out at the deadline"),
+        }
+        q.try_admit(req(7, 4));
+        q.close();
+        match q.pop_until(None) {
+            Popped::Item(p) => assert_eq!(p.req.id, 7),
+            _ => panic!("closed queue drains before reporting Closed"),
+        }
+        match q.pop_until(None) {
+            Popped::Closed => {}
+            _ => panic!("drained closed queue reports Closed"),
+        }
+    }
+
+    #[test]
+    fn serve_echoes_every_request_in_id_order() {
+        let cfg = echo_cfg();
+        let (metrics, responses, submitted) = serve(&cfg, echo_factory, |client| {
+            let mut n = 0;
+            for i in 0..100 {
+                if client.submit(i, vec![3 + (i as u32 % 5); 1 + i % 7]) {
+                    n += 1;
+                }
+            }
+            n
+        });
+        assert_eq!(submitted, 100);
+        assert_eq!(metrics.requests, 100);
+        assert_eq!(metrics.shed, 0);
+        assert_eq!(responses.len(), 100);
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i, "responses sorted by request id");
+            // echoed rows are padded to their batch max; the real
+            // prefix must match the submitted source
+            assert_eq!(&r.out[..1 + i % 7], &vec![3 + (i as u32 % 5); 1 + i % 7][..]);
+            assert!(r.queue_secs >= 0.0 && r.total_secs >= r.queue_secs);
+        }
+        assert!(metrics.batches >= 100 / cfg.max_batch_rows);
+        assert_eq!(metrics.queue_latency.count(), 100);
+        assert_eq!(metrics.total_latency.count(), 100);
+        assert!(metrics.fill_ratio() > 0.0 && metrics.fill_ratio() <= 1.0);
+    }
+
+    #[test]
+    fn serve_with_no_requests_terminates_cleanly() {
+        let cfg = echo_cfg();
+        let (metrics, responses, ()) = serve(&cfg, echo_factory, |_client| {});
+        assert_eq!(metrics.requests, 0);
+        assert_eq!(metrics.batches, 0);
+        assert!(responses.is_empty());
+    }
+
+    #[test]
+    fn serve_sheds_under_overload_but_answers_admitted() {
+        // one slow shard, tiny admission queue: a burst must shed
+        let cfg = ServerConfig {
+            shards: 1,
+            max_wait: Duration::from_millis(1),
+            token_budget: 8,
+            max_batch_rows: 1,
+            queue_capacity: 2,
+            ..Default::default()
+        };
+        let slow = |_id: usize| {
+            |b: &Batch| {
+                std::thread::sleep(Duration::from_millis(5));
+                b.src.clone()
+            }
+        };
+        let (metrics, responses, offered) = serve(&cfg, slow, |client| {
+            let offered = 64;
+            for i in 0..offered {
+                client.submit(i, vec![4; 4]);
+            }
+            offered
+        });
+        assert_eq!(metrics.requests + metrics.shed, offered);
+        assert!(metrics.shed > 0, "burst into a 2-slot queue must shed");
+        assert_eq!(responses.len(), metrics.requests);
+        assert!(metrics.shed_ratio() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "drive blew up")]
+    fn serve_propagates_drive_panic_instead_of_hanging() {
+        // without the close-on-drop guards the batcher would wait on an
+        // admission queue nobody will close and the scope join would
+        // hang forever instead of reporting the panic
+        let cfg = echo_cfg();
+        let _ = serve(&cfg, echo_factory, |_client| -> () { panic!("drive blew up") });
+    }
+
+    #[test]
+    #[should_panic]
+    fn serve_propagates_shard_panic_instead_of_hanging() {
+        // a panicking shard closes the dispatch queue on unwind, so the
+        // batcher's pushes fail fast instead of blocking on a full
+        // queue with no consumers left
+        let cfg = ServerConfig {
+            shards: 1,
+            max_wait: Duration::from_millis(1),
+            token_budget: 8,
+            max_batch_rows: 1,
+            queue_capacity: 4,
+            ..Default::default()
+        };
+        let boom = |_id: usize| |_b: &Batch| -> Vec<Vec<u32>> { panic!("shard blew up") };
+        let _ = serve(&cfg, boom, |client| {
+            for i in 0..16 {
+                client.submit(i, vec![3; 4]);
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        });
+    }
+
+    #[test]
+    fn poisson_offsets_are_monotone_and_scale_with_rate() {
+        let fast = poisson_offsets(7, 200, 1000.0);
+        let slow = poisson_offsets(7, 200, 10.0);
+        assert_eq!(fast.len(), 200);
+        for w in fast.windows(2) {
+            assert!(w[0] <= w[1], "offsets must be nondecreasing");
+        }
+        // same seed, 100x the rate -> ~100x shorter horizon (tolerance
+        // covers Duration's nanosecond quantization)
+        let ratio = slow[199].as_secs_f64() / fast[199].as_secs_f64();
+        assert!((ratio - 100.0).abs() < 1e-3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn replay_trace_submits_everything_at_full_speed() {
+        let cfg = echo_cfg();
+        let reqs: Vec<TranslateRequest> = (0..40).map(|i| req(i, 1 + i % 5)).collect();
+        let offsets = poisson_offsets(11, 40, 50_000.0);
+        let (metrics, responses, (submitted, shed)) = serve(&cfg, echo_factory, |client| {
+            replay_trace(client, reqs, &offsets)
+        });
+        assert_eq!(submitted + shed, 40);
+        assert_eq!(metrics.requests, submitted);
+        assert_eq!(responses.len(), submitted);
+    }
+}

@@ -13,7 +13,8 @@ use std::path::PathBuf;
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::coordinator::metrics::{LatencyStats, RunMetrics};
+use crate::coordinator::metrics::{LatencyStats, RunMetrics, ServerMetrics};
+use crate::coordinator::server::{self, ServerClient, ServerConfig, TranslateResponse};
 use crate::data::bleu::{corpus_bleu, strip_special};
 use crate::data::dataset::{Dataset, Pair};
 use crate::data::sorting::{sort_indices, SortOrder};
@@ -172,6 +173,20 @@ impl Service {
         Service::open(crate::default_artifacts_dir())
     }
 
+    /// Open the default artifacts, or `None` with a note on stderr when
+    /// they are absent.  Bench targets use this to degrade to a no-op
+    /// in bare checkouts, so `cargo bench -- --quick` can smoke-run in
+    /// CI without `make artifacts` (mirroring the tests' skip pattern).
+    pub fn open_default_or_skip() -> Option<Service> {
+        match Service::open_default() {
+            Ok(svc) => Some(svc),
+            Err(e) => {
+                eprintln!("skipping: artifacts unavailable ({e})");
+                None
+            }
+        }
+    }
+
     pub fn dataset(&self) -> anyhow::Result<Dataset> {
         Dataset::load(&self.dir.join("dataset.json"))
     }
@@ -279,6 +294,95 @@ impl Service {
         };
         Ok((metrics, outputs))
     }
+
+    /// Serve an online request stream (the `serve` subcommand's path).
+    ///
+    /// Starts `cfg.shards` worker streams — each owning its own engine
+    /// (or per-thread PJRT executable cache) exactly like the offline
+    /// parallel runner — behind the dynamic batcher, then calls `drive`
+    /// with a [`ServerClient`] to submit requests.  When `drive`
+    /// returns, admission closes, the queues drain and the completed
+    /// responses come back sorted by request id alongside the run's
+    /// [`ServerMetrics`].
+    ///
+    /// Requests the backend cannot decode are shed at admission rather
+    /// than allowed to panic a shard: the source-length cap is clamped
+    /// to the model's `max_src_len` (engine backends) or the compiled
+    /// buckets' `src_len` (runtime), and on the [`Backend::Runtime`]
+    /// path the row cap is additionally clamped to the largest AOT
+    /// bucket (the online batcher never splits a batch).
+    pub fn serve<D, R>(
+        &self,
+        cfg: &ServerConfig,
+        drive: D,
+    ) -> anyhow::Result<(ServerMetrics, Vec<TranslateResponse>, R)>
+    where
+        D: FnOnce(&ServerClient<'_>) -> R,
+    {
+        let max_len = cfg.max_decode_len;
+        match cfg.backend {
+            Backend::EngineF32 | Backend::EngineInt8(_) => {
+                // admission sheds what the engine cannot decode, so one
+                // over-long request degrades to a reject, not a panic
+                let src_cap = cfg.max_src_len.unwrap_or(usize::MAX);
+                let cfg = ServerConfig {
+                    max_src_len: Some(src_cap.min(self.model_cfg.max_src_len)),
+                    ..cfg.clone()
+                };
+                // build one engine eagerly: fails fast on broken
+                // artifacts, then is handed to the first shard instead
+                // of being thrown away (engine construction quantizes
+                // every weight — the most expensive object here)
+                let first = Mutex::new(Some(self.build_engine(cfg.backend)?));
+                let factory = |_id: usize| {
+                    let mut engine = first.lock().unwrap().take().unwrap_or_else(|| {
+                        self.build_engine(cfg.backend).expect("engine construction")
+                    });
+                    move |b: &Batch| engine.translate_greedy(&b.src, max_len)
+                };
+                Ok(server::serve(&cfg, factory, drive))
+            }
+            Backend::Runtime(prec) => {
+                let index = self
+                    .aot_index
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("no hlo_index.json in artifacts"))?;
+                // dynamic batches must fit an AOT bucket: select() falls
+                // back to the largest bucket and translate() rejects
+                // over-full batches, so clamp the row cap up front —
+                // and shed sources longer than any bucket can decode
+                let bucket_cap = index
+                    .batch_buckets(prec)
+                    .into_iter()
+                    .max()
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("no {} buckets in hlo_index.json", prec.as_str())
+                    })?;
+                let src_cap = index
+                    .buckets
+                    .iter()
+                    .filter(|b| b.precision == prec)
+                    .map(|b| b.src_len)
+                    .min()
+                    .unwrap_or(0);
+                let cfg = ServerConfig {
+                    max_batch_rows: cfg.max_batch_rows.min(bucket_cap),
+                    max_src_len: Some(cfg.max_src_len.unwrap_or(usize::MAX).min(src_cap)),
+                    ..cfg.clone()
+                };
+                let factory = |_id: usize| {
+                    let index = index.clone();
+                    // per-shard compile (thread-bound PJRT client)
+                    let mut cache = ExeCache(Vec::new());
+                    move |b: &Batch| {
+                        let exe = cache.get_or_compile(&index, prec, b.len());
+                        exe.translate(&b.src).expect("translate")
+                    }
+                };
+                Ok(server::serve(&cfg, factory, drive))
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -331,6 +435,43 @@ mod tests {
         let (_, out_s) = svc.run(&ds.test[..32], &cfg_serial).unwrap();
         let (_, out_p) = svc.run(&ds.test[..32], &cfg_par).unwrap();
         assert_eq!(out_s, out_p, "parallel must not change results");
+    }
+
+    #[test]
+    fn online_serve_matches_offline_run() {
+        // the ISSUE acceptance criterion: online dynamic batching must
+        // be invisible to correctness — same corpus, same outputs as
+        // the offline path, whatever batches the former happened to cut
+        let Some(svc) = service() else { return };
+        let ds = svc.dataset().unwrap();
+        let pairs = &ds.test[..24];
+        let offline_cfg = ServiceConfig {
+            backend: Backend::EngineF32,
+            parallel: false,
+            batch_size: 8,
+            ..Default::default()
+        };
+        let (_, offline) = svc.run(pairs, &offline_cfg).unwrap();
+        let server_cfg = ServerConfig {
+            backend: Backend::EngineF32,
+            shards: 2,
+            max_batch_rows: 8,
+            ..Default::default()
+        };
+        let (metrics, responses, _) = svc
+            .serve(&server_cfg, |client| {
+                for (i, p) in pairs.iter().enumerate() {
+                    assert!(client.submit(i, p.src.clone()), "admission shed row {i}");
+                }
+            })
+            .unwrap();
+        assert_eq!(metrics.requests, pairs.len());
+        assert_eq!(metrics.shed, 0);
+        assert_eq!(responses.len(), pairs.len());
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert_eq!(r.out, offline[i], "online row {i} diverges from offline");
+        }
     }
 
     #[test]

@@ -105,6 +105,57 @@ mod tests {
     }
 
     #[test]
+    fn empty_hypothesis_scores_zero_without_panicking() {
+        // a decoder that emits EOS immediately produces an empty row;
+        // scoring must degrade to 0, not divide by zero
+        let refs = vec![vec![3, 4, 5, 6, 7]];
+        assert_eq!(corpus_bleu(&[vec![]], &refs), 0.0);
+        // one empty row mixed into otherwise-perfect output still
+        // yields a finite score in [0, 100]
+        let hyps = vec![vec![], vec![3, 4, 5, 6, 7]];
+        let refs2 = vec![vec![3, 4, 5, 6, 7], vec![3, 4, 5, 6, 7]];
+        let b = corpus_bleu(&hyps, &refs2);
+        assert!((0.0..=100.0).contains(&b), "{b}");
+        // all-empty corpus (hyp and ref) is 0, not NaN
+        assert_eq!(corpus_bleu(&[vec![]], &[vec![]]), 0.0);
+    }
+
+    #[test]
+    fn reference_shorter_than_four_tokens_scores_zero() {
+        // BLEU-4 with no smoothing: a 3-token pair has zero 4-gram
+        // counts on both sides, so even a perfect match scores 0 (the
+        // documented behavior of the unsmoothed python reference too)
+        let three = vec![vec![3u32, 4, 5]];
+        assert_eq!(corpus_bleu(&three, &three), 0.0);
+        // but a corpus-mate long enough to supply 4-grams rescues it:
+        // corpus-level counts pool across sentences
+        let hyps = vec![vec![3, 4, 5], vec![10, 11, 12, 13, 14, 15]];
+        let refs = vec![vec![3, 4, 5], vec![10, 11, 12, 13, 14, 15]];
+        let b = corpus_bleu(&hyps, &refs);
+        assert!(b > 0.0 && b <= 100.0, "{b}");
+    }
+
+    #[test]
+    fn brevity_penalty_boundary_is_exact_length_match() {
+        let r = vec![vec![3u32, 4, 5, 6, 7, 8, 9, 10]];
+        // hyp_len == ref_len: bp == 1 exactly, perfect match scores 100
+        assert!((corpus_bleu(&r, &r) - 100.0).abs() < 1e-9);
+        // one token short: bp = exp(1 - ref/hyp) < 1 bites even though
+        // every emitted n-gram is correct
+        let short = vec![r[0][..7].to_vec()];
+        let b_short = corpus_bleu(&short, &r);
+        let expected_bp = (1.0 - 8.0 / 7.0_f64).exp();
+        assert!(b_short < 100.0 * expected_bp + 1e-9, "{b_short}");
+        assert!(b_short > 0.0);
+        // one token long: bp stays exactly 1 (no penalty for verbosity,
+        // only precision loss)
+        let mut long = r[0].clone();
+        long.push(99);
+        let b_long = corpus_bleu(&[long], &r);
+        assert!(b_long < 100.0 && b_long > 0.0, "{b_long}");
+    }
+
+    #[test]
     fn repeated_ngrams_are_clipped() {
         // hyp repeats a token more often than the ref: clipping limits credit
         let h = vec![vec![3, 3, 3, 3, 3]];

@@ -20,12 +20,44 @@ const MC: usize = 64;
 const KC: usize = 256;
 const NC: usize = 512;
 
+/// Explicit kernel selector for [`igemm_with`].
+///
+/// [`use_vnni`] caches the `QUANTNMT_NO_VNNI` environment check in a
+/// `OnceLock`, so a single test binary could never exercise *both*
+/// kernels through [`igemm`].  Passing a `KernelChoice` bypasses the
+/// cached dispatch entirely, letting parity tests force the portable
+/// path and the VNNI path side by side in one process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// cached runtime dispatch: VNNI when available and not disabled,
+    /// with the m >= 2 shape heuristic (what [`igemm`] does)
+    Auto,
+    /// force the portable blocked quad-MAC kernel
+    Portable,
+    /// force the AVX-512 VNNI kernel, even for m == 1 (panics when the
+    /// CPU lacks VNNI — callers gate on [`super::vnni::vnni_available`])
+    Vnni,
+}
+
 /// `c = a * b` with i32 accumulation (c fully overwritten).
 ///
 /// Dispatches to the AVX-512 VNNI kernel when the CPU supports it
 /// (packing B on the fly); otherwise runs the portable blocked
 /// quad-MAC kernel.
 pub fn igemm(m: usize, k: usize, n: usize, a: &[i8], b: &[u8], c: &mut [i32]) {
+    igemm_with(KernelChoice::Auto, m, k, n, a, b, c);
+}
+
+/// [`igemm`] with an explicit kernel choice (see [`KernelChoice`]).
+pub fn igemm_with(
+    choice: KernelChoice,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    b: &[u8],
+    c: &mut [i32],
+) {
     assert_eq!(a.len(), m * k, "a len");
     assert_eq!(b.len(), k * n, "b len");
     assert_eq!(c.len(), m * n, "c len");
@@ -33,12 +65,24 @@ pub fn igemm(m: usize, k: usize, n: usize, a: &[i8], b: &[u8], c: &mut [i32]) {
     if m == 0 || k == 0 || n == 0 {
         return;
     }
-    // Shape-aware kernel choice (§5.2): packing B costs one O(k*n) pass,
-    // amortized over m output rows — below ~2 rows the portable kernel
-    // wins (the paper likewise picks kernels by matrix shape).
-    if m >= 2 && use_vnni() {
+    let vnni = match choice {
+        KernelChoice::Portable => false,
+        KernelChoice::Vnni => {
+            assert!(
+                super::vnni::vnni_available(),
+                "KernelChoice::Vnni forced on a CPU without AVX-512 VNNI"
+            );
+            true
+        }
+        // Shape-aware kernel choice (§5.2): packing B costs one O(k*n)
+        // pass, amortized over m output rows — below ~2 rows the
+        // portable kernel wins (the paper likewise picks kernels by
+        // matrix shape).
+        KernelChoice::Auto => m >= 2 && use_vnni(),
+    };
+    if vnni {
         let bp = super::vnni::PackedB::pack(b, k, n);
-        // SAFETY: feature presence checked by use_vnni().
+        // SAFETY: feature presence checked above (use_vnni / assert).
         unsafe { super::vnni::igemm_vnni(m, k, a, &bp, c) };
         return;
     }
@@ -53,8 +97,9 @@ pub fn igemm_prepacked(m: usize, k: usize, a: &[i8], bp: &super::vnni::PackedB, 
     if m == 0 || k == 0 || bp.n == 0 {
         return;
     }
-    debug_assert!(use_vnni());
-    // SAFETY: PackedB construction is gated on use_vnni() by callers.
+    debug_assert!(super::vnni::vnni_available());
+    // SAFETY: feature presence asserted above; callers pack B only on
+    // VNNI-capable paths.
     unsafe { super::vnni::igemm_vnni(m, k, a, bp, c) };
 }
 
@@ -291,6 +336,61 @@ pub fn dequantize_s8(src: &[i8], scale: f32, zero: i32, dst: &mut [f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{check, gen};
+
+    #[test]
+    fn kernel_choice_portable_forces_portable_path() {
+        // works on every CPU: Portable and Auto must agree bit-for-bit
+        let (m, k, n) = (3, 10, 33);
+        let a: Vec<i8> = (0..m * k).map(|i| (i as i32 % 251 - 125) as i8).collect();
+        let b: Vec<u8> = (0..k * n).map(|i| (i * 7 % 256) as u8).collect();
+        let mut c_auto = vec![0i32; m * n];
+        let mut c_port = vec![0i32; m * n];
+        igemm(m, k, n, &a, &b, &mut c_auto);
+        igemm_with(KernelChoice::Portable, m, k, n, &a, &b, &mut c_port);
+        assert_eq!(c_auto, c_port);
+    }
+
+    /// VNNI (on-the-fly packed and prepacked) must equal the portable
+    /// kernel *exactly* — integer math, so not "close", identical.
+    /// Shapes deliberately sweep the kernel's edge regimes: m == 1
+    /// (below the Auto heuristic), ragged n % 32 != 0 (partial NR tile
+    /// / masked store) and k % 4 != 0 (padded A quad tail).
+    #[test]
+    fn prop_vnni_and_prepacked_match_portable_exactly() {
+        if !super::super::vnni::vnni_available() {
+            eprintln!("skipping: no AVX-512 VNNI");
+            return;
+        }
+        check("vnni==portable", 0xAB12, 64, |rng, case| {
+            let (dm, dk, dn) = gen::gemm_dims(rng, 80);
+            let (mut m, mut k, mut n) = (dm, dk, dn);
+            // force each edge regime on a rotating schedule (plus the
+            // unconstrained random shapes on case % 4 == 3)
+            match case % 4 {
+                0 => m = 1,
+                1 => n = (n / 32) * 32 + 1 + (n % 31), // n % 32 != 0
+                2 => k = (k / 4) * 4 + 1 + (k % 3),    // k % 4 != 0
+                _ => {}
+            }
+            let a: Vec<i8> = (0..m * k).map(|_| rng.next_u64() as i8).collect();
+            let b: Vec<u8> = (0..k * n).map(|_| rng.next_u64() as u8).collect();
+            let mut c_port = vec![0i32; m * n];
+            igemm_with(KernelChoice::Portable, m, k, n, &a, &b, &mut c_port);
+            let mut c_vnni = vec![0i32; m * n];
+            igemm_with(KernelChoice::Vnni, m, k, n, &a, &b, &mut c_vnni);
+            if c_vnni != c_port {
+                return Err(format!("vnni != portable at ({m},{k},{n})"));
+            }
+            let bp = super::super::vnni::PackedB::pack(&b, k, n);
+            let mut c_pre = vec![0i32; m * n];
+            igemm_prepacked(m, k, &a, &bp, &mut c_pre);
+            if c_pre != c_port {
+                return Err(format!("prepacked != portable at ({m},{k},{n})"));
+            }
+            Ok(())
+        });
+    }
 
     #[test]
     fn corrected_equals_shifted_reference() {

@@ -22,8 +22,8 @@ mod sgemm;
 pub mod vnni;
 
 pub use igemm::{
-    dequantize_s8, igemm, igemm_corrected, igemm_portable, igemm_prepacked, quantize_s8,
-    quantize_u8, quantized_matmul, use_vnni, QGemmScratch,
+    dequantize_s8, igemm, igemm_corrected, igemm_portable, igemm_prepacked, igemm_with,
+    quantize_s8, quantize_u8, quantized_matmul, use_vnni, KernelChoice, QGemmScratch,
 };
 pub use sgemm::sgemm;
 pub use vnni::PackedB;

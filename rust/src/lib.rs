@@ -26,8 +26,14 @@
 //!   parallel-stream executor (Fig 6);
 //! * [`runtime`] — the PJRT fast path: loads the AOT-compiled HLO
 //!   executables produced by `python/compile/aot.py`;
-//! * [`coordinator`] — the translation service tying it together
-//!   (request router, scheduler, metrics, CLI).
+//! * [`coordinator`] — the translation service tying it together:
+//!   [`coordinator::service`] runs whole corpora offline (the Fig 6/8
+//!   measurement path), and [`coordinator::server`] is the online
+//!   request path — a bounded admission queue, a latency-aware dynamic
+//!   batcher (padded-token budget + max-wait deadline) and a shard
+//!   pool of worker streams, reporting per-request p50/p90/p99
+//!   latency, fill and shed rates via
+//!   [`coordinator::metrics::ServerMetrics`].
 //!
 //! Build-time Python (`python/compile/`) trains the model, calibrates
 //! the quantizer and exports artifacts; it is **never** on the request

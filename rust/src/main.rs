@@ -5,7 +5,9 @@
 //! ```text
 //! quantnmt info                         artifact + platform summary
 //! quantnmt translate  [--limit N]       translate test sentences, show text
-//! quantnmt serve      [--streams N]     corpus throughput run (one Fig-8 bar)
+//! quantnmt run        [--streams N]     offline corpus throughput run (one Fig-8 bar)
+//! quantnmt serve      [--shards N]      online server: replay a Poisson trace through
+//!                                       the dynamic batcher, report latency percentiles
 //! quantnmt ladder                       the full Fig-8 configuration ladder
 //! quantnmt calibrate                    print the calibration table (§4.2)
 //! quantnmt graph-stats                  §5.5 op-census of naive vs optimized passes
@@ -15,15 +17,23 @@
 //! `--mode naive|symmetric|independent|conjugate`, `--batch N`, `--streams N`,
 //! `--sort unsorted|words|tokens`, `--policy fixed|token-budget|bin-pack`,
 //! `--token-budget N` (padded-token budget per batch for the budget
-//! policies), `--serial`, `--no-pin`, `--limit N`.
+//! policies and the online batcher), `--serial`, `--no-pin`, `--limit N`.
+//!
+//! `serve` flags: `--shards N` (worker streams), `--max-wait-ms MS`
+//! (batching deadline), `--token-budget N`, `--batch N` (row cap),
+//! `--rate R` (offered load, req/s), `--queue-cap N` (admission bound),
+//! `--seed S` (arrival trace seed), `--limit N` (requests to replay),
+//! `--max-len N` (decode-length cap, default 56).
 
+use quantnmt::coordinator::server::{poisson_offsets, replay_trace, TranslateRequest};
 use quantnmt::coordinator::service::DEFAULT_TOKEN_BUDGET;
-use quantnmt::coordinator::{Backend, Service, ServiceConfig};
+use quantnmt::coordinator::{Backend, ServerConfig, Service, ServiceConfig};
 use quantnmt::data::sorting::SortOrder;
 use quantnmt::pipeline::policy::PolicyKind;
 use quantnmt::quant::calibrate::CalibrationMode;
 use quantnmt::runtime::RtPrecision;
 use quantnmt::util::cli::Args;
+use std::time::Duration;
 
 fn parse_backend(args: &Args) -> Backend {
     let mode = CalibrationMode::from_str(args.get_or("mode", "symmetric"))
@@ -121,13 +131,54 @@ fn cmd_translate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let svc = open_service(args)?;
     let cfg = parse_config(args);
     let ds = svc.dataset()?;
     let limit = args.get_usize("limit", ds.test.len());
     let (metrics, _) = svc.run(&ds.test[..limit.min(ds.test.len())], &cfg)?;
     println!("{}", metrics.row());
+    Ok(())
+}
+
+fn parse_server_config(args: &Args) -> ServerConfig {
+    ServerConfig {
+        backend: parse_backend(args),
+        shards: args.get_usize("shards", 2),
+        max_wait: Duration::from_secs_f64(args.get_f64("max-wait-ms", 20.0) / 1e3),
+        token_budget: args.get_usize("token-budget", DEFAULT_TOKEN_BUDGET),
+        max_batch_rows: args.get_usize("batch", 64),
+        queue_capacity: args.get_usize("queue-cap", 256),
+        max_src_len: None,
+        pin_cores: !args.flag("no-pin"),
+        max_decode_len: args.get_usize("max-len", 56),
+    }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let svc = open_service(args)?;
+    let cfg = parse_server_config(args);
+    let ds = svc.dataset()?;
+    let limit = args.get_usize("limit", 512).min(ds.test.len());
+    let rate = args.get_f64("rate", 100.0);
+    let seed = args.get_usize("seed", 0x5EED) as u64;
+    let reqs = TranslateRequest::from_pairs(&ds.test[..limit]);
+    let offsets = poisson_offsets(seed, reqs.len(), rate);
+    println!(
+        "replaying {} requests at {:.0} req/s (Poisson, seed {seed}) through {}",
+        reqs.len(),
+        rate,
+        cfg.label()
+    );
+    let (metrics, _responses, (submitted, shed)) =
+        svc.serve(&cfg, |client| replay_trace(client, reqs, &offsets))?;
+    println!("{}", metrics.row());
+    println!(
+        "submitted {submitted}  shed {shed}  batches {}  utilization {:.1}%  wall {:.2}s",
+        metrics.batches,
+        metrics.utilization * 100.0,
+        metrics.wall_secs
+    );
     Ok(())
 }
 
@@ -250,13 +301,14 @@ fn main() {
     let result = match cmd {
         "info" => cmd_info(&args),
         "translate" => cmd_translate(&args),
+        "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
         "ladder" => cmd_ladder(&args),
         "calibrate" => cmd_calibrate(&args),
         "graph-stats" => cmd_graph_stats(&args),
         other => {
             eprintln!("unknown command '{other}'");
-            eprintln!("usage: quantnmt [info|translate|serve|ladder|calibrate|graph-stats]");
+            eprintln!("usage: quantnmt [info|translate|run|serve|ladder|calibrate|graph-stats]");
             std::process::exit(2);
         }
     };

@@ -48,14 +48,17 @@ impl Batch {
     }
 }
 
-/// Pad one group of corpus indices into a [`Batch`] (the single
-/// batch-materialization point shared by every batching policy).
-pub fn pad_batch(pairs: &[Pair], id: usize, indices: Vec<usize>) -> Batch {
-    let max_len = indices.iter().map(|&i| pairs[i].src.len()).max().unwrap_or(0);
-    let mut src = Vec::with_capacity(indices.len());
+/// Pad raw token rows into a [`Batch`].  `indices` carry the rows'
+/// identity (corpus index offline, request id online) — the online
+/// request path has no `Pair` corpus, so this is the shared
+/// materialization point under both [`pad_batch`] and the dynamic
+/// batcher in `coordinator::server`.
+pub fn pad_rows(id: usize, indices: Vec<usize>, rows: Vec<Vec<u32>>) -> Batch {
+    assert_eq!(indices.len(), rows.len(), "one index per row");
+    let max_len = rows.iter().map(Vec::len).max().unwrap_or(0);
+    let mut src = Vec::with_capacity(rows.len());
     let mut tokens = 0;
-    for &i in &indices {
-        let mut row = pairs[i].src.clone();
+    for mut row in rows {
         tokens += row.len();
         row.resize(max_len, PAD_ID);
         src.push(row);
@@ -67,6 +70,13 @@ pub fn pad_batch(pairs: &[Pair], id: usize, indices: Vec<usize>) -> Batch {
         max_len,
         tokens,
     }
+}
+
+/// Pad one group of corpus indices into a [`Batch`] (the single
+/// batch-materialization point shared by every batching policy).
+pub fn pad_batch(pairs: &[Pair], id: usize, indices: Vec<usize>) -> Batch {
+    let rows: Vec<Vec<u32>> = indices.iter().map(|&i| pairs[i].src.clone()).collect();
+    pad_rows(id, indices, rows)
 }
 
 /// Pack `order` (corpus indices) into padded batches of `batch_size`.
@@ -130,6 +140,19 @@ mod tests {
             bs.iter().map(|b| b.fill_ratio()).sum::<f64>() / bs.len() as f64
         };
         assert!(fill(&sorted) > fill(&unsorted));
+    }
+
+    #[test]
+    fn pad_rows_matches_pad_batch() {
+        let pairs = corpus(12);
+        let indices: Vec<usize> = (0..12).collect();
+        let rows: Vec<Vec<u32>> = pairs.iter().map(|p| p.src.clone()).collect();
+        assert_eq!(pad_rows(0, indices.clone(), rows), pad_batch(&pairs, 0, indices));
+        // empty input degenerates cleanly
+        let empty = pad_rows(3, Vec::new(), Vec::new());
+        assert_eq!(empty.len(), 0);
+        assert_eq!(empty.max_len, 0);
+        assert_eq!(empty.padded_tokens(), 0);
     }
 
     #[test]

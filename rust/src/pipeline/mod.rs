@@ -23,5 +23,7 @@ pub mod queue;
 
 pub use batch::{make_batches, Batch};
 pub use parallel::{run_parallel, run_serial, StreamReport, ThroughputReport};
-pub use policy::{aggregate_fill, BatchPolicy, BinPack, FixedCount, PolicyKind, TokenBudget};
+pub use policy::{
+    aggregate_fill, fits_budget, BatchPolicy, BinPack, FixedCount, PolicyKind, TokenBudget,
+};
 pub use queue::BatchQueue;

@@ -108,6 +108,25 @@ pub trait BatchPolicy: Send + Sync {
     fn name(&self) -> &'static str;
 }
 
+/// The shared padded-token admission rule: can a sentence of `len`
+/// tokens join a batch of `rows` rows currently padded to `cur_max`
+/// without pushing the padded matrix `(rows + 1) x max(cur_max, len)`
+/// over `budget` or the row count over `max_rows`?
+///
+/// [`TokenBudget`], [`BinPack`] and the online dynamic batcher
+/// (`coordinator::server::BatchFormer`) all close batches by this one
+/// predicate, so offline and online batch shaping obey identical
+/// budgets.
+pub fn fits_budget(
+    rows: usize,
+    cur_max: usize,
+    len: usize,
+    budget: usize,
+    max_rows: usize,
+) -> bool {
+    rows < max_rows && (rows + 1) * cur_max.max(len) <= budget
+}
+
 /// Aggregate fill ratio over a batching: real tokens / padded tokens.
 /// This is the corpus-level utilization quantity the budget policies
 /// maximize (1.0 = zero padding waste).
@@ -160,9 +179,8 @@ impl BatchPolicy for TokenBudget {
         let mut cur_max = 0usize;
         for &i in order {
             let len = pairs[i].src.len();
-            let new_max = cur_max.max(len);
-            let over_budget = (cur.len() + 1) * new_max > self.budget;
-            if !cur.is_empty() && (over_budget || cur.len() >= self.max_rows) {
+            let fits = fits_budget(cur.len(), cur_max, len, self.budget, self.max_rows);
+            if !cur.is_empty() && !fits {
                 let id = out.len();
                 out.push(pad_batch(pairs, id, std::mem::take(&mut cur)));
                 cur_max = 0;
@@ -210,7 +228,7 @@ impl BatchPolicy for BinPack {
         for i in sorted {
             let len = pairs[i].src.len();
             let slot = bins.iter().position(|(rows, max_len)| {
-                rows.len() < self.max_rows && (rows.len() + 1) * (*max_len).max(len) <= self.budget
+                fits_budget(rows.len(), *max_len, len, self.budget, self.max_rows)
             });
             match slot {
                 Some(j) => {
@@ -468,5 +486,18 @@ mod tests {
     #[test]
     fn aggregate_fill_of_empty_is_zero() {
         assert_eq!(aggregate_fill(&[]), 0.0);
+    }
+
+    #[test]
+    fn fits_budget_edges() {
+        // an empty batch accepts anything up to the row cap
+        assert!(fits_budget(0, 0, 1_000_000, 1_000_000, 1));
+        // exact-budget fit is allowed, one past is not
+        assert!(fits_budget(3, 8, 8, 32, 64));
+        assert!(!fits_budget(3, 8, 9, 32, 64));
+        // a longer sentence re-pads the whole batch
+        assert!(!fits_budget(3, 4, 9, 32, 64));
+        // the row cap binds regardless of budget headroom
+        assert!(!fits_budget(4, 1, 1, 1_000_000, 4));
     }
 }

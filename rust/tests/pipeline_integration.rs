@@ -65,6 +65,36 @@ fn parallel_and_serial_agree() {
 }
 
 #[test]
+fn run_parallel_is_bit_identical_to_run_serial_for_every_policy() {
+    // determinism across the whole matrix: any batching policy, any
+    // stream count, the parallel executor must emit exactly the serial
+    // outputs (compared order-insensitively via the corpus index)
+    let generator = Generator::new(DataConfig::default());
+    let pairs = generator.split(67, 240);
+    let order = sort_indices(&pairs, SortOrder::Tokens);
+    for policy in PolicyKind::all() {
+        let batches = policy.build(16, 256).pack(&pairs, &order);
+        let serial = run_serial(&batches, |b| oracle_translate(&generator, b));
+        let mut expect = serial.outputs.clone();
+        expect.sort();
+        for streams in [1, 2, 4] {
+            let parallel = run_parallel(batches.clone(), streams, false, |_| {
+                let generator = Generator::new(DataConfig::default());
+                move |b: &Batch| oracle_translate(&generator, b)
+            });
+            let mut got = parallel.outputs.clone();
+            got.sort();
+            assert_eq!(got, expect, "{policy:?} x{streams} diverged from serial");
+            assert_eq!(parallel.sentences, serial.sentences, "{policy:?} x{streams}");
+            assert_eq!(
+                parallel.padded_tokens, serial.padded_tokens,
+                "{policy:?} x{streams}"
+            );
+        }
+    }
+}
+
+#[test]
 fn sorted_order_reduces_padded_token_count() {
     let pairs = Generator::new(DataConfig::default()).split(47, 1024);
     let padded_total = |order: SortOrder| -> usize {

@@ -1,0 +1,224 @@
+//! Integration tests for the online serving subsystem
+//! (`coordinator::server`) — no artifacts required: a synthetic tiny
+//! model and stub shards stand in for the trained engine.
+//!
+//! The ISSUE acceptance criteria live here:
+//! * the dynamic batcher respects the padded-token budget *and* the
+//!   max-wait deadline;
+//! * online serving produces bit-identical translations to the offline
+//!   `run_serial` path over the same corpus (the differential harness —
+//!   batch shaping must be invisible to correctness, however the
+//!   arrival timing happened to cut batches).
+
+use std::time::{Duration, Instant};
+
+use quantnmt::coordinator::server::{self, BatchFormer, ServerConfig, TranslateRequest};
+use quantnmt::coordinator::Backend;
+use quantnmt::data::dataset::Pair;
+use quantnmt::model::testutil::{random_weights, tiny_cfg};
+use quantnmt::model::Engine;
+use quantnmt::pipeline::batch::Batch;
+use quantnmt::pipeline::parallel::run_serial;
+use quantnmt::pipeline::policy::PolicyKind;
+use quantnmt::specials::EOS_ID;
+use quantnmt::util::prop::{check, default_cases, gen};
+use quantnmt::util::rng::SplitMix64;
+
+/// Stub shard: echo the (padded) source rows back.
+fn echo_factory(_id: usize) -> impl FnMut(&Batch) -> Vec<Vec<u32>> + Send {
+    |b: &Batch| b.src.clone()
+}
+
+/// Random sources that fit the tiny model (content tokens + EOS).
+fn tiny_srcs(seed: u64, n: usize) -> Vec<Vec<u32>> {
+    let mut rng = SplitMix64::new(seed);
+    let max_content = tiny_cfg().max_src_len - 1;
+    (0..n)
+        .map(|_| {
+            let mut src = gen::token_seq(&mut rng, max_content, 16);
+            src.push(EOS_ID);
+            src
+        })
+        .collect()
+}
+
+#[test]
+fn former_respects_budget_and_row_cap_for_any_request_stream() {
+    check("former-invariants", 0xF0123, default_cases(), |rng, _| {
+        let budget = rng.range(8, 256) as usize;
+        let cap = rng.range(1, 16) as usize;
+        let n = rng.range(1, 100) as usize;
+        let mut f = BatchFormer::new(budget, cap, Duration::from_secs(10));
+        let now = Instant::now();
+        let mut closed = Vec::new();
+        let mut total_tokens = 0usize;
+        for id in 0..n {
+            let len = rng.range(1, 40) as usize;
+            total_tokens += len;
+            let req = TranslateRequest {
+                id,
+                src: vec![3; len],
+            };
+            if let Some(fb) = f.offer(req, now) {
+                closed.push(fb);
+            }
+        }
+        if let Some(fb) = f.flush() {
+            closed.push(fb);
+        }
+        // (1) every request rides exactly one batch
+        let mut seen: Vec<usize> = closed
+            .iter()
+            .flat_map(|fb| fb.batch.indices.clone())
+            .collect();
+        seen.sort_unstable();
+        if seen != (0..n).collect::<Vec<usize>>() {
+            return Err(format!("lost/duplicated requests: {} of {n}", seen.len()));
+        }
+        // (2) no tokens invented or dropped
+        let real: usize = closed.iter().map(|fb| fb.batch.tokens).sum();
+        if real != total_tokens {
+            return Err(format!("token count drifted: {real} vs {total_tokens}"));
+        }
+        for fb in &closed {
+            // (3) the row cap holds everywhere
+            if fb.batch.len() > cap {
+                return Err(format!("{} rows > cap {cap}", fb.batch.len()));
+            }
+            // (4) the padded-token budget holds, oversize singletons aside
+            if fb.batch.len() > 1 && fb.batch.padded_tokens() > budget {
+                return Err(format!(
+                    "{} padded tokens > budget {budget} in a {}-row batch",
+                    fb.batch.padded_tokens(),
+                    fb.batch.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn server_splits_a_burst_by_token_budget() {
+    // max_wait is enormous, so only the budget/row cap can close
+    // batches before the final drain flush
+    let cfg = ServerConfig {
+        backend: Backend::EngineF32,
+        shards: 2,
+        max_wait: Duration::from_secs(30),
+        token_budget: 32,
+        max_batch_rows: 64,
+        queue_capacity: 1024,
+        max_src_len: None,
+        pin_cores: false,
+        max_decode_len: 8,
+    };
+    let (metrics, responses, ()) = server::serve(&cfg, echo_factory, |client| {
+        for i in 0..64 {
+            assert!(client.submit(i, vec![4; 4]), "burst must be admitted");
+        }
+    });
+    assert_eq!(responses.len(), 64);
+    // 64 rows of 4 tokens under a 32-token budget: at most 8 rows per
+    // batch, so at least 8 batches — the budget, not the deadline, cut
+    assert!(metrics.batches >= 8, "batches {}", metrics.batches);
+    assert!(
+        metrics.mean_batch_rows() <= 8.0 + 1e-9,
+        "rows/batch {}",
+        metrics.mean_batch_rows()
+    );
+    assert_eq!(metrics.tokens, 64 * 4);
+}
+
+#[test]
+fn server_honors_max_wait_deadline() {
+    // the budget is enormous, so without the deadline the whole run
+    // would drain as one batch at shutdown; spaced arrivals must each
+    // be dispatched within their own max-wait window instead
+    let cfg = ServerConfig {
+        backend: Backend::EngineF32,
+        shards: 1,
+        max_wait: Duration::from_millis(10),
+        token_budget: 1_000_000,
+        max_batch_rows: 1024,
+        queue_capacity: 64,
+        max_src_len: None,
+        pin_cores: false,
+        max_decode_len: 8,
+    };
+    let (metrics, responses, ()) = server::serve(&cfg, echo_factory, |client| {
+        for i in 0..3 {
+            assert!(client.submit(i, vec![5; 4]));
+            std::thread::sleep(Duration::from_millis(100));
+        }
+    });
+    assert_eq!(responses.len(), 3);
+    // 100ms gaps >> 10ms deadline: the deadline must have closed
+    // under-budget batches (nominally 3; >= 2 tolerates scheduler jitter)
+    assert!(metrics.batches >= 2, "batches {}", metrics.batches);
+    // queueing delay is deadline-bounded (generous slack for CI)
+    assert!(
+        metrics.queue_latency.p99() < 1.0,
+        "queue p99 {}",
+        metrics.queue_latency.p99()
+    );
+}
+
+#[test]
+fn online_translations_match_offline_run_serial() {
+    // the differential harness: same tiny model, same corpus — the
+    // offline policy-packed serial run and the online dynamically
+    // batched run must emit bit-identical translations per request
+    let model_cfg = tiny_cfg();
+    let weights = random_weights(&model_cfg, 0xD1FF);
+    let srcs = tiny_srcs(0xC0FFEE, 48);
+
+    // offline: token-budget policy over the corpus, one serial engine
+    let pairs: Vec<Pair> = srcs
+        .iter()
+        .map(|s| Pair {
+            n_words: s.len(),
+            src: s.clone(),
+            ref_ids: vec![EOS_ID],
+            text: String::new(),
+        })
+        .collect();
+    let order: Vec<usize> = (0..pairs.len()).collect();
+    let batches = PolicyKind::TokenBudget.build(8, 48).pack(&pairs, &order);
+    let mut engine = Engine::fp32(model_cfg.clone(), weights.clone()).unwrap();
+    let offline = run_serial(&batches, |b| engine.translate_greedy(&b.src, 8));
+    let mut offline_sorted = offline.outputs.clone();
+    offline_sorted.sort_by_key(|(idx, _)| *idx);
+
+    // online: a burst through the dynamic batcher, two engine shards
+    let cfg = ServerConfig {
+        backend: Backend::EngineF32,
+        shards: 2,
+        max_wait: Duration::from_millis(5),
+        token_budget: 48,
+        max_batch_rows: 8,
+        queue_capacity: 1024,
+        max_src_len: None,
+        pin_cores: false,
+        max_decode_len: 8,
+    };
+    let factory = |_id: usize| {
+        let mut engine = Engine::fp32(model_cfg.clone(), weights.clone()).expect("engine");
+        move |b: &Batch| engine.translate_greedy(&b.src, 8)
+    };
+    let (metrics, responses, ()) = server::serve(&cfg, factory, |client| {
+        for (i, s) in srcs.iter().enumerate() {
+            assert!(client.submit(i, s.clone()), "admission shed request {i}");
+        }
+    });
+
+    assert_eq!(metrics.requests, srcs.len());
+    assert_eq!(responses.len(), srcs.len());
+    for (r, (idx, offline_out)) in responses.iter().zip(&offline_sorted) {
+        assert_eq!(r.id, *idx);
+        assert_eq!(
+            &r.out, offline_out,
+            "request {idx}: online and offline translations diverge"
+        );
+    }
+}
