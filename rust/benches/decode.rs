@@ -1,0 +1,136 @@
+//! Per-token decode latency: the dispatch-overhead microbench.
+//!
+//! The per-token decoder step is the worst case for per-op overhead:
+//! every MatMul is tiny (`slots x d`), so string formatting, map walks
+//! and per-head QuantizeV2 calls show up directly in the token latency
+//! rather than being amortized by GEMM work (§4.1/§5.5).  This bench
+//! isolates that cost on a **synthetic** model — it runs without
+//! artifacts — and prints:
+//!
+//! * per-token decode latency (best of N reps) for FP32 and INT8
+//!   engines at slots = 1 and 8;
+//! * deterministic dispatch counts per token (Quantize /
+//!   QuantizedMatMul / MatMul invocations from the profiler);
+//! * the top per-site GEMM times (the `SiteId`-indexed breakdown).
+//!
+//! ```bash
+//! cargo bench --bench decode            # full sweep
+//! cargo bench --bench decode -- --quick # CI smoke
+//! ```
+
+use std::time::Instant;
+
+use quantnmt::model::profiler::{OpKind, Profiler};
+use quantnmt::model::testutil::{loose_plan, random_weights};
+use quantnmt::model::{Engine, ModelConfig};
+
+fn bench_cfg() -> ModelConfig {
+    // paper-adjacent dims, scaled to keep the bench seconds-long
+    ModelConfig {
+        vocab_size: 96,
+        d_model: 256,
+        n_heads: 8,
+        d_ff: 1024,
+        n_enc_layers: 2,
+        n_dec_layers: 2,
+        max_src_len: 32,
+        max_tgt_len: 64,
+    }
+}
+
+fn source_batch(cfg: &ModelConfig, slots: usize, len: usize) -> Vec<Vec<u32>> {
+    (0..slots)
+        .map(|i| {
+            let mut row: Vec<u32> = (0..len - 1)
+                .map(|t| 3 + ((i * 7 + t) % (cfg.vocab_size - 3)) as u32)
+                .collect();
+            row.push(2); // EOS
+            row
+        })
+        .collect()
+}
+
+/// Best-of-reps per-token decode latency in microseconds.
+fn per_token_us(engine: &mut Engine, slots: usize, steps: usize, reps: usize) -> f64 {
+    let src = source_batch(&engine.cfg, slots, 16);
+    let (memory, src_len, s) = engine.encode(&src);
+    let tokens = vec![1u32; slots]; // constant token: latency is shape-bound
+    let mut logits = Vec::new();
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let mut st = engine.init_decode(&memory, &src_len, s, steps);
+        let t0 = Instant::now();
+        for pos in 0..steps {
+            engine.decode_step(&mut st, &tokens, pos, &mut logits);
+        }
+        best = best.min(t0.elapsed().as_secs_f64() / steps as f64 * 1e6);
+    }
+    best
+}
+
+/// Deterministic dispatch counts for one decode step at `pos`.
+fn step_counts(engine: &mut Engine, slots: usize, pos: usize) -> (u64, u64, u64) {
+    let src = source_batch(&engine.cfg, slots, 16);
+    let (memory, src_len, s) = engine.encode(&src);
+    let mut st = engine.init_decode(&memory, &src_len, s, pos + 1);
+    let tokens = vec![1u32; slots];
+    let mut logits = Vec::new();
+    for p in 0..pos {
+        engine.decode_step(&mut st, &tokens, p, &mut logits);
+    }
+    engine.profiler = Profiler::enabled();
+    engine.decode_step(&mut st, &tokens, pos, &mut logits);
+    let p = std::mem::take(&mut engine.profiler);
+    (
+        p.count(OpKind::Quantize),
+        p.count(OpKind::QuantizedMatMul),
+        p.count(OpKind::MatMul),
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = bench_cfg();
+    let (steps, reps) = if quick { (16, 2) } else { (48, 5) };
+    let w = random_weights(&cfg, 42);
+
+    println!(
+        "== per-token decode latency (synthetic model: d={} h={} enc={} dec={}) ==\n",
+        cfg.d_model, cfg.n_heads, cfg.n_enc_layers, cfg.n_dec_layers
+    );
+    println!(
+        "{:12} {:>6} {:>14} {:>10} {:>10} {:>8}",
+        "engine", "slots", "us/token", "Quantize", "QMatMul", "MatMul"
+    );
+    for slots in [1usize, 8] {
+        let mut fp32 = Engine::fp32(cfg.clone(), w.clone())?;
+        let us = per_token_us(&mut fp32, slots, steps, reps);
+        let (q, qm, mm) = step_counts(&mut fp32, slots, 8);
+        println!("{:12} {:>6} {:>14.1} {:>10} {:>10} {:>8}", "fp32", slots, us, q, qm, mm);
+
+        let mut int8 = Engine::with_plan(cfg.clone(), w.clone(), loose_plan(&cfg))?;
+        let us = per_token_us(&mut int8, slots, steps, reps);
+        let (q, qm, mm) = step_counts(&mut int8, slots, 8);
+        println!("{:12} {:>6} {:>14.1} {:>10} {:>10} {:>8}", "int8", slots, us, q, qm, mm);
+    }
+
+    // per-site GEMM attribution over a short decode (SiteId-indexed)
+    let mut int8 = Engine::with_plan(cfg.clone(), w.clone(), loose_plan(&cfg))?;
+    int8.profiler = Profiler::enabled();
+    let src = source_batch(&cfg, 8, 16);
+    int8.translate_greedy(&src, steps.min(24));
+    println!("\ntop MatMul sites by GEMM wall time (int8, slots=8):");
+    for (site, total, calls) in int8.profiler.site_breakdown().into_iter().take(8) {
+        println!(
+            "  {:16} {:>10.3}ms over {:>5} calls",
+            int8.plan().site_name(site),
+            total.as_secs_f64() * 1e3,
+            calls
+        );
+    }
+    println!(
+        "\ncounts are deterministic (dispatch structure); times are hardware-dependent.\n\
+         see EXPERIMENTS.md \"Dispatch overhead\" for the before/after comparison."
+    );
+    Ok(())
+}

@@ -9,8 +9,9 @@
 //! the Fig 6/8 benches all share, so every number in EXPERIMENTS.md
 //! flows through one code path.
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::metrics::{LatencyStats, RunMetrics, ServerMetrics};
@@ -18,6 +19,7 @@ use crate::coordinator::server::{self, ServerClient, ServerConfig, TranslateResp
 use crate::data::bleu::{corpus_bleu, strip_special};
 use crate::data::dataset::{Dataset, Pair};
 use crate::data::sorting::{sort_indices, SortOrder};
+use crate::model::plan::CompiledPlan;
 use crate::model::{Engine, ModelConfig, Weights};
 use crate::pipeline::batch::Batch;
 use crate::pipeline::parallel::{run_parallel, run_serial, ThroughputReport};
@@ -191,19 +193,22 @@ impl Service {
         Dataset::load(&self.dir.join("dataset.json"))
     }
 
-    /// Build a per-stream engine for a backend.
-    fn build_engine(&self, backend: Backend) -> anyhow::Result<Engine> {
-        match backend {
-            Backend::EngineF32 => Engine::fp32(self.model_cfg.clone(), self.weights.clone()),
-            Backend::EngineInt8(mode) => Engine::int8(
-                self.model_cfg.clone(),
-                self.weights.clone(),
-                &self.calibration,
-                mode,
-                false,
-            ),
+    /// Compile the execution plan for an engine backend **once**: the
+    /// weights are quantized/packed and the site table is interned a
+    /// single time, then every worker stream gets a cheap
+    /// [`Engine::from_compiled`] over the shared `Arc` (§5.6:
+    /// multi-stream serving over one read-only model).
+    fn compile_plan(&self, backend: Backend) -> anyhow::Result<Arc<CompiledPlan>> {
+        let plan = match backend {
+            Backend::EngineF32 => BTreeMap::new(),
+            Backend::EngineInt8(mode) => self.calibration.plan(mode, false),
             Backend::Runtime(_) => anyhow::bail!("runtime backend builds executables"),
-        }
+        };
+        Ok(Arc::new(CompiledPlan::build(
+            &self.model_cfg,
+            &self.weights,
+            &plan,
+        )?))
     }
 
     /// Translate one corpus under a config; returns (metrics, outputs in
@@ -220,11 +225,12 @@ impl Service {
 
         let report: ThroughputReport = match cfg.backend {
             Backend::EngineF32 | Backend::EngineInt8(_) => {
+                // quantize/pack the model once; streams share the plan
+                let plan = self.compile_plan(cfg.backend)?;
                 if cfg.parallel {
                     run_parallel(batches, cfg.streams, cfg.pin_cores, |_id: usize| {
-                        let mut engine = self
-                            .build_engine(cfg.backend)
-                            .expect("engine construction");
+                        let mut engine =
+                            Engine::from_compiled(self.model_cfg.clone(), plan.clone());
                         let latencies = &latencies;
                         move |b: &Batch| {
                             let t0 = Instant::now();
@@ -234,7 +240,7 @@ impl Service {
                         }
                     })
                 } else {
-                    let mut engine = self.build_engine(cfg.backend)?;
+                    let mut engine = Engine::from_compiled(self.model_cfg.clone(), plan);
                     run_serial(&batches, |b| {
                         let t0 = Instant::now();
                         let out = engine.translate_greedy(&b.src, max_len);
@@ -329,15 +335,12 @@ impl Service {
                     max_src_len: Some(src_cap.min(self.model_cfg.max_src_len)),
                     ..cfg.clone()
                 };
-                // build one engine eagerly: fails fast on broken
-                // artifacts, then is handed to the first shard instead
-                // of being thrown away (engine construction quantizes
-                // every weight — the most expensive object here)
-                let first = Mutex::new(Some(self.build_engine(cfg.backend)?));
+                // compile the plan eagerly: fails fast on broken
+                // artifacts, quantizes every weight exactly once, and
+                // every shard shares the read-only result
+                let plan = self.compile_plan(cfg.backend)?;
                 let factory = |_id: usize| {
-                    let mut engine = first.lock().unwrap().take().unwrap_or_else(|| {
-                        self.build_engine(cfg.backend).expect("engine construction")
-                    });
+                    let mut engine = Engine::from_compiled(self.model_cfg.clone(), plan.clone());
                     move |b: &Batch| engine.translate_greedy(&b.src, max_len)
                 };
                 Ok(server::serve(&cfg, factory, drive))

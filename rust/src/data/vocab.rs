@@ -111,7 +111,7 @@ impl Lexicon {
     /// Zipf-sample a word index (mirrors numpy searchsorted semantics:
     /// first index whose cumulative weight is >= u... numpy's
     /// `searchsorted(a, v)` with default side='left' returns the first
-    /// i with a[i] >= v).
+    /// i with `a[i] >= v`).
     pub fn sample(&self, u: f64) -> usize {
         let idx = self.cum_weights.partition_point(|&c| c < u);
         idx.min(self.n_words() - 1)

@@ -131,6 +131,18 @@ impl Graph {
         self.nodes.iter().filter(|n| &n.op == op).count()
     }
 
+    /// Names of every MatMul node in insertion (graph) order.  This is
+    /// the census the engine's compiled plan interns its `SiteId`s
+    /// from (`model::plan::SiteSet::cross_check_graph`): the graph IR
+    /// is the single source of truth for MatMul site names.
+    pub fn matmul_names(&self) -> Vec<String> {
+        self.nodes
+            .iter()
+            .filter(|n| n.op == Op::MatMul)
+            .map(|n| n.name.clone())
+            .collect()
+    }
+
     /// Verify dataflow dtype rules (used by property tests):
     /// * QuantizedMatMul inputs must be I8/U8 (plus F32 range consts);
     /// * MatMul inputs must be F32;
@@ -297,6 +309,32 @@ mod tests {
         assert_eq!(matmuls, 2 * 8 + 2 * 14 + 1);
         assert_eq!(g.count_op(&Op::GatherNd), 2 * 4);
         assert!(g.check_types().is_ok());
+    }
+
+    #[test]
+    fn matmul_names_match_model_site_census() {
+        // the paper's 97-MatMul census: graph IR and ModelConfig must
+        // name the same sites in the same order, for any layer counts —
+        // the engine's compiled plan asserts this at build time, this
+        // test pins it for drift at review time
+        use crate::model::config::ModelConfig;
+        for (e, d) in [(1, 1), (2, 2), (4, 3), (6, 6)] {
+            let g = transformer_graph(GraphConfig {
+                n_enc_layers: e,
+                n_dec_layers: d,
+                ..Default::default()
+            });
+            let cfg = ModelConfig {
+                n_enc_layers: e,
+                n_dec_layers: d,
+                ..Default::default()
+            };
+            assert_eq!(
+                g.matmul_names(),
+                cfg.matmul_site_names(),
+                "census drift at enc={e} dec={d}"
+            );
+        }
     }
 
     #[test]

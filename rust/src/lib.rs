@@ -17,8 +17,11 @@
 //!   naive (Fig 1) and optimized (Fig 5) quantization passes plus the
 //!   §5.5 op-elimination statistics;
 //! * [`model`] — an instrumented, op-by-op Transformer inference engine
-//!   (FP32 and selectively-INT8) with KV caches, greedy + beam decode
-//!   and the per-op profiler behind Fig 7;
+//!   (FP32 and selectively-INT8): a compiled quantization plan
+//!   ([`model::plan`], §5.5's transform-once with interned site ids,
+//!   cross-validated against the graph IR census), the typed
+//!   head-batched layer stack ([`model::layers`]), KV caches, greedy +
+//!   beam decode and the per-op/per-site profiler behind Fig 7;
 //! * [`data`] — vocabulary, the synthetic parallel corpus standing in
 //!   for WMT/newstest2014, corpus BLEU, and §5.4 sentence sorting;
 //! * [`pipeline`] — pluggable batching policies (fixed-count,

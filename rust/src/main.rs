@@ -10,7 +10,10 @@
 //!                                       the dynamic batcher, report latency percentiles
 //! quantnmt ladder                       the full Fig-8 configuration ladder
 //! quantnmt calibrate                    print the calibration table (§4.2)
-//! quantnmt graph-stats                  §5.5 op-census of naive vs optimized passes
+//! quantnmt graph-stats [--per-site]     §5.5 op-census of naive vs optimized passes;
+//!                                       --per-site prints the interned MatMul site
+//!                                       table (SiteId -> weight) cross-checked
+//!                                       against the graph IR census
 //! ```
 //!
 //! Common flags: `--artifacts DIR`, `--backend engine-fp32|engine-int8|pjrt-fp32|pjrt-int8`,
@@ -277,10 +280,11 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_graph_stats(_args: &Args) -> anyhow::Result<()> {
+fn cmd_graph_stats(args: &Args) -> anyhow::Result<()> {
     use quantnmt::graph::ir::{transformer_graph, GraphConfig};
     use quantnmt::graph::passes::plan_all;
     use quantnmt::graph::{naive_quantize, optimized_quantize};
+    use quantnmt::model::{ModelConfig, SiteSet};
     let g = transformer_graph(GraphConfig::default());
     let plan = plan_all(&g);
     let (naive, ns) = naive_quantize(&g, &plan);
@@ -292,6 +296,24 @@ fn cmd_graph_stats(_args: &Args) -> anyhow::Result<()> {
     println!("\noptimized census: {:?}", opt.op_census());
     println!("\nops added naive: {:?}", ns.ops_added);
     println!("ops added opt:   {:?}", os.ops_added);
+    if args.flag("per-site") {
+        // the engine's interned dispatch table, straight from the same
+        // census the graph IR carries (cross-checked, so it cannot lie)
+        let cfg = ModelConfig::default();
+        let sites = SiteSet::new(&cfg);
+        sites.cross_check_graph(&cfg)?;
+        println!("\ninterned MatMul sites (SiteId -> operand):");
+        for (id, name) in sites.iter() {
+            match cfg.weight_for_site(name) {
+                Some(w) => println!("  {:>3}  {:16} weight {w}", id.0, name),
+                None => println!("  {:>3}  {:16} dynamic (activation x activation)", id.0, name),
+            }
+        }
+        println!(
+            "{} sites interned; graph IR census cross-check OK",
+            sites.len()
+        );
+    }
     Ok(())
 }
 

@@ -5,8 +5,14 @@
 //! sentence share the encoder memory (slots are laid out
 //! `[sent0.beam0, sent0.beam1, ..., sent1.beam0, ...]`); every step
 //! selects the top `beam` continuations per sentence and reorders all
-//! KV caches with [`KvCache::beam_gather`] — FP32 vs INT8 cache storage
-//! is where the §5.3 copy-size reduction shows up.
+//! KV caches with
+//! [`KvCache::beam_gather`](crate::model::kvcache::KvCache::beam_gather)
+//! — FP32 vs INT8 cache storage
+//! is where the §5.3 copy-size reduction shows up.  Cache precision is
+//! decided per site by the engine's compiled plan
+//! ([`crate::model::plan::CompiledPlan`]): the decoder state this
+//! module gathers over is built from the typed per-layer site ids, not
+//! string lookups.
 
 use super::engine::{DecodeState, Engine};
 use crate::specials::{BOS_ID, EOS_ID, PAD_ID};

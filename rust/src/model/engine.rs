@@ -1,25 +1,33 @@
-//! The op-by-op Transformer inference engine (FP32 + selective INT8).
+//! The op-by-op Transformer inference engine (FP32 + selective INT8) —
+//! orchestration and state over a compiled plan.
 //!
 //! Executes the exact architecture trained by `python/compile/train.py`
-//! with weights from `weights.bin`.  Every MatMul site consults the
-//! quantization plan: `None` (or absent) runs the FP32 [`crate::gemm::sgemm`],
-//! `Some(SiteQuant)` runs quantize -> [`crate::gemm::igemm`] -> dequantize
-//! with the calibrated thresholds — the Rust twin of the JAX
-//! `model._mm` dispatch, with semantics pinned by `kernels/ref.py`.
+//! with weights from `weights.bin`.  All per-site dispatch (FP32
+//! `sgemm` vs quantize → int GEMM → dequantize) is resolved ahead of
+//! time into a [`CompiledPlan`] (see [`crate::model::plan`]) and
+//! executed by the typed layer stack in [`crate::model::layers`]; this
+//! module owns only the decode orchestration, the KV-cache state and
+//! the per-engine scratch + profiler.  Engines built from the same
+//! `Arc<CompiledPlan>` share the read-only quantized weights.
 //!
 //! Softmax and LayerNorm always run in FP32 (§3 of the paper).  The
 //! profiler brackets every op family so Fig 7 can be regenerated.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
-use crate::gemm::{self, QGemmScratch, UINT8_ZERO_POINT};
+use crate::gemm::QGemmScratch;
 use crate::model::config::ModelConfig;
 use crate::model::kvcache::KvCache;
+use crate::model::layers::{self, AttnScratch};
+use crate::model::plan::{CompiledPlan, SiteId};
 use crate::model::profiler::{OpKind, Profiler};
 use crate::model::weights::Weights;
 use crate::quant::calibrate::{CalibrationMode, SiteQuant, SiteTable};
 use crate::specials::{BOS_ID, EOS_ID, PAD_ID};
 use crate::tensor::ops;
+
+pub use crate::model::plan::positional_encoding;
 
 /// Engine precision selector (convenience constructor input).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -33,48 +41,47 @@ pub enum Precision {
     },
 }
 
-/// A prequantized weight operand (u8, zero point 128), pre-packed for
-/// the VNNI kernel when available (one pack per weight, at build time —
-/// the §5.5 "weights become consts" idea applied to layout too).
-struct QWeight {
-    data: Vec<u8>,
-    packed: Option<gemm::PackedB>,
-    scale: f32,
-    /// colsum over k (zero-point correction when a_zero != 0)
-    colsum: Vec<i32>,
+/// Reusable activation buffers for the encode/decode orchestration:
+/// the residual stream, the attention projections and the block
+/// outputs live here so the per-token loop performs no allocation and
+/// no defensive clones.
+#[derive(Default)]
+struct ActScratch {
+    /// the residual stream, `[rows, d]`
+    x: Vec<f32>,
+    /// query projection (decode path)
+    q: Vec<f32>,
+    /// key/value projections (decode init path)
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// attention block output, `[rows, d]`
+    attn: Vec<f32>,
+    /// residual-branch output (attention o / ffn y)
+    tmp: Vec<f32>,
+    /// ffn hidden activation, `[rows, d_ff]`
+    hbuf: Vec<f32>,
 }
 
 /// The inference engine.  Not `Sync`: each worker stream owns one
-/// (mirroring the paper's per-process TF sessions, §5.6).
+/// (mirroring the paper's per-process TF sessions, §5.6), but all
+/// engines for a model share one read-only [`CompiledPlan`].
 pub struct Engine {
     pub cfg: ModelConfig,
-    weights: Weights,
-    /// site -> Some(quant) | None (fp32). Missing key = fp32.
-    plan: BTreeMap<String, Option<SiteQuant>>,
-    /// prequantized weights for quantized weight sites
-    qweights: BTreeMap<String, QWeight>,
-    /// transposed embedding for the logits matmul
-    embed_t: Vec<f32>,
-    /// embedding pre-scaled by sqrt(d_model) (decode hot path)
-    embed_scaled: Vec<f32>,
-    /// (gamma, beta) per LayerNorm prefix
-    ln_cache: BTreeMap<String, (Vec<f32>, Vec<f32>)>,
-    /// bias vectors per ffn prefix: (b1, b2)
-    bias_cache: BTreeMap<String, (Vec<f32>, Vec<f32>)>,
-    /// sinusoidal positional encoding [max_len, d_model]
-    pe: Vec<f32>,
+    plan: Arc<CompiledPlan>,
     pub profiler: Profiler,
     scratch: QGemmScratch,
+    attn_sc: AttnScratch,
+    acts: ActScratch,
     /// whether the KV caches store u8 (per self-attn site plan)
     pub int8_cache: bool,
 }
 
 /// Per-batch decoder state (self-attn caches + cross-attn memory caches).
 pub struct DecodeState {
-    /// per layer: K and V self-attention caches [slots][H*Tmax*dh]
+    /// per layer: K and V self-attention caches, `H*Tmax*dh` per slot
     pub self_k: Vec<KvCache>,
     pub self_v: Vec<KvCache>,
-    /// per layer: cross-attention K/V of the encoder memory [slots][H*S*dh]
+    /// per layer: cross-attention K/V of the encoder memory, `H*S*dh` per slot
     pub cross_k: Vec<KvCache>,
     pub cross_v: Vec<KvCache>,
     /// source length per slot (pads are suffix-only)
@@ -90,113 +97,36 @@ impl Engine {
         weights: Weights,
         plan: BTreeMap<String, Option<SiteQuant>>,
     ) -> anyhow::Result<Engine> {
-        let d = cfg.d_model;
-        let v = cfg.vocab_size;
-        let embed = weights.get("embed")?;
-        anyhow::ensure!(
-            embed.shape() == [v, d],
-            "embed shape {:?} != [{v}, {d}]",
-            embed.shape()
-        );
-        // embed.T for the tied logits projection
-        let mut embed_t = vec![0.0f32; d * v];
-        for r in 0..v {
-            for c in 0..d {
-                embed_t[c * v + r] = embed.data()[r * d + c];
-            }
-        }
-        let max_len = cfg.max_src_len.max(cfg.max_tgt_len);
-        let pe = positional_encoding(max_len, d);
+        let compiled = CompiledPlan::build(&cfg, &weights, &plan)?;
+        Ok(Engine::from_compiled(cfg, Arc::new(compiled)))
+    }
 
-        // prequantize weights for quantized weight sites (§5.5: weights
-        // become u8 consts at AOT time)
-        let mut qweights = BTreeMap::new();
-        for site in cfg.matmul_site_names() {
-            let Some(Some(q)) = plan.get(&site) else { continue };
-            let Some(wname) = cfg.weight_for_site(&site) else { continue };
-            let wdata: &[f32] = if wname == "embed.T" {
-                &embed_t
-            } else {
-                weights.get(&wname)?.data()
-            };
-            let mut data = vec![0u8; wdata.len()];
-            gemm::quantize_u8(wdata, q.b_scale, &mut data);
-            let (kk, nn) = if wname == "embed.T" {
-                (cfg.d_model, cfg.vocab_size)
-            } else {
-                let t = weights.get(&wname)?;
-                (t.shape()[0], t.shape()[1])
-            };
-            let packed = gemm::use_vnni().then(|| gemm::PackedB::pack(&data, kk, nn));
-            let mut colsum = vec![0i32; nn];
-            for p in 0..kk {
-                for j in 0..nn {
-                    colsum[j] += data[p * nn + j] as i32;
-                }
-            }
-            qweights.insert(
-                site.clone(),
-                QWeight {
-                    data,
-                    packed,
-                    scale: q.b_scale,
-                    colsum,
-                },
-            );
-        }
-        let int8_cache = (0..cfg.n_dec_layers).all(|i| {
-            matches!(plan.get(&format!("dec.{i}.self.qk")), Some(Some(_)))
-        });
-        // hot-path weight caches (no clones in the decode loop)
-        let scale = (d as f32).sqrt();
-        let embed_scaled: Vec<f32> = embed.data().iter().map(|&x| x * scale).collect();
-        let mut ln_cache = BTreeMap::new();
-        let mut bias_cache = BTreeMap::new();
-        let mut ln_prefixes: Vec<String> = Vec::new();
-        let mut ffn_prefixes: Vec<String> = Vec::new();
-        for i in 0..cfg.n_enc_layers {
-            ln_prefixes.push(format!("enc.{i}.ln1"));
-            ln_prefixes.push(format!("enc.{i}.ln2"));
-            ffn_prefixes.push(format!("enc.{i}"));
-        }
-        for i in 0..cfg.n_dec_layers {
-            for l in ["ln1", "ln2", "ln3"] {
-                ln_prefixes.push(format!("dec.{i}.{l}"));
-            }
-            ffn_prefixes.push(format!("dec.{i}"));
-        }
-        for p in ln_prefixes {
-            ln_cache.insert(
-                p.clone(),
-                (
-                    weights.get(&format!("{p}.gamma"))?.data().to_vec(),
-                    weights.get(&format!("{p}.beta"))?.data().to_vec(),
-                ),
-            );
-        }
-        for p in ffn_prefixes {
-            bias_cache.insert(
-                p.clone(),
-                (
-                    weights.get(&format!("{p}.ffn.b1"))?.data().to_vec(),
-                    weights.get(&format!("{p}.ffn.b2"))?.data().to_vec(),
-                ),
-            );
-        }
-        Ok(Engine {
+    /// Build an engine over an already-compiled (shared) plan.  This is
+    /// cheap — the expensive weight quantization and packing happened
+    /// in [`CompiledPlan::build`] — so worker streams can each own an
+    /// engine without re-quantizing the model.
+    ///
+    /// Panics if `cfg` disagrees with the config the plan was compiled
+    /// from: a mismatched pair would otherwise decode with the wrong
+    /// layer count or logit width, so the desync is rejected up front.
+    pub fn from_compiled(cfg: ModelConfig, plan: Arc<CompiledPlan>) -> Engine {
+        assert_eq!(cfg.d_model, plan.d_model, "cfg/plan d_model mismatch");
+        assert_eq!(cfg.n_heads, plan.n_heads, "cfg/plan n_heads mismatch");
+        assert_eq!(cfg.vocab_size, plan.vocab, "cfg/plan vocab mismatch");
+        assert_eq!(cfg.n_enc_layers, plan.enc.len(), "cfg/plan encoder depth mismatch");
+        assert_eq!(cfg.n_dec_layers, plan.dec.len(), "cfg/plan decoder depth mismatch");
+        assert_eq!(cfg.max_src_len, plan.max_src_len, "cfg/plan max_src_len mismatch");
+        assert_eq!(cfg.max_tgt_len, plan.max_tgt_len, "cfg/plan max_tgt_len mismatch");
+        let int8_cache = plan.int8_cache;
+        Engine {
             cfg,
-            weights,
             plan,
-            qweights,
-            embed_t,
-            embed_scaled,
-            ln_cache,
-            bias_cache,
-            pe,
             profiler: Profiler::default(),
             scratch: QGemmScratch::default(),
+            attn_sc: AttnScratch::default(),
+            acts: ActScratch::default(),
             int8_cache,
-        })
+        }
     }
 
     /// FP32 engine.
@@ -216,8 +146,13 @@ impl Engine {
         Engine::with_plan(cfg, weights, plan)
     }
 
+    /// The compiled plan this engine executes.
+    pub fn plan(&self) -> &CompiledPlan {
+        &self.plan
+    }
+
     pub fn precision_label(&self) -> &'static str {
-        if self.plan.values().any(|p| p.is_some()) {
+        if self.plan.quantized_site_count() > 0 {
             "int8"
         } else {
             "fp32"
@@ -226,140 +161,23 @@ impl Engine {
 
     /// Count of quantized MatMul sites (paper: 85 of 97).
     pub fn quantized_site_count(&self) -> usize {
-        self.plan.values().filter(|p| p.is_some()).count()
-    }
-
-    fn site(&self, name: &str) -> Option<&SiteQuant> {
-        self.plan.get(name).and_then(|o| o.as_ref())
+        self.plan.quantized_site_count()
     }
 
     // ----------------------------------------------------------------
-    // dense (x @ W) with per-site precision dispatch
+    // embedding
     // ----------------------------------------------------------------
 
-    /// `out[rows, n] = x[rows, k] @ weights[site]` where the weight is a
-    /// [k, n] f32 tensor (or the cached embed.T for "logits").
-    fn dense(&mut self, site: &str, x: &[f32], rows: usize, out: &mut Vec<f32>) {
-        let wname = self.cfg.weight_for_site(site).expect("dense on dyn site");
-        let (wdata, k, n): (&[f32], usize, usize) = if wname == "embed.T" {
-            (&self.embed_t, self.cfg.d_model, self.cfg.vocab_size)
-        } else {
-            let t = self.weights.get(&wname).expect("weight exists");
-            (t.data(), t.shape()[0], t.shape()[1])
-        };
-        assert_eq!(x.len(), rows * k, "dense {site}: x len");
-        out.resize(rows * n, 0.0);
-
-        if let Some(q) = self.plan.get(site).and_then(|o| o.as_ref()).cloned() {
-            let qw = self.qweights.get(site).expect("prequantized weight");
-            debug_assert_eq!(qw.data.len(), k * n);
-            // quantize A (profiled as QuantizeV2 — the §4.1 O(N) overhead)
-            self.scratch.a_q.resize(rows * k, 0);
-            let (a_scale, a_zero) = (q.a.scale, q.a.zero);
-            self.profiler.time(OpKind::Quantize, || {
-                gemm::quantize_s8(x, a_scale, a_zero, &mut self.scratch.a_q);
-            });
-            self.scratch.acc.resize(rows * n, 0);
-            self.profiler.time(OpKind::QuantizedMatMul, || {
-                if let Some(bp) = &qw.packed {
-                    // pre-packed VNNI path + manual zero-point corrections
-                    gemm::igemm_prepacked(rows, k, &self.scratch.a_q, bp, &mut self.scratch.acc);
-                    apply_zero_corrections(
-                        rows, k, n, &self.scratch.a_q, a_zero, &qw.colsum,
-                        &mut self.scratch.acc,
-                    );
-                } else {
-                    gemm::igemm_corrected(
-                        rows,
-                        k,
-                        n,
-                        &self.scratch.a_q,
-                        a_zero,
-                        &qw.data,
-                        &mut self.scratch.acc,
-                    );
-                }
-            });
-            let s = q.a.scale * qw.scale;
-            self.profiler.time(OpKind::Dequantize, || {
-                for (o, &acc) in out.iter_mut().zip(self.scratch.acc.iter()) {
-                    *o = acc as f32 * s;
-                }
-            });
-        } else {
-            self.profiler.time(OpKind::MatMul, || {
-                gemm::sgemm(rows, k, n, x, wdata, out);
-            });
-        }
-    }
-
-    /// Dynamic 2-D matmul (tensor x tensor sites: qk / pv).
-    /// `a[m,k] @ b[k,n]`, with `b` given in row-major f32.
-    fn dyn_matmul(
-        &mut self,
-        site: &str,
-        m: usize,
-        k: usize,
-        n: usize,
-        a: &[f32],
-        b: &[f32],
-        out: &mut Vec<f32>,
-    ) {
-        out.resize(m * n, 0.0);
-        if let Some(q) = self.site(site).cloned() {
-            let (a_scale, a_zero, b_scale) = (q.a.scale, q.a.zero, q.b_scale);
-            self.scratch.a_q.resize(m * k, 0);
-            self.scratch.b_q.resize(k * n, 0);
-            self.profiler.time(OpKind::Quantize, || {
-                gemm::quantize_s8(a, a_scale, a_zero, &mut self.scratch.a_q);
-                gemm::quantize_u8(b, b_scale, &mut self.scratch.b_q);
-            });
-            self.scratch.acc.resize(m * n, 0);
-            self.profiler.time(OpKind::QuantizedMatMul, || {
-                gemm::igemm_corrected(
-                    m,
-                    k,
-                    n,
-                    &self.scratch.a_q,
-                    a_zero,
-                    &self.scratch.b_q,
-                    &mut self.scratch.acc,
-                );
-            });
-            let s = a_scale * b_scale;
-            self.profiler.time(OpKind::Dequantize, || {
-                for (o, &acc) in out.iter_mut().zip(self.scratch.acc.iter()) {
-                    *o = acc as f32 * s;
-                }
-            });
-        } else {
-            self.profiler.time(OpKind::MatMul, || {
-                gemm::sgemm(m, k, n, a, b, out);
-            });
-        }
-    }
-
-    // ----------------------------------------------------------------
-    // embedding + layer norm helpers
-    // ----------------------------------------------------------------
-
-    fn embed_tokens(&mut self, ids: &[u32], out: &mut Vec<f32>) {
-        let d = self.cfg.d_model;
-        out.resize(ids.len() * d, 0.0);
+    /// Embed token ids (pre-scaled rows) into the residual stream.
+    fn embed_tokens(&mut self, ids: &[u32]) {
+        let d = self.plan.d_model;
+        self.acts.x.resize(ids.len() * d, 0.0);
         let t0 = std::time::Instant::now();
         for (i, &id) in ids.iter().enumerate() {
-            let row = &self.embed_scaled[id as usize * d..(id as usize + 1) * d];
-            out[i * d..(i + 1) * d].copy_from_slice(row);
+            let row = &self.plan.embed_scaled[id as usize * d..(id as usize + 1) * d];
+            self.acts.x[i * d..(i + 1) * d].copy_from_slice(row);
         }
         self.profiler.add(OpKind::Embed, t0.elapsed());
-    }
-
-    fn ln(&mut self, prefix: &str, x: &mut [f32]) {
-        let d = self.cfg.d_model;
-        let (gamma, beta) = self.ln_cache.get(prefix).expect("ln cache");
-        let t0 = std::time::Instant::now();
-        ops::layer_norm_rows(x, d, gamma, beta, 1e-6);
-        self.profiler.add(OpKind::LayerNorm, t0.elapsed());
     }
 
     // ----------------------------------------------------------------
@@ -367,11 +185,11 @@ impl Engine {
     // ----------------------------------------------------------------
 
     /// Encode a padded batch: `src[b][t]` (PAD-padded, equal lengths).
-    /// Returns (memory [B*S*D], src lengths).
+    /// Returns (memory `[B*S*D]`, src lengths, padded length).
     pub fn encode(&mut self, src: &[Vec<u32>]) -> (Vec<f32>, Vec<usize>, usize) {
         let bsz = src.len();
         let s = src.iter().map(Vec::len).max().unwrap_or(0);
-        let d = self.cfg.d_model;
+        let d = self.plan.d_model;
         let src_len: Vec<usize> = src
             .iter()
             .map(|row| row.iter().take_while(|&&t| t != PAD_ID).count())
@@ -386,140 +204,53 @@ impl Engine {
                 r
             })
             .collect();
-        let mut x = Vec::new();
-        self.embed_tokens(&flat_ids, &mut x);
+        self.embed_tokens(&flat_ids);
         self.profiler.time(OpKind::Embed, || {
             for b in 0..bsz {
                 for t in 0..s {
-                    let row = &mut x[(b * s + t) * d..(b * s + t + 1) * d];
+                    let row = &mut self.acts.x[(b * s + t) * d..(b * s + t + 1) * d];
                     for c in 0..d {
-                        row[c] += self.pe[t * d + c];
+                        row[c] += self.plan.pe[t * d + c];
                     }
                 }
             }
         });
 
-        let mut attn_out = Vec::new();
-        let mut ffn_out = Vec::new();
-        for layer in 0..self.cfg.n_enc_layers {
-            let p = format!("enc.{layer}");
-            self.full_attention(
-                &format!("{p}.attn"),
-                &x.clone(),
-                &x,
+        for li in 0..self.cfg.n_enc_layers {
+            let lp = &self.plan.enc[li];
+            layers::full_attention(
+                &self.plan,
+                &mut self.scratch,
+                &mut self.attn_sc,
+                &mut self.profiler,
+                lp.attn,
+                &self.acts.x,
+                &self.acts.x,
                 bsz,
                 s,
                 s,
                 &src_len,
                 false,
-                &mut attn_out,
+                &mut self.acts.attn,
             );
-            ops::add_assign(&mut x, &attn_out);
-            self.ln(&format!("{p}.ln1"), &mut x);
-            self.ffn(&p, &x.clone(), bsz * s, &mut ffn_out);
-            ops::add_assign(&mut x, &ffn_out);
-            self.ln(&format!("{p}.ln2"), &mut x);
+            ops::add_assign(&mut self.acts.x, &self.acts.attn);
+            layers::ln(&lp.ln1, &mut self.profiler, d, &mut self.acts.x);
+            layers::ffn(
+                &self.plan,
+                &mut self.scratch,
+                &mut self.acts.hbuf,
+                &mut self.profiler,
+                &lp.ffn,
+                &self.acts.x,
+                bsz * s,
+                &mut self.acts.tmp,
+            );
+            ops::add_assign(&mut self.acts.x, &self.acts.tmp);
+            layers::ln(&lp.ln2, &mut self.profiler, d, &mut self.acts.x);
         }
-        (x, src_len, s)
-    }
-
-    /// Full (teacher-style) multi-head attention over padded batches.
-    /// q_in: [B*Tq*D], kv_in: [B*Tk*D]; `kv_len[b]` masks padded keys;
-    /// `causal` additionally masks j > i (decoder self-attn).
-    #[allow(clippy::too_many_arguments)]
-    fn full_attention(
-        &mut self,
-        prefix: &str,
-        q_in: &[f32],
-        kv_in: &[f32],
-        bsz: usize,
-        tq: usize,
-        tk: usize,
-        kv_len: &[usize],
-        causal: bool,
-        out: &mut Vec<f32>,
-    ) {
-        let d = self.cfg.d_model;
-        let h = self.cfg.n_heads;
-        let dh = self.cfg.d_head();
-        let mut q = Vec::new();
-        let mut k = Vec::new();
-        let mut v = Vec::new();
-        self.dense(&format!("{prefix}.q"), q_in, bsz * tq, &mut q);
-        self.dense(&format!("{prefix}.k"), kv_in, bsz * tk, &mut k);
-        self.dense(&format!("{prefix}.v"), kv_in, bsz * tk, &mut v);
-
-        let mut ctx = vec![0.0f32; bsz * tq * d];
-        let mut qh = vec![0.0f32; tq * dh];
-        let mut kht = vec![0.0f32; dh * tk];
-        let mut vh = vec![0.0f32; tk * dh];
-        let mut scores = Vec::new();
-        let mut probs_ctx = Vec::new();
-        let inv_sqrt = 1.0 / (dh as f32).sqrt();
-
-        for b in 0..bsz {
-            let klen = kv_len[b].min(tk);
-            for head in 0..h {
-                // gather head slices (contiguous per row)
-                for t in 0..tq {
-                    let row = &q[(b * tq + t) * d + head * dh..][..dh];
-                    qh[t * dh..(t + 1) * dh].copy_from_slice(row);
-                }
-                for t in 0..tk {
-                    let row = &k[(b * tk + t) * d + head * dh..][..dh];
-                    for c in 0..dh {
-                        kht[c * tk + t] = row[c];
-                    }
-                    vh[t * dh..(t + 1) * dh]
-                        .copy_from_slice(&v[(b * tk + t) * d + head * dh..][..dh]);
-                }
-                // scores = qh [tq,dh] @ kht [dh,tk]
-                self.dyn_matmul(&format!("{prefix}.qk"), tq, dh, tk, &qh, &kht, &mut scores);
-                self.profiler.time(OpKind::Softmax, || {
-                    for (i, row) in scores.chunks_mut(tk).enumerate() {
-                        for (j, x) in row.iter_mut().enumerate() {
-                            *x *= inv_sqrt;
-                            if j >= klen || (causal && j > i) {
-                                *x = -1e9;
-                            }
-                        }
-                    }
-                    ops::softmax_rows(&mut scores, tk);
-                });
-                // ctx_h = probs [tq,tk] @ vh [tk,dh]
-                self.dyn_matmul(
-                    &format!("{prefix}.pv"),
-                    tq,
-                    tk,
-                    dh,
-                    &scores,
-                    &vh,
-                    &mut probs_ctx,
-                );
-                for t in 0..tq {
-                    ctx[(b * tq + t) * d + head * dh..][..dh]
-                        .copy_from_slice(&probs_ctx[t * dh..(t + 1) * dh]);
-                }
-            }
-        }
-        self.dense(&format!("{prefix}.o"), &ctx, bsz * tq, out);
-    }
-
-    fn ffn(&mut self, prefix: &str, x: &[f32], rows: usize, out: &mut Vec<f32>) {
-        let mut hbuf = Vec::new();
-        self.dense(&format!("{prefix}.ffn.h"), x, rows, &mut hbuf);
-        {
-            let (b1, _) = self.bias_cache.get(prefix).expect("bias cache");
-            let t0 = std::time::Instant::now();
-            ops::add_bias(&mut hbuf, b1);
-            ops::relu(&mut hbuf);
-            self.profiler.add(OpKind::Other, t0.elapsed());
-        }
-        self.dense(&format!("{prefix}.ffn.y"), &hbuf, rows, out);
-        let (_, b2) = self.bias_cache.get(prefix).expect("bias cache");
-        let t0 = std::time::Instant::now();
-        ops::add_bias(out, b2);
-        self.profiler.add(OpKind::Other, t0.elapsed());
+        // hand the buffer out instead of copying it: embed_tokens
+        // resizes and fully rewrites acts.x on the next call
+        (std::mem::take(&mut self.acts.x), src_len, s)
     }
 
     // ----------------------------------------------------------------
@@ -527,7 +258,7 @@ impl Engine {
     // ----------------------------------------------------------------
 
     /// Build decoder state for `slots` parallel hypotheses over an
-    /// encoded memory ([slots*S*D]).  For greedy, slots == batch; beam
+    /// encoded memory (`[slots*S*D]`).  For greedy, slots == batch; beam
     /// search passes batch * beam (memory rows pre-replicated).
     pub fn init_decode(
         &mut self,
@@ -537,9 +268,9 @@ impl Engine {
         t_max: usize,
     ) -> DecodeState {
         let slots = src_len.len();
-        let d = self.cfg.d_model;
-        let h = self.cfg.n_heads;
-        let dh = self.cfg.d_head();
+        let d = self.plan.d_model;
+        let h = self.plan.n_heads;
+        let dh = self.plan.d_head;
         assert_eq!(memory.len(), slots * s * d);
         let self_slot = h * t_max * dh;
         let cross_slot = h * s * dh;
@@ -553,31 +284,42 @@ impl Engine {
             t_max,
             src_max: s,
         };
-        let mut kbuf = Vec::new();
-        let mut vbuf = Vec::new();
-        for layer in 0..self.cfg.n_dec_layers {
-            let qk_site = format!("dec.{layer}.self.qk");
-            let pv_site = format!("dec.{layer}.self.pv");
-            let cqk_site = format!("dec.{layer}.cross.qk");
-            let cpv_site = format!("dec.{layer}.cross.pv");
-            let mk_cache = |site: &str, slot_len: usize, this: &Engine| -> KvCache {
-                match this.site(site) {
+        for li in 0..self.cfg.n_dec_layers {
+            let lp = &self.plan.dec[li];
+            let mk = |site: SiteId, slot_len: usize| -> KvCache {
+                match &self.plan.site(site).quant {
                     Some(q) => KvCache::new_u8(slots, slot_len, q.b_scale),
                     None => KvCache::new_f32(slots, slot_len),
                 }
             };
-            st.self_k.push(mk_cache(&qk_site, self_slot, self));
-            st.self_v.push(mk_cache(&pv_site, self_slot, self));
-            let mut ck = mk_cache(&cqk_site, cross_slot, self);
-            let mut cv = mk_cache(&cpv_site, cross_slot, self);
+            st.self_k.push(mk(lp.self_attn.qk, self_slot));
+            st.self_v.push(mk(lp.self_attn.pv, self_slot));
+            let mut ck = mk(lp.cross.qk, cross_slot);
+            let mut cv = mk(lp.cross.pv, cross_slot);
             // precompute cross K/V of the memory (the paper's enc-dec cache)
-            self.dense(&format!("dec.{layer}.cross.k"), memory, slots * s, &mut kbuf);
-            self.dense(&format!("dec.{layer}.cross.v"), memory, slots * s, &mut vbuf);
+            layers::dense(
+                &self.plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                lp.cross.k,
+                memory,
+                slots * s,
+                &mut self.acts.k,
+            );
+            layers::dense(
+                &self.plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                lp.cross.v,
+                memory,
+                slots * s,
+                &mut self.acts.v,
+            );
             for slot in 0..slots {
                 for head in 0..h {
                     for t in 0..s {
-                        let kr = &kbuf[(slot * s + t) * d + head * dh..][..dh];
-                        let vr = &vbuf[(slot * s + t) * d + head * dh..][..dh];
+                        let kr = &self.acts.k[(slot * s + t) * d + head * dh..][..dh];
+                        let vr = &self.acts.v[(slot * s + t) * d + head * dh..][..dh];
                         ck.write(slot, (head * s + t) * dh, kr);
                         cv.write(slot, (head * s + t) * dh, vr);
                     }
@@ -590,7 +332,7 @@ impl Engine {
     }
 
     /// One decoder step: token per slot at position `pos` -> logits
-    /// [slots * vocab].  Writes this step's K/V into the caches.
+    /// `[slots * vocab]`.  Writes this step's K/V into the caches.
     pub fn decode_step(
         &mut self,
         st: &mut DecodeState,
@@ -599,227 +341,145 @@ impl Engine {
         logits: &mut Vec<f32>,
     ) {
         let slots = tokens.len();
-        let d = self.cfg.d_model;
-        let h = self.cfg.n_heads;
-        let dh = self.cfg.d_head();
+        let d = self.plan.d_model;
+        let h = self.plan.n_heads;
+        let dh = self.plan.d_head;
         let s = st.src_max;
 
-        let mut x = Vec::new();
-        self.embed_tokens(tokens, &mut x);
+        self.embed_tokens(tokens);
         self.profiler.time(OpKind::Embed, || {
             for slot in 0..slots {
                 for c in 0..d {
-                    x[slot * d + c] += self.pe[pos * d + c];
+                    self.acts.x[slot * d + c] += self.plan.pe[pos * d + c];
                 }
             }
         });
+        self.acts.attn.resize(slots * d, 0.0);
 
-        let mut q = Vec::new();
-        let mut k = Vec::new();
-        let mut v = Vec::new();
-        let mut attn = vec![0.0f32; slots * d];
-        let mut out = Vec::new();
-        let mut kv_row = vec![0.0f32; dh];
-
-        for layer in 0..self.cfg.n_dec_layers {
-            let p = format!("dec.{layer}");
+        for li in 0..self.cfg.n_dec_layers {
+            let lp = &self.plan.dec[li];
             // --- self attention (incremental) ---
-            self.dense(&format!("{p}.self.q"), &x, slots, &mut q);
-            self.dense(&format!("{p}.self.k"), &x, slots, &mut k);
-            self.dense(&format!("{p}.self.v"), &x, slots, &mut v);
+            layers::dense(
+                &self.plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                lp.self_attn.q,
+                &self.acts.x,
+                slots,
+                &mut self.acts.q,
+            );
+            layers::dense(
+                &self.plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                lp.self_attn.k,
+                &self.acts.x,
+                slots,
+                &mut self.acts.k,
+            );
+            layers::dense(
+                &self.plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                lp.self_attn.v,
+                &self.acts.x,
+                slots,
+                &mut self.acts.v,
+            );
             for slot in 0..slots {
                 for head in 0..h {
-                    let kr = &k[slot * d + head * dh..][..dh];
-                    let vr = &v[slot * d + head * dh..][..dh];
-                    st.self_k[layer].write(slot, (head * st.t_max + pos) * dh, kr);
-                    st.self_v[layer].write(slot, (head * st.t_max + pos) * dh, vr);
+                    let kr = &self.acts.k[slot * d + head * dh..][..dh];
+                    let vr = &self.acts.v[slot * d + head * dh..][..dh];
+                    st.self_k[li].write(slot, (head * st.t_max + pos) * dh, kr);
+                    st.self_v[li].write(slot, (head * st.t_max + pos) * dh, vr);
                 }
             }
             let klen = pos + 1;
-            self.cached_attention(
-                &p,
-                "self",
-                &q,
-                &st.self_k[layer],
-                &st.self_v[layer],
+            layers::cached_attention(
+                &self.plan,
+                &mut self.attn_sc,
+                &mut self.profiler,
+                lp.self_attn.qk,
+                lp.self_attn.pv,
+                &self.acts.q,
+                &st.self_k[li],
+                &st.self_v[li],
                 slots,
                 st.t_max,
                 |_slot| klen,
-                &mut attn,
-                &mut kv_row,
+                &mut self.acts.attn,
             );
-            self.dense(&format!("{p}.self.o"), &attn.clone(), slots, &mut out);
-            ops::add_assign(&mut x, &out);
-            self.ln(&format!("{p}.ln1"), &mut x);
+            layers::dense(
+                &self.plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                lp.self_attn.o,
+                &self.acts.attn,
+                slots,
+                &mut self.acts.tmp,
+            );
+            ops::add_assign(&mut self.acts.x, &self.acts.tmp);
+            layers::ln(&lp.ln1, &mut self.profiler, d, &mut self.acts.x);
 
             // --- cross attention over cached memory K/V ---
-            self.dense(&format!("{p}.cross.q"), &x, slots, &mut q);
-            let src_len = st.src_len.clone();
-            self.cached_attention(
-                &p,
-                "cross",
-                &q,
-                &st.cross_k[layer],
-                &st.cross_v[layer],
+            layers::dense(
+                &self.plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                lp.cross.q,
+                &self.acts.x,
+                slots,
+                &mut self.acts.q,
+            );
+            layers::cached_attention(
+                &self.plan,
+                &mut self.attn_sc,
+                &mut self.profiler,
+                lp.cross.qk,
+                lp.cross.pv,
+                &self.acts.q,
+                &st.cross_k[li],
+                &st.cross_v[li],
                 slots,
                 s,
-                |slot| src_len[slot].min(s),
-                &mut attn,
-                &mut kv_row,
+                |slot| st.src_len[slot].min(s),
+                &mut self.acts.attn,
             );
-            self.dense(&format!("{p}.cross.o"), &attn.clone(), slots, &mut out);
-            ops::add_assign(&mut x, &out);
-            self.ln(&format!("{p}.ln2"), &mut x);
+            layers::dense(
+                &self.plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                lp.cross.o,
+                &self.acts.attn,
+                slots,
+                &mut self.acts.tmp,
+            );
+            ops::add_assign(&mut self.acts.x, &self.acts.tmp);
+            layers::ln(&lp.ln2, &mut self.profiler, d, &mut self.acts.x);
 
             // --- ffn ---
-            self.ffn(&p, &x.clone(), slots, &mut out);
-            ops::add_assign(&mut x, &out);
-            self.ln(&format!("{p}.ln3"), &mut x);
+            layers::ffn(
+                &self.plan,
+                &mut self.scratch,
+                &mut self.acts.hbuf,
+                &mut self.profiler,
+                &lp.ffn,
+                &self.acts.x,
+                slots,
+                &mut self.acts.tmp,
+            );
+            ops::add_assign(&mut self.acts.x, &self.acts.tmp);
+            layers::ln(&lp.ln3, &mut self.profiler, d, &mut self.acts.x);
         }
-        self.dense("logits", &x, slots, logits);
-    }
-
-    /// Single-query attention against a cache laid out [H, T, dh] per
-    /// slot.  Dispatches to integer dot products when the site is
-    /// quantized and the cache stores u8 (no dequantize on the path).
-    #[allow(clippy::too_many_arguments)]
-    fn cached_attention(
-        &mut self,
-        layer_prefix: &str,
-        block: &str,
-        q: &[f32],
-        kcache: &KvCache,
-        vcache: &KvCache,
-        slots: usize,
-        t_stride: usize,
-        klen_of: impl Fn(usize) -> usize,
-        out: &mut [f32],
-        kv_row: &mut Vec<f32>,
-    ) {
-        let d = self.cfg.d_model;
-        let h = self.cfg.n_heads;
-        let dh = self.cfg.d_head();
-        let inv_sqrt = 1.0 / (dh as f32).sqrt();
-        let qk_site = format!("{layer_prefix}.{block}.qk");
-        let pv_site = format!("{layer_prefix}.{block}.pv");
-        let qk_quant = self.site(&qk_site).cloned();
-        let pv_quant = self.site(&pv_site).cloned();
-        kv_row.resize(dh, 0.0);
-        let mut scores: Vec<f32> = Vec::new();
-        let mut q_q8: Vec<i8> = Vec::new();
-        let mut p_q8: Vec<i8> = Vec::new();
-
-        for slot in 0..slots {
-            let klen = klen_of(slot);
-            scores.resize(klen, 0.0);
-            for head in 0..h {
-                let qrow = &q[slot * d + head * dh..][..dh];
-                // ---- scores = q . k_t ----
-                match (&qk_quant, kcache.is_quantized()) {
-                    (Some(sq), true) => {
-                        q_q8.resize(dh, 0);
-                        self.profiler.time(OpKind::Quantize, || {
-                            gemm::quantize_s8(qrow, sq.a.scale, sq.a.zero, &mut q_q8);
-                        });
-                        let (kraw, kscale) =
-                            kcache.raw_u8(slot, head * t_stride * dh, klen * dh);
-                        let s = sq.a.scale * kscale;
-                        self.profiler.time(OpKind::QuantizedMatMul, || {
-                            for (t, sc) in scores.iter_mut().enumerate() {
-                                let krow = &kraw[t * dh..(t + 1) * dh];
-                                let mut acc = 0i32;
-                                for c in 0..dh {
-                                    acc += (q_q8[c] as i32 - sq.a.zero)
-                                        * (krow[c] as i32 - UINT8_ZERO_POINT);
-                                }
-                                *sc = acc as f32 * s;
-                            }
-                        });
-                    }
-                    _ => {
-                        self.profiler.time(OpKind::MatMul, || {
-                            if kcache.is_quantized() {
-                                // quantized cache but fp32 site: dequantize rows
-                                for (t, sc) in scores.iter_mut().enumerate() {
-                                    kcache.read_into(
-                                        slot,
-                                        (head * t_stride + t) * dh,
-                                        dh,
-                                        kv_row,
-                                    );
-                                    *sc = dot(qrow, kv_row);
-                                }
-                            } else {
-                                let kraw =
-                                    kcache.raw_f32(slot, head * t_stride * dh, klen * dh);
-                                for (t, sc) in scores.iter_mut().enumerate() {
-                                    *sc = dot(qrow, &kraw[t * dh..(t + 1) * dh]);
-                                }
-                            }
-                        });
-                    }
-                }
-                self.profiler.time(OpKind::Softmax, || {
-                    for sc in scores.iter_mut() {
-                        *sc *= inv_sqrt;
-                    }
-                    ops::softmax_rows(&mut scores, klen);
-                });
-                // ---- ctx = sum_t probs[t] * v_t ----
-                let ctx = &mut out[slot * d + head * dh..][..dh];
-                ctx.fill(0.0);
-                match (&pv_quant, vcache.is_quantized()) {
-                    (Some(sq), true) => {
-                        p_q8.resize(klen, 0);
-                        self.profiler.time(OpKind::Quantize, || {
-                            gemm::quantize_s8(&scores, sq.a.scale, sq.a.zero, &mut p_q8);
-                        });
-                        let (vraw, vscale) =
-                            vcache.raw_u8(slot, head * t_stride * dh, klen * dh);
-                        let s = sq.a.scale * vscale;
-                        self.profiler.time(OpKind::QuantizedMatMul, || {
-                            let mut acc = vec![0i32; dh];
-                            for t in 0..klen {
-                                let pq = p_q8[t] as i32 - sq.a.zero;
-                                let vrow = &vraw[t * dh..(t + 1) * dh];
-                                for c in 0..dh {
-                                    acc[c] += pq * (vrow[c] as i32 - UINT8_ZERO_POINT);
-                                }
-                            }
-                            for c in 0..dh {
-                                ctx[c] = acc[c] as f32 * s;
-                            }
-                        });
-                    }
-                    _ => {
-                        self.profiler.time(OpKind::MatMul, || {
-                            if vcache.is_quantized() {
-                                for (t, &p) in scores.iter().enumerate() {
-                                    vcache.read_into(
-                                        slot,
-                                        (head * t_stride + t) * dh,
-                                        dh,
-                                        kv_row,
-                                    );
-                                    for c in 0..dh {
-                                        ctx[c] += p * kv_row[c];
-                                    }
-                                }
-                            } else {
-                                let vraw =
-                                    vcache.raw_f32(slot, head * t_stride * dh, klen * dh);
-                                for (t, &p) in scores.iter().enumerate() {
-                                    let vrow = &vraw[t * dh..(t + 1) * dh];
-                                    for c in 0..dh {
-                                        ctx[c] += p * vrow[c];
-                                    }
-                                }
-                            }
-                        });
-                    }
-                }
-            }
-        }
+        layers::dense(
+            &self.plan,
+            &mut self.scratch,
+            &mut self.profiler,
+            self.plan.logits,
+            &self.acts.x,
+            slots,
+            logits,
+        );
     }
 
     /// Greedy-translate a padded batch. Returns token rows (PAD-free,
@@ -862,55 +522,6 @@ impl Engine {
         }
         out
     }
-}
-
-/// Subtract the zero-point corrections from a raw `A_q x B_q` product:
-/// `acc -= 128*rowsum(a) + za*colsum(b) - k*za*128` (see igemm_corrected).
-fn apply_zero_corrections(
-    rows: usize,
-    k: usize,
-    n: usize,
-    a_q: &[i8],
-    a_zero: i32,
-    colsum: &[i32],
-    acc: &mut [i32],
-) {
-    let kz = k as i32 * a_zero * UINT8_ZERO_POINT;
-    for i in 0..rows {
-        let mut rowsum = 0i32;
-        for p in 0..k {
-            rowsum += a_q[i * k + p] as i32;
-        }
-        let corr_row = UINT8_ZERO_POINT * rowsum;
-        let row = &mut acc[i * n..(i + 1) * n];
-        if a_zero == 0 {
-            for x in row.iter_mut() {
-                *x -= corr_row;
-            }
-        } else {
-            for (j, x) in row.iter_mut().enumerate() {
-                *x = *x - corr_row - a_zero * colsum[j] + kz;
-            }
-        }
-    }
-}
-
-#[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
-    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
-}
-
-/// Sinusoidal positions (identical to python model.positional_encoding).
-pub fn positional_encoding(max_len: usize, d_model: usize) -> Vec<f32> {
-    let mut pe = vec![0.0f32; max_len * d_model];
-    for pos in 0..max_len {
-        for i in 0..d_model / 2 {
-            let angle = pos as f64 / 10000f64.powf(2.0 * i as f64 / d_model as f64);
-            pe[pos * d_model + 2 * i] = angle.sin() as f32;
-            pe[pos * d_model + 2 * i + 1] = angle.cos() as f32;
-        }
-    }
-    pe
 }
 
 #[cfg(test)]
@@ -977,6 +588,18 @@ mod tests {
     }
 
     #[test]
+    fn shared_plan_engines_translate_identically() {
+        // two engines over one Arc'd plan: same outputs, no re-quantize
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 9);
+        let compiled = Arc::new(CompiledPlan::build(&cfg, &w, &loose_plan(&cfg)).unwrap());
+        let mut e1 = Engine::from_compiled(cfg.clone(), compiled.clone());
+        let mut e2 = Engine::from_compiled(cfg.clone(), compiled);
+        let src = vec![vec![3, 4, 5, 2], vec![6, 7, 2]];
+        assert_eq!(e1.translate_greedy(&src, 8), e2.translate_greedy(&src, 8));
+    }
+
+    #[test]
     fn profiler_buckets_reflect_precision() {
         let cfg = tiny_cfg();
         let w = random_weights(&cfg, 5);
@@ -994,19 +617,29 @@ mod tests {
     }
 
     #[test]
+    fn per_site_profile_attributes_gemm_time() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 10);
+        let mut e = Engine::with_plan(cfg.clone(), w, loose_plan(&cfg)).unwrap();
+        e.profiler = Profiler::enabled();
+        e.translate_greedy(&[vec![3, 4, 5, 2]], 6);
+        let breakdown = e.profiler.site_breakdown();
+        assert!(!breakdown.is_empty());
+        // every reported site is a real census site with calls recorded
+        for (site, total, calls) in &breakdown {
+            assert!(site.idx() < e.plan().site_count());
+            assert!(*calls > 0);
+            assert!(*total > std::time::Duration::ZERO || *calls > 0);
+        }
+        // the logits projection runs once per decode step
+        assert!(e.profiler.site_count(e.plan().logits) > 0);
+    }
+
+    #[test]
     fn empty_batch_is_ok() {
         let cfg = tiny_cfg();
         let w = random_weights(&cfg, 6);
         let mut e = Engine::fp32(cfg, w).unwrap();
         assert!(e.translate_greedy(&[], 8).is_empty());
-    }
-
-    #[test]
-    fn positional_encoding_matches_formula() {
-        let pe = positional_encoding(4, 6);
-        assert_eq!(pe[0], 0.0); // sin(0)
-        assert_eq!(pe[1], 1.0); // cos(0)
-        let angle: f64 = 2.0 / 10000f64.powf(2.0 / 6.0);
-        assert!((pe[2 * 6 + 2] - angle.sin() as f32).abs() < 1e-6);
     }
 }

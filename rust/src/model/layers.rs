@@ -1,0 +1,509 @@
+//! The typed layer stack: attention, FFN and LayerNorm executing over a
+//! [`CompiledPlan`] (the compile-once dispatch of §5.5).
+//!
+//! Every function here is index-addressed: MatMul sites arrive as
+//! [`SiteId`]s inside [`AttnPlan`]/[`FfnPlan`] and resolve through
+//! [`CompiledPlan::site`] — no string formatting, no map walks, no
+//! weight-name indirection on the hot path.  The engine
+//! ([`crate::model::engine`]) is pure orchestration + state; the math
+//! lives here.
+//!
+//! Attention is **head-batched**: all heads are gathered into blocked
+//! `[B*H, Tq, dh]` / `[B*H, dh, Tk]` / `[B*H, Tk, dh]` buffers once per
+//! layer, and the QK/PV products run as head-blocked GEMMs over those
+//! buffers.  On quantized sites the activations are quantized **once
+//! per layer** (one `QuantizeV2` pass over the whole blocked tensor)
+//! instead of once per `(batch, head)` pair — §4.1 measures QuantizeV2
+//! as an O(N) overhead per invocation, so the seed engine's
+//! `B*H` quantize calls per attention site were exactly the per-op
+//! cost the paper's graph transform exists to eliminate.  Elementwise
+//! quantization makes the blocked form bit-identical to the per-head
+//! form (asserted end-to-end by `tests/golden_parity.rs`).
+//!
+//! Softmax and LayerNorm always run in FP32 (§3 of the paper).
+
+use crate::gemm::{self, QGemmScratch, UINT8_ZERO_POINT};
+use crate::model::kvcache::KvCache;
+use crate::model::plan::{AttnPlan, CompiledPlan, FfnPlan, LnPlan, SiteId, WeightStore};
+use crate::model::profiler::{OpKind, Profiler};
+use crate::tensor::ops;
+
+/// Reusable buffers for the head-batched attention path and the
+/// single-query (decode) cached-attention path.  Owned by the engine so
+/// the per-token loop performs no allocation.
+#[derive(Default)]
+pub struct AttnScratch {
+    /// projected q/k/v activations, `[rows, d]`
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// head-gathered query blocks, `[B*H, Tq, dh]`
+    qh: Vec<f32>,
+    /// head-gathered transposed key blocks, `[B*H, dh, Tk]`
+    kht: Vec<f32>,
+    /// head-gathered value blocks, `[B*H, Tk, dh]`
+    vh: Vec<f32>,
+    /// blocked attention scores/probs, `[B*H, Tq, Tk]`
+    scores: Vec<f32>,
+    /// blocked PV product, `[B*H, Tq, dh]`
+    pv: Vec<f32>,
+    /// heads scattered back to `[rows, d]`
+    ctx: Vec<f32>,
+    /// decode path: per-slot scores `[H, klen]`, quantized q and probs
+    dec_scores: Vec<f32>,
+    q_q8: Vec<i8>,
+    p_q8: Vec<i8>,
+    kv_row: Vec<f32>,
+    /// decode path: per-head i32 PV accumulator (`dh` wide)
+    dec_acc: Vec<i32>,
+}
+
+/// `out[rows, n] = x[rows, k] @ W[site]` with per-site precision
+/// dispatch: FP32 `sgemm` or quantize → int GEMM → dequantize against
+/// the prequantized, prepacked weight const resolved at plan-compile
+/// time.
+pub fn dense(
+    plan: &CompiledPlan,
+    sc: &mut QGemmScratch,
+    prof: &mut Profiler,
+    site: SiteId,
+    x: &[f32],
+    rows: usize,
+    out: &mut Vec<f32>,
+) {
+    let sp = plan.site(site);
+    let w = sp.weight.as_ref().expect("dense on dynamic site");
+    let (k, n) = (w.k, w.n);
+    assert_eq!(x.len(), rows * k, "dense {}: x len", plan.site_name(site));
+    out.resize(rows * n, 0.0);
+    match (&sp.quant, &w.store) {
+        (Some(q), WeightStore::Quant(qw)) => {
+            debug_assert_eq!(qw.data.len(), k * n);
+            // quantize A (profiled as QuantizeV2 — the §4.1 O(N) overhead)
+            sc.a_q.resize(rows * k, 0);
+            let (a_scale, a_zero) = (q.a.scale, q.a.zero);
+            prof.time(OpKind::Quantize, || {
+                gemm::quantize_s8(x, a_scale, a_zero, &mut sc.a_q);
+            });
+            sc.acc.resize(rows * n, 0);
+            prof.time_site(OpKind::QuantizedMatMul, site, || {
+                if let Some(bp) = &qw.packed {
+                    // pre-packed VNNI path + manual zero-point corrections
+                    gemm::igemm_prepacked(rows, k, &sc.a_q, bp, &mut sc.acc);
+                    apply_zero_corrections(rows, k, n, &sc.a_q, a_zero, &qw.colsum, &mut sc.acc);
+                } else {
+                    gemm::igemm_corrected(rows, k, n, &sc.a_q, a_zero, &qw.data, &mut sc.acc);
+                }
+            });
+            let s = a_scale * qw.scale;
+            prof.time(OpKind::Dequantize, || {
+                for (o, &acc) in out.iter_mut().zip(sc.acc.iter()) {
+                    *o = acc as f32 * s;
+                }
+            });
+        }
+        (None, WeightStore::F32(wdata)) => {
+            prof.time_site(OpKind::MatMul, site, || {
+                gemm::sgemm(rows, k, n, x, wdata, out);
+            });
+        }
+        // CompiledPlan::build ties the store to the quant decision
+        _ => unreachable!("compiled plan store/quant mismatch"),
+    }
+}
+
+/// Full (teacher-style) multi-head attention over padded batches, all
+/// heads batched (see module docs).  `q_in: [B*Tq*D]`, `kv_in:
+/// [B*Tk*D]`; `kv_len[b]` masks padded keys; `causal` additionally
+/// masks `j > i`.
+#[allow(clippy::too_many_arguments)]
+pub fn full_attention(
+    plan: &CompiledPlan,
+    gemm_sc: &mut QGemmScratch,
+    sc: &mut AttnScratch,
+    prof: &mut Profiler,
+    attn: AttnPlan,
+    q_in: &[f32],
+    kv_in: &[f32],
+    bsz: usize,
+    tq: usize,
+    tk: usize,
+    kv_len: &[usize],
+    causal: bool,
+    out: &mut Vec<f32>,
+) {
+    let d = plan.d_model;
+    let h = plan.n_heads;
+    let dh = plan.d_head;
+    dense(plan, gemm_sc, prof, attn.q, q_in, bsz * tq, &mut sc.q);
+    dense(plan, gemm_sc, prof, attn.k, kv_in, bsz * tk, &mut sc.k);
+    dense(plan, gemm_sc, prof, attn.v, kv_in, bsz * tk, &mut sc.v);
+
+    // gather every head once into contiguous blocks
+    let blocks = bsz * h;
+    sc.qh.resize(blocks * tq * dh, 0.0);
+    sc.kht.resize(blocks * dh * tk, 0.0);
+    sc.vh.resize(blocks * tk * dh, 0.0);
+    for b in 0..bsz {
+        for head in 0..h {
+            let blk = b * h + head;
+            let qb = blk * tq * dh;
+            for t in 0..tq {
+                let row = &sc.q[(b * tq + t) * d + head * dh..][..dh];
+                sc.qh[qb + t * dh..qb + (t + 1) * dh].copy_from_slice(row);
+            }
+            let kb = blk * dh * tk;
+            let vb = blk * tk * dh;
+            for t in 0..tk {
+                let krow = &sc.k[(b * tk + t) * d + head * dh..][..dh];
+                for c in 0..dh {
+                    sc.kht[kb + c * tk + t] = krow[c];
+                }
+                sc.vh[vb + t * dh..vb + (t + 1) * dh]
+                    .copy_from_slice(&sc.v[(b * tk + t) * d + head * dh..][..dh]);
+            }
+        }
+    }
+
+    // scores = qh @ kht, head-blocked; activations quantized once.
+    // gemm_sc's buffers are free here: the dense() projections above
+    // are complete before the blocked stages start.
+    sc.scores.resize(blocks * tq * tk, 0.0);
+    if let Some(q) = &plan.site(attn.qk).quant {
+        let (a_scale, a_zero, b_scale) = (q.a.scale, q.a.zero, q.b_scale);
+        gemm_sc.a_q.resize(blocks * tq * dh, 0);
+        gemm_sc.b_q.resize(blocks * dh * tk, 0);
+        prof.time(OpKind::Quantize, || {
+            gemm::quantize_s8(&sc.qh, a_scale, a_zero, &mut gemm_sc.a_q);
+            gemm::quantize_u8(&sc.kht, b_scale, &mut gemm_sc.b_q);
+        });
+        gemm_sc.acc.resize(blocks * tq * tk, 0);
+        prof.time_site(OpKind::QuantizedMatMul, attn.qk, || {
+            for blk in 0..blocks {
+                gemm::igemm_corrected(
+                    tq,
+                    dh,
+                    tk,
+                    &gemm_sc.a_q[blk * tq * dh..][..tq * dh],
+                    a_zero,
+                    &gemm_sc.b_q[blk * dh * tk..][..dh * tk],
+                    &mut gemm_sc.acc[blk * tq * tk..][..tq * tk],
+                );
+            }
+        });
+        let s = a_scale * b_scale;
+        prof.time(OpKind::Dequantize, || {
+            for (o, &acc) in sc.scores.iter_mut().zip(gemm_sc.acc.iter()) {
+                *o = acc as f32 * s;
+            }
+        });
+    } else {
+        prof.time_site(OpKind::MatMul, attn.qk, || {
+            for blk in 0..blocks {
+                gemm::sgemm(
+                    tq,
+                    dh,
+                    tk,
+                    &sc.qh[blk * tq * dh..][..tq * dh],
+                    &sc.kht[blk * dh * tk..][..dh * tk],
+                    &mut sc.scores[blk * tq * tk..][..tq * tk],
+                );
+            }
+        });
+    }
+
+    // mask + softmax, always FP32 (§3)
+    let inv_sqrt = 1.0 / (dh as f32).sqrt();
+    prof.time(OpKind::Softmax, || {
+        for b in 0..bsz {
+            let klen = kv_len[b].min(tk);
+            for head in 0..h {
+                let base = (b * h + head) * tq * tk;
+                for i in 0..tq {
+                    let row = &mut sc.scores[base + i * tk..][..tk];
+                    for (j, x) in row.iter_mut().enumerate() {
+                        *x *= inv_sqrt;
+                        if j >= klen || (causal && j > i) {
+                            *x = -1e9;
+                        }
+                    }
+                }
+            }
+        }
+        if !sc.scores.is_empty() {
+            ops::softmax_rows(&mut sc.scores, tk);
+        }
+    });
+
+    // ctx = probs @ vh, head-blocked; probs quantized once
+    sc.pv.resize(blocks * tq * dh, 0.0);
+    if let Some(q) = &plan.site(attn.pv).quant {
+        let (a_scale, a_zero, b_scale) = (q.a.scale, q.a.zero, q.b_scale);
+        gemm_sc.a_q.resize(blocks * tq * tk, 0);
+        gemm_sc.b_q.resize(blocks * tk * dh, 0);
+        prof.time(OpKind::Quantize, || {
+            gemm::quantize_s8(&sc.scores, a_scale, a_zero, &mut gemm_sc.a_q);
+            gemm::quantize_u8(&sc.vh, b_scale, &mut gemm_sc.b_q);
+        });
+        gemm_sc.acc.resize(blocks * tq * dh, 0);
+        prof.time_site(OpKind::QuantizedMatMul, attn.pv, || {
+            for blk in 0..blocks {
+                gemm::igemm_corrected(
+                    tq,
+                    tk,
+                    dh,
+                    &gemm_sc.a_q[blk * tq * tk..][..tq * tk],
+                    a_zero,
+                    &gemm_sc.b_q[blk * tk * dh..][..tk * dh],
+                    &mut gemm_sc.acc[blk * tq * dh..][..tq * dh],
+                );
+            }
+        });
+        let s = a_scale * b_scale;
+        prof.time(OpKind::Dequantize, || {
+            for (o, &acc) in sc.pv.iter_mut().zip(gemm_sc.acc.iter()) {
+                *o = acc as f32 * s;
+            }
+        });
+    } else {
+        prof.time_site(OpKind::MatMul, attn.pv, || {
+            for blk in 0..blocks {
+                gemm::sgemm(
+                    tq,
+                    tk,
+                    dh,
+                    &sc.scores[blk * tq * tk..][..tq * tk],
+                    &sc.vh[blk * tk * dh..][..tk * dh],
+                    &mut sc.pv[blk * tq * dh..][..tq * dh],
+                );
+            }
+        });
+    }
+
+    // scatter heads back to [rows, d]
+    sc.ctx.resize(bsz * tq * d, 0.0);
+    for b in 0..bsz {
+        for head in 0..h {
+            let blk = b * h + head;
+            for t in 0..tq {
+                sc.ctx[(b * tq + t) * d + head * dh..][..dh]
+                    .copy_from_slice(&sc.pv[(blk * tq + t) * dh..][..dh]);
+            }
+        }
+    }
+    dense(plan, gemm_sc, prof, attn.o, &sc.ctx, bsz * tq, out);
+}
+
+/// Position-wise FFN: `relu(x @ W1 + b1) @ W2 + b2` with per-site
+/// dispatch; `hbuf` is the caller-owned hidden-activation scratch.
+#[allow(clippy::too_many_arguments)]
+pub fn ffn(
+    plan: &CompiledPlan,
+    sc: &mut QGemmScratch,
+    hbuf: &mut Vec<f32>,
+    prof: &mut Profiler,
+    f: &FfnPlan,
+    x: &[f32],
+    rows: usize,
+    out: &mut Vec<f32>,
+) {
+    dense(plan, sc, prof, f.h, x, rows, hbuf);
+    let t0 = std::time::Instant::now();
+    ops::add_bias(hbuf, &f.b1);
+    ops::relu(hbuf);
+    prof.add(OpKind::Other, t0.elapsed());
+    dense(plan, sc, prof, f.y, hbuf, rows, out);
+    let t0 = std::time::Instant::now();
+    ops::add_bias(out, &f.b2);
+    prof.add(OpKind::Other, t0.elapsed());
+}
+
+/// LayerNorm over `d`-wide rows with the plan's resolved constants.
+pub fn ln(lnp: &LnPlan, prof: &mut Profiler, d: usize, x: &mut [f32]) {
+    let t0 = std::time::Instant::now();
+    ops::layer_norm_rows(x, d, &lnp.gamma, &lnp.beta, 1e-6);
+    prof.add(OpKind::LayerNorm, t0.elapsed());
+}
+
+/// Single-query attention against a cache laid out `[H, T, dh]` per
+/// slot (the incremental decode path).  Dispatches to integer dot
+/// products when the site is quantized and the cache stores u8 — no
+/// dequantize on the path.  The query activation is quantized once per
+/// layer (whole `[slots, d]` tensor) and the attention probabilities
+/// once per slot (whole `[H, klen]` tensor), not once per head.
+#[allow(clippy::too_many_arguments)]
+pub fn cached_attention(
+    plan: &CompiledPlan,
+    sc: &mut AttnScratch,
+    prof: &mut Profiler,
+    qk: SiteId,
+    pv: SiteId,
+    q: &[f32],
+    kcache: &KvCache,
+    vcache: &KvCache,
+    slots: usize,
+    t_stride: usize,
+    klen_of: impl Fn(usize) -> usize,
+    out: &mut [f32],
+) {
+    let d = plan.d_model;
+    let h = plan.n_heads;
+    let dh = plan.d_head;
+    let inv_sqrt = 1.0 / (dh as f32).sqrt();
+    debug_assert_eq!(q.len(), slots * d);
+    debug_assert_eq!(out.len(), slots * d);
+    let qk_quant = &plan.site(qk).quant;
+    let pv_quant = &plan.site(pv).quant;
+    sc.kv_row.resize(dh, 0.0);
+
+    // quantize the whole query activation once per layer
+    let qk_int = qk_quant.is_some() && kcache.is_quantized();
+    if qk_int {
+        let sq = qk_quant.as_ref().unwrap();
+        sc.q_q8.resize(q.len(), 0);
+        prof.time(OpKind::Quantize, || {
+            gemm::quantize_s8(q, sq.a.scale, sq.a.zero, &mut sc.q_q8);
+        });
+    }
+
+    for slot in 0..slots {
+        let klen = klen_of(slot);
+        sc.dec_scores.resize(h * klen, 0.0);
+        // ---- scores = q . k_t, per head against the cache ----
+        for head in 0..h {
+            if qk_int {
+                let sq = qk_quant.as_ref().unwrap();
+                let (kraw, kscale) = kcache.raw_u8(slot, head * t_stride * dh, klen * dh);
+                let s = sq.a.scale * kscale;
+                let za = sq.a.zero;
+                let qrow = &sc.q_q8[slot * d + head * dh..][..dh];
+                prof.time_site(OpKind::QuantizedMatMul, qk, || {
+                    for t in 0..klen {
+                        let krow = &kraw[t * dh..(t + 1) * dh];
+                        let mut acc = 0i32;
+                        for c in 0..dh {
+                            acc += (qrow[c] as i32 - za) * (krow[c] as i32 - UINT8_ZERO_POINT);
+                        }
+                        sc.dec_scores[head * klen + t] = acc as f32 * s;
+                    }
+                });
+            } else {
+                let qrow = &q[slot * d + head * dh..][..dh];
+                prof.time_site(OpKind::MatMul, qk, || {
+                    if kcache.is_quantized() {
+                        // quantized cache but fp32 site: dequantize rows
+                        for t in 0..klen {
+                            kcache.read_into(slot, (head * t_stride + t) * dh, dh, &mut sc.kv_row);
+                            sc.dec_scores[head * klen + t] = dot(qrow, &sc.kv_row);
+                        }
+                    } else {
+                        let kraw = kcache.raw_f32(slot, head * t_stride * dh, klen * dh);
+                        for t in 0..klen {
+                            sc.dec_scores[head * klen + t] = dot(qrow, &kraw[t * dh..(t + 1) * dh]);
+                        }
+                    }
+                });
+            }
+        }
+        // ---- softmax over all heads' rows at once ----
+        prof.time(OpKind::Softmax, || {
+            for x in sc.dec_scores.iter_mut() {
+                *x *= inv_sqrt;
+            }
+            if klen > 0 {
+                ops::softmax_rows(&mut sc.dec_scores, klen);
+            }
+        });
+        // ---- ctx = probs @ v, probs quantized once per slot ----
+        let pv_int = pv_quant.is_some() && vcache.is_quantized();
+        if pv_int {
+            let sq = pv_quant.as_ref().unwrap();
+            sc.p_q8.resize(sc.dec_scores.len(), 0);
+            prof.time(OpKind::Quantize, || {
+                gemm::quantize_s8(&sc.dec_scores, sq.a.scale, sq.a.zero, &mut sc.p_q8);
+            });
+        }
+        for head in 0..h {
+            let ctx = &mut out[slot * d + head * dh..][..dh];
+            ctx.fill(0.0);
+            if pv_int {
+                let sq = pv_quant.as_ref().unwrap();
+                let (vraw, vscale) = vcache.raw_u8(slot, head * t_stride * dh, klen * dh);
+                let s = sq.a.scale * vscale;
+                let za = sq.a.zero;
+                prof.time_site(OpKind::QuantizedMatMul, pv, || {
+                    sc.dec_acc.resize(dh, 0);
+                    sc.dec_acc.fill(0);
+                    for t in 0..klen {
+                        let pq = sc.p_q8[head * klen + t] as i32 - za;
+                        let vrow = &vraw[t * dh..(t + 1) * dh];
+                        for c in 0..dh {
+                            sc.dec_acc[c] += pq * (vrow[c] as i32 - UINT8_ZERO_POINT);
+                        }
+                    }
+                    for c in 0..dh {
+                        ctx[c] = sc.dec_acc[c] as f32 * s;
+                    }
+                });
+            } else {
+                prof.time_site(OpKind::MatMul, pv, || {
+                    if vcache.is_quantized() {
+                        for t in 0..klen {
+                            vcache.read_into(slot, (head * t_stride + t) * dh, dh, &mut sc.kv_row);
+                            let p = sc.dec_scores[head * klen + t];
+                            for c in 0..dh {
+                                ctx[c] += p * sc.kv_row[c];
+                            }
+                        }
+                    } else {
+                        let vraw = vcache.raw_f32(slot, head * t_stride * dh, klen * dh);
+                        for t in 0..klen {
+                            let p = sc.dec_scores[head * klen + t];
+                            let vrow = &vraw[t * dh..(t + 1) * dh];
+                            for c in 0..dh {
+                                ctx[c] += p * vrow[c];
+                            }
+                        }
+                    }
+                });
+            }
+        }
+    }
+}
+
+/// Subtract the zero-point corrections from a raw `A_q x B_q` product:
+/// `acc -= 128*rowsum(a) + za*colsum(b) - k*za*128` (see `igemm_corrected`).
+#[allow(clippy::too_many_arguments)]
+fn apply_zero_corrections(
+    rows: usize,
+    k: usize,
+    n: usize,
+    a_q: &[i8],
+    a_zero: i32,
+    colsum: &[i32],
+    acc: &mut [i32],
+) {
+    let kz = k as i32 * a_zero * UINT8_ZERO_POINT;
+    for i in 0..rows {
+        let mut rowsum = 0i32;
+        for p in 0..k {
+            rowsum += a_q[i * k + p] as i32;
+        }
+        let corr_row = UINT8_ZERO_POINT * rowsum;
+        let row = &mut acc[i * n..(i + 1) * n];
+        if a_zero == 0 {
+            for x in row.iter_mut() {
+                *x -= corr_row;
+            }
+        } else {
+            for (j, x) in row.iter_mut().enumerate() {
+                *x = *x - corr_row - a_zero * colsum[j] + kz;
+            }
+        }
+    }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}

@@ -16,9 +16,14 @@
 //! Modules:
 //! * [`config`]   — model hyperparameters (mirrors python ModelConfig);
 //! * [`weights`]  — `weights.bin` + `manifest.json` loader;
-//! * [`profiler`] — per-op wall-time accounting;
+//! * [`plan`]     — the compiled quantization plan: interned `SiteId`s,
+//!   prequantized/prepacked weights, typed per-layer structs (§5.5's
+//!   transform-once, validated against the graph IR census);
+//! * [`layers`]   — the typed layer stack (head-batched attention,
+//!   FFN, LayerNorm) executing over a compiled plan;
+//! * [`profiler`] — per-op and per-site wall-time accounting;
 //! * [`kvcache`]  — FP32/INT8 KV caches with beam reordering;
-//! * [`engine`]   — encoder + greedy decoder;
+//! * [`engine`]   — decode orchestration + per-stream state;
 //! * [`beam`]     — beam-search decoder;
 //! * [`shapes`]   — the model's GEMM shapes (Fig 3b's benchmark set).
 
@@ -26,6 +31,8 @@ pub mod beam;
 pub mod config;
 pub mod engine;
 pub mod kvcache;
+pub mod layers;
+pub mod plan;
 pub mod profiler;
 pub mod shapes;
 pub mod testutil;
@@ -33,5 +40,6 @@ pub mod weights;
 
 pub use config::ModelConfig;
 pub use engine::{Engine, Precision};
+pub use plan::{CompiledPlan, SiteId, SiteSet};
 pub use profiler::Profiler;
 pub use weights::Weights;

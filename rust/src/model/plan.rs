@@ -1,0 +1,521 @@
+//! The compiled quantization plan — §5.5's "transform the graph once,
+//! ahead of time" applied to the engine's dispatch structure.
+//!
+//! The paper's production pipeline never quantizes inside the op
+//! dispatcher: the FP32 TensorFlow graph is rewritten offline (weights
+//! fold into u8 consts, INT8 dispatch is pinned per MatMul site, dead
+//! range-ops are elided) and the serving graph just executes.  The seed
+//! engine did the opposite — every `dense`/`ln` call in the per-token
+//! decode loop built a `format!("{prefix}.q")` string and walked
+//! `BTreeMap`s for the plan entry, the prequantized weight, the raw
+//! weight tensor and the LayerNorm parameters.  Those per-op lookups
+//! are exactly the class of overhead §4.1 blames for eroding INT8
+//! wins.
+//!
+//! [`CompiledPlan`] moves all of that work to engine construction:
+//!
+//! * every MatMul site is interned into a dense [`SiteId`] — the index
+//!   into the [`SiteSet`], which is the paper's 97-MatMul census in
+//!   graph order ([`ModelConfig::matmul_site_names`]);
+//! * per site, the quant params, the prequantized + VNNI-prepacked
+//!   weight, its column sums (zero-point correction) and its dims are
+//!   resolved into the index-addressed [`SitePlan`] array;
+//! * per layer, typed [`EncLayerPlan`] / [`DecLayerPlan`] structs carry
+//!   the site ids and the LayerNorm/bias constants, so the hot path
+//!   ([`crate::model::layers`]) performs no string formatting and no
+//!   map lookups at all;
+//! * the census is cross-validated against the MatMul nodes of
+//!   [`crate::graph::ir::transformer_graph`] at build time
+//!   ([`SiteSet::cross_check_graph`]), making the graph IR the single
+//!   source of truth for site names — the two universes can no longer
+//!   drift.
+//!
+//! A plan is built once per (model, calibration mode) and shared
+//! read-only across worker streams behind an `Arc` (each engine owns
+//! only scratch + profiler state), mirroring §5.6's multi-stream
+//! serving over one immutable model.
+
+use std::collections::BTreeMap;
+
+use crate::gemm::{self, PackedB};
+use crate::graph::ir::{transformer_graph, GraphConfig};
+use crate::model::config::ModelConfig;
+use crate::model::weights::Weights;
+use crate::quant::calibrate::SiteQuant;
+
+/// Dense interned id of one MatMul site (index into the census).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SiteId(pub u16);
+
+impl SiteId {
+    /// The array index this id addresses.
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// The interned MatMul-site universe of one model configuration, in
+/// graph order (the paper's 97-MatMul census for Transformer-base).
+#[derive(Debug, Clone)]
+pub struct SiteSet {
+    names: Vec<String>,
+}
+
+impl SiteSet {
+    pub fn new(cfg: &ModelConfig) -> SiteSet {
+        SiteSet {
+            names: cfg.matmul_site_names(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Site name for an id (debug / reporting only — never on hot paths).
+    pub fn name(&self, id: SiteId) -> &str {
+        &self.names[id.idx()]
+    }
+
+    /// Intern a site name (build time only: linear scan).
+    pub fn id(&self, name: &str) -> Option<SiteId> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| SiteId(i as u16))
+    }
+
+    /// All `(id, name)` pairs in census order.
+    pub fn iter(&self) -> impl Iterator<Item = (SiteId, &str)> + '_ {
+        self.names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (SiteId(i as u16), n.as_str()))
+    }
+
+    /// Cross-validate this census against the MatMul nodes of the graph
+    /// IR built for the same layer counts.  The graph is the source of
+    /// truth for site names; an engine plan that disagrees with it is a
+    /// build error, not a silent runtime mismatch.
+    pub fn cross_check_graph(&self, cfg: &ModelConfig) -> anyhow::Result<()> {
+        let g = transformer_graph(GraphConfig {
+            n_enc_layers: cfg.n_enc_layers,
+            n_dec_layers: cfg.n_dec_layers,
+            ..Default::default()
+        });
+        let graph_names = g.matmul_names();
+        anyhow::ensure!(
+            graph_names == self.names,
+            "MatMul census drift: graph IR has {} sites, ModelConfig has {} \
+             (first difference at {:?})",
+            graph_names.len(),
+            self.names.len(),
+            graph_names
+                .iter()
+                .zip(&self.names)
+                .position(|(a, b)| a != b)
+        );
+        Ok(())
+    }
+}
+
+/// A prequantized weight operand (u8, zero point 128), pre-packed for
+/// the VNNI kernel when available — one pack per weight, at build time
+/// (the §5.5 "weights become consts" idea applied to layout too).
+pub struct QWeight {
+    pub data: Vec<u8>,
+    pub packed: Option<PackedB>,
+    pub scale: f32,
+    /// column sums over k (zero-point correction when `a_zero != 0`)
+    pub colsum: Vec<i32>,
+}
+
+/// Resolved weight storage for a weight-MatMul site: exactly one of
+/// the FP32 tensor (unquantized sites) or the u8 const (quantized
+/// sites) is kept — the other representation is never touched at
+/// inference time.
+pub enum WeightStore {
+    F32(Vec<f32>),
+    Quant(QWeight),
+}
+
+/// The weight operand of a weight-MatMul site (`None` on the dynamic
+/// qk/pv sites, whose B operand is an activation).
+pub struct WeightPlan {
+    pub k: usize,
+    pub n: usize,
+    pub store: WeightStore,
+}
+
+/// Everything the engine needs to dispatch one MatMul site, resolved
+/// at build time and addressed by [`SiteId`].
+pub struct SitePlan {
+    /// `Some` = INT8 dispatch with these params; `None` = FP32.
+    pub quant: Option<SiteQuant>,
+    pub weight: Option<WeightPlan>,
+}
+
+/// LayerNorm constants for one `ln` site.
+#[derive(Debug, Clone)]
+pub struct LnPlan {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+}
+
+/// The six MatMul sites of one attention block (q/k/v/o projections
+/// plus the dynamic qk/pv products).  `Copy` so orchestration code can
+/// lift it out of the plan without holding a borrow.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnPlan {
+    pub q: SiteId,
+    pub k: SiteId,
+    pub v: SiteId,
+    pub o: SiteId,
+    pub qk: SiteId,
+    pub pv: SiteId,
+}
+
+/// The two FFN MatMul sites plus their bias constants.
+#[derive(Debug, Clone)]
+pub struct FfnPlan {
+    pub h: SiteId,
+    pub y: SiteId,
+    pub b1: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+/// One encoder layer, fully resolved.
+#[derive(Debug, Clone)]
+pub struct EncLayerPlan {
+    pub attn: AttnPlan,
+    pub ln1: LnPlan,
+    pub ffn: FfnPlan,
+    pub ln2: LnPlan,
+}
+
+/// One decoder layer, fully resolved.
+#[derive(Debug, Clone)]
+pub struct DecLayerPlan {
+    pub self_attn: AttnPlan,
+    pub ln1: LnPlan,
+    pub cross: AttnPlan,
+    pub ln2: LnPlan,
+    pub ffn: FfnPlan,
+    pub ln3: LnPlan,
+}
+
+/// The compiled, index-addressed execution plan (see module docs).
+pub struct CompiledPlan {
+    /// Per-site dispatch info, indexed by [`SiteId`].
+    sites: Vec<SitePlan>,
+    site_set: SiteSet,
+    pub enc: Vec<EncLayerPlan>,
+    pub dec: Vec<DecLayerPlan>,
+    /// The tied logits projection (weight = `embed.T`).
+    pub logits: SiteId,
+    /// Embedding rows pre-scaled by `sqrt(d_model)` (decode hot path).
+    pub embed_scaled: Vec<f32>,
+    /// Sinusoidal positional encoding, `max_len x d_model`.
+    pub pe: Vec<f32>,
+    /// Whether the decoder self-attention KV caches store u8.
+    pub int8_cache: bool,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub vocab: usize,
+    pub max_src_len: usize,
+    pub max_tgt_len: usize,
+}
+
+impl CompiledPlan {
+    /// Compile a `site name -> Option<SiteQuant>` plan (missing key =
+    /// FP32) against a config + weights.  Quantizes and packs every
+    /// quantized weight once, resolves LayerNorm/bias constants into
+    /// typed layer structs, and cross-checks the site census against
+    /// the graph IR.
+    pub fn build(
+        cfg: &ModelConfig,
+        weights: &Weights,
+        plan: &BTreeMap<String, Option<SiteQuant>>,
+    ) -> anyhow::Result<CompiledPlan> {
+        let site_set = SiteSet::new(cfg);
+        site_set.cross_check_graph(cfg)?;
+        anyhow::ensure!(
+            site_set.len() <= u16::MAX as usize,
+            "site census too large for SiteId(u16)"
+        );
+        let d = cfg.d_model;
+        let v = cfg.vocab_size;
+        let embed = weights.get("embed")?;
+        anyhow::ensure!(
+            embed.shape() == [v, d],
+            "embed shape {:?} != [{v}, {d}]",
+            embed.shape()
+        );
+        // embed.T for the tied logits projection
+        let mut embed_t = vec![0.0f32; d * v];
+        for r in 0..v {
+            for c in 0..d {
+                embed_t[c * v + r] = embed.data()[r * d + c];
+            }
+        }
+
+        // per-site resolution: quant decision + weight operand
+        let mut sites = Vec::with_capacity(site_set.len());
+        for (_, name) in site_set.iter() {
+            let quant = plan.get(name).cloned().flatten();
+            let weight = match cfg.weight_for_site(name) {
+                None => None,
+                Some(wname) => {
+                    let (wdata, kk, nn): (&[f32], usize, usize) = if wname == "embed.T" {
+                        (&embed_t, d, v)
+                    } else {
+                        let t = weights.get(&wname)?;
+                        (t.data(), t.shape()[0], t.shape()[1])
+                    };
+                    let store = match &quant {
+                        Some(q) => WeightStore::Quant(quantize_weight(wdata, kk, nn, q.b_scale)),
+                        None => WeightStore::F32(wdata.to_vec()),
+                    };
+                    Some(WeightPlan {
+                        k: kk,
+                        n: nn,
+                        store,
+                    })
+                }
+            };
+            sites.push(SitePlan { quant, weight });
+        }
+
+        // typed layer stacks
+        let sid = |name: String| -> anyhow::Result<SiteId> {
+            site_set
+                .id(&name)
+                .ok_or_else(|| anyhow::anyhow!("unknown MatMul site {name}"))
+        };
+        let ln = |p: &str| -> anyhow::Result<LnPlan> {
+            Ok(LnPlan {
+                gamma: weights.get(&format!("{p}.gamma"))?.data().to_vec(),
+                beta: weights.get(&format!("{p}.beta"))?.data().to_vec(),
+            })
+        };
+        let attn = |p: &str| -> anyhow::Result<AttnPlan> {
+            Ok(AttnPlan {
+                q: sid(format!("{p}.q"))?,
+                k: sid(format!("{p}.k"))?,
+                v: sid(format!("{p}.v"))?,
+                o: sid(format!("{p}.o"))?,
+                qk: sid(format!("{p}.qk"))?,
+                pv: sid(format!("{p}.pv"))?,
+            })
+        };
+        let ffn = |p: &str| -> anyhow::Result<FfnPlan> {
+            Ok(FfnPlan {
+                h: sid(format!("{p}.ffn.h"))?,
+                y: sid(format!("{p}.ffn.y"))?,
+                b1: weights.get(&format!("{p}.ffn.b1"))?.data().to_vec(),
+                b2: weights.get(&format!("{p}.ffn.b2"))?.data().to_vec(),
+            })
+        };
+        let mut enc = Vec::with_capacity(cfg.n_enc_layers);
+        for i in 0..cfg.n_enc_layers {
+            enc.push(EncLayerPlan {
+                attn: attn(&format!("enc.{i}.attn"))?,
+                ln1: ln(&format!("enc.{i}.ln1"))?,
+                ffn: ffn(&format!("enc.{i}"))?,
+                ln2: ln(&format!("enc.{i}.ln2"))?,
+            });
+        }
+        let mut dec = Vec::with_capacity(cfg.n_dec_layers);
+        for i in 0..cfg.n_dec_layers {
+            dec.push(DecLayerPlan {
+                self_attn: attn(&format!("dec.{i}.self"))?,
+                ln1: ln(&format!("dec.{i}.ln1"))?,
+                cross: attn(&format!("dec.{i}.cross"))?,
+                ln2: ln(&format!("dec.{i}.ln2"))?,
+                ffn: ffn(&format!("dec.{i}"))?,
+                ln3: ln(&format!("dec.{i}.ln3"))?,
+            });
+        }
+        let logits = sid("logits".to_string())?;
+
+        let int8_cache = dec
+            .iter()
+            .all(|l| sites[l.self_attn.qk.idx()].quant.is_some());
+        let scale = (d as f32).sqrt();
+        let embed_scaled: Vec<f32> = embed.data().iter().map(|&x| x * scale).collect();
+        let max_len = cfg.max_src_len.max(cfg.max_tgt_len);
+        let pe = positional_encoding(max_len, d);
+
+        Ok(CompiledPlan {
+            sites,
+            site_set,
+            enc,
+            dec,
+            logits,
+            embed_scaled,
+            pe,
+            int8_cache,
+            d_model: d,
+            n_heads: cfg.n_heads,
+            d_head: cfg.d_head(),
+            vocab: v,
+            max_src_len: cfg.max_src_len,
+            max_tgt_len: cfg.max_tgt_len,
+        })
+    }
+
+    /// Index-addressed site dispatch info (the hot-path lookup).
+    #[inline]
+    pub fn site(&self, id: SiteId) -> &SitePlan {
+        &self.sites[id.idx()]
+    }
+
+    pub fn site_count(&self) -> usize {
+        self.sites.len()
+    }
+
+    /// Count of INT8 MatMul sites (paper: 85 of 97 for Transformer-base).
+    pub fn quantized_site_count(&self) -> usize {
+        self.sites.iter().filter(|s| s.quant.is_some()).count()
+    }
+
+    pub fn site_set(&self) -> &SiteSet {
+        &self.site_set
+    }
+
+    /// Site name for reporting (never used on hot paths).
+    pub fn site_name(&self, id: SiteId) -> &str {
+        self.site_set.name(id)
+    }
+}
+
+/// Quantize + pack one weight tensor at build time (§5.5: weights
+/// become u8 consts; the colsum is the zero-point correction operand).
+fn quantize_weight(wdata: &[f32], k: usize, n: usize, b_scale: f32) -> QWeight {
+    let mut data = vec![0u8; wdata.len()];
+    gemm::quantize_u8(wdata, b_scale, &mut data);
+    let packed = gemm::use_vnni().then(|| PackedB::pack(&data, k, n));
+    let mut colsum = vec![0i32; n];
+    for p in 0..k {
+        for j in 0..n {
+            colsum[j] += data[p * n + j] as i32;
+        }
+    }
+    QWeight {
+        data,
+        packed,
+        scale: b_scale,
+        colsum,
+    }
+}
+
+/// Sinusoidal positions (identical to python `model.positional_encoding`).
+pub fn positional_encoding(max_len: usize, d_model: usize) -> Vec<f32> {
+    let mut pe = vec![0.0f32; max_len * d_model];
+    for pos in 0..max_len {
+        for i in 0..d_model / 2 {
+            let angle = pos as f64 / 10000f64.powf(2.0 * i as f64 / d_model as f64);
+            pe[pos * d_model + 2 * i] = angle.sin() as f32;
+            pe[pos * d_model + 2 * i + 1] = angle.cos() as f32;
+        }
+    }
+    pe
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::{loose_plan, random_weights, tiny_cfg};
+
+    #[test]
+    fn site_ids_are_dense_and_roundtrip() {
+        let cfg = ModelConfig::default();
+        let set = SiteSet::new(&cfg);
+        assert_eq!(set.len(), cfg.matmul_site_names().len());
+        for (id, name) in set.iter() {
+            assert_eq!(set.id(name), Some(id));
+            assert_eq!(set.name(id), name);
+        }
+        // logits is the last site in graph order
+        assert_eq!(set.id("logits"), Some(SiteId((set.len() - 1) as u16)));
+    }
+
+    #[test]
+    fn graph_cross_check_passes_for_varied_layer_counts() {
+        for (e, d) in [(1, 1), (2, 2), (3, 5)] {
+            let cfg = ModelConfig {
+                n_enc_layers: e,
+                n_dec_layers: d,
+                ..Default::default()
+            };
+            SiteSet::new(&cfg).cross_check_graph(&cfg).unwrap();
+        }
+    }
+
+    #[test]
+    fn build_resolves_quantized_weights_and_layers() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 7);
+        let plan = CompiledPlan::build(&cfg, &w, &loose_plan(&cfg)).unwrap();
+        assert_eq!(plan.site_count(), cfg.matmul_site_names().len());
+        assert_eq!(plan.quantized_site_count(), plan.site_count());
+        assert!(plan.int8_cache);
+        assert_eq!(plan.enc.len(), cfg.n_enc_layers);
+        assert_eq!(plan.dec.len(), cfg.n_dec_layers);
+        for (id, name) in plan.site_set().iter() {
+            let sp = plan.site(id);
+            assert!(sp.quant.is_some(), "{name} should be quantized");
+            match (cfg.weight_for_site(name), &sp.weight) {
+                (Some(_), Some(wp)) => {
+                    assert!(
+                        matches!(wp.store, WeightStore::Quant(_)),
+                        "{name} should hold a u8 const"
+                    );
+                    let q = sp.quant.as_ref().unwrap();
+                    if let WeightStore::Quant(qw) = &wp.store {
+                        assert_eq!(qw.data.len(), wp.k * wp.n);
+                        assert_eq!(qw.colsum.len(), wp.n);
+                        assert_eq!(qw.scale, q.b_scale);
+                    }
+                }
+                (None, None) => {} // dynamic qk/pv site
+                _ => panic!("{name}: weight resolution mismatch"),
+            }
+        }
+        // the logits weight is the transposed embedding
+        let lw = plan.site(plan.logits).weight.as_ref().unwrap();
+        assert_eq!((lw.k, lw.n), (cfg.d_model, cfg.vocab_size));
+    }
+
+    #[test]
+    fn fp32_build_keeps_f32_weights() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 8);
+        let plan = CompiledPlan::build(&cfg, &w, &BTreeMap::new()).unwrap();
+        assert_eq!(plan.quantized_site_count(), 0);
+        assert!(!plan.int8_cache);
+        for (id, name) in plan.site_set().iter() {
+            let sp = plan.site(id);
+            assert!(sp.quant.is_none());
+            if cfg.weight_for_site(name).is_some() {
+                let wp = sp.weight.as_ref().unwrap();
+                assert!(matches!(wp.store, WeightStore::F32(_)), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn positional_encoding_matches_formula() {
+        let pe = positional_encoding(4, 6);
+        assert_eq!(pe[0], 0.0); // sin(0)
+        assert_eq!(pe[1], 1.0); // cos(0)
+        let angle: f64 = 2.0 / 10000f64.powf(2.0 / 6.0);
+        assert!((pe[2 * 6 + 2] - angle.sin() as f32).abs() < 1e-6);
+    }
+}

@@ -8,6 +8,8 @@
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
+use crate::model::plan::SiteId;
+
 /// Operation categories (the Fig 7 legend).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum OpKind {
@@ -54,11 +56,20 @@ impl OpKind {
 
 /// Accumulating per-op profiler. Disabled by default (zero overhead on
 /// the serving path); the Fig 7 bench enables it.
+///
+/// GEMM time is additionally attributed per MatMul site: the engine
+/// brackets each site's GEMM with [`Profiler::time_site`], indexing a
+/// dense vector by [`SiteId`] — the same interned ids the compiled
+/// plan dispatches on, so the breakdown maps 1:1 onto the paper's
+/// 97-MatMul census.
 #[derive(Debug, Default, Clone)]
 pub struct Profiler {
     pub enabled: bool,
     totals: BTreeMap<OpKind, Duration>,
     counts: BTreeMap<OpKind, u64>,
+    /// per-site GEMM wall time, indexed by `SiteId` (grown lazily)
+    site_totals: Vec<Duration>,
+    site_counts: Vec<u64>,
 }
 
 /// RAII timing scope.
@@ -88,6 +99,56 @@ impl Profiler {
         *self.totals.entry(kind).or_default() += dt;
         *self.counts.entry(kind).or_default() += 1;
         out
+    }
+
+    /// Time a closure under an op kind, additionally attributing the
+    /// wall time to a MatMul site (the per-site Fig 7 refinement).
+    #[inline]
+    pub fn time_site<T>(&mut self, kind: OpKind, site: SiteId, f: impl FnOnce() -> T) -> T {
+        if !self.enabled {
+            return f();
+        }
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed();
+        *self.totals.entry(kind).or_default() += dt;
+        *self.counts.entry(kind).or_default() += 1;
+        let i = site.idx();
+        if self.site_totals.len() <= i {
+            self.site_totals.resize(i + 1, Duration::ZERO);
+            self.site_counts.resize(i + 1, 0);
+        }
+        self.site_totals[i] += dt;
+        self.site_counts[i] += 1;
+        out
+    }
+
+    pub fn site_total(&self, site: SiteId) -> Duration {
+        self.site_totals
+            .get(site.idx())
+            .copied()
+            .unwrap_or_default()
+    }
+
+    pub fn site_count(&self, site: SiteId) -> u64 {
+        self.site_counts
+            .get(site.idx())
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// Per-site `(site, total, calls)` rows with any GEMM time
+    /// recorded, sorted by descending total.
+    pub fn site_breakdown(&self) -> Vec<(SiteId, Duration, u64)> {
+        let mut rows: Vec<(SiteId, Duration, u64)> = self
+            .site_counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (SiteId(i as u16), self.site_totals[i], c))
+            .collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1));
+        rows
     }
 
     /// Explicit begin/end (for non-closure-friendly call sites).
@@ -137,6 +198,8 @@ impl Profiler {
     pub fn reset(&mut self) {
         self.totals.clear();
         self.counts.clear();
+        self.site_totals.clear();
+        self.site_counts.clear();
     }
 
     /// Merge another profiler's totals into this one.
@@ -146,6 +209,16 @@ impl Profiler {
         }
         for (&k, &c) in &other.counts {
             *self.counts.entry(k).or_default() += c;
+        }
+        if self.site_totals.len() < other.site_totals.len() {
+            self.site_totals.resize(other.site_totals.len(), Duration::ZERO);
+            self.site_counts.resize(other.site_counts.len(), 0);
+        }
+        for (i, &d) in other.site_totals.iter().enumerate() {
+            self.site_totals[i] += d;
+        }
+        for (i, &c) in other.site_counts.iter().enumerate() {
+            self.site_counts[i] += c;
         }
     }
 }
@@ -213,5 +286,34 @@ mod tests {
         p.add(OpKind::Embed, Duration::from_millis(1));
         p.reset();
         assert_eq!(p.grand_total(), Duration::ZERO);
+    }
+
+    #[test]
+    fn per_site_attribution_accumulates_and_merges() {
+        let site = SiteId(3);
+        let mut p = Profiler::enabled();
+        p.time_site(OpKind::QuantizedMatMul, site, || {
+            std::thread::sleep(Duration::from_millis(1))
+        });
+        assert_eq!(p.site_count(site), 1);
+        assert!(p.site_total(site) >= Duration::from_millis(1));
+        // op bucket is fed too
+        assert_eq!(p.count(OpKind::QuantizedMatMul), 1);
+        // unrecorded sites read as zero
+        assert_eq!(p.site_count(SiteId(99)), 0);
+
+        let mut q = Profiler::enabled();
+        q.time_site(OpKind::QuantizedMatMul, site, || {});
+        q.merge(&p);
+        assert_eq!(q.site_count(site), 2);
+        let rows = q.site_breakdown();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].0, site);
+        assert_eq!(rows[0].2, 2);
+
+        // disabled profiler records nothing per-site
+        let mut d = Profiler::default();
+        d.time_site(OpKind::MatMul, site, || {});
+        assert!(d.site_breakdown().is_empty());
     }
 }

@@ -1,4 +1,4 @@
-//! Elementwise and normalization ops on [`TensorF`] slices.
+//! Elementwise and normalization ops on [`TensorF`](crate::tensor::TensorF) slices.
 //!
 //! These are the non-MatMul operations the paper keeps in FP32 (§3):
 //! Softmax (division), LayerNorm (mean/variance/rsqrt), plus ReLU and

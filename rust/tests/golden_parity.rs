@@ -1,0 +1,1089 @@
+//! Golden parity: the compiled-plan engine must be **bit-identical**
+//! to the pre-refactor engine.
+//!
+//! `reference` below is the seed engine (commit 83dee6a's
+//! `model::engine`) ported verbatim minus profiler plumbing: string
+//! site names, `BTreeMap` dispatch, per-(batch, head) attention GEMMs,
+//! per-head quantize calls.  The refactored engine interns sites,
+//! batches heads and quantizes activations once per layer — all
+//! elementwise-equivalent transformations, so encoder memories, logits
+//! and decoded token sequences must match the reference **exactly**
+//! (f32 bitwise, not approximately) across FP32, symmetric-INT8,
+//! affine-zero-point INT8 and mixed plans, for greedy and beam decode.
+//!
+//! This is the executable form of "pin outputs before the refactor":
+//! the reference computes what the seed engine computed, on any
+//! machine, for any synthetic model — stronger than a table of
+//! hardcoded token ids.
+
+use std::collections::BTreeMap;
+
+use quantnmt::model::beam::{translate_beam, BeamConfig};
+use quantnmt::model::testutil::{loose_plan, random_weights, tiny_cfg};
+use quantnmt::model::{Engine, ModelConfig};
+use quantnmt::quant::calibrate::SiteQuant;
+use quantnmt::quant::QuantParams;
+
+mod reference {
+    //! The seed engine, verbatim (minus profiler brackets).
+
+    use std::collections::BTreeMap;
+
+    use quantnmt::gemm::{self, QGemmScratch, UINT8_ZERO_POINT};
+    use quantnmt::model::config::ModelConfig;
+    use quantnmt::model::engine::DecodeState;
+    use quantnmt::model::kvcache::KvCache;
+    use quantnmt::model::plan::positional_encoding;
+    use quantnmt::model::weights::Weights;
+    use quantnmt::quant::calibrate::SiteQuant;
+    use quantnmt::specials::{BOS_ID, EOS_ID, PAD_ID};
+    use quantnmt::tensor::ops;
+
+    struct QWeight {
+        data: Vec<u8>,
+        packed: Option<gemm::PackedB>,
+        scale: f32,
+        colsum: Vec<i32>,
+    }
+
+    pub struct RefEngine {
+        pub cfg: ModelConfig,
+        weights: Weights,
+        plan: BTreeMap<String, Option<SiteQuant>>,
+        qweights: BTreeMap<String, QWeight>,
+        embed_t: Vec<f32>,
+        embed_scaled: Vec<f32>,
+        ln_cache: BTreeMap<String, (Vec<f32>, Vec<f32>)>,
+        bias_cache: BTreeMap<String, (Vec<f32>, Vec<f32>)>,
+        pe: Vec<f32>,
+        scratch: QGemmScratch,
+    }
+
+    impl RefEngine {
+        pub fn with_plan(
+            cfg: ModelConfig,
+            weights: Weights,
+            plan: BTreeMap<String, Option<SiteQuant>>,
+        ) -> RefEngine {
+            let d = cfg.d_model;
+            let v = cfg.vocab_size;
+            let embed = weights.get("embed").unwrap();
+            let mut embed_t = vec![0.0f32; d * v];
+            for r in 0..v {
+                for c in 0..d {
+                    embed_t[c * v + r] = embed.data()[r * d + c];
+                }
+            }
+            let max_len = cfg.max_src_len.max(cfg.max_tgt_len);
+            let pe = positional_encoding(max_len, d);
+
+            let mut qweights = BTreeMap::new();
+            for site in cfg.matmul_site_names() {
+                let Some(Some(q)) = plan.get(&site) else { continue };
+                let Some(wname) = cfg.weight_for_site(&site) else {
+                    continue;
+                };
+                let wdata: &[f32] = if wname == "embed.T" {
+                    &embed_t
+                } else {
+                    weights.get(&wname).unwrap().data()
+                };
+                let mut data = vec![0u8; wdata.len()];
+                gemm::quantize_u8(wdata, q.b_scale, &mut data);
+                let (kk, nn) = if wname == "embed.T" {
+                    (cfg.d_model, cfg.vocab_size)
+                } else {
+                    let t = weights.get(&wname).unwrap();
+                    (t.shape()[0], t.shape()[1])
+                };
+                let packed = gemm::use_vnni().then(|| gemm::PackedB::pack(&data, kk, nn));
+                let mut colsum = vec![0i32; nn];
+                for p in 0..kk {
+                    for j in 0..nn {
+                        colsum[j] += data[p * nn + j] as i32;
+                    }
+                }
+                qweights.insert(
+                    site.clone(),
+                    QWeight {
+                        data,
+                        packed,
+                        scale: q.b_scale,
+                        colsum,
+                    },
+                );
+            }
+            let scale = (d as f32).sqrt();
+            let embed_scaled: Vec<f32> = embed.data().iter().map(|&x| x * scale).collect();
+            let mut ln_cache = BTreeMap::new();
+            let mut bias_cache = BTreeMap::new();
+            let mut ln_prefixes: Vec<String> = Vec::new();
+            let mut ffn_prefixes: Vec<String> = Vec::new();
+            for i in 0..cfg.n_enc_layers {
+                ln_prefixes.push(format!("enc.{i}.ln1"));
+                ln_prefixes.push(format!("enc.{i}.ln2"));
+                ffn_prefixes.push(format!("enc.{i}"));
+            }
+            for i in 0..cfg.n_dec_layers {
+                for l in ["ln1", "ln2", "ln3"] {
+                    ln_prefixes.push(format!("dec.{i}.{l}"));
+                }
+                ffn_prefixes.push(format!("dec.{i}"));
+            }
+            for p in ln_prefixes {
+                ln_cache.insert(
+                    p.clone(),
+                    (
+                        weights.get(&format!("{p}.gamma")).unwrap().data().to_vec(),
+                        weights.get(&format!("{p}.beta")).unwrap().data().to_vec(),
+                    ),
+                );
+            }
+            for p in ffn_prefixes {
+                bias_cache.insert(
+                    p.clone(),
+                    (
+                        weights.get(&format!("{p}.ffn.b1")).unwrap().data().to_vec(),
+                        weights.get(&format!("{p}.ffn.b2")).unwrap().data().to_vec(),
+                    ),
+                );
+            }
+            RefEngine {
+                cfg,
+                weights,
+                plan,
+                qweights,
+                embed_t,
+                embed_scaled,
+                ln_cache,
+                bias_cache,
+                pe,
+                scratch: QGemmScratch::default(),
+            }
+        }
+
+        fn site(&self, name: &str) -> Option<&SiteQuant> {
+            self.plan.get(name).and_then(|o| o.as_ref())
+        }
+
+        fn dense(&mut self, site: &str, x: &[f32], rows: usize, out: &mut Vec<f32>) {
+            let wname = self.cfg.weight_for_site(site).expect("dense on dyn site");
+            let (wdata, k, n): (&[f32], usize, usize) = if wname == "embed.T" {
+                (&self.embed_t, self.cfg.d_model, self.cfg.vocab_size)
+            } else {
+                let t = self.weights.get(&wname).expect("weight exists");
+                (t.data(), t.shape()[0], t.shape()[1])
+            };
+            assert_eq!(x.len(), rows * k, "dense {site}: x len");
+            out.resize(rows * n, 0.0);
+
+            if let Some(q) = self.plan.get(site).and_then(|o| o.as_ref()).cloned() {
+                let qw = self.qweights.get(site).expect("prequantized weight");
+                debug_assert_eq!(qw.data.len(), k * n);
+                self.scratch.a_q.resize(rows * k, 0);
+                let (a_scale, a_zero) = (q.a.scale, q.a.zero);
+                gemm::quantize_s8(x, a_scale, a_zero, &mut self.scratch.a_q);
+                self.scratch.acc.resize(rows * n, 0);
+                if let Some(bp) = &qw.packed {
+                    gemm::igemm_prepacked(rows, k, &self.scratch.a_q, bp, &mut self.scratch.acc);
+                    apply_zero_corrections(
+                        rows,
+                        k,
+                        n,
+                        &self.scratch.a_q,
+                        a_zero,
+                        &qw.colsum,
+                        &mut self.scratch.acc,
+                    );
+                } else {
+                    gemm::igemm_corrected(
+                        rows,
+                        k,
+                        n,
+                        &self.scratch.a_q,
+                        a_zero,
+                        &qw.data,
+                        &mut self.scratch.acc,
+                    );
+                }
+                let s = q.a.scale * qw.scale;
+                for (o, &acc) in out.iter_mut().zip(self.scratch.acc.iter()) {
+                    *o = acc as f32 * s;
+                }
+            } else {
+                gemm::sgemm(rows, k, n, x, wdata, out);
+            }
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        fn dyn_matmul(
+            &mut self,
+            site: &str,
+            m: usize,
+            k: usize,
+            n: usize,
+            a: &[f32],
+            b: &[f32],
+            out: &mut Vec<f32>,
+        ) {
+            out.resize(m * n, 0.0);
+            if let Some(q) = self.site(site).cloned() {
+                let (a_scale, a_zero, b_scale) = (q.a.scale, q.a.zero, q.b_scale);
+                self.scratch.a_q.resize(m * k, 0);
+                self.scratch.b_q.resize(k * n, 0);
+                gemm::quantize_s8(a, a_scale, a_zero, &mut self.scratch.a_q);
+                gemm::quantize_u8(b, b_scale, &mut self.scratch.b_q);
+                self.scratch.acc.resize(m * n, 0);
+                gemm::igemm_corrected(
+                    m,
+                    k,
+                    n,
+                    &self.scratch.a_q,
+                    a_zero,
+                    &self.scratch.b_q,
+                    &mut self.scratch.acc,
+                );
+                let s = a_scale * b_scale;
+                for (o, &acc) in out.iter_mut().zip(self.scratch.acc.iter()) {
+                    *o = acc as f32 * s;
+                }
+            } else {
+                gemm::sgemm(m, k, n, a, b, out);
+            }
+        }
+
+        fn embed_tokens(&mut self, ids: &[u32], out: &mut Vec<f32>) {
+            let d = self.cfg.d_model;
+            out.resize(ids.len() * d, 0.0);
+            for (i, &id) in ids.iter().enumerate() {
+                let row = &self.embed_scaled[id as usize * d..(id as usize + 1) * d];
+                out[i * d..(i + 1) * d].copy_from_slice(row);
+            }
+        }
+
+        fn ln(&mut self, prefix: &str, x: &mut [f32]) {
+            let d = self.cfg.d_model;
+            let (gamma, beta) = self.ln_cache.get(prefix).expect("ln cache");
+            ops::layer_norm_rows(x, d, gamma, beta, 1e-6);
+        }
+
+        pub fn encode(&mut self, src: &[Vec<u32>]) -> (Vec<f32>, Vec<usize>, usize) {
+            let bsz = src.len();
+            let s = src.iter().map(Vec::len).max().unwrap_or(0);
+            let d = self.cfg.d_model;
+            let src_len: Vec<usize> = src
+                .iter()
+                .map(|row| row.iter().take_while(|&&t| t != PAD_ID).count())
+                .collect();
+
+            let flat_ids: Vec<u32> = src
+                .iter()
+                .flat_map(|row| {
+                    let mut r = row.clone();
+                    r.resize(s, PAD_ID);
+                    r
+                })
+                .collect();
+            let mut x = Vec::new();
+            self.embed_tokens(&flat_ids, &mut x);
+            for b in 0..bsz {
+                for t in 0..s {
+                    let row = &mut x[(b * s + t) * d..(b * s + t + 1) * d];
+                    for c in 0..d {
+                        row[c] += self.pe[t * d + c];
+                    }
+                }
+            }
+
+            let mut attn_out = Vec::new();
+            let mut ffn_out = Vec::new();
+            for layer in 0..self.cfg.n_enc_layers {
+                let p = format!("enc.{layer}");
+                self.full_attention(
+                    &format!("{p}.attn"),
+                    &x.clone(),
+                    &x,
+                    bsz,
+                    s,
+                    s,
+                    &src_len,
+                    false,
+                    &mut attn_out,
+                );
+                ops::add_assign(&mut x, &attn_out);
+                self.ln(&format!("{p}.ln1"), &mut x);
+                self.ffn(&p, &x.clone(), bsz * s, &mut ffn_out);
+                ops::add_assign(&mut x, &ffn_out);
+                self.ln(&format!("{p}.ln2"), &mut x);
+            }
+            (x, src_len, s)
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        fn full_attention(
+            &mut self,
+            prefix: &str,
+            q_in: &[f32],
+            kv_in: &[f32],
+            bsz: usize,
+            tq: usize,
+            tk: usize,
+            kv_len: &[usize],
+            causal: bool,
+            out: &mut Vec<f32>,
+        ) {
+            let d = self.cfg.d_model;
+            let h = self.cfg.n_heads;
+            let dh = self.cfg.d_head();
+            let mut q = Vec::new();
+            let mut k = Vec::new();
+            let mut v = Vec::new();
+            self.dense(&format!("{prefix}.q"), q_in, bsz * tq, &mut q);
+            self.dense(&format!("{prefix}.k"), kv_in, bsz * tk, &mut k);
+            self.dense(&format!("{prefix}.v"), kv_in, bsz * tk, &mut v);
+
+            let mut ctx = vec![0.0f32; bsz * tq * d];
+            let mut qh = vec![0.0f32; tq * dh];
+            let mut kht = vec![0.0f32; dh * tk];
+            let mut vh = vec![0.0f32; tk * dh];
+            let mut scores = Vec::new();
+            let mut probs_ctx = Vec::new();
+            let inv_sqrt = 1.0 / (dh as f32).sqrt();
+
+            for b in 0..bsz {
+                let klen = kv_len[b].min(tk);
+                for head in 0..h {
+                    for t in 0..tq {
+                        let row = &q[(b * tq + t) * d + head * dh..][..dh];
+                        qh[t * dh..(t + 1) * dh].copy_from_slice(row);
+                    }
+                    for t in 0..tk {
+                        let row = &k[(b * tk + t) * d + head * dh..][..dh];
+                        for c in 0..dh {
+                            kht[c * tk + t] = row[c];
+                        }
+                        vh[t * dh..(t + 1) * dh]
+                            .copy_from_slice(&v[(b * tk + t) * d + head * dh..][..dh]);
+                    }
+                    self.dyn_matmul(&format!("{prefix}.qk"), tq, dh, tk, &qh, &kht, &mut scores);
+                    for (i, row) in scores.chunks_mut(tk).enumerate() {
+                        for (j, x) in row.iter_mut().enumerate() {
+                            *x *= inv_sqrt;
+                            if j >= klen || (causal && j > i) {
+                                *x = -1e9;
+                            }
+                        }
+                    }
+                    ops::softmax_rows(&mut scores, tk);
+                    self.dyn_matmul(
+                        &format!("{prefix}.pv"),
+                        tq,
+                        tk,
+                        dh,
+                        &scores,
+                        &vh,
+                        &mut probs_ctx,
+                    );
+                    for t in 0..tq {
+                        ctx[(b * tq + t) * d + head * dh..][..dh]
+                            .copy_from_slice(&probs_ctx[t * dh..(t + 1) * dh]);
+                    }
+                }
+            }
+            self.dense(&format!("{prefix}.o"), &ctx, bsz * tq, out);
+        }
+
+        fn ffn(&mut self, prefix: &str, x: &[f32], rows: usize, out: &mut Vec<f32>) {
+            let mut hbuf = Vec::new();
+            self.dense(&format!("{prefix}.ffn.h"), x, rows, &mut hbuf);
+            {
+                let (b1, _) = self.bias_cache.get(prefix).expect("bias cache");
+                ops::add_bias(&mut hbuf, b1);
+                ops::relu(&mut hbuf);
+            }
+            self.dense(&format!("{prefix}.ffn.y"), &hbuf, rows, out);
+            let (_, b2) = self.bias_cache.get(prefix).expect("bias cache");
+            ops::add_bias(out, b2);
+        }
+
+        pub fn init_decode(
+            &mut self,
+            memory: &[f32],
+            src_len: &[usize],
+            s: usize,
+            t_max: usize,
+        ) -> DecodeState {
+            let slots = src_len.len();
+            let d = self.cfg.d_model;
+            let h = self.cfg.n_heads;
+            let dh = self.cfg.d_head();
+            assert_eq!(memory.len(), slots * s * d);
+            let self_slot = h * t_max * dh;
+            let cross_slot = h * s * dh;
+
+            let mut st = DecodeState {
+                self_k: Vec::new(),
+                self_v: Vec::new(),
+                cross_k: Vec::new(),
+                cross_v: Vec::new(),
+                src_len: src_len.to_vec(),
+                t_max,
+                src_max: s,
+            };
+            let mut kbuf = Vec::new();
+            let mut vbuf = Vec::new();
+            for layer in 0..self.cfg.n_dec_layers {
+                let qk_site = format!("dec.{layer}.self.qk");
+                let pv_site = format!("dec.{layer}.self.pv");
+                let cqk_site = format!("dec.{layer}.cross.qk");
+                let cpv_site = format!("dec.{layer}.cross.pv");
+                let mk_cache = |site: &str, slot_len: usize, this: &RefEngine| -> KvCache {
+                    match this.site(site) {
+                        Some(q) => KvCache::new_u8(slots, slot_len, q.b_scale),
+                        None => KvCache::new_f32(slots, slot_len),
+                    }
+                };
+                st.self_k.push(mk_cache(&qk_site, self_slot, self));
+                st.self_v.push(mk_cache(&pv_site, self_slot, self));
+                let mut ck = mk_cache(&cqk_site, cross_slot, self);
+                let mut cv = mk_cache(&cpv_site, cross_slot, self);
+                self.dense(&format!("dec.{layer}.cross.k"), memory, slots * s, &mut kbuf);
+                self.dense(&format!("dec.{layer}.cross.v"), memory, slots * s, &mut vbuf);
+                for slot in 0..slots {
+                    for head in 0..h {
+                        for t in 0..s {
+                            let kr = &kbuf[(slot * s + t) * d + head * dh..][..dh];
+                            let vr = &vbuf[(slot * s + t) * d + head * dh..][..dh];
+                            ck.write(slot, (head * s + t) * dh, kr);
+                            cv.write(slot, (head * s + t) * dh, vr);
+                        }
+                    }
+                }
+                st.cross_k.push(ck);
+                st.cross_v.push(cv);
+            }
+            st
+        }
+
+        pub fn decode_step(
+            &mut self,
+            st: &mut DecodeState,
+            tokens: &[u32],
+            pos: usize,
+            logits: &mut Vec<f32>,
+        ) {
+            let slots = tokens.len();
+            let d = self.cfg.d_model;
+            let h = self.cfg.n_heads;
+            let dh = self.cfg.d_head();
+            let s = st.src_max;
+
+            let mut x = Vec::new();
+            self.embed_tokens(tokens, &mut x);
+            for slot in 0..slots {
+                for c in 0..d {
+                    x[slot * d + c] += self.pe[pos * d + c];
+                }
+            }
+
+            let mut q = Vec::new();
+            let mut k = Vec::new();
+            let mut v = Vec::new();
+            let mut attn = vec![0.0f32; slots * d];
+            let mut out = Vec::new();
+            let mut kv_row = vec![0.0f32; dh];
+
+            for layer in 0..self.cfg.n_dec_layers {
+                let p = format!("dec.{layer}");
+                self.dense(&format!("{p}.self.q"), &x, slots, &mut q);
+                self.dense(&format!("{p}.self.k"), &x, slots, &mut k);
+                self.dense(&format!("{p}.self.v"), &x, slots, &mut v);
+                for slot in 0..slots {
+                    for head in 0..h {
+                        let kr = &k[slot * d + head * dh..][..dh];
+                        let vr = &v[slot * d + head * dh..][..dh];
+                        st.self_k[layer].write(slot, (head * st.t_max + pos) * dh, kr);
+                        st.self_v[layer].write(slot, (head * st.t_max + pos) * dh, vr);
+                    }
+                }
+                let klen = pos + 1;
+                self.cached_attention(
+                    &p,
+                    "self",
+                    &q,
+                    &st.self_k[layer],
+                    &st.self_v[layer],
+                    slots,
+                    st.t_max,
+                    |_slot| klen,
+                    &mut attn,
+                    &mut kv_row,
+                );
+                self.dense(&format!("{p}.self.o"), &attn.clone(), slots, &mut out);
+                ops::add_assign(&mut x, &out);
+                self.ln(&format!("{p}.ln1"), &mut x);
+
+                self.dense(&format!("{p}.cross.q"), &x, slots, &mut q);
+                let src_len = st.src_len.clone();
+                self.cached_attention(
+                    &p,
+                    "cross",
+                    &q,
+                    &st.cross_k[layer],
+                    &st.cross_v[layer],
+                    slots,
+                    s,
+                    |slot| src_len[slot].min(s),
+                    &mut attn,
+                    &mut kv_row,
+                );
+                self.dense(&format!("{p}.cross.o"), &attn.clone(), slots, &mut out);
+                ops::add_assign(&mut x, &out);
+                self.ln(&format!("{p}.ln2"), &mut x);
+
+                self.ffn(&p, &x.clone(), slots, &mut out);
+                ops::add_assign(&mut x, &out);
+                self.ln(&format!("{p}.ln3"), &mut x);
+            }
+            self.dense("logits", &x, slots, logits);
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        fn cached_attention(
+            &mut self,
+            layer_prefix: &str,
+            block: &str,
+            q: &[f32],
+            kcache: &KvCache,
+            vcache: &KvCache,
+            slots: usize,
+            t_stride: usize,
+            klen_of: impl Fn(usize) -> usize,
+            out: &mut [f32],
+            kv_row: &mut Vec<f32>,
+        ) {
+            let d = self.cfg.d_model;
+            let h = self.cfg.n_heads;
+            let dh = self.cfg.d_head();
+            let inv_sqrt = 1.0 / (dh as f32).sqrt();
+            let qk_site = format!("{layer_prefix}.{block}.qk");
+            let pv_site = format!("{layer_prefix}.{block}.pv");
+            let qk_quant = self.site(&qk_site).cloned();
+            let pv_quant = self.site(&pv_site).cloned();
+            kv_row.resize(dh, 0.0);
+            let mut scores: Vec<f32> = Vec::new();
+            let mut q_q8: Vec<i8> = Vec::new();
+            let mut p_q8: Vec<i8> = Vec::new();
+
+            for slot in 0..slots {
+                let klen = klen_of(slot);
+                scores.resize(klen, 0.0);
+                for head in 0..h {
+                    let qrow = &q[slot * d + head * dh..][..dh];
+                    match (&qk_quant, kcache.is_quantized()) {
+                        (Some(sq), true) => {
+                            q_q8.resize(dh, 0);
+                            gemm::quantize_s8(qrow, sq.a.scale, sq.a.zero, &mut q_q8);
+                            let (kraw, kscale) =
+                                kcache.raw_u8(slot, head * t_stride * dh, klen * dh);
+                            let s = sq.a.scale * kscale;
+                            for (t, sc) in scores.iter_mut().enumerate() {
+                                let krow = &kraw[t * dh..(t + 1) * dh];
+                                let mut acc = 0i32;
+                                for c in 0..dh {
+                                    acc += (q_q8[c] as i32 - sq.a.zero)
+                                        * (krow[c] as i32 - UINT8_ZERO_POINT);
+                                }
+                                *sc = acc as f32 * s;
+                            }
+                        }
+                        _ => {
+                            if kcache.is_quantized() {
+                                for (t, sc) in scores.iter_mut().enumerate() {
+                                    kcache.read_into(
+                                        slot,
+                                        (head * t_stride + t) * dh,
+                                        dh,
+                                        kv_row,
+                                    );
+                                    *sc = dot(qrow, kv_row);
+                                }
+                            } else {
+                                let kraw =
+                                    kcache.raw_f32(slot, head * t_stride * dh, klen * dh);
+                                for (t, sc) in scores.iter_mut().enumerate() {
+                                    *sc = dot(qrow, &kraw[t * dh..(t + 1) * dh]);
+                                }
+                            }
+                        }
+                    }
+                    for sc in scores.iter_mut() {
+                        *sc *= inv_sqrt;
+                    }
+                    ops::softmax_rows(&mut scores, klen);
+                    let ctx = &mut out[slot * d + head * dh..][..dh];
+                    ctx.fill(0.0);
+                    match (&pv_quant, vcache.is_quantized()) {
+                        (Some(sq), true) => {
+                            p_q8.resize(klen, 0);
+                            gemm::quantize_s8(&scores, sq.a.scale, sq.a.zero, &mut p_q8);
+                            let (vraw, vscale) =
+                                vcache.raw_u8(slot, head * t_stride * dh, klen * dh);
+                            let s = sq.a.scale * vscale;
+                            let mut acc = vec![0i32; dh];
+                            for t in 0..klen {
+                                let pq = p_q8[t] as i32 - sq.a.zero;
+                                let vrow = &vraw[t * dh..(t + 1) * dh];
+                                for c in 0..dh {
+                                    acc[c] += pq * (vrow[c] as i32 - UINT8_ZERO_POINT);
+                                }
+                            }
+                            for c in 0..dh {
+                                ctx[c] = acc[c] as f32 * s;
+                            }
+                        }
+                        _ => {
+                            if vcache.is_quantized() {
+                                for (t, &p) in scores.iter().enumerate() {
+                                    vcache.read_into(
+                                        slot,
+                                        (head * t_stride + t) * dh,
+                                        dh,
+                                        kv_row,
+                                    );
+                                    for c in 0..dh {
+                                        ctx[c] += p * kv_row[c];
+                                    }
+                                }
+                            } else {
+                                let vraw =
+                                    vcache.raw_f32(slot, head * t_stride * dh, klen * dh);
+                                for (t, &p) in scores.iter().enumerate() {
+                                    let vrow = &vraw[t * dh..(t + 1) * dh];
+                                    for c in 0..dh {
+                                        ctx[c] += p * vrow[c];
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        pub fn translate_greedy(&mut self, src: &[Vec<u32>], t_max: usize) -> Vec<Vec<u32>> {
+            let bsz = src.len();
+            let t_max = t_max.min(self.cfg.max_tgt_len);
+            if bsz == 0 {
+                return Vec::new();
+            }
+            let (memory, src_len, s) = self.encode(src);
+            let mut st = self.init_decode(&memory, &src_len, s, t_max);
+            let mut tokens = vec![BOS_ID; bsz];
+            let mut finished = vec![false; bsz];
+            let mut out: Vec<Vec<u32>> = vec![Vec::new(); bsz];
+            let mut logits = Vec::new();
+            let v = self.cfg.vocab_size;
+            for pos in 0..t_max {
+                self.decode_step(&mut st, &tokens, pos, &mut logits);
+                let mut all_done = true;
+                for b in 0..bsz {
+                    if finished[b] {
+                        tokens[b] = PAD_ID;
+                        continue;
+                    }
+                    let next = ops::argmax(&logits[b * v..(b + 1) * v]) as u32;
+                    if next == EOS_ID {
+                        finished[b] = true;
+                        tokens[b] = PAD_ID;
+                    } else {
+                        out[b].push(next);
+                        tokens[b] = next;
+                        all_done = false;
+                    }
+                }
+                if all_done && finished.iter().all(|&f| f) {
+                    break;
+                }
+            }
+            out
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn apply_zero_corrections(
+        rows: usize,
+        k: usize,
+        n: usize,
+        a_q: &[i8],
+        a_zero: i32,
+        colsum: &[i32],
+        acc: &mut [i32],
+    ) {
+        let kz = k as i32 * a_zero * UINT8_ZERO_POINT;
+        for i in 0..rows {
+            let mut rowsum = 0i32;
+            for p in 0..k {
+                rowsum += a_q[i * k + p] as i32;
+            }
+            let corr_row = UINT8_ZERO_POINT * rowsum;
+            let row = &mut acc[i * n..(i + 1) * n];
+            if a_zero == 0 {
+                for x in row.iter_mut() {
+                    *x -= corr_row;
+                }
+            } else {
+                for (j, x) in row.iter_mut().enumerate() {
+                    *x = *x - corr_row - a_zero * colsum[j] + kz;
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+    }
+
+    // ---- the seed beam decoder, verbatim minus gather accounting ----
+
+    struct Hyp {
+        tokens: Vec<u32>,
+        score: f64,
+        finished: bool,
+    }
+
+    fn length_penalty(len: usize, alpha: f64) -> f64 {
+        ((5.0 + len as f64) / 6.0).powf(alpha)
+    }
+
+    pub fn translate_beam(
+        engine: &mut RefEngine,
+        src: &[Vec<u32>],
+        beam: usize,
+        max_len: usize,
+        alpha: f64,
+    ) -> Vec<Vec<u32>> {
+        let bsz = src.len();
+        if bsz == 0 {
+            return Vec::new();
+        }
+        let beam = beam.max(1);
+        let max_len = max_len.min(engine.cfg.max_tgt_len);
+        let (memory, src_len, s) = engine.encode(src);
+        let d = engine.cfg.d_model;
+
+        let slots = bsz * beam;
+        let mut mem_rep = vec![0.0f32; slots * s * d];
+        let mut len_rep = vec![0usize; slots];
+        for sent in 0..bsz {
+            for b in 0..beam {
+                let slot = sent * beam + b;
+                mem_rep[slot * s * d..(slot + 1) * s * d]
+                    .copy_from_slice(&memory[sent * s * d..(sent + 1) * s * d]);
+                len_rep[slot] = src_len[sent];
+            }
+        }
+        let mut st = engine.init_decode(&mem_rep, &len_rep, s, max_len);
+
+        let vocab = engine.cfg.vocab_size;
+        let mut hyps: Vec<Vec<Hyp>> = (0..bsz)
+            .map(|_| {
+                (0..beam)
+                    .map(|b| Hyp {
+                        tokens: Vec::new(),
+                        score: if b == 0 { 0.0 } else { f64::NEG_INFINITY },
+                        finished: false,
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut tokens = vec![BOS_ID; slots];
+        let mut logits = Vec::new();
+
+        for pos in 0..max_len {
+            engine.decode_step(&mut st, &tokens, pos, &mut logits);
+            let mut beam_src = vec![0usize; slots];
+            let mut next_tokens = vec![PAD_ID; slots];
+            let mut all_finished = true;
+
+            for sent in 0..bsz {
+                let mut cands: Vec<(f64, usize, u32, bool)> = Vec::new();
+                for b in 0..beam {
+                    let h = &hyps[sent][b];
+                    if h.score == f64::NEG_INFINITY {
+                        continue;
+                    }
+                    if h.finished {
+                        cands.push((h.score, b, PAD_ID, true));
+                        continue;
+                    }
+                    let row =
+                        &logits[(sent * beam + b) * vocab..(sent * beam + b + 1) * vocab];
+                    let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+                    let logsum = (row.iter().map(|&x| ((x - max) as f64).exp()).sum::<f64>())
+                        .ln()
+                        + max as f64;
+                    let mut idx: Vec<usize> = (0..vocab).collect();
+                    idx.sort_by(|&i, &j| row[j].partial_cmp(&row[i]).unwrap());
+                    for &t in idx.iter().take(beam + 1) {
+                        let lp = row[t] as f64 - logsum;
+                        cands.push((h.score + lp, b, t as u32, false));
+                    }
+                }
+                cands.sort_by(|a, b| {
+                    let la = length_penalty(hyps[sent][a.1].tokens.len() + 1, alpha);
+                    let lb = length_penalty(hyps[sent][b.1].tokens.len() + 1, alpha);
+                    (b.0 / lb).partial_cmp(&(a.0 / la)).unwrap()
+                });
+
+                let mut new_hyps: Vec<Hyp> = Vec::with_capacity(beam);
+                for &(score, b, tok, was_finished) in cands.iter() {
+                    if new_hyps.len() == beam {
+                        break;
+                    }
+                    let parent = &hyps[sent][b];
+                    let slot = sent * beam + new_hyps.len();
+                    if was_finished {
+                        new_hyps.push(Hyp {
+                            tokens: parent.tokens.clone(),
+                            score,
+                            finished: true,
+                        });
+                        beam_src[slot] = sent * beam + b;
+                        next_tokens[slot] = PAD_ID;
+                        continue;
+                    }
+                    let mut t = parent.tokens.clone();
+                    let finished = tok == EOS_ID;
+                    if !finished {
+                        t.push(tok);
+                    }
+                    beam_src[slot] = sent * beam + b;
+                    next_tokens[slot] = if finished { PAD_ID } else { tok };
+                    if !finished {
+                        all_finished = false;
+                    }
+                    new_hyps.push(Hyp {
+                        tokens: t,
+                        score,
+                        finished,
+                    });
+                }
+                while new_hyps.len() < beam {
+                    let slot = sent * beam + new_hyps.len();
+                    beam_src[slot] = sent * beam;
+                    next_tokens[slot] = PAD_ID;
+                    new_hyps.push(Hyp {
+                        tokens: Vec::new(),
+                        score: f64::NEG_INFINITY,
+                        finished: true,
+                    });
+                }
+                hyps[sent] = new_hyps;
+            }
+
+            let identity = beam_src.iter().enumerate().all(|(s, &src)| s == src);
+            if !identity {
+                for layer in 0..engine.cfg.n_dec_layers {
+                    for cache in [
+                        &mut st.self_k[layer],
+                        &mut st.self_v[layer],
+                        &mut st.cross_k[layer],
+                        &mut st.cross_v[layer],
+                    ] {
+                        cache.beam_gather(&beam_src);
+                    }
+                }
+            }
+            tokens = next_tokens;
+            if all_finished {
+                break;
+            }
+        }
+
+        hyps.into_iter()
+            .map(|sent_hyps| {
+                sent_hyps
+                    .into_iter()
+                    .filter(|h| h.score > f64::NEG_INFINITY)
+                    .max_by(|a, b| {
+                        let la = length_penalty(a.tokens.len().max(1), alpha);
+                        let lb = length_penalty(b.tokens.len().max(1), alpha);
+                        (a.score / la).partial_cmp(&(b.score / lb)).unwrap()
+                    })
+                    .map(|h| h.tokens)
+                    .unwrap_or_default()
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// plan variants: symmetric, affine (zero != 0), and mixed precision
+// ---------------------------------------------------------------------
+
+type Plan = BTreeMap<String, Option<SiteQuant>>;
+
+fn affine_plan(cfg: &ModelConfig) -> Plan {
+    cfg.matmul_site_names()
+        .into_iter()
+        .map(|site| {
+            (
+                site,
+                Some(SiteQuant {
+                    a: QuantParams::affine(-3.0, 5.0),
+                    b_scale: 1.0 / 127.0,
+                }),
+            )
+        })
+        .collect()
+}
+
+/// Quantize only the weight-MatMul sites; qk/pv stay FP32 (f32 caches).
+fn dense_only_plan(cfg: &ModelConfig) -> Plan {
+    let mut plan = loose_plan(cfg);
+    for (site, q) in plan.iter_mut() {
+        if cfg.weight_for_site(site).is_none() {
+            *q = None;
+        }
+    }
+    plan
+}
+
+/// Quantize qk but not pv: u8 K caches next to f32 V caches.
+fn qk_only_plan(cfg: &ModelConfig) -> Plan {
+    let mut plan = loose_plan(cfg);
+    for (site, q) in plan.iter_mut() {
+        if site.ends_with(".pv") {
+            *q = None;
+        }
+    }
+    plan
+}
+
+fn plan_variants(cfg: &ModelConfig) -> Vec<(&'static str, Plan)> {
+    vec![
+        ("fp32", Plan::new()),
+        ("loose-int8", loose_plan(cfg)),
+        ("affine-int8", affine_plan(cfg)),
+        ("dense-only", dense_only_plan(cfg)),
+        ("qk-only", qk_only_plan(cfg)),
+    ]
+}
+
+fn cfg2() -> ModelConfig {
+    ModelConfig {
+        vocab_size: 24,
+        d_model: 32,
+        n_heads: 4,
+        d_ff: 48,
+        n_enc_layers: 2,
+        n_dec_layers: 2,
+        max_src_len: 12,
+        max_tgt_len: 12,
+    }
+}
+
+fn sources(cfg: &ModelConfig) -> Vec<Vec<u32>> {
+    // in-vocab content ids (>= 3), EOS-terminated, ragged lengths
+    let v = cfg.vocab_size as u32;
+    vec![
+        vec![3, 4, 5, 6, 2],
+        vec![7 % v, 8 % v, 2, 0, 0],
+        vec![3, v - 1, 4, 2, 0],
+    ]
+}
+
+// ---------------------------------------------------------------------
+// parity assertions
+// ---------------------------------------------------------------------
+
+#[test]
+fn encoder_memory_is_bit_identical() {
+    for cfg in [tiny_cfg(), cfg2()] {
+        for seed in [11, 12] {
+            let w = random_weights(&cfg, seed);
+            let src = sources(&cfg);
+            for (name, plan) in plan_variants(&cfg) {
+                let mut r = reference::RefEngine::with_plan(cfg.clone(), w.clone(), plan.clone());
+                let mut e = Engine::with_plan(cfg.clone(), w.clone(), plan).unwrap();
+                let (mr, lr, sr) = r.encode(&src);
+                let (me, le, se) = e.encode(&src);
+                assert_eq!(lr, le, "{name} seed {seed}: src lengths");
+                assert_eq!(sr, se, "{name} seed {seed}: padded length");
+                assert_eq!(mr, me, "{name} seed {seed}: encoder memory drifted");
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_logits_are_bit_identical() {
+    for cfg in [tiny_cfg(), cfg2()] {
+        let w = random_weights(&cfg, 21);
+        let src = sources(&cfg);
+        for (name, plan) in plan_variants(&cfg) {
+            let mut r = reference::RefEngine::with_plan(cfg.clone(), w.clone(), plan.clone());
+            let mut e = Engine::with_plan(cfg.clone(), w.clone(), plan).unwrap();
+            let (mr, lr, sr) = r.encode(&src);
+            let (me, _, _) = e.encode(&src);
+            assert_eq!(mr, me, "{name}: memory");
+            let t_max = 6;
+            let mut str_ = r.init_decode(&mr, &lr, sr, t_max);
+            let mut ste = e.init_decode(&me, &lr, sr, t_max);
+            // fixed token stream: every slot advances through the vocab
+            let mut logits_r = Vec::new();
+            let mut logits_e = Vec::new();
+            for pos in 0..t_max {
+                let toks: Vec<u32> = (0..src.len())
+                    .map(|i| 3 + ((i + pos) % (cfg.vocab_size - 3)) as u32)
+                    .collect();
+                r.decode_step(&mut str_, &toks, pos, &mut logits_r);
+                e.decode_step(&mut ste, &toks, pos, &mut logits_e);
+                assert_eq!(logits_r, logits_e, "{name}: logits drifted at step {pos}");
+            }
+        }
+    }
+}
+
+#[test]
+fn greedy_translations_are_identical() {
+    for cfg in [tiny_cfg(), cfg2()] {
+        for seed in [31, 32] {
+            let w = random_weights(&cfg, seed);
+            let src = sources(&cfg);
+            for (name, plan) in plan_variants(&cfg) {
+                let mut r = reference::RefEngine::with_plan(cfg.clone(), w.clone(), plan.clone());
+                let mut e = Engine::with_plan(cfg.clone(), w.clone(), plan).unwrap();
+                assert_eq!(
+                    r.translate_greedy(&src, 10),
+                    e.translate_greedy(&src, 10),
+                    "{name} seed {seed}: greedy tokens drifted"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn beam_translations_are_identical() {
+    let cfg = cfg2();
+    let w = random_weights(&cfg, 41);
+    let src = sources(&cfg);
+    for (name, plan) in plan_variants(&cfg) {
+        let mut r = reference::RefEngine::with_plan(cfg.clone(), w.clone(), plan.clone());
+        let mut e = Engine::with_plan(cfg.clone(), w.clone(), plan).unwrap();
+        let want = reference::translate_beam(&mut r, &src, 4, 10, 0.6);
+        let got = translate_beam(
+            &mut e,
+            &src,
+            BeamConfig {
+                beam: 4,
+                max_len: 10,
+                alpha: 0.6,
+            },
+        );
+        assert_eq!(want, got.translations, "{name}: beam tokens drifted");
+    }
+}
