@@ -52,7 +52,9 @@ fn main() -> anyhow::Result<()> {
         };
         svc_scaled.aot_index = None;
         let cfg = ServiceConfig {
-            backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+            // derive from the *scaled* calibration so the recipe
+            // reflects the perturbed thresholds
+            backend: svc_scaled.int8_backend(CalibrationMode::Symmetric)?,
             parallel: false,
             ..Default::default()
         };

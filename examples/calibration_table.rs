@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
 
     for mode in CalibrationMode::all() {
         let cfg = ServiceConfig {
-            backend: Backend::EngineInt8(mode),
+            backend: svc.int8_backend(mode)?,
             parallel: false,
             ..Default::default()
         };

@@ -34,14 +34,17 @@ fn main() -> anyhow::Result<()> {
     let lex = Lexicon::build(&Default::default());
     let pairs: Vec<_> = ds.test[..6].to_vec();
 
+    // INT8 engine configs carry a recipe — derive the symmetric-mode
+    // default once from the loaded calibration table
+    let int8 = svc.int8_backend(CalibrationMode::Symmetric)?;
     for backend in [
         Backend::EngineF32,
-        Backend::EngineInt8(CalibrationMode::Symmetric),
+        int8.clone(),
         Backend::Runtime(RtPrecision::Fp32),
         Backend::Runtime(RtPrecision::Int8),
     ] {
         let cfg = ServiceConfig {
-            backend,
+            backend: backend.clone(),
             parallel: false,
             batch_size: 8,
             ..Default::default()
@@ -68,7 +71,7 @@ fn main() -> anyhow::Result<()> {
     let policy_pairs: Vec<_> = ds.test[..16].to_vec();
     for policy in PolicyKind::all() {
         let cfg = ServiceConfig {
-            backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+            backend: int8.clone(),
             parallel: false,
             batch_size: 8,
             policy,
@@ -86,7 +89,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("\nsample translations (engine-int8-symmetric):");
     let cfg = ServiceConfig {
-        backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+        backend: int8,
         parallel: false,
         batch_size: 8,
         ..Default::default()

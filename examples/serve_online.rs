@@ -46,7 +46,9 @@ fn main() -> anyhow::Result<()> {
     let base_rate = args.get_f64("rate", 100.0);
     let seed = args.get_usize("seed", 0x5EED) as u64;
     let mut cfg = ServerConfig {
-        backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+        // placeholder until a backend is resolved below: artifacts give
+        // the symmetric-recipe INT8 engine, the fallback stays FP32
+        backend: Backend::EngineF32,
         shards: args.get_usize("shards", 2),
         max_wait: Duration::from_secs_f64(args.get_f64("max-wait-ms", 20.0) / 1e3),
         token_budget: args.get_usize("token-budget", 512),
@@ -59,6 +61,7 @@ fn main() -> anyhow::Result<()> {
 
     match Service::open_default() {
         Ok(svc) => {
+            cfg.backend = svc.int8_backend(CalibrationMode::Symmetric)?;
             let ds = svc.dataset()?;
             let n = n.min(ds.test.len());
             println!(

@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     // INT8 + token sorting + parallel batching + shaped batches =
     // the paper's best config
     let best = ServiceConfig {
-        backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+        backend: svc.int8_backend(CalibrationMode::Symmetric)?,
         sort: SortOrder::Tokens,
         streams,
         parallel: true,

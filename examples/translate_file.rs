@@ -81,7 +81,7 @@ fn main() -> anyhow::Result<()> {
         "engine-fp32" => Backend::EngineF32,
         "pjrt-fp32" => Backend::Runtime(RtPrecision::Fp32),
         "pjrt-int8" => Backend::Runtime(RtPrecision::Int8),
-        _ => Backend::EngineInt8(CalibrationMode::Symmetric),
+        _ => svc.int8_backend(CalibrationMode::Symmetric)?,
     };
     let cfg = ServiceConfig {
         backend,

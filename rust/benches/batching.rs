@@ -14,7 +14,7 @@
 //! cargo bench --bench batching [-- --quick]
 //! ```
 
-use quantnmt::coordinator::{Backend, Service, ServiceConfig};
+use quantnmt::coordinator::{Service, ServiceConfig};
 use quantnmt::data::sorting::SortOrder;
 use quantnmt::pipeline::policy::PolicyKind;
 use quantnmt::quant::calibrate::CalibrationMode;
@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
     let ds = svc.dataset()?;
     let n = if quick { 256 } else { 1024.min(ds.test.len()) };
     let pairs = &ds.test[..n];
+    let int8 = svc.int8_backend(CalibrationMode::Symmetric)?;
 
     // --- policy x sort sweep (Fig 8a style: fill ratio + sent/s) ----
     println!("corpus: {n} sentences, batch cap 64, token budget 1024, INT8 engine, 2 streams\n");
@@ -38,7 +39,7 @@ fn main() -> anyhow::Result<()> {
         let mut cells = Vec::new();
         for sort in [SortOrder::Unsorted, SortOrder::Words, SortOrder::Tokens] {
             let cfg = ServiceConfig {
-                backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+                backend: int8.clone(),
                 sort,
                 policy,
                 batch_size: 64,
@@ -67,7 +68,7 @@ fn main() -> anyhow::Result<()> {
     let mut serial_rate = None;
     for (parallel, streams) in [(false, 1), (true, 2), (true, 4), (true, 8)] {
         let cfg = ServiceConfig {
-            backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+            backend: int8.clone(),
             policy: PolicyKind::BinPack,
             parallel,
             streams,

@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     println!("{:14} BLEU {:7.2}  (paper 27.68)", "fp32", base);
     for mode in CalibrationMode::all() {
         let cfg = ServiceConfig {
-            backend: Backend::EngineInt8(mode),
+            backend: svc.int8_backend(mode)?,
             parallel: false,
             ..Default::default()
         };

@@ -21,7 +21,7 @@
 use std::time::Instant;
 
 use quantnmt::model::profiler::{OpKind, Profiler};
-use quantnmt::model::testutil::{loose_plan, random_weights};
+use quantnmt::model::testutil::{loose_recipe, random_weights};
 use quantnmt::model::{Engine, ModelConfig};
 
 fn bench_cfg() -> ModelConfig {
@@ -108,14 +108,14 @@ fn main() -> anyhow::Result<()> {
         let (q, qm, mm) = step_counts(&mut fp32, slots, 8);
         println!("{:12} {:>6} {:>14.1} {:>10} {:>10} {:>8}", "fp32", slots, us, q, qm, mm);
 
-        let mut int8 = Engine::with_plan(cfg.clone(), w.clone(), loose_plan(&cfg))?;
+        let mut int8 = Engine::with_recipe(cfg.clone(), w.clone(), &loose_recipe(&cfg))?;
         let us = per_token_us(&mut int8, slots, steps, reps);
         let (q, qm, mm) = step_counts(&mut int8, slots, 8);
         println!("{:12} {:>6} {:>14.1} {:>10} {:>10} {:>8}", "int8", slots, us, q, qm, mm);
     }
 
     // per-site GEMM attribution over a short decode (SiteId-indexed)
-    let mut int8 = Engine::with_plan(cfg.clone(), w.clone(), loose_plan(&cfg))?;
+    let mut int8 = Engine::with_recipe(cfg.clone(), w.clone(), &loose_recipe(&cfg))?;
     int8.profiler = Profiler::enabled();
     let src = source_batch(&cfg, 8, 16);
     int8.translate_greedy(&src, steps.min(24));

@@ -14,7 +14,7 @@
 use std::time::Duration;
 
 use quantnmt::coordinator::server::{poisson_offsets, replay_trace, TranslateRequest};
-use quantnmt::coordinator::{Backend, ServerConfig, Service};
+use quantnmt::coordinator::{ServerConfig, Service};
 use quantnmt::quant::calibrate::CalibrationMode;
 
 fn main() -> anyhow::Result<()> {
@@ -31,9 +31,10 @@ fn main() -> anyhow::Result<()> {
         vec![25.0, 50.0, 100.0, 200.0, 400.0]
     };
 
+    let int8 = svc.int8_backend(CalibrationMode::Symmetric)?;
     for wait_ms in [5u64, 20, 80] {
         let cfg = ServerConfig {
-            backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+            backend: int8.clone(),
             shards: 2,
             max_wait: Duration::from_millis(wait_ms),
             token_budget: 1024,

@@ -9,7 +9,7 @@
 //! cargo bench --bench sorting
 //! ```
 
-use quantnmt::coordinator::{Backend, Service, ServiceConfig};
+use quantnmt::coordinator::{Service, ServiceConfig};
 use quantnmt::data::sorting::{padding_waste, sort_indices, SortOrder};
 use quantnmt::quant::calibrate::CalibrationMode;
 
@@ -28,11 +28,12 @@ fn main() -> anyhow::Result<()> {
         "order", "sent/s", "pad waste", "speedup"
     );
     let mut base = None;
+    let int8 = svc.int8_backend(CalibrationMode::Symmetric)?;
     for order in [SortOrder::Unsorted, SortOrder::Words, SortOrder::Tokens] {
         let idx = sort_indices(pairs, order);
         let waste = padding_waste(pairs, &idx, 64);
         let cfg = ServiceConfig {
-            backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+            backend: int8.clone(),
             sort: order,
             parallel: false,
             batch_size: 64,

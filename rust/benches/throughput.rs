@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
     let ds = svc.dataset()?;
     let n = if quick { 256 } else { ds.test.len() };
     let pairs = &ds.test[..n.min(ds.test.len())];
-    let mode = CalibrationMode::Symmetric;
+    let int8_backend = svc.int8_backend(CalibrationMode::Symmetric)?;
 
     let fp32 = |sort, parallel, streams| ServiceConfig {
         backend: Backend::EngineF32,
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let int8 = |sort, parallel, streams| ServiceConfig {
-        backend: Backend::EngineInt8(mode),
+        backend: int8_backend.clone(),
         sort,
         parallel,
         streams,

@@ -40,7 +40,6 @@ use crate::pipeline::batch::{pad_rows, Batch};
 use crate::pipeline::parallel::{core_partition, num_cpus, set_affinity, StreamFactory};
 use crate::pipeline::policy::fits_budget;
 use crate::pipeline::queue::BatchQueue;
-use crate::quant::calibrate::CalibrationMode;
 use crate::util::rng::SplitMix64;
 
 /// Online-serving configuration (the `serve` subcommand's knobs).
@@ -73,7 +72,9 @@ pub struct ServerConfig {
 impl Default for ServerConfig {
     fn default() -> Self {
         Self {
-            backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+            // see `ServiceConfig::default`: INT8 service needs a recipe
+            // derived from calibration, which a bare Default cannot load
+            backend: Backend::EngineF32,
             shards: 2,
             max_wait: Duration::from_millis(20),
             token_budget: DEFAULT_TOKEN_BUDGET,

@@ -9,7 +9,6 @@
 //! the Fig 6/8 benches all share, so every number in EXPERIMENTS.md
 //! flows through one code path.
 
-use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -19,30 +18,41 @@ use crate::coordinator::server::{self, ServerClient, ServerConfig, TranslateResp
 use crate::data::bleu::{corpus_bleu, strip_special};
 use crate::data::dataset::{Dataset, Pair};
 use crate::data::sorting::{sort_indices, SortOrder};
-use crate::model::plan::CompiledPlan;
+use crate::model::plan::{CompiledPlan, SiteSet};
 use crate::model::{Engine, ModelConfig, Weights};
 use crate::pipeline::batch::Batch;
 use crate::pipeline::parallel::{run_parallel, run_serial, ThroughputReport};
 use crate::pipeline::policy::{BatchPolicy, PolicyKind};
 use crate::quant::calibrate::{CalibrationMode, SiteTable};
+use crate::quant::recipe::{Recipe, RecipeBuilder};
 use crate::runtime::{ArtifactIndex, RtPrecision, TranslateExecutable};
 
 /// Which inference backend serves requests.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Backend {
     /// pure-Rust instrumented engine, FP32
     EngineF32,
-    /// pure-Rust engine, selectively-INT8 with a calibration mode
-    EngineInt8(CalibrationMode),
+    /// pure-Rust engine executing a per-site quantization [`Recipe`]
+    /// (shared read-only across worker streams)
+    EngineRecipe(Arc<Recipe>),
     /// AOT/PJRT fused executable (fp32 or int8 graphs)
     Runtime(RtPrecision),
 }
 
 impl Backend {
+    /// Wrap a recipe in the engine backend.
+    pub fn recipe(recipe: Recipe) -> Backend {
+        Backend::EngineRecipe(Arc::new(recipe))
+    }
+
+    /// Stable label for metrics rows.  Recipe backends carry the recipe
+    /// identity (name or content hash), so RunMetrics/EXPERIMENTS rows
+    /// distinguish recipes; the default derived recipe for a mode keeps
+    /// the historical `engine-int8-<mode>` text.
     pub fn label(&self) -> String {
         match self {
             Backend::EngineF32 => "engine-fp32".into(),
-            Backend::EngineInt8(m) => format!("engine-int8-{}", m.as_str()),
+            Backend::EngineRecipe(r) => format!("engine-{}", r.id()),
             Backend::Runtime(p) => format!("pjrt-{}", p.as_str()),
         }
     }
@@ -74,7 +84,11 @@ pub struct ServiceConfig {
 impl Default for ServiceConfig {
     fn default() -> Self {
         Self {
-            backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+            // FP32 engine: the only backend needing no calibration or
+            // AOT artifacts.  INT8 configs derive a recipe from the
+            // loaded calibration (`Service::int8_backend`) or load one
+            // from `recipe.json` (`Backend::recipe(Recipe::load(..)?)`).
+            backend: Backend::EngineF32,
             sort: SortOrder::Tokens,
             batch_size: 64,
             policy: PolicyKind::FixedCount,
@@ -193,22 +207,37 @@ impl Service {
         Dataset::load(&self.dir.join("dataset.json"))
     }
 
+    /// Derive the default recipe for a calibration mode from the loaded
+    /// calibration table (the paper's policy: sparse-classed sites fall
+    /// back to FP32), validated against the model's site census.
+    pub fn derive_recipe(&self, mode: CalibrationMode) -> anyhow::Result<Recipe> {
+        let sites = SiteSet::new(&self.model_cfg);
+        RecipeBuilder::new(&self.calibration, &sites, mode).build()
+    }
+
+    /// Convenience: the recipe-carrying engine backend for a mode (the
+    /// `--backend engine-int8 --mode <m>` CLI sugar resolves here).
+    pub fn int8_backend(&self, mode: CalibrationMode) -> anyhow::Result<Backend> {
+        Ok(Backend::recipe(self.derive_recipe(mode)?))
+    }
+
     /// Compile the execution plan for an engine backend **once**: the
-    /// weights are quantized/packed and the site table is interned a
-    /// single time, then every worker stream gets a cheap
-    /// [`Engine::from_compiled`] over the shared `Arc` (§5.6:
-    /// multi-stream serving over one read-only model).
-    fn compile_plan(&self, backend: Backend) -> anyhow::Result<Arc<CompiledPlan>> {
+    /// recipe is validated, the weights are quantized/packed and the
+    /// site table is interned a single time, then every worker stream
+    /// gets a cheap [`Engine::from_compiled`] over the shared `Arc`
+    /// (§5.6: multi-stream serving over one read-only model).
+    fn compile_plan(&self, backend: &Backend) -> anyhow::Result<Arc<CompiledPlan>> {
         let plan = match backend {
-            Backend::EngineF32 => BTreeMap::new(),
-            Backend::EngineInt8(mode) => self.calibration.plan(mode, false),
+            Backend::EngineF32 => {
+                let fp32 = Recipe::fp32(&SiteSet::new(&self.model_cfg));
+                CompiledPlan::build(&self.model_cfg, &self.weights, &fp32)?
+            }
+            Backend::EngineRecipe(recipe) => {
+                CompiledPlan::build(&self.model_cfg, &self.weights, recipe)?
+            }
             Backend::Runtime(_) => anyhow::bail!("runtime backend builds executables"),
         };
-        Ok(Arc::new(CompiledPlan::build(
-            &self.model_cfg,
-            &self.weights,
-            &plan,
-        )?))
+        Ok(Arc::new(plan))
     }
 
     /// Translate one corpus under a config; returns (metrics, outputs in
@@ -223,10 +252,10 @@ impl Service {
         let latencies = Mutex::new(LatencyStats::default());
         let max_len = cfg.max_decode_len;
 
-        let report: ThroughputReport = match cfg.backend {
-            Backend::EngineF32 | Backend::EngineInt8(_) => {
+        let report: ThroughputReport = match &cfg.backend {
+            Backend::EngineF32 | Backend::EngineRecipe(_) => {
                 // quantize/pack the model once; streams share the plan
-                let plan = self.compile_plan(cfg.backend)?;
+                let plan = self.compile_plan(&cfg.backend)?;
                 if cfg.parallel {
                     run_parallel(batches, cfg.streams, cfg.pin_cores, |_id: usize| {
                         let mut engine =
@@ -250,6 +279,7 @@ impl Service {
                 }
             }
             Backend::Runtime(prec) => {
+                let prec = *prec;
                 let index = self
                     .aot_index
                     .as_ref()
@@ -326,8 +356,8 @@ impl Service {
         D: FnOnce(&ServerClient<'_>) -> R,
     {
         let max_len = cfg.max_decode_len;
-        match cfg.backend {
-            Backend::EngineF32 | Backend::EngineInt8(_) => {
+        match &cfg.backend {
+            Backend::EngineF32 | Backend::EngineRecipe(_) => {
                 // admission sheds what the engine cannot decode, so one
                 // over-long request degrades to a reject, not a panic
                 let src_cap = cfg.max_src_len.unwrap_or(usize::MAX);
@@ -338,7 +368,7 @@ impl Service {
                 // compile the plan eagerly: fails fast on broken
                 // artifacts, quantizes every weight exactly once, and
                 // every shard shares the read-only result
-                let plan = self.compile_plan(cfg.backend)?;
+                let plan = self.compile_plan(&cfg.backend)?;
                 let factory = |_id: usize| {
                     let mut engine = Engine::from_compiled(self.model_cfg.clone(), plan.clone());
                     move |b: &Batch| engine.translate_greedy(&b.src, max_len)
@@ -346,6 +376,7 @@ impl Service {
                 Ok(server::serve(&cfg, factory, drive))
             }
             Backend::Runtime(prec) => {
+                let prec = *prec;
                 let index = self
                     .aot_index
                     .as_ref()
@@ -423,7 +454,7 @@ mod tests {
         let Some(svc) = service() else { return };
         let ds = svc.dataset().unwrap();
         let cfg_serial = ServiceConfig {
-            backend: Backend::EngineInt8(CalibrationMode::Symmetric),
+            backend: svc.int8_backend(CalibrationMode::Symmetric).unwrap(),
             parallel: false,
             batch_size: 16,
             ..Default::default()
@@ -474,6 +505,93 @@ mod tests {
         for (i, r) in responses.iter().enumerate() {
             assert_eq!(r.id, i);
             assert_eq!(r.out, offline[i], "online row {i} diverges from offline");
+        }
+    }
+
+    #[test]
+    fn recipe_identity_lands_in_labels() {
+        use crate::model::plan::SiteSet;
+        use crate::model::testutil::tiny_cfg;
+        use crate::quant::recipe::RecipeBuilder;
+        let cfg = tiny_cfg();
+        let table = SiteTable::synthetic(&cfg, 5);
+        let sites = SiteSet::new(&cfg);
+        let sym = RecipeBuilder::new(&table, &sites, CalibrationMode::Symmetric)
+            .build()
+            .unwrap();
+        let tweaked = RecipeBuilder::new(&table, &sites, CalibrationMode::Symmetric)
+            .force_fp32("dec.0.self.qk")
+            .name("")
+            .build()
+            .unwrap();
+        let a = ServiceConfig {
+            backend: Backend::recipe(sym),
+            ..Default::default()
+        }
+        .label();
+        let b = ServiceConfig {
+            backend: Backend::recipe(tweaked),
+            ..Default::default()
+        }
+        .label();
+        // derived default recipes keep the historical mode label;
+        // anonymous recipes are identified by content hash
+        assert!(a.contains("engine-int8-symmetric"), "{a}");
+        assert!(b.contains("engine-recipe-"), "{b}");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn recipe_with_fp32_override_runs_and_serves() {
+        // the acceptance flow: derive, override one decoder attention
+        // site to FP32, round-trip through recipe.json, then run the
+        // exact same artifact through both the offline and online paths
+        use crate::model::plan::SiteSet;
+        use crate::quant::recipe::{Recipe, RecipeBuilder};
+        let Some(svc) = service() else { return };
+        let ds = svc.dataset().unwrap();
+        let pairs = &ds.test[..16];
+        let sites = SiteSet::new(&svc.model_cfg);
+        let recipe = RecipeBuilder::new(&svc.calibration, &sites, CalibrationMode::Symmetric)
+            .force_fp32("dec.0.self.qk")
+            .name("sym-qk-fp32")
+            .build()
+            .unwrap();
+        let dir = std::env::temp_dir().join("quantnmt_test_svc_recipe");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("recipe.json");
+        recipe.save(&path).unwrap();
+        let loaded = Recipe::load(&path).unwrap();
+        assert_eq!(loaded, recipe);
+
+        let backend = Backend::recipe(loaded);
+        let cfg = ServiceConfig {
+            backend: backend.clone(),
+            parallel: false,
+            batch_size: 8,
+            ..Default::default()
+        };
+        let (m, outputs) = svc.run(pairs, &cfg).unwrap();
+        assert_eq!(outputs.len(), pairs.len());
+        assert!(m.config.contains("sym-qk-fp32"), "{}", m.config);
+
+        let server_cfg = ServerConfig {
+            backend,
+            shards: 2,
+            max_batch_rows: 8,
+            ..Default::default()
+        };
+        let (metrics, responses, _) = svc
+            .serve(&server_cfg, |client| {
+                for (i, p) in pairs.iter().enumerate() {
+                    assert!(client.submit(i, p.src.clone()), "shed row {i}");
+                }
+            })
+            .unwrap();
+        assert_eq!(metrics.shed, 0);
+        assert_eq!(responses.len(), pairs.len());
+        for r in &responses {
+            assert_eq!(r.out, outputs[r.id], "online row {} diverges", r.id);
         }
     }
 

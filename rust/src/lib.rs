@@ -11,8 +11,14 @@
 //! * [`gemm`] — blocked FP32 GEMM and the VNNI-style `s8 x u8 -> i32`
 //!   quantized GEMM that is the paper's §5.2 hot-spot;
 //! * [`quant`] — quantization schemes, calibration histograms, the
-//!   KL-divergence threshold search and the sparse/narrow/Gaussian
-//!   tensor classifier of §4.2 / Fig 2;
+//!   KL-divergence threshold search, the sparse/narrow/Gaussian
+//!   tensor classifier of §4.2 / Fig 2, and [`quant::recipe`]: the
+//!   ordered, serializable, census-validated per-site decision set
+//!   (`recipe.json`) that is the single typed interchange between
+//!   calibration and execution — derived via
+//!   [`quant::recipe::RecipeBuilder`] from a default mode plus
+//!   glob-selector overrides, compiled by
+//!   [`model::plan::CompiledPlan::build`];
 //! * [`graph`] — a compute-graph IR of the Transformer with the paper's
 //!   naive (Fig 1) and optimized (Fig 5) quantization passes plus the
 //!   §5.5 op-elimination statistics;

@@ -10,6 +10,10 @@
 //!                                       the dynamic batcher, report latency percentiles
 //! quantnmt ladder                       the full Fig-8 configuration ladder
 //! quantnmt calibrate                    print the calibration table (§4.2)
+//! quantnmt recipe derive|show|diff      per-site quantization recipes: derive one
+//!                                       from calibration (artifacts or --synthetic),
+//!                                       pretty-print + census-validate a recipe.json,
+//!                                       or diff two recipes site by site
 //! quantnmt graph-stats [--per-site]     §5.5 op-census of naive vs optimized passes;
 //!                                       --per-site prints the interned MatMul site
 //!                                       table (SiteId -> weight) cross-checked
@@ -17,46 +21,75 @@
 //! ```
 //!
 //! Common flags: `--artifacts DIR`, `--backend engine-fp32|engine-int8|pjrt-fp32|pjrt-int8`,
-//! `--mode naive|symmetric|independent|conjugate`, `--batch N`, `--streams N`,
-//! `--sort unsorted|words|tokens`, `--policy fixed|token-budget|bin-pack`,
-//! `--token-budget N` (padded-token budget per batch for the budget
-//! policies and the online batcher), `--serial`, `--no-pin`, `--limit N`.
+//! `--mode naive|symmetric|independent|conjugate`, `--recipe FILE`
+//! (run/serve: execute an explicit `recipe.json` instead of the
+//! mode-derived default — `--backend engine-int8 --mode M` stays as
+//! sugar that derives the default recipe for M), `--batch N`,
+//! `--streams N`, `--sort unsorted|words|tokens`,
+//! `--policy fixed|token-budget|bin-pack`, `--token-budget N`
+//! (padded-token budget per batch for the budget policies and the
+//! online batcher), `--serial`, `--no-pin`, `--limit N`.
 //!
 //! `serve` flags: `--shards N` (worker streams), `--max-wait-ms MS`
 //! (batching deadline), `--token-budget N`, `--batch N` (row cap),
 //! `--rate R` (offered load, req/s), `--queue-cap N` (admission bound),
 //! `--seed S` (arrival trace seed), `--limit N` (requests to replay),
 //! `--max-len N` (decode-length cap, default 56).
+//!
+//! `recipe derive` flags: `--synthetic` (deterministic synthetic
+//! calibration table, no artifacts needed), `--mode M` (default mode),
+//! `--quantize-sparse`, `--int8 "SEL=MODE,SEL"` (re-derive matched
+//! sites under another mode), `--fp32 "SEL,SEL"` (glob selectors
+//! forced to FP32; applied after `--int8`, so an FP32 exception always
+//! wins over a broad re-mode), `--name NAME`, `--out FILE`
+//! (default: stdout).
 
 use quantnmt::coordinator::server::{poisson_offsets, replay_trace, TranslateRequest};
 use quantnmt::coordinator::service::DEFAULT_TOKEN_BUDGET;
 use quantnmt::coordinator::{Backend, ServerConfig, Service, ServiceConfig};
 use quantnmt::data::sorting::SortOrder;
+use quantnmt::model::plan::SiteSet;
+use quantnmt::model::ModelConfig;
 use quantnmt::pipeline::policy::PolicyKind;
 use quantnmt::quant::calibrate::CalibrationMode;
+use quantnmt::quant::recipe::{Recipe, RecipeBuilder};
+use quantnmt::quant::SiteTable;
 use quantnmt::runtime::RtPrecision;
 use quantnmt::util::cli::Args;
+use std::path::Path;
 use std::time::Duration;
 
-fn parse_backend(args: &Args) -> Backend {
-    let mode = CalibrationMode::from_str(args.get_or("mode", "symmetric"))
-        .unwrap_or(CalibrationMode::Symmetric);
-    match args.get_or("backend", "engine-int8") {
+fn parse_mode(args: &Args) -> CalibrationMode {
+    CalibrationMode::from_str(args.get_or("mode", "symmetric"))
+        .unwrap_or(CalibrationMode::Symmetric)
+}
+
+/// Resolve the backend: an explicit `--recipe recipe.json` wins,
+/// `--backend engine-int8 --mode M` is sugar deriving the default
+/// recipe for M from the service's calibration table.
+fn parse_backend(args: &Args, svc: &Service) -> anyhow::Result<Backend> {
+    if let Some(path) = args.get("recipe") {
+        let recipe = Recipe::load(Path::new(path))?;
+        recipe.validate(&SiteSet::new(&svc.model_cfg))?;
+        return Ok(Backend::recipe(recipe));
+    }
+    let mode = parse_mode(args);
+    Ok(match args.get_or("backend", "engine-int8") {
         "engine-fp32" => Backend::EngineF32,
-        "engine-int8" => Backend::EngineInt8(mode),
+        "engine-int8" => svc.int8_backend(mode)?,
         "pjrt-fp32" => Backend::Runtime(RtPrecision::Fp32),
         "pjrt-int8" => Backend::Runtime(RtPrecision::Int8),
         other => {
             eprintln!("unknown backend '{other}', using engine-int8");
-            Backend::EngineInt8(mode)
+            svc.int8_backend(mode)?
         }
-    }
+    })
 }
 
-fn parse_config(args: &Args) -> ServiceConfig {
+fn parse_config(args: &Args, svc: &Service) -> anyhow::Result<ServiceConfig> {
     let policy = PolicyKind::parse_or(args.get("policy"), PolicyKind::FixedCount);
-    ServiceConfig {
-        backend: parse_backend(args),
+    Ok(ServiceConfig {
+        backend: parse_backend(args, svc)?,
         sort: match args.get_or("sort", "tokens") {
             "unsorted" => SortOrder::Unsorted,
             "words" => SortOrder::Words,
@@ -69,7 +102,7 @@ fn parse_config(args: &Args) -> ServiceConfig {
         parallel: !args.flag("serial"),
         pin_cores: !args.flag("no-pin"),
         max_decode_len: args.get_usize("max-len", 56),
-    }
+    })
 }
 
 fn open_service(args: &Args) -> anyhow::Result<Service> {
@@ -118,7 +151,7 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_translate(args: &Args) -> anyhow::Result<()> {
     let svc = open_service(args)?;
-    let cfg = parse_config(args);
+    let cfg = parse_config(args, &svc)?;
     let lex = quantnmt::data::Lexicon::build(&Default::default());
     let ds = svc.dataset()?;
     let limit = args.get_usize("limit", 8);
@@ -136,7 +169,7 @@ fn cmd_translate(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let svc = open_service(args)?;
-    let cfg = parse_config(args);
+    let cfg = parse_config(args, &svc)?;
     let ds = svc.dataset()?;
     let limit = args.get_usize("limit", ds.test.len());
     let (metrics, _) = svc.run(&ds.test[..limit.min(ds.test.len())], &cfg)?;
@@ -144,9 +177,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn parse_server_config(args: &Args) -> ServerConfig {
-    ServerConfig {
-        backend: parse_backend(args),
+fn parse_server_config(args: &Args, svc: &Service) -> anyhow::Result<ServerConfig> {
+    Ok(ServerConfig {
+        backend: parse_backend(args, svc)?,
         shards: args.get_usize("shards", 2),
         max_wait: Duration::from_secs_f64(args.get_f64("max-wait-ms", 20.0) / 1e3),
         token_budget: args.get_usize("token-budget", DEFAULT_TOKEN_BUDGET),
@@ -155,12 +188,12 @@ fn parse_server_config(args: &Args) -> ServerConfig {
         max_src_len: None,
         pin_cores: !args.flag("no-pin"),
         max_decode_len: args.get_usize("max-len", 56),
-    }
+    })
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let svc = open_service(args)?;
-    let cfg = parse_server_config(args);
+    let cfg = parse_server_config(args, &svc)?;
     let ds = svc.dataset()?;
     let limit = args.get_usize("limit", 512).min(ds.test.len());
     let rate = args.get_f64("rate", 100.0);
@@ -190,7 +223,8 @@ fn cmd_ladder(args: &Args) -> anyhow::Result<()> {
     let ds = svc.dataset()?;
     let limit = args.get_usize("limit", 512);
     let pairs = &ds.test[..limit.min(ds.test.len())];
-    let mode = CalibrationMode::Symmetric;
+    // derive the symmetric-mode recipe once; every INT8 rung shares it
+    let int8 = svc.int8_backend(CalibrationMode::Symmetric)?;
     // the Fig-8a configuration ladder, out-of-the-box -> fully optimized
     let ladder: Vec<ServiceConfig> = vec![
         ServiceConfig {
@@ -213,26 +247,26 @@ fn cmd_ladder(args: &Args) -> anyhow::Result<()> {
             ..Default::default()
         },
         ServiceConfig {
-            backend: Backend::EngineInt8(mode),
+            backend: int8.clone(),
             sort: SortOrder::Words,
             parallel: false,
             ..Default::default()
         },
         ServiceConfig {
-            backend: Backend::EngineInt8(mode),
+            backend: int8.clone(),
             sort: SortOrder::Tokens,
             parallel: false,
             ..Default::default()
         },
         ServiceConfig {
-            backend: Backend::EngineInt8(mode),
+            backend: int8.clone(),
             sort: SortOrder::Tokens,
             streams: 2,
             parallel: true,
             ..Default::default()
         },
         ServiceConfig {
-            backend: Backend::EngineInt8(mode),
+            backend: int8.clone(),
             sort: SortOrder::Tokens,
             streams: 4,
             parallel: true,
@@ -240,7 +274,7 @@ fn cmd_ladder(args: &Args) -> anyhow::Result<()> {
         },
         // + bin-packing batch shaping (the paper's §5.6 technique)
         ServiceConfig {
-            backend: Backend::EngineInt8(mode),
+            backend: int8,
             sort: SortOrder::Tokens,
             streams: 4,
             parallel: true,
@@ -278,6 +312,139 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     }
     println!("census: {:?}", table.class_census());
     Ok(())
+}
+
+/// `quantnmt recipe derive|show|diff` — the recipe lifecycle without
+/// touching the serving path: derive from calibration (artifacts or a
+/// deterministic `--synthetic` table), pretty-print + census-validate,
+/// and diff two saved recipes site by site.
+fn cmd_recipe(args: &Args) -> anyhow::Result<()> {
+    let sub = args.positional.get(1).map(String::as_str).unwrap_or("");
+    match sub {
+        "derive" => {
+            let mode = parse_mode(args);
+            let (table, model_cfg) = if args.flag("synthetic") {
+                let cfg = ModelConfig::default();
+                let seed = args.get_usize("seed", 0xC0DE) as u64;
+                (SiteTable::synthetic(&cfg, seed), cfg)
+            } else {
+                let svc = open_service(args)?;
+                (svc.calibration, svc.model_cfg)
+            };
+            let sites = SiteSet::new(&model_cfg);
+            let mut builder = RecipeBuilder::new(&table, &sites, mode);
+            if args.flag("quantize-sparse") {
+                builder = builder.quantize_sparse(true);
+            }
+            // application order is fixed (the flag parser cannot see
+            // interleaving): --int8 re-modes first, then --fp32 — so a
+            // narrow FP32 exception always wins over a broad re-mode,
+            // matching the paper's fallback-has-the-last-word policy
+            if let Some(ov) = args.get("int8") {
+                for s in ov.split(',').filter(|s| !s.trim().is_empty()) {
+                    let (sel, m) = s.split_once('=').unwrap_or((s, mode.as_str()));
+                    let m = CalibrationMode::from_str(m.trim()).ok_or_else(|| {
+                        anyhow::anyhow!("unknown calibration mode '{}' in --int8", m.trim())
+                    })?;
+                    builder = builder.with_mode(sel.trim(), m);
+                }
+            }
+            if let Some(sel) = args.get("fp32") {
+                for s in sel.split(',').filter(|s| !s.trim().is_empty()) {
+                    builder = builder.force_fp32(s.trim());
+                }
+            }
+            if let Some(name) = args.get("name") {
+                builder = builder.name(name);
+            }
+            let recipe = builder.build()?;
+            eprintln!(
+                "derived recipe '{}': {} int8 / {} fp32 sites (hash {:016x})",
+                recipe.id(),
+                recipe.int8_site_count(),
+                recipe.len() - recipe.int8_site_count(),
+                recipe.content_hash()
+            );
+            match args.get("out") {
+                Some(path) => {
+                    recipe.save(Path::new(path))?;
+                    eprintln!("wrote {path}");
+                }
+                None => println!("{}", recipe.to_json()),
+            }
+            Ok(())
+        }
+        "show" => {
+            let path = args
+                .positional
+                .get(2)
+                .ok_or_else(|| anyhow::anyhow!("usage: quantnmt recipe show <recipe.json>"))?;
+            let recipe = Recipe::load(Path::new(path))?;
+            // census source: an explicit --artifacts dir makes
+            // validation a hard gate; otherwise the census is guessed
+            // (default artifacts dir, else ModelConfig::default) and a
+            // mismatch is reported as a warning — pretty-printing a
+            // recipe for a different model must still work
+            let explicit = args.get("artifacts").is_some();
+            let model_cfg = match args.get("artifacts") {
+                Some(dir) => ModelConfig::load(&Path::new(dir).join("config.json"))?,
+                // config.json alone carries the census; don't pay a
+                // full Service load (weights + calibration) to print
+                None => ModelConfig::load(&quantnmt::default_artifacts_dir().join("config.json"))
+                    .unwrap_or_default(),
+            };
+            let sites = SiteSet::new(&model_cfg);
+            println!(
+                "recipe '{}' ({} sites, hash {:016x})",
+                recipe.id(),
+                recipe.len(),
+                recipe.content_hash()
+            );
+            for rs in recipe.iter() {
+                println!("  {:20} {}", rs.site, rs.decision);
+            }
+            println!(
+                "{} int8 / {} fp32 sites",
+                recipe.int8_site_count(),
+                recipe.len() - recipe.int8_site_count(),
+            );
+            match recipe.validate(&sites) {
+                Ok(()) => println!("validated against the {}-site census", sites.len()),
+                Err(e) if explicit => return Err(e),
+                Err(e) => eprintln!(
+                    "warning: does not match the guessed {}-site census ({e}); \
+                     pass --artifacts DIR to validate against the right model",
+                    sites.len()
+                ),
+            }
+            Ok(())
+        }
+        "diff" => {
+            let (a, b) = match (args.positional.get(2), args.positional.get(3)) {
+                (Some(a), Some(b)) => (a, b),
+                _ => anyhow::bail!("usage: quantnmt recipe diff <a.json> <b.json>"),
+            };
+            let ra = Recipe::load(Path::new(a))?;
+            let rb = Recipe::load(Path::new(b))?;
+            let diff = ra.diff(&rb);
+            println!(
+                "'{}' vs '{}': {} site(s) differ",
+                ra.id(),
+                rb.id(),
+                diff.len()
+            );
+            for d in &diff {
+                println!(
+                    "  {:20} {}  ->  {}",
+                    d.site,
+                    d.left.as_deref().unwrap_or("(absent)"),
+                    d.right.as_deref().unwrap_or("(absent)")
+                );
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown recipe subcommand '{other}' (expected derive|show|diff)"),
+    }
 }
 
 fn cmd_graph_stats(args: &Args) -> anyhow::Result<()> {
@@ -327,10 +494,13 @@ fn main() {
         "serve" => cmd_serve(&args),
         "ladder" => cmd_ladder(&args),
         "calibrate" => cmd_calibrate(&args),
+        "recipe" => cmd_recipe(&args),
         "graph-stats" => cmd_graph_stats(&args),
         other => {
             eprintln!("unknown command '{other}'");
-            eprintln!("usage: quantnmt [info|translate|run|serve|ladder|calibrate|graph-stats]");
+            eprintln!(
+                "usage: quantnmt [info|translate|run|serve|ladder|calibrate|recipe|graph-stats]"
+            );
             std::process::exit(2);
         }
     };

@@ -245,7 +245,7 @@ pub fn translate_beam(engine: &mut Engine, src: &[Vec<u32>], bc: BeamConfig) -> 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::testutil::{loose_plan, random_weights, tiny_cfg};
+    use crate::model::testutil::{loose_recipe, random_weights, tiny_cfg};
     use crate::model::engine::Engine;
 
     #[test]
@@ -281,7 +281,7 @@ mod tests {
         assert_eq!(r.translations.len(), 2);
 
         // int8 engine moves ~4x fewer bytes per gather call
-        let mut eq = Engine::with_plan(cfg.clone(), w, loose_plan(&cfg)).unwrap();
+        let mut eq = Engine::with_recipe(cfg.clone(), w, &loose_recipe(&cfg)).unwrap();
         let rq = translate_beam(&mut eq, &src, BeamConfig::default());
         // self caches are u8 in the int8 engine; cross caches too with the
         // loose plan, so the ratio should be ~4 for matched call counts

@@ -13,33 +13,21 @@
 //! Softmax and LayerNorm always run in FP32 (§3 of the paper).  The
 //! profiler brackets every op family so Fig 7 can be regenerated.
 
-use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::gemm::QGemmScratch;
 use crate::model::config::ModelConfig;
 use crate::model::kvcache::KvCache;
 use crate::model::layers::{self, AttnScratch};
-use crate::model::plan::{CompiledPlan, SiteId};
+use crate::model::plan::{CompiledPlan, SiteId, SiteSet};
 use crate::model::profiler::{OpKind, Profiler};
 use crate::model::weights::Weights;
-use crate::quant::calibrate::{CalibrationMode, SiteQuant, SiteTable};
+use crate::quant::calibrate::{CalibrationMode, SiteTable};
+use crate::quant::recipe::{Recipe, RecipeBuilder};
 use crate::specials::{BOS_ID, EOS_ID, PAD_ID};
 use crate::tensor::ops;
 
 pub use crate::model::plan::positional_encoding;
-
-/// Engine precision selector (convenience constructor input).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Precision {
-    F32,
-    /// INT8 with a calibration mode; `quantize_sparse` reproduces the
-    /// paper's "naive on everything" experiment when true.
-    Int8 {
-        mode: CalibrationMode,
-        quantize_sparse: bool,
-    },
-}
 
 /// Reusable activation buffers for the encode/decode orchestration:
 /// the residual stream, the attention projections and the block
@@ -91,13 +79,14 @@ pub struct DecodeState {
 }
 
 impl Engine {
-    /// Build an engine with an explicit plan (tests use this directly).
-    pub fn with_plan(
+    /// Build an engine executing a [`Recipe`] (the recipe is validated
+    /// against the model's site census during compilation).
+    pub fn with_recipe(
         cfg: ModelConfig,
         weights: Weights,
-        plan: BTreeMap<String, Option<SiteQuant>>,
+        recipe: &Recipe,
     ) -> anyhow::Result<Engine> {
-        let compiled = CompiledPlan::build(&cfg, &weights, &plan)?;
+        let compiled = CompiledPlan::build(&cfg, &weights, recipe)?;
         Ok(Engine::from_compiled(cfg, Arc::new(compiled)))
     }
 
@@ -129,12 +118,14 @@ impl Engine {
         }
     }
 
-    /// FP32 engine.
+    /// FP32 engine (the all-fallback recipe).
     pub fn fp32(cfg: ModelConfig, weights: Weights) -> anyhow::Result<Engine> {
-        Engine::with_plan(cfg, weights, BTreeMap::new())
+        let recipe = Recipe::fp32(&SiteSet::new(&cfg));
+        Engine::with_recipe(cfg, weights, &recipe)
     }
 
-    /// INT8 engine from a calibration table + mode.
+    /// INT8 engine from a calibration table + mode: derives the default
+    /// recipe for the mode and compiles it.
     pub fn int8(
         cfg: ModelConfig,
         weights: Weights,
@@ -142,8 +133,11 @@ impl Engine {
         mode: CalibrationMode,
         quantize_sparse: bool,
     ) -> anyhow::Result<Engine> {
-        let plan = table.plan(mode, quantize_sparse);
-        Engine::with_plan(cfg, weights, plan)
+        let sites = SiteSet::new(&cfg);
+        let recipe = RecipeBuilder::new(table, &sites, mode)
+            .quantize_sparse(quantize_sparse)
+            .build()?;
+        Engine::with_recipe(cfg, weights, &recipe)
     }
 
     /// The compiled plan this engine executes.
@@ -528,7 +522,7 @@ impl Engine {
 mod tests {
     use super::*;
 
-    use crate::model::testutil::{loose_plan, random_weights, tiny_cfg};
+    use crate::model::testutil::{loose_recipe, random_weights, tiny_cfg};
 
     #[test]
     fn fp32_greedy_decode_is_deterministic() {
@@ -564,8 +558,7 @@ mod tests {
     fn int8_engine_runs_and_uses_quantized_cache() {
         let cfg = tiny_cfg();
         let w = random_weights(&cfg, 3);
-        let plan = loose_plan(&cfg);
-        let mut e = Engine::with_plan(cfg.clone(), w, plan).unwrap();
+        let mut e = Engine::with_recipe(cfg.clone(), w, &loose_recipe(&cfg)).unwrap();
         assert!(e.int8_cache);
         assert_eq!(e.precision_label(), "int8");
         assert!(e.quantized_site_count() > 0);
@@ -579,7 +572,7 @@ mod tests {
         let cfg = tiny_cfg();
         let w = random_weights(&cfg, 4);
         let mut ef = Engine::fp32(cfg.clone(), w.clone()).unwrap();
-        let mut eq = Engine::with_plan(cfg.clone(), w, loose_plan(&cfg)).unwrap();
+        let mut eq = Engine::with_recipe(cfg.clone(), w, &loose_recipe(&cfg)).unwrap();
         let src = vec![vec![3, 4, 5, 6, 7, 2]];
         let (mf, _, _) = ef.encode(&src);
         let (mq, _, _) = eq.encode(&src);
@@ -592,7 +585,7 @@ mod tests {
         // two engines over one Arc'd plan: same outputs, no re-quantize
         let cfg = tiny_cfg();
         let w = random_weights(&cfg, 9);
-        let compiled = Arc::new(CompiledPlan::build(&cfg, &w, &loose_plan(&cfg)).unwrap());
+        let compiled = Arc::new(CompiledPlan::build(&cfg, &w, &loose_recipe(&cfg)).unwrap());
         let mut e1 = Engine::from_compiled(cfg.clone(), compiled.clone());
         let mut e2 = Engine::from_compiled(cfg.clone(), compiled);
         let src = vec![vec![3, 4, 5, 2], vec![6, 7, 2]];
@@ -609,7 +602,7 @@ mod tests {
         assert!(ef.profiler.total(OpKind::MatMul) > std::time::Duration::ZERO);
         assert_eq!(ef.profiler.count(OpKind::QuantizedMatMul), 0);
 
-        let mut eq = Engine::with_plan(cfg.clone(), w, loose_plan(&cfg)).unwrap();
+        let mut eq = Engine::with_recipe(cfg.clone(), w, &loose_recipe(&cfg)).unwrap();
         eq.profiler = Profiler::enabled();
         eq.translate_greedy(&[vec![3, 4, 2]], 6);
         assert!(eq.profiler.count(OpKind::QuantizedMatMul) > 0);
@@ -620,7 +613,7 @@ mod tests {
     fn per_site_profile_attributes_gemm_time() {
         let cfg = tiny_cfg();
         let w = random_weights(&cfg, 10);
-        let mut e = Engine::with_plan(cfg.clone(), w, loose_plan(&cfg)).unwrap();
+        let mut e = Engine::with_recipe(cfg.clone(), w, &loose_recipe(&cfg)).unwrap();
         e.profiler = Profiler::enabled();
         e.translate_greedy(&[vec![3, 4, 5, 2]], 6);
         let breakdown = e.profiler.site_breakdown();

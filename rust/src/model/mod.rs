@@ -39,7 +39,7 @@ pub mod testutil;
 pub mod weights;
 
 pub use config::ModelConfig;
-pub use engine::{Engine, Precision};
+pub use engine::Engine;
 pub use plan::{CompiledPlan, SiteId, SiteSet};
 pub use profiler::Profiler;
 pub use weights::Weights;

@@ -35,13 +35,12 @@
 //! only scratch + profiler state), mirroring §5.6's multi-stream
 //! serving over one immutable model.
 
-use std::collections::BTreeMap;
-
 use crate::gemm::{self, PackedB};
 use crate::graph::ir::{transformer_graph, GraphConfig};
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
 use crate::quant::calibrate::SiteQuant;
+use crate::quant::recipe::{self, Recipe};
 
 /// Dense interned id of one MatMul site (index into the census).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -233,18 +232,21 @@ pub struct CompiledPlan {
 }
 
 impl CompiledPlan {
-    /// Compile a `site name -> Option<SiteQuant>` plan (missing key =
-    /// FP32) against a config + weights.  Quantizes and packs every
-    /// quantized weight once, resolves LayerNorm/bias constants into
-    /// typed layer structs, and cross-checks the site census against
-    /// the graph IR.
+    /// Compile a [`Recipe`] against a config + weights.  The recipe is
+    /// validated against the site census first (unknown, missing or
+    /// duplicate sites are hard errors), then every quantized weight is
+    /// quantized and packed once, LayerNorm/bias constants resolve into
+    /// typed layer structs, and the census is cross-checked against the
+    /// graph IR.
     pub fn build(
         cfg: &ModelConfig,
         weights: &Weights,
-        plan: &BTreeMap<String, Option<SiteQuant>>,
+        recipe: &Recipe,
     ) -> anyhow::Result<CompiledPlan> {
         let site_set = SiteSet::new(cfg);
         site_set.cross_check_graph(cfg)?;
+        recipe.validate(&site_set)?;
+        let plan = recipe::quant_lookup(recipe);
         anyhow::ensure!(
             site_set.len() <= u16::MAX as usize,
             "site census too large for SiteId(u16)"
@@ -431,7 +433,7 @@ pub fn positional_encoding(max_len: usize, d_model: usize) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::testutil::{loose_plan, random_weights, tiny_cfg};
+    use crate::model::testutil::{loose_recipe, random_weights, tiny_cfg};
 
     #[test]
     fn site_ids_are_dense_and_roundtrip() {
@@ -462,7 +464,7 @@ mod tests {
     fn build_resolves_quantized_weights_and_layers() {
         let cfg = tiny_cfg();
         let w = random_weights(&cfg, 7);
-        let plan = CompiledPlan::build(&cfg, &w, &loose_plan(&cfg)).unwrap();
+        let plan = CompiledPlan::build(&cfg, &w, &loose_recipe(&cfg)).unwrap();
         assert_eq!(plan.site_count(), cfg.matmul_site_names().len());
         assert_eq!(plan.quantized_site_count(), plan.site_count());
         assert!(plan.int8_cache);
@@ -497,7 +499,8 @@ mod tests {
     fn fp32_build_keeps_f32_weights() {
         let cfg = tiny_cfg();
         let w = random_weights(&cfg, 8);
-        let plan = CompiledPlan::build(&cfg, &w, &BTreeMap::new()).unwrap();
+        let fp32 = Recipe::fp32(&SiteSet::new(&cfg));
+        let plan = CompiledPlan::build(&cfg, &w, &fp32).unwrap();
         assert_eq!(plan.quantized_site_count(), 0);
         assert!(!plan.int8_cache);
         for (id, name) in plan.site_set().iter() {
@@ -508,6 +511,42 @@ mod tests {
                 assert!(matches!(wp.store, WeightStore::F32(_)), "{name}");
             }
         }
+    }
+
+    #[test]
+    fn build_rejects_census_mismatched_recipe() {
+        use crate::quant::recipe::{Decision, RecipeSite};
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 9);
+        let bad = Recipe::from_sites(
+            "bad",
+            vec![RecipeSite {
+                site: "enc.9.attn.q".into(),
+                decision: Decision::Fp32,
+            }],
+        );
+        let err = CompiledPlan::build(&cfg, &w, &bad).unwrap_err();
+        assert!(err.to_string().contains("unknown MatMul site"), "{err}");
+    }
+
+    #[test]
+    fn per_site_fp32_override_compiles_mixed() {
+        use crate::quant::recipe::RecipeBuilder;
+        use crate::quant::{CalibrationMode, SiteTable};
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 10);
+        let table = SiteTable::synthetic(&cfg, 3);
+        let sites = SiteSet::new(&cfg);
+        let recipe = RecipeBuilder::new(&table, &sites, CalibrationMode::Symmetric)
+            .force_fp32("dec.0.self.qk")
+            .build()
+            .unwrap();
+        let plan = CompiledPlan::build(&cfg, &w, &recipe).unwrap();
+        let qk = plan.site_set().id("dec.0.self.qk").unwrap();
+        assert!(plan.site(qk).quant.is_none());
+        // an FP32 self-attn qk site forces f32 KV caches
+        assert!(!plan.int8_cache);
+        assert!(plan.quantized_site_count() > 0);
     }
 
     #[test]

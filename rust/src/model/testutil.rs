@@ -5,11 +5,10 @@
 //! trained one) build random weights here instead, so they run without
 //! artifacts present.
 
-use std::collections::BTreeMap;
-
 use super::config::ModelConfig;
 use super::weights::Weights;
 use crate::quant::calibrate::SiteQuant;
+use crate::quant::recipe::{Decision, Recipe, RecipeSite};
 use crate::quant::QuantParams;
 use crate::tensor::TensorF;
 use crate::util::rng::SplitMix64;
@@ -76,18 +75,23 @@ pub fn random_weights(cfg: &ModelConfig, seed: u64) -> Weights {
     w
 }
 
-/// A quantize-everything plan with loose symmetric thresholds (no
+/// A quantize-everything recipe with loose symmetric thresholds (no
 /// calibration data needed; numerically benign).
-pub fn loose_plan(cfg: &ModelConfig) -> BTreeMap<String, Option<SiteQuant>> {
-    let mut plan = BTreeMap::new();
-    for site in cfg.matmul_site_names() {
-        plan.insert(
-            site,
-            Some(SiteQuant {
-                a: QuantParams::symmetric(8.0),
-                b_scale: 1.0 / 127.0,
-            }),
-        );
-    }
-    plan
+pub fn loose_recipe(cfg: &ModelConfig) -> Recipe {
+    Recipe::from_sites(
+        "loose-int8",
+        cfg.matmul_site_names()
+            .into_iter()
+            .map(|site| RecipeSite {
+                site,
+                decision: Decision::Int8 {
+                    quant: SiteQuant {
+                        a: QuantParams::symmetric(8.0),
+                        b_scale: 1.0 / 127.0,
+                    },
+                    mode: None,
+                },
+            })
+            .collect(),
+    )
 }

@@ -9,9 +9,11 @@
 //!    quantities from a Rust-collected [`Histogram`] (used by tests,
 //!    the ablation bench and the `calibrate` CLI subcommand).
 //!
-//! [`SiteTable`] resolves (mode, calibration, weight scales) into the
-//! concrete [`QuantParams`] per MatMul site that the INT8 engine
-//! consumes, applying the paper's policy of skipping sparse sites.
+//! [`SiteTable`] is the raw calibration evidence; resolving it into
+//! per-site execution decisions is the job of
+//! [`crate::quant::recipe::RecipeBuilder`], which applies the paper's
+//! policy of skipping sparse sites (plus any per-site overrides) and
+//! freezes the result into a [`crate::quant::recipe::Recipe`].
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -20,7 +22,7 @@ use super::classify::TensorClass;
 use super::histogram::Histogram;
 use super::kl::kl_threshold;
 use super::scheme::QuantParams;
-use super::INT8_MAX;
+use crate::model::config::ModelConfig;
 use crate::util::json::Json;
 
 /// The paper's quantization modes (Table 1).
@@ -149,7 +151,7 @@ impl SiteCalibration {
 }
 
 /// Per-site quantization decision: `None` = keep FP32.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SiteQuant {
     pub a: QuantParams,
     /// u8 scale for the B operand (weights or dynamic tensor).
@@ -192,44 +194,62 @@ impl SiteTable {
         Ok(table)
     }
 
-    /// Resolve the quantization plan for a mode.
-    ///
-    /// Returns site -> Some(params) for quantized sites, None for sites
-    /// kept FP32 (sparse class, per §4.2 — unless `quantize_sparse`,
-    /// which reproduces the paper's "naive on everything" experiment).
-    pub fn plan(&self, mode: CalibrationMode, quantize_sparse: bool) -> BTreeMap<String, Option<SiteQuant>> {
-        let mut out = BTreeMap::new();
-        for (name, cal) in &self.sites {
-            if name.ends_with(".b") {
-                continue; // B-side entries are folded into their site below
-            }
-            if !quantize_sparse && !cal.class.quantizable() {
-                out.insert(name.clone(), None);
-                continue;
-            }
-            let a = cal.params(mode);
-            let b_scale = if let Some(ws) = self.weight_scales.get(name) {
-                *ws
-            } else if let Some(bcal) = self.sites.get(&format!("{name}.b")) {
-                if !quantize_sparse && !bcal.class.quantizable() {
-                    out.insert(name.clone(), None);
-                    continue;
-                }
-                // B side always uses a symmetric scale (u8 zero point is
-                // fixed at 128); independent-mode asymmetry applies to A only.
-                let m = if mode == CalibrationMode::Independent {
-                    CalibrationMode::Conjugate
-                } else {
-                    mode
-                };
-                bcal.params(m).scale * (INT8_MAX / INT8_MAX)
-            } else {
-                out.insert(name.clone(), None);
-                continue;
+    /// A deterministic synthetic calibration table covering a model's
+    /// full MatMul census: Gaussian activations with occasional
+    /// outliers, sparse (post-ReLU-like) `ffn.y` sites, per-weight
+    /// scales for the weight sites and `.b` entries for the dynamic
+    /// qk/pv sites.  Used by tests, benches and the artifact-free
+    /// `recipe derive --synthetic` CI smoke path — everything a
+    /// [`crate::quant::recipe::RecipeBuilder`] needs, with no
+    /// `make artifacts` run.
+    pub fn synthetic(cfg: &ModelConfig, seed: u64) -> SiteTable {
+        use crate::util::rng::SplitMix64;
+        // hash the site name so every site gets an independent,
+        // reproducible stream regardless of census order
+        let site_seed = |name: &str| -> u64 { crate::util::fnv1a(name.bytes()) ^ seed };
+        let mut table = SiteTable::default();
+        for (i, site) in cfg.matmul_site_names().into_iter().enumerate() {
+            let fill = |name: &str, sparse: bool| {
+                let mut rng = SplitMix64::new(site_seed(name));
+                let scale = 0.5 + (i % 4) as f32 * 0.4;
+                let data: Vec<f32> = (0..4096)
+                    .map(|_| {
+                        if sparse {
+                            if rng.f64() < 0.7 {
+                                0.0
+                            } else {
+                                rng.normal().abs() as f32 * scale
+                            }
+                        } else {
+                            let x = rng.normal() as f32 * scale;
+                            if rng.f64() < 0.002 {
+                                x * 20.0
+                            } else {
+                                x
+                            }
+                        }
+                    })
+                    .collect();
+                let mut h = Histogram::new(256);
+                h.observe_range(&data);
+                h.observe_fill(&data);
+                SiteCalibration::from_histogram(name, &h, 16)
             };
-            out.insert(name.clone(), Some(SiteQuant { a, b_scale }));
+            let sparse = site.ends_with(".ffn.y");
+            let cal = fill(&site, sparse);
+            table.sites.insert(site.clone(), cal);
+            if cfg.weight_for_site(&site).is_some() {
+                table
+                    .weight_scales
+                    .insert(site, 0.002 + 0.0005 * (i % 5) as f32);
+            } else {
+                // dynamic qk/pv sites calibrate their B operand too
+                let bname = format!("{site}.b");
+                let bcal = fill(&bname, false);
+                table.sites.insert(bname, bcal);
+            }
         }
-        out
+        table
     }
 
     /// Census of histogram classes (Fig 2 reproduction).
@@ -314,21 +334,61 @@ mod tests {
         assert_eq!(table.sites.len(), 2);
         assert_eq!(table.weight_scales.len(), 2);
 
-        let plan = table.plan(CalibrationMode::Symmetric, false);
-        // gaussian site quantized, sparse site not
-        assert!(plan["enc.0.attn.q"].is_some());
-        assert!(plan["enc.0.ffn.y"].is_none());
-        let q = plan["enc.0.attn.q"].as_ref().unwrap();
-        assert!((q.a.scale - 1.5 / 127.0).abs() < 1e-6);
-        assert_eq!(q.b_scale, 0.01);
+        // resolving through the recipe builder: gaussian site
+        // quantized, sparse site kept FP32, uncalibrated sites FP32
+        use crate::model::plan::SiteSet;
+        use crate::model::ModelConfig;
+        use crate::quant::recipe::{Decision, RecipeBuilder};
+        let cfg = ModelConfig::default();
+        let sites = SiteSet::new(&cfg);
+        let recipe = RecipeBuilder::new(&table, &sites, CalibrationMode::Symmetric)
+            .build()
+            .unwrap();
+        match recipe.decision("enc.0.attn.q").unwrap() {
+            Decision::Int8 { quant, .. } => {
+                assert!((quant.a.scale - 1.5 / 127.0).abs() < 1e-6);
+                assert_eq!(quant.b_scale, 0.01);
+            }
+            d => panic!("expected int8, got {d}"),
+        }
+        assert_eq!(recipe.decision("enc.0.ffn.y"), Some(&Decision::Fp32));
+        assert_eq!(recipe.decision("dec.0.self.q"), Some(&Decision::Fp32));
 
-        // quantize_sparse=true (the naive-everything experiment) includes it
-        let plan_all = table.plan(CalibrationMode::Naive, true);
-        assert!(plan_all["enc.0.ffn.y"].is_some());
+        // quantize_sparse (the naive-everything experiment) includes
+        // the sparse site
+        let all = RecipeBuilder::new(&table, &sites, CalibrationMode::Naive)
+            .quantize_sparse(true)
+            .build()
+            .unwrap();
+        assert!(all.decision("enc.0.ffn.y").unwrap().is_int8());
 
         let census = table.class_census();
         assert_eq!(census["gaussian"], 1);
         assert_eq!(census["sparse"], 1);
+    }
+
+    #[test]
+    fn synthetic_table_covers_census() {
+        use crate::model::ModelConfig;
+        let cfg = ModelConfig::default();
+        let table = SiteTable::synthetic(&cfg, 7);
+        for site in cfg.matmul_site_names() {
+            assert!(table.sites.contains_key(&site), "missing {site}");
+            if cfg.weight_for_site(&site).is_some() {
+                assert!(table.weight_scales.contains_key(&site), "{site}");
+            } else {
+                assert!(table.sites.contains_key(&format!("{site}.b")), "{site}.b");
+            }
+        }
+        // ffn.y sites are sparse-classed; projections are gaussian
+        assert_eq!(table.sites["enc.0.ffn.y"].class, TensorClass::Sparse);
+        assert_eq!(table.sites["enc.0.attn.q"].class, TensorClass::Gaussian);
+        // deterministic across invocations
+        let again = SiteTable::synthetic(&cfg, 7);
+        assert_eq!(
+            table.sites["enc.0.attn.q"].thr_symmetric,
+            again.sites["enc.0.attn.q"].thr_symmetric
+        );
     }
 
     #[test]

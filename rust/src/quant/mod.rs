@@ -7,17 +7,22 @@
 //! * [`classify`]  — the Fig 2 sparse/narrow/Gaussian tensor classifier;
 //! * [`calibrate`] — the calibration driver producing per-site
 //!   thresholds in the paper's four modes (naive / symmetric /
-//!   independent / conjugate) and loading `artifacts/calibration.json`.
+//!   independent / conjugate) and loading `artifacts/calibration.json`;
+//! * [`recipe`]    — the per-site quantization [`recipe::Recipe`]: the
+//!   ordered, serializable, census-validated decision set that is the
+//!   single typed interchange between calibration and execution.
 
 pub mod calibrate;
 pub mod classify;
 pub mod histogram;
 pub mod kl;
+pub mod recipe;
 pub mod scheme;
 
 pub use calibrate::{CalibrationMode, SiteCalibration, SiteTable};
 pub use classify::TensorClass;
 pub use histogram::Histogram;
+pub use recipe::{Decision, Recipe, RecipeBuilder, RecipeSite};
 pub use scheme::QuantParams;
 
 /// Histogram resolution (mirrors python common.HIST_BINS).

@@ -1,0 +1,813 @@
+//! `Recipe` — the first-class, per-site quantization artifact.
+//!
+//! The paper's core move is *opportunistic* quantization: each of the
+//! 97 MatMul sites independently runs INT8 or falls back to FP32 (§4.2
+//! keeps 12 sparse sites in FP32).  A [`Recipe`] makes that per-site
+//! decision set the single typed interchange between calibration and
+//! execution:
+//!
+//! ```text
+//! calibration.json ──> SiteTable ──┐
+//!                                  ├─ RecipeBuilder ──> Recipe ──> recipe.json
+//!        default mode + selectors ─┘                      │
+//!                                                         v
+//!                                  CompiledPlan::build(cfg, weights, &recipe)
+//! ```
+//!
+//! * a recipe is an **ordered** list of per-site decisions in census
+//!   order — INT8 with explicit [`QuantParams`] (optionally tagged with
+//!   the [`CalibrationMode`] that derived them) or FP32 fallback;
+//! * it is **serializable** (`recipe.json`): save, diff, sweep and
+//!   serve the exact same artifact;
+//! * it is **validated** against the model's [`SiteSet`] census —
+//!   unknown sites, missing sites and selectors matching zero sites
+//!   are hard errors at build time, never silent runtime drift
+//!   (reusing the graph-census cross-check introduced with
+//!   [`crate::model::plan`]);
+//! * [`RecipeBuilder`] derives one from a [`SiteTable`]: a global
+//!   default mode, glob-style per-site overrides
+//!   (`force_fp32("dec.*.qk")`, `with_mode("enc.0.ffn.*", m)`) applied
+//!   in insertion order with last-match-wins, and a `quantize_sparse`
+//!   escape hatch reproducing the paper's "naive on everything"
+//!   experiment.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use super::calibrate::{CalibrationMode, SiteQuant, SiteTable};
+use super::scheme::QuantParams;
+use crate::model::plan::SiteSet;
+use crate::util::json::{obj, Json};
+
+/// The per-site decision: run this MatMul in INT8 or keep it FP32.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Decision {
+    /// FP32 fallback (the paper's choice for sparse-classed sites).
+    Fp32,
+    /// INT8 dispatch with explicit params.
+    Int8 {
+        quant: SiteQuant,
+        /// Provenance: the calibration mode these params were derived
+        /// from (`None` for explicitly supplied params).  Carried so
+        /// `recipe diff` can report mode changes, not just raw scales.
+        mode: Option<CalibrationMode>,
+    },
+}
+
+impl Decision {
+    /// The engine-facing dispatch info (`None` = FP32).
+    pub fn quant(&self) -> Option<SiteQuant> {
+        match self {
+            Decision::Fp32 => None,
+            Decision::Int8 { quant, .. } => Some(quant.clone()),
+        }
+    }
+
+    pub fn is_int8(&self) -> bool {
+        matches!(self, Decision::Int8 { .. })
+    }
+}
+
+impl fmt::Display for Decision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Decision::Fp32 => write!(f, "fp32"),
+            Decision::Int8 { quant, mode } => write!(
+                f,
+                "int8[{}] a={}@{} b={}",
+                mode.map(|m| m.as_str()).unwrap_or("explicit"),
+                quant.a.scale,
+                quant.a.zero,
+                quant.b_scale,
+            ),
+        }
+    }
+}
+
+/// One row of a recipe: a MatMul site and its decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecipeSite {
+    pub site: String,
+    pub decision: Decision,
+}
+
+/// An ordered, serializable set of per-site quantization decisions —
+/// the typed interchange between calibration and execution (see module
+/// docs).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Recipe {
+    /// Human-chosen identity; may be empty (then [`Recipe::id`] falls
+    /// back to the content hash).
+    pub name: String,
+    sites: Vec<RecipeSite>,
+}
+
+impl Recipe {
+    /// Build from explicit per-site decisions (tests and programmatic
+    /// construction; validation happens against a [`SiteSet`] at
+    /// compile time).
+    pub fn from_sites(name: &str, sites: Vec<RecipeSite>) -> Recipe {
+        Recipe {
+            name: name.to_string(),
+            sites,
+        }
+    }
+
+    /// The all-FP32 recipe for a census (no calibration data needed).
+    pub fn fp32(sites: &SiteSet) -> Recipe {
+        Recipe {
+            name: "fp32".to_string(),
+            sites: sites
+                .iter()
+                .map(|(_, n)| RecipeSite {
+                    site: n.to_string(),
+                    decision: Decision::Fp32,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sites.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty()
+    }
+
+    /// Sites in recipe (= census) order.
+    pub fn iter(&self) -> impl Iterator<Item = &RecipeSite> + '_ {
+        self.sites.iter()
+    }
+
+    /// Decision for a site name (build-time lookup; linear scan).
+    pub fn decision(&self, site: &str) -> Option<&Decision> {
+        self.sites
+            .iter()
+            .find(|rs| rs.site == site)
+            .map(|rs| &rs.decision)
+    }
+
+    pub fn int8_site_count(&self) -> usize {
+        self.sites.iter().filter(|rs| rs.decision.is_int8()).count()
+    }
+
+    /// Validate against the model's site census: every recipe site must
+    /// exist in the census, no duplicates, and every census site must
+    /// have a decision.  All three are hard errors — a recipe that
+    /// disagrees with the model never reaches the engine.
+    pub fn validate(&self, sites: &SiteSet) -> anyhow::Result<()> {
+        let mut seen = std::collections::BTreeSet::new();
+        for rs in &self.sites {
+            anyhow::ensure!(
+                sites.id(&rs.site).is_some(),
+                "recipe '{}': unknown MatMul site '{}' (not in the model's {}-site census)",
+                self.id(),
+                rs.site,
+                sites.len()
+            );
+            anyhow::ensure!(
+                seen.insert(rs.site.as_str()),
+                "recipe '{}': duplicate decision for site '{}'",
+                self.id(),
+                rs.site
+            );
+        }
+        for (_, name) in sites.iter() {
+            anyhow::ensure!(
+                seen.contains(name),
+                "recipe '{}': no decision for census site '{}'",
+                self.id(),
+                name
+            );
+        }
+        Ok(())
+    }
+
+    /// FNV-1a hash of the serialized decisions (name excluded, so
+    /// renaming a recipe does not change its content identity).
+    pub fn content_hash(&self) -> u64 {
+        crate::util::fnv1a(self.sites_json().to_string().bytes())
+    }
+
+    /// Recipe identity for labels and metrics rows: the name, or a
+    /// content-hash tag for anonymous recipes.
+    pub fn id(&self) -> String {
+        if self.name.is_empty() {
+            let h = self.content_hash();
+            format!("recipe-{:08x}", (h ^ (h >> 32)) as u32)
+        } else {
+            self.name.clone()
+        }
+    }
+
+    // ----------------------------------------------------------------
+    // serialization (recipe.json)
+    // ----------------------------------------------------------------
+
+    fn sites_json(&self) -> Json {
+        Json::Arr(
+            self.sites
+                .iter()
+                .map(|rs| {
+                    let mut pairs = vec![
+                        ("site", Json::from(rs.site.as_str())),
+                        (
+                            "precision",
+                            Json::from(if rs.decision.is_int8() { "int8" } else { "fp32" }),
+                        ),
+                    ];
+                    if let Decision::Int8 { quant, mode } = &rs.decision {
+                        if let Some(m) = mode {
+                            pairs.push(("mode", Json::from(m.as_str())));
+                        }
+                        pairs.push(("a_scale", Json::Num(quant.a.scale as f64)));
+                        pairs.push(("a_zero", Json::Num(quant.a.zero as f64)));
+                        pairs.push(("b_scale", Json::Num(quant.b_scale as f64)));
+                    }
+                    obj(&pairs)
+                })
+                .collect(),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(&[
+            ("version", Json::Num(1.0)),
+            ("name", Json::from(self.name.as_str())),
+            ("sites", self.sites_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Recipe> {
+        if let Some(v) = j.get("version").and_then(Json::as_usize) {
+            anyhow::ensure!(v == 1, "recipe.json: unsupported version {v}");
+        }
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        let sites_j = j
+            .get("sites")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("recipe.json: missing 'sites' array"))?;
+        let mut sites = Vec::with_capacity(sites_j.len());
+        for (i, sj) in sites_j.iter().enumerate() {
+            let site = sj
+                .get("site")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("recipe.json: sites[{i}] missing 'site'"))?
+                .to_string();
+            let precision = sj
+                .get("precision")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("recipe.json: site '{site}' missing 'precision'"))?;
+            let decision = match precision {
+                "fp32" => Decision::Fp32,
+                "int8" => {
+                    let f = |k: &str| -> anyhow::Result<f64> {
+                        sj.get(k).and_then(Json::as_f64).ok_or_else(|| {
+                            anyhow::anyhow!("recipe.json: int8 site '{site}' missing '{k}'")
+                        })
+                    };
+                    let mode = match sj.get("mode").and_then(Json::as_str) {
+                        None => None,
+                        Some(s) => Some(CalibrationMode::from_str(s).ok_or_else(|| {
+                            anyhow::anyhow!("recipe.json: site '{site}' has unknown mode '{s}'")
+                        })?),
+                    };
+                    Decision::Int8 {
+                        quant: SiteQuant {
+                            a: QuantParams {
+                                scale: f("a_scale")? as f32,
+                                zero: f("a_zero")? as i32,
+                            },
+                            b_scale: f("b_scale")? as f32,
+                        },
+                        mode,
+                    }
+                }
+                other => anyhow::bail!(
+                    "recipe.json: site '{site}' has unknown precision '{other}' \
+                     (expected 'int8' or 'fp32')"
+                ),
+            };
+            sites.push(RecipeSite { site, decision });
+        }
+        Ok(Recipe { name, sites })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Recipe> {
+        let j = Json::parse_file(path)
+            .map_err(|e| anyhow::anyhow!("recipe {}: {e}", path.display()))?;
+        Recipe::from_json(&j).map_err(|e| e.context(format!("recipe {}", path.display())))
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
+    }
+
+    // ----------------------------------------------------------------
+    // diff
+    // ----------------------------------------------------------------
+
+    /// Sites whose decision differs between two recipes, in census
+    /// order.  `left`/`right` are `None` where one recipe has no entry
+    /// for the site at all (census mismatch).
+    pub fn diff(&self, other: &Recipe) -> Vec<RecipeDiff> {
+        let mut out = Vec::new();
+        for rs in &self.sites {
+            match other.decision(&rs.site) {
+                Some(d) if *d == rs.decision => {}
+                Some(d) => out.push(RecipeDiff {
+                    site: rs.site.clone(),
+                    left: Some(rs.decision.to_string()),
+                    right: Some(d.to_string()),
+                }),
+                None => out.push(RecipeDiff {
+                    site: rs.site.clone(),
+                    left: Some(rs.decision.to_string()),
+                    right: None,
+                }),
+            }
+        }
+        for rs in &other.sites {
+            if self.decision(&rs.site).is_none() {
+                out.push(RecipeDiff {
+                    site: rs.site.clone(),
+                    left: None,
+                    right: Some(rs.decision.to_string()),
+                });
+            }
+        }
+        out
+    }
+}
+
+/// One differing site between two recipes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecipeDiff {
+    pub site: String,
+    /// Decision summary on the left recipe (`None` = site absent).
+    pub left: Option<String>,
+    /// Decision summary on the right recipe (`None` = site absent).
+    pub right: Option<String>,
+}
+
+// --------------------------------------------------------------------
+// glob selectors
+// --------------------------------------------------------------------
+
+/// Glob match for site selectors: `*` matches any (possibly empty) run
+/// of characters, everything else matches literally.  `dec.*.qk`
+/// matches every decoder qk site; a bare site name matches only itself.
+pub fn glob_match(pattern: &str, name: &str) -> bool {
+    let (p, s) = (pattern.as_bytes(), name.as_bytes());
+    let (mut pi, mut si) = (0usize, 0usize);
+    let mut star: Option<(usize, usize)> = None; // (pattern idx after '*', name idx)
+    while si < s.len() {
+        if pi < p.len() && p[pi] == s[si] {
+            pi += 1;
+            si += 1;
+        } else if pi < p.len() && p[pi] == b'*' {
+            star = Some((pi + 1, si));
+            pi += 1;
+        } else if let Some((sp, sm)) = star {
+            // backtrack: let the last '*' swallow one more character
+            pi = sp;
+            si = sm + 1;
+            star = Some((sp, sm + 1));
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == b'*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
+// --------------------------------------------------------------------
+// builder
+// --------------------------------------------------------------------
+
+enum Override {
+    Fp32,
+    Mode(CalibrationMode),
+    Params(SiteQuant),
+}
+
+/// Derives a [`Recipe`] from a calibration table: a global default
+/// mode, then glob-selector overrides applied in insertion order
+/// (last match wins).  Every selector must match at least one census
+/// site — a typo'd selector is a hard error, not a silent no-op.
+pub struct RecipeBuilder<'a> {
+    table: &'a SiteTable,
+    sites: &'a SiteSet,
+    /// `None` until [`RecipeBuilder::name`] is called; the built name
+    /// then defaults to `int8-<mode>` for a plain default derivation
+    /// and stays empty (content-hash identity) once overrides or
+    /// `quantize_sparse` customize the content — two different recipes
+    /// must never share a label by default.
+    name: Option<String>,
+    default_mode: CalibrationMode,
+    quantize_sparse: bool,
+    overrides: Vec<(String, Override)>,
+}
+
+impl<'a> RecipeBuilder<'a> {
+    pub fn new(table: &'a SiteTable, sites: &'a SiteSet, default_mode: CalibrationMode) -> Self {
+        RecipeBuilder {
+            table,
+            sites,
+            name: None,
+            default_mode,
+            quantize_sparse: false,
+            overrides: Vec::new(),
+        }
+    }
+
+    pub fn name(mut self, name: &str) -> Self {
+        self.name = Some(name.to_string());
+        self
+    }
+
+    /// Escape hatch reproducing the paper's "naive on everything"
+    /// experiment: quantize sparse-classed sites too instead of the
+    /// §4.2 FP32 fallback.
+    pub fn quantize_sparse(mut self, yes: bool) -> Self {
+        self.quantize_sparse = yes;
+        self
+    }
+
+    /// Force every site matching `selector` to FP32.
+    pub fn force_fp32(mut self, selector: &str) -> Self {
+        self.overrides.push((selector.to_string(), Override::Fp32));
+        self
+    }
+
+    /// Re-derive every site matching `selector` under `mode` instead of
+    /// the default.  A per-site mode override forces quantization even
+    /// for sparse-classed sites (that is the point of overriding); if
+    /// the calibration table has no data to derive from, building
+    /// fails.
+    pub fn with_mode(mut self, selector: &str, mode: CalibrationMode) -> Self {
+        self.overrides
+            .push((selector.to_string(), Override::Mode(mode)));
+        self
+    }
+
+    /// Explicit-params escape hatch for every site matching `selector`.
+    pub fn with_params(mut self, selector: &str, quant: SiteQuant) -> Self {
+        self.overrides
+            .push((selector.to_string(), Override::Params(quant)));
+        self
+    }
+
+    pub fn build(self) -> anyhow::Result<Recipe> {
+        for (sel, _) in &self.overrides {
+            anyhow::ensure!(
+                self.sites.iter().any(|(_, n)| glob_match(sel, n)),
+                "recipe selector '{sel}' matches no MatMul site in the {}-site census",
+                self.sites.len()
+            );
+        }
+        let mut out = Vec::with_capacity(self.sites.len());
+        for (_, name) in self.sites.iter() {
+            let mut decision =
+                match derive_site(self.table, name, self.default_mode, self.quantize_sparse) {
+                    Some(q) => Decision::Int8 {
+                        quant: q,
+                        mode: Some(self.default_mode),
+                    },
+                    None => Decision::Fp32,
+                };
+            for (sel, ov) in &self.overrides {
+                if !glob_match(sel, name) {
+                    continue;
+                }
+                decision = match ov {
+                    Override::Fp32 => Decision::Fp32,
+                    Override::Mode(m) => {
+                        let q = derive_site(self.table, name, *m, true).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "selector '{sel}': no calibration data to derive {} params \
+                                 for site '{name}'",
+                                m.as_str()
+                            )
+                        })?;
+                        Decision::Int8 {
+                            quant: q,
+                            mode: Some(*m),
+                        }
+                    }
+                    Override::Params(q) => Decision::Int8 {
+                        quant: q.clone(),
+                        mode: None,
+                    },
+                };
+            }
+            out.push(RecipeSite {
+                site: name.to_string(),
+                decision,
+            });
+        }
+        let name = match self.name {
+            Some(name) => name,
+            // unnamed + uncustomized: the well-known default identity;
+            // unnamed + customized: anonymous, so Recipe::id falls back
+            // to the content hash instead of impersonating the default
+            None if self.overrides.is_empty() && !self.quantize_sparse => {
+                format!("int8-{}", self.default_mode.as_str())
+            }
+            None => String::new(),
+        };
+        let recipe = Recipe { name, sites: out };
+        recipe.validate(self.sites)?;
+        Ok(recipe)
+    }
+}
+
+/// Resolve one site's INT8 params under a mode, or `None` for the FP32
+/// fallback — the same policy `SiteTable::plan` applied before the
+/// recipe redesign: skip sparse-classed A or B tensors (unless
+/// `include_sparse`), B side always symmetric (Independent-mode
+/// asymmetry applies to A only), FP32 when no B-scale source exists.
+fn derive_site(
+    table: &SiteTable,
+    name: &str,
+    mode: CalibrationMode,
+    include_sparse: bool,
+) -> Option<SiteQuant> {
+    let cal = table.sites.get(name)?;
+    if !include_sparse && !cal.class.quantizable() {
+        return None;
+    }
+    let a = cal.params(mode);
+    let b_scale = if let Some(ws) = table.weight_scales.get(name) {
+        *ws
+    } else if let Some(bcal) = table.sites.get(&format!("{name}.b")) {
+        if !include_sparse && !bcal.class.quantizable() {
+            return None;
+        }
+        // B side uses a symmetric scale (u8 zero point fixed at 128)
+        let m = if mode == CalibrationMode::Independent {
+            CalibrationMode::Conjugate
+        } else {
+            mode
+        };
+        bcal.params(m).scale
+    } else {
+        return None;
+    };
+    Some(SiteQuant { a, b_scale })
+}
+
+/// Build-time view used by [`crate::model::plan::CompiledPlan`]: the
+/// recipe's decisions as an engine-facing lookup (crate-private — the
+/// public interchange type is [`Recipe`] itself).
+pub(crate) fn quant_lookup(recipe: &Recipe) -> BTreeMap<&str, Option<SiteQuant>> {
+    recipe
+        .iter()
+        .map(|rs| (rs.site.as_str(), rs.decision.quant()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_cfg;
+    use crate::model::ModelConfig;
+
+    fn census() -> SiteSet {
+        SiteSet::new(&tiny_cfg())
+    }
+
+    fn table() -> SiteTable {
+        SiteTable::synthetic(&tiny_cfg(), 0xC0DE)
+    }
+
+    #[test]
+    fn glob_semantics() {
+        assert!(glob_match("*", "enc.0.attn.q"));
+        assert!(glob_match("enc.*", "enc.0.attn.q"));
+        assert!(glob_match("*.qk", "dec.0.self.qk"));
+        assert!(glob_match("dec.*.self.*", "dec.0.self.pv"));
+        assert!(glob_match("enc.0.ffn.y", "enc.0.ffn.y"));
+        assert!(!glob_match("enc.*", "dec.0.self.qk"));
+        assert!(!glob_match("*.qk", "dec.0.self.pv"));
+        assert!(!glob_match("enc.0.ffn.y", "enc.0.ffn.h"));
+        assert!(glob_match("*ffn*", "dec.0.ffn.h"));
+        assert!(!glob_match("", "x"));
+        assert!(glob_match("", ""));
+    }
+
+    #[test]
+    fn default_recipe_covers_census_and_skips_sparse() {
+        let t = table();
+        let sites = census();
+        let r = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .build()
+            .unwrap();
+        assert_eq!(r.len(), sites.len());
+        r.validate(&sites).unwrap();
+        assert_eq!(r.name, "int8-symmetric");
+        // synthetic ffn.y sites are sparse-classed -> FP32 fallback
+        assert_eq!(r.decision("enc.0.ffn.y"), Some(&Decision::Fp32));
+        assert!(r.decision("enc.0.attn.q").unwrap().is_int8());
+        // the escape hatch quantizes them anyway
+        let all = RecipeBuilder::new(&t, &sites, CalibrationMode::Naive)
+            .quantize_sparse(true)
+            .build()
+            .unwrap();
+        assert_eq!(all.int8_site_count(), sites.len());
+    }
+
+    #[test]
+    fn selector_precedence_is_last_match_wins() {
+        let t = table();
+        let sites = census();
+        let r = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .with_mode("dec.*", CalibrationMode::Conjugate)
+            .force_fp32("dec.0.self.qk")
+            .build()
+            .unwrap();
+        assert_eq!(r.decision("dec.0.self.qk"), Some(&Decision::Fp32));
+        match r.decision("dec.0.self.q").unwrap() {
+            Decision::Int8 { mode, .. } => assert_eq!(*mode, Some(CalibrationMode::Conjugate)),
+            d => panic!("expected int8, got {d}"),
+        }
+        // reversed order: the broad selector reclaims the site
+        let r2 = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .force_fp32("dec.0.self.qk")
+            .with_mode("dec.*", CalibrationMode::Conjugate)
+            .build()
+            .unwrap();
+        assert!(r2.decision("dec.0.self.qk").unwrap().is_int8());
+    }
+
+    #[test]
+    fn zero_match_selector_is_a_hard_error() {
+        let t = table();
+        let sites = census();
+        let err = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .force_fp32("enc.9.attn.*")
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("matches no MatMul site"), "{err}");
+    }
+
+    #[test]
+    fn validation_rejects_unknown_missing_and_duplicate_sites() {
+        let sites = census();
+        let mut rs: Vec<RecipeSite> = sites
+            .iter()
+            .map(|(_, n)| RecipeSite {
+                site: n.to_string(),
+                decision: Decision::Fp32,
+            })
+            .collect();
+        // unknown site
+        let mut bad = rs.clone();
+        bad[0].site = "enc.7.attn.q".to_string();
+        let err = Recipe::from_sites("x", bad).validate(&sites).unwrap_err();
+        assert!(err.to_string().contains("unknown MatMul site"), "{err}");
+        // missing site
+        let mut short = rs.clone();
+        short.pop();
+        let err = Recipe::from_sites("x", short).validate(&sites).unwrap_err();
+        assert!(err.to_string().contains("no decision for census site"), "{err}");
+        // duplicate site
+        let dup = rs[0].clone();
+        rs.push(dup);
+        let err = Recipe::from_sites("x", rs).validate(&sites).unwrap_err();
+        assert!(err.to_string().contains("duplicate decision"), "{err}");
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let t = table();
+        let sites = census();
+        for mode in CalibrationMode::all() {
+            let r = RecipeBuilder::new(&t, &sites, mode)
+                .force_fp32("dec.0.self.qk")
+                .build()
+                .unwrap();
+            let text = r.to_json().to_string();
+            let back = Recipe::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(r, back, "round trip drift in mode {}", mode.as_str());
+            assert_eq!(r.content_hash(), back.content_hash());
+        }
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let t = table();
+        let sites = census();
+        let r = RecipeBuilder::new(&t, &sites, CalibrationMode::Independent)
+            .name("indep-test")
+            .build()
+            .unwrap();
+        let dir = std::env::temp_dir().join("quantnmt_test_recipe");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("recipe.json");
+        r.save(&p).unwrap();
+        let back = Recipe::load(&p).unwrap();
+        assert_eq!(r, back);
+        back.validate(&sites).unwrap();
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_entries() {
+        let no_sites = Json::parse(r#"{"version":1,"name":"x"}"#).unwrap();
+        assert!(Recipe::from_json(&no_sites).is_err());
+        let bad_precision = Json::parse(
+            r#"{"version":1,"name":"x","sites":[{"site":"logits","precision":"int4"}]}"#,
+        )
+        .unwrap();
+        assert!(Recipe::from_json(&bad_precision).is_err());
+        let missing_scale = Json::parse(
+            r#"{"version":1,"name":"x","sites":[{"site":"logits","precision":"int8","a_zero":0,"b_scale":0.01}]}"#,
+        )
+        .unwrap();
+        assert!(Recipe::from_json(&missing_scale).is_err());
+    }
+
+    #[test]
+    fn identity_is_name_or_content_hash() {
+        let t = table();
+        let sites = census();
+        let a = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .build()
+            .unwrap();
+        let mut anon = a.clone();
+        anon.name = String::new();
+        assert_eq!(a.id(), "int8-symmetric");
+        assert!(anon.id().starts_with("recipe-"), "{}", anon.id());
+        // renaming does not change content identity
+        assert_eq!(a.content_hash(), anon.content_hash());
+        // a one-site precision change does
+        let b = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .force_fp32("enc.0.attn.q")
+            .build()
+            .unwrap();
+        assert_ne!(a.content_hash(), b.content_hash());
+        // customized content without an explicit name must NOT
+        // impersonate the default identity: it goes anonymous
+        assert!(b.name.is_empty());
+        assert!(b.id().starts_with("recipe-"), "{}", b.id());
+        let c = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .quantize_sparse(true)
+            .build()
+            .unwrap();
+        assert!(c.id().starts_with("recipe-"), "{}", c.id());
+    }
+
+    #[test]
+    fn diff_reports_changed_sites_only() {
+        let t = table();
+        let sites = census();
+        let a = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .build()
+            .unwrap();
+        assert!(a.diff(&a).is_empty());
+        let b = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .force_fp32("dec.0.cross.pv")
+            .build()
+            .unwrap();
+        let d = a.diff(&b);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].site, "dec.0.cross.pv");
+        assert!(d[0].left.as_deref().unwrap().starts_with("int8"));
+        assert_eq!(d[0].right.as_deref(), Some("fp32"));
+        // census mismatch shows up as one-sided rows
+        let bigger = SiteSet::new(&ModelConfig {
+            n_enc_layers: 2,
+            ..tiny_cfg()
+        });
+        let t2 = SiteTable::synthetic(
+            &ModelConfig {
+                n_enc_layers: 2,
+                ..tiny_cfg()
+            },
+            1,
+        );
+        let c = RecipeBuilder::new(&t2, &bigger, CalibrationMode::Symmetric)
+            .build()
+            .unwrap();
+        let d2 = a.diff(&c);
+        assert!(d2.iter().any(|r| r.left.is_none()), "{d2:?}");
+    }
+
+    #[test]
+    fn fp32_recipe_is_all_fallback() {
+        let sites = census();
+        let r = Recipe::fp32(&sites);
+        r.validate(&sites).unwrap();
+        assert_eq!(r.int8_site_count(), 0);
+        assert_eq!(r.id(), "fp32");
+    }
+}

@@ -15,3 +15,14 @@ pub mod rng;
 pub fn now() -> std::time::Instant {
     std::time::Instant::now()
 }
+
+/// FNV-1a 64-bit hash — the one stable, dependency-free hash shared by
+/// recipe content identity and synthetic-calibration seeding.
+pub fn fnv1a<I: IntoIterator<Item = u8>>(bytes: I) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}

@@ -19,9 +19,11 @@
 use std::collections::BTreeMap;
 
 use quantnmt::model::beam::{translate_beam, BeamConfig};
-use quantnmt::model::testutil::{loose_plan, random_weights, tiny_cfg};
+use quantnmt::model::plan::SiteSet;
+use quantnmt::model::testutil::{random_weights, tiny_cfg};
 use quantnmt::model::{Engine, ModelConfig};
-use quantnmt::quant::calibrate::SiteQuant;
+use quantnmt::quant::calibrate::{CalibrationMode, SiteQuant, SiteTable};
+use quantnmt::quant::recipe::{Decision, Recipe, RecipeBuilder, RecipeSite};
 use quantnmt::quant::QuantParams;
 
 mod reference {
@@ -925,6 +927,45 @@ mod reference {
 
 type Plan = BTreeMap<String, Option<SiteQuant>>;
 
+/// The seed engine's quantize-everything plan (the interchange format
+/// the reference engine still consumes).
+fn loose_plan(cfg: &ModelConfig) -> Plan {
+    cfg.matmul_site_names()
+        .into_iter()
+        .map(|site| {
+            (
+                site,
+                Some(SiteQuant {
+                    a: QuantParams::symmetric(8.0),
+                    b_scale: 1.0 / 127.0,
+                }),
+            )
+        })
+        .collect()
+}
+
+/// Express a seed-format plan as a census-ordered [`Recipe`] for the
+/// redesigned engine (missing key = FP32, exactly as the seed engine
+/// treated it).
+fn to_recipe(cfg: &ModelConfig, plan: &Plan) -> Recipe {
+    Recipe::from_sites(
+        "golden",
+        cfg.matmul_site_names()
+            .into_iter()
+            .map(|site| {
+                let decision = match plan.get(&site).cloned().flatten() {
+                    Some(q) => Decision::Int8 {
+                        quant: q,
+                        mode: None,
+                    },
+                    None => Decision::Fp32,
+                };
+                RecipeSite { site, decision }
+            })
+            .collect(),
+    )
+}
+
 fn affine_plan(cfg: &ModelConfig) -> Plan {
     cfg.matmul_site_names()
         .into_iter()
@@ -1006,8 +1047,9 @@ fn encoder_memory_is_bit_identical() {
             let w = random_weights(&cfg, seed);
             let src = sources(&cfg);
             for (name, plan) in plan_variants(&cfg) {
-                let mut r = reference::RefEngine::with_plan(cfg.clone(), w.clone(), plan.clone());
-                let mut e = Engine::with_plan(cfg.clone(), w.clone(), plan).unwrap();
+                let recipe = to_recipe(&cfg, &plan);
+                let mut r = reference::RefEngine::with_plan(cfg.clone(), w.clone(), plan);
+                let mut e = Engine::with_recipe(cfg.clone(), w.clone(), &recipe).unwrap();
                 let (mr, lr, sr) = r.encode(&src);
                 let (me, le, se) = e.encode(&src);
                 assert_eq!(lr, le, "{name} seed {seed}: src lengths");
@@ -1024,8 +1066,9 @@ fn decode_logits_are_bit_identical() {
         let w = random_weights(&cfg, 21);
         let src = sources(&cfg);
         for (name, plan) in plan_variants(&cfg) {
-            let mut r = reference::RefEngine::with_plan(cfg.clone(), w.clone(), plan.clone());
-            let mut e = Engine::with_plan(cfg.clone(), w.clone(), plan).unwrap();
+            let recipe = to_recipe(&cfg, &plan);
+            let mut r = reference::RefEngine::with_plan(cfg.clone(), w.clone(), plan);
+            let mut e = Engine::with_recipe(cfg.clone(), w.clone(), &recipe).unwrap();
             let (mr, lr, sr) = r.encode(&src);
             let (me, _, _) = e.encode(&src);
             assert_eq!(mr, me, "{name}: memory");
@@ -1054,8 +1097,9 @@ fn greedy_translations_are_identical() {
             let w = random_weights(&cfg, seed);
             let src = sources(&cfg);
             for (name, plan) in plan_variants(&cfg) {
-                let mut r = reference::RefEngine::with_plan(cfg.clone(), w.clone(), plan.clone());
-                let mut e = Engine::with_plan(cfg.clone(), w.clone(), plan).unwrap();
+                let recipe = to_recipe(&cfg, &plan);
+                let mut r = reference::RefEngine::with_plan(cfg.clone(), w.clone(), plan);
+                let mut e = Engine::with_recipe(cfg.clone(), w.clone(), &recipe).unwrap();
                 assert_eq!(
                     r.translate_greedy(&src, 10),
                     e.translate_greedy(&src, 10),
@@ -1072,8 +1116,9 @@ fn beam_translations_are_identical() {
     let w = random_weights(&cfg, 41);
     let src = sources(&cfg);
     for (name, plan) in plan_variants(&cfg) {
-        let mut r = reference::RefEngine::with_plan(cfg.clone(), w.clone(), plan.clone());
-        let mut e = Engine::with_plan(cfg.clone(), w.clone(), plan).unwrap();
+        let recipe = to_recipe(&cfg, &plan);
+        let mut r = reference::RefEngine::with_plan(cfg.clone(), w.clone(), plan);
+        let mut e = Engine::with_recipe(cfg.clone(), w.clone(), &recipe).unwrap();
         let want = reference::translate_beam(&mut r, &src, 4, 10, 0.6);
         let got = translate_beam(
             &mut e,
@@ -1086,4 +1131,149 @@ fn beam_translations_are_identical() {
         );
         assert_eq!(want, got.translations, "{name}: beam tokens drifted");
     }
+}
+
+// ---------------------------------------------------------------------
+// recipe redesign parity: derived recipes vs the pre-redesign
+// `SiteTable::plan` resolution
+// ---------------------------------------------------------------------
+
+/// The pre-redesign `SiteTable::plan` resolution ported verbatim
+/// (commit 04b903a's `quant::calibrate`): mode thresholds to A-side
+/// params, weight scales / dynamic `.b` entries to B-side scales, the
+/// §4.2 sparse-class FP32 fallback, and the Independent->Conjugate
+/// B-side mapping.  Recipes derived by `RecipeBuilder` must resolve to
+/// bit-identical dispatch.
+fn legacy_plan(table: &SiteTable, mode: CalibrationMode, quantize_sparse: bool) -> Plan {
+    let mut out = BTreeMap::new();
+    for (name, cal) in &table.sites {
+        if name.ends_with(".b") {
+            continue; // B-side entries are folded into their site below
+        }
+        if !quantize_sparse && !cal.class.quantizable() {
+            out.insert(name.clone(), None);
+            continue;
+        }
+        let a = cal.params(mode);
+        let b_scale = if let Some(ws) = table.weight_scales.get(name) {
+            *ws
+        } else if let Some(bcal) = table.sites.get(&format!("{name}.b")) {
+            if !quantize_sparse && !bcal.class.quantizable() {
+                out.insert(name.clone(), None);
+                continue;
+            }
+            let m = if mode == CalibrationMode::Independent {
+                CalibrationMode::Conjugate
+            } else {
+                mode
+            };
+            bcal.params(m).scale
+        } else {
+            out.insert(name.clone(), None);
+            continue;
+        };
+        out.insert(name.clone(), Some(SiteQuant { a, b_scale }));
+    }
+    out
+}
+
+#[test]
+fn derived_recipes_match_legacy_site_table_plan() {
+    // for each of the paper's four calibration modes, the default
+    // recipe RecipeBuilder derives must compile to bit-identical
+    // encoder memories, logits, greedy and beam outputs vs the seed
+    // engine executing the pre-redesign `SiteTable::plan` resolution
+    for cfg in [tiny_cfg(), cfg2()] {
+        let table = SiteTable::synthetic(&cfg, 51);
+        let w = random_weights(&cfg, 52);
+        let src = sources(&cfg);
+        let sites = SiteSet::new(&cfg);
+        for (qs, mode) in [
+            (false, CalibrationMode::Naive),
+            (false, CalibrationMode::Symmetric),
+            (false, CalibrationMode::Independent),
+            (false, CalibrationMode::Conjugate),
+            // the quantize_sparse escape hatch must agree too
+            (true, CalibrationMode::Naive),
+        ] {
+            let plan = legacy_plan(&table, mode, qs);
+            let recipe = RecipeBuilder::new(&table, &sites, mode)
+                .quantize_sparse(qs)
+                .build()
+                .unwrap();
+            // decision-level equivalence first (sharper failure output)
+            for (site, q) in &plan {
+                assert_eq!(
+                    recipe.decision(site).unwrap().quant(),
+                    q.clone(),
+                    "{mode:?} qs={qs}: decision drift at {site}"
+                );
+            }
+            let mut r = reference::RefEngine::with_plan(cfg.clone(), w.clone(), plan);
+            let mut e = Engine::with_recipe(cfg.clone(), w.clone(), &recipe).unwrap();
+
+            // encoder memory, bit-identical
+            let (mr, lr, sr) = r.encode(&src);
+            let (me, le, se) = e.encode(&src);
+            assert_eq!((&lr, sr), (&le, se), "{mode:?} qs={qs}: lengths");
+            assert_eq!(mr, me, "{mode:?} qs={qs}: encoder memory drifted");
+
+            // per-step logits, bit-identical
+            let t_max = 6;
+            let mut str_ = r.init_decode(&mr, &lr, sr, t_max);
+            let mut ste = e.init_decode(&me, &lr, sr, t_max);
+            let mut logits_r = Vec::new();
+            let mut logits_e = Vec::new();
+            for pos in 0..t_max {
+                let toks: Vec<u32> = (0..src.len())
+                    .map(|i| 3 + ((i + pos) % (cfg.vocab_size - 3)) as u32)
+                    .collect();
+                r.decode_step(&mut str_, &toks, pos, &mut logits_r);
+                e.decode_step(&mut ste, &toks, pos, &mut logits_e);
+                assert_eq!(logits_r, logits_e, "{mode:?} qs={qs}: logits at {pos}");
+            }
+
+            // greedy + beam token sequences
+            assert_eq!(
+                r.translate_greedy(&src, 10),
+                e.translate_greedy(&src, 10),
+                "{mode:?} qs={qs}: greedy drifted"
+            );
+            let want = reference::translate_beam(&mut r, &src, 4, 10, 0.6);
+            let got = translate_beam(
+                &mut e,
+                &src,
+                BeamConfig {
+                    beam: 4,
+                    max_len: 10,
+                    alpha: 0.6,
+                },
+            );
+            assert_eq!(want, got.translations, "{mode:?} qs={qs}: beam drifted");
+        }
+    }
+}
+
+#[test]
+fn json_round_tripped_recipe_preserves_golden_outputs() {
+    // save -> load -> compile must not perturb a single bit: scales
+    // survive the f32 -> JSON number -> f32 journey exactly
+    let cfg = cfg2();
+    let table = SiteTable::synthetic(&cfg, 61);
+    let w = random_weights(&cfg, 62);
+    let src = sources(&cfg);
+    let sites = SiteSet::new(&cfg);
+    let recipe = RecipeBuilder::new(&table, &sites, CalibrationMode::Independent)
+        .force_fp32("dec.*.self.qk")
+        .build()
+        .unwrap();
+    let dir = std::env::temp_dir().join("quantnmt_test_golden_recipe");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("recipe.json");
+    recipe.save(&path).unwrap();
+    let loaded = Recipe::load(&path).unwrap();
+    assert_eq!(recipe, loaded);
+    let mut a = Engine::with_recipe(cfg.clone(), w.clone(), &recipe).unwrap();
+    let mut b = Engine::with_recipe(cfg.clone(), w.clone(), &loaded).unwrap();
+    assert_eq!(a.translate_greedy(&src, 10), b.translate_greedy(&src, 10));
 }

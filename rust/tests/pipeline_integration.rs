@@ -189,41 +189,25 @@ fn graph_ir_matmul_census_matches_engine_sites() {
 }
 
 #[test]
-fn quantization_plan_census_is_stable() {
-    // resolved plans must cover every site exactly once per mode
-    use quantnmt::quant::calibrate::{CalibrationMode, SiteCalibration, SiteTable};
-    use quantnmt::quant::histogram::Histogram;
-    use quantnmt::util::rng::SplitMix64;
-    let mut table = SiteTable::default();
-    let mut rng = SplitMix64::new(4);
+fn derived_recipe_census_is_stable() {
+    // derived recipes must cover every census site exactly once per
+    // mode, and validate against the model's SiteSet by construction
+    use quantnmt::model::plan::SiteSet;
+    use quantnmt::quant::calibrate::{CalibrationMode, SiteTable};
+    use quantnmt::quant::recipe::RecipeBuilder;
     let cfg = quantnmt::model::ModelConfig::default();
-    for site in cfg.matmul_site_names() {
-        let data: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
-        let mut h = Histogram::new(256);
-        h.observe_range(&data);
-        h.observe_fill(&data);
-        table
-            .sites
-            .insert(site.clone(), SiteCalibration::from_histogram(&site, &h, 64));
-        if cfg.weight_for_site(&site).is_some() {
-            table.weight_scales.insert(site, 0.01);
-        } else {
-            // dynamic sites need a B-side entry
-            let mut hb = Histogram::new(256);
-            hb.observe_range(&data);
-            hb.observe_fill(&data);
-            table.sites.insert(
-                format!("{}.b", cfg.matmul_site_names().last().unwrap()),
-                SiteCalibration::from_histogram("b", &hb, 64),
-            );
-        }
-    }
+    let table = SiteTable::synthetic(&cfg, 4);
+    let sites = SiteSet::new(&cfg);
     for mode in CalibrationMode::all() {
-        let plan = table.plan(mode, false);
-        // every non-.b site appears in the plan
+        let recipe = RecipeBuilder::new(&table, &sites, mode).build().unwrap();
+        assert_eq!(recipe.len(), sites.len(), "{mode:?}");
+        recipe.validate(&sites).unwrap();
         for site in cfg.matmul_site_names() {
-            assert!(plan.contains_key(&site), "{mode:?} missing {site}");
+            assert!(recipe.decision(&site).is_some(), "{mode:?} missing {site}");
         }
+        // the synthetic sparse sites fall back to FP32 (paper §4.2)
+        assert!(recipe.int8_site_count() < sites.len(), "{mode:?}");
+        assert!(recipe.int8_site_count() > 0, "{mode:?}");
     }
 }
 
@@ -231,20 +215,29 @@ fn quantization_plan_census_is_stable() {
 fn service_label_roundtrip_distinctness() {
     use quantnmt::coordinator::{Backend, ServiceConfig};
     use quantnmt::data::sorting::SortOrder;
-    use quantnmt::quant::calibrate::CalibrationMode;
+    use quantnmt::model::plan::SiteSet;
+    use quantnmt::model::testutil::tiny_cfg;
+    use quantnmt::quant::calibrate::{CalibrationMode, SiteTable};
+    use quantnmt::quant::recipe::RecipeBuilder;
     use quantnmt::runtime::RtPrecision;
+    let cfg = tiny_cfg();
+    let table = SiteTable::synthetic(&cfg, 11);
+    let sites = SiteSet::new(&cfg);
+    let recipe_for = |mode: CalibrationMode| {
+        Backend::recipe(RecipeBuilder::new(&table, &sites, mode).build().unwrap())
+    };
     let mut labels = std::collections::HashSet::new();
     for backend in [
         Backend::EngineF32,
-        Backend::EngineInt8(CalibrationMode::Symmetric),
-        Backend::EngineInt8(CalibrationMode::Naive),
+        recipe_for(CalibrationMode::Symmetric),
+        recipe_for(CalibrationMode::Naive),
         Backend::Runtime(RtPrecision::Fp32),
         Backend::Runtime(RtPrecision::Int8),
     ] {
         for sort in [SortOrder::Unsorted, SortOrder::Words, SortOrder::Tokens] {
             for parallel in [false, true] {
                 let cfg = ServiceConfig {
-                    backend,
+                    backend: backend.clone(),
                     sort,
                     parallel,
                     ..Default::default()

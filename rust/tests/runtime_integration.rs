@@ -79,9 +79,8 @@ fn pjrt_int8_matches_engine_int8_symmetric() {
         ..Default::default()
     };
     // both implement the same symmetric-mode quantized graph
-    let (_, a) = svc
-        .run(pairs, &mk(Backend::EngineInt8(CalibrationMode::Symmetric)))
-        .unwrap();
+    let int8 = svc.int8_backend(CalibrationMode::Symmetric).unwrap();
+    let (_, a) = svc.run(pairs, &mk(int8)).unwrap();
     let (_, b) = svc
         .run(pairs, &mk(Backend::Runtime(RtPrecision::Int8)))
         .unwrap();
