@@ -54,9 +54,8 @@ fn main() -> anyhow::Result<()> {
         token_budget: args.get_usize("token-budget", 512),
         max_batch_rows: 64,
         queue_capacity: 1024,
-        max_src_len: None,
-        pin_cores: false,
         max_decode_len: 56,
+        ..Default::default()
     };
 
     match Service::open_default() {

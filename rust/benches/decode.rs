@@ -50,7 +50,8 @@ fn source_batch(cfg: &ModelConfig, slots: usize, len: usize) -> Vec<Vec<u32>> {
         .collect()
 }
 
-/// Best-of-reps per-token decode latency in microseconds.
+/// Best-of-reps per-token decode latency in microseconds (full active
+/// set — the batch-synchronous schedule over the slot pool).
 fn per_token_us(engine: &mut Engine, slots: usize, steps: usize, reps: usize) -> f64 {
     let src = source_batch(&engine.cfg, slots, 16);
     let (memory, src_len, s) = engine.encode(&src);
@@ -58,10 +59,11 @@ fn per_token_us(engine: &mut Engine, slots: usize, steps: usize, reps: usize) ->
     let mut logits = Vec::new();
     let mut best = f64::INFINITY;
     for _ in 0..reps {
-        let mut st = engine.init_decode(&memory, &src_len, s, steps);
+        let mut pool = engine.new_pool(slots, steps, s);
+        let active = engine.admit(&mut pool, &memory, &src_len, s);
         let t0 = Instant::now();
-        for pos in 0..steps {
-            engine.decode_step(&mut st, &tokens, pos, &mut logits);
+        for _pos in 0..steps {
+            engine.pool_step(&mut pool, &active, &tokens, &mut logits);
         }
         best = best.min(t0.elapsed().as_secs_f64() / steps as f64 * 1e6);
     }
@@ -72,20 +74,45 @@ fn per_token_us(engine: &mut Engine, slots: usize, steps: usize, reps: usize) ->
 fn step_counts(engine: &mut Engine, slots: usize, pos: usize) -> (u64, u64, u64) {
     let src = source_batch(&engine.cfg, slots, 16);
     let (memory, src_len, s) = engine.encode(&src);
-    let mut st = engine.init_decode(&memory, &src_len, s, pos + 1);
+    let mut pool = engine.new_pool(slots, pos + 1, s);
+    let active = engine.admit(&mut pool, &memory, &src_len, s);
     let tokens = vec![1u32; slots];
     let mut logits = Vec::new();
-    for p in 0..pos {
-        engine.decode_step(&mut st, &tokens, p, &mut logits);
+    for _p in 0..pos {
+        engine.pool_step(&mut pool, &active, &tokens, &mut logits);
     }
     engine.profiler = Profiler::enabled();
-    engine.decode_step(&mut st, &tokens, pos, &mut logits);
+    engine.pool_step(&mut pool, &active, &tokens, &mut logits);
     let p = std::mem::take(&mut engine.profiler);
     (
         p.count(OpKind::Quantize),
         p.count(OpKind::QuantizedMatMul),
         p.count(OpKind::MatMul),
     )
+}
+
+/// Finished-slot compaction: per-step GEMM rows at the logits site as
+/// the active set shrinks from `slots` live rows down to one — the
+/// dead work the old batch-synchronous greedy loop kept paying.
+fn compaction_rows(engine: &mut Engine, slots: usize) -> Vec<u64> {
+    let src = source_batch(&engine.cfg, slots, 16);
+    let (memory, src_len, s) = engine.encode(&src);
+    let mut pool = engine.new_pool(slots, slots + 1, s);
+    let mut active = engine.admit(&mut pool, &memory, &src_len, s);
+    let mut logits = Vec::new();
+    let site = engine.plan().logits;
+    let mut rows = Vec::new();
+    while !active.is_empty() {
+        let tokens = vec![1u32; active.len()];
+        engine.profiler = Profiler::enabled();
+        engine.pool_step(&mut pool, &active, &tokens, &mut logits);
+        rows.push(engine.profiler.site_rows(site));
+        // retire one slot per step, like a staggered-EOS batch
+        let done = active.pop().unwrap();
+        pool.finish(done);
+    }
+    engine.profiler = Profiler::default();
+    rows
 }
 
 fn main() -> anyhow::Result<()> {
@@ -113,6 +140,18 @@ fn main() -> anyhow::Result<()> {
         let (q, qm, mm) = step_counts(&mut int8, slots, 8);
         println!("{:12} {:>6} {:>14.1} {:>10} {:>10} {:>8}", "int8", slots, us, q, qm, mm);
     }
+
+    // finished-slot compaction: rows per step must track the active
+    // set exactly (slots, slots-1, ..., 1) — the assertion form of the
+    // ISSUE's "GEMM rows per step shrink as slots finish"
+    let mut int8 = Engine::with_recipe(cfg.clone(), w.clone(), &loose_recipe(&cfg))?;
+    let rows = compaction_rows(&mut int8, 8);
+    let expect: Vec<u64> = (1..=8u64).rev().collect();
+    assert_eq!(rows, expect, "compaction must shed finished slots' rows");
+    println!(
+        "\nfinished-slot compaction (8 slots, one finishing per step):\n  \
+         logits GEMM rows per step: {rows:?}  (batch-synchronous decode: [8, 8, 8, 8, 8, 8, 8, 8])"
+    );
 
     // per-site GEMM attribution over a short decode (SiteId-indexed)
     let mut int8 = Engine::with_recipe(cfg.clone(), w.clone(), &loose_recipe(&cfg))?;

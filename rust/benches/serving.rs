@@ -1,4 +1,5 @@
-//! Online-serving offered-load sweep: p50/p99 latency vs Poisson load.
+//! Online-serving offered-load sweep: p50/p99 latency vs Poisson load,
+//! plus the continuous-vs-batch-synchronous scheduler comparison.
 //!
 //! The serving counterpart of `benches/batching.rs`: instead of packing
 //! a known corpus up front, requests arrive one by one on a Poisson
@@ -7,13 +8,20 @@
 //! sweep reports, per offered load: completed req/s, p50/p90/p99 total
 //! latency, queueing p50, dynamic-batch fill and the shed rate.
 //!
+//! The second table sweeps **scheduler × shards × token budget** under
+//! one Poisson trace per rung: `--scheduler batch` drains each formed
+//! batch to completion, `--scheduler continuous` steps a persistent
+//! slot pool with mid-flight admission — same per-request outputs
+//! (asserted), different latency/occupancy profile.  See
+//! EXPERIMENTS.md "Iteration-level scheduling".
+//!
 //! ```bash
 //! cargo bench --bench serving [-- --quick]
 //! ```
 
 use std::time::Duration;
 
-use quantnmt::coordinator::server::{poisson_offsets, replay_trace, TranslateRequest};
+use quantnmt::coordinator::server::{poisson_offsets, replay_trace, Scheduler, TranslateRequest};
 use quantnmt::coordinator::{ServerConfig, Service};
 use quantnmt::quant::calibrate::CalibrationMode;
 
@@ -40,9 +48,9 @@ fn main() -> anyhow::Result<()> {
             token_budget: 1024,
             max_batch_rows: 64,
             queue_capacity: 1024,
-            max_src_len: None,
             pin_cores: false,
             max_decode_len: 56,
+            ..Default::default()
         };
         println!("max-wait {wait_ms}ms, {n} requests per rung:");
         for (rung, &rate) in rates.iter().enumerate() {
@@ -54,6 +62,47 @@ fn main() -> anyhow::Result<()> {
         }
         println!();
     }
-    println!("regenerate the EXPERIMENTS.md online table with: cargo bench --bench serving");
+
+    // ---- iteration-level scheduling: continuous vs batch-synchronous ----
+    // Poisson arrivals × shards × token budgets, one fixed trace per
+    // rung so the two schedulers see identical arrival order; outputs
+    // are asserted identical, so every latency/occupancy delta is the
+    // scheduler, not the work.
+    let shard_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let budgets: &[usize] = if quick { &[512] } else { &[512, 1024] };
+    let rate = 200.0;
+    println!("scheduler comparison ({n} requests, Poisson {rate:.0}/s, max-wait 20ms):");
+    for &shards in shard_counts {
+        for &budget in budgets {
+            let mut outs: Vec<Vec<Vec<u32>>> = Vec::new();
+            for scheduler in [Scheduler::Batch, Scheduler::Continuous] {
+                let cfg = ServerConfig {
+                    backend: int8.clone(),
+                    shards,
+                    max_wait: Duration::from_millis(20),
+                    token_budget: budget,
+                    max_batch_rows: 64,
+                    slots: 64,
+                    queue_capacity: 4096,
+                    pin_cores: false,
+                    max_decode_len: 56,
+                    scheduler,
+                    ..Default::default()
+                };
+                let reqs = TranslateRequest::from_pairs(&ds.test[..n]);
+                let offsets = poisson_offsets(0x17E8 ^ shards as u64, n, rate);
+                let (metrics, responses, _) =
+                    svc.serve(&cfg, |client| replay_trace(client, reqs, &offsets))?;
+                println!("  {}", metrics.row());
+                outs.push(responses.into_iter().map(|r| r.out).collect());
+            }
+            assert_eq!(
+                outs[0], outs[1],
+                "scheduling parity violated: shards={shards} budget={budget}"
+            );
+        }
+        println!();
+    }
+    println!("regenerate the EXPERIMENTS.md online tables with: cargo bench --bench serving");
     Ok(())
 }

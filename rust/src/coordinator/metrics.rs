@@ -135,8 +135,26 @@ pub struct ServerMetrics {
     pub queue_latency: LatencyStats,
     /// enqueue -> done, per request
     pub total_latency: LatencyStats,
-    /// per-batch shard execution time
+    /// shard execution time per unit of engine work — the unit differs
+    /// by scheduler: one sample per **drained batch** under
+    /// batch-synchronous scheduling, one per **pool iteration**
+    /// (decode step over the active set, prefill excluded) under
+    /// continuous scheduling, so values are not comparable across
+    /// schedulers
     pub batch_latency: LatencyStats,
+    /// enqueue -> first decoded token, per request (continuous
+    /// scheduler only; empty under batch-synchronous scheduling, which
+    /// cannot observe per-token progress inside `translate`)
+    pub ttft_latency: LatencyStats,
+    /// gap between consecutive token emissions of one request
+    /// (continuous scheduler only)
+    pub inter_token_latency: LatencyStats,
+    /// pool iterations executed across all shards (continuous only)
+    pub decode_steps: usize,
+    /// per-shard slot-occupancy fill ratio: mean fraction of the
+    /// shard's KV-cache slots that were live per iteration (continuous
+    /// only; the quantity iteration-level scheduling raises)
+    pub shard_fill: Vec<f64>,
 }
 
 impl ServerMetrics {
@@ -172,18 +190,31 @@ impl ServerMetrics {
         self.shed as f64 / offered as f64
     }
 
+    /// Aggregate slot-occupancy across shards (mean of the per-shard
+    /// fill ratios); 0 under batch-synchronous scheduling.
+    pub fn slot_fill(&self) -> f64 {
+        if self.shard_fill.is_empty() {
+            return 0.0;
+        }
+        self.shard_fill.iter().sum::<f64>() / self.shard_fill.len() as f64
+    }
+
     /// Table row for the serving reports (one row per offered load).
     pub fn row(&self) -> String {
         format!(
             "{:40} {:>8.1} req/s  p50 {:>7.1}ms  p90 {:>7.1}ms  p99 {:>7.1}ms  \
-             queue p50 {:>6.1}ms  fill {:>5.1}%  rows/batch {:>5.1}  shed {:>4.1}%",
+             queue p50 {:>6.1}ms  ttft p50 {:>6.1}ms  itl p50 {:>5.2}ms  \
+             fill {:>5.1}%  occ {:>5.1}%  rows/batch {:>5.1}  shed {:>4.1}%",
             self.config,
             self.requests_per_sec(),
             self.total_latency.p50() * 1e3,
             self.total_latency.p90() * 1e3,
             self.total_latency.p99() * 1e3,
             self.queue_latency.p50() * 1e3,
+            self.ttft_latency.p50() * 1e3,
+            self.inter_token_latency.p50() * 1e3,
             self.fill_ratio() * 100.0,
+            self.slot_fill() * 100.0,
             self.mean_batch_rows(),
             self.shed_ratio() * 100.0,
         )
@@ -259,6 +290,10 @@ mod tests {
             queue_latency: LatencyStats::default(),
             total_latency: LatencyStats::default(),
             batch_latency: LatencyStats::default(),
+            ttft_latency: LatencyStats::default(),
+            inter_token_latency: LatencyStats::default(),
+            decode_steps: 0,
+            shard_fill: Vec::new(),
         }
     }
 
@@ -272,6 +307,18 @@ mod tests {
         let row = m.row();
         assert!(row.contains("45.0 req/s"), "{row}");
         assert!(row.contains("fill  80.0%"), "{row}");
+    }
+
+    #[test]
+    fn slot_fill_aggregates_per_shard_occupancy() {
+        let mut m = server_metrics(10, 0, 2);
+        assert_eq!(m.slot_fill(), 0.0, "batch scheduler reports zero occupancy");
+        m.shard_fill = vec![0.5, 0.9];
+        assert!((m.slot_fill() - 0.7).abs() < 1e-12);
+        let row = m.row();
+        assert!(row.contains("occ  70.0%"), "{row}");
+        assert!(row.contains("ttft p50"), "{row}");
+        assert!(row.contains("itl p50"), "{row}");
     }
 
     #[test]

@@ -17,5 +17,5 @@ pub mod server;
 pub mod service;
 
 pub use metrics::{LatencyStats, RunMetrics, ServerMetrics};
-pub use server::{ServerClient, ServerConfig, TranslateRequest, TranslateResponse};
+pub use server::{Scheduler, ServerClient, ServerConfig, TranslateRequest, TranslateResponse};
 pub use service::{Backend, Service, ServiceConfig};

@@ -1,4 +1,5 @@
-//! Online serving: latency-aware dynamic batching over the INT8 engine.
+//! Online serving: latency-aware dynamic batching over the INT8 engine,
+//! with two decode schedulers.
 //!
 //! `Service::run` consumes a whole corpus up front — the offline
 //! throughput path behind every Fig 6/8 number.  This module adds the
@@ -19,15 +20,30 @@
 //!   policies ([`fits_budget`]) and is dispatched at the latest
 //!   max-wait after it opened, however unfilled — the knob that trades
 //!   per-request latency against batch fill;
-//! * [`serve`] — the shard pool: N worker streams over a shared
-//!   [`BatchQueue`], each owning its own engine/executable via the same
-//!   [`StreamFactory`] abstraction the offline parallel runner uses.
+//! * [`serve`] — the **batch-synchronous** shard pool: N worker streams
+//!   over a shared [`BatchQueue`], each owning its own
+//!   engine/executable via the same [`StreamFactory`] abstraction the
+//!   offline parallel runner uses; a formed batch occupies its shard
+//!   until the slowest row emits EOS;
+//! * [`serve_continuous`] — the **iteration-level** scheduler: each
+//!   shard owns an [`Engine`] plus a long-lived
+//!   [`DecodePool`](crate::model::engine::DecodePool) of KV-cache
+//!   slots, and loops one decode step at a time — newly formed batches
+//!   are encoded and spliced into free slots *mid-flight*, each
+//!   finished slot is emitted and recycled immediately, and the GEMM
+//!   each iteration covers only live slots.  Short requests overtake
+//!   long ones instead of waiting for a batch drain; with identical
+//!   arrival order both schedulers produce bit-identical per-request
+//!   translations (decode math is row-wise — asserted in
+//!   `tests/serving_integration.rs`).
 //!
 //! Per-request latency is recorded in two stages (enqueue -> batch
 //! close, enqueue -> done) and aggregated into
-//! [`ServerMetrics`] p50/p90/p99 histograms.  [`poisson_offsets`] +
-//! [`replay_trace`] generate and replay synthetic open-loop arrival
-//! traces (`examples/serve_online.rs`, `benches/serving.rs`).
+//! [`ServerMetrics`] p50/p90/p99 histograms; the continuous scheduler
+//! additionally observes time-to-first-token, inter-token gaps and
+//! per-shard slot occupancy.  [`poisson_offsets`] + [`replay_trace`]
+//! generate and replay synthetic open-loop arrival traces
+//! (`examples/serve_online.rs`, `benches/serving.rs`).
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -36,11 +52,48 @@ use std::time::{Duration, Instant};
 use crate::coordinator::metrics::{LatencyStats, ServerMetrics};
 use crate::coordinator::service::{Backend, DEFAULT_TOKEN_BUDGET};
 use crate::data::dataset::Pair;
+use crate::model::Engine;
 use crate::pipeline::batch::{pad_rows, Batch};
 use crate::pipeline::parallel::{core_partition, num_cpus, set_affinity, StreamFactory};
 use crate::pipeline::policy::fits_budget;
 use crate::pipeline::queue::BatchQueue;
+use crate::specials::{BOS_ID, EOS_ID};
+use crate::tensor::ops;
 use crate::util::rng::SplitMix64;
+
+/// Which decode scheduler the server runs (`serve --scheduler`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Scheduler {
+    /// run-to-completion dynamic batches: a formed batch holds its
+    /// shard until the slowest row finishes (the pre-pool behavior)
+    #[default]
+    Batch,
+    /// iteration-level scheduling over a persistent slot pool:
+    /// admission splices mid-flight, finished slots recycle per step
+    Continuous,
+}
+
+impl Scheduler {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Scheduler::Batch => "batch",
+            Scheduler::Continuous => "continuous",
+        }
+    }
+
+    /// Parse a CLI value, falling back (with a note) on unknown text.
+    pub fn parse_or(s: Option<&str>, default: Scheduler) -> Scheduler {
+        match s {
+            None => default,
+            Some("batch") => Scheduler::Batch,
+            Some("continuous") | Some("cont") => Scheduler::Continuous,
+            Some(other) => {
+                eprintln!("unknown scheduler '{other}', using {}", default.as_str());
+                default
+            }
+        }
+    }
+}
 
 /// Online-serving configuration (the `serve` subcommand's knobs).
 #[derive(Debug, Clone)]
@@ -67,6 +120,14 @@ pub struct ServerConfig {
     pub max_src_len: Option<usize>,
     pub pin_cores: bool,
     pub max_decode_len: usize,
+    /// decode scheduler (engine backends support both; the PJRT
+    /// runtime executes fused whole-sequence graphs and is
+    /// batch-synchronous only)
+    pub scheduler: Scheduler,
+    /// KV-cache slots per shard pool under the continuous scheduler;
+    /// `0` = auto (`max_batch_rows`).  Clamped up to `max_batch_rows`
+    /// so a formed batch always fits an empty pool.
+    pub slots: usize,
 }
 
 impl Default for ServerConfig {
@@ -83,18 +144,33 @@ impl Default for ServerConfig {
             max_src_len: None,
             pin_cores: false,
             max_decode_len: 56,
+            scheduler: Scheduler::Batch,
+            slots: 0,
         }
     }
 }
 
 impl ServerConfig {
+    /// Effective slot-pool capacity per shard (continuous scheduler):
+    /// the requested `slots`, raised to at least `max_batch_rows` so a
+    /// formed batch always fits an empty pool (which also makes the
+    /// `slots == 0` auto default resolve to `max_batch_rows`).
+    pub fn pool_capacity(&self) -> usize {
+        self.slots.max(self.max_batch_rows).max(1)
+    }
+
     pub fn label(&self) -> String {
+        let sched = match self.scheduler {
+            Scheduler::Batch => String::new(),
+            Scheduler::Continuous => format!(" cont s{}", self.pool_capacity()),
+        };
         format!(
-            "online {} {}sh wait{}ms tb{}",
+            "online {} {}sh wait{}ms tb{}{}",
             self.backend.label(),
             self.shards.max(1),
             self.max_wait.as_millis(),
             self.token_budget,
+            sched,
         )
     }
 }
@@ -133,6 +209,12 @@ pub struct TranslateResponse {
     pub queue_secs: f64,
     /// enqueue -> translation done: what the caller experiences
     pub total_secs: f64,
+    /// global completion ordinal (0 = first response the server
+    /// finished).  Under continuous scheduling a short request admitted
+    /// mid-flight completes — and gets a lower `done_seq` — before an
+    /// earlier long request drains; under batch scheduling completion
+    /// follows batch order.
+    pub done_seq: usize,
 }
 
 /// A request waiting in the admission queue / open batch.
@@ -395,7 +477,8 @@ impl ServerClient<'_> {
 }
 
 /// Per-shard accumulation (identical shape to the offline
-/// [`crate::pipeline::parallel::StreamReport`] accounting).
+/// [`crate::pipeline::parallel::StreamReport`] accounting, plus the
+/// continuous scheduler's iteration counters).
 #[derive(Default)]
 struct ShardStats {
     batches: usize,
@@ -403,6 +486,144 @@ struct ShardStats {
     tokens: usize,
     padded_tokens: usize,
     busy_secs: f64,
+    /// pool iterations executed (continuous only)
+    steps: usize,
+    /// Σ active slots over iterations (continuous only)
+    occupied_slot_steps: usize,
+    /// pool capacity (continuous only; 0 = batch-synchronous shard)
+    pool_capacity: usize,
+}
+
+impl ShardStats {
+    /// Mean slot-occupancy fill of this shard's pool.
+    fn fill(&self) -> f64 {
+        if self.steps == 0 || self.pool_capacity == 0 {
+            return 0.0;
+        }
+        self.occupied_slot_steps as f64 / (self.steps * self.pool_capacity) as f64
+    }
+}
+
+/// The shared latency ledgers + completed-response sink both shard
+/// loops write into.  `emit_all` assigns the global completion ordinal
+/// ([`TranslateResponse::done_seq`]) under the sink lock.
+#[derive(Default)]
+struct LatencyBook {
+    queue: Mutex<LatencyStats>,
+    total: Mutex<LatencyStats>,
+    batch: Mutex<LatencyStats>,
+    ttft: Mutex<LatencyStats>,
+    itl: Mutex<LatencyStats>,
+    done: Mutex<Vec<TranslateResponse>>,
+}
+
+impl LatencyBook {
+    /// Record and sink completed rows under **one** acquisition of each
+    /// ledger lock, however many rows the caller finished at once (a
+    /// whole drained batch, or one iteration's finished slots).
+    /// `closed_at` rides per row because continuous slots may come from
+    /// different prefill batches.
+    fn emit_all(
+        &self,
+        rows: impl IntoIterator<Item = (usize, Vec<u32>, Instant, Instant)>,
+        now: Instant,
+    ) {
+        let mut ql = self.queue.lock().unwrap();
+        let mut tl = self.total.lock().unwrap();
+        let mut d = self.done.lock().unwrap();
+        for (id, out, enqueued, closed_at) in rows {
+            let total = now.saturating_duration_since(enqueued);
+            let queued = closed_at.saturating_duration_since(enqueued);
+            ql.record(queued);
+            tl.record(total);
+            let done_seq = d.len();
+            d.push(TranslateResponse {
+                id,
+                out,
+                queue_secs: queued.as_secs_f64(),
+                total_secs: total.as_secs_f64(),
+                done_seq,
+            });
+        }
+    }
+
+    /// Consume the book into a [`ServerMetrics`] (responses come back
+    /// sorted by request id; completion order survives in `done_seq`).
+    fn into_metrics(
+        self,
+        cfg: &ServerConfig,
+        shards: usize,
+        wall: f64,
+        shard_stats: &[ShardStats],
+        shed: usize,
+    ) -> (ServerMetrics, Vec<TranslateResponse>) {
+        let mut responses = self.done.into_inner().unwrap();
+        responses.sort_by_key(|r| r.id);
+        let busy: f64 = shard_stats.iter().map(|s| s.busy_secs).sum();
+        let continuous = shard_stats.iter().any(|s| s.pool_capacity > 0);
+        let metrics = ServerMetrics {
+            config: cfg.label(),
+            shards,
+            requests: shard_stats.iter().map(|s| s.requests).sum(),
+            shed,
+            batches: shard_stats.iter().map(|s| s.batches).sum(),
+            tokens: shard_stats.iter().map(|s| s.tokens).sum(),
+            padded_tokens: shard_stats.iter().map(|s| s.padded_tokens).sum(),
+            wall_secs: wall,
+            utilization: if wall > 0.0 {
+                busy / (wall * shards as f64)
+            } else {
+                0.0
+            },
+            queue_latency: self.queue.into_inner().unwrap(),
+            total_latency: self.total.into_inner().unwrap(),
+            batch_latency: self.batch.into_inner().unwrap(),
+            ttft_latency: self.ttft.into_inner().unwrap(),
+            inter_token_latency: self.itl.into_inner().unwrap(),
+            decode_steps: shard_stats.iter().map(|s| s.steps).sum(),
+            shard_fill: if continuous {
+                shard_stats.iter().map(ShardStats::fill).collect()
+            } else {
+                Vec::new()
+            },
+        };
+        (metrics, responses)
+    }
+}
+
+/// The dynamic-batcher stage shared by both schedulers: admission
+/// queue -> token-budget/deadline batches -> dispatch queue.  A failed
+/// push means a panicking shard closed the queue early (see
+/// [`CloseQueueOnDrop`]): the batch is dropped while the panic
+/// propagates, so latency is only ever recorded for batches a shard
+/// actually executed.
+fn batcher_loop(
+    admission: &AdmissionQueue,
+    dispatch: &BatchQueue<FormedBatch>,
+    mut former: BatchFormer,
+) {
+    // closes dispatch on exit — normal (drained) or panic
+    let _guard = CloseQueueOnDrop(dispatch);
+    loop {
+        match admission.pop_until(former.deadline()) {
+            Popped::Item(p) => {
+                if let Some(fb) = former.offer(p.req, p.enqueued) {
+                    let _ = dispatch.push(fb);
+                }
+            }
+            Popped::TimedOut => {
+                if let Some(fb) = former.flush() {
+                    let _ = dispatch.push(fb);
+                }
+            }
+            Popped::Closed => {
+                if let Some(fb) = former.flush() {
+                    let _ = dispatch.push(fb);
+                }
+                break;
+            }
+        }
+    }
 }
 
 /// Close a [`BatchQueue`] when dropped.  Every stage of the serving
@@ -428,6 +649,81 @@ impl Drop for CloseAdmissionOnDrop<'_> {
     }
 }
 
+/// The orchestration skeleton shared by both schedulers: admission
+/// queue + dynamic batcher + `cfg.shards` worker threads running
+/// `worker(shard_id, dispatch, book)` (called on the worker's own
+/// thread, after core affinity is set), with the close-on-drop panic
+/// backstops and the drive/join/metrics protocol.
+///
+/// Panic safety: if anything on the coordinator thread panics (the
+/// drive closure, a join unwrap), both queues are closed during unwind
+/// so the spawned threads can drain and exit — otherwise the scope's
+/// implicit join would hang forever instead of propagating the panic.
+/// A panicking worker likewise closes the dispatch queue on its way
+/// down.  On the normal path the guards' repeat closes are no-ops.
+fn serve_with<W, D, R>(
+    cfg: &ServerConfig,
+    worker: W,
+    drive: D,
+) -> (ServerMetrics, Vec<TranslateResponse>, R)
+where
+    W: Fn(usize, &BatchQueue<FormedBatch>, &LatencyBook) -> ShardStats + Sync,
+    D: FnOnce(&ServerClient<'_>) -> R,
+{
+    let shards = cfg.shards.max(1);
+    let admission = AdmissionQueue::new(cfg.queue_capacity, cfg.max_src_len);
+    let dispatch: BatchQueue<FormedBatch> = BatchQueue::new(shards * 2);
+    let book = LatencyBook::default();
+    let partitions = core_partition(num_cpus(), shards);
+    let pin_cores = cfg.pin_cores;
+    let t0 = Instant::now();
+
+    let (drive_out, shard_stats) = crossbeam_utils::thread::scope(|scope| {
+        let _admission_guard = CloseAdmissionOnDrop(&admission);
+        let _dispatch_guard = CloseQueueOnDrop(&dispatch);
+
+        // shard workers: consume formed batches until the queue closes
+        let mut handles = Vec::new();
+        for shard_id in 0..shards {
+            let dispatch = &dispatch;
+            let book = &book;
+            let worker = &worker;
+            let cores = partitions[shard_id % partitions.len()].clone();
+            handles.push(scope.spawn(move |_| {
+                let _guard = CloseQueueOnDrop(dispatch);
+                if pin_cores {
+                    set_affinity(&cores);
+                }
+                worker(shard_id, dispatch, book)
+            }));
+        }
+
+        // the batcher: admission queue -> dynamic batches -> dispatch
+        let batcher = {
+            let admission = &admission;
+            let dispatch = &dispatch;
+            let former = BatchFormer::new(cfg.token_budget, cfg.max_batch_rows, cfg.max_wait);
+            scope.spawn(move |_| batcher_loop(admission, dispatch, former))
+        };
+
+        // the outside world, on the calling thread
+        let client = ServerClient {
+            admission: &admission,
+        };
+        let out = drive(&client);
+        admission.close();
+        batcher.join().unwrap();
+        let stats: Vec<ShardStats> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        (out, stats)
+    })
+    .unwrap();
+
+    let wall = t0.elapsed().as_secs_f64();
+    let (metrics, responses) =
+        book.into_metrics(cfg, shards, wall, &shard_stats, admission.shed() as usize);
+    (metrics, responses, drive_out)
+}
+
 /// Run an online server: a dynamic batcher plus `cfg.shards` worker
 /// streams, each owning the translate function `factory` builds for it
 /// (an `Engine` or a PJRT executable — the same [`StreamFactory`]
@@ -447,150 +743,233 @@ where
     F: StreamFactory,
     D: FnOnce(&ServerClient<'_>) -> R,
 {
-    let shards = cfg.shards.max(1);
-    let admission = AdmissionQueue::new(cfg.queue_capacity, cfg.max_src_len);
-    let dispatch: BatchQueue<FormedBatch> = BatchQueue::new(shards * 2);
-    let done: Mutex<Vec<TranslateResponse>> = Mutex::new(Vec::new());
-    let queue_lat = Mutex::new(LatencyStats::default());
-    let total_lat = Mutex::new(LatencyStats::default());
-    let batch_lat = Mutex::new(LatencyStats::default());
-    let partitions = core_partition(num_cpus(), shards);
-    let pin_cores = cfg.pin_cores;
-    let t0 = Instant::now();
-
-    let (drive_out, shard_stats) = crossbeam_utils::thread::scope(|scope| {
-        // panic backstop: if anything on this thread panics (a shard
-        // factory, the drive closure, a join unwrap), close both queues
-        // during unwind so the spawned threads can drain and exit —
-        // otherwise the scope's implicit join would hang forever
-        // instead of propagating the panic.  On the normal path both
-        // queues are already closed by the time these drop (no-ops).
-        let _admission_guard = CloseAdmissionOnDrop(&admission);
-        let _dispatch_guard = CloseQueueOnDrop(&dispatch);
-
-        // shard workers: drain formed batches until the queue closes
-        let mut handles = Vec::new();
-        for shard_id in 0..shards {
-            let dispatch = &dispatch;
-            let done = &done;
-            let queue_lat = &queue_lat;
-            let total_lat = &total_lat;
-            let batch_lat = &batch_lat;
-            let cores = partitions[shard_id % partitions.len()].clone();
+    serve_with(
+        cfg,
+        |shard_id, dispatch, book| {
             let mut translate = factory.make(shard_id);
-            handles.push(scope.spawn(move |_| {
-                let _guard = CloseQueueOnDrop(dispatch);
-                if pin_cores {
-                    set_affinity(&cores);
+            let mut stats = ShardStats::default();
+            while let Some(fb) = dispatch.pop() {
+                let bt = Instant::now();
+                let outs = translate(&fb.batch);
+                assert_eq!(
+                    outs.len(),
+                    fb.batch.len(),
+                    "translate must return one output row per batch row"
+                );
+                let exec = bt.elapsed();
+                book.batch.lock().unwrap().record(exec);
+                stats.batches += 1;
+                stats.requests += fb.batch.len();
+                stats.tokens += fb.batch.tokens;
+                stats.padded_tokens += fb.batch.padded_tokens();
+                stats.busy_secs += exec.as_secs_f64();
+                let now = Instant::now();
+                let rows = fb
+                    .batch
+                    .indices
+                    .iter()
+                    .zip(&fb.enqueued)
+                    .zip(outs)
+                    .map(|((&id, &enq), out)| (id, out, enq, fb.closed_at));
+                book.emit_all(rows, now);
+            }
+            stats
+        },
+        drive,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// the continuous (iteration-level) scheduler
+// ---------------------------------------------------------------------------
+
+/// One occupied slot's request context in a continuous shard.
+struct SlotCtx {
+    id: usize,
+    enqueued: Instant,
+    /// when the batcher sealed the request's prefill batch
+    closed_at: Instant,
+    /// last iteration that advanced this slot (inter-token clock)
+    last_emit: Instant,
+    out: Vec<u32>,
+}
+
+/// The iteration-level shard loop: encode-and-splice every formed
+/// batch that fits the pool's free slots, step the active set once,
+/// emit + recycle finished slots, repeat.  Blocks on the dispatch
+/// queue only while the pool is idle; mid-flight it polls with
+/// [`BatchQueue::try_pop_if`], claiming a batch **only if it fits the
+/// current free slots** — a batch this shard cannot start stays queued
+/// for an idle peer instead of being parked behind a draining pool.
+fn continuous_shard_loop(
+    engine: &mut Engine,
+    cfg: &ServerConfig,
+    dispatch: &BatchQueue<FormedBatch>,
+    book: &LatencyBook,
+) -> ShardStats {
+    let capacity = cfg.pool_capacity();
+    // a zero decode cap yields empty outputs without stepping, exactly
+    // like `translate_greedy` (parity with the batch scheduler); the
+    // pool is still allocated with >= 1 position so construction is
+    // uniform
+    let t_max = cfg.max_decode_len.min(engine.cfg.max_tgt_len);
+    let src_cap = engine.cfg.max_src_len;
+    let vocab = engine.cfg.vocab_size;
+    let mut pool = engine.new_pool(capacity, t_max.max(1), src_cap);
+    let mut ctx: Vec<Option<SlotCtx>> = std::iter::repeat_with(|| None).take(capacity).collect();
+    let mut active: Vec<usize> = Vec::new();
+    let mut tokens: Vec<u32> = Vec::new();
+    let mut logits = Vec::new();
+    // per-iteration sample buffers so the shared ledgers are locked
+    // once per iteration, never across the argmax scan
+    let mut ttft_samples: Vec<Duration> = Vec::new();
+    let mut itl_samples: Vec<Duration> = Vec::new();
+    let mut finished: Vec<SlotCtx> = Vec::new();
+    let mut stats = ShardStats {
+        pool_capacity: capacity,
+        ..ShardStats::default()
+    };
+
+    'run: loop {
+        // admission: splice every formed batch that currently fits
+        loop {
+            let fb = if active.is_empty() {
+                // idle pool: block until work arrives or the queue
+                // closes-and-drains (any formed batch fits an empty
+                // pool — capacity >= max_batch_rows)
+                match dispatch.pop() {
+                    Some(fb) => fb,
+                    None => break 'run,
                 }
-                let mut stats = ShardStats::default();
-                while let Some(fb) = dispatch.pop() {
-                    let bt = Instant::now();
-                    let outs = translate(&fb.batch);
-                    assert_eq!(
-                        outs.len(),
-                        fb.batch.len(),
-                        "translate must return one output row per batch row"
-                    );
-                    let exec = bt.elapsed();
-                    batch_lat.lock().unwrap().record(exec);
-                    stats.batches += 1;
-                    stats.requests += fb.batch.len();
-                    stats.tokens += fb.batch.tokens;
-                    stats.padded_tokens += fb.batch.padded_tokens();
-                    stats.busy_secs += exec.as_secs_f64();
-                    let now = Instant::now();
-                    let mut d = done.lock().unwrap();
-                    let mut ql = queue_lat.lock().unwrap();
-                    let mut tl = total_lat.lock().unwrap();
-                    let rows = fb.batch.indices.iter().zip(&fb.enqueued).zip(outs);
-                    for ((&id, &enq), out) in rows {
-                        let total = now.saturating_duration_since(enq);
-                        let queued = fb.closed_at.saturating_duration_since(enq);
-                        ql.record(queued);
-                        tl.record(total);
-                        d.push(TranslateResponse {
-                            id,
-                            out,
-                            queue_secs: queued.as_secs_f64(),
-                            total_secs: total.as_secs_f64(),
-                        });
-                    }
+            } else {
+                // mid-flight: claim a batch only if it fits right now
+                match dispatch.try_pop_if(|fb| fb.batch.len() <= pool.free_slots()) {
+                    Some(fb) => fb,
+                    None => break,
                 }
-                stats
-            }));
+            };
+            stats.batches += 1;
+            stats.requests += fb.batch.len();
+            stats.tokens += fb.batch.tokens;
+            stats.padded_tokens += fb.batch.padded_tokens();
+            if t_max == 0 {
+                let now = Instant::now();
+                let rows = fb
+                    .batch
+                    .indices
+                    .iter()
+                    .zip(&fb.enqueued)
+                    .map(|(&id, &enq)| (id, Vec::new(), enq, fb.closed_at));
+                book.emit_all(rows, now);
+                continue;
+            }
+            let bt = Instant::now();
+            let (memory, src_len, s) = engine.encode(&fb.batch.src);
+            let slots = engine.admit(&mut pool, &memory, &src_len, s);
+            stats.busy_secs += bt.elapsed().as_secs_f64();
+            let admitted_at = Instant::now();
+            let rows = slots.iter().zip(fb.batch.indices.iter().zip(&fb.enqueued));
+            for (&slot, (&id, &enq)) in rows {
+                ctx[slot] = Some(SlotCtx {
+                    id,
+                    enqueued: enq,
+                    closed_at: fb.closed_at,
+                    last_emit: admitted_at,
+                    out: Vec::new(),
+                });
+                active.push(slot);
+                tokens.push(BOS_ID);
+            }
+        }
+        if active.is_empty() {
+            continue;
         }
 
-        // the batcher: admission queue -> dynamic batches -> dispatch.
-        // A failed push means a panicking shard closed the queue early
-        // (see CloseQueueOnDrop): the batch is dropped while the panic
-        // propagates, so latency is only ever recorded for batches a
-        // shard actually executed.
-        let batcher = {
-            let admission = &admission;
-            let dispatch = &dispatch;
-            let mut former = BatchFormer::new(cfg.token_budget, cfg.max_batch_rows, cfg.max_wait);
-            scope.spawn(move |_| {
-                // closes dispatch on exit — normal (drained) or panic
-                let _guard = CloseQueueOnDrop(dispatch);
-                loop {
-                    match admission.pop_until(former.deadline()) {
-                        Popped::Item(p) => {
-                            if let Some(fb) = former.offer(p.req, p.enqueued) {
-                                let _ = dispatch.push(fb);
-                            }
-                        }
-                        Popped::TimedOut => {
-                            if let Some(fb) = former.flush() {
-                                let _ = dispatch.push(fb);
-                            }
-                        }
-                        Popped::Closed => {
-                            if let Some(fb) = former.flush() {
-                                let _ = dispatch.push(fb);
-                            }
-                            break;
-                        }
-                    }
-                }
-            })
-        };
+        // one iteration over the active set
+        let bt = Instant::now();
+        engine.pool_step(&mut pool, &active, &tokens, &mut logits);
+        let now = Instant::now();
+        let exec = now.saturating_duration_since(bt);
+        book.batch.lock().unwrap().record(exec);
+        stats.busy_secs += exec.as_secs_f64();
+        stats.steps += 1;
+        stats.occupied_slot_steps += active.len();
 
-        // the outside world, on the calling thread
-        let client = ServerClient {
-            admission: &admission,
-        };
-        let out = drive(&client);
-        admission.close();
-        batcher.join().unwrap();
-        let stats: Vec<ShardStats> = handles.into_iter().map(|h| h.join().unwrap()).collect();
-        (out, stats)
-    })
-    .unwrap();
+        let mut keep = Vec::with_capacity(active.len());
+        let mut keep_tokens = Vec::with_capacity(active.len());
+        for (i, &slot) in active.iter().enumerate() {
+            let c = ctx[slot].as_mut().expect("active slot has context");
+            if pool.pos(slot) == 1 {
+                ttft_samples.push(now.saturating_duration_since(c.enqueued));
+            } else {
+                itl_samples.push(now.saturating_duration_since(c.last_emit));
+            }
+            c.last_emit = now;
+            let next = ops::argmax(&logits[i * vocab..(i + 1) * vocab]) as u32;
+            if next != EOS_ID {
+                c.out.push(next);
+            }
+            if next == EOS_ID || pool.pos(slot) >= t_max {
+                // finish: recycle the slot now, emit below
+                finished.push(ctx[slot].take().unwrap());
+                pool.finish(slot);
+            } else {
+                keep.push(slot);
+                keep_tokens.push(next);
+            }
+        }
+        active = keep;
+        tokens = keep_tokens;
+        if !ttft_samples.is_empty() {
+            let mut g = book.ttft.lock().unwrap();
+            for d in ttft_samples.drain(..) {
+                g.record(d);
+            }
+        }
+        if !itl_samples.is_empty() {
+            let mut g = book.itl.lock().unwrap();
+            for d in itl_samples.drain(..) {
+                g.record(d);
+            }
+        }
+        book.emit_all(
+            finished.drain(..).map(|c| (c.id, c.out, c.enqueued, c.closed_at)),
+            now,
+        );
+    }
+    debug_assert!(pool.is_idle(), "shard exited with live slots");
+    stats
+}
 
-    let wall = t0.elapsed().as_secs_f64();
-    let mut responses = done.into_inner().unwrap();
-    responses.sort_by_key(|r| r.id);
-    let busy: f64 = shard_stats.iter().map(|s| s.busy_secs).sum();
-    let metrics = ServerMetrics {
-        config: cfg.label(),
-        shards,
-        requests: shard_stats.iter().map(|s| s.requests).sum(),
-        shed: admission.shed() as usize,
-        batches: shard_stats.iter().map(|s| s.batches).sum(),
-        tokens: shard_stats.iter().map(|s| s.tokens).sum(),
-        padded_tokens: shard_stats.iter().map(|s| s.padded_tokens).sum(),
-        wall_secs: wall,
-        utilization: if wall > 0.0 {
-            busy / (wall * shards as f64)
-        } else {
-            0.0
+/// Run an online server under **iteration-level scheduling**: the same
+/// admission queue and dynamic batcher as [`serve`], but each of the
+/// `cfg.shards` workers owns an [`Engine`] plus a persistent
+/// [`DecodePool`](crate::model::engine::DecodePool) and decodes one
+/// step at a time, splicing newly formed batches into free slots
+/// mid-flight and emitting every finished request the iteration it
+/// completes.  `make_engine` builds one engine per shard (typically
+/// [`Engine::from_compiled`] over a shared plan).
+///
+/// With identical arrival order this produces bit-identical
+/// per-request outputs to [`serve`] — iteration-level scheduling
+/// changes *when* rows are computed, never *what* a row computes.
+pub fn serve_continuous<F, D, R>(
+    cfg: &ServerConfig,
+    make_engine: F,
+    drive: D,
+) -> (ServerMetrics, Vec<TranslateResponse>, R)
+where
+    F: Fn(usize) -> Engine + Sync,
+    D: FnOnce(&ServerClient<'_>) -> R,
+{
+    serve_with(
+        cfg,
+        |shard_id, dispatch, book| {
+            let mut engine = make_engine(shard_id);
+            continuous_shard_loop(&mut engine, cfg, dispatch, book)
         },
-        queue_latency: queue_lat.into_inner().unwrap(),
-        total_latency: total_lat.into_inner().unwrap(),
-        batch_latency: batch_lat.into_inner().unwrap(),
-    };
-    (metrics, responses, drive_out)
+        drive,
+    )
 }
 
 // ---------------------------------------------------------------------------
@@ -903,6 +1282,124 @@ mod tests {
                 client.submit(i, vec![3; 4]);
                 std::thread::sleep(Duration::from_millis(2));
             }
+        });
+    }
+
+    #[test]
+    fn scheduler_parses_and_labels() {
+        assert_eq!(Scheduler::parse_or(None, Scheduler::Batch), Scheduler::Batch);
+        assert_eq!(
+            Scheduler::parse_or(Some("continuous"), Scheduler::Batch),
+            Scheduler::Continuous
+        );
+        assert_eq!(Scheduler::parse_or(Some("cont"), Scheduler::Batch), Scheduler::Continuous);
+        assert_eq!(
+            Scheduler::parse_or(Some("zzz"), Scheduler::Batch),
+            Scheduler::Batch,
+            "unknown scheduler falls back"
+        );
+        let batch = echo_cfg().label();
+        let cont = ServerConfig {
+            scheduler: Scheduler::Continuous,
+            ..echo_cfg()
+        }
+        .label();
+        assert!(!batch.contains("cont"), "{batch}");
+        assert!(cont.contains("cont"), "{cont}");
+        assert_ne!(batch, cont);
+    }
+
+    #[test]
+    fn pool_capacity_clamps_to_batch_rows() {
+        let mut cfg = echo_cfg(); // max_batch_rows = 8
+        assert_eq!(cfg.pool_capacity(), 8, "slots=0 means auto");
+        cfg.slots = 4;
+        assert_eq!(cfg.pool_capacity(), 8, "a formed batch must always fit");
+        cfg.slots = 32;
+        assert_eq!(cfg.pool_capacity(), 32);
+    }
+
+    #[test]
+    fn batch_responses_carry_completion_order() {
+        let cfg = echo_cfg();
+        let (_, responses, ()) = serve(&cfg, echo_factory, |client| {
+            for i in 0..20 {
+                assert!(client.submit(i, vec![3; 4]));
+            }
+        });
+        let mut seqs: Vec<usize> = responses.iter().map(|r| r.done_seq).collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, (0..20).collect::<Vec<_>>(), "done_seq is a permutation");
+    }
+
+    #[test]
+    fn continuous_serves_a_burst_with_pool_metrics() {
+        use crate::model::testutil::{random_weights, tiny_cfg};
+        let model_cfg = tiny_cfg();
+        let weights = random_weights(&model_cfg, 0xC047);
+        let cfg = ServerConfig {
+            shards: 2,
+            max_wait: Duration::from_millis(2),
+            token_budget: 32,
+            max_batch_rows: 4,
+            slots: 8,
+            queue_capacity: 1024,
+            max_decode_len: 8,
+            scheduler: Scheduler::Continuous,
+            ..Default::default()
+        };
+        let factory = |_id: usize| Engine::fp32(model_cfg.clone(), weights.clone()).unwrap();
+        let (metrics, responses, ()) = serve_continuous(&cfg, factory, |client| {
+            for i in 0..24 {
+                assert!(client.submit(i, vec![3 + (i as u32 % 5), 4, 2]));
+            }
+        });
+        assert_eq!(metrics.requests, 24);
+        assert_eq!(responses.len(), 24);
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert!(r.total_secs >= r.queue_secs);
+        }
+        // pool observables: iterations ran, occupancy is a ratio,
+        // every request got a first-token sample
+        assert!(metrics.decode_steps > 0);
+        assert_eq!(metrics.shard_fill.len(), 2);
+        assert!(metrics.slot_fill() > 0.0 && metrics.slot_fill() <= 1.0);
+        assert_eq!(metrics.ttft_latency.count(), 24);
+        assert_eq!(metrics.queue_latency.count(), 24);
+    }
+
+    #[test]
+    fn continuous_with_no_requests_terminates_cleanly() {
+        use crate::model::testutil::{random_weights, tiny_cfg};
+        let model_cfg = tiny_cfg();
+        let weights = random_weights(&model_cfg, 0xC048);
+        let cfg = ServerConfig {
+            shards: 1,
+            scheduler: Scheduler::Continuous,
+            ..echo_cfg()
+        };
+        let factory = |_id: usize| Engine::fp32(model_cfg.clone(), weights.clone()).unwrap();
+        let (metrics, responses, ()) = serve_continuous(&cfg, factory, |_client| {});
+        assert_eq!(metrics.requests, 0);
+        assert_eq!(metrics.decode_steps, 0);
+        assert!(responses.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "continuous drive blew up")]
+    fn continuous_propagates_drive_panic_instead_of_hanging() {
+        use crate::model::testutil::{random_weights, tiny_cfg};
+        let model_cfg = tiny_cfg();
+        let weights = random_weights(&model_cfg, 0xC049);
+        let cfg = ServerConfig {
+            shards: 1,
+            scheduler: Scheduler::Continuous,
+            ..echo_cfg()
+        };
+        let factory = |_id: usize| Engine::fp32(model_cfg.clone(), weights.clone()).unwrap();
+        let _ = serve_continuous(&cfg, factory, |_client| -> () {
+            panic!("continuous drive blew up")
         });
     }
 

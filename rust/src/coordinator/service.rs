@@ -133,10 +133,12 @@ impl ServiceConfig {
 ///
 /// SAFETY of the `Send` impl: `TranslateExecutable` wraps `Rc`-based
 /// PJRT handles and is not `Send` in general.  The cache is created
-/// *empty* on the coordinator thread, moved into exactly one worker
-/// stream, and only ever filled and used on that stream's thread (each
-/// stream compiles against its own thread-local PJRT client), so no Rc
-/// is ever shared across threads.
+/// *empty* by the per-stream factory (at worst on the coordinator
+/// thread, then moved into exactly one worker stream; since the
+/// serving refactor the online factories run on the worker thread
+/// itself), and it is only ever filled and used on that one stream's
+/// thread — each stream compiles against its own thread-local PJRT
+/// client — so no Rc is ever shared across threads.
 struct ExeCache(Vec<TranslateExecutable>);
 unsafe impl Send for ExeCache {}
 
@@ -347,6 +349,16 @@ impl Service {
     /// buckets' `src_len` (runtime), and on the [`Backend::Runtime`]
     /// path the row cap is additionally clamped to the largest AOT
     /// bucket (the online batcher never splits a batch).
+    ///
+    /// `cfg.scheduler` picks the decode discipline for engine backends:
+    /// [`Scheduler::Batch`](crate::coordinator::Scheduler) is the
+    /// run-to-completion shard pool, `Scheduler::Continuous` the
+    /// iteration-level slot-pool runtime (mid-flight admission,
+    /// per-step recycling).  Both produce bit-identical per-request
+    /// translations for the same arrival order.  The PJRT runtime
+    /// executes fused whole-sequence graphs, so requesting the
+    /// continuous scheduler with a [`Backend::Runtime`] backend is an
+    /// error.
     pub fn serve<D, R>(
         &self,
         cfg: &ServerConfig,
@@ -355,6 +367,7 @@ impl Service {
     where
         D: FnOnce(&ServerClient<'_>) -> R,
     {
+        use crate::coordinator::server::Scheduler;
         let max_len = cfg.max_decode_len;
         match &cfg.backend {
             Backend::EngineF32 | Backend::EngineRecipe(_) => {
@@ -369,13 +382,30 @@ impl Service {
                 // artifacts, quantizes every weight exactly once, and
                 // every shard shares the read-only result
                 let plan = self.compile_plan(&cfg.backend)?;
-                let factory = |_id: usize| {
-                    let mut engine = Engine::from_compiled(self.model_cfg.clone(), plan.clone());
-                    move |b: &Batch| engine.translate_greedy(&b.src, max_len)
-                };
-                Ok(server::serve(&cfg, factory, drive))
+                match cfg.scheduler {
+                    Scheduler::Batch => {
+                        let factory = |_id: usize| {
+                            let mut engine =
+                                Engine::from_compiled(self.model_cfg.clone(), plan.clone());
+                            move |b: &Batch| engine.translate_greedy(&b.src, max_len)
+                        };
+                        Ok(server::serve(&cfg, factory, drive))
+                    }
+                    Scheduler::Continuous => {
+                        let factory = |_id: usize| {
+                            Engine::from_compiled(self.model_cfg.clone(), plan.clone())
+                        };
+                        Ok(server::serve_continuous(&cfg, factory, drive))
+                    }
+                }
             }
             Backend::Runtime(prec) => {
+                anyhow::ensure!(
+                    cfg.scheduler == Scheduler::Batch,
+                    "the continuous scheduler needs an engine backend \
+                     (the PJRT runtime executes fused whole-sequence graphs); \
+                     use --backend engine-fp32/engine-int8 or --scheduler batch"
+                );
                 let prec = *prec;
                 let index = self
                     .aot_index
@@ -506,6 +536,60 @@ mod tests {
             assert_eq!(r.id, i);
             assert_eq!(r.out, offline[i], "online row {i} diverges from offline");
         }
+    }
+
+    #[test]
+    fn continuous_scheduler_matches_batch_scheduler_on_artifacts() {
+        // the ISSUE parity criterion on the trained model: identical
+        // arrival order through --scheduler batch and --scheduler
+        // continuous must yield bit-identical per-request translations
+        use crate::coordinator::server::Scheduler;
+        let Some(svc) = service() else { return };
+        let ds = svc.dataset().unwrap();
+        let pairs = &ds.test[..24];
+        let base = ServerConfig {
+            backend: Backend::EngineF32,
+            shards: 2,
+            max_batch_rows: 8,
+            ..Default::default()
+        };
+        let cont = ServerConfig {
+            scheduler: Scheduler::Continuous,
+            slots: 16,
+            ..base.clone()
+        };
+        let submit_all = |client: &ServerClient<'_>| {
+            for (i, p) in pairs.iter().enumerate() {
+                assert!(client.submit(i, p.src.clone()), "shed row {i}");
+            }
+        };
+        let (mb, rb, _) = svc.serve(&base, submit_all).unwrap();
+        let (mc, rc, _) = svc.serve(&cont, submit_all).unwrap();
+        assert_eq!(mb.requests, pairs.len());
+        assert_eq!(mc.requests, pairs.len());
+        assert_eq!(rb.len(), rc.len());
+        for (b, c) in rb.iter().zip(&rc) {
+            assert_eq!(b.id, c.id);
+            assert_eq!(b.out, c.out, "request {} diverges across schedulers", b.id);
+        }
+        // the continuous run actually ran iteration-level: it has pool
+        // observables the batch run lacks
+        assert!(mc.decode_steps > 0);
+        assert!(mc.slot_fill() > 0.0);
+        assert_eq!(mb.decode_steps, 0);
+    }
+
+    #[test]
+    fn continuous_scheduler_rejects_runtime_backend() {
+        use crate::coordinator::server::Scheduler;
+        let Some(svc) = service() else { return };
+        let cfg = ServerConfig {
+            backend: Backend::Runtime(crate::runtime::RtPrecision::Fp32),
+            scheduler: Scheduler::Continuous,
+            ..Default::default()
+        };
+        let err = svc.serve(&cfg, |_c| {}).unwrap_err();
+        assert!(err.to_string().contains("engine backend"), "{err}");
     }
 
     #[test]

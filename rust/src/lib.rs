@@ -40,8 +40,13 @@
 //!   measurement path), and [`coordinator::server`] is the online
 //!   request path — a bounded admission queue, a latency-aware dynamic
 //!   batcher (padded-token budget + max-wait deadline) and a shard
-//!   pool of worker streams, reporting per-request p50/p90/p99
-//!   latency, fill and shed rates via
+//!   pool of worker streams under either of two decode schedulers:
+//!   batch-synchronous (run-to-completion batches) or continuous
+//!   (iteration-level scheduling over the engine's persistent
+//!   [`model::engine::DecodePool`] KV-cache slot pool, with mid-flight
+//!   admission and per-step slot recycling) — reporting per-request
+//!   p50/p90/p99 latency, time-to-first-token, inter-token latency,
+//!   slot occupancy, fill and shed rates via
 //!   [`coordinator::metrics::ServerMetrics`].
 //!
 //! Build-time Python (`python/compile/`) trains the model, calibrates

@@ -34,7 +34,12 @@
 //! (batching deadline), `--token-budget N`, `--batch N` (row cap),
 //! `--rate R` (offered load, req/s), `--queue-cap N` (admission bound),
 //! `--seed S` (arrival trace seed), `--limit N` (requests to replay),
-//! `--max-len N` (decode-length cap, default 56).
+//! `--max-len N` (decode-length cap, default 56),
+//! `--scheduler batch|continuous` (decode discipline: run-to-completion
+//! dynamic batches vs iteration-level scheduling over a persistent
+//! KV-cache slot pool with mid-flight admission; engine backends only
+//! for `continuous`), `--slots N` (KV-cache slots per shard pool,
+//! default = the `--batch` row cap).
 //!
 //! `recipe derive` flags: `--synthetic` (deterministic synthetic
 //! calibration table, no artifacts needed), `--mode M` (default mode),
@@ -46,7 +51,7 @@
 
 use quantnmt::coordinator::server::{poisson_offsets, replay_trace, TranslateRequest};
 use quantnmt::coordinator::service::DEFAULT_TOKEN_BUDGET;
-use quantnmt::coordinator::{Backend, ServerConfig, Service, ServiceConfig};
+use quantnmt::coordinator::{Backend, Scheduler, ServerConfig, Service, ServiceConfig};
 use quantnmt::data::sorting::SortOrder;
 use quantnmt::model::plan::SiteSet;
 use quantnmt::model::ModelConfig;
@@ -188,6 +193,8 @@ fn parse_server_config(args: &Args, svc: &Service) -> anyhow::Result<ServerConfi
         max_src_len: None,
         pin_cores: !args.flag("no-pin"),
         max_decode_len: args.get_usize("max-len", 56),
+        scheduler: Scheduler::parse_or(args.get("scheduler"), Scheduler::Batch),
+        slots: args.get_usize("slots", 0),
     })
 }
 
@@ -215,6 +222,28 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         metrics.utilization * 100.0,
         metrics.wall_secs
     );
+    if cfg.scheduler == Scheduler::Continuous {
+        println!(
+            "ttft p50/p90/p99 {:.1}/{:.1}/{:.1}ms  itl p50/p90/p99 {:.2}/{:.2}/{:.2}ms",
+            metrics.ttft_latency.p50() * 1e3,
+            metrics.ttft_latency.p90() * 1e3,
+            metrics.ttft_latency.p99() * 1e3,
+            metrics.inter_token_latency.p50() * 1e3,
+            metrics.inter_token_latency.p90() * 1e3,
+            metrics.inter_token_latency.p99() * 1e3,
+        );
+        let fills: Vec<String> = metrics
+            .shard_fill
+            .iter()
+            .map(|f| format!("{:.1}%", f * 100.0))
+            .collect();
+        println!(
+            "decode steps {}  slot occupancy {:.1}% (per shard: {})",
+            metrics.decode_steps,
+            metrics.slot_fill() * 100.0,
+            fills.join(" "),
+        );
+    }
     Ok(())
 }
 

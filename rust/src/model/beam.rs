@@ -14,7 +14,7 @@
 //! module gathers over is built from the typed per-layer site ids, not
 //! string lookups.
 
-use super::engine::{DecodeState, Engine};
+use super::engine::{DecodePool, Engine};
 use crate::specials::{BOS_ID, EOS_ID, PAD_ID};
 
 /// Beam-search hyperparameters.
@@ -84,7 +84,11 @@ pub fn translate_beam(engine: &mut Engine, src: &[Vec<u32>], bc: BeamConfig) -> 
             len_rep[slot] = src_len[sent];
         }
     }
-    let mut st: DecodeState = engine.init_decode(&mem_rep, &len_rep, s, max_len);
+    // all beam slots stay live for the whole decode (finished
+    // hypotheses still occupy their slot so the gather permutation is
+    // total), so the active set is the identity schedule
+    let mut pool: DecodePool = engine.new_pool(slots, max_len, s);
+    let all_slots: Vec<usize> = engine.admit(&mut pool, &mem_rep, &len_rep, s);
 
     let vocab = engine.cfg.vocab_size;
     let mut hyps: Vec<Vec<Hyp>> = (0..bsz)
@@ -104,8 +108,8 @@ pub fn translate_beam(engine: &mut Engine, src: &[Vec<u32>], bc: BeamConfig) -> 
     let mut gather_bytes = 0usize;
     let mut gather_calls = 0usize;
 
-    for pos in 0..max_len {
-        engine.decode_step(&mut st, &tokens, pos, &mut logits);
+    for _pos in 0..max_len {
+        engine.pool_step(&mut pool, &all_slots, &tokens, &mut logits);
         let mut beam_src = vec![0usize; slots];
         let mut next_tokens = vec![PAD_ID; slots];
         let mut all_finished = true;
@@ -199,21 +203,13 @@ pub fn translate_beam(engine: &mut Engine, src: &[Vec<u32>], bc: BeamConfig) -> 
             }
             continue;
         }
-        for layer in 0..engine.cfg.n_dec_layers {
-            for cache in [
-                &mut st.self_k[layer],
-                &mut st.self_v[layer],
-                &mut st.cross_k[layer],
-                &mut st.cross_v[layer],
-            ] {
-                let t0 = std::time::Instant::now();
-                gather_bytes += cache.beam_gather(&beam_src);
-                engine
-                    .profiler
-                    .add(crate::model::profiler::OpKind::GatherNd, t0.elapsed());
-                gather_calls += 1;
-            }
-        }
+        let t0 = std::time::Instant::now();
+        let (bytes, calls) = pool.beam_gather(&beam_src);
+        engine
+            .profiler
+            .add(crate::model::profiler::OpKind::GatherNd, t0.elapsed());
+        gather_bytes += bytes;
+        gather_calls += calls;
         tokens = next_tokens;
         if all_finished {
             break;

@@ -10,6 +10,16 @@
 //! the per-engine scratch + profiler.  Engines built from the same
 //! `Arc<CompiledPlan>` share the read-only quantized weights.
 //!
+//! Decoding runs on a **slot-pool runtime**: a long-lived
+//! [`DecodePool`] of KV-cache slots (admit → step → finish → recycle)
+//! plus a per-iteration *active set*, so each [`Engine::pool_step`]
+//! computes only live slots — finished sequences cost zero GEMM rows
+//! and newly-admitted requests splice in mid-flight.  Both the offline
+//! greedy path and the online continuous scheduler
+//! ([`crate::coordinator::server`]) are thin clients of the same pool,
+//! which is what makes batch-synchronous and iteration-level
+//! scheduling bit-identical per request.
+//!
 //! Softmax and LayerNorm always run in FP32 (§3 of the paper).  The
 //! profiler brackets every op family so Fig 7 can be regenerated.
 
@@ -19,7 +29,7 @@ use crate::gemm::QGemmScratch;
 use crate::model::config::ModelConfig;
 use crate::model::kvcache::KvCache;
 use crate::model::layers::{self, AttnScratch};
-use crate::model::plan::{CompiledPlan, SiteId, SiteSet};
+use crate::model::plan::{CompiledPlan, SiteSet};
 use crate::model::profiler::{OpKind, Profiler};
 use crate::model::weights::Weights;
 use crate::quant::calibrate::{CalibrationMode, SiteTable};
@@ -64,18 +74,147 @@ pub struct Engine {
     pub int8_cache: bool,
 }
 
-/// Per-batch decoder state (self-attn caches + cross-attn memory caches).
-pub struct DecodeState {
+/// One slot's lifecycle state in a [`DecodePool`]:
+/// `Free -> (admit) -> Active -> (finish/recycle) -> Free`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    /// on the free list; cache storage is cleared (recycle-before-admit)
+    Free,
+    /// occupied by a live request mid-decode
+    Active,
+}
+
+/// A long-lived pool of KV-cache slots — the state half of the
+/// iteration-level decode runtime.
+///
+/// Where the old per-batch `DecodeState` was allocated per formed batch
+/// and lived exactly one batch-synchronous drain, a `DecodePool` is
+/// allocated **once** (per worker stream) and requests flow through it:
+/// [`Engine::admit`] splices encoded requests into free slots,
+/// [`Engine::pool_step`] advances an *active set* of slots by one
+/// token, and [`DecodePool::finish`] recycles a slot — clearing its
+/// quantized K/V storage without reallocating — the moment its request
+/// completes.  Per-slot decode positions and source lengths live here,
+/// so slots admitted at different times decode correctly side by side.
+///
+/// Cache storage precision per layer comes from the compiled plan's
+/// [`KvSpec`](crate::model::plan::KvSpec) (u8 at the site's scale, or
+/// f32), exactly as the per-batch state used to decide it.
+pub struct DecodePool {
     /// per layer: K and V self-attention caches, `H*Tmax*dh` per slot
-    pub self_k: Vec<KvCache>,
-    pub self_v: Vec<KvCache>,
-    /// per layer: cross-attention K/V of the encoder memory, `H*S*dh` per slot
-    pub cross_k: Vec<KvCache>,
-    pub cross_v: Vec<KvCache>,
+    self_k: Vec<KvCache>,
+    self_v: Vec<KvCache>,
+    /// per layer: cross-attention K/V of the encoder memory,
+    /// `H*src_cap*dh` per slot
+    cross_k: Vec<KvCache>,
+    cross_v: Vec<KvCache>,
     /// source length per slot (pads are suffix-only)
-    pub src_len: Vec<usize>,
-    pub t_max: usize,
-    pub src_max: usize,
+    src_len: Vec<usize>,
+    /// next decode position per slot (== tokens already consumed)
+    pos: Vec<usize>,
+    state: Vec<SlotState>,
+    /// recycled slots, LIFO (pool construction seeds it so the first
+    /// admits take slots 0, 1, 2, ... in order)
+    free: Vec<usize>,
+    t_max: usize,
+    src_cap: usize,
+    capacity: usize,
+}
+
+impl DecodePool {
+    /// Total slots (fixed at construction).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Slots available for admission.
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Slots currently occupied by live requests.
+    pub fn active_slots(&self) -> usize {
+        self.capacity - self.free.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.free.len() == self.capacity
+    }
+
+    /// Decode position of a slot (tokens consumed so far).
+    pub fn pos(&self, slot: usize) -> usize {
+        self.pos[slot]
+    }
+
+    /// Source length of a slot's request.
+    pub fn src_len(&self, slot: usize) -> usize {
+        self.src_len[slot]
+    }
+
+    pub fn state(&self, slot: usize) -> SlotState {
+        self.state[slot]
+    }
+
+    /// Decode-length capacity (positions per slot).
+    pub fn t_max(&self) -> usize {
+        self.t_max
+    }
+
+    /// Source-length capacity (cross-cache positions per slot).
+    pub fn src_cap(&self) -> usize {
+        self.src_cap
+    }
+
+    /// Finish a slot: clear its K/V storage (both precisions — a
+    /// recycled slot must never leak the previous request's keys or
+    /// values) and return it to the free list.  The storage itself is
+    /// reused, not reallocated — recycling is a memset, not a malloc.
+    pub fn finish(&mut self, slot: usize) {
+        assert_eq!(
+            self.state[slot],
+            SlotState::Active,
+            "finish on non-active slot {slot}"
+        );
+        for li in 0..self.self_k.len() {
+            self.self_k[li].clear_slot(slot);
+            self.self_v[li].clear_slot(slot);
+            self.cross_k[li].clear_slot(slot);
+            self.cross_v[li].clear_slot(slot);
+        }
+        self.src_len[slot] = 0;
+        self.pos[slot] = 0;
+        self.state[slot] = SlotState::Free;
+        self.free.push(slot);
+    }
+
+    /// Beam reorder across **all** caches: `slot s = old beam_src[s]`
+    /// (the §5.3 GatherNd), with the per-slot bookkeeping (position,
+    /// source length) following the permutation.  All slots must be
+    /// active (beam search keeps every slot live).  Returns
+    /// `(bytes_moved, gather_calls)` for the §5.3 accounting.
+    pub fn beam_gather(&mut self, beam_src: &[usize]) -> (usize, usize) {
+        assert_eq!(beam_src.len(), self.capacity, "one source per slot");
+        let mut bytes = 0usize;
+        let mut calls = 0usize;
+        for li in 0..self.self_k.len() {
+            for cache in [
+                &mut self.self_k[li],
+                &mut self.self_v[li],
+                &mut self.cross_k[li],
+                &mut self.cross_v[li],
+            ] {
+                bytes += cache.beam_gather(beam_src);
+                calls += 1;
+            }
+        }
+        let old_len = self.src_len.clone();
+        let old_pos = self.pos.clone();
+        for (s, &src) in beam_src.iter().enumerate() {
+            self.src_len[s] = old_len[src];
+            self.pos[s] = old_pos[src];
+        }
+        (bytes, calls)
+    }
 }
 
 impl Engine {
@@ -251,53 +390,94 @@ impl Engine {
     // decoder (incremental, KV-cached)
     // ----------------------------------------------------------------
 
-    /// Build decoder state for `slots` parallel hypotheses over an
-    /// encoded memory (`[slots*S*D]`).  For greedy, slots == batch; beam
-    /// search passes batch * beam (memory rows pre-replicated).
-    pub fn init_decode(
-        &mut self,
-        memory: &[f32],
-        src_len: &[usize],
-        s: usize,
-        t_max: usize,
-    ) -> DecodeState {
-        let slots = src_len.len();
-        let d = self.plan.d_model;
+    /// Allocate a [`DecodePool`]: `capacity` KV-cache slots able to
+    /// decode `t_max` positions against sources up to `src_cap` tokens.
+    /// Storage precision per layer comes from the compiled plan's
+    /// [`KvSpec`](crate::model::plan::KvSpec).  Allocation happens
+    /// exactly once — admission and recycling reuse the same buffers.
+    pub fn new_pool(&self, capacity: usize, t_max: usize, src_cap: usize) -> DecodePool {
+        assert!(capacity > 0, "pool needs at least one slot");
         let h = self.plan.n_heads;
         let dh = self.plan.d_head;
-        assert_eq!(memory.len(), slots * s * d);
         let self_slot = h * t_max * dh;
-        let cross_slot = h * s * dh;
-
-        let mut st = DecodeState {
+        let cross_slot = h * src_cap * dh;
+        let mk = |scale: Option<f32>, slot_len: usize| -> KvCache {
+            match scale {
+                Some(scale) => KvCache::new_u8(capacity, slot_len, scale),
+                None => KvCache::new_f32(capacity, slot_len),
+            }
+        };
+        let mut pool = DecodePool {
             self_k: Vec::new(),
             self_v: Vec::new(),
             cross_k: Vec::new(),
             cross_v: Vec::new(),
-            src_len: src_len.to_vec(),
+            src_len: vec![0; capacity],
+            pos: vec![0; capacity],
+            state: vec![SlotState::Free; capacity],
+            free: (0..capacity).rev().collect(),
             t_max,
-            src_max: s,
+            src_cap,
+            capacity,
         };
         for li in 0..self.cfg.n_dec_layers {
+            let spec = self.plan.kv_spec(li);
+            pool.self_k.push(mk(spec.self_k, self_slot));
+            pool.self_v.push(mk(spec.self_v, self_slot));
+            pool.cross_k.push(mk(spec.cross_k, cross_slot));
+            pool.cross_v.push(mk(spec.cross_v, cross_slot));
+        }
+        pool
+    }
+
+    /// Admit encoded requests into free slots (the prefill half of an
+    /// iteration): compute the cross-attention K/V of each request's
+    /// encoder memory (`[rows*s*D]`, padded to a common `s`) and write
+    /// it into a freshly-recycled slot per row.  Returns the assigned
+    /// slots, one per row, in row order.
+    ///
+    /// Panics if the pool lacks free slots or `s` exceeds its source
+    /// capacity — the serving layer sizes admission to the pool.
+    pub fn admit(
+        &mut self,
+        pool: &mut DecodePool,
+        memory: &[f32],
+        src_len: &[usize],
+        s: usize,
+    ) -> Vec<usize> {
+        let rows = src_len.len();
+        let d = self.plan.d_model;
+        let h = self.plan.n_heads;
+        let dh = self.plan.d_head;
+        assert_eq!(memory.len(), rows * s * d, "admit: memory shape");
+        assert!(
+            s <= pool.src_cap,
+            "admit: padded source {s} exceeds pool src capacity {}",
+            pool.src_cap
+        );
+        assert!(
+            rows <= pool.free.len(),
+            "admit: {rows} rows into {} free slots",
+            pool.free.len()
+        );
+        let slots: Vec<usize> = (0..rows).map(|_| pool.free.pop().unwrap()).collect();
+        for (r, &slot) in slots.iter().enumerate() {
+            debug_assert_eq!(pool.state[slot], SlotState::Free);
+            pool.state[slot] = SlotState::Active;
+            pool.pos[slot] = 0;
+            pool.src_len[slot] = src_len[r];
+        }
+        // precompute cross K/V of the memory (the paper's enc-dec
+        // cache): one dense per layer over all admitted rows at once
+        for li in 0..self.cfg.n_dec_layers {
             let lp = &self.plan.dec[li];
-            let mk = |site: SiteId, slot_len: usize| -> KvCache {
-                match &self.plan.site(site).quant {
-                    Some(q) => KvCache::new_u8(slots, slot_len, q.b_scale),
-                    None => KvCache::new_f32(slots, slot_len),
-                }
-            };
-            st.self_k.push(mk(lp.self_attn.qk, self_slot));
-            st.self_v.push(mk(lp.self_attn.pv, self_slot));
-            let mut ck = mk(lp.cross.qk, cross_slot);
-            let mut cv = mk(lp.cross.pv, cross_slot);
-            // precompute cross K/V of the memory (the paper's enc-dec cache)
             layers::dense(
                 &self.plan,
                 &mut self.scratch,
                 &mut self.profiler,
                 lp.cross.k,
                 memory,
-                slots * s,
+                rows * s,
                 &mut self.acts.k,
             );
             layers::dense(
@@ -306,60 +486,81 @@ impl Engine {
                 &mut self.profiler,
                 lp.cross.v,
                 memory,
-                slots * s,
+                rows * s,
                 &mut self.acts.v,
             );
-            for slot in 0..slots {
+            let stride = pool.src_cap;
+            for (r, &slot) in slots.iter().enumerate() {
                 for head in 0..h {
                     for t in 0..s {
-                        let kr = &self.acts.k[(slot * s + t) * d + head * dh..][..dh];
-                        let vr = &self.acts.v[(slot * s + t) * d + head * dh..][..dh];
-                        ck.write(slot, (head * s + t) * dh, kr);
-                        cv.write(slot, (head * s + t) * dh, vr);
+                        let kr = &self.acts.k[(r * s + t) * d + head * dh..][..dh];
+                        let vr = &self.acts.v[(r * s + t) * d + head * dh..][..dh];
+                        pool.cross_k[li].write(slot, (head * stride + t) * dh, kr);
+                        pool.cross_v[li].write(slot, (head * stride + t) * dh, vr);
                     }
                 }
             }
-            st.cross_k.push(ck);
-            st.cross_v.push(cv);
         }
-        st
+        slots
     }
 
-    /// One decoder step: token per slot at position `pos` -> logits
-    /// `[slots * vocab]`.  Writes this step's K/V into the caches.
-    pub fn decode_step(
+    /// One iteration of the pool: advance the **active set** by one
+    /// token each.  `active[i]` is a pool slot and `tokens[i]` the
+    /// token it consumes at its own position `pool.pos(slot)`; logits
+    /// come back compacted, `[active.len() * vocab]`, row `i` for slot
+    /// `active[i]`.  Finished slots simply aren't listed — they cost
+    /// zero GEMM rows (asserted via the profiler's per-site row
+    /// accounting).  Advances each listed slot's position.
+    pub fn pool_step(
         &mut self,
-        st: &mut DecodeState,
+        pool: &mut DecodePool,
+        active: &[usize],
         tokens: &[u32],
-        pos: usize,
         logits: &mut Vec<f32>,
     ) {
-        let slots = tokens.len();
+        let n = active.len();
+        assert_eq!(tokens.len(), n, "one token per active slot");
+        if n == 0 {
+            logits.clear();
+            return;
+        }
         let d = self.plan.d_model;
         let h = self.plan.n_heads;
         let dh = self.plan.d_head;
-        let s = st.src_max;
+        for &slot in active {
+            assert_eq!(
+                pool.state[slot],
+                SlotState::Active,
+                "pool_step: slot {slot} is not active"
+            );
+            assert!(
+                pool.pos[slot] < pool.t_max,
+                "pool_step: slot {slot} stepped past t_max {}",
+                pool.t_max
+            );
+        }
 
         self.embed_tokens(tokens);
         self.profiler.time(OpKind::Embed, || {
-            for slot in 0..slots {
+            for (i, &slot) in active.iter().enumerate() {
+                let pos = pool.pos[slot];
                 for c in 0..d {
-                    self.acts.x[slot * d + c] += self.plan.pe[pos * d + c];
+                    self.acts.x[i * d + c] += self.plan.pe[pos * d + c];
                 }
             }
         });
-        self.acts.attn.resize(slots * d, 0.0);
+        self.acts.attn.resize(n * d, 0.0);
 
         for li in 0..self.cfg.n_dec_layers {
             let lp = &self.plan.dec[li];
-            // --- self attention (incremental) ---
+            // --- self attention (incremental, per-slot positions) ---
             layers::dense(
                 &self.plan,
                 &mut self.scratch,
                 &mut self.profiler,
                 lp.self_attn.q,
                 &self.acts.x,
-                slots,
+                n,
                 &mut self.acts.q,
             );
             layers::dense(
@@ -368,7 +569,7 @@ impl Engine {
                 &mut self.profiler,
                 lp.self_attn.k,
                 &self.acts.x,
-                slots,
+                n,
                 &mut self.acts.k,
             );
             layers::dense(
@@ -377,18 +578,19 @@ impl Engine {
                 &mut self.profiler,
                 lp.self_attn.v,
                 &self.acts.x,
-                slots,
+                n,
                 &mut self.acts.v,
             );
-            for slot in 0..slots {
+            for (i, &slot) in active.iter().enumerate() {
+                let pos = pool.pos[slot];
                 for head in 0..h {
-                    let kr = &self.acts.k[slot * d + head * dh..][..dh];
-                    let vr = &self.acts.v[slot * d + head * dh..][..dh];
-                    st.self_k[li].write(slot, (head * st.t_max + pos) * dh, kr);
-                    st.self_v[li].write(slot, (head * st.t_max + pos) * dh, vr);
+                    let kr = &self.acts.k[i * d + head * dh..][..dh];
+                    let vr = &self.acts.v[i * d + head * dh..][..dh];
+                    pool.self_k[li].write(slot, (head * pool.t_max + pos) * dh, kr);
+                    pool.self_v[li].write(slot, (head * pool.t_max + pos) * dh, vr);
                 }
             }
-            let klen = pos + 1;
+            let pos_of = &pool.pos;
             layers::cached_attention(
                 &self.plan,
                 &mut self.attn_sc,
@@ -396,11 +598,11 @@ impl Engine {
                 lp.self_attn.qk,
                 lp.self_attn.pv,
                 &self.acts.q,
-                &st.self_k[li],
-                &st.self_v[li],
-                slots,
-                st.t_max,
-                |_slot| klen,
+                &pool.self_k[li],
+                &pool.self_v[li],
+                active,
+                pool.t_max,
+                |slot| pos_of[slot] + 1,
                 &mut self.acts.attn,
             );
             layers::dense(
@@ -409,7 +611,7 @@ impl Engine {
                 &mut self.profiler,
                 lp.self_attn.o,
                 &self.acts.attn,
-                slots,
+                n,
                 &mut self.acts.tmp,
             );
             ops::add_assign(&mut self.acts.x, &self.acts.tmp);
@@ -422,9 +624,11 @@ impl Engine {
                 &mut self.profiler,
                 lp.cross.q,
                 &self.acts.x,
-                slots,
+                n,
                 &mut self.acts.q,
             );
+            let src_len = &pool.src_len;
+            let src_cap = pool.src_cap;
             layers::cached_attention(
                 &self.plan,
                 &mut self.attn_sc,
@@ -432,11 +636,11 @@ impl Engine {
                 lp.cross.qk,
                 lp.cross.pv,
                 &self.acts.q,
-                &st.cross_k[li],
-                &st.cross_v[li],
-                slots,
-                s,
-                |slot| st.src_len[slot].min(s),
+                &pool.cross_k[li],
+                &pool.cross_v[li],
+                active,
+                src_cap,
+                |slot| src_len[slot].min(src_cap),
                 &mut self.acts.attn,
             );
             layers::dense(
@@ -445,7 +649,7 @@ impl Engine {
                 &mut self.profiler,
                 lp.cross.o,
                 &self.acts.attn,
-                slots,
+                n,
                 &mut self.acts.tmp,
             );
             ops::add_assign(&mut self.acts.x, &self.acts.tmp);
@@ -459,7 +663,7 @@ impl Engine {
                 &mut self.profiler,
                 &lp.ffn,
                 &self.acts.x,
-                slots,
+                n,
                 &mut self.acts.tmp,
             );
             ops::add_assign(&mut self.acts.x, &self.acts.tmp);
@@ -471,13 +675,24 @@ impl Engine {
             &mut self.profiler,
             self.plan.logits,
             &self.acts.x,
-            slots,
+            n,
             logits,
         );
+        for &slot in active {
+            pool.pos[slot] += 1;
+        }
     }
 
     /// Greedy-translate a padded batch. Returns token rows (PAD-free,
     /// EOS-stripped).
+    ///
+    /// A thin client of the slot-pool runtime: every source is admitted
+    /// into its own slot and the active set shrinks as slots emit EOS,
+    /// so finished sentences cost **zero** GEMM rows on later steps
+    /// (the old batch-synchronous loop kept stepping them with PAD
+    /// tokens until the whole batch drained).  Outputs are bit-identical
+    /// to that loop — decode math is row-wise, so dropping a finished
+    /// row never perturbs the others.
     pub fn translate_greedy(&mut self, src: &[Vec<u32>], t_max: usize) -> Vec<Vec<u32>> {
         let bsz = src.len();
         // the positional table (and cache) only covers max_tgt_len steps
@@ -485,34 +700,35 @@ impl Engine {
         if bsz == 0 {
             return Vec::new();
         }
-        let (memory, src_len, s) = self.encode(src);
-        let mut st = self.init_decode(&memory, &src_len, s, t_max);
-        let mut tokens = vec![BOS_ID; bsz];
-        let mut finished = vec![false; bsz];
         let mut out: Vec<Vec<u32>> = vec![Vec::new(); bsz];
+        if t_max == 0 {
+            return out;
+        }
+        let (memory, src_len, s) = self.encode(src);
+        let mut pool = self.new_pool(bsz, t_max, s);
+        // fresh pool: slot i == source row i
+        let mut active = self.admit(&mut pool, &memory, &src_len, s);
+        let mut tokens = vec![BOS_ID; bsz];
         let mut logits = Vec::new();
         let v = self.cfg.vocab_size;
-        for pos in 0..t_max {
-            self.decode_step(&mut st, &tokens, pos, &mut logits);
-            let mut all_done = true;
-            for b in 0..bsz {
-                if finished[b] {
-                    tokens[b] = PAD_ID;
-                    continue;
+        while !active.is_empty() {
+            self.pool_step(&mut pool, &active, &tokens, &mut logits);
+            let mut keep = Vec::with_capacity(active.len());
+            let mut next_tokens = Vec::with_capacity(active.len());
+            for (i, &slot) in active.iter().enumerate() {
+                let next = ops::argmax(&logits[i * v..(i + 1) * v]) as u32;
+                if next != EOS_ID {
+                    out[slot].push(next);
                 }
-                let next = ops::argmax(&logits[b * v..(b + 1) * v]) as u32;
-                if next == EOS_ID {
-                    finished[b] = true;
-                    tokens[b] = PAD_ID;
+                if next == EOS_ID || pool.pos(slot) >= t_max {
+                    pool.finish(slot);
                 } else {
-                    out[b].push(next);
-                    tokens[b] = next;
-                    all_done = false;
+                    keep.push(slot);
+                    next_tokens.push(next);
                 }
             }
-            if all_done && finished.iter().all(|&f| f) {
-                break;
-            }
+            active = keep;
+            tokens = next_tokens;
         }
         out
     }
@@ -634,5 +850,240 @@ mod tests {
         let w = random_weights(&cfg, 6);
         let mut e = Engine::fp32(cfg, w).unwrap();
         assert!(e.translate_greedy(&[], 8).is_empty());
+    }
+
+    #[test]
+    fn pool_lifecycle_admit_step_finish_recycle() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 11);
+        let mut e = Engine::fp32(cfg.clone(), w).unwrap();
+        let src = vec![vec![3, 4, 5, 2], vec![6, 7, 2]];
+        let (memory, src_len, s) = e.encode(&src);
+        let mut pool = e.new_pool(4, 8, s);
+        assert_eq!(pool.capacity(), 4);
+        assert_eq!(pool.free_slots(), 4);
+        assert!(pool.is_idle());
+
+        let slots = e.admit(&mut pool, &memory, &src_len, s);
+        assert_eq!(slots, vec![0, 1], "fresh pool admits in slot order");
+        assert_eq!(pool.active_slots(), 2);
+        assert_eq!(pool.state(0), SlotState::Active);
+        assert_eq!(pool.src_len(0), src_len[0]);
+
+        let mut logits = Vec::new();
+        e.pool_step(&mut pool, &slots, &[BOS_ID, BOS_ID], &mut logits);
+        assert_eq!(logits.len(), 2 * cfg.vocab_size);
+        assert_eq!(pool.pos(0), 1);
+        assert_eq!(pool.pos(1), 1);
+
+        pool.finish(1);
+        assert_eq!(pool.state(1), SlotState::Free);
+        assert_eq!(pool.free_slots(), 3);
+        // stepping only the surviving slot still works
+        e.pool_step(&mut pool, &[0], &[5], &mut logits);
+        assert_eq!(logits.len(), cfg.vocab_size);
+        assert_eq!(pool.pos(0), 2);
+        pool.finish(0);
+        assert!(pool.is_idle());
+    }
+
+    #[test]
+    fn finished_slots_cost_zero_gemm_rows() {
+        // the iteration-level-scheduling observable: per-site GEMM rows
+        // per step track the active set, not the pool size
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 12);
+        let mut e = Engine::fp32(cfg.clone(), w).unwrap();
+        let src = vec![vec![3, 4, 2], vec![5, 6, 2], vec![7, 8, 2]];
+        let (memory, src_len, s) = e.encode(&src);
+        let mut pool = e.new_pool(3, 8, s);
+        let slots = e.admit(&mut pool, &memory, &src_len, s);
+        let logits_site = e.plan().logits;
+        let mut logits = Vec::new();
+
+        e.profiler = Profiler::enabled();
+        e.pool_step(&mut pool, &slots, &[BOS_ID; 3], &mut logits);
+        assert_eq!(e.profiler.site_rows(logits_site), 3);
+
+        pool.finish(1);
+        e.profiler = Profiler::enabled();
+        e.pool_step(&mut pool, &[0, 2], &[4, 4], &mut logits);
+        assert_eq!(e.profiler.site_rows(logits_site), 2, "finished slot still billed");
+
+        pool.finish(2);
+        e.profiler = Profiler::enabled();
+        e.pool_step(&mut pool, &[0], &[4], &mut logits);
+        assert_eq!(e.profiler.site_rows(logits_site), 1);
+    }
+
+    #[test]
+    fn greedy_gemm_rows_match_live_steps_exactly() {
+        // translate_greedy over the pool performs exactly one logits
+        // row per live (slot, step) pair: Σ_b min(|out_b|+1, t_max) —
+        // the old batch-synchronous loop billed bsz rows on every step
+        // until the slowest row drained
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 13);
+        let mut e = Engine::fp32(cfg.clone(), w).unwrap();
+        e.profiler = Profiler::enabled();
+        let t_max = 8usize;
+        let src = vec![
+            vec![3, 4, 5, 2],
+            vec![6, 7, 2],
+            vec![8, 9, 10, 11, 2],
+            vec![12, 3, 2],
+        ];
+        let out = e.translate_greedy(&src, t_max);
+        let expect: u64 = out.iter().map(|o| (o.len() + 1).min(t_max) as u64).sum();
+        assert_eq!(e.profiler.site_rows(e.plan().logits), expect);
+    }
+
+    #[test]
+    fn recycled_slots_decode_identically_to_fresh_pool() {
+        // occupy a pool, finish everything, reuse it for a different
+        // request set: outputs must be bit-identical to a fresh pool's
+        // (the no-leak guarantee at the engine level, quantized caches)
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 14);
+        let mut e = Engine::with_recipe(cfg.clone(), w, &loose_recipe(&cfg)).unwrap();
+        let first = vec![vec![3, 4, 5, 6, 2], vec![7, 8, 9, 2]];
+        let second = vec![vec![10, 11, 2], vec![12, 13, 14, 2]];
+        // reference: each set through its own translate_greedy
+        let expect = e.translate_greedy(&second, 8);
+
+        // now decode `first`, recycle, decode `second` in the same pool
+        let (m1, l1, s1) = e.encode(&first);
+        let mut pool = e.new_pool(2, 8, cfg.max_src_len);
+        let slots = e.admit(&mut pool, &m1, &l1, s1);
+        let mut logits = Vec::new();
+        e.pool_step(&mut pool, &slots, &[BOS_ID, BOS_ID], &mut logits);
+        for slot in slots {
+            pool.finish(slot);
+        }
+        let (m2, l2, s2) = e.encode(&second);
+        let slots = e.admit(&mut pool, &m2, &l2, s2);
+        // admit order defines the slot -> request-row mapping (the
+        // LIFO free list may hand slots back in any order)
+        let mut row_of = vec![usize::MAX; pool.capacity()];
+        for (r, &slot) in slots.iter().enumerate() {
+            row_of[slot] = r;
+        }
+        let mut tokens = vec![BOS_ID; slots.len()];
+        let mut active = slots;
+        let mut out: Vec<Vec<u32>> = vec![Vec::new(); 2];
+        let v = cfg.vocab_size;
+        while !active.is_empty() {
+            e.pool_step(&mut pool, &active, &tokens, &mut logits);
+            let mut keep = Vec::new();
+            let mut next_tokens = Vec::new();
+            for (i, &slot) in active.iter().enumerate() {
+                let next = ops::argmax(&logits[i * v..(i + 1) * v]) as u32;
+                if next != EOS_ID {
+                    out[row_of[slot]].push(next);
+                }
+                if next == EOS_ID || pool.pos(slot) >= 8 {
+                    pool.finish(slot);
+                } else {
+                    keep.push(slot);
+                    next_tokens.push(next);
+                }
+            }
+            active = keep;
+            tokens = next_tokens;
+        }
+        assert_eq!(out, expect, "recycled pool diverges from fresh decode");
+    }
+
+    #[test]
+    fn mid_flight_admission_matches_isolated_decode() {
+        // a request spliced into the pool while another is mid-decode
+        // must produce exactly what it produces alone — per-slot
+        // positions keep interleaved lifetimes independent
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 15);
+        let mut e = Engine::fp32(cfg.clone(), w).unwrap();
+        // pick a first request that decodes ≥ 3 tokens (so splicing the
+        // second request genuinely happens mid-flight), searching a few
+        // deterministic candidates
+        let a = (0..32u32)
+            .map(|k| vec![3 + (k % 12), 4 + (k / 4 % 11), 5 + (k % 7), 2])
+            .find(|cand| e.translate_greedy(&[cand.clone()], 8)[0].len() >= 3)
+            .expect("some candidate decodes ≥3 tokens");
+        let b = vec![7u32, 8, 2];
+        let solo_a = e.translate_greedy(&[a.clone()], 8);
+        let solo_b = e.translate_greedy(&[b.clone()], 8);
+
+        let mut pool = e.new_pool(2, 8, cfg.max_src_len);
+        let (ma, la, sa) = e.encode(&[a]);
+        let slot_a = e.admit(&mut pool, &ma, &la, sa)[0];
+        let v = cfg.vocab_size;
+        let mut logits = Vec::new();
+        let mut tok_a = BOS_ID;
+        let mut out_a = Vec::new();
+        // two steps of `a` alone (no EOS yet, by construction of `a`)
+        for _ in 0..2 {
+            e.pool_step(&mut pool, &[slot_a], &[tok_a], &mut logits);
+            let next = ops::argmax(&logits[..v]) as u32;
+            out_a.push(next);
+            tok_a = next;
+        }
+        // splice `b` in mid-flight
+        let (mb, lb, sb) = e.encode(&[b]);
+        let slot_b = e.admit(&mut pool, &mb, &lb, sb)[0];
+        assert_ne!(slot_a, slot_b);
+        let mut tok_b = BOS_ID;
+        let mut out_b = Vec::new();
+        let mut live_a = true;
+        let mut live_b = true;
+        while live_a || live_b {
+            let (mut active, mut toks) = (Vec::new(), Vec::new());
+            if live_a {
+                active.push(slot_a);
+                toks.push(tok_a);
+            }
+            if live_b {
+                active.push(slot_b);
+                toks.push(tok_b);
+            }
+            e.pool_step(&mut pool, &active, &toks, &mut logits);
+            for (i, &slot) in active.iter().enumerate() {
+                let next = ops::argmax(&logits[i * v..(i + 1) * v]) as u32;
+                let (out, tok, live) = if slot == slot_a {
+                    (&mut out_a, &mut tok_a, &mut live_a)
+                } else {
+                    (&mut out_b, &mut tok_b, &mut live_b)
+                };
+                if next != EOS_ID {
+                    out.push(next);
+                }
+                if next == EOS_ID || pool.pos(slot) >= 8 {
+                    pool.finish(slot);
+                    *live = false;
+                } else {
+                    *tok = next;
+                }
+            }
+        }
+        assert_eq!(out_a, solo_a[0], "interleaving changed request a");
+        assert_eq!(out_b, solo_b[0], "mid-flight request b diverges from solo");
+    }
+
+    #[test]
+    fn pool_beam_gather_permutes_bookkeeping() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 16);
+        let mut e = Engine::fp32(cfg.clone(), w).unwrap();
+        let src = vec![vec![3, 4, 2], vec![5, 6, 7, 2]];
+        let (memory, src_len, s) = e.encode(&src);
+        let mut pool = e.new_pool(2, 8, s);
+        let slots = e.admit(&mut pool, &memory, &src_len, s);
+        let mut logits = Vec::new();
+        e.pool_step(&mut pool, &slots, &[BOS_ID, BOS_ID], &mut logits);
+        let (bytes, calls) = pool.beam_gather(&[1, 1]);
+        assert!(bytes > 0);
+        assert_eq!(calls, 4 * cfg.n_dec_layers);
+        // slot 0 now carries slot 1's request metadata
+        assert_eq!(pool.src_len(0), src_len[1]);
+        assert_eq!(pool.pos(0), 1);
     }
 }

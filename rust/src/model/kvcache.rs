@@ -124,6 +124,22 @@ impl KvCache {
         }
     }
 
+    /// Reset one slot to its freshly-allocated state (zeros for f32,
+    /// the zero point for u8).  The pool runtime calls this when a slot
+    /// is recycled, so a reused slot can never leak the previous
+    /// request's keys/values even if a later reader over-reads its
+    /// klen bound.
+    pub fn clear_slot(&mut self, slot: usize) {
+        assert!(slot < self.slots, "clear_slot: slot {slot} oob");
+        let base = slot * self.slot_len;
+        match &mut self.store {
+            CacheStore::F32(data) => data[base..base + self.slot_len].fill(0.0),
+            CacheStore::U8 { data, .. } => {
+                data[base..base + self.slot_len].fill(UINT8_ZERO_POINT as u8)
+            }
+        }
+    }
+
     /// Beam reorder: `self[slot s] = old self[beam_src[s]]` — the §5.3
     /// GatherNd.  Returns bytes moved (for the bench's accounting).
     pub fn beam_gather(&mut self, beam_src: &[usize]) -> usize {
@@ -218,6 +234,129 @@ mod tests {
         let bf = cf.beam_gather(&[0, 1, 2, 3]);
         let bq = cq.beam_gather(&[0, 1, 2, 3]);
         assert_eq!(bf, 4 * bq);
+    }
+
+    #[test]
+    fn beam_gather_identity_permutation_is_a_noop() {
+        for quantized in [false, true] {
+            let mut c = if quantized {
+                KvCache::new_u8(3, 4, 0.1)
+            } else {
+                KvCache::new_f32(3, 4)
+            };
+            for slot in 0..3 {
+                c.write(slot, 0, &[slot as f32 * 0.1, 0.2, 0.3, 0.4]);
+            }
+            let mut before = vec![0.0; 12];
+            for slot in 0..3 {
+                c.read_into(slot, 0, 4, &mut before[slot * 4..(slot + 1) * 4]);
+            }
+            c.beam_gather(&[0, 1, 2]);
+            let mut after = vec![0.0; 12];
+            for slot in 0..3 {
+                c.read_into(slot, 0, 4, &mut after[slot * 4..(slot + 1) * 4]);
+            }
+            assert_eq!(before, after, "identity gather changed data (q={quantized})");
+        }
+    }
+
+    #[test]
+    fn beam_gather_repeated_source_replicates() {
+        // every destination reads the same survivor — the all-beams-
+        // collapsed case beam search produces when one hypothesis
+        // dominates
+        for quantized in [false, true] {
+            let mut c = if quantized {
+                KvCache::new_u8(4, 2, 0.1)
+            } else {
+                KvCache::new_f32(4, 2)
+            };
+            for slot in 0..4 {
+                c.write(slot, 0, &[slot as f32, -(slot as f32)]);
+            }
+            c.beam_gather(&[3, 3, 3, 3]);
+            let mut expect = vec![0.0; 2];
+            c.read_into(3, 0, 2, &mut expect);
+            for slot in 0..4 {
+                let mut got = vec![0.0; 2];
+                c.read_into(slot, 0, 2, &mut got);
+                assert_eq!(got, expect, "slot {slot} (q={quantized})");
+            }
+        }
+    }
+
+    #[test]
+    fn beam_gather_single_slot() {
+        // the beam=1 degenerate case: a 1-slot gather must be the
+        // identity and must not touch out-of-slot memory
+        for quantized in [false, true] {
+            let mut c = if quantized {
+                KvCache::new_u8(1, 3, 0.1)
+            } else {
+                KvCache::new_f32(1, 3)
+            };
+            c.write(0, 0, &[0.5, -0.5, 1.0]);
+            let mut before = vec![0.0; 3];
+            c.read_into(0, 0, 3, &mut before);
+            c.beam_gather(&[0]);
+            let mut after = vec![0.0; 3];
+            c.read_into(0, 0, 3, &mut after);
+            assert_eq!(before, after);
+        }
+    }
+
+    #[test]
+    fn recycled_slot_never_leaks_prior_contents() {
+        // the slot-recycle property: after clear_slot, a recycled slot
+        // is indistinguishable from a freshly-allocated one — whatever
+        // the previous occupant wrote, wherever, in both storage
+        // precisions
+        use crate::util::prop::check;
+        check("kvcache-recycle", 0x5107, 64, |rng, _| {
+            let slots = 1 + rng.below(4) as usize;
+            let slot_len = 4 + rng.below(60) as usize;
+            let quantized = rng.below(2) == 1;
+            let mk = |q: bool| {
+                if q {
+                    KvCache::new_u8(slots, slot_len, 0.05)
+                } else {
+                    KvCache::new_f32(slots, slot_len)
+                }
+            };
+            let mut used = mk(quantized);
+            // a prior request scribbles over every slot
+            for slot in 0..slots {
+                let vals: Vec<f32> = (0..slot_len)
+                    .map(|_| (rng.below(200) as f32 - 100.0) * 0.01)
+                    .collect();
+                used.write(slot, 0, &vals);
+            }
+            let victim = rng.below(slots as u64) as usize;
+            used.clear_slot(victim);
+            // recycled slot reads exactly like a fresh cache's slot...
+            let fresh = mk(quantized);
+            let mut got = vec![1.0; slot_len];
+            let mut want = vec![2.0; slot_len];
+            used.read_into(victim, 0, slot_len, &mut got);
+            fresh.read_into(0, 0, slot_len, &mut want);
+            if got != want {
+                return Err(format!("recycled slot {victim} leaks (q={quantized})"));
+            }
+            // ...and a new occupant's writes land on clean storage
+            let vals: Vec<f32> = (0..slot_len).map(|i| (i as f32) * 0.01).collect();
+            let mut reused = used;
+            reused.write(victim, 0, &vals);
+            let mut fresh2 = mk(quantized);
+            fresh2.write(0, 0, &vals);
+            reused.read_into(victim, 0, slot_len, &mut got);
+            fresh2.read_into(0, 0, slot_len, &mut want);
+            if got != want {
+                return Err(format!(
+                    "recycled slot {victim} differs from fresh after rewrite (q={quantized})"
+                ));
+            }
+            Ok(())
+        });
     }
 
     #[test]

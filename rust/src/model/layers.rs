@@ -76,6 +76,7 @@ pub fn dense(
     let (k, n) = (w.k, w.n);
     assert_eq!(x.len(), rows * k, "dense {}: x len", plan.site_name(site));
     out.resize(rows * n, 0.0);
+    prof.add_site_rows(site, rows);
     match (&sp.quant, &w.store) {
         (Some(q), WeightStore::Quant(qw)) => {
             debug_assert_eq!(qw.data.len(), k * n);
@@ -329,8 +330,15 @@ pub fn ln(lnp: &LnPlan, prof: &mut Profiler, d: usize, x: &mut [f32]) {
 /// slot (the incremental decode path).  Dispatches to integer dot
 /// products when the site is quantized and the cache stores u8 — no
 /// dequantize on the path.  The query activation is quantized once per
-/// layer (whole `[slots, d]` tensor) and the attention probabilities
+/// layer (whole `[active, d]` tensor) and the attention probabilities
 /// once per slot (whole `[H, klen]` tensor), not once per head.
+///
+/// `active` is the compacted schedule of the iteration-level runtime:
+/// `q`/`out` hold one row per *active* slot (row `i` belongs to pool
+/// slot `active[i]`), while the caches are indexed by pool slot — so
+/// finished slots cost zero rows here without the caches being
+/// repacked.  `klen_of` receives the **pool slot** (per-slot decode
+/// positions and source lengths live with the pool, not the schedule).
 #[allow(clippy::too_many_arguments)]
 pub fn cached_attention(
     plan: &CompiledPlan,
@@ -341,7 +349,7 @@ pub fn cached_attention(
     q: &[f32],
     kcache: &KvCache,
     vcache: &KvCache,
-    slots: usize,
+    active: &[usize],
     t_stride: usize,
     klen_of: impl Fn(usize) -> usize,
     out: &mut [f32],
@@ -350,8 +358,8 @@ pub fn cached_attention(
     let h = plan.n_heads;
     let dh = plan.d_head;
     let inv_sqrt = 1.0 / (dh as f32).sqrt();
-    debug_assert_eq!(q.len(), slots * d);
-    debug_assert_eq!(out.len(), slots * d);
+    debug_assert_eq!(q.len(), active.len() * d);
+    debug_assert_eq!(out.len(), active.len() * d);
     let qk_quant = &plan.site(qk).quant;
     let pv_quant = &plan.site(pv).quant;
     sc.kv_row.resize(dh, 0.0);
@@ -366,7 +374,7 @@ pub fn cached_attention(
         });
     }
 
-    for slot in 0..slots {
+    for (i, &slot) in active.iter().enumerate() {
         let klen = klen_of(slot);
         sc.dec_scores.resize(h * klen, 0.0);
         // ---- scores = q . k_t, per head against the cache ----
@@ -376,7 +384,7 @@ pub fn cached_attention(
                 let (kraw, kscale) = kcache.raw_u8(slot, head * t_stride * dh, klen * dh);
                 let s = sq.a.scale * kscale;
                 let za = sq.a.zero;
-                let qrow = &sc.q_q8[slot * d + head * dh..][..dh];
+                let qrow = &sc.q_q8[i * d + head * dh..][..dh];
                 prof.time_site(OpKind::QuantizedMatMul, qk, || {
                     for t in 0..klen {
                         let krow = &kraw[t * dh..(t + 1) * dh];
@@ -388,7 +396,7 @@ pub fn cached_attention(
                     }
                 });
             } else {
-                let qrow = &q[slot * d + head * dh..][..dh];
+                let qrow = &q[i * d + head * dh..][..dh];
                 prof.time_site(OpKind::MatMul, qk, || {
                     if kcache.is_quantized() {
                         // quantized cache but fp32 site: dequantize rows
@@ -424,7 +432,7 @@ pub fn cached_attention(
             });
         }
         for head in 0..h {
-            let ctx = &mut out[slot * d + head * dh..][..dh];
+            let ctx = &mut out[i * d + head * dh..][..dh];
             ctx.fill(0.0);
             if pv_int {
                 let sq = pv_quant.as_ref().unwrap();

@@ -208,6 +208,23 @@ pub struct DecLayerPlan {
     pub ln3: LnPlan,
 }
 
+/// One decoder layer's KV-cache storage decisions, resolved at compile
+/// time: `Some(scale)` means the cache stores u8 at that per-site
+/// scale, `None` means f32.  The slot-pool runtime allocates (and
+/// recycles) per-slot cache storage directly from this spec, so pool
+/// construction never re-walks the site table.
+#[derive(Debug, Clone, Copy)]
+pub struct KvSpec {
+    /// self-attention K storage (driven by the `*.self.qk` site)
+    pub self_k: Option<f32>,
+    /// self-attention V storage (driven by the `*.self.pv` site)
+    pub self_v: Option<f32>,
+    /// cross-attention K storage (driven by the `*.cross.qk` site)
+    pub cross_k: Option<f32>,
+    /// cross-attention V storage (driven by the `*.cross.pv` site)
+    pub cross_v: Option<f32>,
+}
+
 /// The compiled, index-addressed execution plan (see module docs).
 pub struct CompiledPlan {
     /// Per-site dispatch info, indexed by [`SiteId`].
@@ -217,6 +234,8 @@ pub struct CompiledPlan {
     pub dec: Vec<DecLayerPlan>,
     /// The tied logits projection (weight = `embed.T`).
     pub logits: SiteId,
+    /// Per-decoder-layer KV-cache storage spec (see [`KvSpec`]).
+    kv_specs: Vec<KvSpec>,
     /// Embedding rows pre-scaled by `sqrt(d_model)` (decode hot path).
     pub embed_scaled: Vec<f32>,
     /// Sinusoidal positional encoding, `max_len x d_model`.
@@ -346,6 +365,18 @@ impl CompiledPlan {
         }
         let logits = sid("logits".to_string())?;
 
+        let kv_specs: Vec<KvSpec> = dec
+            .iter()
+            .map(|l| {
+                let scale_of = |id: SiteId| sites[id.idx()].quant.as_ref().map(|q| q.b_scale);
+                KvSpec {
+                    self_k: scale_of(l.self_attn.qk),
+                    self_v: scale_of(l.self_attn.pv),
+                    cross_k: scale_of(l.cross.qk),
+                    cross_v: scale_of(l.cross.pv),
+                }
+            })
+            .collect();
         let int8_cache = dec
             .iter()
             .all(|l| sites[l.self_attn.qk.idx()].quant.is_some());
@@ -360,6 +391,7 @@ impl CompiledPlan {
             enc,
             dec,
             logits,
+            kv_specs,
             embed_scaled,
             pe,
             int8_cache,
@@ -389,6 +421,12 @@ impl CompiledPlan {
 
     pub fn site_set(&self) -> &SiteSet {
         &self.site_set
+    }
+
+    /// The KV-cache storage spec of one decoder layer (see [`KvSpec`]).
+    #[inline]
+    pub fn kv_spec(&self, layer: usize) -> KvSpec {
+        self.kv_specs[layer]
     }
 
     /// Site name for reporting (never used on hot paths).
@@ -547,6 +585,14 @@ mod tests {
         // an FP32 self-attn qk site forces f32 KV caches
         assert!(!plan.int8_cache);
         assert!(plan.quantized_site_count() > 0);
+        // the compiled KvSpec mirrors the per-site decisions: the
+        // forced-FP32 qk site means f32 K storage, the still-quantized
+        // pv site keeps u8 V storage at its b_scale
+        let spec = plan.kv_spec(0);
+        assert!(spec.self_k.is_none());
+        let pv = plan.site_set().id("dec.0.self.pv").unwrap();
+        assert_eq!(spec.self_v, plan.site(pv).quant.as_ref().map(|q| q.b_scale));
+        assert!(spec.cross_k.is_some() && spec.cross_v.is_some());
     }
 
     #[test]

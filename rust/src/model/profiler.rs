@@ -70,6 +70,10 @@ pub struct Profiler {
     /// per-site GEMM wall time, indexed by `SiteId` (grown lazily)
     site_totals: Vec<Duration>,
     site_counts: Vec<u64>,
+    /// per-site activation rows pushed through the GEMM — the
+    /// iteration-level-scheduling observable: with finished-slot
+    /// compaction, rows per decode step shrink as slots finish
+    site_rows: Vec<u64>,
 }
 
 /// RAII timing scope.
@@ -121,6 +125,28 @@ impl Profiler {
         self.site_totals[i] += dt;
         self.site_counts[i] += 1;
         out
+    }
+
+    /// Attribute `rows` activation rows to a MatMul site (recorded by
+    /// `layers::dense` next to the GEMM itself).  Row counts are
+    /// deterministic — they depend only on the schedule, not the
+    /// hardware — which is what lets tests assert that finished slots
+    /// cost zero GEMM rows.
+    #[inline]
+    pub fn add_site_rows(&mut self, site: SiteId, rows: usize) {
+        if !self.enabled {
+            return;
+        }
+        let i = site.idx();
+        if self.site_rows.len() <= i {
+            self.site_rows.resize(i + 1, 0);
+        }
+        self.site_rows[i] += rows as u64;
+    }
+
+    /// Total activation rows recorded against a site.
+    pub fn site_rows(&self, site: SiteId) -> u64 {
+        self.site_rows.get(site.idx()).copied().unwrap_or_default()
     }
 
     pub fn site_total(&self, site: SiteId) -> Duration {
@@ -200,6 +226,7 @@ impl Profiler {
         self.counts.clear();
         self.site_totals.clear();
         self.site_counts.clear();
+        self.site_rows.clear();
     }
 
     /// Merge another profiler's totals into this one.
@@ -219,6 +246,12 @@ impl Profiler {
         }
         for (i, &c) in other.site_counts.iter().enumerate() {
             self.site_counts[i] += c;
+        }
+        if self.site_rows.len() < other.site_rows.len() {
+            self.site_rows.resize(other.site_rows.len(), 0);
+        }
+        for (i, &r) in other.site_rows.iter().enumerate() {
+            self.site_rows[i] += r;
         }
     }
 }
@@ -315,5 +348,28 @@ mod tests {
         let mut d = Profiler::default();
         d.time_site(OpKind::MatMul, site, || {});
         assert!(d.site_breakdown().is_empty());
+    }
+
+    #[test]
+    fn site_rows_accumulate_merge_and_reset() {
+        let site = SiteId(2);
+        let mut p = Profiler::enabled();
+        p.add_site_rows(site, 3);
+        p.add_site_rows(site, 2);
+        assert_eq!(p.site_rows(site), 5);
+        assert_eq!(p.site_rows(SiteId(7)), 0);
+
+        let mut q = Profiler::enabled();
+        q.add_site_rows(site, 10);
+        q.merge(&p);
+        assert_eq!(q.site_rows(site), 15);
+
+        q.reset();
+        assert_eq!(q.site_rows(site), 0);
+
+        // disabled profiler records nothing
+        let mut d = Profiler::default();
+        d.add_site_rows(site, 100);
+        assert_eq!(d.site_rows(site), 0);
     }
 }

@@ -70,6 +70,25 @@ impl<T> BatchQueue<T> {
         }
     }
 
+    /// Non-blocking conditional pop: take the front item only if
+    /// `pred` accepts it; `None` when the queue is momentarily empty,
+    /// closed-and-drained, or the front item is rejected — a rejected
+    /// item **stays queued** for another consumer.  The
+    /// continuous-decode shard uses this between iterations to splice
+    /// new work into a busy pool without stalling its live slots, and
+    /// without claiming a batch its free slots cannot hold (which
+    /// would starve an idle peer shard of work it could start now).
+    pub fn try_pop_if(&self, pred: impl FnOnce(&T) -> bool) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        if !g.items.front().is_some_and(pred) {
+            return None;
+        }
+        let item = g.items.pop_front();
+        g.popped += 1;
+        self.not_full.notify_one();
+        item
+    }
+
     /// Close the queue: producers fail, consumers drain then get None.
     pub fn close(&self) {
         let mut g = self.inner.lock().unwrap();
@@ -131,6 +150,26 @@ mod tests {
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), Some(3));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn try_pop_if_never_blocks_and_respects_predicate() {
+        let q = BatchQueue::new(4);
+        assert_eq!(q.try_pop_if(|_| true), None, "empty queue yields None");
+        q.push(9).unwrap();
+        assert_eq!(q.try_pop_if(|&x| x > 100), None, "rejected item stays");
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.try_pop_if(|&x| x == 9), Some(9));
+        let (pushed, popped) = q.counters();
+        assert_eq!((pushed, popped), (1, 1));
+        q.close();
+        assert_eq!(q.try_pop_if(|_| true), None, "closed+drained yields None");
+        // items pushed before close still drain through try_pop_if
+        let q = BatchQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.try_pop_if(|_| true), Some(7));
+        assert_eq!(q.try_pop_if(|_| true), None);
     }
 
     #[test]

@@ -33,13 +33,26 @@ mod reference {
 
     use quantnmt::gemm::{self, QGemmScratch, UINT8_ZERO_POINT};
     use quantnmt::model::config::ModelConfig;
-    use quantnmt::model::engine::DecodeState;
     use quantnmt::model::kvcache::KvCache;
     use quantnmt::model::plan::positional_encoding;
     use quantnmt::model::weights::Weights;
     use quantnmt::quant::calibrate::SiteQuant;
     use quantnmt::specials::{BOS_ID, EOS_ID, PAD_ID};
     use quantnmt::tensor::ops;
+
+    /// The seed engine's per-batch decoder state, ported verbatim.
+    /// (The live engine replaced this with the slot-pool runtime —
+    /// `model::engine::DecodePool` — so the reference keeps its own
+    /// copy of the batch-synchronous structure it was written against.)
+    pub struct DecodeState {
+        pub self_k: Vec<KvCache>,
+        pub self_v: Vec<KvCache>,
+        pub cross_k: Vec<KvCache>,
+        pub cross_v: Vec<KvCache>,
+        pub src_len: Vec<usize>,
+        pub t_max: usize,
+        pub src_max: usize,
+    }
 
     struct QWeight {
         data: Vec<u8>,
@@ -1074,7 +1087,10 @@ fn decode_logits_are_bit_identical() {
             assert_eq!(mr, me, "{name}: memory");
             let t_max = 6;
             let mut str_ = r.init_decode(&mr, &lr, sr, t_max);
-            let mut ste = e.init_decode(&me, &lr, sr, t_max);
+            // engine side: the slot-pool runtime with the full active
+            // set is the batch-synchronous schedule
+            let mut pool = e.new_pool(src.len(), t_max, sr);
+            let slots = e.admit(&mut pool, &me, &lr, sr);
             // fixed token stream: every slot advances through the vocab
             let mut logits_r = Vec::new();
             let mut logits_e = Vec::new();
@@ -1083,7 +1099,7 @@ fn decode_logits_are_bit_identical() {
                     .map(|i| 3 + ((i + pos) % (cfg.vocab_size - 3)) as u32)
                     .collect();
                 r.decode_step(&mut str_, &toks, pos, &mut logits_r);
-                e.decode_step(&mut ste, &toks, pos, &mut logits_e);
+                e.pool_step(&mut pool, &slots, &toks, &mut logits_e);
                 assert_eq!(logits_r, logits_e, "{name}: logits drifted at step {pos}");
             }
         }
@@ -1218,10 +1234,12 @@ fn derived_recipes_match_legacy_site_table_plan() {
             assert_eq!((&lr, sr), (&le, se), "{mode:?} qs={qs}: lengths");
             assert_eq!(mr, me, "{mode:?} qs={qs}: encoder memory drifted");
 
-            // per-step logits, bit-identical
+            // per-step logits, bit-identical (pool active-set schedule
+            // vs the seed's batch-synchronous loop)
             let t_max = 6;
             let mut str_ = r.init_decode(&mr, &lr, sr, t_max);
-            let mut ste = e.init_decode(&me, &lr, sr, t_max);
+            let mut pool = e.new_pool(src.len(), t_max, sr);
+            let slots = e.admit(&mut pool, &me, &lr, sr);
             let mut logits_r = Vec::new();
             let mut logits_e = Vec::new();
             for pos in 0..t_max {
@@ -1229,7 +1247,7 @@ fn derived_recipes_match_legacy_site_table_plan() {
                     .map(|i| 3 + ((i + pos) % (cfg.vocab_size - 3)) as u32)
                     .collect();
                 r.decode_step(&mut str_, &toks, pos, &mut logits_r);
-                e.decode_step(&mut ste, &toks, pos, &mut logits_e);
+                e.pool_step(&mut pool, &slots, &toks, &mut logits_e);
                 assert_eq!(logits_r, logits_e, "{mode:?} qs={qs}: logits at {pos}");
             }
 
