@@ -128,6 +128,10 @@ pub struct ServerConfig {
     /// `0` = auto (`max_batch_rows`).  Clamped up to `max_batch_rows`
     /// so a formed batch always fits an empty pool.
     pub slots: usize,
+    /// worker threads per GEMM (`--gemm-threads`); 0 = auto (process
+    /// default capped by `QUANTNMT_GEMM_THREADS`, flops-gated so
+    /// decode-sized calls stay single-threaded)
+    pub gemm_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -146,6 +150,7 @@ impl Default for ServerConfig {
             max_decode_len: 56,
             scheduler: Scheduler::Batch,
             slots: 0,
+            gemm_threads: 0,
         }
     }
 }

@@ -79,6 +79,10 @@ pub struct ServiceConfig {
     pub parallel: bool,
     pub pin_cores: bool,
     pub max_decode_len: usize,
+    /// worker threads per GEMM (`--gemm-threads`); 0 = auto (process
+    /// default capped by `QUANTNMT_GEMM_THREADS`, flops-gated so
+    /// decode-sized calls stay single-threaded)
+    pub gemm_threads: usize,
 }
 
 impl Default for ServiceConfig {
@@ -97,6 +101,7 @@ impl Default for ServiceConfig {
             parallel: true,
             pin_cores: true,
             max_decode_len: 56,
+            gemm_threads: 0,
         }
     }
 }
@@ -249,6 +254,7 @@ impl Service {
         pairs: &[Pair],
         cfg: &ServiceConfig,
     ) -> anyhow::Result<(RunMetrics, Vec<Vec<u32>>)> {
+        crate::gemm::set_gemm_threads(cfg.gemm_threads);
         let order = sort_indices(pairs, cfg.sort);
         let batches = cfg.make_policy().pack(pairs, &order);
         let latencies = Mutex::new(LatencyStats::default());
@@ -368,6 +374,7 @@ impl Service {
         D: FnOnce(&ServerClient<'_>) -> R,
     {
         use crate::coordinator::server::Scheduler;
+        crate::gemm::set_gemm_threads(cfg.gemm_threads);
         let max_len = cfg.max_decode_len;
         match &cfg.backend {
             Backend::EngineF32 | Backend::EngineRecipe(_) => {

@@ -1,0 +1,267 @@
+//! AVX2 int8 GEMM tier: exact 256-bit `s8 x u8 -> i32` without VNNI.
+//!
+//! There is no 4-byte dot instruction below AVX-512 VNNI, and the
+//! obvious `pmaddubsw` route saturates its i16 intermediate (u8*s8
+//! pairs can exceed 32767), silently corrupting real activations.  We
+//! instead split each packed B quad into its even and odd bytes,
+//! widened to i16, and use `pmaddwd` (`_mm256_madd_epi16`), which is
+//! exact here:
+//!
+//! * lane bytes `[b0 b1 b2 b3]` viewed as two i16s; `and 0x00FF` gives
+//!   the even pair `[b0, b2]`, `srl 8` the odd pair `[b1, b3]` — all
+//!   in `0..=255`, so non-negative i16;
+//! * A is pre-packed ([`pack_a`]) as two broadcast words per quad: the
+//!   sign-extended i16 pairs `[a0, a2]` and `[a1, a3]`;
+//! * `madd(b_even, a02) + madd(b_odd, a13)` = the full quad dot.
+//!   Each product is at most `255 * 128 = 32640` in magnitude and
+//!   `pmaddwd` adds *two* of them into an i32 — no saturation, exact
+//!   for every input.
+//!
+//! The macro-kernel mirrors the VNNI tier ([`super::vnni`]): MR=4 rows
+//! by 2 ymm (16 lanes) register tiles over the shared [`PackedB`]
+//! panel, with the same KC/NC blocking and column-stripe threading.
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+use super::pack::PackedB;
+#[cfg(target_arch = "x86_64")]
+use super::{KC_QUADS, NC_LANES};
+
+/// Accumulator tile rows (4 rows x 2 ymm accumulators = 8 of the 16
+/// ymm registers, leaving room for the 4 split-B vectors).
+pub const MR: usize = 4;
+
+/// Pack `a [m, k]` (s8) for the AVX2 kernel: per (quad, row), two i32
+/// broadcast words holding the sign-extended i16 pairs `[a0, a2]` and
+/// `[a1, a3]`, zero-padded at the k tail (zero pairs are neutral
+/// before the zero-point correction).  Layout: `out[(quad*m + row)*2]`
+/// and `out[(quad*m + row)*2 + 1]`.
+pub fn pack_a(a: &[i8], m: usize, k: usize, out: &mut Vec<i32>) {
+    assert_eq!(a.len(), m * k);
+    let kp = k.div_ceil(4);
+    out.clear();
+    out.resize(kp * m * 2, 0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for quad in 0..kp {
+            let base = quad * 4;
+            let take = (k - base).min(4);
+            let mut q = [0i16; 4];
+            for (x, &av) in q.iter_mut().zip(&arow[base..base + take]) {
+                *x = av as i16;
+            }
+            let o = (quad * m + i) * 2;
+            out[o] = (q[0] as u16 as u32 | ((q[2] as u16 as u32) << 16)) as i32;
+            out[o + 1] = (q[1] as u16 as u32 | ((q[3] as u16 as u32) << 16)) as i32;
+        }
+    }
+}
+
+/// Tiled AVX2 macro-kernel over columns `[j0, j1)` of the packed
+/// panel; A pre-packed by [`pack_a`].  Overwrites C (no pre-zero
+/// needed): the first k-block stores, later blocks accumulate.
+///
+/// # Safety
+/// Requires AVX2 (callers dispatch via `gemm::avx2_available`).
+/// `cbase` must point at an `m * bp.n` i32 buffer; concurrent callers
+/// must write disjoint `[j0, j1)` ranges.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn igemm_avx2_tiled(
+    m: usize,
+    apack: &[i32],
+    bp: &PackedB,
+    cbase: *mut i32,
+    j0: usize,
+    j1: usize,
+) {
+    debug_assert_eq!(apack.len(), bp.kp * m * 2);
+    debug_assert!(j1 <= bp.n);
+    let kp = bp.kp;
+    let mut jc = j0;
+    while jc < j1 {
+        let jl = (jc + NC_LANES).min(j1);
+        let mut pc = 0;
+        loop {
+            let kq = (kp - pc).min(KC_QUADS);
+            let first = pc == 0;
+            let mut i = 0;
+            while i < m {
+                let mr = (m - i).min(MR);
+                let mut jt = jc;
+                while jt < jl {
+                    match mr {
+                        1 => tile::<1>(m, apack, bp, pc, kq, i, jt, cbase, jl, first),
+                        2 => tile::<2>(m, apack, bp, pc, kq, i, jt, cbase, jl, first),
+                        3 => tile::<3>(m, apack, bp, pc, kq, i, jt, cbase, jl, first),
+                        _ => tile::<4>(m, apack, bp, pc, kq, i, jt, cbase, jl, first),
+                    }
+                    jt += 16;
+                }
+                i += mr;
+            }
+            pc += kq;
+            if pc >= kp {
+                break;
+            }
+        }
+        jc = jl;
+    }
+}
+
+/// One MR x 16-lane register tile over quads `[pc, pc+kq)`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile<const R: usize>(
+    m: usize,
+    apack: &[i32],
+    bp: &PackedB,
+    pc: usize,
+    kq: usize,
+    i: usize,
+    jt: usize,
+    cbase: *mut i32,
+    jlim: usize,
+    first: bool,
+) {
+    let np = bp.np;
+    let n = bp.n;
+    let bdata = bp.data.as_ptr();
+    let mask16 = _mm256_set1_epi16(0x00FF);
+    let mut acc0 = [_mm256_setzero_si256(); R];
+    let mut acc1 = [_mm256_setzero_si256(); R];
+    for quad in pc..pc + kq {
+        let bptr = bdata.add((quad * np + jt) * 4);
+        let bv0 = _mm256_loadu_si256(bptr as *const _);
+        let bv1 = _mm256_loadu_si256(bptr.add(32) as *const _);
+        let b0_even = _mm256_and_si256(bv0, mask16);
+        let b0_odd = _mm256_srli_epi16::<8>(bv0);
+        let b1_even = _mm256_and_si256(bv1, mask16);
+        let b1_odd = _mm256_srli_epi16::<8>(bv1);
+        let ap = apack.as_ptr().add((quad * m + i) * 2);
+        for r in 0..R {
+            let a02 = _mm256_set1_epi32(*ap.add(r * 2));
+            let a13 = _mm256_set1_epi32(*ap.add(r * 2 + 1));
+            let e = _mm256_madd_epi16(b0_even, a02);
+            let o = _mm256_madd_epi16(b0_odd, a13);
+            acc0[r] = _mm256_add_epi32(acc0[r], _mm256_add_epi32(e, o));
+            let e = _mm256_madd_epi16(b1_even, a02);
+            let o = _mm256_madd_epi16(b1_odd, a13);
+            acc1[r] = _mm256_add_epi32(acc1[r], _mm256_add_epi32(e, o));
+        }
+    }
+    for r in 0..R {
+        let row = cbase.add((i + r) * n);
+        store8(row.add(jt), acc0[r], jlim as isize - jt as isize, first);
+        store8(row.add(jt + 8), acc1[r], jlim as isize - jt as isize - 8, first);
+    }
+}
+
+/// Store/accumulate 8 lanes at `p`, clipped to `valid` columns.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn store8(p: *mut i32, v: __m256i, valid: isize, first: bool) {
+    if valid >= 8 {
+        if first {
+            _mm256_storeu_si256(p as *mut _, v);
+        } else {
+            let prev = _mm256_loadu_si256(p as *const _);
+            _mm256_storeu_si256(p as *mut _, _mm256_add_epi32(prev, v));
+        }
+    } else if valid > 0 {
+        let mut tmp = [0i32; 8];
+        _mm256_storeu_si256(tmp.as_mut_ptr() as *mut _, v);
+        let dst = std::slice::from_raw_parts_mut(p, valid as usize);
+        for (x, &t) in dst.iter_mut().zip(&tmp) {
+            if first {
+                *x = t;
+            } else {
+                *x += t;
+            }
+        }
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub unsafe fn igemm_avx2_tiled(
+    _m: usize,
+    _apack: &[i32],
+    _bp: &PackedB,
+    _cbase: *mut i32,
+    _j0: usize,
+    _j1: usize,
+) {
+    unreachable!("avx2_available() is false on this arch")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{avx2_available, igemm_naive};
+    use crate::util::prop::{check, gen};
+
+    #[test]
+    fn pack_a_pairs_layout() {
+        // k = 5: one full quad + a padded tail quad
+        let a: Vec<i8> = vec![1, -2, 3, -4, 5, 10, -20, 30, -40, 50];
+        let mut out = Vec::new();
+        pack_a(&a, 2, 5, &mut out);
+        assert_eq!(out.len(), 2 * 2 * 2);
+        // row 0, quad 0: pairs [1, 3] and [-2, -4]
+        assert_eq!(out[0], 1 | (3 << 16));
+        assert_eq!(out[1], (-2i16 as u16 as u32 | ((-4i16 as u16 as u32) << 16)) as i32);
+        // row 1, quad 1 (index (quad*m + row)*2 = 6): pairs [50, 0], [0, 0]
+        assert_eq!(out[6], 50);
+        assert_eq!(out[7], 0);
+    }
+
+    #[test]
+    fn avx2_tiled_matches_naive_prop() {
+        if !avx2_available() {
+            eprintln!("skipping: no AVX2");
+            return;
+        }
+        check("avx2-tiled==naive", 0xA2A2, 48, |rng, case| {
+            let (dm, dk, dn) = gen::gemm_dims(rng, 70);
+            let (mut m, mut k, mut n) = (dm, dk, dn);
+            match case % 4 {
+                0 => m = 1,
+                1 => n = (n / 32) * 32 + 1 + (n % 31),
+                2 => k = (k / 4) * 4 + 1 + (k % 3),
+                _ => {}
+            }
+            let a: Vec<i8> = (0..m * k).map(|_| rng.next_u64() as i8).collect();
+            let b: Vec<u8> = (0..k * n).map(|_| rng.next_u64() as u8).collect();
+            let bp = PackedB::pack(&b, k, n);
+            let mut ap = Vec::new();
+            pack_a(&a, m, k, &mut ap);
+            let mut c = vec![0i32; m * n];
+            unsafe { igemm_avx2_tiled(m, &ap, &bp, c.as_mut_ptr(), 0, n) };
+            let mut want = vec![0i32; m * n];
+            igemm_naive(m, k, n, &a, &b, &mut want);
+            if c != want {
+                return Err(format!("mismatch at ({m},{k},{n})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn avx2_extreme_values_no_saturation() {
+        if !avx2_available() {
+            return;
+        }
+        // the pmaddubsw route would saturate on these; madd must not
+        let (m, k, n) = (2, 9, 17);
+        let a = vec![-128i8; m * k];
+        let b = vec![255u8; k * n];
+        let bp = PackedB::pack(&b, k, n);
+        let mut ap = Vec::new();
+        pack_a(&a, m, k, &mut ap);
+        let mut c = vec![0i32; m * n];
+        unsafe { igemm_avx2_tiled(m, &ap, &bp, c.as_mut_ptr(), 0, n) };
+        assert!(c.iter().all(|&x| x == -128 * 255 * k as i32));
+    }
+}

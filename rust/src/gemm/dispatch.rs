@@ -1,0 +1,334 @@
+//! Runtime kernel dispatch: the ISA ladder, GEMM worker-thread sizing,
+//! and the column-stripe partitioner shared by the int8 and f32 GEMMs.
+//!
+//! The paper's kernel (§5.2, MKL `s8 x u8 -> s32`) picks its code path
+//! by CPU capability and matrix shape; this module is our equivalent of
+//! that dispatch table:
+//!
+//! * [`IsaLevel`] — the capability ladder
+//!   `Scalar < Avx2 < Avx512Vnni`.  [`isa_level`] caches the detected
+//!   level once per process, capped by the `QUANTNMT_ISA` environment
+//!   override (`scalar` / `avx2` / `vnni`, for CI and A/B runs) and the
+//!   legacy `QUANTNMT_NO_VNNI` switch.  Overrides cap **Auto** dispatch
+//!   only; an explicit `KernelChoice` still runs its kernel.
+//! * [`gemm_threads`] / [`set_gemm_threads`] — process-wide worker
+//!   count for the parallel macro-loop, settable from
+//!   `ServiceConfig`/`ServerConfig` (CLI `--gemm-threads`) or the
+//!   `QUANTNMT_GEMM_THREADS` environment variable.
+//! * [`run_cols`] — partitions the output columns `[0, n)` into
+//!   [`STRIPE_ALIGN`]-aligned stripes and runs one worker per stripe on
+//!   a crossbeam scoped pool.
+//!
+//! **Determinism invariant**: stripes write *disjoint* column ranges of
+//! C and every kernel keeps the per-element k-summation order fixed, so
+//! results are bit-identical for every thread count (integer kernels
+//! are exact anyway; the f32 kernel's per-element order never depends
+//! on the column partition).  `tests` in `gemm::igemm` assert this
+//! across the kernel x thread-count cross product.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// The instruction-set ladder the int8 GEMM dispatches over.
+///
+/// Ordering is meaningful: `Scalar < Avx2 < Avx512Vnni`, so an
+/// environment override can *cap* the detected level with `min`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum IsaLevel {
+    /// portable blocked quad-MAC kernel (autovectorized by rustc)
+    Scalar,
+    /// 256-bit `pmaddwd` even/odd-split kernel (exact, non-saturating)
+    Avx2,
+    /// 512-bit `vpdpbusd` register-tiled macro-kernel
+    Avx512Vnni,
+}
+
+impl IsaLevel {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            IsaLevel::Scalar => "scalar",
+            IsaLevel::Avx2 => "avx2",
+            IsaLevel::Avx512Vnni => "avx512vnni",
+        }
+    }
+
+    /// Whether this tier consumes the k/4-packed B panel (the scalar
+    /// tier can read one, but never *requires* packing).
+    pub fn packs_b(self) -> bool {
+        self != IsaLevel::Scalar
+    }
+}
+
+/// Parse a `QUANTNMT_ISA` value (`scalar`/`portable`, `avx2`,
+/// `vnni`/`avx512`/`avx512vnni`); `None` for anything else.
+pub fn parse_isa(s: &str) -> Option<IsaLevel> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "scalar" | "portable" => Some(IsaLevel::Scalar),
+        "avx2" => Some(IsaLevel::Avx2),
+        "vnni" | "avx512" | "avx512vnni" => Some(IsaLevel::Avx512Vnni),
+        _ => None,
+    }
+}
+
+/// Runtime AVX2 check (the 256-bit tier's only requirement).
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Hardware capability, uncached and ignoring every override.
+pub fn detect_isa() -> IsaLevel {
+    if super::vnni::vnni_available() {
+        IsaLevel::Avx512Vnni
+    } else if avx2_available() {
+        IsaLevel::Avx2
+    } else {
+        IsaLevel::Scalar
+    }
+}
+
+/// Cached dispatch level: [`detect_isa`] capped by `QUANTNMT_ISA` and
+/// the legacy `QUANTNMT_NO_VNNI` switch.  Requesting a level the
+/// hardware lacks caps at the hardware (asking for `vnni` on an
+/// AVX2-only machine runs AVX2, not an illegal instruction).
+pub fn isa_level() -> IsaLevel {
+    static LEVEL: OnceLock<IsaLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        let mut level = detect_isa();
+        if let Ok(v) = std::env::var("QUANTNMT_ISA") {
+            match parse_isa(&v) {
+                Some(req) => level = level.min(req),
+                None => eprintln!(
+                    "QUANTNMT_ISA='{v}' not recognized (want scalar|avx2|vnni); \
+                     using detected level {}",
+                    level.as_str()
+                ),
+            }
+        }
+        if std::env::var("QUANTNMT_NO_VNNI").is_ok() {
+            level = level.min(IsaLevel::Avx2);
+        }
+        level
+    })
+}
+
+/// Upper bound on the auto-sized worker count (more threads than this
+/// never helped the bench shapes and fights the service's stream-level
+/// parallelism for cores).
+pub const DEFAULT_MAX_THREADS: usize = 4;
+
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide GEMM worker count (`0` resets to the
+/// environment/auto default).  Called by `Service::run` / `serve` from
+/// their configs before any engine work starts.
+pub fn set_gemm_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// The process-wide GEMM worker count: the [`set_gemm_threads`]
+/// override if set, else `QUANTNMT_GEMM_THREADS`, else
+/// `min(available_parallelism, DEFAULT_MAX_THREADS)`.
+pub fn gemm_threads() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::env::var("QUANTNMT_GEMM_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|p| p.get())
+                    .unwrap_or(1)
+                    .min(DEFAULT_MAX_THREADS)
+            })
+    })
+}
+
+/// Minimum MAC count (`2*m*k*n` flops) before auto threading engages.
+/// Below this the scoped-thread spawn costs more than the GEMM: an
+/// m == 1 decode step (`2*1*512*512 ≈ 0.5M`) never pays thread
+/// overhead, while every batch>=8 prefill shape clears the bar.
+pub const PAR_FLOPS_MIN: usize = 1 << 22;
+
+/// Column-stripe alignment: a full 2-vector column group of the widest
+/// kernel (32 i32 lanes), so no stripe boundary ever splits a store.
+pub const STRIPE_ALIGN: usize = 32;
+
+/// On-the-fly pack crossover for Auto dispatch: packing B costs one
+/// O(k*n) pass, amortized over the m x n output tile.  Measured in
+/// `benches/gemm.rs` (crossover sweep; see EXPERIMENTS.md): packing
+/// pays once the output tile has at least [`AUTO_PACK_MIN_ROWS`] rows
+/// *and* [`AUTO_PACK_MIN_MN`] elements.
+pub const AUTO_PACK_MIN_ROWS: usize = 2;
+/// See [`AUTO_PACK_MIN_ROWS`].
+pub const AUTO_PACK_MIN_MN: usize = 512;
+
+/// Shape-aware Auto-dispatch predicate: is packing B on the fly worth
+/// it for an `m x n` output tile?  (Prepacked panels skip this — their
+/// pack cost was paid at plan-compile time.)
+pub fn pack_pays(m: usize, n: usize) -> bool {
+    m >= AUTO_PACK_MIN_ROWS && m * n >= AUTO_PACK_MIN_MN
+}
+
+/// Resolve the worker count for one GEMM call.  `requested == 0` means
+/// auto: the global [`gemm_threads`] setting, gated by
+/// [`PAR_FLOPS_MIN`] so small/decode GEMMs stay single-threaded.  An
+/// explicit `requested` (tests, benches) is honored regardless of
+/// shape, clamped to the number of stripes.
+pub(crate) fn effective_threads(requested: usize, m: usize, k: usize, n: usize) -> usize {
+    let t = if requested == 0 {
+        let auto = gemm_threads();
+        let macs = 2 * m.saturating_mul(k).saturating_mul(n);
+        if auto <= 1 || macs < PAR_FLOPS_MIN {
+            1
+        } else {
+            auto
+        }
+    } else {
+        requested
+    };
+    t.clamp(1, n.div_ceil(STRIPE_ALIGN).max(1))
+}
+
+/// Partition `[0, n)` into up to `stripes` column ranges, each a
+/// multiple of [`STRIPE_ALIGN`] wide except the last.
+pub(crate) fn stripe_ranges(n: usize, stripes: usize) -> Vec<(usize, usize)> {
+    let stripes = stripes.max(1);
+    let width = n.div_ceil(stripes).div_ceil(STRIPE_ALIGN) * STRIPE_ALIGN;
+    let mut out = Vec::new();
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + width).min(n);
+        out.push((j0, j1));
+        j0 = j1;
+    }
+    out
+}
+
+/// Run `f(j0, j1)` over the column stripes of `[0, n)`, one scoped
+/// worker per stripe (the first stripe runs on the calling thread).
+///
+/// Callers pass a closure writing **disjoint** column ranges of C via a
+/// [`SendPtr`]; with the per-element summation order fixed inside each
+/// kernel, the output is bit-identical for every `threads` value.
+pub(crate) fn run_cols<F>(threads: usize, n: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if threads <= 1 {
+        f(0, n);
+        return;
+    }
+    let ranges = stripe_ranges(n, threads);
+    if ranges.len() <= 1 {
+        f(0, n);
+        return;
+    }
+    crossbeam_utils::thread::scope(|scope| {
+        for &(j0, j1) in ranges.iter().skip(1) {
+            let f = &f;
+            scope.spawn(move |_| f(j0, j1));
+        }
+        f(ranges[0].0, ranges[0].1);
+    })
+    .expect("gemm worker thread panicked");
+}
+
+/// Raw mutable base pointer that may cross scoped-thread boundaries.
+///
+/// Safety contract: every worker receiving a copy writes a disjoint
+/// region (the [`run_cols`] column stripes), and the pointee outlives
+/// the scope (guaranteed by `crossbeam_utils::thread::scope` joining
+/// before the caller's borrow ends).
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isa_ladder_orders() {
+        assert!(IsaLevel::Scalar < IsaLevel::Avx2);
+        assert!(IsaLevel::Avx2 < IsaLevel::Avx512Vnni);
+        // env override caps, never raises
+        assert_eq!(IsaLevel::Avx512Vnni.min(IsaLevel::Avx2), IsaLevel::Avx2);
+    }
+
+    #[test]
+    fn parse_isa_values() {
+        assert_eq!(parse_isa("scalar"), Some(IsaLevel::Scalar));
+        assert_eq!(parse_isa("portable"), Some(IsaLevel::Scalar));
+        assert_eq!(parse_isa(" AVX2 "), Some(IsaLevel::Avx2));
+        assert_eq!(parse_isa("vnni"), Some(IsaLevel::Avx512Vnni));
+        assert_eq!(parse_isa("avx512vnni"), Some(IsaLevel::Avx512Vnni));
+        assert_eq!(parse_isa("mmx"), None);
+    }
+
+    #[test]
+    fn isa_level_capped_by_hardware() {
+        // whatever the env says, the cached level can't exceed hardware
+        assert!(isa_level() <= detect_isa());
+    }
+
+    #[test]
+    fn stripes_align_and_cover() {
+        for (n, t) in [(1usize, 4usize), (31, 2), (32, 2), (97, 3), (512, 4), (513, 7)] {
+            let r = stripe_ranges(n, t);
+            assert!(r.len() <= t.max(1));
+            assert_eq!(r.first().unwrap().0, 0);
+            assert_eq!(r.last().unwrap().1, n);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            for &(j0, j1) in &r[..r.len() - 1] {
+                assert_eq!((j1 - j0) % STRIPE_ALIGN, 0, "aligned stripe ({n},{t})");
+            }
+        }
+        assert!(stripe_ranges(0, 3).is_empty());
+    }
+
+    #[test]
+    fn effective_threads_gates_small_shapes() {
+        // auto: decode-sized GEMM never threads
+        assert_eq!(effective_threads(0, 1, 512, 512), 1);
+        // explicit request is honored but clamped to stripe count
+        assert_eq!(effective_threads(4, 1, 8, 33), 2);
+        assert_eq!(effective_threads(2, 1, 8, 8), 1);
+    }
+
+    #[test]
+    fn pack_crossover_shape_aware() {
+        assert!(!pack_pays(1, 4096), "m == 1 never repacks on the fly");
+        assert!(!pack_pays(2, 128), "tiny tiles stay portable");
+        assert!(pack_pays(2, 256));
+        assert!(pack_pays(64, 64));
+    }
+
+    #[test]
+    fn run_cols_covers_all_columns() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let n = 100;
+        let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        run_cols(4, n, |j0, j1| {
+            for h in &hits[j0..j1] {
+                h.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+}

@@ -1,20 +1,33 @@
-//! Quantized GEMM: `s8 x u8 -> i32`, the software analogue of VNNI.
+//! Quantized GEMM entry points: `s8 x u8 -> i32` over the ISA ladder.
 //!
 //! Cascade Lake's `vpdpbusd` fuses 4 u8*s8 products + i32 add into one
 //! instruction per lane; GEMMLOWP (what stock TensorFlow used) does the
 //! same arithmetic scalar-by-scalar, which is why the paper swapped in
-//! MKL's kernel.  Our inner loop mirrors the vpdpbusd dataflow — an
-//! unrolled quad MAC over a k-packed B panel — which rustc lowers to
-//! `pmaddubsw`/`pmaddwd`-style vector code on AVX2+ targets, and which
-//! beats the f32 kernel on memory traffic 4:1 exactly as VNNI does.
+//! MKL's kernel.  This module is the front door: it resolves a
+//! [`KernelChoice`] against the cached [`super::dispatch::isa_level`],
+//! packs operands into the scratch the caller provides, and fans the
+//! macro-loop out over column stripes ([`super::dispatch::run_cols`]).
+//! The kernels themselves live in [`super::vnni`] (512-bit tiled),
+//! [`super::avx2`] (256-bit tiled) and [`super::pack`] /
+//! [`igemm_portable`] (scalar).
+//!
+//! Every path computes the identical integer result — dispatch changes
+//! speed, never values — and threading partitions *output columns*, so
+//! results are bit-identical for every thread count.
 //!
 //! Entry points:
-//! * [`igemm`]            — raw `A_s8 [m,k] * B_u8 [k,n] -> C_i32 [m,n]`
-//! * [`igemm_corrected`]  — subtracts the zero-point corrections
+//! * [`igemm`] / [`igemm_with`] / [`igemm_with_threads`] — raw
+//!   `A_s8 [m,k] * B_u8 [k,n] -> C_i32 [m,n]` (allocating variants)
+//! * [`igemm_scratch`] / [`igemm_prepacked_scratch`] — the same against
+//!   caller-owned [`PackScratch`] buffers (the engine hot path)
+//! * [`igemm_corrected`] / [`igemm_corrected_scratch`] — subtract the
+//!   zero-point corrections ([`apply_zero_corrections`])
 //! * [`quantized_matmul`] — full f32 -> int8 -> f32 path matching
 //!   `python/compile/kernels/ref.py::fake_quant_matmul_ref`
 
-use super::UINT8_ZERO_POINT;
+use super::dispatch::{effective_threads, pack_pays, run_cols, SendPtr};
+use super::pack::PackedB;
+use super::{IsaLevel, UINT8_ZERO_POINT};
 
 const MC: usize = 64;
 const KC: usize = 256;
@@ -22,27 +35,85 @@ const NC: usize = 512;
 
 /// Explicit kernel selector for [`igemm_with`].
 ///
-/// [`use_vnni`] caches the `QUANTNMT_NO_VNNI` environment check in a
+/// [`super::isa_level`] caches the detected/overridden ISA in a
 /// `OnceLock`, so a single test binary could never exercise *both*
 /// kernels through [`igemm`].  Passing a `KernelChoice` bypasses the
-/// cached dispatch entirely, letting parity tests force the portable
-/// path and the VNNI path side by side in one process.
+/// cached dispatch entirely, letting parity tests force every tier
+/// side by side in one process.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KernelChoice {
-    /// cached runtime dispatch: VNNI when available and not disabled,
-    /// with the m >= 2 shape heuristic (what [`igemm`] does)
+    /// cached runtime dispatch: the best available tier when the
+    /// pack crossover says packing pays (what [`igemm`] does)
     Auto,
     /// force the portable blocked quad-MAC kernel
     Portable,
-    /// force the AVX-512 VNNI kernel, even for m == 1 (panics when the
-    /// CPU lacks VNNI — callers gate on [`super::vnni::vnni_available`])
+    /// force the 256-bit AVX2 tiled kernel, even for m == 1 (panics
+    /// when the CPU lacks AVX2 — callers gate on
+    /// [`super::avx2_available`])
+    Avx2,
+    /// force the AVX-512 VNNI tiled kernel, even for m == 1 (panics
+    /// when the CPU lacks VNNI — callers gate on
+    /// [`super::vnni::vnni_available`])
     Vnni,
+}
+
+/// The resolved execution tier for one call.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Tier {
+    Portable,
+    Avx2,
+    Vnni,
+}
+
+/// Resolve a [`KernelChoice`] to a concrete tier for an `m x n` output.
+/// Forced choices assert their hardware; `Auto` follows the cached
+/// [`IsaLevel`] and, for unpacked operands, the pack crossover
+/// ([`pack_pays`]).
+fn resolve_tier(choice: KernelChoice, m: usize, n: usize, prepacked: bool) -> Tier {
+    match choice {
+        KernelChoice::Portable => Tier::Portable,
+        KernelChoice::Avx2 => {
+            assert!(
+                super::dispatch::avx2_available(),
+                "KernelChoice::Avx2 forced on a CPU without AVX2"
+            );
+            Tier::Avx2
+        }
+        KernelChoice::Vnni => {
+            assert!(
+                super::vnni::vnni_available(),
+                "KernelChoice::Vnni forced on a CPU without AVX-512 VNNI"
+            );
+            Tier::Vnni
+        }
+        KernelChoice::Auto => match super::dispatch::isa_level() {
+            IsaLevel::Scalar => Tier::Portable,
+            // Shape-aware kernel choice (§5.2): packing B costs one
+            // O(k*n) pass, amortized over the m x n output tile — the
+            // paper likewise picks kernels by matrix shape.  Prepacked
+            // panels paid that cost at plan-compile time.
+            IsaLevel::Avx2 if prepacked || pack_pays(m, n) => Tier::Avx2,
+            IsaLevel::Avx512Vnni if prepacked || pack_pays(m, n) => Tier::Vnni,
+            _ => Tier::Portable,
+        },
+    }
+}
+
+/// Reusable packing/correction buffers for the int8 GEMM path, so the
+/// engine's hot loop packs in place instead of allocating: the
+/// activation-side B panel (QK^T / probs x V repack every call), the
+/// tiled kernels' A panel, and the zero-point `colsum`.
+#[derive(Default)]
+pub struct PackScratch {
+    pub b_pack: PackedB,
+    pub a_pack: Vec<i32>,
+    pub colsum: Vec<i32>,
 }
 
 /// `c = a * b` with i32 accumulation (c fully overwritten).
 ///
-/// Dispatches to the AVX-512 VNNI kernel when the CPU supports it
-/// (packing B on the fly); otherwise runs the portable blocked
+/// Dispatches over the cached ISA level, packing B on the fly when the
+/// shape crossover says it pays; otherwise runs the portable blocked
 /// quad-MAC kernel.
 pub fn igemm(m: usize, k: usize, n: usize, a: &[i8], b: &[u8], c: &mut [i32]) {
     igemm_with(KernelChoice::Auto, m, k, n, a, b, c);
@@ -58,71 +129,185 @@ pub fn igemm_with(
     b: &[u8],
     c: &mut [i32],
 ) {
+    igemm_with_threads(choice, 0, m, k, n, a, b, c);
+}
+
+/// [`igemm_with`] with an explicit worker count (`0` = the process
+/// default, gated by the flops threshold).  Allocates its own packing
+/// buffers; the engine uses [`igemm_scratch`].
+#[allow(clippy::too_many_arguments)]
+pub fn igemm_with_threads(
+    choice: KernelChoice,
+    threads: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    b: &[u8],
+    c: &mut [i32],
+) {
+    let mut ws = PackScratch::default();
+    igemm_scratch(choice, threads, m, k, n, a, b, c, &mut ws);
+}
+
+/// Core unpacked entry point: `c = a * b` using `ws` for every
+/// intermediate buffer.  `threads == 0` means the process default
+/// ([`super::gemm_threads`]) gated by the flops threshold; an explicit
+/// count is honored (tests and benches sweep it).
+#[allow(clippy::too_many_arguments)]
+pub fn igemm_scratch(
+    choice: KernelChoice,
+    threads: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    b: &[u8],
+    c: &mut [i32],
+    ws: &mut PackScratch,
+) {
     assert_eq!(a.len(), m * k, "a len");
     assert_eq!(b.len(), k * n, "b len");
     assert_eq!(c.len(), m * n, "c len");
-    c.fill(0);
     if m == 0 || k == 0 || n == 0 {
+        c.fill(0);
         return;
     }
-    let vnni = match choice {
-        KernelChoice::Portable => false,
-        KernelChoice::Vnni => {
-            assert!(
-                super::vnni::vnni_available(),
-                "KernelChoice::Vnni forced on a CPU without AVX-512 VNNI"
-            );
-            true
+    match resolve_tier(choice, m, n, false) {
+        Tier::Portable => {
+            c.fill(0);
+            let t = effective_threads(threads, m, k, n);
+            let cp = SendPtr(c.as_mut_ptr());
+            run_cols(t, n, |j0, j1| {
+                // SAFETY: stripes write disjoint columns of c.
+                unsafe { portable_cols(m, k, n, a, b, cp.0, j0, j1) }
+            });
         }
-        // Shape-aware kernel choice (§5.2): packing B costs one O(k*n)
-        // pass, amortized over m output rows — below ~2 rows the
-        // portable kernel wins (the paper likewise picks kernels by
-        // matrix shape).
-        KernelChoice::Auto => m >= 2 && use_vnni(),
-    };
-    if vnni {
-        let bp = super::vnni::PackedB::pack(b, k, n);
-        // SAFETY: feature presence checked above (use_vnni / assert).
-        unsafe { super::vnni::igemm_vnni(m, k, a, &bp, c) };
-        return;
+        tier => {
+            ws.b_pack.pack_into(b, k, n);
+            packed_tier(tier, threads, m, k, a, &ws.b_pack, &mut ws.a_pack, c);
+        }
     }
-    igemm_portable(m, k, n, a, b, c);
 }
 
 /// `c = a * B_packed` against a pre-packed B (weights are packed once).
-pub fn igemm_prepacked(m: usize, k: usize, a: &[i8], bp: &super::vnni::PackedB, c: &mut [i32]) {
+/// Allocating compatibility wrapper over [`igemm_prepacked_scratch`].
+pub fn igemm_prepacked(m: usize, k: usize, a: &[i8], bp: &PackedB, c: &mut [i32]) {
+    let mut a_pack = Vec::new();
+    igemm_prepacked_scratch(KernelChoice::Auto, 0, m, k, a, bp, c, &mut a_pack);
+}
+
+/// `c = a * B_packed` with explicit kernel choice, worker count and a
+/// caller-owned A-panel buffer (the engine hot path for weight GEMMs).
+#[allow(clippy::too_many_arguments)]
+pub fn igemm_prepacked_scratch(
+    choice: KernelChoice,
+    threads: usize,
+    m: usize,
+    k: usize,
+    a: &[i8],
+    bp: &PackedB,
+    c: &mut [i32],
+    a_pack: &mut Vec<i32>,
+) {
     assert_eq!(a.len(), m * k);
     assert_eq!(c.len(), m * bp.n);
-    c.fill(0);
+    assert_eq!(bp.k, k, "packed panel k mismatch");
     if m == 0 || k == 0 || bp.n == 0 {
+        c.fill(0);
         return;
     }
-    debug_assert!(super::vnni::vnni_available());
-    // SAFETY: feature presence asserted above; callers pack B only on
-    // VNNI-capable paths.
-    unsafe { super::vnni::igemm_vnni(m, k, a, bp, c) };
+    let tier = resolve_tier(choice, m, bp.n, true);
+    packed_tier(tier, threads, m, k, a, bp, a_pack, c);
 }
 
-/// Cached VNNI availability.
+/// Shared macro-loop over a packed panel: pack A for the tier, then fan
+/// the tiled kernel out over column stripes.
+fn packed_tier(
+    tier: Tier,
+    threads: usize,
+    m: usize,
+    k: usize,
+    a: &[i8],
+    bp: &PackedB,
+    a_pack: &mut Vec<i32>,
+    c: &mut [i32],
+) {
+    let n = bp.n;
+    let t = effective_threads(threads, m, k, n);
+    let cp = SendPtr(c.as_mut_ptr());
+    match tier {
+        Tier::Portable => {
+            // scalar tier over the packed layout (e.g. forced Portable
+            // against a prepacked weight, or QUANTNMT_ISA=scalar)
+            c.fill(0);
+            run_cols(t, n, |j0, j1| {
+                // SAFETY: stripes write disjoint columns of c.
+                unsafe { super::pack::igemm_packed_scalar(m, k, a, bp, cp.0, j0, j1) }
+            });
+        }
+        Tier::Avx2 => {
+            super::avx2::pack_a(a, m, k, a_pack);
+            let ap: &[i32] = a_pack;
+            run_cols(t, n, |j0, j1| {
+                // SAFETY: AVX2 asserted by resolve_tier; disjoint stripes.
+                unsafe { super::avx2::igemm_avx2_tiled(m, ap, bp, cp.0, j0, j1) }
+            });
+        }
+        Tier::Vnni => {
+            super::vnni::pack_a(a, m, k, a_pack);
+            let ap: &[i32] = a_pack;
+            run_cols(t, n, |j0, j1| {
+                // SAFETY: VNNI asserted by resolve_tier; disjoint stripes.
+                unsafe { super::vnni::igemm_vnni_tiled(m, ap, bp, cp.0, j0, j1) }
+            });
+        }
+    }
+}
+
+/// Cached "best tier is VNNI" check — kept for callers (and the golden
+/// parity harness) that predate the [`IsaLevel`] ladder.
 pub fn use_vnni() -> bool {
-    use std::sync::OnceLock;
-    static AVAIL: OnceLock<bool> = OnceLock::new();
-    *AVAIL.get_or_init(|| {
-        std::env::var("QUANTNMT_NO_VNNI").is_err() && super::vnni::vnni_available()
-    })
+    super::dispatch::isa_level() == IsaLevel::Avx512Vnni
 }
 
-/// Portable blocked kernel (also the reference for the VNNI path).
+/// Portable blocked kernel (also the reference for the SIMD paths).
+/// Accumulates into `c` (callers zero it first).
 pub fn igemm_portable(m: usize, k: usize, n: usize, a: &[i8], b: &[u8], c: &mut [i32]) {
-    for jc in (0..n).step_by(NC) {
-        let nb = NC.min(n - jc);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    // SAFETY: single caller owns all of c.
+    unsafe { portable_cols(m, k, n, a, b, c.as_mut_ptr(), 0, n) }
+}
+
+/// Portable kernel over columns `[j0, j1)`: the blocked macro-loop
+/// restricted to one stripe.
+///
+/// # Safety
+/// `cbase` must point at an `m * n` i32 buffer; concurrent callers must
+/// write disjoint `[j0, j1)` ranges.
+unsafe fn portable_cols(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    b: &[u8],
+    cbase: *mut i32,
+    j0: usize,
+    j1: usize,
+) {
+    let mut jc = j0;
+    while jc < j1 {
+        let nb = NC.min(j1 - jc);
         for pc in (0..k).step_by(KC) {
             let kb = KC.min(k - pc);
             for ic in (0..m).step_by(MC) {
                 let mb = MC.min(m - ic);
-                block(k, n, a, b, c, ic, pc, jc, mb, kb, nb);
+                block(k, n, a, b, cbase, ic, pc, jc, mb, kb, nb);
             }
         }
+        jc += nb;
     }
 }
 
@@ -137,12 +322,12 @@ const NR: usize = 32;
 
 #[inline]
 #[allow(clippy::too_many_arguments)]
-fn block(
+unsafe fn block(
     k: usize,
     n: usize,
     a: &[i8],
     b: &[u8],
-    c: &mut [i32],
+    cbase: *mut i32,
     ic: usize,
     pc: usize,
     jc: usize,
@@ -185,7 +370,9 @@ fn block(
                     }
                     p += 1;
                 }
-                let crow = &mut c[r * n + jc + j..][..NR];
+                // SAFETY: rows disjoint; [jc+j, jc+j+NR) is within this
+                // caller's column stripe.
+                let crow = std::slice::from_raw_parts_mut(cbase.add(r * n + jc + j), NR);
                 for x in 0..NR {
                     crow[x] += acc[x];
                 }
@@ -195,7 +382,8 @@ fn block(
             for i in 0..mb {
                 let r = ic + i;
                 let arow = &a[r * k + pc..r * k + pc + kb];
-                let crow = &mut c[r * n + jc + j..r * n + jc + j + nr];
+                // SAFETY: as above, nr columns from jc+j.
+                let crow = std::slice::from_raw_parts_mut(cbase.add(r * n + jc + j), nr);
                 for (p, &av) in arow.iter().enumerate() {
                     let brow = &b[(pc + p) * n + jc + j..][..nr];
                     let av = av as i32;
@@ -209,13 +397,47 @@ fn block(
     }
 }
 
+/// Subtract the zero-point corrections from a raw `A_q x B_q` product:
+/// `acc -= 128*rowsum(a) + za*colsum(b) - k*za*128` — i.e. turn
+/// `sum a*b` into `sum (a - za)(b - 128)` without materializing shifted
+/// operands.  `colsum` is only read when `za != 0` (symmetric mode
+/// keeps the offset zero to skip it, paper §4.2), so callers may pass
+/// an empty slice then; quantized weights carry a precomputed one.
+pub fn apply_zero_corrections(
+    rows: usize,
+    k: usize,
+    n: usize,
+    a_q: &[i8],
+    a_zero: i32,
+    colsum: &[i32],
+    acc: &mut [i32],
+) {
+    let kz = k as i32 * a_zero * UINT8_ZERO_POINT;
+    for i in 0..rows {
+        let mut rowsum = 0i32;
+        for p in 0..k {
+            rowsum += a_q[i * k + p] as i32;
+        }
+        let corr_row = UINT8_ZERO_POINT * rowsum;
+        let row = &mut acc[i * n..(i + 1) * n];
+        if a_zero == 0 {
+            for x in row.iter_mut() {
+                *x -= corr_row;
+            }
+        } else {
+            for (j, x) in row.iter_mut().enumerate() {
+                *x = *x - corr_row - a_zero * colsum[j] + kz;
+            }
+        }
+    }
+}
+
 /// Zero-point-corrected int GEMM:
 ///
 /// `out[m,n] = sum_k (a[m,k] - za) * (b[k,n] - 128)` computed as the raw
 /// product minus row/col-sum corrections (one pass, no materialized
-/// shifted operands):
-///
-/// `raw - 128*rowsum(a) - za*colsum(b) + k*za*128`
+/// shifted operands).  Allocating wrapper over
+/// [`igemm_corrected_scratch`].
 pub fn igemm_corrected(
     m: usize,
     k: usize,
@@ -225,42 +447,38 @@ pub fn igemm_corrected(
     b: &[u8],
     c: &mut [i32],
 ) {
-    igemm(m, k, n, a, b, c);
-    // rowsum(a): [m]
-    let mut rowsum = vec![0i32; m];
-    for i in 0..m {
-        let mut s = 0i32;
-        for p in 0..k {
-            s += a[i * k + p] as i32;
-        }
-        rowsum[i] = s;
-    }
+    let mut ws = PackScratch::default();
+    igemm_corrected_scratch(m, k, n, a, za, b, c, &mut ws);
+}
+
+/// [`igemm_corrected`] against caller-owned buffers: the packing panels
+/// *and* the `colsum` correction live in `ws`, so the per-site hot loop
+/// (QK^T, probs x V) performs no allocation.
+#[allow(clippy::too_many_arguments)]
+pub fn igemm_corrected_scratch(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    za: i32,
+    b: &[u8],
+    c: &mut [i32],
+    ws: &mut PackScratch,
+) {
+    igemm_scratch(KernelChoice::Auto, 0, m, k, n, a, b, c, ws);
     // colsum(b): [n] — only needed when za != 0 (paper §4.2: symmetric
     // mode keeps the offset zero to use the faster kernel)
-    let mut colsum = vec![0i32; 0];
+    ws.colsum.clear();
     if za != 0 {
-        colsum = vec![0i32; n];
+        ws.colsum.resize(n, 0);
         for p in 0..k {
             let brow = &b[p * n..(p + 1) * n];
-            for j in 0..n {
-                colsum[j] += brow[j] as i32;
+            for (s, &bx) in ws.colsum.iter_mut().zip(brow) {
+                *s += bx as i32;
             }
         }
     }
-    let kz = k as i32 * za * UINT8_ZERO_POINT;
-    for i in 0..m {
-        let corr_row = UINT8_ZERO_POINT * rowsum[i];
-        let crow = &mut c[i * n..(i + 1) * n];
-        if za == 0 {
-            for cx in crow.iter_mut() {
-                *cx -= corr_row;
-            }
-        } else {
-            for (j, cx) in crow.iter_mut().enumerate() {
-                *cx = *cx - corr_row - za * colsum[j] + kz;
-            }
-        }
-    }
+    apply_zero_corrections(m, k, n, a, za, &ws.colsum, c);
 }
 
 /// Reusable buffers for the quantize -> igemm -> dequantize path, so the
@@ -270,6 +488,8 @@ pub struct QGemmScratch {
     pub a_q: Vec<i8>,
     pub b_q: Vec<u8>,
     pub acc: Vec<i32>,
+    /// packing panels + colsum for the int8 GEMM itself
+    pub pack: PackScratch,
 }
 
 /// Full quantized MatMul: quantize A (s8, affine) and B (u8, zp 128),
@@ -298,7 +518,16 @@ pub fn quantized_matmul(
     scratch.acc.resize(m * n, 0);
     quantize_s8(a, a_scale, a_zero, &mut scratch.a_q);
     quantize_u8(b, b_scale, &mut scratch.b_q);
-    igemm_corrected(m, k, n, &scratch.a_q, a_zero, &scratch.b_q, &mut scratch.acc);
+    igemm_corrected_scratch(
+        m,
+        k,
+        n,
+        &scratch.a_q,
+        a_zero,
+        &scratch.b_q,
+        &mut scratch.acc,
+        &mut scratch.pack,
+    );
     let s = a_scale * b_scale;
     for (o, &acc) in out.iter_mut().zip(scratch.acc.iter()) {
         *o = acc as f32 * s;
@@ -382,11 +611,57 @@ mod tests {
             if c_vnni != c_port {
                 return Err(format!("vnni != portable at ({m},{k},{n})"));
             }
-            let bp = super::super::vnni::PackedB::pack(&b, k, n);
+            let bp = PackedB::pack(&b, k, n);
             let mut c_pre = vec![0i32; m * n];
             igemm_prepacked(m, k, &a, &bp, &mut c_pre);
             if c_pre != c_port {
                 return Err(format!("prepacked != portable at ({m},{k},{n})"));
+            }
+            Ok(())
+        });
+    }
+
+    /// The acceptance-criterion sweep: every available `KernelChoice`
+    /// x {on-the-fly packed, prepacked} x {1, 2, 4} threads must
+    /// produce bit-identical C over the rotating edge-shape schedule.
+    #[test]
+    fn prop_kernel_thread_cross_product_parity() {
+        let mut choices = vec![KernelChoice::Portable];
+        if super::super::dispatch::avx2_available() {
+            choices.push(KernelChoice::Avx2);
+        }
+        if super::super::vnni::vnni_available() {
+            choices.push(KernelChoice::Vnni);
+        }
+        check("kernel x threads cross product", 0xC805, 32, |rng, case| {
+            let (dm, dk, dn) = gen::gemm_dims(rng, 80);
+            let (mut m, mut k, mut n) = (dm, dk, dn);
+            match case % 4 {
+                0 => m = 1,
+                1 => n = (n / 32) * 32 + 1 + (n % 31), // n % 32 != 0
+                2 => k = (k / 4) * 4 + 1 + (k % 3),    // k % 4 != 0
+                _ => {}
+            }
+            let a: Vec<i8> = (0..m * k).map(|_| rng.next_u64() as i8).collect();
+            let b: Vec<u8> = (0..k * n).map(|_| rng.next_u64() as u8).collect();
+            let mut want = vec![0i32; m * n];
+            igemm_with_threads(KernelChoice::Portable, 1, m, k, n, &a, &b, &mut want);
+            let bp = PackedB::pack(&b, k, n);
+            let mut apack = Vec::new();
+            let mut c = vec![0i32; m * n];
+            for &choice in &choices {
+                for threads in [1usize, 2, 4] {
+                    c.fill(-1);
+                    igemm_with_threads(choice, threads, m, k, n, &a, &b, &mut c);
+                    if c != want {
+                        return Err(format!("{choice:?} t={threads} packed ({m},{k},{n})"));
+                    }
+                    c.fill(-1);
+                    igemm_prepacked_scratch(choice, threads, m, k, &a, &bp, &mut c, &mut apack);
+                    if c != want {
+                        return Err(format!("{choice:?} t={threads} prepacked ({m},{k},{n})"));
+                    }
+                }
             }
             Ok(())
         });
@@ -411,6 +686,27 @@ mod tests {
                     assert_eq!(c[i * n + j], expect, "za={za} ({i},{j})");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn corrected_scratch_reuse_matches_fresh() {
+        // one PackScratch across calls of different shapes and zero
+        // points must match the allocating path exactly
+        let mut ws = PackScratch::default();
+        let mut rngstate = 0x5EEDu64;
+        let mut next = move || {
+            rngstate = rngstate.wrapping_mul(6364136223846793005).wrapping_add(1);
+            (rngstate >> 33) as u8
+        };
+        for &(m, k, n, za) in &[(4, 9, 33, 7), (1, 16, 5, 0), (8, 64, 64, -3), (2, 3, 2, 0)] {
+            let a: Vec<i8> = (0..m * k).map(|_| next() as i8).collect();
+            let b: Vec<u8> = (0..k * n).map(|_| next()).collect();
+            let mut c1 = vec![0i32; m * n];
+            igemm_corrected_scratch(m, k, n, &a, za, &b, &mut c1, &mut ws);
+            let mut c2 = vec![0i32; m * n];
+            igemm_corrected(m, k, n, &a, za, &b, &mut c2);
+            assert_eq!(c1, c2, "({m},{k},{n}) za={za}");
         }
     }
 

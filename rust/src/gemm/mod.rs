@@ -1,32 +1,56 @@
-//! GEMM substrate: blocked FP32 GEMM and the VNNI-style quantized GEMM.
+//! GEMM substrate: blocked FP32 GEMM and the tiled, multi-ISA,
+//! multi-threaded quantized GEMM.
 //!
 //! The paper's §5.2 replaces TensorFlow's GEMMLOWP int8 MatMul with
 //! Intel MKL's `s8 x u8 -> s32` kernel and measures 3.7x (peak) / 2.4x
 //! (average over the model's shapes) vs FP32 AVX-512 GEMM.  We cannot
 //! link MKL, so both sides of that comparison are implemented here with
-//! the same blocking strategy:
+//! the same structure a real kernel library uses:
 //!
-//! * [`sgemm`] — cache-blocked, 4x4-unrolled f32 GEMM (the "AVX-512
-//!   FP32" baseline; rustc auto-vectorizes the unrolled inner loop);
-//! * [`igemm`] — cache-blocked `i8 x u8 -> i32` GEMM whose inner loop
-//!   is an unrolled quad multiply-accumulate — the exact dataflow that
-//!   VNNI's `vpdpbusd` instruction hard-wires (4 byte-products summed
-//!   into an i32 lane per cycle);
+//! * [`sgemm`] — cache-blocked, unrolled f32 GEMM (the "AVX-512 FP32"
+//!   baseline; rustc auto-vectorizes the inner loop), stripe-parallel
+//!   via [`sgemm_threads`];
+//! * [`igemm`] — `i8 x u8 -> i32` over a runtime ISA ladder
+//!   ([`IsaLevel`]): a register-tiled AVX-512 VNNI macro-kernel
+//!   ([`vnni`]), an exact 256-bit AVX2 tier ([`avx2`]), and a portable
+//!   blocked quad-MAC fallback — all consuming the same k/4-packed B
+//!   panel ([`PackedB`]) and all bit-identical;
 //! * zero-point corrected entry points matching `kernels/ref.py`.
 //!
+//! Large GEMMs fan out over disjoint output-column stripes on a scoped
+//! thread pool (`--gemm-threads` / `QUANTNMT_GEMM_THREADS`), gated by a
+//! flops threshold so decode-sized calls stay single-threaded; results
+//! are bit-identical for every thread count.
+//!
 //! `rust/benches/gemm.rs` regenerates Fig 3a (square sizes) and Fig 3b
-//! (the Transformer's actual shapes) from these kernels.
+//! (the Transformer's actual shapes) from these kernels across the
+//! kernel x thread grid and emits `BENCH_gemm.json`.
 
+pub mod avx2;
+mod dispatch;
 mod igemm;
+mod pack;
 mod sgemm;
 pub mod vnni;
 
-pub use igemm::{
-    dequantize_s8, igemm, igemm_corrected, igemm_portable, igemm_prepacked, igemm_with,
-    quantize_s8, quantize_u8, quantized_matmul, use_vnni, KernelChoice, QGemmScratch,
+pub use dispatch::{
+    avx2_available, detect_isa, gemm_threads, isa_level, parse_isa, set_gemm_threads, IsaLevel,
+    AUTO_PACK_MIN_MN, AUTO_PACK_MIN_ROWS, DEFAULT_MAX_THREADS, PAR_FLOPS_MIN, STRIPE_ALIGN,
 };
-pub use sgemm::sgemm;
-pub use vnni::PackedB;
+pub use igemm::{
+    apply_zero_corrections, dequantize_s8, igemm, igemm_corrected, igemm_corrected_scratch,
+    igemm_portable, igemm_prepacked, igemm_prepacked_scratch, igemm_scratch, igemm_with,
+    igemm_with_threads, quantize_s8, quantize_u8, quantized_matmul, use_vnni, KernelChoice,
+    PackScratch, QGemmScratch,
+};
+pub use pack::{PackedB, VNNI_LANES};
+pub use sgemm::{sgemm, sgemm_threads};
+
+/// Cache-block depth of the tiled kernels, in k-quads (1024 k-rows per
+/// block: the packed panel slice an NC-wide block keeps hot in L2).
+pub(crate) const KC_QUADS: usize = 256;
+/// Cache-block width of the tiled kernels, in output columns.
+pub(crate) const NC_LANES: usize = 256;
 
 use crate::tensor::TensorF;
 

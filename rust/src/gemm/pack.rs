@@ -1,0 +1,172 @@
+//! The k/4-packed B panel shared by every packed kernel tier.
+//!
+//! `vpdpbusd` (and our AVX2 `pmaddwd` emulation of it) consumes, per
+//! i32 lane, 4 consecutive k-bytes of one B column — so B is repacked
+//! once so that each lane's quad is contiguous:
+//! `bp[p/4][j][q] = b[(p+q)*n + j]` with geometry `kp = ceil(k/4)`
+//! quads by `np = ceil(n/16)*16` padded lanes (layout `[kp][np][4]`
+//! bytes).  Zero padding is neutral: zero u8 bytes contribute 0 to
+//! every product *before* the zero-point correction, which uses the
+//! true `k`/`n`.
+//!
+//! The same panel feeds all three tiers (AVX-512 VNNI, AVX2, and the
+//! scalar packed fallback), so weight panels packed at plan-compile
+//! time stay valid whatever `QUANTNMT_ISA` caps dispatch to later, and
+//! activation-side panels can live in `QGemmScratch` and be re-packed
+//! in place every call ([`PackedB::pack_into`]) without allocating.
+
+/// Lanes per `vpdpbusd` (16 i32 lanes in a zmm).  The panel pads `n`
+/// to this multiple so the 16-lane AVX-512 and 8-lane AVX2 kernels can
+/// both load full vectors.
+pub const VNNI_LANES: usize = 16;
+
+/// Packed-B buffer (see module docs for the layout).
+#[derive(Default)]
+pub struct PackedB {
+    pub data: Vec<u8>,
+    pub k: usize,
+    pub n: usize,
+    pub kp: usize,
+    pub np: usize,
+}
+
+impl PackedB {
+    /// Pack row-major `b [k, n]` into a fresh panel.
+    pub fn pack(b: &[u8], k: usize, n: usize) -> PackedB {
+        let mut bp = PackedB::default();
+        bp.pack_into(b, k, n);
+        bp
+    }
+
+    /// Re-pack into this buffer, reusing its allocation (activation-side
+    /// operands repack every call; see `QGemmScratch`).
+    pub fn pack_into(&mut self, b: &[u8], k: usize, n: usize) {
+        assert_eq!(b.len(), k * n);
+        let kp = k.div_ceil(4);
+        let np = n.div_ceil(VNNI_LANES) * VNNI_LANES;
+        self.k = k;
+        self.n = n;
+        self.kp = kp;
+        self.np = np;
+        self.data.clear();
+        self.data.resize(kp * np * 4, 0);
+        for p in 0..k {
+            let quad = p / 4;
+            let q = p % 4;
+            let brow = &b[p * n..(p + 1) * n];
+            let dst = &mut self.data[quad * np * 4..(quad + 1) * np * 4];
+            for (j, &bx) in brow.iter().enumerate() {
+                dst[j * 4 + q] = bx;
+            }
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Portable kernel over the packed layout: lets prepacked weight panels
+/// run on the scalar tier (e.g. `QUANTNMT_ISA=scalar`, or the
+/// Portable x prepacked cell of the parity cross product) and doubles
+/// as the reference for the SIMD packed kernels.  Accumulates into a
+/// pre-zeroed C over columns `[j0, j1)`.
+///
+/// # Safety
+/// `cbase` must point at an `m * bp.n` i32 buffer; concurrent callers
+/// must write disjoint `[j0, j1)` ranges (`dispatch::run_cols`).
+pub(crate) unsafe fn igemm_packed_scalar(
+    m: usize,
+    k: usize,
+    a: &[i8],
+    bp: &PackedB,
+    cbase: *mut i32,
+    j0: usize,
+    j1: usize,
+) {
+    let n = bp.n;
+    let np = bp.np;
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert!(j1 <= n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        // SAFETY: rows are disjoint and [j0, j1) is this worker's stripe.
+        let crow = std::slice::from_raw_parts_mut(cbase.add(i * n + j0), j1 - j0);
+        for quad in 0..bp.kp {
+            let base = quad * 4;
+            let take = (k - base).min(4);
+            let mut aq = [0i32; 4];
+            for (x, &av) in aq.iter_mut().zip(&arow[base..base + take]) {
+                *x = av as i32;
+            }
+            let panel = &bp.data[quad * np * 4..];
+            for (jj, cx) in crow.iter_mut().enumerate() {
+                let d = &panel[(j0 + jj) * 4..(j0 + jj) * 4 + 4];
+                *cx += aq[0] * d[0] as i32
+                    + aq[1] * d[1] as i32
+                    + aq[2] * d[2] as i32
+                    + aq[3] * d[3] as i32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_layout_roundtrip() {
+        let k = 6;
+        let n = 3;
+        let b: Vec<u8> = (0..k * n).map(|x| x as u8).collect();
+        let bp = PackedB::pack(&b, k, n);
+        assert_eq!(bp.kp, 2);
+        assert_eq!(bp.np, 16);
+        // element b[p, j] must live at data[(p/4)*np*4 + j*4 + p%4]
+        for p in 0..k {
+            for j in 0..n {
+                assert_eq!(
+                    bp.data[(p / 4) * bp.np * 4 + j * 4 + p % 4],
+                    b[p * n + j],
+                    "(p={p}, j={j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pack_into_reuses_and_rewrites() {
+        let mut bp = PackedB::default();
+        let b1: Vec<u8> = (0..8 * 20).map(|x| (x % 251) as u8).collect();
+        bp.pack_into(&b1, 8, 20);
+        let first_len = bp.data.len();
+        // smaller re-pack must fully overwrite (incl. padding back to 0)
+        let b2: Vec<u8> = (0..5 * 3).map(|x| (x + 1) as u8).collect();
+        bp.pack_into(&b2, 5, 3);
+        assert_eq!(bp.k, 5);
+        assert_eq!(bp.n, 3);
+        assert_eq!(bp.np, 16);
+        // the allocation is reused, not shrunk
+        assert!(bp.data.capacity() >= first_len);
+        let fresh = PackedB::pack(&b2, 5, 3);
+        assert_eq!(bp.data, fresh.data);
+    }
+
+    #[test]
+    fn packed_scalar_matches_naive() {
+        let (m, k, n) = (3, 10, 21);
+        let a: Vec<i8> = (0..m * k).map(|i| (i as i32 * 7 % 251 - 125) as i8).collect();
+        let b: Vec<u8> = (0..k * n).map(|i| (i * 13 % 256) as u8).collect();
+        let bp = PackedB::pack(&b, k, n);
+        let mut c = vec![0i32; m * n];
+        // run in two stripes to exercise the column-range path
+        unsafe {
+            igemm_packed_scalar(m, k, &a, &bp, c.as_mut_ptr(), 0, 16);
+            igemm_packed_scalar(m, k, &a, &bp, c.as_mut_ptr(), 16, n);
+        }
+        let mut want = vec![0i32; m * n];
+        crate::gemm::igemm_naive(m, k, n, &a, &b, &mut want);
+        assert_eq!(c, want);
+    }
+}

@@ -7,7 +7,14 @@
 //!   (unit stride) and keeps 4 running C rows in registers — rustc
 //!   auto-vectorizes the inner `n` loop into AVX FMAs;
 //! * `C` is accumulated in place, so callers must zero it (the public
-//!   entry point does).
+//!   entry points do);
+//! * [`sgemm_threads`] fans the macro-loop out over disjoint
+//!   output-column stripes.  Each C element's k-summation order (K
+//!   blocks ascending, rows within a block ascending) never depends on
+//!   the column partition, so even in f32 the result is bit-identical
+//!   for every thread count.
+
+use super::dispatch::{effective_threads, run_cols, SendPtr};
 
 const MC: usize = 64; // rows of A per block
 const KC: usize = 256; // depth per block
@@ -15,6 +22,20 @@ const NC: usize = 512; // cols of B per block
 
 /// `c = a * b` (c fully overwritten).
 pub fn sgemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    sgemm_threads(1, m, k, n, a, b, c);
+}
+
+/// [`sgemm`] with an explicit worker count (`0` = the process default,
+/// gated by the flops threshold; see `gemm::gemm_threads`).
+pub fn sgemm_threads(
+    threads: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
     assert_eq!(a.len(), m * k, "a len");
     assert_eq!(b.len(), k * n, "b len");
     assert_eq!(c.len(), m * n, "c len");
@@ -22,27 +43,51 @@ pub fn sgemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) 
     if m == 0 || k == 0 || n == 0 {
         return;
     }
-    for jc in (0..n).step_by(NC) {
-        let nb = NC.min(n - jc);
+    let t = effective_threads(threads, m, k, n);
+    let cp = SendPtr(c.as_mut_ptr());
+    run_cols(t, n, |j0, j1| {
+        // SAFETY: stripes write disjoint columns of c.
+        unsafe { sgemm_cols(m, k, n, a, b, cp.0, j0, j1) }
+    });
+}
+
+/// Blocked macro-loop restricted to output columns `[j0, j1)`.
+///
+/// # Safety
+/// `cbase` must point at an `m * n` f32 buffer; concurrent callers must
+/// write disjoint `[j0, j1)` ranges.
+unsafe fn sgemm_cols(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    cbase: *mut f32,
+    j0: usize,
+    j1: usize,
+) {
+    let mut jc = j0;
+    while jc < j1 {
+        let nb = NC.min(j1 - jc);
         for pc in (0..k).step_by(KC) {
             let kb = KC.min(k - pc);
             for ic in (0..m).step_by(MC) {
                 let mb = MC.min(m - ic);
-                block(m, k, n, a, b, c, ic, pc, jc, mb, kb, nb);
+                block(k, n, a, b, cbase, ic, pc, jc, mb, kb, nb);
             }
         }
+        jc += nb;
     }
 }
 
 #[inline]
 #[allow(clippy::too_many_arguments)]
-fn block(
-    _m: usize,
+unsafe fn block(
     k: usize,
     n: usize,
     a: &[f32],
     b: &[f32],
-    c: &mut [f32],
+    cbase: *mut f32,
     ic: usize,
     pc: usize,
     jc: usize,
@@ -50,33 +95,33 @@ fn block(
     kb: usize,
     nb: usize,
 ) {
+    // SAFETY (both loops): rows are disjoint and [jc, jc+nb) is within
+    // this caller's column stripe.
     let mut i = 0;
     // 4-row micro-kernel
     while i + 4 <= mb {
         let (r0, r1, r2, r3) = (ic + i, ic + i + 1, ic + i + 2, ic + i + 3);
-        for p in 0..kb
-        {
+        for p in 0..kb {
             let bp = &b[(pc + p) * n + jc..(pc + p) * n + jc + nb];
             let a0 = a[r0 * k + pc + p];
             let a1 = a[r1 * k + pc + p];
             let a2 = a[r2 * k + pc + p];
             let a3 = a[r3 * k + pc + p];
-            // split C rows via split_at_mut-free unsafe-free approach:
-            // process rows one at a time to satisfy borrowck, relying on
-            // the optimizer to keep bp in registers/L1.
-            let c0 = &mut c[r0 * n + jc..r0 * n + jc + nb];
+            // process rows one at a time, relying on the optimizer to
+            // keep bp in registers/L1
+            let c0 = std::slice::from_raw_parts_mut(cbase.add(r0 * n + jc), nb);
             for (cx, &bx) in c0.iter_mut().zip(bp) {
                 *cx += a0 * bx;
             }
-            let c1 = &mut c[r1 * n + jc..r1 * n + jc + nb];
+            let c1 = std::slice::from_raw_parts_mut(cbase.add(r1 * n + jc), nb);
             for (cx, &bx) in c1.iter_mut().zip(bp) {
                 *cx += a1 * bx;
             }
-            let c2 = &mut c[r2 * n + jc..r2 * n + jc + nb];
+            let c2 = std::slice::from_raw_parts_mut(cbase.add(r2 * n + jc), nb);
             for (cx, &bx) in c2.iter_mut().zip(bp) {
                 *cx += a2 * bx;
             }
-            let c3 = &mut c[r3 * n + jc..r3 * n + jc + nb];
+            let c3 = std::slice::from_raw_parts_mut(cbase.add(r3 * n + jc), nb);
             for (cx, &bx) in c3.iter_mut().zip(bp) {
                 *cx += a3 * bx;
             }
@@ -89,7 +134,7 @@ fn block(
         for p in 0..kb {
             let av = a[r * k + pc + p];
             let bp = &b[(pc + p) * n + jc..(pc + p) * n + jc + nb];
-            let cr = &mut c[r * n + jc..r * n + jc + nb];
+            let cr = std::slice::from_raw_parts_mut(cbase.add(r * n + jc), nb);
             for (cx, &bx) in cr.iter_mut().zip(bp) {
                 *cx += av * bx;
             }
@@ -145,5 +190,34 @@ mod tests {
         let mut c = vec![99.0];
         sgemm(1, 1, 1, &a, &b, &mut c);
         assert_eq!(c, vec![2.0]);
+    }
+
+    /// f32 threading must be *bit*-identical, not approximately equal:
+    /// stripes only change which columns a worker owns, never any
+    /// element's k-summation order.
+    #[test]
+    fn prop_threaded_sgemm_bit_identical() {
+        use crate::util::prop::{check, gen};
+        check("sgemm threaded==single", 0xF32F, 32, |rng, case| {
+            let (dm, dk, dn) = gen::gemm_dims(rng, 90);
+            let (m, k, mut n) = (dm, dk, dn);
+            if case % 3 == 0 {
+                n = (n / 32) * 32 + 1 + (n % 31); // straddle a stripe edge
+            }
+            let mut a = vec![0.0f32; m * k];
+            let mut b = vec![0.0f32; k * n];
+            rng.fill_uniform_f32(&mut a, 2.0);
+            rng.fill_uniform_f32(&mut b, 2.0);
+            let mut c1 = vec![0.0f32; m * n];
+            sgemm_threads(1, m, k, n, &a, &b, &mut c1);
+            for threads in [2usize, 4] {
+                let mut ct = vec![0.0f32; m * n];
+                sgemm_threads(threads, m, k, n, &a, &b, &mut ct);
+                if c1.iter().zip(&ct).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                    return Err(format!("t={threads} not bit-identical at ({m},{k},{n})"));
+                }
+            }
+            Ok(())
+        });
     }
 }

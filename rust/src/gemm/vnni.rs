@@ -1,4 +1,4 @@
-//! The real thing: AVX-512 VNNI `vpdpbusd` GEMM micro-kernel.
+//! AVX-512 VNNI `vpdpbusd` GEMM kernels.
 //!
 //! `vpdpbusd dst, src1, src2` computes, per i32 lane,
 //! `dst += sum_{q=0..4} src1.u8[4i+q] * src2.s8[4i+q]` — 64 byte-MACs
@@ -6,21 +6,36 @@
 //! kernel leans on (§2, §5.2).  Mapping to our `A_s8 [m,k] x B_u8 [k,n]`:
 //! the *unsigned* operand is B and the *signed* operand is A, so each
 //! instruction takes 16 j-lanes of B quads against a broadcast A quad.
+//! B is repacked into the shared [`PackedB`] panel (module `pack`).
 //!
-//! B must be repacked so that each lane's 4 consecutive k-bytes are
-//! contiguous: `bp[p/4][j][q] = b[(p+q)*n + j]` (the "k/4-packed"
-//! layout every VNNI GEMM uses).  Packing costs one pass over B and is
-//! amortized over all m rows — and the engine pre-packs its weight
-//! operands once at construction.
+//! Two kernels live here:
 //!
-//! Feature-gated at runtime: [`vnni_available`] falls back to the
-//! portable quad-MAC kernel on machines without AVX-512 VNNI.
+//! * [`igemm_vnni`] — the original per-row macro-loop.  It re-streams
+//!   the whole packed B panel once per A row, so for m rows the panel
+//!   crosses the cache hierarchy m times.  Kept as the bench baseline
+//!   ("vnni-row" in `benches/gemm.rs`) and as a second reference
+//!   implementation.
+//! * [`igemm_vnni_tiled`] — the BLIS-style macro-kernel: an
+//!   MR x (2 zmm) register tile ([`MR`] = 6 rows x 32 lanes = 12 zmm
+//!   accumulators) amortizes each packed-B cache line over MR rows,
+//!   wrapped in KC (`KC_QUADS`) x NC (`NC_LANES`) cache blocking with a
+//!   quad-packed A panel ([`pack_a`]).  Column range `[j0, j1)` makes
+//!   it stripe-parallel (`dispatch::run_cols`).
+//!
+//! Feature-gated at runtime: [`vnni_available`] (dispatch falls down
+//! the `IsaLevel` ladder on machines without AVX-512 VNNI).
 
 #[cfg(target_arch = "x86_64")]
 use std::arch::x86_64::*;
 
-/// Lanes per vpdpbusd (16 i32 lanes in a zmm).
-pub const VNNI_LANES: usize = 16;
+pub use super::pack::{PackedB, VNNI_LANES};
+#[cfg(target_arch = "x86_64")]
+use super::{KC_QUADS, NC_LANES};
+
+/// Accumulator tile rows for [`igemm_vnni_tiled`]: 6 rows x 2 zmm
+/// accumulators = 12 of the 32 zmm registers, leaving room for the 2
+/// B vectors and broadcasts.
+pub const MR: usize = 6;
 
 /// Runtime check for AVX-512 VNNI (+ the AVX-512F/BW baseline we use).
 pub fn vnni_available() -> bool {
@@ -35,47 +50,32 @@ pub fn vnni_available() -> bool {
     }
 }
 
-/// Packed-B buffer for the VNNI kernel.
-///
-/// Geometry: `kp = ceil(k/4)` quads, `np = ceil(n/16)*16` padded lanes;
-/// layout `[kp][np][4]` bytes with zero padding (zero u8 bytes contribute
-/// 0 to every product, so padding is neutral *before* the zero-point
-/// correction, which uses the true k).
-#[derive(Default)]
-pub struct PackedB {
-    pub data: Vec<u8>,
-    pub k: usize,
-    pub n: usize,
-    pub kp: usize,
-    pub np: usize,
-}
-
-impl PackedB {
-    /// Pack row-major `b [k, n]` into VNNI layout.
-    pub fn pack(b: &[u8], k: usize, n: usize) -> PackedB {
-        assert_eq!(b.len(), k * n);
-        let kp = k.div_ceil(4);
-        let np = n.div_ceil(VNNI_LANES) * VNNI_LANES;
-        let mut data = vec![0u8; kp * np * 4];
-        for p in 0..k {
-            let quad = p / 4;
-            let q = p % 4;
-            let brow = &b[p * n..(p + 1) * n];
-            let dst = &mut data[quad * np * 4..(quad + 1) * np * 4];
-            for j in 0..n {
-                dst[j * 4 + q] = brow[j];
+/// Pack `a [m, k]` (s8) for the tiled kernel: one broadcast-ready i32
+/// per (quad, row) holding 4 consecutive signed k-bytes, zero-padded at
+/// the k tail (neutral before the zero-point correction).  Quad-major
+/// layout `out[quad*m + row]` so the micro-kernel reads MR consecutive
+/// words per k-step.
+pub fn pack_a(a: &[i8], m: usize, k: usize, out: &mut Vec<i32>) {
+    assert_eq!(a.len(), m * k);
+    let kp = k.div_ceil(4);
+    out.clear();
+    out.resize(kp * m, 0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for quad in 0..kp {
+            let base = quad * 4;
+            let take = (k - base).min(4);
+            let mut qb = [0u8; 4];
+            for (x, &av) in qb.iter_mut().zip(&arow[base..base + take]) {
+                *x = av as u8;
             }
+            out[quad * m + i] = i32::from_le_bytes(qb);
         }
-        PackedB { data, k, n, kp, np }
-    }
-
-    pub fn bytes(&self) -> usize {
-        self.data.len()
     }
 }
 
-/// `c[m,n] += a[m,k] x B` via vpdpbusd. Caller must zero `c` first and
-/// have checked [`vnni_available`].
+/// `c[m,n] += a[m,k] x B` via vpdpbusd, one row at a time. Caller must
+/// zero `c` first and have checked [`vnni_available`].
 ///
 /// # Safety
 /// Requires AVX-512F + AVX-512VNNI (checked by the caller).
@@ -144,6 +144,181 @@ pub unsafe fn igemm_vnni(_m: usize, _k: usize, _a: &[i8], _bp: &PackedB, _c: &mu
     unreachable!("vnni_available() is false on this arch")
 }
 
+/// Tiled VNNI macro-kernel over columns `[j0, j1)` of the packed panel;
+/// A pre-packed by [`pack_a`].  Overwrites C (no pre-zero needed): the
+/// first k-block stores, later blocks accumulate.
+///
+/// # Safety
+/// Requires AVX-512F/BW/VNNI (callers dispatch via [`vnni_available`]).
+/// `cbase` must point at an `m * bp.n` i32 buffer; concurrent callers
+/// must write disjoint `[j0, j1)` ranges.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+pub unsafe fn igemm_vnni_tiled(
+    m: usize,
+    apack: &[i32],
+    bp: &PackedB,
+    cbase: *mut i32,
+    j0: usize,
+    j1: usize,
+) {
+    debug_assert_eq!(apack.len(), bp.kp * m);
+    debug_assert!(j1 <= bp.n);
+    let kp = bp.kp;
+    let np = bp.np;
+    let mut jc = j0;
+    while jc < j1 {
+        let jl = (jc + NC_LANES).min(j1);
+        let mut pc = 0;
+        loop {
+            let kq = (kp - pc).min(KC_QUADS);
+            let first = pc == 0;
+            let mut i = 0;
+            while i < m {
+                let mr = (m - i).min(MR);
+                let mut jt = jc;
+                // 2-zmm (32-lane) tiles while a full pair is loadable
+                while jt < jl && jt + 32 <= np {
+                    match mr {
+                        1 => tile32::<1>(m, apack, bp, pc, kq, i, jt, cbase, jl, first),
+                        2 => tile32::<2>(m, apack, bp, pc, kq, i, jt, cbase, jl, first),
+                        3 => tile32::<3>(m, apack, bp, pc, kq, i, jt, cbase, jl, first),
+                        4 => tile32::<4>(m, apack, bp, pc, kq, i, jt, cbase, jl, first),
+                        5 => tile32::<5>(m, apack, bp, pc, kq, i, jt, cbase, jl, first),
+                        _ => tile32::<6>(m, apack, bp, pc, kq, i, jt, cbase, jl, first),
+                    }
+                    jt += 32;
+                }
+                // np % 32 == 16 leaves a single-zmm column tail
+                if jt < jl {
+                    match mr {
+                        1 => tile16::<1>(m, apack, bp, pc, kq, i, jt, cbase, jl, first),
+                        2 => tile16::<2>(m, apack, bp, pc, kq, i, jt, cbase, jl, first),
+                        3 => tile16::<3>(m, apack, bp, pc, kq, i, jt, cbase, jl, first),
+                        4 => tile16::<4>(m, apack, bp, pc, kq, i, jt, cbase, jl, first),
+                        5 => tile16::<5>(m, apack, bp, pc, kq, i, jt, cbase, jl, first),
+                        _ => tile16::<6>(m, apack, bp, pc, kq, i, jt, cbase, jl, first),
+                    }
+                }
+                i += mr;
+            }
+            pc += kq;
+            if pc >= kp {
+                break;
+            }
+        }
+        jc = jl;
+    }
+}
+
+/// One MR x 32-lane (2 zmm) register tile over quads `[pc, pc+kq)`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile32<const R: usize>(
+    m: usize,
+    apack: &[i32],
+    bp: &PackedB,
+    pc: usize,
+    kq: usize,
+    i: usize,
+    jt: usize,
+    cbase: *mut i32,
+    jlim: usize,
+    first: bool,
+) {
+    let np = bp.np;
+    let n = bp.n;
+    let bdata = bp.data.as_ptr();
+    let mut acc0 = [_mm512_setzero_si512(); R];
+    let mut acc1 = [_mm512_setzero_si512(); R];
+    for quad in pc..pc + kq {
+        let bptr = bdata.add((quad * np + jt) * 4);
+        let bv0 = _mm512_loadu_si512(bptr as *const _);
+        let bv1 = _mm512_loadu_si512(bptr.add(64) as *const _);
+        let ap = apack.as_ptr().add(quad * m + i);
+        for r in 0..R {
+            let av = _mm512_set1_epi32(*ap.add(r));
+            acc0[r] = _mm512_dpbusd_epi32(acc0[r], bv0, av);
+            acc1[r] = _mm512_dpbusd_epi32(acc1[r], bv1, av);
+        }
+    }
+    for r in 0..R {
+        let row = cbase.add((i + r) * n);
+        store16(row.add(jt), acc0[r], jlim as isize - jt as isize, first);
+        store16(row.add(jt + 16), acc1[r], jlim as isize - jt as isize - 16, first);
+    }
+}
+
+/// One MR x 16-lane (1 zmm) register tile (np % 32 == 16 column tail).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile16<const R: usize>(
+    m: usize,
+    apack: &[i32],
+    bp: &PackedB,
+    pc: usize,
+    kq: usize,
+    i: usize,
+    jt: usize,
+    cbase: *mut i32,
+    jlim: usize,
+    first: bool,
+) {
+    let np = bp.np;
+    let n = bp.n;
+    let bdata = bp.data.as_ptr();
+    let mut acc = [_mm512_setzero_si512(); R];
+    for quad in pc..pc + kq {
+        let bptr = bdata.add((quad * np + jt) * 4);
+        let bv = _mm512_loadu_si512(bptr as *const _);
+        let ap = apack.as_ptr().add(quad * m + i);
+        for r in 0..R {
+            let av = _mm512_set1_epi32(*ap.add(r));
+            acc[r] = _mm512_dpbusd_epi32(acc[r], bv, av);
+        }
+    }
+    for r in 0..R {
+        let row = cbase.add((i + r) * n);
+        store16(row.add(jt), acc[r], jlim as isize - jt as isize, first);
+    }
+}
+
+/// Store/accumulate 16 lanes at `p`, clipped to `valid` columns.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+unsafe fn store16(p: *mut i32, v: __m512i, valid: isize, first: bool) {
+    if valid >= 16 {
+        if first {
+            _mm512_storeu_si512(p as *mut _, v);
+        } else {
+            let prev = _mm512_loadu_si512(p as *const _);
+            _mm512_storeu_si512(p as *mut _, _mm512_add_epi32(prev, v));
+        }
+    } else if valid > 0 {
+        let mask: u16 = (1u16 << valid) - 1;
+        if first {
+            _mm512_mask_storeu_epi32(p, mask, v);
+        } else {
+            let prev = _mm512_maskz_loadu_epi32(mask, p);
+            _mm512_mask_storeu_epi32(p, mask, _mm512_add_epi32(prev, v));
+        }
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub unsafe fn igemm_vnni_tiled(
+    _m: usize,
+    _apack: &[i32],
+    _bp: &PackedB,
+    _cbase: *mut i32,
+    _j0: usize,
+    _j1: usize,
+) {
+    unreachable!("vnni_available() is false on this arch")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,23 +326,17 @@ mod tests {
     use crate::util::prop::{check, gen};
 
     #[test]
-    fn pack_layout_roundtrip() {
-        let k = 6;
-        let n = 3;
-        let b: Vec<u8> = (0..k * n).map(|x| x as u8).collect();
-        let bp = PackedB::pack(&b, k, n);
-        assert_eq!(bp.kp, 2);
-        assert_eq!(bp.np, 16);
-        // element b[p, j] must live at data[(p/4)*np*4 + j*4 + p%4]
-        for p in 0..k {
-            for j in 0..n {
-                assert_eq!(
-                    bp.data[(p / 4) * bp.np * 4 + j * 4 + p % 4],
-                    b[p * n + j],
-                    "(p={p}, j={j})"
-                );
-            }
-        }
+    fn pack_a_quad_major() {
+        // k = 6: one full quad + a padded tail quad, m = 2
+        let a: Vec<i8> = vec![1, -2, 3, -4, 5, -6, 10, 20, 30, 40, 50, 60];
+        let mut out = Vec::new();
+        pack_a(&a, 2, 6, &mut out);
+        assert_eq!(out.len(), 2 * 2);
+        // quad-major: [q0r0, q0r1, q1r0, q1r1]
+        assert_eq!(out[0], i32::from_le_bytes([1, -2i8 as u8, 3, -4i8 as u8]));
+        assert_eq!(out[1], i32::from_le_bytes([10, 20, 30, 40]));
+        assert_eq!(out[2], i32::from_le_bytes([5, -6i8 as u8, 0, 0]));
+        assert_eq!(out[3], i32::from_le_bytes([50, 60, 0, 0]));
     }
 
     #[test]
@@ -193,6 +362,37 @@ mod tests {
     }
 
     #[test]
+    fn vnni_tiled_matches_naive_prop() {
+        if !vnni_available() {
+            eprintln!("skipping: no AVX-512 VNNI");
+            return;
+        }
+        check("vnni-tiled==naive", 0x71ED, 48, |rng, case| {
+            let (dm, dk, dn) = gen::gemm_dims(rng, 70);
+            let (mut m, mut k, mut n) = (dm, dk, dn);
+            match case % 4 {
+                0 => m = 1,
+                1 => n = (n / 32) * 32 + 1 + (n % 31),
+                2 => k = (k / 4) * 4 + 1 + (k % 3),
+                _ => {}
+            }
+            let a: Vec<i8> = (0..m * k).map(|_| rng.next_u64() as i8).collect();
+            let b: Vec<u8> = (0..k * n).map(|_| rng.next_u64() as u8).collect();
+            let bp = PackedB::pack(&b, k, n);
+            let mut ap = Vec::new();
+            pack_a(&a, m, k, &mut ap);
+            let mut c = vec![0i32; m * n];
+            unsafe { igemm_vnni_tiled(m, &ap, &bp, c.as_mut_ptr(), 0, n) };
+            let mut want = vec![0i32; m * n];
+            igemm_naive(m, k, n, &a, &b, &mut want);
+            if c != want {
+                return Err(format!("mismatch at ({m},{k},{n})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn vnni_extreme_values() {
         if !vnni_available() {
             return;
@@ -204,6 +404,12 @@ mod tests {
         let mut c = vec![0i32; m * n];
         unsafe { igemm_vnni(m, k, &a, &bp, &mut c) };
         assert!(c.iter().all(|&x| x == -128 * 255 * k as i32));
+
+        let mut ap = Vec::new();
+        pack_a(&a, m, k, &mut ap);
+        let mut ct = vec![0i32; m * n];
+        unsafe { igemm_vnni_tiled(m, &ap, &bp, ct.as_mut_ptr(), 0, n) };
+        assert_eq!(c, ct);
     }
 
     #[test]
@@ -217,5 +423,24 @@ mod tests {
         let mut c = vec![100i32];
         unsafe { igemm_vnni(1, 4, &a, &bp, &mut c) };
         assert_eq!(c[0], 104);
+    }
+
+    #[test]
+    fn vnni_tiled_deep_k_multiple_blocks() {
+        if !vnni_available() {
+            return;
+        }
+        // k > 4*KC_QUADS forces the load+add+store accumulate path
+        let (m, k, n) = (7, 4 * crate::gemm::KC_QUADS + 5, 33);
+        let a: Vec<i8> = (0..m * k).map(|i| (i as i32 % 251 - 125) as i8).collect();
+        let b: Vec<u8> = (0..k * n).map(|i| (i * 17 % 256) as u8).collect();
+        let bp = PackedB::pack(&b, k, n);
+        let mut ap = Vec::new();
+        pack_a(&a, m, k, &mut ap);
+        let mut c = vec![0i32; m * n];
+        unsafe { igemm_vnni_tiled(m, &ap, &bp, c.as_mut_ptr(), 0, n) };
+        let mut want = vec![0i32; m * n];
+        igemm_naive(m, k, n, &a, &b, &mut want);
+        assert_eq!(c, want);
     }
 }

@@ -28,7 +28,10 @@
 //! `--streams N`, `--sort unsorted|words|tokens`,
 //! `--policy fixed|token-budget|bin-pack`, `--token-budget N`
 //! (padded-token budget per batch for the budget policies and the
-//! online batcher), `--serial`, `--no-pin`, `--limit N`.
+//! online batcher), `--serial`, `--no-pin`, `--limit N`,
+//! `--gemm-threads N` (worker threads per GEMM; 0 = auto, flops-gated
+//! so decode-sized calls stay single-threaded; see also
+//! `QUANTNMT_GEMM_THREADS` / `QUANTNMT_ISA`).
 //!
 //! `serve` flags: `--shards N` (worker streams), `--max-wait-ms MS`
 //! (batching deadline), `--token-budget N`, `--batch N` (row cap),
@@ -107,6 +110,7 @@ fn parse_config(args: &Args, svc: &Service) -> anyhow::Result<ServiceConfig> {
         parallel: !args.flag("serial"),
         pin_cores: !args.flag("no-pin"),
         max_decode_len: args.get_usize("max-len", 56),
+        gemm_threads: args.get_usize("gemm-threads", 0),
     })
 }
 
@@ -195,6 +199,7 @@ fn parse_server_config(args: &Args, svc: &Service) -> anyhow::Result<ServerConfi
         max_decode_len: args.get_usize("max-len", 56),
         scheduler: Scheduler::parse_or(args.get("scheduler"), Scheduler::Batch),
         slots: args.get_usize("slots", 0),
+        gemm_threads: args.get_usize("gemm-threads", 0),
     })
 }
 

@@ -89,12 +89,34 @@ pub fn dense(
             sc.acc.resize(rows * n, 0);
             prof.time_site(OpKind::QuantizedMatMul, site, || {
                 if let Some(bp) = &qw.packed {
-                    // pre-packed VNNI path + manual zero-point corrections
-                    gemm::igemm_prepacked(rows, k, &sc.a_q, bp, &mut sc.acc);
-                    apply_zero_corrections(rows, k, n, &sc.a_q, a_zero, &qw.colsum, &mut sc.acc);
+                    // prepacked panel: tiled SIMD kernel, A packed into
+                    // the reusable scratch panel
+                    gemm::igemm_prepacked_scratch(
+                        gemm::KernelChoice::Auto,
+                        0,
+                        rows,
+                        k,
+                        &sc.a_q,
+                        bp,
+                        &mut sc.acc,
+                        &mut sc.pack.a_pack,
+                    );
                 } else {
-                    gemm::igemm_corrected(rows, k, n, &sc.a_q, a_zero, &qw.data, &mut sc.acc);
+                    gemm::igemm_scratch(
+                        gemm::KernelChoice::Auto,
+                        0,
+                        rows,
+                        k,
+                        n,
+                        &sc.a_q,
+                        &qw.data,
+                        &mut sc.acc,
+                        &mut sc.pack,
+                    );
                 }
+                // both paths take the plan's precomputed weight colsum —
+                // never recomputed per call
+                gemm::apply_zero_corrections(rows, k, n, &sc.a_q, a_zero, &qw.colsum, &mut sc.acc);
             });
             let s = a_scale * qw.scale;
             prof.time(OpKind::Dequantize, || {
@@ -180,15 +202,22 @@ pub fn full_attention(
         });
         gemm_sc.acc.resize(blocks * tq * tk, 0);
         prof.time_site(OpKind::QuantizedMatMul, attn.qk, || {
+            let (a_q, b_q, acc, pack) = (
+                &gemm_sc.a_q,
+                &gemm_sc.b_q,
+                &mut gemm_sc.acc,
+                &mut gemm_sc.pack,
+            );
             for blk in 0..blocks {
-                gemm::igemm_corrected(
+                gemm::igemm_corrected_scratch(
                     tq,
                     dh,
                     tk,
-                    &gemm_sc.a_q[blk * tq * dh..][..tq * dh],
+                    &a_q[blk * tq * dh..][..tq * dh],
                     a_zero,
-                    &gemm_sc.b_q[blk * dh * tk..][..dh * tk],
-                    &mut gemm_sc.acc[blk * tq * tk..][..tq * tk],
+                    &b_q[blk * dh * tk..][..dh * tk],
+                    &mut acc[blk * tq * tk..][..tq * tk],
+                    pack,
                 );
             }
         });
@@ -248,15 +277,22 @@ pub fn full_attention(
         });
         gemm_sc.acc.resize(blocks * tq * dh, 0);
         prof.time_site(OpKind::QuantizedMatMul, attn.pv, || {
+            let (a_q, b_q, acc, pack) = (
+                &gemm_sc.a_q,
+                &gemm_sc.b_q,
+                &mut gemm_sc.acc,
+                &mut gemm_sc.pack,
+            );
             for blk in 0..blocks {
-                gemm::igemm_corrected(
+                gemm::igemm_corrected_scratch(
                     tq,
                     tk,
                     dh,
-                    &gemm_sc.a_q[blk * tq * tk..][..tq * tk],
+                    &a_q[blk * tq * tk..][..tq * tk],
                     a_zero,
-                    &gemm_sc.b_q[blk * tk * dh..][..tk * dh],
-                    &mut gemm_sc.acc[blk * tq * dh..][..tq * dh],
+                    &b_q[blk * tk * dh..][..tk * dh],
+                    &mut acc[blk * tq * dh..][..tq * dh],
+                    pack,
                 );
             }
         });
@@ -474,38 +510,6 @@ pub fn cached_attention(
                         }
                     }
                 });
-            }
-        }
-    }
-}
-
-/// Subtract the zero-point corrections from a raw `A_q x B_q` product:
-/// `acc -= 128*rowsum(a) + za*colsum(b) - k*za*128` (see `igemm_corrected`).
-#[allow(clippy::too_many_arguments)]
-fn apply_zero_corrections(
-    rows: usize,
-    k: usize,
-    n: usize,
-    a_q: &[i8],
-    a_zero: i32,
-    colsum: &[i32],
-    acc: &mut [i32],
-) {
-    let kz = k as i32 * a_zero * UINT8_ZERO_POINT;
-    for i in 0..rows {
-        let mut rowsum = 0i32;
-        for p in 0..k {
-            rowsum += a_q[i * k + p] as i32;
-        }
-        let corr_row = UINT8_ZERO_POINT * rowsum;
-        let row = &mut acc[i * n..(i + 1) * n];
-        if a_zero == 0 {
-            for x in row.iter_mut() {
-                *x -= corr_row;
-            }
-        } else {
-            for (j, x) in row.iter_mut().enumerate() {
-                *x = *x - corr_row - a_zero * colsum[j] + kz;
             }
         }
     }

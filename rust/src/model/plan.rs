@@ -440,7 +440,7 @@ impl CompiledPlan {
 fn quantize_weight(wdata: &[f32], k: usize, n: usize, b_scale: f32) -> QWeight {
     let mut data = vec![0u8; wdata.len()];
     gemm::quantize_u8(wdata, b_scale, &mut data);
-    let packed = gemm::use_vnni().then(|| PackedB::pack(&data, k, n));
+    let packed = gemm::isa_level().packs_b().then(|| PackedB::pack(&data, k, n));
     let mut colsum = vec![0i32; n];
     for p in 0..k {
         for j in 0..n {
