@@ -60,10 +60,12 @@ fn per_token_us(engine: &mut Engine, slots: usize, steps: usize, reps: usize) ->
     let mut best = f64::INFINITY;
     for _ in 0..reps {
         let mut pool = engine.new_pool(slots, steps, s);
-        let active = engine.admit(&mut pool, &memory, &src_len, s);
+        let active = engine
+            .admit(&mut pool, &memory, &src_len, s)
+            .expect("bench pool sized for the batch");
         let t0 = Instant::now();
         for _pos in 0..steps {
-            engine.pool_step(&mut pool, &active, &tokens, &mut logits);
+            let _ = engine.pool_step(&mut pool, &active, &tokens, &mut logits);
         }
         best = best.min(t0.elapsed().as_secs_f64() / steps as f64 * 1e6);
     }
@@ -75,14 +77,16 @@ fn step_counts(engine: &mut Engine, slots: usize, pos: usize) -> (u64, u64, u64)
     let src = source_batch(&engine.cfg, slots, 16);
     let (memory, src_len, s) = engine.encode(&src);
     let mut pool = engine.new_pool(slots, pos + 1, s);
-    let active = engine.admit(&mut pool, &memory, &src_len, s);
+    let active = engine
+        .admit(&mut pool, &memory, &src_len, s)
+        .expect("bench pool sized for the batch");
     let tokens = vec![1u32; slots];
     let mut logits = Vec::new();
     for _p in 0..pos {
-        engine.pool_step(&mut pool, &active, &tokens, &mut logits);
+        let _ = engine.pool_step(&mut pool, &active, &tokens, &mut logits);
     }
     engine.profiler = Profiler::enabled();
-    engine.pool_step(&mut pool, &active, &tokens, &mut logits);
+    let _ = engine.pool_step(&mut pool, &active, &tokens, &mut logits);
     let p = std::mem::take(&mut engine.profiler);
     (
         p.count(OpKind::Quantize),
@@ -98,14 +102,16 @@ fn compaction_rows(engine: &mut Engine, slots: usize) -> Vec<u64> {
     let src = source_batch(&engine.cfg, slots, 16);
     let (memory, src_len, s) = engine.encode(&src);
     let mut pool = engine.new_pool(slots, slots + 1, s);
-    let mut active = engine.admit(&mut pool, &memory, &src_len, s);
+    let mut active = engine
+        .admit(&mut pool, &memory, &src_len, s)
+        .expect("bench pool sized for the batch");
     let mut logits = Vec::new();
     let site = engine.plan().logits;
     let mut rows = Vec::new();
     while !active.is_empty() {
         let tokens = vec![1u32; active.len()];
         engine.profiler = Profiler::enabled();
-        engine.pool_step(&mut pool, &active, &tokens, &mut logits);
+        let _ = engine.pool_step(&mut pool, &active, &tokens, &mut logits);
         rows.push(engine.profiler.site_rows(site));
         // retire one slot per step, like a staggered-EOS batch
         let done = active.pop().unwrap();

@@ -119,9 +119,13 @@ pub struct ServerMetrics {
     pub shards: usize,
     /// requests admitted and completed
     pub requests: usize,
-    /// requests rejected at admission: backpressure (queue full) or
-    /// malformed (empty / longer than the backend can decode)
+    /// requests rejected at admission by backpressure (queue full or
+    /// closing) — retryable load, distinct from `shed_oversize`
     pub shed: usize,
+    /// requests rejected as unservable: empty, or longer than the
+    /// backend can decode (at admission, or — continuous scheduler —
+    /// by a shard at splice time).  Not load: a retry would shed again
+    pub shed_oversize: usize,
     /// dynamic batches formed
     pub batches: usize,
     /// real (non-pad) tokens processed
@@ -155,6 +159,14 @@ pub struct ServerMetrics {
     /// shard's KV-cache slots that were live per iteration (continuous
     /// only; the quantity iteration-level scheduling raises)
     pub shard_fill: Vec<f64>,
+    /// per-shard KV **page-pool** occupancy: mean fraction of the
+    /// shard's page budget that was live per iteration (continuous
+    /// only; under `--kv-budget-mb` this is the fill of the memory
+    /// actually capped — slots are just bookkeeping)
+    pub shard_page_fill: Vec<f64>,
+    /// per-shard page-pool high-water mark as a fraction of the budget
+    /// (continuous only; 1.0 means the shard ran into its cap)
+    pub shard_page_high: Vec<f64>,
 }
 
 impl ServerMetrics {
@@ -181,13 +193,14 @@ impl ServerMetrics {
         self.requests as f64 / self.batches as f64
     }
 
-    /// Fraction of offered requests shed by backpressure.
+    /// Fraction of offered requests shed for any reason (backpressure
+    /// or unservable).
     pub fn shed_ratio(&self) -> f64 {
-        let offered = self.requests + self.shed;
+        let offered = self.requests + self.shed + self.shed_oversize;
         if offered == 0 {
             return 0.0;
         }
-        self.shed as f64 / offered as f64
+        (self.shed + self.shed_oversize) as f64 / offered as f64
     }
 
     /// Aggregate slot-occupancy across shards (mean of the per-shard
@@ -199,12 +212,29 @@ impl ServerMetrics {
         self.shard_fill.iter().sum::<f64>() / self.shard_fill.len() as f64
     }
 
+    /// Aggregate KV page-pool occupancy across shards (mean of the
+    /// per-shard page fills); 0 under batch-synchronous scheduling.
+    pub fn page_fill(&self) -> f64 {
+        if self.shard_page_fill.is_empty() {
+            return 0.0;
+        }
+        self.shard_page_fill.iter().sum::<f64>() / self.shard_page_fill.len() as f64
+    }
+
+    /// Worst per-shard page-pool high-water fraction (how close any
+    /// shard came to its `--kv-budget-mb` cap); 0 under
+    /// batch-synchronous scheduling.
+    pub fn page_high(&self) -> f64 {
+        self.shard_page_high.iter().copied().fold(0.0, f64::max)
+    }
+
     /// Table row for the serving reports (one row per offered load).
     pub fn row(&self) -> String {
         format!(
             "{:40} {:>8.1} req/s  p50 {:>7.1}ms  p90 {:>7.1}ms  p99 {:>7.1}ms  \
              queue p50 {:>6.1}ms  ttft p50 {:>6.1}ms  itl p50 {:>5.2}ms  \
-             fill {:>5.1}%  occ {:>5.1}%  rows/batch {:>5.1}  shed {:>4.1}%",
+             fill {:>5.1}%  occ {:>5.1}%  pages {:>5.1}% (hi {:>5.1}%)  \
+             rows/batch {:>5.1}  shed {:>4.1}%",
             self.config,
             self.requests_per_sec(),
             self.total_latency.p50() * 1e3,
@@ -215,6 +245,8 @@ impl ServerMetrics {
             self.inter_token_latency.p50() * 1e3,
             self.fill_ratio() * 100.0,
             self.slot_fill() * 100.0,
+            self.page_fill() * 100.0,
+            self.page_high() * 100.0,
             self.mean_batch_rows(),
             self.shed_ratio() * 100.0,
         )
@@ -282,6 +314,7 @@ mod tests {
             shards: 2,
             requests,
             shed,
+            shed_oversize: 0,
             batches,
             tokens: 800,
             padded_tokens: 1000,
@@ -294,6 +327,8 @@ mod tests {
             inter_token_latency: LatencyStats::default(),
             decode_steps: 0,
             shard_fill: Vec::new(),
+            shard_page_fill: Vec::new(),
+            shard_page_high: Vec::new(),
         }
     }
 
@@ -319,6 +354,28 @@ mod tests {
         assert!(row.contains("occ  70.0%"), "{row}");
         assert!(row.contains("ttft p50"), "{row}");
         assert!(row.contains("itl p50"), "{row}");
+    }
+
+    #[test]
+    fn page_fill_aggregates_per_shard_pools() {
+        let mut m = server_metrics(10, 0, 2);
+        assert_eq!(m.page_fill(), 0.0, "batch scheduler reports no page pool");
+        assert_eq!(m.page_high(), 0.0);
+        m.shard_page_fill = vec![0.25, 0.75];
+        m.shard_page_high = vec![0.4, 1.0];
+        assert!((m.page_fill() - 0.5).abs() < 1e-12);
+        assert!((m.page_high() - 1.0).abs() < 1e-12, "worst shard hit its cap");
+        let row = m.row();
+        assert!(row.contains("pages  50.0%"), "{row}");
+        assert!(row.contains("hi 100.0%"), "{row}");
+    }
+
+    #[test]
+    fn shed_ratio_counts_oversize_rejections() {
+        let mut m = server_metrics(90, 6, 9);
+        m.shed_oversize = 4;
+        // 90 served + 6 backpressure + 4 unservable = 100 offered
+        assert!((m.shed_ratio() - 0.1).abs() < 1e-12);
     }
 
     #[test]

@@ -125,9 +125,21 @@ pub struct ServerConfig {
     /// batch-synchronous only)
     pub scheduler: Scheduler,
     /// KV-cache slots per shard pool under the continuous scheduler;
-    /// `0` = auto (`max_batch_rows`).  Clamped up to `max_batch_rows`
-    /// so a formed batch always fits an empty pool.
+    /// `0` = auto (`max_batch_rows`, or budget-derived when
+    /// `kv_budget_mb` is set).  Clamped up to `max_batch_rows` so a
+    /// formed batch always fits an empty pool.
     pub slots: usize,
+    /// KV-cache **memory budget** per shard pool (continuous scheduler,
+    /// `serve --kv-budget-mb`): caps the page pool's backing storage in
+    /// MiB instead of reserving worst-case memory per slot.  Admission
+    /// is then gated on free *pages*, so many short requests can share
+    /// the memory one worst-case-length request would have reserved
+    /// dense; a slot that outruns the budget mid-decode is
+    /// force-finished (response flagged `truncated`), never a panic.
+    /// With `slots == 0` the slot count itself is derived from the
+    /// budget ([`Engine::kv_budget_capacity`]).  `None` = worst-case
+    /// sizing (allocation can never fail).
+    pub kv_budget_mb: Option<usize>,
     /// worker threads per GEMM (`--gemm-threads`); 0 = auto (process
     /// default capped by `QUANTNMT_GEMM_THREADS`, flops-gated so
     /// decode-sized calls stay single-threaded)
@@ -150,6 +162,7 @@ impl Default for ServerConfig {
             max_decode_len: 56,
             scheduler: Scheduler::Batch,
             slots: 0,
+            kv_budget_mb: None,
             gemm_threads: 0,
         }
     }
@@ -167,7 +180,10 @@ impl ServerConfig {
     pub fn label(&self) -> String {
         let sched = match self.scheduler {
             Scheduler::Batch => String::new(),
-            Scheduler::Continuous => format!(" cont s{}", self.pool_capacity()),
+            Scheduler::Continuous => match self.kv_budget_mb {
+                Some(mb) => format!(" cont s{} kv{mb}mb", self.pool_capacity()),
+                None => format!(" cont s{}", self.pool_capacity()),
+            },
         };
         format!(
             "online {} {}sh wait{}ms tb{}{}",
@@ -220,6 +236,13 @@ pub struct TranslateResponse {
     /// earlier long request drains; under batch scheduling completion
     /// follows batch order.
     pub done_seq: usize,
+    /// the decode hit a length cap before emitting EOS: either the
+    /// configured `max_decode_len`, or (continuous scheduler under
+    /// `--kv-budget-mb`) the KV page budget mid-decode — the output is
+    /// a truncated prefix, not a naturally terminated translation.
+    /// The batch-synchronous scheduler cannot observe per-token
+    /// progress inside its shard closure and reports `false` uniformly.
+    pub truncated: bool,
 }
 
 /// A request waiting in the admission queue / open batch.
@@ -246,6 +269,7 @@ struct AdmissionInner {
     closed: bool,
     accepted: u64,
     shed: u64,
+    shed_oversize: u64,
 }
 
 /// Bounded request queue with non-blocking, load-shedding admission.
@@ -272,6 +296,7 @@ impl AdmissionQueue {
                 closed: false,
                 accepted: 0,
                 shed: 0,
+                shed_oversize: 0,
             }),
             not_empty: Condvar::new(),
             capacity: capacity.max(1),
@@ -282,11 +307,21 @@ impl AdmissionQueue {
     /// Admit a request, or shed it (returning `false`) when the queue
     /// is at capacity or closed, or the request is malformed (empty, or
     /// longer than the backend can decode).  Never blocks the caller.
+    ///
+    /// Malformed requests count under `shed_oversize`, not `shed`: they
+    /// can *never* be served, however idle the server is, so lumping
+    /// them into the backpressure counter would make overload look
+    /// worse than it is (and a retry storm of oversized requests look
+    /// like load).
     fn try_admit(&self, req: TranslateRequest) -> bool {
         let malformed =
             req.src.is_empty() || self.max_src_len.is_some_and(|cap| req.src.len() > cap);
         let mut g = self.inner.lock().unwrap();
-        if malformed || g.closed || g.items.len() >= self.capacity {
+        if malformed {
+            g.shed_oversize += 1;
+            return false;
+        }
+        if g.closed || g.items.len() >= self.capacity {
             g.shed += 1;
             return false;
         }
@@ -307,6 +342,12 @@ impl AdmissionQueue {
 
     fn shed(&self) -> u64 {
         self.inner.lock().unwrap().shed
+    }
+
+    /// Requests shed for being unservable (empty / over-long), as
+    /// opposed to shed by backpressure.
+    fn shed_oversize(&self) -> u64 {
+        self.inner.lock().unwrap().shed_oversize
     }
 
     fn accepted(&self) -> u64 {
@@ -331,7 +372,25 @@ impl AdmissionQueue {
                     if now >= d {
                         return Popped::TimedOut;
                     }
-                    g = self.not_empty.wait_timeout(g, d - now).unwrap().0;
+                    // trust the condvar's own verdict: a wake that the
+                    // timeout result says timed out IS the deadline
+                    // firing, even if a coarse clock still reads
+                    // `now < d` — re-deriving it from `Instant::now()`
+                    // spins one extra wait_timeout(~0) per expiry (and
+                    // under a pathological clock, many)
+                    let (guard, res) = self.not_empty.wait_timeout(g, d - now).unwrap();
+                    g = guard;
+                    if res.timed_out() {
+                        // one last drain check: an item pushed in the
+                        // wake-to-lock window beats the deadline
+                        if let Some(p) = g.items.pop_front() {
+                            return Popped::Item(p);
+                        }
+                        if g.closed {
+                            return Popped::Closed;
+                        }
+                        return Popped::TimedOut;
+                    }
                 }
             }
         }
@@ -470,9 +529,15 @@ impl ServerClient<'_> {
         self.admission.try_admit(req)
     }
 
-    /// Requests shed so far.
+    /// Requests shed so far (backpressure: queue full or closed).
     pub fn shed(&self) -> u64 {
         self.admission.shed()
+    }
+
+    /// Requests shed so far for being unservable (empty or longer than
+    /// the backend's source cap) — distinct from backpressure `shed`.
+    pub fn shed_oversize(&self) -> u64 {
+        self.admission.shed_oversize()
     }
 
     /// Requests admitted so far.
@@ -497,6 +562,15 @@ struct ShardStats {
     occupied_slot_steps: usize,
     /// pool capacity (continuous only; 0 = batch-synchronous shard)
     pool_capacity: usize,
+    /// Σ live KV pages over iterations (continuous only)
+    page_steps_used: usize,
+    /// page-pool allocation cap, both precisions (continuous only)
+    page_capacity: usize,
+    /// most KV pages simultaneously live over the shard's lifetime
+    page_high_water: usize,
+    /// unservable rows this shard shed at splice time (a request whose
+    /// padded source outgrew the pool between admission and encode)
+    shed_oversize: usize,
 }
 
 impl ShardStats {
@@ -506,6 +580,24 @@ impl ShardStats {
             return 0.0;
         }
         self.occupied_slot_steps as f64 / (self.steps * self.pool_capacity) as f64
+    }
+
+    /// Mean KV page-pool occupancy of this shard (the memory-budget
+    /// analogue of [`fill`](Self::fill): pages are what `--kv-budget-mb`
+    /// actually caps, slots are just bookkeeping).
+    fn page_fill(&self) -> f64 {
+        if self.steps == 0 || self.page_capacity == 0 {
+            return 0.0;
+        }
+        self.page_steps_used as f64 / (self.steps * self.page_capacity) as f64
+    }
+
+    /// Page-pool high-water mark as a fraction of the cap.
+    fn page_high(&self) -> f64 {
+        if self.page_capacity == 0 {
+            return 0.0;
+        }
+        self.page_high_water as f64 / self.page_capacity as f64
     }
 }
 
@@ -530,13 +622,13 @@ impl LatencyBook {
     /// different prefill batches.
     fn emit_all(
         &self,
-        rows: impl IntoIterator<Item = (usize, Vec<u32>, Instant, Instant)>,
+        rows: impl IntoIterator<Item = (usize, Vec<u32>, Instant, Instant, bool)>,
         now: Instant,
     ) {
         let mut ql = self.queue.lock().unwrap();
         let mut tl = self.total.lock().unwrap();
         let mut d = self.done.lock().unwrap();
-        for (id, out, enqueued, closed_at) in rows {
+        for (id, out, enqueued, closed_at, truncated) in rows {
             let total = now.saturating_duration_since(enqueued);
             let queued = closed_at.saturating_duration_since(enqueued);
             ql.record(queued);
@@ -548,6 +640,7 @@ impl LatencyBook {
                 queue_secs: queued.as_secs_f64(),
                 total_secs: total.as_secs_f64(),
                 done_seq,
+                truncated,
             });
         }
     }
@@ -561,6 +654,7 @@ impl LatencyBook {
         wall: f64,
         shard_stats: &[ShardStats],
         shed: usize,
+        shed_oversize: usize,
     ) -> (ServerMetrics, Vec<TranslateResponse>) {
         let mut responses = self.done.into_inner().unwrap();
         responses.sort_by_key(|r| r.id);
@@ -571,6 +665,8 @@ impl LatencyBook {
             shards,
             requests: shard_stats.iter().map(|s| s.requests).sum(),
             shed,
+            shed_oversize: shed_oversize
+                + shard_stats.iter().map(|s| s.shed_oversize).sum::<usize>(),
             batches: shard_stats.iter().map(|s| s.batches).sum(),
             tokens: shard_stats.iter().map(|s| s.tokens).sum(),
             padded_tokens: shard_stats.iter().map(|s| s.padded_tokens).sum(),
@@ -588,6 +684,16 @@ impl LatencyBook {
             decode_steps: shard_stats.iter().map(|s| s.steps).sum(),
             shard_fill: if continuous {
                 shard_stats.iter().map(ShardStats::fill).collect()
+            } else {
+                Vec::new()
+            },
+            shard_page_fill: if continuous {
+                shard_stats.iter().map(ShardStats::page_fill).collect()
+            } else {
+                Vec::new()
+            },
+            shard_page_high: if continuous {
+                shard_stats.iter().map(ShardStats::page_high).collect()
             } else {
                 Vec::new()
             },
@@ -724,8 +830,14 @@ where
     .unwrap();
 
     let wall = t0.elapsed().as_secs_f64();
-    let (metrics, responses) =
-        book.into_metrics(cfg, shards, wall, &shard_stats, admission.shed() as usize);
+    let (metrics, responses) = book.into_metrics(
+        cfg,
+        shards,
+        wall,
+        &shard_stats,
+        admission.shed() as usize,
+        admission.shed_oversize() as usize,
+    );
     (metrics, responses, drive_out)
 }
 
@@ -775,7 +887,7 @@ where
                     .iter()
                     .zip(&fb.enqueued)
                     .zip(outs)
-                    .map(|((&id, &enq), out)| (id, out, enq, fb.closed_at));
+                    .map(|((&id, &enq), out)| (id, out, enq, fb.closed_at, false));
                 book.emit_all(rows, now);
             }
             stats
@@ -799,20 +911,44 @@ struct SlotCtx {
     out: Vec<u32>,
 }
 
-/// The iteration-level shard loop: encode-and-splice every formed
-/// batch that fits the pool's free slots, step the active set once,
-/// emit + recycle finished slots, repeat.  Blocks on the dispatch
-/// queue only while the pool is idle; mid-flight it polls with
-/// [`BatchQueue::try_pop_if`], claiming a batch **only if it fits the
-/// current free slots** — a batch this shard cannot start stays queued
-/// for an idle peer instead of being parked behind a draining pool.
+/// One encoded request waiting in a continuous shard's splice backlog:
+/// its encoder memory is already computed (at batch level, so prefill
+/// GEMMs — and therefore outputs — are bit-identical to the batch
+/// scheduler's), but it holds no KV slot or pages yet.  Under
+/// `--kv-budget-mb` this is the admission-control point: rows leave the
+/// backlog one at a time, each gated on free pages.
+struct PendingRow {
+    id: usize,
+    enqueued: Instant,
+    closed_at: Instant,
+    /// this row's `[s, d_model]` slice of the prefill batch's memory
+    memory: Vec<f32>,
+    src_len: usize,
+    /// padded source length the memory was encoded at
+    s: usize,
+}
+
+/// The iteration-level shard loop: encode every claimed batch into the
+/// splice backlog, admit backlog rows while the pool has free slots
+/// *and free KV pages*, step the active set once, emit + recycle
+/// finished slots, repeat.  Blocks on the dispatch queue only while
+/// completely idle; mid-flight it polls with
+/// [`BatchQueue::try_pop_if`], claiming a batch **only if the whole
+/// batch is admissible right now** — a batch this shard would just park
+/// in its backlog stays queued for an idle peer instead.
+///
+/// Capacity failures are serving events here, never panics: an
+/// unservable row ([`AdmitError::is_permanent`]) is shed with its own
+/// counter, a momentary slot/page shortage defers the row until decode
+/// recycles capacity, and a slot the pool force-finishes mid-decode
+/// (page budget exhausted, or `t_max`) ships its partial output flagged
+/// [`TranslateResponse::truncated`].
 fn continuous_shard_loop(
     engine: &mut Engine,
     cfg: &ServerConfig,
     dispatch: &BatchQueue<FormedBatch>,
     book: &LatencyBook,
 ) -> ShardStats {
-    let capacity = cfg.pool_capacity();
     // a zero decode cap yields empty outputs without stepping, exactly
     // like `translate_greedy` (parity with the batch scheduler); the
     // pool is still allocated with >= 1 position so construction is
@@ -820,7 +956,18 @@ fn continuous_shard_loop(
     let t_max = cfg.max_decode_len.min(engine.cfg.max_tgt_len);
     let src_cap = engine.cfg.max_src_len;
     let vocab = engine.cfg.vocab_size;
-    let mut pool = engine.new_pool(capacity, t_max.max(1), src_cap);
+    let d_model = engine.cfg.d_model;
+    let budget_bytes = cfg.kv_budget_mb.map(|mb| mb << 20);
+    // slot count: explicit --slots (batch-row clamped), else — under a
+    // budget — however many minimum-footprint requests the page budget
+    // could hold: pages, not slots, are the real constraint, and idle
+    // slot bookkeeping is cheap
+    let capacity = match (cfg.slots, budget_bytes) {
+        (0, Some(b)) => engine.kv_budget_capacity(b).max(cfg.max_batch_rows).max(1),
+        _ => cfg.pool_capacity(),
+    };
+    let mut pool = engine.new_pool_budgeted(capacity, t_max.max(1), src_cap, budget_bytes);
+    let mut backlog: VecDeque<PendingRow> = VecDeque::new();
     let mut ctx: Vec<Option<SlotCtx>> = std::iter::repeat_with(|| None).take(capacity).collect();
     let mut active: Vec<usize> = Vec::new();
     let mut tokens: Vec<u32> = Vec::new();
@@ -829,26 +976,29 @@ fn continuous_shard_loop(
     // once per iteration, never across the argmax scan
     let mut ttft_samples: Vec<Duration> = Vec::new();
     let mut itl_samples: Vec<Duration> = Vec::new();
-    let mut finished: Vec<SlotCtx> = Vec::new();
+    let mut finished: Vec<(SlotCtx, bool)> = Vec::new();
     let mut stats = ShardStats {
         pool_capacity: capacity,
+        page_capacity: pool.page_stats().capacity,
         ..ShardStats::default()
     };
 
     'run: loop {
-        // admission: splice every formed batch that currently fits
+        // intake: encode claimed batches into the splice backlog
         loop {
-            let fb = if active.is_empty() {
-                // idle pool: block until work arrives or the queue
-                // closes-and-drains (any formed batch fits an empty
-                // pool — capacity >= max_batch_rows)
+            let fb = if active.is_empty() && backlog.is_empty() {
+                // idle shard: block until work arrives or the queue
+                // closes-and-drains
                 match dispatch.pop() {
                     Some(fb) => fb,
                     None => break 'run,
                 }
             } else {
-                // mid-flight: claim a batch only if it fits right now
-                match dispatch.try_pop_if(|fb| fb.batch.len() <= pool.free_slots()) {
+                // mid-flight: claim a batch only when this shard could
+                // admit all of it right now (free slots and pages)
+                match dispatch.try_pop_if(|fb| {
+                    backlog.is_empty() && pool.can_admit(fb.batch.len(), fb.batch.max_len)
+                }) {
                     Some(fb) => fb,
                     None => break,
                 }
@@ -864,26 +1014,63 @@ fn continuous_shard_loop(
                     .indices
                     .iter()
                     .zip(&fb.enqueued)
-                    .map(|(&id, &enq)| (id, Vec::new(), enq, fb.closed_at));
+                    .map(|(&id, &enq)| (id, Vec::new(), enq, fb.closed_at, false));
                 book.emit_all(rows, now);
                 continue;
             }
+            // encode at batch level: prefill sees exactly the rows the
+            // batch scheduler's prefill would, so each row's memory —
+            // and every decode step that reads it — stays bit-identical
+            // however the rows splice later
             let bt = Instant::now();
             let (memory, src_len, s) = engine.encode(&fb.batch.src);
-            let slots = engine.admit(&mut pool, &memory, &src_len, s);
             stats.busy_secs += bt.elapsed().as_secs_f64();
-            let admitted_at = Instant::now();
-            let rows = slots.iter().zip(fb.batch.indices.iter().zip(&fb.enqueued));
-            for (&slot, (&id, &enq)) in rows {
-                ctx[slot] = Some(SlotCtx {
+            let row_elems = s * d_model;
+            for (r, (&id, &enq)) in fb.batch.indices.iter().zip(&fb.enqueued).enumerate() {
+                backlog.push_back(PendingRow {
                     id,
                     enqueued: enq,
                     closed_at: fb.closed_at,
-                    last_emit: admitted_at,
-                    out: Vec::new(),
+                    memory: memory[r * row_elems..(r + 1) * row_elems].to_vec(),
+                    src_len: src_len[r],
+                    s,
                 });
-                active.push(slot);
-                tokens.push(BOS_ID);
+            }
+        }
+
+        // splice: admit backlog rows while slots AND pages are free
+        while let Some(front) = backlog.front() {
+            match engine.admit(&mut pool, &front.memory, &[front.src_len], front.s) {
+                Ok(slots) => {
+                    let slot = slots[0];
+                    let p = backlog.pop_front().unwrap();
+                    ctx[slot] = Some(SlotCtx {
+                        id: p.id,
+                        enqueued: p.enqueued,
+                        closed_at: p.closed_at,
+                        last_emit: Instant::now(),
+                        out: Vec::new(),
+                    });
+                    active.push(slot);
+                    tokens.push(BOS_ID);
+                }
+                Err(e) if e.is_permanent() => {
+                    // unservable however long we wait: shed it here
+                    // instead of wedging the backlog behind it
+                    // (admission-time max_src_len normally catches
+                    // these before they ever reach a shard)
+                    backlog.pop_front();
+                    stats.shed_oversize += 1;
+                    stats.requests -= 1;
+                }
+                Err(e) => {
+                    // momentarily out of slots or pages: decode below
+                    // will recycle some.  The budget floor guarantees
+                    // an idle pool admits any in-cap row, so a
+                    // transient refusal implies live slots to wait on
+                    assert!(!active.is_empty(), "idle pool refused admission: {e}");
+                    break;
+                }
             }
         }
         if active.is_empty() {
@@ -892,17 +1079,29 @@ fn continuous_shard_loop(
 
         // one iteration over the active set
         let bt = Instant::now();
-        engine.pool_step(&mut pool, &active, &tokens, &mut logits);
+        let truncated = engine.pool_step(&mut pool, &active, &tokens, &mut logits);
         let now = Instant::now();
         let exec = now.saturating_duration_since(bt);
         book.batch.lock().unwrap().record(exec);
         stats.busy_secs += exec.as_secs_f64();
         stats.steps += 1;
         stats.occupied_slot_steps += active.len();
+        stats.page_steps_used += pool.page_stats().used;
 
+        // slots the pool force-finished (t_max, or the page budget ran
+        // dry mid-decode): no logits row, already recycled — ship the
+        // output accumulated so far, flagged truncated
+        for &slot in &truncated {
+            let c = ctx[slot].take().expect("truncated slot has context");
+            finished.push((c, true));
+        }
         let mut keep = Vec::with_capacity(active.len());
         let mut keep_tokens = Vec::with_capacity(active.len());
-        for (i, &slot) in active.iter().enumerate() {
+        let mut li = 0usize; // logits rows cover only surviving slots
+        for &slot in active.iter() {
+            if truncated.contains(&slot) {
+                continue;
+            }
             let c = ctx[slot].as_mut().expect("active slot has context");
             if pool.pos(slot) == 1 {
                 ttft_samples.push(now.saturating_duration_since(c.enqueued));
@@ -910,13 +1109,16 @@ fn continuous_shard_loop(
                 itl_samples.push(now.saturating_duration_since(c.last_emit));
             }
             c.last_emit = now;
-            let next = ops::argmax(&logits[i * vocab..(i + 1) * vocab]) as u32;
+            let next = ops::argmax(&logits[li * vocab..(li + 1) * vocab]) as u32;
+            li += 1;
             if next != EOS_ID {
                 c.out.push(next);
             }
             if next == EOS_ID || pool.pos(slot) >= t_max {
-                // finish: recycle the slot now, emit below
-                finished.push(ctx[slot].take().unwrap());
+                // finish: recycle the slot (and its pages) now, emit
+                // below; hitting t_max without EOS is a length cap,
+                // flagged truncated like a budget force-finish
+                finished.push((ctx[slot].take().unwrap(), next != EOS_ID));
                 pool.finish(slot);
             } else {
                 keep.push(slot);
@@ -938,11 +1140,15 @@ fn continuous_shard_loop(
             }
         }
         book.emit_all(
-            finished.drain(..).map(|c| (c.id, c.out, c.enqueued, c.closed_at)),
+            finished
+                .drain(..)
+                .map(|(c, trunc)| (c.id, c.out, c.enqueued, c.closed_at, trunc)),
             now,
         );
     }
+    stats.page_high_water = pool.page_stats().high_water;
     debug_assert!(pool.is_idle(), "shard exited with live slots");
+    debug_assert!(backlog.is_empty(), "shard exited with backlogged rows");
     stats
 }
 
@@ -1140,17 +1346,20 @@ mod tests {
 
     #[test]
     fn admission_sheds_malformed_requests() {
-        // a malformed request must be shed, never panic a shard
+        // a malformed request must be shed, never panic a shard — and
+        // under its own counter: it is unservable, not backpressure
         let q = AdmissionQueue::new(8, Some(10));
         assert!(q.try_admit(req(0, 10)), "at the cap is fine");
         assert!(!q.try_admit(req(1, 11)), "over-long must shed");
         assert!(!q.try_admit(req(2, 0)), "empty must shed");
         assert_eq!(q.accepted(), 1);
-        assert_eq!(q.shed(), 2);
+        assert_eq!(q.shed_oversize(), 2);
+        assert_eq!(q.shed(), 0, "no backpressure happened");
         // with no cap, only emptiness is malformed
         let q = AdmissionQueue::new(8, None);
         assert!(q.try_admit(req(0, 10_000)));
         assert!(!q.try_admit(req(1, 0)));
+        assert_eq!(q.shed_oversize(), 1);
     }
 
     #[test]
@@ -1372,6 +1581,12 @@ mod tests {
         assert!(metrics.slot_fill() > 0.0 && metrics.slot_fill() <= 1.0);
         assert_eq!(metrics.ttft_latency.count(), 24);
         assert_eq!(metrics.queue_latency.count(), 24);
+        // page-pool observables: live pages were counted each step and
+        // the high-water mark never exceeds the (worst-case) cap
+        assert_eq!(metrics.shard_page_fill.len(), 2);
+        assert!(metrics.page_fill() > 0.0 && metrics.page_fill() <= 1.0);
+        assert!(metrics.page_high() > 0.0 && metrics.page_high() <= 1.0);
+        assert_eq!(metrics.shed_oversize, 0);
     }
 
     #[test]

@@ -365,6 +365,11 @@ impl Service {
     /// executes fused whole-sequence graphs, so requesting the
     /// continuous scheduler with a [`Backend::Runtime`] backend is an
     /// error.
+    ///
+    /// `cfg.kv_budget_mb` (`serve --kv-budget-mb`) caps each continuous
+    /// shard's KV page pool by memory instead of reserving worst case
+    /// per slot; it is an error on any path that would silently ignore
+    /// it (batch scheduler, runtime backend).
     pub fn serve<D, R>(
         &self,
         cfg: &ServerConfig,
@@ -391,6 +396,13 @@ impl Service {
                 let plan = self.compile_plan(&cfg.backend)?;
                 match cfg.scheduler {
                     Scheduler::Batch => {
+                        anyhow::ensure!(
+                            cfg.kv_budget_mb.is_none(),
+                            "--kv-budget-mb needs the continuous scheduler \
+                             (the batch scheduler reserves worst-case KV memory \
+                             per row for the life of its batch); \
+                             use --scheduler continuous"
+                        );
                         let factory = |_id: usize| {
                             let mut engine =
                                 Engine::from_compiled(self.model_cfg.clone(), plan.clone());
@@ -412,6 +424,12 @@ impl Service {
                     "the continuous scheduler needs an engine backend \
                      (the PJRT runtime executes fused whole-sequence graphs); \
                      use --backend engine-fp32/engine-int8 or --scheduler batch"
+                );
+                anyhow::ensure!(
+                    cfg.kv_budget_mb.is_none(),
+                    "--kv-budget-mb needs an engine backend under the continuous \
+                     scheduler (the PJRT runtime owns its own KV buffers); \
+                     use --backend engine-fp32/engine-int8"
                 );
                 let prec = *prec;
                 let index = self

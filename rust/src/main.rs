@@ -42,7 +42,11 @@
 //! dynamic batches vs iteration-level scheduling over a persistent
 //! KV-cache slot pool with mid-flight admission; engine backends only
 //! for `continuous`), `--slots N` (KV-cache slots per shard pool,
-//! default = the `--batch` row cap).
+//! default = the `--batch` row cap), `--kv-budget-mb N` (continuous
+//! only: cap each shard's paged KV pool by memory instead of worst
+//! case per slot — admission then gates on free pages, and a slot that
+//! outruns the budget mid-decode is force-finished with its response
+//! flagged truncated, never a panic).
 //!
 //! `recipe derive` flags: `--synthetic` (deterministic synthetic
 //! calibration table, no artifacts needed), `--mode M` (default mode),
@@ -199,6 +203,11 @@ fn parse_server_config(args: &Args, svc: &Service) -> anyhow::Result<ServerConfi
         max_decode_len: args.get_usize("max-len", 56),
         scheduler: Scheduler::parse_or(args.get("scheduler"), Scheduler::Batch),
         slots: args.get_usize("slots", 0),
+        // 0 = unset: worst-case KV sizing (allocation can never fail)
+        kv_budget_mb: match args.get_usize("kv-budget-mb", 0) {
+            0 => None,
+            mb => Some(mb),
+        },
         gemm_threads: args.get_usize("gemm-threads", 0),
     })
 }
@@ -218,11 +227,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         rate,
         cfg.label()
     );
-    let (metrics, _responses, (submitted, shed)) =
+    let (metrics, responses, (submitted, shed)) =
         svc.serve(&cfg, |client| replay_trace(client, reqs, &offsets))?;
     println!("{}", metrics.row());
+    let truncated = responses.iter().filter(|r| r.truncated).count();
     println!(
-        "submitted {submitted}  shed {shed}  batches {}  utilization {:.1}%  wall {:.2}s",
+        "submitted {submitted}  shed {shed} (+{} oversize)  truncated {truncated}  \
+         batches {}  utilization {:.1}%  wall {:.2}s",
+        metrics.shed_oversize,
         metrics.batches,
         metrics.utilization * 100.0,
         metrics.wall_secs
@@ -247,6 +259,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             metrics.decode_steps,
             metrics.slot_fill() * 100.0,
             fills.join(" "),
+        );
+        let page_highs: Vec<String> = metrics
+            .shard_page_high
+            .iter()
+            .map(|f| format!("{:.1}%", f * 100.0))
+            .collect();
+        println!(
+            "kv pages: occupancy {:.1}%  high-water {:.1}% of budget (per shard: {})",
+            metrics.page_fill() * 100.0,
+            metrics.page_high() * 100.0,
+            page_highs.join(" "),
         );
     }
     Ok(())

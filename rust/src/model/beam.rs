@@ -40,7 +40,11 @@ impl Default for BeamConfig {
 #[derive(Debug, Clone)]
 pub struct BeamResult {
     pub translations: Vec<Vec<u32>>,
-    /// total bytes moved by cache beam-gathers
+    /// bytes actually moved by beam reordering: with paged caches a
+    /// gather is a page-table permutation, so this counts only the
+    /// copy-on-write page copies of genuinely shared-then-written
+    /// pages — not cache size × gather count (the dense layout's
+    /// honest-but-huge figure this metric used to overstate further)
     pub gather_bytes: usize,
     /// total number of gather invocations
     pub gather_calls: usize,
@@ -88,7 +92,9 @@ pub fn translate_beam(engine: &mut Engine, src: &[Vec<u32>], bc: BeamConfig) -> 
     // hypotheses still occupy their slot so the gather permutation is
     // total), so the active set is the identity schedule
     let mut pool: DecodePool = engine.new_pool(slots, max_len, s);
-    let all_slots: Vec<usize> = engine.admit(&mut pool, &mem_rep, &len_rep, s);
+    let all_slots: Vec<usize> = engine
+        .admit(&mut pool, &mem_rep, &len_rep, s)
+        .expect("beam pool sized for the batch");
 
     let vocab = engine.cfg.vocab_size;
     let mut hyps: Vec<Vec<Hyp>> = (0..bsz)
@@ -109,7 +115,11 @@ pub fn translate_beam(engine: &mut Engine, src: &[Vec<u32>], bc: BeamConfig) -> 
     let mut gather_calls = 0usize;
 
     for _pos in 0..max_len {
-        engine.pool_step(&mut pool, &all_slots, &tokens, &mut logits);
+        let truncated = engine.pool_step(&mut pool, &all_slots, &tokens, &mut logits);
+        debug_assert!(
+            truncated.is_empty(),
+            "unbudgeted beam pool force-finished {truncated:?}"
+        );
         let mut beam_src = vec![0usize; slots];
         let mut next_tokens = vec![PAD_ID; slots];
         let mut all_finished = true;
@@ -204,17 +214,18 @@ pub fn translate_beam(engine: &mut Engine, src: &[Vec<u32>], bc: BeamConfig) -> 
             continue;
         }
         let t0 = std::time::Instant::now();
-        let (bytes, calls) = pool.beam_gather(&beam_src);
+        let (_, calls) = pool.beam_gather(&beam_src);
         engine
             .profiler
             .add(crate::model::profiler::OpKind::GatherNd, t0.elapsed());
-        gather_bytes += bytes;
         gather_calls += calls;
         tokens = next_tokens;
         if all_finished {
             break;
         }
     }
+    // the COW copies the gathers' sharing provoked over the whole run
+    gather_bytes += pool.gather_traffic_bytes() as usize;
 
     let translations = hyps
         .into_iter()
@@ -273,20 +284,33 @@ mod tests {
         let src = vec![vec![3, 4, 5, 6, 2], vec![7, 8, 9, 2, 0]];
         let r = translate_beam(&mut e, &src, BeamConfig::default());
         assert!(r.gather_calls > 0);
-        assert!(r.gather_bytes > 0);
         assert_eq!(r.translations.len(), 2);
 
-        // int8 engine moves ~4x fewer bytes per gather call
+        // the honest §5.3 metric: only copy-on-write page copies count,
+        // so the traffic must be strictly below what the dense layout
+        // moved per gather (2 × the full per-cache storage, every call)
+        let bc = BeamConfig::default();
+        let slots = src.len() * bc.beam;
+        let t_max = bc.max_len.min(cfg.max_tgt_len);
+        let h = cfg.n_heads;
+        let dh = cfg.d_head();
+        let dense_cache_bytes = slots * h * t_max.max(cfg.max_src_len) * dh * 4;
+        let calls = r.gather_calls;
+        assert!(
+            r.gather_bytes < 2 * dense_cache_bytes * calls,
+            "COW traffic {} should undercut the dense full-copy bound",
+            r.gather_bytes
+        );
+
+        // int8 engine: caches are u8 with the loose plan, so whatever
+        // pages do get copied are 4x smaller — the per-event ratio is
+        // pinned exactly in kvcache::tests; here just check the int8
+        // run's traffic is also bounded and the decode succeeds
         let mut eq = Engine::with_recipe(cfg.clone(), w, &loose_recipe(&cfg)).unwrap();
         let rq = translate_beam(&mut eq, &src, BeamConfig::default());
-        // self caches are u8 in the int8 engine; cross caches too with the
-        // loose plan, so the ratio should be ~4 for matched call counts
-        let per_call_f = r.gather_bytes as f64 / r.gather_calls as f64;
-        let per_call_q = rq.gather_bytes as f64 / rq.gather_calls as f64;
-        assert!(
-            per_call_f / per_call_q > 3.5,
-            "expected ~4x byte reduction, got {per_call_f} vs {per_call_q}"
-        );
+        assert!(rq.gather_calls > 0);
+        assert_eq!(rq.translations.len(), 2);
+        assert!(rq.gather_bytes < 2 * dense_cache_bytes * rq.gather_calls.max(1));
     }
 
     #[test]

@@ -27,7 +27,7 @@ use std::sync::Arc;
 
 use crate::gemm::QGemmScratch;
 use crate::model::config::ModelConfig;
-use crate::model::kvcache::KvCache;
+use crate::model::kvcache::{self, KvCache, PageGeometry, PagePool, Precision};
 use crate::model::layers::{self, AttnScratch};
 use crate::model::plan::{CompiledPlan, SiteSet};
 use crate::model::profiler::{OpKind, Profiler};
@@ -92,20 +92,29 @@ pub enum SlotState {
 /// allocated **once** (per worker stream) and requests flow through it:
 /// [`Engine::admit`] splices encoded requests into free slots,
 /// [`Engine::pool_step`] advances an *active set* of slots by one
-/// token, and [`DecodePool::finish`] recycles a slot — clearing its
-/// quantized K/V storage without reallocating — the moment its request
+/// token, and [`DecodePool::finish`] recycles a slot — releasing its
+/// cache pages back to the shared pool — the moment its request
 /// completes.  Per-slot decode positions and source lengths live here,
 /// so slots admitted at different times decode correctly side by side.
+///
+/// Storage is **paged** (see [`crate::model::kvcache`]): every cache is
+/// a per-slot page table over one shared [`PagePool`], so a slot only
+/// ever holds pages for the positions it has actually reached — short
+/// requests no longer strand worst-case `H×Tmax×dh` storage, and the
+/// pool's capacity can be a *memory budget*
+/// ([`Engine::new_pool_budgeted`]) instead of a hard slot count.
 ///
 /// Cache storage precision per layer comes from the compiled plan's
 /// [`KvSpec`](crate::model::plan::KvSpec) (u8 at the site's scale, or
 /// f32), exactly as the per-batch state used to decide it.
 pub struct DecodePool {
-    /// per layer: K and V self-attention caches, `H*Tmax*dh` per slot
+    /// the shared page allocator every cache draws from
+    pages: PagePool,
+    /// per layer: K and V self-attention caches (`t_max` positions/slot)
     self_k: Vec<KvCache>,
     self_v: Vec<KvCache>,
-    /// per layer: cross-attention K/V of the encoder memory,
-    /// `H*src_cap*dh` per slot
+    /// per layer: cross-attention K/V of the encoder memory
+    /// (`src_cap` positions/slot)
     cross_k: Vec<KvCache>,
     cross_v: Vec<KvCache>,
     /// source length per slot (pads are suffix-only)
@@ -119,7 +128,79 @@ pub struct DecodePool {
     t_max: usize,
     src_cap: usize,
     capacity: usize,
+    /// cache counts by precision (summed over layers), for admission
+    /// page math
+    self_f32: usize,
+    self_u8: usize,
+    cross_f32: usize,
+    cross_u8: usize,
 }
+
+/// Point-in-time page-pool occupancy of a [`DecodePool`] (both
+/// precisions summed), surfaced in `ServerMetrics`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PageStats {
+    /// pages currently referenced by live slots
+    pub used: usize,
+    /// the pool's allocation cap (the memory budget, in pages)
+    pub capacity: usize,
+    /// most pages simultaneously live since pool construction
+    pub high_water: usize,
+}
+
+/// Why [`Engine::admit`] refused a batch.  Admission failures are
+/// ordinary serving events (an oversized request, a momentarily full
+/// pool), not engine bugs — returning them typed lets the serving
+/// layer shed or defer instead of crashing a shard thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// the padded source exceeds the pool's source capacity: the
+    /// request can never fit this pool and must be shed
+    SourceTooLong { len: usize, cap: usize },
+    /// more rows than free slots — admissible later, once slots recycle
+    NoFreeSlots { need: usize, free: usize },
+    /// the page pool lacks room for the batch's cross caches (plus
+    /// first-step headroom) — admissible later, once pages recycle
+    NoFreePages {
+        need_f32: usize,
+        need_u8: usize,
+        free_f32: usize,
+        free_u8: usize,
+    },
+}
+
+impl AdmitError {
+    /// Whether the request could never be admitted to this pool (shed
+    /// it) as opposed to merely not fitting right now (defer it).
+    pub fn is_permanent(&self) -> bool {
+        matches!(self, AdmitError::SourceTooLong { .. })
+    }
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::SourceTooLong { len, cap } => {
+                write!(f, "padded source {len} exceeds pool src capacity {cap}")
+            }
+            AdmitError::NoFreeSlots { need, free } => {
+                write!(f, "{need} rows into {free} free slots")
+            }
+            AdmitError::NoFreePages {
+                need_f32,
+                need_u8,
+                free_f32,
+                free_u8,
+            } => write!(
+                f,
+                "page pool exhausted: need {need_f32} f32 / {need_u8} u8 pages, \
+                 free {free_f32} / {free_u8}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
 
 impl DecodePool {
     /// Total slots (fixed at construction).
@@ -165,21 +246,97 @@ impl DecodePool {
         self.src_cap
     }
 
-    /// Finish a slot: clear its K/V storage (both precisions — a
-    /// recycled slot must never leak the previous request's keys or
-    /// values) and return it to the free list.  The storage itself is
-    /// reused, not reallocated — recycling is a memset, not a malloc.
+    /// Cumulative §5.3 gather traffic: bytes actually moved by
+    /// copy-on-write page copies.  A gather itself is a page-table
+    /// permutation — beams share pages by reference and pay a copy only
+    /// when a shared page is written (the divergent tail).
+    pub fn gather_traffic_bytes(&self) -> u64 {
+        self.pages.traffic_bytes()
+    }
+
+    /// Page-pool occupancy right now (both precisions summed).
+    pub fn page_stats(&self) -> PageStats {
+        PageStats {
+            used: self.pages.used_pages_total(),
+            capacity: self.pages.capacity_pages_total(),
+            high_water: self.pages.high_water_total(),
+        }
+    }
+
+    /// Pages (f32, u8) an admit of `rows` sources padded to `s` would
+    /// allocate right now: the cross-cache pages plus one self page per
+    /// self cache per row (headroom so the first decode step can't
+    /// starve the slot it just admitted).
+    pub fn admit_page_need(&self, rows: usize, s: usize) -> (usize, usize) {
+        let cpf = self.pages.geometry().pages_for(s.min(self.src_cap));
+        (
+            rows * (self.cross_f32 * cpf + self.self_f32),
+            rows * (self.cross_u8 * cpf + self.self_u8),
+        )
+    }
+
+    /// Whether `rows` sources padded to `s` fit right now (free slots
+    /// *and* free pages) — the admission gate for budgeted serving.
+    pub fn can_admit(&self, rows: usize, s: usize) -> bool {
+        if rows > self.free.len() || s > self.src_cap {
+            return false;
+        }
+        let (f, u) = self.admit_page_need(rows, s);
+        self.pages.available(Precision::F32, f) && self.pages.available(Precision::U8, u)
+    }
+
+    /// Grow every self cache's page table for `slot` to cover position
+    /// `pos+1`, all-or-nothing: returns `false` without allocating
+    /// anything when the page pool can't cover the whole shortfall.
+    fn try_grow_self(&mut self, slot: usize) -> bool {
+        let want = self.pos[slot] + 1;
+        let (mut need_f, mut need_u) = (0usize, 0usize);
+        for li in 0..self.self_k.len() {
+            for c in [&self.self_k[li], &self.self_v[li]] {
+                match c.precision() {
+                    Precision::F32 => need_f += c.pages_needed(slot, want),
+                    Precision::U8 => need_u += c.pages_needed(slot, want),
+                }
+            }
+        }
+        if need_f == 0 && need_u == 0 {
+            return true;
+        }
+        if !self.pages.available(Precision::F32, need_f)
+            || !self.pages.available(Precision::U8, need_u)
+        {
+            return false;
+        }
+        for li in 0..self.self_k.len() {
+            assert!(self.self_k[li].ensure_positions(&mut self.pages, slot, want));
+            assert!(self.self_v[li].ensure_positions(&mut self.pages, slot, want));
+        }
+        true
+    }
+
+    /// Finish a slot: release every page it maps (exclusively-owned
+    /// pages are cleared and recycled — a recycled page must never leak
+    /// the previous request's keys or values; pages shared with other
+    /// beams survive for them) and return the slot to the free list.
     pub fn finish(&mut self, slot: usize) {
         assert_eq!(
             self.state[slot],
             SlotState::Active,
             "finish on non-active slot {slot}"
         );
-        for li in 0..self.self_k.len() {
-            self.self_k[li].clear_slot(slot);
-            self.self_v[li].clear_slot(slot);
-            self.cross_k[li].clear_slot(slot);
-            self.cross_v[li].clear_slot(slot);
+        let DecodePool {
+            pages,
+            self_k,
+            self_v,
+            cross_k,
+            cross_v,
+            ..
+        } = self;
+        for li in 0..self_k.len() {
+            self_k[li].release_slot(pages, slot);
+            self_v[li].release_slot(pages, slot);
+            cross_k[li].release_slot(pages, slot);
+            cross_v[li].release_slot(pages, slot);
         }
         self.src_len[slot] = 0;
         self.pos[slot] = 0;
@@ -190,20 +347,30 @@ impl DecodePool {
     /// Beam reorder across **all** caches: `slot s = old beam_src[s]`
     /// (the §5.3 GatherNd), with the per-slot bookkeeping (position,
     /// source length) following the permutation.  All slots must be
-    /// active (beam search keeps every slot live).  Returns
-    /// `(bytes_moved, gather_calls)` for the §5.3 accounting.
+    /// active (beam search keeps every slot live).  Pages are shared by
+    /// reference across beams — the full `slots×slot_len` copy the
+    /// dense layout paid per step is gone; copies happen lazily, per
+    /// written shared page ([`Self::gather_traffic_bytes`]).  Returns
+    /// `(bytes_moved_now, gather_calls)`: bytes are always 0.
     pub fn beam_gather(&mut self, beam_src: &[usize]) -> (usize, usize) {
         assert_eq!(beam_src.len(), self.capacity, "one source per slot");
-        let mut bytes = 0usize;
+        let DecodePool {
+            pages,
+            self_k,
+            self_v,
+            cross_k,
+            cross_v,
+            ..
+        } = self;
         let mut calls = 0usize;
-        for li in 0..self.self_k.len() {
+        for li in 0..self_k.len() {
             for cache in [
-                &mut self.self_k[li],
-                &mut self.self_v[li],
-                &mut self.cross_k[li],
-                &mut self.cross_v[li],
+                &mut self_k[li],
+                &mut self_v[li],
+                &mut cross_k[li],
+                &mut cross_v[li],
             ] {
-                bytes += cache.beam_gather(beam_src);
+                cache.beam_gather(pages, beam_src);
                 calls += 1;
             }
         }
@@ -213,7 +380,7 @@ impl DecodePool {
             self.src_len[s] = old_len[src];
             self.pos[s] = old_pos[src];
         }
-        (bytes, calls)
+        (0, calls)
     }
 }
 
@@ -393,25 +560,114 @@ impl Engine {
     /// Allocate a [`DecodePool`]: `capacity` KV-cache slots able to
     /// decode `t_max` positions against sources up to `src_cap` tokens.
     /// Storage precision per layer comes from the compiled plan's
-    /// [`KvSpec`](crate::model::plan::KvSpec).  Allocation happens
-    /// exactly once — admission and recycling reuse the same buffers.
+    /// [`KvSpec`](crate::model::plan::KvSpec); storage itself is paged
+    /// (page size from `QUANTNMT_KV_PAGE`, default 16 positions), with
+    /// the page budget at the dense worst case — admission and growth
+    /// can never fail, matching the old dense pool's contract.
     pub fn new_pool(&self, capacity: usize, t_max: usize, src_cap: usize) -> DecodePool {
+        self.new_pool_with(
+            capacity,
+            t_max,
+            src_cap,
+            None,
+            kvcache::page_positions_from_env(),
+        )
+    }
+
+    /// [`new_pool`](Self::new_pool) with a KV memory budget in bytes:
+    /// the page pool's allocation cap is scaled down to the budget
+    /// (floored at one full-length slot per precision, so a lone
+    /// request always fits), and admission is gated on free pages via
+    /// [`DecodePool::can_admit`] / [`AdmitError::NoFreePages`].
+    pub fn new_pool_budgeted(
+        &self,
+        capacity: usize,
+        t_max: usize,
+        src_cap: usize,
+        budget_bytes: Option<usize>,
+    ) -> DecodePool {
+        self.new_pool_with(
+            capacity,
+            t_max,
+            src_cap,
+            budget_bytes,
+            kvcache::page_positions_from_env(),
+        )
+    }
+
+    /// Fully explicit pool construction (tests sweep `page_positions`
+    /// directly; serving goes through the env default).
+    pub fn new_pool_with(
+        &self,
+        capacity: usize,
+        t_max: usize,
+        src_cap: usize,
+        budget_bytes: Option<usize>,
+        page_positions: usize,
+    ) -> DecodePool {
         assert!(capacity > 0, "pool needs at least one slot");
-        let h = self.plan.n_heads;
-        let dh = self.plan.d_head;
-        let self_slot = h * t_max * dh;
-        let cross_slot = h * src_cap * dh;
-        let mk = |scale: Option<f32>, slot_len: usize| -> KvCache {
-            match scale {
-                Some(scale) => KvCache::new_u8(capacity, slot_len, scale),
-                None => KvCache::new_f32(capacity, slot_len),
+        let geom = PageGeometry {
+            heads: self.plan.n_heads,
+            d_head: self.plan.d_head,
+            page_positions,
+        };
+        let (mut self_f32, mut self_u8, mut cross_f32, mut cross_u8) = (0, 0, 0, 0);
+        for li in 0..self.cfg.n_dec_layers {
+            let spec = self.plan.kv_spec(li);
+            let (f, u) = spec.self_counts();
+            self_f32 += f;
+            self_u8 += u;
+            let (f, u) = spec.cross_counts();
+            cross_f32 += f;
+            cross_u8 += u;
+        }
+        // worst-case pages per slot and precision (every position live)
+        let spp = geom.pages_for(t_max);
+        let cpp = geom.pages_for(src_cap);
+        let w_f32 = self_f32 * spp + cross_f32 * cpp;
+        let w_u8 = self_u8 * spp + cross_u8 * cpp;
+        let (cap_f32, cap_u8) = match budget_bytes {
+            None => (capacity * w_f32, capacity * w_u8),
+            Some(budget) => {
+                let full = capacity
+                    * (w_f32 * geom.page_bytes(Precision::F32)
+                        + w_u8 * geom.page_bytes(Precision::U8));
+                if full == 0 || budget >= full {
+                    (capacity * w_f32, capacity * w_u8)
+                } else {
+                    // split the budget across the banks in proportion
+                    // to their worst-case share, flooring each at one
+                    // full-length slot
+                    let frac = budget as f64 / full as f64;
+                    (
+                        (((capacity * w_f32) as f64 * frac) as usize).max(w_f32),
+                        (((capacity * w_u8) as f64 * frac) as usize).max(w_u8),
+                    )
+                }
             }
         };
-        let mut pool = DecodePool {
-            self_k: Vec::new(),
-            self_v: Vec::new(),
-            cross_k: Vec::new(),
-            cross_v: Vec::new(),
+        let pages = PagePool::new(geom, cap_f32, cap_u8);
+        let mk = |scale: Option<f32>, positions: usize| -> KvCache {
+            match scale {
+                Some(scale) => KvCache::new_u8(&pages, capacity, positions, scale),
+                None => KvCache::new_f32(&pages, capacity, positions),
+            }
+        };
+        let (mut self_k, mut self_v) = (Vec::new(), Vec::new());
+        let (mut cross_k, mut cross_v) = (Vec::new(), Vec::new());
+        for li in 0..self.cfg.n_dec_layers {
+            let spec = self.plan.kv_spec(li);
+            self_k.push(mk(spec.self_k, t_max));
+            self_v.push(mk(spec.self_v, t_max));
+            cross_k.push(mk(spec.cross_k, src_cap));
+            cross_v.push(mk(spec.cross_v, src_cap));
+        }
+        DecodePool {
+            pages,
+            self_k,
+            self_v,
+            cross_k,
+            cross_v,
             src_len: vec![0; capacity],
             pos: vec![0; capacity],
             state: vec![SlotState::Free; capacity],
@@ -419,47 +675,77 @@ impl Engine {
             t_max,
             src_cap,
             capacity,
+            self_f32,
+            self_u8,
+            cross_f32,
+            cross_u8,
+        }
+    }
+
+    /// How many pool slots a KV memory budget could plausibly serve:
+    /// the budget divided by a slot's *minimum* live footprint (one
+    /// page per cache).  Page-gated admission enforces the real limit
+    /// at runtime; this only sizes the slot arrays for
+    /// `serve --kv-budget-mb` when no hard `--slots` count is given.
+    pub fn kv_budget_capacity(&self, budget_bytes: usize) -> usize {
+        let geom = PageGeometry {
+            heads: self.plan.n_heads,
+            d_head: self.plan.d_head,
+            page_positions: kvcache::page_positions_from_env(),
         };
+        let mut min_slot = 0usize;
         for li in 0..self.cfg.n_dec_layers {
             let spec = self.plan.kv_spec(li);
-            pool.self_k.push(mk(spec.self_k, self_slot));
-            pool.self_v.push(mk(spec.self_v, self_slot));
-            pool.cross_k.push(mk(spec.cross_k, cross_slot));
-            pool.cross_v.push(mk(spec.cross_v, cross_slot));
+            let (sf, su) = spec.self_counts();
+            let (cf, cu) = spec.cross_counts();
+            min_slot += (sf + cf) * geom.page_bytes(Precision::F32)
+                + (su + cu) * geom.page_bytes(Precision::U8);
         }
-        pool
+        (budget_bytes / min_slot.max(1)).max(1)
     }
 
     /// Admit encoded requests into free slots (the prefill half of an
     /// iteration): compute the cross-attention K/V of each request's
-    /// encoder memory (`[rows*s*D]`, padded to a common `s`) and write
+    /// encoder memory (`[rows*s*D]`, padded to a common `s`) and page
     /// it into a freshly-recycled slot per row.  Returns the assigned
-    /// slots, one per row, in row order.
-    ///
-    /// Panics if the pool lacks free slots or `s` exceeds its source
-    /// capacity — the serving layer sizes admission to the pool.
+    /// slots, one per row, in row order — or a typed [`AdmitError`],
+    /// leaving the pool untouched, when the batch doesn't fit (the
+    /// serving layer sheds or defers instead of crashing the shard).
     pub fn admit(
         &mut self,
         pool: &mut DecodePool,
         memory: &[f32],
         src_len: &[usize],
         s: usize,
-    ) -> Vec<usize> {
+    ) -> Result<Vec<usize>, AdmitError> {
         let rows = src_len.len();
         let d = self.plan.d_model;
         let h = self.plan.n_heads;
         let dh = self.plan.d_head;
         assert_eq!(memory.len(), rows * s * d, "admit: memory shape");
-        assert!(
-            s <= pool.src_cap,
-            "admit: padded source {s} exceeds pool src capacity {}",
-            pool.src_cap
-        );
-        assert!(
-            rows <= pool.free.len(),
-            "admit: {rows} rows into {} free slots",
-            pool.free.len()
-        );
+        if s > pool.src_cap {
+            return Err(AdmitError::SourceTooLong {
+                len: s,
+                cap: pool.src_cap,
+            });
+        }
+        if rows > pool.free.len() {
+            return Err(AdmitError::NoFreeSlots {
+                need: rows,
+                free: pool.free.len(),
+            });
+        }
+        let (need_f32, need_u8) = pool.admit_page_need(rows, s);
+        if !pool.pages.available(Precision::F32, need_f32)
+            || !pool.pages.available(Precision::U8, need_u8)
+        {
+            return Err(AdmitError::NoFreePages {
+                need_f32,
+                need_u8,
+                free_f32: pool.pages.free_pages(Precision::F32),
+                free_u8: pool.pages.free_pages(Precision::U8),
+            });
+        }
         let slots: Vec<usize> = (0..rows).map(|_| pool.free.pop().unwrap()).collect();
         for (r, &slot) in slots.iter().enumerate() {
             debug_assert_eq!(pool.state[slot], SlotState::Free);
@@ -468,7 +754,9 @@ impl Engine {
             pool.src_len[slot] = src_len[r];
         }
         // precompute cross K/V of the memory (the paper's enc-dec
-        // cache): one dense per layer over all admitted rows at once
+        // cache): one dense per layer over all admitted rows at once.
+        // Pad rows (t >= src_len[r]) are written too, exactly like the
+        // dense layout did — attention masks them via its klen closure.
         for li in 0..self.cfg.n_dec_layers {
             let lp = &self.plan.dec[li];
             layers::dense(
@@ -489,56 +777,75 @@ impl Engine {
                 rows * s,
                 &mut self.acts.v,
             );
-            let stride = pool.src_cap;
             for (r, &slot) in slots.iter().enumerate() {
+                // covered by the availability check above
+                assert!(pool.cross_k[li].ensure_positions(&mut pool.pages, slot, s));
+                assert!(pool.cross_v[li].ensure_positions(&mut pool.pages, slot, s));
                 for head in 0..h {
                     for t in 0..s {
                         let kr = &self.acts.k[(r * s + t) * d + head * dh..][..dh];
                         let vr = &self.acts.v[(r * s + t) * d + head * dh..][..dh];
-                        pool.cross_k[li].write(slot, (head * stride + t) * dh, kr);
-                        pool.cross_v[li].write(slot, (head * stride + t) * dh, vr);
+                        pool.cross_k[li].write_row(&mut pool.pages, slot, head, t, kr);
+                        pool.cross_v[li].write_row(&mut pool.pages, slot, head, t, vr);
                     }
                 }
             }
         }
-        slots
+        Ok(slots)
     }
 
     /// One iteration of the pool: advance the **active set** by one
     /// token each.  `active[i]` is a pool slot and `tokens[i]` the
     /// token it consumes at its own position `pool.pos(slot)`; logits
-    /// come back compacted, `[active.len() * vocab]`, row `i` for slot
-    /// `active[i]`.  Finished slots simply aren't listed — they cost
-    /// zero GEMM rows (asserted via the profiler's per-site row
-    /// accounting).  Advances each listed slot's position.
+    /// come back compacted, row `i` for the `i`-th *surviving* slot.
+    /// Finished slots simply aren't listed — they cost zero GEMM rows
+    /// (asserted via the profiler's per-site row accounting).  Advances
+    /// each surviving slot's position.
+    ///
+    /// Returns the slots that were **force-finished** this call instead
+    /// of stepping: a slot whose position already reached `t_max`, or
+    /// whose page pool can't grow to hold the next position
+    /// (memory-budget pressure).  Those slots are recycled like
+    /// [`DecodePool::finish`] and get no logits row; the serving layer
+    /// flags their responses as length-truncated.  Unbudgeted pools
+    /// whose driver loops finish slots at `t_max` (greedy, beam) never
+    /// see a non-empty return.
+    #[must_use = "force-finished slots have no logits row and must be flagged truncated"]
     pub fn pool_step(
         &mut self,
         pool: &mut DecodePool,
         active: &[usize],
         tokens: &[u32],
         logits: &mut Vec<f32>,
-    ) {
-        let n = active.len();
-        assert_eq!(tokens.len(), n, "one token per active slot");
-        if n == 0 {
-            logits.clear();
-            return;
-        }
-        let d = self.plan.d_model;
-        let h = self.plan.n_heads;
-        let dh = self.plan.d_head;
-        for &slot in active {
+    ) -> Vec<usize> {
+        assert_eq!(tokens.len(), active.len(), "one token per active slot");
+        let mut truncated = Vec::new();
+        let mut live = Vec::with_capacity(active.len());
+        let mut live_tokens = Vec::with_capacity(active.len());
+        for (i, &slot) in active.iter().enumerate() {
             assert_eq!(
                 pool.state[slot],
                 SlotState::Active,
                 "pool_step: slot {slot} is not active"
             );
-            assert!(
-                pool.pos[slot] < pool.t_max,
-                "pool_step: slot {slot} stepped past t_max {}",
-                pool.t_max
-            );
+            if pool.pos[slot] >= pool.t_max || !pool.try_grow_self(slot) {
+                pool.finish(slot);
+                truncated.push(slot);
+            } else {
+                live.push(slot);
+                live_tokens.push(tokens[i]);
+            }
         }
+        let active: &[usize] = &live;
+        let tokens: &[u32] = &live_tokens;
+        let n = active.len();
+        if n == 0 {
+            logits.clear();
+            return truncated;
+        }
+        let d = self.plan.d_model;
+        let h = self.plan.n_heads;
+        let dh = self.plan.d_head;
 
         self.embed_tokens(tokens);
         self.profiler.time(OpKind::Embed, || {
@@ -586,8 +893,8 @@ impl Engine {
                 for head in 0..h {
                     let kr = &self.acts.k[i * d + head * dh..][..dh];
                     let vr = &self.acts.v[i * d + head * dh..][..dh];
-                    pool.self_k[li].write(slot, (head * pool.t_max + pos) * dh, kr);
-                    pool.self_v[li].write(slot, (head * pool.t_max + pos) * dh, vr);
+                    pool.self_k[li].write_row(&mut pool.pages, slot, head, pos, kr);
+                    pool.self_v[li].write_row(&mut pool.pages, slot, head, pos, vr);
                 }
             }
             let pos_of = &pool.pos;
@@ -600,8 +907,8 @@ impl Engine {
                 &self.acts.q,
                 &pool.self_k[li],
                 &pool.self_v[li],
+                &pool.pages,
                 active,
-                pool.t_max,
                 |slot| pos_of[slot] + 1,
                 &mut self.acts.attn,
             );
@@ -638,8 +945,8 @@ impl Engine {
                 &self.acts.q,
                 &pool.cross_k[li],
                 &pool.cross_v[li],
+                &pool.pages,
                 active,
-                src_cap,
                 |slot| src_len[slot].min(src_cap),
                 &mut self.acts.attn,
             );
@@ -681,6 +988,7 @@ impl Engine {
         for &slot in active {
             pool.pos[slot] += 1;
         }
+        truncated
     }
 
     /// Greedy-translate a padded batch. Returns token rows (PAD-free,
@@ -706,13 +1014,20 @@ impl Engine {
         }
         let (memory, src_len, s) = self.encode(src);
         let mut pool = self.new_pool(bsz, t_max, s);
-        // fresh pool: slot i == source row i
-        let mut active = self.admit(&mut pool, &memory, &src_len, s);
+        // fresh pool: slot i == source row i; an unbudgeted pool sized
+        // for the batch can't refuse it
+        let mut active = self
+            .admit(&mut pool, &memory, &src_len, s)
+            .expect("greedy pool sized for the batch");
         let mut tokens = vec![BOS_ID; bsz];
         let mut logits = Vec::new();
         let v = self.cfg.vocab_size;
         while !active.is_empty() {
-            self.pool_step(&mut pool, &active, &tokens, &mut logits);
+            let truncated = self.pool_step(&mut pool, &active, &tokens, &mut logits);
+            debug_assert!(
+                truncated.is_empty(),
+                "unbudgeted greedy pool force-finished {truncated:?}"
+            );
             let mut keep = Vec::with_capacity(active.len());
             let mut next_tokens = Vec::with_capacity(active.len());
             for (i, &slot) in active.iter().enumerate() {
@@ -864,14 +1179,15 @@ mod tests {
         assert_eq!(pool.free_slots(), 4);
         assert!(pool.is_idle());
 
-        let slots = e.admit(&mut pool, &memory, &src_len, s);
+        let slots = e.admit(&mut pool, &memory, &src_len, s).expect("admit");
         assert_eq!(slots, vec![0, 1], "fresh pool admits in slot order");
         assert_eq!(pool.active_slots(), 2);
         assert_eq!(pool.state(0), SlotState::Active);
         assert_eq!(pool.src_len(0), src_len[0]);
 
         let mut logits = Vec::new();
-        e.pool_step(&mut pool, &slots, &[BOS_ID, BOS_ID], &mut logits);
+        let t = e.pool_step(&mut pool, &slots, &[BOS_ID, BOS_ID], &mut logits);
+        assert!(t.is_empty());
         assert_eq!(logits.len(), 2 * cfg.vocab_size);
         assert_eq!(pool.pos(0), 1);
         assert_eq!(pool.pos(1), 1);
@@ -880,7 +1196,7 @@ mod tests {
         assert_eq!(pool.state(1), SlotState::Free);
         assert_eq!(pool.free_slots(), 3);
         // stepping only the surviving slot still works
-        e.pool_step(&mut pool, &[0], &[5], &mut logits);
+        let _ = e.pool_step(&mut pool, &[0], &[5], &mut logits);
         assert_eq!(logits.len(), cfg.vocab_size);
         assert_eq!(pool.pos(0), 2);
         pool.finish(0);
@@ -897,22 +1213,22 @@ mod tests {
         let src = vec![vec![3, 4, 2], vec![5, 6, 2], vec![7, 8, 2]];
         let (memory, src_len, s) = e.encode(&src);
         let mut pool = e.new_pool(3, 8, s);
-        let slots = e.admit(&mut pool, &memory, &src_len, s);
+        let slots = e.admit(&mut pool, &memory, &src_len, s).expect("admit");
         let logits_site = e.plan().logits;
         let mut logits = Vec::new();
 
         e.profiler = Profiler::enabled();
-        e.pool_step(&mut pool, &slots, &[BOS_ID; 3], &mut logits);
+        let _ = e.pool_step(&mut pool, &slots, &[BOS_ID; 3], &mut logits);
         assert_eq!(e.profiler.site_rows(logits_site), 3);
 
         pool.finish(1);
         e.profiler = Profiler::enabled();
-        e.pool_step(&mut pool, &[0, 2], &[4, 4], &mut logits);
+        let _ = e.pool_step(&mut pool, &[0, 2], &[4, 4], &mut logits);
         assert_eq!(e.profiler.site_rows(logits_site), 2, "finished slot still billed");
 
         pool.finish(2);
         e.profiler = Profiler::enabled();
-        e.pool_step(&mut pool, &[0], &[4], &mut logits);
+        let _ = e.pool_step(&mut pool, &[0], &[4], &mut logits);
         assert_eq!(e.profiler.site_rows(logits_site), 1);
     }
 
@@ -954,14 +1270,14 @@ mod tests {
         // now decode `first`, recycle, decode `second` in the same pool
         let (m1, l1, s1) = e.encode(&first);
         let mut pool = e.new_pool(2, 8, cfg.max_src_len);
-        let slots = e.admit(&mut pool, &m1, &l1, s1);
+        let slots = e.admit(&mut pool, &m1, &l1, s1).expect("admit");
         let mut logits = Vec::new();
-        e.pool_step(&mut pool, &slots, &[BOS_ID, BOS_ID], &mut logits);
+        let _ = e.pool_step(&mut pool, &slots, &[BOS_ID, BOS_ID], &mut logits);
         for slot in slots {
             pool.finish(slot);
         }
         let (m2, l2, s2) = e.encode(&second);
-        let slots = e.admit(&mut pool, &m2, &l2, s2);
+        let slots = e.admit(&mut pool, &m2, &l2, s2).expect("admit");
         // admit order defines the slot -> request-row mapping (the
         // LIFO free list may hand slots back in any order)
         let mut row_of = vec![usize::MAX; pool.capacity()];
@@ -973,7 +1289,7 @@ mod tests {
         let mut out: Vec<Vec<u32>> = vec![Vec::new(); 2];
         let v = cfg.vocab_size;
         while !active.is_empty() {
-            e.pool_step(&mut pool, &active, &tokens, &mut logits);
+            let _ = e.pool_step(&mut pool, &active, &tokens, &mut logits);
             let mut keep = Vec::new();
             let mut next_tokens = Vec::new();
             for (i, &slot) in active.iter().enumerate() {
@@ -1015,21 +1331,21 @@ mod tests {
 
         let mut pool = e.new_pool(2, 8, cfg.max_src_len);
         let (ma, la, sa) = e.encode(&[a]);
-        let slot_a = e.admit(&mut pool, &ma, &la, sa)[0];
+        let slot_a = e.admit(&mut pool, &ma, &la, sa).expect("admit")[0];
         let v = cfg.vocab_size;
         let mut logits = Vec::new();
         let mut tok_a = BOS_ID;
         let mut out_a = Vec::new();
         // two steps of `a` alone (no EOS yet, by construction of `a`)
         for _ in 0..2 {
-            e.pool_step(&mut pool, &[slot_a], &[tok_a], &mut logits);
+            let _ = e.pool_step(&mut pool, &[slot_a], &[tok_a], &mut logits);
             let next = ops::argmax(&logits[..v]) as u32;
             out_a.push(next);
             tok_a = next;
         }
         // splice `b` in mid-flight
         let (mb, lb, sb) = e.encode(&[b]);
-        let slot_b = e.admit(&mut pool, &mb, &lb, sb)[0];
+        let slot_b = e.admit(&mut pool, &mb, &lb, sb).expect("admit")[0];
         assert_ne!(slot_a, slot_b);
         let mut tok_b = BOS_ID;
         let mut out_b = Vec::new();
@@ -1045,7 +1361,7 @@ mod tests {
                 active.push(slot_b);
                 toks.push(tok_b);
             }
-            e.pool_step(&mut pool, &active, &toks, &mut logits);
+            let _ = e.pool_step(&mut pool, &active, &toks, &mut logits);
             for (i, &slot) in active.iter().enumerate() {
                 let next = ops::argmax(&logits[i * v..(i + 1) * v]) as u32;
                 let (out, tok, live) = if slot == slot_a {
@@ -1076,14 +1392,203 @@ mod tests {
         let src = vec![vec![3, 4, 2], vec![5, 6, 7, 2]];
         let (memory, src_len, s) = e.encode(&src);
         let mut pool = e.new_pool(2, 8, s);
-        let slots = e.admit(&mut pool, &memory, &src_len, s);
+        let slots = e.admit(&mut pool, &memory, &src_len, s).expect("admit");
         let mut logits = Vec::new();
-        e.pool_step(&mut pool, &slots, &[BOS_ID, BOS_ID], &mut logits);
+        let _ = e.pool_step(&mut pool, &slots, &[BOS_ID, BOS_ID], &mut logits);
         let (bytes, calls) = pool.beam_gather(&[1, 1]);
-        assert!(bytes > 0);
+        assert_eq!(bytes, 0, "gather itself is a page-table permutation");
         assert_eq!(calls, 4 * cfg.n_dec_layers);
         // slot 0 now carries slot 1's request metadata
         assert_eq!(pool.src_len(0), src_len[1]);
         assert_eq!(pool.pos(0), 1);
+        // both slots now share slot 1's pages; stepping writes the
+        // shared self pages, so copy-on-write traffic appears
+        assert_eq!(pool.gather_traffic_bytes(), 0);
+        let _ = e.pool_step(&mut pool, &[0, 1], &[4, 4], &mut logits);
+        assert!(
+            pool.gather_traffic_bytes() > 0,
+            "writing a shared page must pay a COW copy"
+        );
+    }
+
+    #[test]
+    fn admit_errors_are_typed_not_panics() {
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 17);
+        let mut e = Engine::fp32(cfg.clone(), w).unwrap();
+        let src = vec![vec![3, 4, 5, 2], vec![6, 7, 8, 2]];
+        let (memory, src_len, s) = e.encode(&src);
+        assert_eq!(s, 4);
+
+        // source longer than the pool's cross capacity: permanent
+        let mut small = e.new_pool(2, 8, 2);
+        let err = e.admit(&mut small, &memory, &src_len, s).unwrap_err();
+        assert_eq!(err, AdmitError::SourceTooLong { len: 4, cap: 2 });
+        assert!(err.is_permanent());
+        assert!(small.is_idle(), "failed admit leaves the pool untouched");
+
+        // more rows than free slots: transient
+        let mut tiny = e.new_pool(1, 8, s);
+        let err = e.admit(&mut tiny, &memory, &src_len, s).unwrap_err();
+        assert_eq!(err, AdmitError::NoFreeSlots { need: 2, free: 1 });
+        assert!(!err.is_permanent());
+        assert!(tiny.is_idle());
+
+        // page budget floored at one full-length slot: the first row
+        // fits, the second is refused with NoFreePages
+        let mut budgeted = e.new_pool_with(2, 8, s, Some(1), 16);
+        let row0 = (memory[..s * cfg.d_model].to_vec(), vec![src_len[0]]);
+        let row1 = (memory[s * cfg.d_model..].to_vec(), vec![src_len[1]]);
+        e.admit(&mut budgeted, &row0.0, &row0.1, s).expect("first row fits the floor");
+        let err = e.admit(&mut budgeted, &row1.0, &row1.1, s).unwrap_err();
+        assert!(
+            matches!(err, AdmitError::NoFreePages { .. }),
+            "expected NoFreePages, got {err}"
+        );
+        assert!(!err.is_permanent());
+        assert_eq!(budgeted.active_slots(), 1);
+    }
+
+    #[test]
+    fn t_max_exhaustion_force_finishes_instead_of_panicking() {
+        // greedy-style (single slot) and beam-style (all slots live):
+        // a slot at t_max is truncated + recycled, never a panic
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 18);
+        let mut e = Engine::fp32(cfg.clone(), w).unwrap();
+        let t_max = 3usize;
+
+        // greedy-style: one slot, step past the horizon
+        let (m, l, s) = e.encode(&[vec![3, 4, 2]]);
+        let mut pool = e.new_pool(1, t_max, s);
+        let slot = e.admit(&mut pool, &m, &l, s).expect("admit")[0];
+        let mut logits = Vec::new();
+        for _ in 0..t_max {
+            let t = e.pool_step(&mut pool, &[slot], &[4], &mut logits);
+            assert!(t.is_empty());
+        }
+        assert_eq!(pool.pos(slot), t_max);
+        let t = e.pool_step(&mut pool, &[slot], &[4], &mut logits);
+        assert_eq!(t, vec![slot], "slot at t_max is force-finished");
+        assert!(logits.is_empty(), "no logits row for a truncated slot");
+        assert_eq!(pool.state(slot), SlotState::Free, "truncated slot recycled");
+        assert!(pool.is_idle());
+        assert_eq!(pool.page_stats().used, 0, "truncation releases all pages");
+
+        // beam-style: every slot live, all hit t_max together
+        let (m, l, s) = e.encode(&[vec![3, 4, 2], vec![5, 6, 2]]);
+        let mut pool = e.new_pool(2, t_max, s);
+        let slots = e.admit(&mut pool, &m, &l, s).expect("admit");
+        for _ in 0..t_max {
+            let t = e.pool_step(&mut pool, &slots, &[4, 5], &mut logits);
+            assert!(t.is_empty());
+        }
+        let mut t = e.pool_step(&mut pool, &slots, &[4, 5], &mut logits);
+        t.sort_unstable();
+        assert_eq!(t, slots, "every exhausted slot is returned");
+        assert!(pool.is_idle());
+
+        // mixed: one exhausted slot truncates, the other still steps
+        // and gets the only logits row
+        let (m, l, s) = e.encode(&[vec![3, 4, 2], vec![5, 6, 2]]);
+        let mut pool = e.new_pool(2, t_max, s);
+        let slots = e.admit(&mut pool, &m, &l, s).expect("admit");
+        let t = e.pool_step(&mut pool, &[slots[0]], &[4], &mut logits);
+        assert!(t.is_empty());
+        for _ in 0..t_max - 1 {
+            let t = e.pool_step(&mut pool, &slots, &[4, 5], &mut logits);
+            assert!(t.is_empty());
+        }
+        // slots[0] is at t_max, slots[1] at t_max-1
+        let t = e.pool_step(&mut pool, &slots, &[4, 5], &mut logits);
+        assert_eq!(t, vec![slots[0]]);
+        assert_eq!(logits.len(), cfg.vocab_size, "one surviving row");
+        assert_eq!(pool.pos(slots[1]), t_max);
+    }
+
+    #[test]
+    fn page_budget_pressure_truncates_midflight() {
+        // a budgeted pool that cannot grow a slot's self cache finishes
+        // it (flagged truncated) instead of panicking; its pages return
+        // to the pool so the other slot keeps decoding
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 19);
+        let mut e = Engine::fp32(cfg.clone(), w).unwrap();
+        let t_max = 8usize;
+        let (m, l, s) = e.encode(&[vec![3, 4, 2], vec![5, 6, 2]]);
+        // page = 1 position and a ~half budget: floors at one
+        // full-length slot, so two slots must run out mid-decode
+        let mut pool = e.new_pool_with(2, t_max, s, Some(1), 1);
+        let slots = e.admit(&mut pool, &m, &l, s).expect("floored budget admits both");
+        let mut live = slots.clone();
+        let mut truncated_seen = Vec::new();
+        let mut logits = Vec::new();
+        let mut steps = 0usize;
+        while !live.is_empty() {
+            steps += 1;
+            assert!(steps <= 2 * t_max + 2, "loop must terminate");
+            let tokens = vec![4u32; live.len()];
+            let truncated = e.pool_step(&mut pool, &live, &tokens, &mut logits);
+            truncated_seen.extend_from_slice(&truncated);
+            live.retain(|slot| !truncated.contains(slot));
+            assert_eq!(logits.len(), live.len() * cfg.vocab_size);
+            // drive to exhaustion: finish only at t_max (via truncation)
+            for &slot in &live {
+                if pool.pos(slot) >= t_max {
+                    pool.finish(slot);
+                }
+            }
+            live.retain(|&slot| pool.state(slot) == SlotState::Active);
+        }
+        assert!(
+            !truncated_seen.is_empty(),
+            "the budget must bite before both slots reach t_max"
+        );
+        assert!(pool.is_idle());
+        assert_eq!(pool.page_stats().used, 0);
+        assert!(pool.page_stats().high_water <= pool.page_stats().capacity);
+    }
+
+    #[test]
+    fn greedy_outputs_are_invariant_to_page_size() {
+        // the core paging claim: page geometry is a storage detail —
+        // outputs are bit-identical across page sizes (including pages
+        // larger than any slot), quantized caches included
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 20);
+        let mut e = Engine::with_recipe(cfg.clone(), w, &loose_recipe(&cfg)).unwrap();
+        let src = vec![vec![3, 4, 5, 2], vec![6, 7, 2], vec![8, 9, 10, 11, 2]];
+        let t_max = 8usize;
+        let expect = e.translate_greedy(&src, t_max);
+        let v = cfg.vocab_size;
+        for pp in [1usize, 3, 4, 64] {
+            let (memory, src_len, s) = e.encode(&src);
+            let mut pool = e.new_pool_with(src.len(), t_max, s, None, pp);
+            let mut active = e.admit(&mut pool, &memory, &src_len, s).expect("admit");
+            let mut tokens = vec![BOS_ID; active.len()];
+            let mut out: Vec<Vec<u32>> = vec![Vec::new(); src.len()];
+            let mut logits = Vec::new();
+            while !active.is_empty() {
+                let t = e.pool_step(&mut pool, &active, &tokens, &mut logits);
+                assert!(t.is_empty());
+                let mut keep = Vec::new();
+                let mut next_tokens = Vec::new();
+                for (i, &slot) in active.iter().enumerate() {
+                    let next = ops::argmax(&logits[i * v..(i + 1) * v]) as u32;
+                    if next != EOS_ID {
+                        out[slot].push(next);
+                    }
+                    if next == EOS_ID || pool.pos(slot) >= t_max {
+                        pool.finish(slot);
+                    } else {
+                        keep.push(slot);
+                        next_tokens.push(next);
+                    }
+                }
+                active = keep;
+                tokens = next_tokens;
+            }
+            assert_eq!(out, expect, "page size {pp} diverges");
+        }
     }
 }

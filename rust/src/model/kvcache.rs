@@ -1,84 +1,465 @@
-//! KV caches with FP32 and INT8 storage + beam reordering (§5.3).
+//! Paged KV caches with FP32 and INT8 storage + zero-copy beam
+//! reordering (§5.3).
 //!
 //! The decoder keeps, per layer, the self-attention keys/values of all
-//! generated positions ([slots, H, Tmax, dh]) and the cross-attention
-//! keys/values of the encoder memory ([slots, H, S, dh]).  Beam search
-//! reorders the *slot* axis every step according to the surviving
-//! beams — the paper's GatherNd.  Storing the cache quantized (u8,
-//! zero-point 128, per-site scale) cuts the copied bytes 4x, which is
-//! the §5.3 optimization (3.8x copy reduction, 5x op speedup in the
-//! paper's mix).
+//! generated positions and the cross-attention keys/values of the
+//! encoder memory.  Instead of reserving dense worst-case
+//! `[slots, H, Tmax, dh]` arrays per cache — which prices every slot at
+//! the longest possible request — storage is a **block allocator**:
+//!
+//! * a [`PagePool`] owns one bank per storage precision (f32 / u8),
+//!   grown and recycled in fixed-size *pages* of
+//!   `H × page_positions × dh` elements (`QUANTNMT_KV_PAGE`, default
+//!   16 positions per page);
+//! * each [`KvCache`] is a view: per-slot *page tables* mapping
+//!   position runs to pool pages, grown on demand as decode advances;
+//! * pages are refcounted, so beam reordering (the paper's GatherNd)
+//!   becomes a page-table permutation — pages shared by reference
+//!   across beams, **zero bytes copied at gather time** — with
+//!   copy-on-write only when a *shared* page is actually written
+//!   (the divergent tail of a beam; the source-prefix cross-cache
+//!   pages are written once at admit and never again).
+//!
+//! Within a page the layout is `[H, page_positions, dh]`, so a head's
+//! positions stay contiguous inside a page and reads iterate page-sized
+//! runs — element order per `(head, t)` row is identical to the dense
+//! layout, which keeps the numerics bit-identical by construction
+//! (asserted end-to-end in `tests/golden_parity.rs` against an embedded
+//! dense reference).
+//!
+//! Storing the cache quantized (u8, zero-point 128, per-site scale)
+//! additionally cuts every copied byte 4x — the §5.3 optimization
+//! (3.8x copy reduction, 5x op speedup in the paper's mix) — and the
+//! pool's traffic counter now accounts **only pages actually copied**
+//! (copy-on-write events), not the whole cache per gather.
 
 use crate::gemm::UINT8_ZERO_POINT;
-use crate::tensor::gather::{gather_rows_f32, gather_rows_i8};
 
-/// Cache storage precision.
-#[derive(Debug, Clone)]
-pub enum CacheStore {
-    F32(Vec<f32>),
+/// Positions per page when `QUANTNMT_KV_PAGE` is unset.
+pub const DEFAULT_PAGE_POSITIONS: usize = 16;
+
+/// Parse a `QUANTNMT_KV_PAGE` value: positive integer positions per
+/// page, anything else falls back to [`DEFAULT_PAGE_POSITIONS`].
+pub fn parse_page_positions(v: Option<&str>) -> usize {
+    v.and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(DEFAULT_PAGE_POSITIONS)
+}
+
+/// Positions per page for this process (`QUANTNMT_KV_PAGE` env knob;
+/// CI stresses page-boundary paths with `QUANTNMT_KV_PAGE=4`).
+pub fn page_positions_from_env() -> usize {
+    parse_page_positions(std::env::var("QUANTNMT_KV_PAGE").ok().as_deref())
+}
+
+/// Cache storage precision (per cache, from the compiled
+/// [`KvSpec`](crate::model::plan::KvSpec)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F32,
     /// u8 with fixed zero point 128 and a per-tensor scale
-    U8 { data: Vec<u8>, scale: f32 },
+    U8,
 }
 
-/// One cache tensor: [slots, rows_per_slot * dh] with slot-level gather.
-#[derive(Debug, Clone)]
-pub struct KvCache {
-    pub slots: usize,
-    /// elements per slot (= H * T_max * dh)
-    pub slot_len: usize,
-    pub store: CacheStore,
-    scratch_f32: Vec<f32>,
-    scratch_u8: Vec<u8>,
+/// The shared page shape of one pool: every page spans all `heads` for
+/// a run of `page_positions` positions, laid out `[H, page_pos, dh]`.
+#[derive(Debug, Clone, Copy)]
+pub struct PageGeometry {
+    pub heads: usize,
+    pub d_head: usize,
+    pub page_positions: usize,
 }
 
-impl KvCache {
-    pub fn new_f32(slots: usize, slot_len: usize) -> Self {
-        KvCache {
-            slots,
-            slot_len,
-            store: CacheStore::F32(vec![0.0; slots * slot_len]),
-            scratch_f32: Vec::new(),
-            scratch_u8: Vec::new(),
+impl PageGeometry {
+    /// Elements per page.
+    pub fn page_elems(&self) -> usize {
+        self.heads * self.page_positions * self.d_head
+    }
+
+    /// Bytes per page at a precision.
+    pub fn page_bytes(&self, p: Precision) -> usize {
+        match p {
+            Precision::F32 => self.page_elems() * 4,
+            Precision::U8 => self.page_elems(),
         }
     }
 
-    pub fn new_u8(slots: usize, slot_len: usize, scale: f32) -> Self {
+    /// Pages needed to cover `positions` decode/source positions.
+    pub fn pages_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.page_positions)
+    }
+}
+
+/// Per-precision allocator bookkeeping (the data itself lives on
+/// [`PagePool`] so both can be borrowed independently).
+#[derive(Debug, Default)]
+struct BankState {
+    /// live references per allocated page (0 = on the free list)
+    refcount: Vec<u32>,
+    /// recycled page ids, LIFO; storage is cleared *before* a page
+    /// lands here (recycle-before-admit at page granularity)
+    free: Vec<u32>,
+    /// hard cap on pages this bank may ever allocate (the memory
+    /// budget); storage grows lazily up to it
+    cap_pages: usize,
+    /// most pages simultaneously live (capacity-planning observable)
+    high_water: usize,
+}
+
+impl BankState {
+    fn used(&self) -> usize {
+        self.refcount.len() - self.free.len()
+    }
+}
+
+/// The shared page allocator: one bank per storage precision, a fixed
+/// page geometry, and a cumulative copy-traffic counter (the honest
+/// §5.3 metric: bytes actually moved by copy-on-write, not cache size
+/// times gather count).
+#[derive(Debug)]
+pub struct PagePool {
+    geom: PageGeometry,
+    f32_data: Vec<f32>,
+    u8_data: Vec<u8>,
+    f32_state: BankState,
+    u8_state: BankState,
+    /// cumulative bytes moved by copy-on-write page copies (counted
+    /// read + write, matching the old dense gather metric's convention)
+    traffic: u64,
+}
+
+impl PagePool {
+    /// A pool able to allocate at most `cap_f32` f32 pages and `cap_u8`
+    /// u8 pages.  Storage is grown lazily in page units — an idle pool
+    /// costs (almost) nothing.
+    pub fn new(geom: PageGeometry, cap_f32: usize, cap_u8: usize) -> PagePool {
+        assert!(geom.heads > 0 && geom.d_head > 0 && geom.page_positions > 0);
+        PagePool {
+            geom,
+            f32_data: Vec::new(),
+            u8_data: Vec::new(),
+            f32_state: BankState {
+                cap_pages: cap_f32,
+                ..BankState::default()
+            },
+            u8_state: BankState {
+                cap_pages: cap_u8,
+                ..BankState::default()
+            },
+            traffic: 0,
+        }
+    }
+
+    pub fn geometry(&self) -> PageGeometry {
+        self.geom
+    }
+
+    pub fn page_positions(&self) -> usize {
+        self.geom.page_positions
+    }
+
+    fn state(&self, p: Precision) -> &BankState {
+        match p {
+            Precision::F32 => &self.f32_state,
+            Precision::U8 => &self.u8_state,
+        }
+    }
+
+    /// Pages currently live (referenced by at least one page table).
+    pub fn used_pages(&self, p: Precision) -> usize {
+        self.state(p).used()
+    }
+
+    /// Pages still allocatable right now.
+    pub fn free_pages(&self, p: Precision) -> usize {
+        let st = self.state(p);
+        st.free.len() + (st.cap_pages - st.refcount.len())
+    }
+
+    /// The bank's allocation cap (the memory budget, in pages).
+    pub fn capacity_pages(&self, p: Precision) -> usize {
+        self.state(p).cap_pages
+    }
+
+    /// Most pages simultaneously live since construction.
+    pub fn high_water(&self, p: Precision) -> usize {
+        self.state(p).high_water
+    }
+
+    /// Whether `n` more pages can be allocated at this precision.
+    pub fn available(&self, p: Precision, n: usize) -> bool {
+        self.free_pages(p) >= n
+    }
+
+    /// Aggregates over both banks (page counts, for occupancy ratios).
+    pub fn used_pages_total(&self) -> usize {
+        self.f32_state.used() + self.u8_state.used()
+    }
+
+    pub fn capacity_pages_total(&self) -> usize {
+        self.f32_state.cap_pages + self.u8_state.cap_pages
+    }
+
+    pub fn high_water_total(&self) -> usize {
+        self.f32_state.high_water + self.u8_state.high_water
+    }
+
+    /// Cumulative copy-on-write traffic in bytes (read + write).
+    pub fn traffic_bytes(&self) -> u64 {
+        self.traffic
+    }
+
+    fn refcount(&self, p: Precision, page: u32) -> u32 {
+        self.state(p).refcount[page as usize]
+    }
+
+    /// Allocate one clean page (refcount 1), or `None` when the bank's
+    /// budget is exhausted.  Recycled pages were cleared on release, so
+    /// a fresh page always reads as zeros (f32) / the zero point (u8).
+    pub fn alloc(&mut self, p: Precision) -> Option<u32> {
+        let pe = self.geom.page_elems();
+        let page = match p {
+            Precision::F32 => {
+                if let Some(page) = self.f32_state.free.pop() {
+                    self.f32_state.refcount[page as usize] = 1;
+                    page
+                } else if self.f32_state.refcount.len() < self.f32_state.cap_pages {
+                    self.f32_data.resize(self.f32_data.len() + pe, 0.0);
+                    self.f32_state.refcount.push(1);
+                    (self.f32_state.refcount.len() - 1) as u32
+                } else {
+                    return None;
+                }
+            }
+            Precision::U8 => {
+                if let Some(page) = self.u8_state.free.pop() {
+                    self.u8_state.refcount[page as usize] = 1;
+                    page
+                } else if self.u8_state.refcount.len() < self.u8_state.cap_pages {
+                    self.u8_data.resize(self.u8_data.len() + pe, UINT8_ZERO_POINT as u8);
+                    self.u8_state.refcount.push(1);
+                    (self.u8_state.refcount.len() - 1) as u32
+                } else {
+                    return None;
+                }
+            }
+        };
+        let st = match p {
+            Precision::F32 => &mut self.f32_state,
+            Precision::U8 => &mut self.u8_state,
+        };
+        st.high_water = st.high_water.max(st.used());
+        Some(page)
+    }
+
+    /// Add a reference to a live page (beam sharing).
+    pub fn retain(&mut self, p: Precision, page: u32) {
+        let st = match p {
+            Precision::F32 => &mut self.f32_state,
+            Precision::U8 => &mut self.u8_state,
+        };
+        debug_assert!(st.refcount[page as usize] > 0, "retain on a free page");
+        st.refcount[page as usize] += 1;
+    }
+
+    /// Drop a reference; when the last reference goes, the page's
+    /// storage is cleared and it returns to the free list — a recycled
+    /// page can never leak the previous occupant's keys/values.
+    pub fn release(&mut self, p: Precision, page: u32) {
+        let pe = self.geom.page_elems();
+        let base = page as usize * pe;
+        match p {
+            Precision::F32 => {
+                let rc = &mut self.f32_state.refcount[page as usize];
+                debug_assert!(*rc > 0, "release on a free page");
+                *rc -= 1;
+                if *rc == 0 {
+                    self.f32_data[base..base + pe].fill(0.0);
+                    self.f32_state.free.push(page);
+                }
+            }
+            Precision::U8 => {
+                let rc = &mut self.u8_state.refcount[page as usize];
+                debug_assert!(*rc > 0, "release on a free page");
+                *rc -= 1;
+                if *rc == 0 {
+                    self.u8_data[base..base + pe].fill(UINT8_ZERO_POINT as u8);
+                    self.u8_state.free.push(page);
+                }
+            }
+        }
+    }
+
+    /// Copy-on-write: allocate a fresh page, copy `src`'s contents into
+    /// it and drop one reference from `src`.  Returns the new page, or
+    /// `None` if the bank is exhausted.  The copied bytes are added to
+    /// the traffic counter — this is the *only* place gather-related
+    /// bytes actually move.
+    fn cow(&mut self, p: Precision, src: u32) -> Option<u32> {
+        let fresh = self.alloc(p)?;
+        let pe = self.geom.page_elems();
+        let (s, d) = (src as usize * pe, fresh as usize * pe);
+        match p {
+            Precision::F32 => {
+                let (a, b) = split_two(&mut self.f32_data, s, d, pe);
+                b.copy_from_slice(a);
+            }
+            Precision::U8 => {
+                let (a, b) = split_two(&mut self.u8_data, s, d, pe);
+                b.copy_from_slice(a);
+            }
+        }
+        self.traffic += 2 * self.geom.page_bytes(p) as u64;
+        self.release(p, src);
+        Some(fresh)
+    }
+}
+
+/// Disjoint `(src, dst)` page slices out of one bank.
+fn split_two<T>(data: &mut [T], s: usize, d: usize, len: usize) -> (&[T], &mut [T]) {
+    assert_ne!(s, d);
+    if s < d {
+        let (lo, hi) = data.split_at_mut(d);
+        (&lo[s..s + len], &mut hi[..len])
+    } else {
+        let (lo, hi) = data.split_at_mut(s);
+        (&hi[..len], &mut lo[d..d + len])
+    }
+}
+
+/// One cache tensor as a paged view: per-slot page tables over a shared
+/// [`PagePool`], position capacity `positions` per slot.  All methods
+/// that touch storage take the pool explicitly, so a
+/// [`DecodePool`](crate::model::engine::DecodePool) can hand out
+/// disjoint borrows of its caches and its page pool.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub slots: usize,
+    /// position capacity per slot (t_max for self caches, src_cap for
+    /// cross caches)
+    positions: usize,
+    precision: Precision,
+    /// u8 per-tensor scale (unused for f32)
+    scale: f32,
+    geom: PageGeometry,
+    /// `tables[slot][t / page_positions]` = pool page holding position t
+    tables: Vec<Vec<u32>>,
+}
+
+impl KvCache {
+    pub fn new_f32(pool: &PagePool, slots: usize, positions: usize) -> Self {
         KvCache {
             slots,
-            slot_len,
-            store: CacheStore::U8 {
-                data: vec![UINT8_ZERO_POINT as u8; slots * slot_len],
-                scale,
-            },
-            scratch_f32: Vec::new(),
-            scratch_u8: Vec::new(),
+            positions,
+            precision: Precision::F32,
+            scale: 0.0,
+            geom: pool.geom,
+            tables: vec![Vec::new(); slots],
+        }
+    }
+
+    pub fn new_u8(pool: &PagePool, slots: usize, positions: usize, scale: f32) -> Self {
+        KvCache {
+            slots,
+            positions,
+            precision: Precision::U8,
+            scale,
+            geom: pool.geom,
+            tables: vec![Vec::new(); slots],
         }
     }
 
     pub fn is_quantized(&self) -> bool {
-        matches!(self.store, CacheStore::U8 { .. })
+        self.precision == Precision::U8
     }
 
-    /// Bytes per slot actually stored (the §5.3 copy-size metric).
-    pub fn slot_bytes(&self) -> usize {
-        match &self.store {
-            CacheStore::F32(_) => self.slot_len * 4,
-            CacheStore::U8 { .. } => self.slot_len,
-        }
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
-    /// Write `values` (f32) at element offset `off` within slot `slot`,
-    /// quantizing on the way in if the store is u8.
-    pub fn write(&mut self, slot: usize, off: usize, values: &[f32]) {
-        assert!(off + values.len() <= self.slot_len, "cache write oob");
-        let base = slot * self.slot_len + off;
-        match &mut self.store {
-            CacheStore::F32(data) => {
-                data[base..base + values.len()].copy_from_slice(values);
+    /// The u8 store's per-tensor scale.
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Position capacity per slot.
+    pub fn positions(&self) -> usize {
+        self.positions
+    }
+
+    /// Pages currently mapped by a slot's table.
+    pub fn slot_pages(&self, slot: usize) -> usize {
+        self.tables[slot].len()
+    }
+
+    /// Pages a slot still needs before it can hold `positions`
+    /// positions.
+    pub fn pages_needed(&self, slot: usize, positions: usize) -> usize {
+        self.geom
+            .pages_for(positions)
+            .saturating_sub(self.tables[slot].len())
+    }
+
+    /// Grow a slot's page table to cover `positions` positions,
+    /// allocating pages from the pool.  Returns `false` (leaving the
+    /// table at whatever length allocation reached) when the pool is
+    /// exhausted — callers check [`PagePool::available`] first when
+    /// partial growth would be a problem.
+    pub fn ensure_positions(&mut self, pool: &mut PagePool, slot: usize, positions: usize) -> bool {
+        assert!(
+            positions <= self.positions,
+            "ensure_positions: {positions} exceeds slot capacity {}",
+            self.positions
+        );
+        let want = self.geom.pages_for(positions);
+        while self.tables[slot].len() < want {
+            match pool.alloc(self.precision) {
+                Some(p) => self.tables[slot].push(p),
+                None => return false,
             }
-            CacheStore::U8 { data, scale } => {
-                let inv = 1.0 / *scale;
-                for (d, &x) in data[base..base + values.len()].iter_mut().zip(values) {
+        }
+        true
+    }
+
+    #[inline]
+    fn elem_off(&self, page: u32, head: usize, t_in_page: usize) -> usize {
+        let pp = self.geom.page_positions;
+        page as usize * self.geom.page_elems() + (head * pp + t_in_page) * self.geom.d_head
+    }
+
+    /// Write one `d_head`-wide row at `(slot, head, t)`, quantizing on
+    /// the way in if the store is u8.  The page must already be mapped
+    /// ([`ensure_positions`](Self::ensure_positions)); a page shared
+    /// with other slots (beam prefixes) is copied-on-write first, so a
+    /// write never becomes visible through another slot's table.
+    pub fn write_row(
+        &mut self,
+        pool: &mut PagePool,
+        slot: usize,
+        head: usize,
+        t: usize,
+        values: &[f32],
+    ) {
+        let dh = self.geom.d_head;
+        let pp = self.geom.page_positions;
+        assert_eq!(values.len(), dh, "write_row: row width");
+        assert!(t < self.positions, "write_row: position {t} oob");
+        let pi = t / pp;
+        let mut page = *self.tables[slot]
+            .get(pi)
+            .expect("write_row: page not mapped (ensure_positions first)");
+        if pool.refcount(self.precision, page) > 1 {
+            page = pool.cow(self.precision, page).expect(
+                "page pool exhausted during copy-on-write (beam pools are sized at full budget)",
+            );
+            self.tables[slot][pi] = page;
+        }
+        let off = self.elem_off(page, head, t % pp);
+        match self.precision {
+            Precision::F32 => pool.f32_data[off..off + dh].copy_from_slice(values),
+            Precision::U8 => {
+                let inv = 1.0 / self.scale;
+                for (d, &x) in pool.u8_data[off..off + dh].iter_mut().zip(values) {
                     let q = (x * inv).round() as i32 + UINT8_ZERO_POINT;
                     *d = q.clamp(0, 255) as u8;
                 }
@@ -86,89 +467,116 @@ impl KvCache {
         }
     }
 
-    /// Read `len` f32 elements from slot offset (dequantizing if u8).
-    pub fn read_into(&self, slot: usize, off: usize, len: usize, out: &mut [f32]) {
-        assert!(off + len <= self.slot_len);
-        assert_eq!(out.len(), len);
-        let base = slot * self.slot_len + off;
-        match &self.store {
-            CacheStore::F32(data) => out.copy_from_slice(&data[base..base + len]),
-            CacheStore::U8 { data, scale } => {
-                for (o, &q) in out.iter_mut().zip(&data[base..base + len]) {
-                    *o = (q as i32 - UINT8_ZERO_POINT) as f32 * scale;
+    /// Read one row at `(slot, head, t)` as f32 (dequantizing if u8).
+    pub fn read_row_into(
+        &self,
+        pool: &PagePool,
+        slot: usize,
+        head: usize,
+        t: usize,
+        out: &mut [f32],
+    ) {
+        let dh = self.geom.d_head;
+        let pp = self.geom.page_positions;
+        assert_eq!(out.len(), dh);
+        let page = self.tables[slot][t / pp];
+        let off = self.elem_off(page, head, t % pp);
+        match self.precision {
+            Precision::F32 => out.copy_from_slice(&pool.f32_data[off..off + dh]),
+            Precision::U8 => {
+                for (o, &q) in out.iter_mut().zip(&pool.u8_data[off..off + dh]) {
+                    *o = (q as i32 - UINT8_ZERO_POINT) as f32 * self.scale;
                 }
             }
         }
     }
 
-    /// Raw u8 view of a slot range (quantized attention reads this
-    /// directly — no dequantize on the hot path).
-    pub fn raw_u8(&self, slot: usize, off: usize, len: usize) -> (&[u8], f32) {
-        match &self.store {
-            CacheStore::U8 { data, scale } => {
-                let base = slot * self.slot_len + off;
-                (&data[base..base + len], *scale)
-            }
-            CacheStore::F32(_) => panic!("raw_u8 on f32 cache"),
+    /// Visit positions `0..klen` of `(slot, head)` as contiguous f32
+    /// runs: `f(t0, rows)` where `rows` is `run_len * d_head` elements
+    /// starting at position `t0`.  Run boundaries are page boundaries,
+    /// so element order per row is identical to a dense layout.
+    pub fn for_each_run_f32(
+        &self,
+        pool: &PagePool,
+        slot: usize,
+        head: usize,
+        klen: usize,
+        mut f: impl FnMut(usize, &[f32]),
+    ) {
+        assert_eq!(self.precision, Precision::F32, "f32 runs on u8 cache");
+        let pp = self.geom.page_positions;
+        let dh = self.geom.d_head;
+        let mut t = 0;
+        while t < klen {
+            let run = (pp - t % pp).min(klen - t);
+            let off = self.elem_off(self.tables[slot][t / pp], head, t % pp);
+            f(t, &pool.f32_data[off..off + run * dh]);
+            t += run;
         }
     }
 
-    /// Raw f32 view of a slot range.
-    pub fn raw_f32(&self, slot: usize, off: usize, len: usize) -> &[f32] {
-        match &self.store {
-            CacheStore::F32(data) => {
-                let base = slot * self.slot_len + off;
-                &data[base..base + len]
-            }
-            CacheStore::U8 { .. } => panic!("raw_f32 on u8 cache"),
+    /// [`for_each_run_f32`](Self::for_each_run_f32) for the u8 store
+    /// (quantized attention consumes the raw bytes — no dequantize on
+    /// the hot path; the scale is [`scale`](Self::scale)).
+    pub fn for_each_run_u8(
+        &self,
+        pool: &PagePool,
+        slot: usize,
+        head: usize,
+        klen: usize,
+        mut f: impl FnMut(usize, &[u8]),
+    ) {
+        assert_eq!(self.precision, Precision::U8, "u8 runs on f32 cache");
+        let pp = self.geom.page_positions;
+        let dh = self.geom.d_head;
+        let mut t = 0;
+        while t < klen {
+            let run = (pp - t % pp).min(klen - t);
+            let off = self.elem_off(self.tables[slot][t / pp], head, t % pp);
+            f(t, &pool.u8_data[off..off + run * dh]);
+            t += run;
         }
     }
 
-    /// Reset one slot to its freshly-allocated state (zeros for f32,
-    /// the zero point for u8).  The pool runtime calls this when a slot
-    /// is recycled, so a reused slot can never leak the previous
-    /// request's keys/values even if a later reader over-reads its
-    /// klen bound.
-    pub fn clear_slot(&mut self, slot: usize) {
-        assert!(slot < self.slots, "clear_slot: slot {slot} oob");
-        let base = slot * self.slot_len;
-        match &mut self.store {
-            CacheStore::F32(data) => data[base..base + self.slot_len].fill(0.0),
-            CacheStore::U8 { data, .. } => {
-                data[base..base + self.slot_len].fill(UINT8_ZERO_POINT as u8)
-            }
+    /// Release every page a slot maps and clear its table.  Shared
+    /// pages survive for their other referents; exclusively-owned pages
+    /// are cleared and recycled (recycle-before-admit).
+    pub fn release_slot(&mut self, pool: &mut PagePool, slot: usize) {
+        for &p in &self.tables[slot] {
+            pool.release(self.precision, p);
         }
+        self.tables[slot].clear();
     }
 
     /// Beam reorder: `self[slot s] = old self[beam_src[s]]` — the §5.3
-    /// GatherNd.  Returns bytes moved (for the bench's accounting).
-    pub fn beam_gather(&mut self, beam_src: &[usize]) -> usize {
+    /// GatherNd as a page-table permutation.  Surviving beams *share*
+    /// their source's pages by reference (refcount), so zero bytes move
+    /// here; divergence is paid lazily by copy-on-write in
+    /// [`write_row`](Self::write_row), and only for the tail page a
+    /// beam actually writes.  Returns bytes moved now: always 0 (see
+    /// [`PagePool::traffic_bytes`] for the copy-on-write traffic).
+    pub fn beam_gather(&mut self, pool: &mut PagePool, beam_src: &[usize]) -> usize {
         assert_eq!(beam_src.len(), self.slots);
-        let slot_len = self.slot_len;
-        match &mut self.store {
-            CacheStore::F32(data) => {
-                self.scratch_f32.resize(data.len(), 0.0);
-                gather_rows_f32(data, slot_len, beam_src, &mut self.scratch_f32);
-                std::mem::swap(data, &mut self.scratch_f32);
-                2 * data.len() * 4
-            }
-            CacheStore::U8 { data, .. } => {
-                self.scratch_u8.resize(data.len(), 0);
-                // same row-gather over 1-byte elements
-                let src: &[i8] = unsafe {
-                    std::slice::from_raw_parts(data.as_ptr() as *const i8, data.len())
-                };
-                let dst: &mut [i8] = unsafe {
-                    std::slice::from_raw_parts_mut(
-                        self.scratch_u8.as_mut_ptr() as *mut i8,
-                        self.scratch_u8.len(),
-                    )
-                };
-                gather_rows_i8(src, slot_len, beam_src, dst);
-                std::mem::swap(data, &mut self.scratch_u8);
-                2 * data.len()
+        // retain the new references before releasing the old ones so a
+        // page kept by an identity mapping never bounces through
+        // refcount 0 (which would clear it)
+        let new_tables: Vec<Vec<u32>> = beam_src
+            .iter()
+            .map(|&src| {
+                let t = self.tables[src].clone();
+                for &p in &t {
+                    pool.retain(self.precision, p);
+                }
+                t
+            })
+            .collect();
+        for t in &self.tables {
+            for &p in t {
+                pool.release(self.precision, p);
             }
         }
+        self.tables = new_tables;
+        0
     }
 }
 
@@ -176,184 +584,401 @@ impl KvCache {
 mod tests {
     use super::*;
 
-    #[test]
-    fn f32_write_read_roundtrip() {
-        let mut c = KvCache::new_f32(2, 8);
-        c.write(1, 2, &[1.0, 2.0, 3.0]);
-        let mut out = vec![0.0; 3];
-        c.read_into(1, 2, 3, &mut out);
-        assert_eq!(out, vec![1.0, 2.0, 3.0]);
-        // untouched region stays zero
-        c.read_into(0, 0, 2, &mut out[..2].to_vec());
+    fn geom(pp: usize) -> PageGeometry {
+        PageGeometry {
+            heads: 2,
+            d_head: 2,
+            page_positions: pp,
+        }
+    }
+
+    /// Pool + one cache per precision, unbounded enough for the test.
+    fn rig(pp: usize, slots: usize, positions: usize) -> (PagePool, KvCache, KvCache) {
+        let g = geom(pp);
+        let pool = PagePool::new(g, 1024, 1024);
+        let cf = KvCache::new_f32(&pool, slots, positions);
+        let cq = KvCache::new_u8(&pool, slots, positions, 0.05);
+        (pool, cf, cq)
+    }
+
+    /// Allocator consistency: every page's refcount equals the number
+    /// of table references across the caches; free pages are referenced
+    /// nowhere and read clean.
+    fn check_consistency(pool: &PagePool, caches: &[&KvCache]) {
+        for p in [Precision::F32, Precision::U8] {
+            let st = pool.state(p);
+            let mut refs = vec![0u32; st.refcount.len()];
+            for c in caches.iter().filter(|c| c.precision == p) {
+                for t in &c.tables {
+                    for &pg in t {
+                        refs[pg as usize] += 1;
+                    }
+                }
+            }
+            assert_eq!(refs, st.refcount, "refcount drift ({p:?})");
+            let pe = pool.geom.page_elems();
+            for &pg in &st.free {
+                assert_eq!(st.refcount[pg as usize], 0, "free page with refs");
+                let base = pg as usize * pe;
+                match p {
+                    Precision::F32 => {
+                        assert!(pool.f32_data[base..base + pe].iter().all(|&x| x == 0.0))
+                    }
+                    Precision::U8 => assert!(pool.u8_data[base..base + pe]
+                        .iter()
+                        .all(|&x| x == UINT8_ZERO_POINT as u8)),
+                }
+            }
+        }
+    }
+
+    fn write_pos(c: &mut KvCache, pool: &mut PagePool, slot: usize, t: usize, seed: f32) {
+        c.ensure_positions(pool, slot, t + 1);
+        for head in 0..2 {
+            c.write_row(pool, slot, head, t, &[seed + head as f32, -seed]);
+        }
     }
 
     #[test]
-    fn u8_roundtrip_within_one_step() {
-        let scale = 0.05;
-        let mut c = KvCache::new_u8(1, 16, scale);
-        let vals = vec![0.0, 0.5, -0.5, 1.0, -1.0];
-        c.write(0, 0, &vals);
-        let mut out = vec![0.0; 5];
-        c.read_into(0, 0, 5, &mut out);
-        for (x, y) in vals.iter().zip(&out) {
-            assert!((x - y).abs() <= scale * 0.5 + 1e-6, "{x} vs {y}");
+    fn page_positions_parse_and_default() {
+        assert_eq!(parse_page_positions(None), DEFAULT_PAGE_POSITIONS);
+        assert_eq!(parse_page_positions(Some("4")), 4);
+        assert_eq!(parse_page_positions(Some(" 7 ")), 7);
+        assert_eq!(parse_page_positions(Some("0")), DEFAULT_PAGE_POSITIONS);
+        assert_eq!(parse_page_positions(Some("nope")), DEFAULT_PAGE_POSITIONS);
+    }
+
+    #[test]
+    fn f32_write_read_roundtrip_across_pages() {
+        let (mut pool, mut c, _) = rig(2, 2, 8);
+        for t in 0..5 {
+            write_pos(&mut c, &mut pool, 1, t, t as f32);
+        }
+        assert_eq!(c.slot_pages(1), 3, "5 positions at page 2 = 3 pages");
+        let mut out = [0.0; 2];
+        for t in 0..5 {
+            c.read_row_into(&pool, 1, 1, t, &mut out);
+            assert_eq!(out, [t as f32 + 1.0, -(t as f32)]);
+        }
+        // untouched slot maps nothing
+        assert_eq!(c.slot_pages(0), 0);
+    }
+
+    #[test]
+    fn u8_roundtrip_within_half_step() {
+        let (mut pool, _, mut c) = rig(4, 1, 8);
+        let scale = c.scale();
+        c.ensure_positions(&mut pool, 0, 3);
+        let vals = [[0.0, 0.5], [-0.5, 1.0], [-1.0, 0.05]];
+        for (t, v) in vals.iter().enumerate() {
+            c.write_row(&mut pool, 0, 0, t, v);
+        }
+        let mut out = [0.0; 2];
+        for (t, v) in vals.iter().enumerate() {
+            c.read_row_into(&pool, 0, 0, t, &mut out);
+            for (x, y) in v.iter().zip(&out) {
+                assert!((x - y).abs() <= scale * 0.5 + 1e-6, "{x} vs {y}");
+            }
         }
     }
 
     #[test]
     fn u8_saturates_gracefully() {
-        let mut c = KvCache::new_u8(1, 4, 0.01);
-        c.write(0, 0, &[100.0, -100.0]);
-        let mut out = vec![0.0; 2];
-        c.read_into(0, 0, 2, &mut out);
+        let g = geom(4);
+        let mut pool = PagePool::new(g, 4, 4);
+        let mut c = KvCache::new_u8(&pool, 1, 4, 0.01);
+        c.ensure_positions(&mut pool, 0, 1);
+        c.write_row(&mut pool, 0, 0, 0, &[100.0, -100.0]);
+        let mut out = [0.0; 2];
+        c.read_row_into(&pool, 0, 0, 0, &mut out);
         assert!((out[0] - 1.27).abs() < 1e-6);
         assert!((out[1] + 1.28).abs() < 1e-6);
     }
 
     #[test]
-    fn beam_gather_reorders_slots() {
-        let mut c = KvCache::new_f32(3, 2);
-        c.write(0, 0, &[0.0, 0.1]);
-        c.write(1, 0, &[1.0, 1.1]);
-        c.write(2, 0, &[2.0, 2.1]);
-        let bytes = c.beam_gather(&[2, 2, 0]);
-        assert_eq!(bytes, 2 * 6 * 4);
-        let mut out = vec![0.0; 2];
-        c.read_into(0, 0, 2, &mut out);
-        assert_eq!(out, vec![2.0, 2.1]);
-        c.read_into(1, 0, 2, &mut out);
-        assert_eq!(out, vec![2.0, 2.1]);
-        c.read_into(2, 0, 2, &mut out);
-        assert_eq!(out, vec![0.0, 0.1]);
-    }
-
-    #[test]
-    fn beam_gather_u8_moves_4x_fewer_bytes() {
-        let mut cf = KvCache::new_f32(4, 64);
-        let mut cq = KvCache::new_u8(4, 64, 0.1);
-        let bf = cf.beam_gather(&[0, 1, 2, 3]);
-        let bq = cq.beam_gather(&[0, 1, 2, 3]);
-        assert_eq!(bf, 4 * bq);
-    }
-
-    #[test]
-    fn beam_gather_identity_permutation_is_a_noop() {
-        for quantized in [false, true] {
-            let mut c = if quantized {
-                KvCache::new_u8(3, 4, 0.1)
-            } else {
-                KvCache::new_f32(3, 4)
-            };
-            for slot in 0..3 {
-                c.write(slot, 0, &[slot as f32 * 0.1, 0.2, 0.3, 0.4]);
-            }
-            let mut before = vec![0.0; 12];
-            for slot in 0..3 {
-                c.read_into(slot, 0, 4, &mut before[slot * 4..(slot + 1) * 4]);
-            }
-            c.beam_gather(&[0, 1, 2]);
-            let mut after = vec![0.0; 12];
-            for slot in 0..3 {
-                c.read_into(slot, 0, 4, &mut after[slot * 4..(slot + 1) * 4]);
-            }
-            assert_eq!(before, after, "identity gather changed data (q={quantized})");
+    fn runs_cover_klen_in_page_chunks() {
+        let (mut pool, mut c, _) = rig(3, 1, 10);
+        for t in 0..8 {
+            write_pos(&mut c, &mut pool, 0, t, 10.0 * t as f32);
         }
+        let mut seen = Vec::new();
+        c.for_each_run_f32(&pool, 0, 0, 8, |t0, rows| {
+            assert_eq!(rows.len() % 2, 0);
+            for (j, row) in rows.chunks_exact(2).enumerate() {
+                seen.push((t0 + j, row[0]));
+            }
+        });
+        let expect: Vec<(usize, f32)> = (0..8).map(|t| (t, 10.0 * t as f32)).collect();
+        assert_eq!(seen, expect, "runs must tile 0..klen in order");
     }
 
     #[test]
-    fn beam_gather_repeated_source_replicates() {
-        // every destination reads the same survivor — the all-beams-
-        // collapsed case beam search produces when one hypothesis
-        // dominates
+    fn beam_gather_is_zero_copy_and_reorders_tables() {
+        let (mut pool, mut c, _) = rig(4, 3, 4);
+        for slot in 0..3 {
+            write_pos(&mut c, &mut pool, slot, 0, slot as f32);
+        }
+        let t0 = pool.traffic_bytes();
+        let bytes = c.beam_gather(&mut pool, &[2, 2, 0]);
+        assert_eq!(bytes, 0, "gather is a table permutation");
+        assert_eq!(pool.traffic_bytes(), t0, "no copy traffic at gather time");
+        let mut out = [0.0; 2];
+        c.read_row_into(&pool, 0, 0, 0, &mut out);
+        assert_eq!(out[0], 2.0);
+        c.read_row_into(&pool, 1, 0, 0, &mut out);
+        assert_eq!(out[0], 2.0);
+        c.read_row_into(&pool, 2, 0, 0, &mut out);
+        assert_eq!(out[0], 0.0);
+        check_consistency(&pool, &[&c]);
+    }
+
+    #[test]
+    fn shared_page_copies_on_write_only() {
+        let (mut pool, mut c, _) = rig(4, 2, 8);
+        write_pos(&mut c, &mut pool, 0, 0, 1.0);
+        write_pos(&mut c, &mut pool, 1, 0, 2.0);
+        c.beam_gather(&mut pool, &[0, 0]); // both slots share slot 0's page
+        assert_eq!(pool.used_pages(Precision::F32), 1);
+        // writing slot 1's copy must not disturb slot 0
+        write_pos(&mut c, &mut pool, 1, 1, 9.0);
+        assert_eq!(pool.used_pages(Precision::F32), 2, "COW split the page");
+        let page_bytes = pool.geometry().page_bytes(Precision::F32) as u64;
+        assert_eq!(pool.traffic_bytes(), 2 * page_bytes, "one page copied (read+write)");
+        let mut out = [0.0; 2];
+        c.read_row_into(&pool, 0, 0, 0, &mut out);
+        assert_eq!(out[0], 1.0, "reader slot unchanged by the writer's COW");
+        c.read_row_into(&pool, 1, 0, 0, &mut out);
+        assert_eq!(out[0], 1.0, "COW preserved the shared prefix");
+        c.read_row_into(&pool, 1, 0, 1, &mut out);
+        assert_eq!(out[0], 9.0);
+        // a second write to the now-exclusive page is in place
+        let t = pool.traffic_bytes();
+        write_pos(&mut c, &mut pool, 1, 2, 3.0);
+        assert_eq!(pool.traffic_bytes(), t, "exclusive pages never copy");
+        check_consistency(&pool, &[&c]);
+    }
+
+    #[test]
+    fn cow_traffic_is_exactly_4x_smaller_in_u8() {
+        // the §5.3 ratio, per copy event: identical geometry, one COW
+        // each — u8 moves exactly 4x fewer bytes than f32
+        let (mut pool, mut cf, mut cq) = rig(8, 2, 8);
+        for c in [&mut cf, &mut cq] {
+            c.ensure_positions(&mut pool, 0, 1);
+        }
+        cf.write_row(&mut pool, 0, 0, 0, &[1.0, 2.0]);
+        cq.write_row(&mut pool, 0, 0, 0, &[1.0, 2.0]);
+        cf.beam_gather(&mut pool, &[0, 0]);
+        cq.beam_gather(&mut pool, &[0, 0]);
+        let base = pool.traffic_bytes();
+        cf.write_row(&mut pool, 1, 0, 0, &[3.0, 4.0]);
+        let f_bytes = pool.traffic_bytes() - base;
+        cq.write_row(&mut pool, 1, 0, 0, &[3.0, 4.0]);
+        let q_bytes = pool.traffic_bytes() - base - f_bytes;
+        assert!(f_bytes > 0 && q_bytes > 0);
+        assert_eq!(f_bytes, 4 * q_bytes, "u8 COW moves 4x fewer bytes");
+    }
+
+    #[test]
+    fn beam_gather_identity_and_repeat_edges() {
         for quantized in [false, true] {
-            let mut c = if quantized {
-                KvCache::new_u8(4, 2, 0.1)
-            } else {
-                KvCache::new_f32(4, 2)
-            };
+            let (mut pool, mut cf, mut cq) = rig(2, 4, 4);
+            let c = if quantized { &mut cq } else { &mut cf };
             for slot in 0..4 {
-                c.write(slot, 0, &[slot as f32, -(slot as f32)]);
+                write_pos(c, &mut pool, slot, 0, slot as f32);
+                write_pos(c, &mut pool, slot, 1, 10.0 + slot as f32);
             }
-            c.beam_gather(&[3, 3, 3, 3]);
-            let mut expect = vec![0.0; 2];
-            c.read_into(3, 0, 2, &mut expect);
+            let read_all = |c: &KvCache, pool: &PagePool| -> Vec<f32> {
+                let mut v = Vec::new();
+                let mut row = [0.0; 2];
+                for slot in 0..4 {
+                    for t in 0..2 {
+                        c.read_row_into(pool, slot, 1, t, &mut row);
+                        v.extend_from_slice(&row);
+                    }
+                }
+                v
+            };
+            let before = read_all(c, &pool);
+            c.beam_gather(&mut pool, &[0, 1, 2, 3]);
+            assert_eq!(read_all(c, &pool), before, "identity gather is a no-op (q={quantized})");
+            // all beams collapse onto the winner
+            c.beam_gather(&mut pool, &[3, 3, 3, 3]);
+            let mut expect = [0.0; 2];
+            c.read_row_into(&pool, 3, 1, 0, &mut expect);
             for slot in 0..4 {
-                let mut got = vec![0.0; 2];
-                c.read_into(slot, 0, 2, &mut got);
+                let mut got = [0.0; 2];
+                c.read_row_into(&pool, slot, 1, 0, &mut got);
                 assert_eq!(got, expect, "slot {slot} (q={quantized})");
             }
+            check_consistency(&pool, &[&cf, &cq]);
         }
     }
 
     #[test]
     fn beam_gather_single_slot() {
-        // the beam=1 degenerate case: a 1-slot gather must be the
-        // identity and must not touch out-of-slot memory
-        for quantized in [false, true] {
-            let mut c = if quantized {
-                KvCache::new_u8(1, 3, 0.1)
-            } else {
-                KvCache::new_f32(1, 3)
-            };
-            c.write(0, 0, &[0.5, -0.5, 1.0]);
-            let mut before = vec![0.0; 3];
-            c.read_into(0, 0, 3, &mut before);
-            c.beam_gather(&[0]);
-            let mut after = vec![0.0; 3];
-            c.read_into(0, 0, 3, &mut after);
-            assert_eq!(before, after);
-        }
+        let (mut pool, mut c, _) = rig(2, 1, 4);
+        write_pos(&mut c, &mut pool, 0, 0, 0.5);
+        let mut before = [0.0; 2];
+        c.read_row_into(&pool, 0, 0, 0, &mut before);
+        c.beam_gather(&mut pool, &[0]);
+        let mut after = [0.0; 2];
+        c.read_row_into(&pool, 0, 0, 0, &mut after);
+        assert_eq!(before, after);
+        check_consistency(&pool, &[&c]);
     }
 
     #[test]
-    fn recycled_slot_never_leaks_prior_contents() {
-        // the slot-recycle property: after clear_slot, a recycled slot
-        // is indistinguishable from a freshly-allocated one — whatever
-        // the previous occupant wrote, wherever, in both storage
-        // precisions
+    fn budget_exhaustion_is_an_option_not_a_panic() {
+        let g = geom(2);
+        let mut pool = PagePool::new(g, 2, 0);
+        let mut c = KvCache::new_f32(&pool, 1, 64);
+        assert!(c.ensure_positions(&mut pool, 0, 4), "2 pages fit the cap");
+        assert!(!c.ensure_positions(&mut pool, 0, 6), "3rd page exceeds the cap");
+        assert_eq!(pool.free_pages(Precision::F32), 0);
+        assert_eq!(pool.high_water(Precision::F32), 2);
+        // releasing makes pages allocatable again, cleared
+        c.release_slot(&mut pool, 0);
+        assert_eq!(pool.free_pages(Precision::F32), 2);
+        assert!(c.ensure_positions(&mut pool, 0, 4));
+        check_consistency(&pool, &[&c]);
+    }
+
+    #[test]
+    fn recycled_pages_never_leak_prior_contents() {
+        // recycle-before-admit at page granularity: whatever a previous
+        // occupant wrote, a reallocated page reads clean
         use crate::util::prop::check;
-        check("kvcache-recycle", 0x5107, 64, |rng, _| {
+        check("kvcache-page-recycle", 0x5107, 64, |rng, _| {
+            let pp = 1 + rng.below(5) as usize;
             let slots = 1 + rng.below(4) as usize;
-            let slot_len = 4 + rng.below(60) as usize;
+            let positions = 1 + rng.below(12) as usize;
             let quantized = rng.below(2) == 1;
-            let mk = |q: bool| {
-                if q {
-                    KvCache::new_u8(slots, slot_len, 0.05)
-                } else {
-                    KvCache::new_f32(slots, slot_len)
-                }
+            let g = geom(pp);
+            let mut pool = PagePool::new(g, 256, 256);
+            let mut c = if quantized {
+                KvCache::new_u8(&pool, slots, positions, 0.05)
+            } else {
+                KvCache::new_f32(&pool, slots, positions)
             };
-            let mut used = mk(quantized);
-            // a prior request scribbles over every slot
             for slot in 0..slots {
-                let vals: Vec<f32> = (0..slot_len)
-                    .map(|_| (rng.below(200) as f32 - 100.0) * 0.01)
-                    .collect();
-                used.write(slot, 0, &vals);
+                for t in 0..positions {
+                    let v = (rng.below(200) as f32 - 100.0) * 0.01;
+                    c.ensure_positions(&mut pool, slot, t + 1);
+                    for head in 0..2 {
+                        c.write_row(&mut pool, slot, head, t, &[v, -v]);
+                    }
+                }
             }
             let victim = rng.below(slots as u64) as usize;
-            used.clear_slot(victim);
-            // recycled slot reads exactly like a fresh cache's slot...
-            let fresh = mk(quantized);
-            let mut got = vec![1.0; slot_len];
-            let mut want = vec![2.0; slot_len];
-            used.read_into(victim, 0, slot_len, &mut got);
-            fresh.read_into(0, 0, slot_len, &mut want);
-            if got != want {
-                return Err(format!("recycled slot {victim} leaks (q={quantized})"));
+            c.release_slot(&mut pool, victim);
+            // a new occupant's reads must match a fresh cache's
+            let mut fresh_pool = PagePool::new(g, 256, 256);
+            let mut fresh = if quantized {
+                KvCache::new_u8(&fresh_pool, 1, positions, 0.05)
+            } else {
+                KvCache::new_f32(&fresh_pool, 1, positions)
+            };
+            let vals = [0.33f32, -0.41];
+            c.ensure_positions(&mut pool, victim, 1);
+            fresh.ensure_positions(&mut fresh_pool, 0, 1);
+            c.write_row(&mut pool, victim, 0, 0, &vals);
+            fresh.write_row(&mut fresh_pool, 0, 0, 0, &vals);
+            let (mut got, mut want) = ([0.0; 2], [0.0; 2]);
+            for head in 0..2 {
+                c.read_row_into(&pool, victim, head, 0, &mut got);
+                fresh.read_row_into(&fresh_pool, 0, head, 0, &mut want);
+                if got != want {
+                    return Err(format!(
+                        "recycled slot {victim} leaks (q={quantized}, head {head})"
+                    ));
+                }
             }
-            // ...and a new occupant's writes land on clean storage
-            let vals: Vec<f32> = (0..slot_len).map(|i| (i as f32) * 0.01).collect();
-            let mut reused = used;
-            reused.write(victim, 0, &vals);
-            let mut fresh2 = mk(quantized);
-            fresh2.write(0, 0, &vals);
-            reused.read_into(victim, 0, slot_len, &mut got);
-            fresh2.read_into(0, 0, slot_len, &mut want);
-            if got != want {
-                return Err(format!(
-                    "recycled slot {victim} differs from fresh after rewrite (q={quantized})"
-                ));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn allocator_never_aliases_pages_across_live_slots() {
+        // the page-allocator property: under random admit / grow /
+        // gather / release traffic, (a) refcounts exactly equal table
+        // references, (b) an exclusively-owned page is never reachable
+        // from two slots, (c) free pages are clean — in both precisions
+        // at once (the banks are independent)
+        use crate::util::prop::check;
+        check("kvcache-page-alias", 0xA11A5, 48, |rng, _| {
+            let pp = 1 + rng.below(4) as usize;
+            let slots = 2 + rng.below(4) as usize;
+            let positions = 1 + rng.below(10) as usize;
+            let g = geom(pp);
+            let mut pool = PagePool::new(g, 512, 512);
+            let mut cf = KvCache::new_f32(&pool, slots, positions);
+            let mut cq = KvCache::new_u8(&pool, slots, positions, 0.05);
+            let mut grown = vec![0usize; slots]; // positions per slot (caches in lockstep)
+            for step in 0..64 {
+                match rng.below(4) {
+                    0 => {
+                        // grow a slot and write its newest position
+                        let slot = rng.below(slots as u64) as usize;
+                        if grown[slot] < positions {
+                            let t = grown[slot];
+                            grown[slot] += 1;
+                            let v = step as f32 * 0.01;
+                            for c in [&mut cf, &mut cq] {
+                                assert!(c.ensure_positions(&mut pool, slot, t + 1));
+                                for head in 0..2 {
+                                    c.write_row(&mut pool, slot, head, t, &[v, -v]);
+                                }
+                            }
+                        }
+                    }
+                    1 => {
+                        // release a slot
+                        let slot = rng.below(slots as u64) as usize;
+                        cf.release_slot(&mut pool, slot);
+                        cq.release_slot(&mut pool, slot);
+                        grown[slot] = 0;
+                    }
+                    2 => {
+                        // beam-style permutation over all slots
+                        let src: Vec<usize> = (0..slots)
+                            .map(|_| rng.below(slots as u64) as usize)
+                            .collect();
+                        cf.beam_gather(&mut pool, &src);
+                        cq.beam_gather(&mut pool, &src);
+                        let old = grown.clone();
+                        for (s, &from) in src.iter().enumerate() {
+                            grown[s] = old[from];
+                        }
+                    }
+                    _ => {
+                        // overwrite an existing position (may COW)
+                        let slot = rng.below(slots as u64) as usize;
+                        if grown[slot] > 0 {
+                            let t = rng.below(grown[slot] as u64) as usize;
+                            for c in [&mut cf, &mut cq] {
+                                c.write_row(&mut pool, slot, 0, t, &[0.11, -0.11]);
+                            }
+                        }
+                    }
+                }
+                check_consistency(&pool, &[&cf, &cq]);
+                // exclusive pages must appear in exactly one table
+                for (c, p) in [(&cf, Precision::F32), (&cq, Precision::U8)] {
+                    let mut owner: Vec<Option<usize>> = vec![None; pool.state(p).refcount.len()];
+                    for (slot, t) in c.tables.iter().enumerate() {
+                        for &pg in t {
+                            if pool.refcount(p, pg) == 1 {
+                                if let Some(prev) = owner[pg as usize] {
+                                    return Err(format!(
+                                        "page {pg} ({p:?}) aliased by slots {prev} and {slot}"
+                                    ));
+                                }
+                                owner[pg as usize] = Some(slot);
+                            }
+                        }
+                    }
+                }
             }
             Ok(())
         });
@@ -361,13 +986,16 @@ mod tests {
 
     #[test]
     fn u8_gather_preserves_quantized_values() {
-        let mut c = KvCache::new_u8(2, 4, 0.1);
-        c.write(0, 0, &[0.3, -0.3, 0.7, -0.7]);
-        let mut before = vec![0.0; 4];
-        c.read_into(0, 0, 4, &mut before);
-        c.beam_gather(&[0, 0]);
-        let mut after = vec![0.0; 4];
-        c.read_into(1, 0, 4, &mut after);
+        let (mut pool, _, mut c) = rig(2, 2, 4);
+        c.ensure_positions(&mut pool, 0, 4);
+        for (t, v) in [[0.3f32, -0.3], [0.7, -0.7], [0.1, 0.2], [-0.1, 0.4]].iter().enumerate() {
+            c.write_row(&mut pool, 0, 1, t, v);
+        }
+        let mut before = [0.0; 2];
+        c.read_row_into(&pool, 0, 1, 2, &mut before);
+        c.beam_gather(&mut pool, &[0, 0]);
+        let mut after = [0.0; 2];
+        c.read_row_into(&pool, 1, 1, 2, &mut after);
         assert_eq!(before, after);
     }
 }

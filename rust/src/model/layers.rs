@@ -23,7 +23,7 @@
 //! Softmax and LayerNorm always run in FP32 (§3 of the paper).
 
 use crate::gemm::{self, QGemmScratch, UINT8_ZERO_POINT};
-use crate::model::kvcache::KvCache;
+use crate::model::kvcache::{KvCache, PagePool};
 use crate::model::plan::{AttnPlan, CompiledPlan, FfnPlan, LnPlan, SiteId, WeightStore};
 use crate::model::profiler::{OpKind, Profiler};
 use crate::tensor::ops;
@@ -53,7 +53,6 @@ pub struct AttnScratch {
     dec_scores: Vec<f32>,
     q_q8: Vec<i8>,
     p_q8: Vec<i8>,
-    kv_row: Vec<f32>,
     /// decode path: per-head i32 PV accumulator (`dh` wide)
     dec_acc: Vec<i32>,
 }
@@ -362,12 +361,16 @@ pub fn ln(lnp: &LnPlan, prof: &mut Profiler, d: usize, x: &mut [f32]) {
     prof.add(OpKind::LayerNorm, t0.elapsed());
 }
 
-/// Single-query attention against a cache laid out `[H, T, dh]` per
-/// slot (the incremental decode path).  Dispatches to integer dot
-/// products when the site is quantized and the cache stores u8 — no
-/// dequantize on the path.  The query activation is quantized once per
-/// layer (whole `[active, d]` tensor) and the attention probabilities
-/// once per slot (whole `[H, klen]` tensor), not once per head.
+/// Single-query attention against paged caches (the incremental decode
+/// path): positions are read as page-sized runs via the caches' page
+/// tables (`[H, page_pos, dh]` within a page, so each run is dense
+/// `[run, dh]` rows — element order per `(head, t)` row is exactly the
+/// dense layout's, keeping the numerics bit-identical).  Dispatches to
+/// integer dot products when the site is quantized and the cache
+/// stores u8 — no dequantize on the path.  The query activation is
+/// quantized once per layer (whole `[active, d]` tensor) and the
+/// attention probabilities once per slot (whole `[H, klen]` tensor),
+/// not once per head.
 ///
 /// `active` is the compacted schedule of the iteration-level runtime:
 /// `q`/`out` hold one row per *active* slot (row `i` belongs to pool
@@ -385,8 +388,8 @@ pub fn cached_attention(
     q: &[f32],
     kcache: &KvCache,
     vcache: &KvCache,
+    pages: &PagePool,
     active: &[usize],
-    t_stride: usize,
     klen_of: impl Fn(usize) -> usize,
     out: &mut [f32],
 ) {
@@ -398,7 +401,6 @@ pub fn cached_attention(
     debug_assert_eq!(out.len(), active.len() * d);
     let qk_quant = &plan.site(qk).quant;
     let pv_quant = &plan.site(pv).quant;
-    sc.kv_row.resize(dh, 0.0);
 
     // quantize the whole query activation once per layer
     let qk_int = qk_quant.is_some() && kcache.is_quantized();
@@ -417,34 +419,45 @@ pub fn cached_attention(
         for head in 0..h {
             if qk_int {
                 let sq = qk_quant.as_ref().unwrap();
-                let (kraw, kscale) = kcache.raw_u8(slot, head * t_stride * dh, klen * dh);
-                let s = sq.a.scale * kscale;
+                let s = sq.a.scale * kcache.scale();
                 let za = sq.a.zero;
                 let qrow = &sc.q_q8[i * d + head * dh..][..dh];
+                let scores = &mut sc.dec_scores[head * klen..(head + 1) * klen];
                 prof.time_site(OpKind::QuantizedMatMul, qk, || {
-                    for t in 0..klen {
-                        let krow = &kraw[t * dh..(t + 1) * dh];
-                        let mut acc = 0i32;
-                        for c in 0..dh {
-                            acc += (qrow[c] as i32 - za) * (krow[c] as i32 - UINT8_ZERO_POINT);
+                    kcache.for_each_run_u8(pages, slot, head, klen, |t0, rows| {
+                        for (j, krow) in rows.chunks_exact(dh).enumerate() {
+                            let mut acc = 0i32;
+                            for c in 0..dh {
+                                acc +=
+                                    (qrow[c] as i32 - za) * (krow[c] as i32 - UINT8_ZERO_POINT);
+                            }
+                            scores[t0 + j] = acc as f32 * s;
                         }
-                        sc.dec_scores[head * klen + t] = acc as f32 * s;
-                    }
+                    });
                 });
             } else {
                 let qrow = &q[i * d + head * dh..][..dh];
+                let scores = &mut sc.dec_scores[head * klen..(head + 1) * klen];
                 prof.time_site(OpKind::MatMul, qk, || {
                     if kcache.is_quantized() {
                         // quantized cache but fp32 site: dequantize rows
-                        for t in 0..klen {
-                            kcache.read_into(slot, (head * t_stride + t) * dh, dh, &mut sc.kv_row);
-                            sc.dec_scores[head * klen + t] = dot(qrow, &sc.kv_row);
-                        }
+                        let scale = kcache.scale();
+                        kcache.for_each_run_u8(pages, slot, head, klen, |t0, rows| {
+                            for (j, krow) in rows.chunks_exact(dh).enumerate() {
+                                let mut acc = 0.0f32;
+                                for c in 0..dh {
+                                    acc += qrow[c]
+                                        * ((krow[c] as i32 - UINT8_ZERO_POINT) as f32 * scale);
+                                }
+                                scores[t0 + j] = acc;
+                            }
+                        });
                     } else {
-                        let kraw = kcache.raw_f32(slot, head * t_stride * dh, klen * dh);
-                        for t in 0..klen {
-                            sc.dec_scores[head * klen + t] = dot(qrow, &kraw[t * dh..(t + 1) * dh]);
-                        }
+                        kcache.for_each_run_f32(pages, slot, head, klen, |t0, rows| {
+                            for (j, krow) in rows.chunks_exact(dh).enumerate() {
+                                scores[t0 + j] = dot(qrow, krow);
+                            }
+                        });
                     }
                 });
             }
@@ -472,42 +485,48 @@ pub fn cached_attention(
             ctx.fill(0.0);
             if pv_int {
                 let sq = pv_quant.as_ref().unwrap();
-                let (vraw, vscale) = vcache.raw_u8(slot, head * t_stride * dh, klen * dh);
-                let s = sq.a.scale * vscale;
+                let s = sq.a.scale * vcache.scale();
                 let za = sq.a.zero;
+                let probs = &sc.p_q8[head * klen..(head + 1) * klen];
                 prof.time_site(OpKind::QuantizedMatMul, pv, || {
                     sc.dec_acc.resize(dh, 0);
                     sc.dec_acc.fill(0);
-                    for t in 0..klen {
-                        let pq = sc.p_q8[head * klen + t] as i32 - za;
-                        let vrow = &vraw[t * dh..(t + 1) * dh];
-                        for c in 0..dh {
-                            sc.dec_acc[c] += pq * (vrow[c] as i32 - UINT8_ZERO_POINT);
+                    let acc = &mut sc.dec_acc;
+                    vcache.for_each_run_u8(pages, slot, head, klen, |t0, rows| {
+                        for (j, vrow) in rows.chunks_exact(dh).enumerate() {
+                            let pq = probs[t0 + j] as i32 - za;
+                            for c in 0..dh {
+                                acc[c] += pq * (vrow[c] as i32 - UINT8_ZERO_POINT);
+                            }
                         }
-                    }
+                    });
                     for c in 0..dh {
-                        ctx[c] = sc.dec_acc[c] as f32 * s;
+                        ctx[c] = acc[c] as f32 * s;
                     }
                 });
             } else {
+                let probs = &sc.dec_scores[head * klen..(head + 1) * klen];
                 prof.time_site(OpKind::MatMul, pv, || {
                     if vcache.is_quantized() {
-                        for t in 0..klen {
-                            vcache.read_into(slot, (head * t_stride + t) * dh, dh, &mut sc.kv_row);
-                            let p = sc.dec_scores[head * klen + t];
-                            for c in 0..dh {
-                                ctx[c] += p * sc.kv_row[c];
+                        let scale = vcache.scale();
+                        vcache.for_each_run_u8(pages, slot, head, klen, |t0, rows| {
+                            for (j, vrow) in rows.chunks_exact(dh).enumerate() {
+                                let p = probs[t0 + j];
+                                for c in 0..dh {
+                                    ctx[c] +=
+                                        p * ((vrow[c] as i32 - UINT8_ZERO_POINT) as f32 * scale);
+                                }
                             }
-                        }
+                        });
                     } else {
-                        let vraw = vcache.raw_f32(slot, head * t_stride * dh, klen * dh);
-                        for t in 0..klen {
-                            let p = sc.dec_scores[head * klen + t];
-                            let vrow = &vraw[t * dh..(t + 1) * dh];
-                            for c in 0..dh {
-                                ctx[c] += p * vrow[c];
+                        vcache.for_each_run_f32(pages, slot, head, klen, |t0, rows| {
+                            for (j, vrow) in rows.chunks_exact(dh).enumerate() {
+                                let p = probs[t0 + j];
+                                for c in 0..dh {
+                                    ctx[c] += p * vrow[c];
+                                }
                             }
-                        }
+                        });
                     }
                 });
             }

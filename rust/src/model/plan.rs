@@ -225,6 +225,25 @@ pub struct KvSpec {
     pub cross_v: Option<f32>,
 }
 
+impl KvSpec {
+    /// `(f32, u8)` cache counts among this layer's two self-attention
+    /// stores — the page-pool sizing math aggregates these per bank.
+    pub fn self_counts(&self) -> (usize, usize) {
+        Self::counts(&[self.self_k, self.self_v])
+    }
+
+    /// `(f32, u8)` cache counts among this layer's two cross-attention
+    /// stores.
+    pub fn cross_counts(&self) -> (usize, usize) {
+        Self::counts(&[self.cross_k, self.cross_v])
+    }
+
+    fn counts(scales: &[Option<f32>]) -> (usize, usize) {
+        let u8s = scales.iter().filter(|s| s.is_some()).count();
+        (scales.len() - u8s, u8s)
+    }
+}
+
 /// The compiled, index-addressed execution plan (see module docs).
 pub struct CompiledPlan {
     /// Per-site dispatch info, indexed by [`SiteId`].

@@ -33,12 +33,143 @@ mod reference {
 
     use quantnmt::gemm::{self, QGemmScratch, UINT8_ZERO_POINT};
     use quantnmt::model::config::ModelConfig;
-    use quantnmt::model::kvcache::KvCache;
     use quantnmt::model::plan::positional_encoding;
     use quantnmt::model::weights::Weights;
     use quantnmt::quant::calibrate::SiteQuant;
     use quantnmt::specials::{BOS_ID, EOS_ID, PAD_ID};
+    use quantnmt::tensor::gather::{gather_rows_f32, gather_rows_i8};
     use quantnmt::tensor::ops;
+
+    /// The seed engine's **dense** KV cache, ported verbatim: one
+    /// contiguous `[slots, H * T * dh]` allocation per tensor, with the
+    /// §5.3 beam reorder as a full slot-axis gather (every live byte is
+    /// copied).  The crate's `model::kvcache` is now the paged,
+    /// copy-on-write allocator, so the reference keeps its own copy of
+    /// the storage it was written against — the parity tests prove the
+    /// paged cache reads back bit-identically to this one.
+    pub enum CacheStore {
+        F32(Vec<f32>),
+        /// u8 with fixed zero point 128 and a per-tensor scale
+        U8 { data: Vec<u8>, scale: f32 },
+    }
+
+    pub struct KvCache {
+        pub slots: usize,
+        /// elements per slot (= H * T_max * dh)
+        pub slot_len: usize,
+        pub store: CacheStore,
+        scratch_f32: Vec<f32>,
+        scratch_u8: Vec<u8>,
+    }
+
+    impl KvCache {
+        pub fn new_f32(slots: usize, slot_len: usize) -> Self {
+            KvCache {
+                slots,
+                slot_len,
+                store: CacheStore::F32(vec![0.0; slots * slot_len]),
+                scratch_f32: Vec::new(),
+                scratch_u8: Vec::new(),
+            }
+        }
+
+        pub fn new_u8(slots: usize, slot_len: usize, scale: f32) -> Self {
+            KvCache {
+                slots,
+                slot_len,
+                store: CacheStore::U8 {
+                    data: vec![UINT8_ZERO_POINT as u8; slots * slot_len],
+                    scale,
+                },
+                scratch_f32: Vec::new(),
+                scratch_u8: Vec::new(),
+            }
+        }
+
+        pub fn is_quantized(&self) -> bool {
+            matches!(self.store, CacheStore::U8 { .. })
+        }
+
+        pub fn write(&mut self, slot: usize, off: usize, values: &[f32]) {
+            assert!(off + values.len() <= self.slot_len, "cache write oob");
+            let base = slot * self.slot_len + off;
+            match &mut self.store {
+                CacheStore::F32(data) => {
+                    data[base..base + values.len()].copy_from_slice(values);
+                }
+                CacheStore::U8 { data, scale } => {
+                    let inv = 1.0 / *scale;
+                    for (d, &x) in data[base..base + values.len()].iter_mut().zip(values) {
+                        let q = (x * inv).round() as i32 + UINT8_ZERO_POINT;
+                        *d = q.clamp(0, 255) as u8;
+                    }
+                }
+            }
+        }
+
+        pub fn read_into(&self, slot: usize, off: usize, len: usize, out: &mut [f32]) {
+            assert!(off + len <= self.slot_len);
+            assert_eq!(out.len(), len);
+            let base = slot * self.slot_len + off;
+            match &self.store {
+                CacheStore::F32(data) => out.copy_from_slice(&data[base..base + len]),
+                CacheStore::U8 { data, scale } => {
+                    for (o, &q) in out.iter_mut().zip(&data[base..base + len]) {
+                        *o = (q as i32 - UINT8_ZERO_POINT) as f32 * scale;
+                    }
+                }
+            }
+        }
+
+        pub fn raw_u8(&self, slot: usize, off: usize, len: usize) -> (&[u8], f32) {
+            match &self.store {
+                CacheStore::U8 { data, scale } => {
+                    let base = slot * self.slot_len + off;
+                    (&data[base..base + len], *scale)
+                }
+                CacheStore::F32(_) => panic!("raw_u8 on f32 cache"),
+            }
+        }
+
+        pub fn raw_f32(&self, slot: usize, off: usize, len: usize) -> &[f32] {
+            match &self.store {
+                CacheStore::F32(data) => {
+                    let base = slot * self.slot_len + off;
+                    &data[base..base + len]
+                }
+                CacheStore::U8 { .. } => panic!("raw_f32 on u8 cache"),
+            }
+        }
+
+        /// Beam reorder: `self[slot s] = old self[beam_src[s]]` — the
+        /// seed's clone-everything GatherNd.
+        pub fn beam_gather(&mut self, beam_src: &[usize]) {
+            assert_eq!(beam_src.len(), self.slots);
+            let slot_len = self.slot_len;
+            match &mut self.store {
+                CacheStore::F32(data) => {
+                    self.scratch_f32.resize(data.len(), 0.0);
+                    gather_rows_f32(data, slot_len, beam_src, &mut self.scratch_f32);
+                    std::mem::swap(data, &mut self.scratch_f32);
+                }
+                CacheStore::U8 { data, .. } => {
+                    self.scratch_u8.resize(data.len(), 0);
+                    // same row-gather over 1-byte elements
+                    let src: &[i8] = unsafe {
+                        std::slice::from_raw_parts(data.as_ptr() as *const i8, data.len())
+                    };
+                    let dst: &mut [i8] = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            self.scratch_u8.as_mut_ptr() as *mut i8,
+                            self.scratch_u8.len(),
+                        )
+                    };
+                    gather_rows_i8(src, slot_len, beam_src, dst);
+                    std::mem::swap(data, &mut self.scratch_u8);
+                }
+            }
+        }
+    }
 
     /// The seed engine's per-batch decoder state, ported verbatim.
     /// (The live engine replaced this with the slot-pool runtime —
@@ -1090,7 +1221,7 @@ fn decode_logits_are_bit_identical() {
             // engine side: the slot-pool runtime with the full active
             // set is the batch-synchronous schedule
             let mut pool = e.new_pool(src.len(), t_max, sr);
-            let slots = e.admit(&mut pool, &me, &lr, sr);
+            let slots = e.admit(&mut pool, &me, &lr, sr).expect("pool sized for the batch");
             // fixed token stream: every slot advances through the vocab
             let mut logits_r = Vec::new();
             let mut logits_e = Vec::new();
@@ -1099,7 +1230,7 @@ fn decode_logits_are_bit_identical() {
                     .map(|i| 3 + ((i + pos) % (cfg.vocab_size - 3)) as u32)
                     .collect();
                 r.decode_step(&mut str_, &toks, pos, &mut logits_r);
-                e.pool_step(&mut pool, &slots, &toks, &mut logits_e);
+                let _ = e.pool_step(&mut pool, &slots, &toks, &mut logits_e);
                 assert_eq!(logits_r, logits_e, "{name}: logits drifted at step {pos}");
             }
         }
@@ -1239,7 +1370,7 @@ fn derived_recipes_match_legacy_site_table_plan() {
             let t_max = 6;
             let mut str_ = r.init_decode(&mr, &lr, sr, t_max);
             let mut pool = e.new_pool(src.len(), t_max, sr);
-            let slots = e.admit(&mut pool, &me, &lr, sr);
+            let slots = e.admit(&mut pool, &me, &lr, sr).expect("pool sized for the batch");
             let mut logits_r = Vec::new();
             let mut logits_e = Vec::new();
             for pos in 0..t_max {
@@ -1247,7 +1378,7 @@ fn derived_recipes_match_legacy_site_table_plan() {
                     .map(|i| 3 + ((i + pos) % (cfg.vocab_size - 3)) as u32)
                     .collect();
                 r.decode_step(&mut str_, &toks, pos, &mut logits_r);
-                e.pool_step(&mut pool, &slots, &toks, &mut logits_e);
+                let _ = e.pool_step(&mut pool, &slots, &toks, &mut logits_e);
                 assert_eq!(logits_r, logits_e, "{mode:?} qs={qs}: logits at {pos}");
             }
 

@@ -408,3 +408,165 @@ fn midflight_short_request_completes_before_long_one() {
          request under the continuous scheduler"
     );
 }
+
+#[test]
+fn oversized_requests_shed_with_their_own_counter_not_a_panic() {
+    // the capacity-panic bugfix, end to end: an over-long (or empty)
+    // request is rejected at admission under the dedicated
+    // `shed_oversize` counter — distinct from backpressure — and the
+    // serve loop completes normally for everything else
+    let model_cfg = tiny_cfg();
+    let weights = random_weights(&model_cfg, 0x051ED);
+    let cap = model_cfg.max_src_len;
+    let cfg = ServerConfig {
+        backend: Backend::EngineF32,
+        shards: 1,
+        max_wait: Duration::from_millis(2),
+        token_budget: 64,
+        max_batch_rows: 4,
+        queue_capacity: 64,
+        max_src_len: Some(cap),
+        max_decode_len: 6,
+        scheduler: Scheduler::Continuous,
+        ..Default::default()
+    };
+    let factory = |_id: usize| Engine::fp32(model_cfg.clone(), weights.clone()).expect("engine");
+    let (metrics, responses, ()) = server::serve_continuous(&cfg, factory, |client| {
+        assert!(client.submit(0, vec![3; cap.min(4)]), "in-cap request");
+        assert!(!client.submit(1, vec![3; cap + 1]), "over-cap must shed");
+        assert!(!client.submit(2, Vec::new()), "empty must shed");
+        assert!(client.submit(3, vec![4; 2]), "later valid request still admitted");
+        assert_eq!(client.shed_oversize(), 2);
+        assert_eq!(client.shed(), 0, "no backpressure happened");
+    });
+    assert_eq!(metrics.requests, 2, "only the two valid requests are served");
+    assert_eq!(metrics.shed_oversize, 2);
+    assert_eq!(metrics.shed, 0);
+    assert_eq!(responses.len(), 2);
+    assert_eq!(responses[0].id, 0);
+    assert_eq!(responses[1].id, 3);
+}
+
+#[test]
+fn length_capped_responses_are_flagged_truncated() {
+    // satellite of the t_max force-finish fix: a decode that hits the
+    // length cap without emitting EOS ships a `truncated` response —
+    // and the flag marks exactly those rows (out.len() == t_max iff the
+    // cap cut the decode), while the output itself still matches the
+    // isolated greedy decode bit for bit
+    let model_cfg = tiny_cfg();
+    let weights = random_weights(&model_cfg, 0x7C4D);
+    let srcs = tiny_srcs(0x7246, 16);
+    let t_max = 4usize;
+    let cfg = ServerConfig {
+        backend: Backend::EngineF32,
+        shards: 2,
+        max_wait: Duration::from_millis(2),
+        token_budget: 48,
+        max_batch_rows: 4,
+        slots: 8,
+        queue_capacity: 1024,
+        max_decode_len: t_max,
+        scheduler: Scheduler::Continuous,
+        ..Default::default()
+    };
+    let submit_all = |client: &server::ServerClient<'_>| {
+        for (i, s) in srcs.iter().enumerate() {
+            assert!(client.submit(i, s.clone()), "shed request {i}");
+        }
+    };
+    let factory = |_id: usize| Engine::fp32(model_cfg.clone(), weights.clone()).expect("engine");
+    let (_, responses, ()) = server::serve_continuous(&cfg, factory, submit_all);
+    assert_eq!(responses.len(), srcs.len());
+    let mut solo = Engine::fp32(model_cfg.clone(), weights.clone()).unwrap();
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, i);
+        assert_eq!(r.out, solo.translate_greedy(&[srcs[i].clone()], t_max)[0]);
+        assert_eq!(
+            r.truncated,
+            r.out.len() == t_max,
+            "request {i}: flag must mark exactly the length-capped decodes"
+        );
+    }
+    assert!(
+        responses.iter().any(|r| r.truncated),
+        "trace is expected to contain at least one length-capped decode"
+    );
+    // the batch-synchronous scheduler cannot observe per-token progress
+    // inside `translate`: it reports truncated = false uniformly
+    let batch_cfg = ServerConfig {
+        scheduler: Scheduler::Batch,
+        slots: 0,
+        ..cfg.clone()
+    };
+    let batch_factory = |_id: usize| {
+        let mut engine = Engine::fp32(model_cfg.clone(), weights.clone()).expect("engine");
+        move |b: &Batch| engine.translate_greedy(&b.src, t_max)
+    };
+    let (_, rb, ()) = server::serve(&batch_cfg, batch_factory, submit_all);
+    assert!(rb.iter().all(|r| !r.truncated));
+}
+
+#[test]
+fn kv_budget_serving_matches_dense_and_reports_page_occupancy() {
+    // `serve --kv-budget-mb` acceptance: a shard pool capped by memory
+    // (slot count derived from the page budget) serves the same trace
+    // bit-identically to worst-case dense sizing, and the page-pool
+    // occupancy/high-water observables come back populated
+    let model_cfg = tiny_cfg();
+    let weights = random_weights(&model_cfg, 0xB0D6);
+    let srcs = tiny_srcs(0xB07, 24);
+    let base = ServerConfig {
+        backend: Backend::EngineF32,
+        shards: 2,
+        max_wait: Duration::from_millis(2),
+        token_budget: 48,
+        max_batch_rows: 4,
+        queue_capacity: 1024,
+        max_decode_len: 8,
+        scheduler: Scheduler::Continuous,
+        ..Default::default()
+    };
+    let submit_all = |client: &server::ServerClient<'_>| {
+        for (i, s) in srcs.iter().enumerate() {
+            assert!(client.submit(i, s.clone()), "shed request {i}");
+        }
+    };
+    let factory = |_id: usize| Engine::fp32(model_cfg.clone(), weights.clone()).expect("engine");
+
+    // dense: worst-case reservation per slot, allocation can never fail
+    let dense_cfg = ServerConfig {
+        slots: 8,
+        ..base.clone()
+    };
+    let (md, rd, ()) = server::serve_continuous(&dense_cfg, factory, submit_all);
+
+    // budgeted: 1 MiB page pool per shard, slot count budget-derived
+    let budget_cfg = ServerConfig {
+        slots: 0,
+        kv_budget_mb: Some(1),
+        ..base
+    };
+    assert!(budget_cfg.label().contains("kv1mb"), "{}", budget_cfg.label());
+    let (mb, rb, ()) = server::serve_continuous(&budget_cfg, factory, submit_all);
+
+    assert_eq!(md.requests, srcs.len());
+    assert_eq!(mb.requests, srcs.len());
+    assert_eq!(rd.len(), rb.len());
+    for (d, b) in rd.iter().zip(&rb) {
+        assert_eq!(d.id, b.id);
+        assert_eq!(
+            d.out, b.out,
+            "request {}: paged-budget and dense servings diverge",
+            d.id
+        );
+        assert_eq!(d.truncated, b.truncated, "request {}", d.id);
+    }
+    // page observables populated, and the high-water mark respects the
+    // budget (a 1 MiB pool is far above this trace's working set, so
+    // nothing should have been force-finished either)
+    assert_eq!(mb.shard_page_fill.len(), 2);
+    assert!(mb.page_fill() > 0.0 && mb.page_fill() <= 1.0);
+    assert!(mb.page_high() > 0.0 && mb.page_high() <= 1.0);
+    assert_eq!(mb.shed_oversize, 0);
+}
