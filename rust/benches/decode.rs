@@ -7,11 +7,16 @@
 //! isolates that cost on a **synthetic** model — it runs without
 //! artifacts — and prints:
 //!
-//! * per-token decode latency (best of N reps) for FP32 and INT8
-//!   engines at slots = 1 and 8;
+//! * per-token decode latency (best of N reps) for FP32, mixed INT8
+//!   and fully-integer (`int8-fused`) engines at slots = 1 and 8;
 //! * deterministic dispatch counts per token (Quantize /
 //!   QuantizedMatMul / MatMul invocations from the profiler);
+//! * f32↔int conversion **bytes per token** (quantize / dequantize /
+//!   requantize passes) — the traffic the fused epilogues eliminate;
 //! * the top per-site GEMM times (the `SiteId`-indexed breakdown).
+//!
+//! Machine-readable results land in `BENCH_requant.json` (one record
+//! per engine × slot count).
 //!
 //! ```bash
 //! cargo bench --bench decode            # full sweep
@@ -21,8 +26,9 @@
 use std::time::Instant;
 
 use quantnmt::model::profiler::{OpKind, Profiler};
-use quantnmt::model::testutil::{loose_recipe, random_weights};
+use quantnmt::model::testutil::{full_int_recipe, loose_recipe, random_weights};
 use quantnmt::model::{Engine, ModelConfig};
+use quantnmt::util::json::{obj, Json};
 
 fn bench_cfg() -> ModelConfig {
     // paper-adjacent dims, scaled to keep the bench seconds-long
@@ -72,8 +78,9 @@ fn per_token_us(engine: &mut Engine, slots: usize, steps: usize, reps: usize) ->
     best
 }
 
-/// Deterministic dispatch counts for one decode step at `pos`.
-fn step_counts(engine: &mut Engine, slots: usize, pos: usize) -> (u64, u64, u64) {
+/// Deterministic dispatch profile of one decode step at `pos`: the
+/// step's counts *and* the f32↔int conversion byte counters.
+fn profiled_step(engine: &mut Engine, slots: usize, pos: usize) -> Profiler {
     let src = source_batch(&engine.cfg, slots, 16);
     let (memory, src_len, s) = engine.encode(&src);
     let mut pool = engine.new_pool(slots, pos + 1, s);
@@ -87,12 +94,7 @@ fn step_counts(engine: &mut Engine, slots: usize, pos: usize) -> (u64, u64, u64)
     }
     engine.profiler = Profiler::enabled();
     let _ = engine.pool_step(&mut pool, &active, &tokens, &mut logits);
-    let p = std::mem::take(&mut engine.profiler);
-    (
-        p.count(OpKind::Quantize),
-        p.count(OpKind::QuantizedMatMul),
-        p.count(OpKind::MatMul),
-    )
+    std::mem::take(&mut engine.profiler)
 }
 
 /// Finished-slot compaction: per-step GEMM rows at the logits site as
@@ -135,16 +137,64 @@ fn main() -> anyhow::Result<()> {
         "{:12} {:>6} {:>14} {:>10} {:>10} {:>8}",
         "engine", "slots", "us/token", "Quantize", "QMatMul", "MatMul"
     );
+    let engines = ["fp32", "int8", "int8-fused"];
+    let mk_engine = |kind: &str| -> anyhow::Result<Engine> {
+        Ok(match kind {
+            "fp32" => Engine::fp32(cfg.clone(), w.clone())?,
+            "int8" => Engine::with_recipe(cfg.clone(), w.clone(), &loose_recipe(&cfg))?,
+            _ => Engine::with_recipe(cfg.clone(), w.clone(), &full_int_recipe(&cfg))?,
+        })
+    };
+    let mut records: Vec<Json> = Vec::new();
+    let mut traffic: Vec<(String, usize, Profiler)> = Vec::new();
     for slots in [1usize, 8] {
-        let mut fp32 = Engine::fp32(cfg.clone(), w.clone())?;
-        let us = per_token_us(&mut fp32, slots, steps, reps);
-        let (q, qm, mm) = step_counts(&mut fp32, slots, 8);
-        println!("{:12} {:>6} {:>14.1} {:>10} {:>10} {:>8}", "fp32", slots, us, q, qm, mm);
+        for kind in engines {
+            let mut eng = mk_engine(kind)?;
+            let us = per_token_us(&mut eng, slots, steps, reps);
+            let p = profiled_step(&mut eng, slots, 8);
+            println!(
+                "{:12} {:>6} {:>14.1} {:>10} {:>10} {:>8}",
+                kind,
+                slots,
+                us,
+                p.count(OpKind::Quantize),
+                p.count(OpKind::QuantizedMatMul),
+                p.count(OpKind::MatMul)
+            );
+            records.push(obj(&[
+                ("engine", kind.into()),
+                ("slots", slots.into()),
+                ("us_per_token", us.into()),
+                ("quantize_count", (p.count(OpKind::Quantize) as f64).into()),
+                ("dequantize_count", (p.count(OpKind::Dequantize) as f64).into()),
+                ("qmatmul_count", (p.count(OpKind::QuantizedMatMul) as f64).into()),
+                ("quantize_bytes", (p.quantize_bytes() as f64).into()),
+                ("dequantize_bytes", (p.dequantize_bytes() as f64).into()),
+                ("requant_bytes", (p.requant_bytes() as f64).into()),
+            ]));
+            traffic.push((kind.to_string(), slots, p));
+        }
+    }
 
-        let mut int8 = Engine::with_recipe(cfg.clone(), w.clone(), &loose_recipe(&cfg))?;
-        let us = per_token_us(&mut int8, slots, steps, reps);
-        let (q, qm, mm) = step_counts(&mut int8, slots, 8);
-        println!("{:12} {:>6} {:>14.1} {:>10} {:>10} {:>8}", "int8", slots, us, q, qm, mm);
+    // f32<->int conversion traffic: bytes moved through quantize /
+    // dequantize passes per token vs bytes through the fused
+    // requantize epilogues (input+output bytes of each pass).  The
+    // fused engine's q/dq columns are its two per-step boundary hops;
+    // everything else rides the rq column.
+    println!("\n== f32<->int conversion bytes per token (one step at pos=8) ==\n");
+    println!(
+        "{:12} {:>6} {:>12} {:>12} {:>12}",
+        "engine", "slots", "quant B/tok", "dequant B/tok", "requant B/tok"
+    );
+    for (kind, slots, p) in &traffic {
+        println!(
+            "{:12} {:>6} {:>12} {:>12} {:>12}",
+            kind,
+            slots,
+            p.quantize_bytes() / *slots as u64,
+            p.dequantize_bytes() / *slots as u64,
+            p.requant_bytes() / *slots as u64
+        );
     }
 
     // finished-slot compaction: rows per step must track the active
@@ -177,5 +227,17 @@ fn main() -> anyhow::Result<()> {
         "\ncounts are deterministic (dispatch structure); times are hardware-dependent.\n\
          see EXPERIMENTS.md \"Dispatch overhead\" for the before/after comparison."
     );
+
+    let doc = obj(&[
+        ("bench", "decode-requant".into()),
+        ("quick", quick.into()),
+        ("d_model", cfg.d_model.into()),
+        ("n_dec_layers", cfg.n_dec_layers.into()),
+        ("results", Json::Arr(records)),
+    ]);
+    match std::fs::write("BENCH_requant.json", format!("{doc}\n")) {
+        Ok(()) => println!("wrote BENCH_requant.json"),
+        Err(e) => eprintln!("could not write BENCH_requant.json: {e}"),
+    }
     Ok(())
 }

@@ -555,11 +555,64 @@ pub fn quantize_u8(src: &[f32], scale: f32, dst: &mut [u8]) {
 }
 
 /// Dequantize s8 -> f32 (paper eq. 6).
+///
+/// Hot on the boundary sites that stay FP32 next to a quantized
+/// producer, so it dispatches to an AVX2 lane when available and an
+/// unrolled portable loop otherwise.  Every path performs the identical
+/// `(q - zero) as f32 * scale` — an exact i32 widen, exact small-int
+/// f32 convert, and one f32 multiply — so outputs are bit-identical
+/// across tiers (pinned by `dequantize_s8_tiers_bit_identical`).
 pub fn dequantize_s8(src: &[i8], scale: f32, zero: i32, dst: &mut [f32]) {
     assert_eq!(src.len(), dst.len());
-    for (d, &q) in dst.iter_mut().zip(src) {
+    #[cfg(target_arch = "x86_64")]
+    if super::dispatch::avx2_available() && src.len() >= 8 {
+        // SAFETY: AVX2 support checked at runtime.
+        unsafe { dequantize_s8_avx2(src, scale, zero, dst) };
+        return;
+    }
+    dequantize_s8_portable(src, scale, zero, dst);
+}
+
+/// Portable tier: 4x-unrolled scalar loop (the compiler keeps the four
+/// independent convert/mul chains in flight; the rolled loop serializes
+/// on a single accumulator-free chain but still bounds-checks per
+/// element).
+fn dequantize_s8_portable(src: &[i8], scale: f32, zero: i32, dst: &mut [f32]) {
+    let n4 = src.len() / 4 * 4;
+    let (s4, st) = src.split_at(n4);
+    let (d4, dt) = dst.split_at_mut(n4);
+    for (d, s) in d4.chunks_exact_mut(4).zip(s4.chunks_exact(4)) {
+        d[0] = (s[0] as i32 - zero) as f32 * scale;
+        d[1] = (s[1] as i32 - zero) as f32 * scale;
+        d[2] = (s[2] as i32 - zero) as f32 * scale;
+        d[3] = (s[3] as i32 - zero) as f32 * scale;
+    }
+    for (d, &q) in dt.iter_mut().zip(st) {
         *d = (q as i32 - zero) as f32 * scale;
     }
+}
+
+/// AVX2 tier: widen 8 lanes s8 -> i32, subtract the zero point in the
+/// integer domain, convert, and scale with a plain multiply (no FMA, so
+/// rounding matches the scalar path exactly).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dequantize_s8_avx2(src: &[i8], scale: f32, zero: i32, dst: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n8 = src.len() / 8 * 8;
+    let zv = _mm256_set1_epi32(zero);
+    let sv = _mm256_set1_ps(scale);
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let mut i = 0;
+    while i < n8 {
+        let bytes = _mm_loadl_epi64(sp.add(i) as *const _);
+        let wide = _mm256_sub_epi32(_mm256_cvtepi8_epi32(bytes), zv);
+        let f = _mm256_mul_ps(_mm256_cvtepi32_ps(wide), sv);
+        _mm256_storeu_ps(dp.add(i), f);
+        i += 8;
+    }
+    dequantize_s8_portable(&src[n8..], scale, zero, &mut dst[n8..]);
 }
 
 #[cfg(test)]
@@ -739,6 +792,33 @@ mod tests {
                 assert!((x - y).abs() <= scale * 0.5 + 1e-6, "{x} vs {y}");
             }
         }
+    }
+
+    #[test]
+    fn dequantize_s8_tiers_bit_identical() {
+        // the dispatching entry (AVX2 when available) must match the
+        // plain scalar formula bit-for-bit for every length (tail
+        // handling included), zero point, and scale — including odd
+        // scales whose f32 product rounding the SIMD lane must replicate
+        check("dequantize_s8 tier parity", 0xDE0A, 64, |rng, case| {
+            let len = match case % 4 {
+                0 => rng.range(1, 7) as usize, // below the SIMD width
+                1 => 8,
+                _ => rng.range(1, 300) as usize,
+            };
+            let src: Vec<i8> = (0..len).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+            let zero = rng.range(0, 20) as i32 - 10;
+            let scale = (rng.f64() as f32) * 0.37 + 1e-4;
+            let mut got = vec![0f32; len];
+            dequantize_s8(&src, scale, zero, &mut got);
+            for (i, (&g, &q)) in got.iter().zip(&src).enumerate() {
+                let want = (q as i32 - zero) as f32 * scale;
+                if g.to_bits() != want.to_bits() {
+                    return Err(format!("lane {i}: {g} != {want} (len {len})"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

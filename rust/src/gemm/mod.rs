@@ -30,6 +30,7 @@ pub mod avx2;
 mod dispatch;
 mod igemm;
 mod pack;
+mod requant;
 mod sgemm;
 pub mod vnni;
 
@@ -44,6 +45,10 @@ pub use igemm::{
     PackScratch, QGemmScratch,
 };
 pub use pack::{PackedB, VNNI_LANES};
+pub use requant::{
+    igemm_requant_prepacked_s8, igemm_requant_prepacked_u8, igemm_requant_s8, igemm_requant_u8,
+    requant_epilogue_residual, requant_epilogue_s8, requant_epilogue_u8, RequantParams,
+};
 pub use sgemm::{sgemm, sgemm_threads};
 
 /// Cache-block depth of the tiled kernels, in k-quads (1024 k-rows per

@@ -1,0 +1,517 @@
+//! Fused requantize epilogues: i32 accumulator -> i8/u8 of the *next*
+//! site, with no f32 tensor in between.
+//!
+//! The paper's INT8 pipeline (§4.1) pays a Dequantize after every GEMM
+//! and a fresh QuantizeV2 before the next one.  When both sides of that
+//! boundary are quantized the round-trip is pure overhead: the i32
+//! accumulator already holds the product at a *known* scale
+//! `sa * sb_j`, so mapping it onto the next site's grid is one
+//! multiply-round per element:
+//!
+//! ```text
+//! out_q = clamp(round(acc_corrected * M_j) + zp_out)
+//! M_j   = (sa * sb_j) / s_out          (per output channel j)
+//! ```
+//!
+//! `M_j` is precomputed per site in `CompiledPlan` (per-channel when the
+//! weight uses per-channel B scales, a single entry otherwise).  Biases
+//! fold into the accumulator as integers (`round(bias_j / (sa*sb_j))`)
+//! and ReLU is exact in the integer domain (`max(acc, 0)`, since every
+//! multiplier is positive) — so GEMM -> bias -> ReLU -> requantize is
+//! one pass over the i32 tile.
+//!
+//! The epilogue itself is deterministic scalar math applied after the
+//! tiled kernels, so `igemm_requant` output is bit-identical across
+//! Portable/AVX2/VNNI and any thread count — exactly the parity
+//! contract the raw accumulator already satisfies.
+
+use super::igemm::{apply_zero_corrections, igemm_prepacked_scratch, igemm_scratch};
+use super::pack::PackedB;
+use super::{KernelChoice, PackScratch, UINT8_ZERO_POINT};
+
+/// Per-site requantize epilogue, resolved at plan-build time.
+///
+/// `mult` holds the combined multiplier `(sa * sb_j) / s_out`: one entry
+/// per output channel for per-channel weights, a single entry for
+/// per-tensor scales.  `in_zero` is the zero point the i8 A operand was
+/// quantized with (needed for the zero-point corrections), `out_zero`
+/// the target grid's zero point (ignored by the u8 variant, which pins
+/// it to 128 like every u8 operand in this crate).
+#[derive(Debug, Clone, Default)]
+pub struct RequantParams {
+    /// Zero point of the incoming i8 activation operand.
+    pub in_zero: i32,
+    /// Combined multiplier per output channel (len `n`) or per tensor
+    /// (len 1): `(a_scale * b_scale_j) / out_scale`.
+    pub mult: Vec<f32>,
+    /// Zero point of the output grid (i8 target; u8 targets use 128).
+    pub out_zero: i32,
+    /// Bias folded into accumulator units: `round(bias_j / (sa*sb_j))`.
+    pub bias: Option<Vec<i32>>,
+    /// Apply ReLU in the integer domain (after bias, before rescale).
+    pub relu: bool,
+}
+
+impl RequantParams {
+    /// Per-tensor epilogue with no bias / ReLU.
+    pub fn per_tensor(in_zero: i32, mult: f32, out_zero: i32) -> Self {
+        RequantParams {
+            in_zero,
+            mult: vec![mult],
+            out_zero,
+            bias: None,
+            relu: false,
+        }
+    }
+
+    #[inline]
+    fn mult_at(&self, j: usize) -> f32 {
+        if self.mult.len() == 1 {
+            self.mult[0]
+        } else {
+            self.mult[j]
+        }
+    }
+
+    /// The bias+ReLU+rescale core shared by every output flavor:
+    /// corrected accumulator -> integer on the output grid (pre-clamp).
+    #[inline]
+    fn requant_one(&self, j: usize, acc: i32) -> i32 {
+        let mut v = acc;
+        if let Some(b) = &self.bias {
+            v += b[j];
+        }
+        if self.relu {
+            v = v.max(0);
+        }
+        (v as f32 * self.mult_at(j)).round() as i32
+    }
+}
+
+/// Rescale a corrected i32 accumulator tile onto an i8 grid.
+pub fn requant_epilogue_s8(rows: usize, n: usize, acc: &[i32], rp: &RequantParams, out: &mut [i8]) {
+    assert_eq!(acc.len(), rows * n, "requant acc len");
+    assert_eq!(out.len(), rows * n, "requant out len");
+    if rp.mult.len() != 1 {
+        assert_eq!(rp.mult.len(), n, "requant mult len");
+    }
+    for i in 0..rows {
+        let arow = &acc[i * n..(i + 1) * n];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, (o, &a)) in orow.iter_mut().zip(arow).enumerate() {
+            let q = rp.requant_one(j, a) + rp.out_zero;
+            *o = q.clamp(-128, 127) as i8;
+        }
+    }
+}
+
+/// Rescale a corrected i32 accumulator tile onto the u8 grid (zero
+/// point fixed at 128): the B-side operand of the next dynamic GEMM or
+/// a u8 KV-cache row.
+pub fn requant_epilogue_u8(rows: usize, n: usize, acc: &[i32], rp: &RequantParams, out: &mut [u8]) {
+    assert_eq!(acc.len(), rows * n, "requant acc len");
+    assert_eq!(out.len(), rows * n, "requant out len");
+    if rp.mult.len() != 1 {
+        assert_eq!(rp.mult.len(), n, "requant mult len");
+    }
+    for i in 0..rows {
+        let arow = &acc[i * n..(i + 1) * n];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, (o, &a)) in orow.iter_mut().zip(arow).enumerate() {
+            let q = rp.requant_one(j, a) + UINT8_ZERO_POINT;
+            *o = q.clamp(0, 255) as u8;
+        }
+    }
+}
+
+/// Rescale a corrected i32 accumulator into *another integer domain*
+/// (the residual stream at the layer's activation scale), adding the
+/// i8 residual input on the way: `out = round(acc_j * mult_j) + bias_j
+/// + (x_q - x_zero)`.  The result stays i32 so integer LayerNorm can
+/// consume it without an i8 round-trip in the middle of the residual.
+pub fn requant_epilogue_residual(
+    rows: usize,
+    n: usize,
+    acc: &[i32],
+    rp: &RequantParams,
+    x_q: &[i8],
+    out: &mut [i32],
+) {
+    assert_eq!(acc.len(), rows * n, "requant acc len");
+    assert_eq!(x_q.len(), rows * n, "requant residual len");
+    assert_eq!(out.len(), rows * n, "requant out len");
+    if rp.mult.len() != 1 {
+        assert_eq!(rp.mult.len(), n, "requant mult len");
+    }
+    for i in 0..rows {
+        let arow = &acc[i * n..(i + 1) * n];
+        let xrow = &x_q[i * n..(i + 1) * n];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, ((o, &a), &x)) in orow.iter_mut().zip(arow).zip(xrow).enumerate() {
+            *o = rp.requant_one(j, a) + (x as i32 - rp.in_zero);
+        }
+    }
+}
+
+/// Compute the corrected accumulator `sum (a - za)(b - 128)` for an
+/// unpacked u8 B, sharing `ws` for panels and colsum.  Factored out so
+/// the s8/u8 fused entry points stay thin.
+#[allow(clippy::too_many_arguments)]
+fn corrected_acc(
+    choice: KernelChoice,
+    threads: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    za: i32,
+    b: &[u8],
+    acc: &mut Vec<i32>,
+    ws: &mut PackScratch,
+) {
+    acc.resize(m * n, 0);
+    igemm_scratch(choice, threads, m, k, n, a, b, acc, ws);
+    ws.colsum.clear();
+    if za != 0 {
+        ws.colsum.resize(n, 0);
+        for p in 0..k {
+            let brow = &b[p * n..(p + 1) * n];
+            for (s, &bx) in ws.colsum.iter_mut().zip(brow) {
+                *s += bx as i32;
+            }
+        }
+    }
+    apply_zero_corrections(m, k, n, a, za, &ws.colsum, acc);
+}
+
+/// Fused `igemm` + requantize: `out_s8 = requant(sum (a - za)(b - 128))`
+/// — the i32 accumulator never surfaces as f32.  `acc` is caller-owned
+/// scratch (the engine reuses its `QGemmScratch::acc`).
+#[allow(clippy::too_many_arguments)]
+pub fn igemm_requant_s8(
+    choice: KernelChoice,
+    threads: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    b: &[u8],
+    rp: &RequantParams,
+    out: &mut [i8],
+    acc: &mut Vec<i32>,
+    ws: &mut PackScratch,
+) {
+    corrected_acc(choice, threads, m, k, n, a, rp.in_zero, b, acc, ws);
+    requant_epilogue_s8(m, n, acc, rp, out);
+}
+
+/// [`igemm_requant_s8`] emitting onto the u8 grid (zero point 128).
+#[allow(clippy::too_many_arguments)]
+pub fn igemm_requant_u8(
+    choice: KernelChoice,
+    threads: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    b: &[u8],
+    rp: &RequantParams,
+    out: &mut [u8],
+    acc: &mut Vec<i32>,
+    ws: &mut PackScratch,
+) {
+    corrected_acc(choice, threads, m, k, n, a, rp.in_zero, b, acc, ws);
+    requant_epilogue_u8(m, n, acc, rp, out);
+}
+
+/// Fused requantize against a pre-packed weight panel (the hot path for
+/// every projection): the weight's precomputed `colsum` supplies the
+/// zero-point correction, `a_pack` is the caller-owned A panel.
+#[allow(clippy::too_many_arguments)]
+pub fn igemm_requant_prepacked_s8(
+    choice: KernelChoice,
+    threads: usize,
+    m: usize,
+    k: usize,
+    a: &[i8],
+    bp: &PackedB,
+    colsum: &[i32],
+    rp: &RequantParams,
+    out: &mut [i8],
+    acc: &mut Vec<i32>,
+    a_pack: &mut Vec<i32>,
+) {
+    let n = bp.n;
+    acc.resize(m * n, 0);
+    igemm_prepacked_scratch(choice, threads, m, k, a, bp, acc, a_pack);
+    apply_zero_corrections(m, k, n, a, rp.in_zero, colsum, acc);
+    requant_epilogue_s8(m, n, acc, rp, out);
+}
+
+/// [`igemm_requant_prepacked_s8`] emitting onto the u8 grid.
+#[allow(clippy::too_many_arguments)]
+pub fn igemm_requant_prepacked_u8(
+    choice: KernelChoice,
+    threads: usize,
+    m: usize,
+    k: usize,
+    a: &[i8],
+    bp: &PackedB,
+    colsum: &[i32],
+    rp: &RequantParams,
+    out: &mut [u8],
+    acc: &mut Vec<i32>,
+    a_pack: &mut Vec<i32>,
+) {
+    let n = bp.n;
+    acc.resize(m * n, 0);
+    igemm_prepacked_scratch(choice, threads, m, k, a, bp, acc, a_pack);
+    apply_zero_corrections(m, k, n, a, rp.in_zero, colsum, acc);
+    requant_epilogue_u8(m, n, acc, rp, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dispatch::{avx2_available, detect_isa, IsaLevel};
+    use super::*;
+    use crate::util::prop::{check, gen};
+    use crate::util::rng::SplitMix64;
+
+    /// Naive reference for the full fused contract: corrected product,
+    /// bias in accumulator units, integer ReLU, rescale, clamp.
+    fn requant_ref_s8(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[i8],
+        b: &[u8],
+        rp: &RequantParams,
+    ) -> Vec<i8> {
+        let mut out = vec![0i8; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i64;
+                for p in 0..k {
+                    acc += (a[i * k + p] as i64 - rp.in_zero as i64)
+                        * (b[p * n + j] as i64 - UINT8_ZERO_POINT as i64);
+                }
+                let mut v = acc as i32;
+                if let Some(bias) = &rp.bias {
+                    v += bias[j];
+                }
+                if rp.relu {
+                    v = v.max(0);
+                }
+                let q = (v as f32 * rp.mult_at(j)).round() as i32 + rp.out_zero;
+                out[i * n + j] = q.clamp(-128, 127) as i8;
+            }
+        }
+        out
+    }
+
+    fn rand_operands(rng: &mut SplitMix64, m: usize, k: usize, n: usize) -> (Vec<i8>, Vec<u8>) {
+        let a: Vec<i8> = (0..m * k)
+            .map(|_| (rng.below(256) as i32 - 128) as i8)
+            .collect();
+        let b: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+        (a, b)
+    }
+
+    /// Kernel choices runnable on this host (Auto included so the
+    /// resolved default is always in the parity set).
+    fn host_choices() -> Vec<KernelChoice> {
+        let mut v = vec![KernelChoice::Auto, KernelChoice::Portable];
+        if avx2_available() {
+            v.push(KernelChoice::Avx2);
+        }
+        if detect_isa() == IsaLevel::Avx512Vnni {
+            v.push(KernelChoice::Vnni);
+        }
+        v
+    }
+
+    /// Rotating epilogue flavors: per-tensor/per-channel multiplier,
+    /// bias on/off, ReLU on/off, affine/symmetric input zero.
+    fn case_params(rng: &mut SplitMix64, case: usize, n: usize) -> RequantParams {
+        let in_zero = if case % 2 == 0 { 0 } else { rng.range(1, 11) as i32 - 6 };
+        let mult = if case % 3 == 0 {
+            vec![0.002 + rng.f64() as f32 * 0.01]
+        } else {
+            (0..n).map(|_| 0.002 + rng.f64() as f32 * 0.01).collect()
+        };
+        let bias = if case % 4 < 2 {
+            Some((0..n).map(|_| rng.range(0, 4000) as i32 - 2000).collect())
+        } else {
+            None
+        };
+        RequantParams {
+            in_zero,
+            mult,
+            out_zero: rng.range(0, 9) as i32 - 4,
+            bias,
+            relu: case % 5 == 0,
+        }
+    }
+
+    #[test]
+    fn fused_s8_matches_reference_across_kernels_and_threads() {
+        check("igemm_requant_s8 parity", 0xF05E, 48, |rng, case| {
+            let (m, k, n) = gen::gemm_dims(rng, 48);
+            // rotate in the stripe/tail edge shapes
+            let (m, n) = match case % 4 {
+                0 => (1, n),
+                1 => (m, 33),
+                _ => (m, n),
+            };
+            let (a, b) = rand_operands(rng, m, k, n);
+            let rp = case_params(rng, case, n);
+            let want = requant_ref_s8(m, k, n, &a, &b, &rp);
+            for choice in host_choices() {
+                for threads in [1usize, 2, 4] {
+                    let mut out = vec![0i8; m * n];
+                    let mut acc = Vec::new();
+                    let mut ws = PackScratch::default();
+                    igemm_requant_s8(
+                        choice, threads, m, k, n, &a, &b, &rp, &mut out, &mut acc, &mut ws,
+                    );
+                    if out != want {
+                        return Err(format!(
+                            "mismatch {choice:?} x{threads} (m={m} k={k} n={n})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_u8_matches_s8_shifted_grid() {
+        // the u8 epilogue is the s8 one with zero pinned to 128: check
+        // it against the reference formula directly
+        check("igemm_requant_u8 parity", 0xF05F, 32, |rng, case| {
+            let (m, k, n) = gen::gemm_dims(rng, 40);
+            let (a, b) = rand_operands(rng, m, k, n);
+            let mut rp = case_params(rng, case, n);
+            rp.relu = false;
+            let mut out = vec![0u8; m * n];
+            let mut acc = Vec::new();
+            let mut ws = PackScratch::default();
+            igemm_requant_u8(
+                KernelChoice::Auto,
+                1,
+                m,
+                k,
+                n,
+                &a,
+                &b,
+                &rp,
+                &mut out,
+                &mut acc,
+                &mut ws,
+            );
+            for i in 0..m {
+                for j in 0..n {
+                    let mut accr = 0i64;
+                    for p in 0..k {
+                        accr += (a[i * k + p] as i64 - rp.in_zero as i64)
+                            * (b[p * n + j] as i64 - 128);
+                    }
+                    let mut v = accr as i32;
+                    if let Some(bias) = &rp.bias {
+                        v += bias[j];
+                    }
+                    let q = (v as f32 * rp.mult_at(j)).round() as i32 + UINT8_ZERO_POINT;
+                    if out[i * n + j] != q.clamp(0, 255) as u8 {
+                        return Err(format!("u8 mismatch at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prepacked_matches_unpacked() {
+        check("igemm_requant prepacked parity", 0xF060, 32, |rng, case| {
+            let (m, k, n) = gen::gemm_dims(rng, 48);
+            let (a, b) = rand_operands(rng, m, k, n);
+            let rp = case_params(rng, case, n);
+            let mut want = vec![0i8; m * n];
+            let mut acc = Vec::new();
+            let mut ws = PackScratch::default();
+            igemm_requant_s8(
+                KernelChoice::Auto,
+                1,
+                m,
+                k,
+                n,
+                &a,
+                &b,
+                &rp,
+                &mut want,
+                &mut acc,
+                &mut ws,
+            );
+            let bp = PackedB::pack(&b, k, n);
+            let mut colsum = vec![0i32; n];
+            for p in 0..k {
+                for j in 0..n {
+                    colsum[j] += b[p * n + j] as i32;
+                }
+            }
+            for threads in [1usize, 2, 4] {
+                let mut out = vec![0i8; m * n];
+                let mut a_pack = Vec::new();
+                igemm_requant_prepacked_s8(
+                    KernelChoice::Auto,
+                    threads,
+                    m,
+                    k,
+                    &a,
+                    &bp,
+                    &colsum,
+                    &rp,
+                    &mut out,
+                    &mut acc,
+                    &mut a_pack,
+                );
+                if out != want {
+                    return Err(format!("prepacked mismatch x{threads}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn residual_epilogue_adds_centered_input() {
+        let (m, n) = (2usize, 3usize);
+        let acc = vec![100, -200, 300, 50, 0, -50];
+        let x_q: Vec<i8> = vec![10, -10, 0, 5, 5, 5];
+        let rp = RequantParams::per_tensor(2, 0.5, 0);
+        let mut out = vec![0i32; m * n];
+        requant_epilogue_residual(m, n, &acc, &rp, &x_q, &mut out);
+        for idx in 0..m * n {
+            let want = (acc[idx] as f32 * 0.5).round() as i32 + (x_q[idx] as i32 - 2);
+            assert_eq!(out[idx], want, "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn relu_is_exact_in_integer_domain() {
+        // relu(acc) then rescale must equal rescale-then-relu on the
+        // dequantized value, because every multiplier is positive
+        let rp = RequantParams {
+            in_zero: 0,
+            mult: vec![0.01],
+            out_zero: 0,
+            bias: Some(vec![-500]),
+            relu: true,
+        };
+        let acc = vec![400i32, 600, 1500]; // biased: -100, 100, 1000
+        let mut out = vec![0i8; 3];
+        requant_epilogue_s8(1, 3, &acc, &rp, &mut out);
+        assert_eq!(out, vec![0i8, 1, 10]);
+    }
+}

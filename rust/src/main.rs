@@ -55,6 +55,17 @@
 //! forced to FP32; applied after `--int8`, so an FP32 exception always
 //! wins over a broad re-mode), `--name NAME`, `--out FILE`
 //! (default: stdout).
+//!
+//! Fully-integer decision kinds (`recipe derive`): `--fused "SEL,SEL"`
+//! (INT8 sites requantize their i32 accumulator straight onto the
+//! consumer's grid — no f32 round-trip), `--per-channel "SEL,SEL"`
+//! (per-output-channel weight scales, resolved at plan build),
+//! `--integer-ln "SEL,SEL"` / `--integer-softmax "SEL,SEL"` (flip the
+//! matching LayerNorm / softmax op sites to the i32-domain and
+//! fixed-point kernels; op sites are named `enc.0.ln1`,
+//! `dec.0.self.softmax`, ...), and `--fully-integer` (sugar for all
+//! four with `*` — when every MatMul site is also INT8, the engine
+//! compiles the fully-integer plan: one f32↔int hop per phase).
 
 use quantnmt::coordinator::server::{poisson_offsets, replay_trace, TranslateRequest};
 use quantnmt::coordinator::service::DEFAULT_TOKEN_BUDGET;
@@ -411,15 +422,44 @@ fn cmd_recipe(args: &Args) -> anyhow::Result<()> {
                     builder = builder.force_fp32(s.trim());
                 }
             }
+            // fully-integer decision kinds: the broad sugar first,
+            // then narrow glob refinements on top
+            if args.flag("fully-integer") {
+                builder = builder.fully_integer();
+            }
+            if let Some(sel) = args.get("fused") {
+                for s in sel.split(',').filter(|s| !s.trim().is_empty()) {
+                    builder = builder.requant_fused(s.trim());
+                }
+            }
+            if let Some(sel) = args.get("per-channel") {
+                for s in sel.split(',').filter(|s| !s.trim().is_empty()) {
+                    builder = builder.per_channel(s.trim());
+                }
+            }
+            if let Some(sel) = args.get("integer-ln") {
+                for s in sel.split(',').filter(|s| !s.trim().is_empty()) {
+                    builder = builder.integer_ln(s.trim());
+                }
+            }
+            if let Some(sel) = args.get("integer-softmax") {
+                for s in sel.split(',').filter(|s| !s.trim().is_empty()) {
+                    builder = builder.integer_softmax(s.trim());
+                }
+            }
             if let Some(name) = args.get("name") {
                 builder = builder.name(name);
             }
             let recipe = builder.build()?;
+            let fused = recipe.iter().filter(|rs| rs.decision.is_fused()).count();
             eprintln!(
-                "derived recipe '{}': {} int8 / {} fp32 sites (hash {:016x})",
+                "derived recipe '{}': {} int8 ({} fused) / {} fp32 sites, \
+                 {} integer op flips (hash {:016x})",
                 recipe.id(),
                 recipe.int8_site_count(),
+                fused,
                 recipe.len() - recipe.int8_site_count(),
+                recipe.ops_iter().count(),
                 recipe.content_hash()
             );
             match args.get("out") {
@@ -460,10 +500,14 @@ fn cmd_recipe(args: &Args) -> anyhow::Result<()> {
             for rs in recipe.iter() {
                 println!("  {:20} {}", rs.site, rs.decision);
             }
+            for op in recipe.ops_iter() {
+                println!("  {:20} {}", op.site, op.kind.as_str());
+            }
             println!(
-                "{} int8 / {} fp32 sites",
+                "{} int8 / {} fp32 sites, {} integer op flips",
                 recipe.int8_site_count(),
                 recipe.len() - recipe.int8_site_count(),
+                recipe.ops_iter().count(),
             );
             match recipe.validate(&sites) {
                 Ok(()) => println!("validated against the {}-site census", sites.len()),

@@ -20,12 +20,19 @@
 //! which is what makes batch-synchronous and iteration-level
 //! scheduling bit-identical per request.
 //!
-//! Softmax and LayerNorm always run in FP32 (§3 of the paper).  The
-//! profiler brackets every op family so Fig 7 can be regenerated.
+//! Softmax and LayerNorm run in FP32 on the mixed path (§3 of the
+//! paper).  When the recipe is **fully integer** — every MatMul site
+//! fused, every softmax/LayerNorm flipped — the compiled plan carries
+//! an [`IntPlan`](crate::model::plan::IntPlan) and encode / admit /
+//! decode switch to the integer orchestration: exactly one f32→i8 hop
+//! into each phase and one hop back out (the encoder memory, the
+//! logits), with everything in between chained through fused
+//! requantize epilogues.  The profiler brackets every op family so
+//! Fig 7 can be regenerated.
 
 use std::sync::Arc;
 
-use crate::gemm::QGemmScratch;
+use crate::gemm::{self, QGemmScratch};
 use crate::model::config::ModelConfig;
 use crate::model::kvcache::{self, KvCache, PageGeometry, PagePool, Precision};
 use crate::model::layers::{self, AttnScratch};
@@ -60,6 +67,32 @@ struct ActScratch {
     hbuf: Vec<f32>,
 }
 
+/// Integer-domain activation buffers for the fully-integer path: the
+/// i8 block inputs, the u8 cache-grid projections and the i32
+/// residual stream between a sublayer's epilogue and its LayerNorm.
+/// Mirrors [`ActScratch`] so the integer decode loop allocates
+/// nothing per token either.
+#[derive(Default)]
+struct IntActScratch {
+    /// current block input, i8 on the per-sublayer entry grid, `[rows, d]`
+    x_q: Vec<i8>,
+    /// second block-input buffer (the ln1 → cross rotation)
+    x2_q: Vec<i8>,
+    /// i32 residual stream (epilogue output, LayerNorm input)
+    r: Vec<i32>,
+    /// decode: q projection, i8 on the qk grid, `[n, d]`
+    q_q: Vec<i8>,
+    /// decode/admit: k/v projections on the u8 cache grids
+    k_u: Vec<u8>,
+    v_u: Vec<u8>,
+    /// decode: attention context, i8 on the o-site input grid
+    ctx_q: Vec<i8>,
+    /// ffn hidden activation, i8 on the y-site input grid, `[rows, d_ff]`
+    h_q: Vec<i8>,
+    /// admit: encoder memory re-quantized on the canonical grid M
+    mem_q: Vec<i8>,
+}
+
 /// The inference engine.  Not `Sync`: each worker stream owns one
 /// (mirroring the paper's per-process TF sessions, §5.6), but all
 /// engines for a model share one read-only [`CompiledPlan`].
@@ -70,6 +103,7 @@ pub struct Engine {
     scratch: QGemmScratch,
     attn_sc: AttnScratch,
     acts: ActScratch,
+    iacts: IntActScratch,
     /// whether the KV caches store u8 (per self-attn site plan)
     pub int8_cache: bool,
 }
@@ -420,6 +454,7 @@ impl Engine {
             scratch: QGemmScratch::default(),
             attn_sc: AttnScratch::default(),
             acts: ActScratch::default(),
+            iacts: IntActScratch::default(),
             int8_cache,
         }
     }
@@ -516,6 +551,13 @@ impl Engine {
             }
         });
 
+        if self.plan.int_plan().is_some() {
+            // fully-integer encoder: one hop in, one hop out — the
+            // returned memory is f32 on the canonical grid M
+            self.encode_int(bsz, s, &src_len);
+            return (std::mem::take(&mut self.acts.x), src_len, s);
+        }
+
         for li in 0..self.cfg.n_enc_layers {
             let lp = &self.plan.enc[li];
             layers::full_attention(
@@ -551,6 +593,76 @@ impl Engine {
         // hand the buffer out instead of copying it: embed_tokens
         // resizes and fully rewrites acts.x on the next call
         (std::mem::take(&mut self.acts.x), src_len, s)
+    }
+
+    /// Fully-integer encoder body: `acts.x` holds embed+PE on entry
+    /// and the f32 memory (dequantized off the canonical grid M) on
+    /// exit.  Exactly **one** quantize and **one** dequantize pass run
+    /// here — every interior sublayer chains GEMM → requantize
+    /// epilogue → GEMM through [`layers::attention_int`] /
+    /// [`layers::ffn_int`] / [`layers::ln_int`] without touching f32.
+    fn encode_int(&mut self, bsz: usize, s: usize, src_len: &[usize]) {
+        let plan = Arc::clone(&self.plan);
+        let ip = plan.int_plan().expect("encode_int without an int plan");
+        let d = plan.d_model;
+        let rows = bsz * s;
+        // the ONE f32 → i8 hop onto layer 0's block-input grid
+        self.iacts.x_q.resize(rows * d, 0);
+        self.profiler.time(OpKind::Quantize, || {
+            gemm::quantize_s8(
+                &self.acts.x,
+                ip.enc_entry.scale,
+                ip.enc_entry.zero,
+                &mut self.iacts.x_q,
+            );
+        });
+        self.profiler.add_quantize_bytes(5 * (rows * d) as u64);
+        for li in 0..self.cfg.n_enc_layers {
+            let lp = &plan.enc[li];
+            let il = &ip.enc[li];
+            layers::attention_int(
+                &plan,
+                &mut self.scratch,
+                &mut self.attn_sc,
+                &mut self.profiler,
+                &il.attn,
+                lp.attn,
+                &self.iacts.x_q,
+                bsz,
+                s,
+                src_len,
+                false,
+                &mut self.iacts.r,
+            );
+            layers::ln_int(&il.ln1, &mut self.profiler, d, &self.iacts.r, &mut self.iacts.x2_q);
+            layers::ffn_int(
+                &plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                &il.ffn,
+                &lp.ffn,
+                &self.iacts.x2_q,
+                rows,
+                &mut self.iacts.h_q,
+                &mut self.iacts.r,
+            );
+            // last layer's ln2 emits on the canonical memory grid M,
+            // interior layers on the next layer's block-input grid
+            layers::ln_int(&il.ln2, &mut self.profiler, d, &self.iacts.r, &mut self.iacts.x_q);
+        }
+        // the ONE i8 → f32 hop: materialize the encoder memory.
+        // Admission re-quantizes on the same grid M, so the
+        // round-trip is exact and the cache sees the chained values.
+        self.acts.x.resize(rows * d, 0.0);
+        self.profiler.time(OpKind::Dequantize, || {
+            gemm::dequantize_s8(
+                &self.iacts.x_q,
+                ip.mem_grid.scale,
+                ip.mem_grid.zero,
+                &mut self.acts.x,
+            );
+        });
+        self.profiler.add_dequantize_bytes(5 * (rows * d) as u64);
     }
 
     // ----------------------------------------------------------------
@@ -753,6 +865,10 @@ impl Engine {
             pool.pos[slot] = 0;
             pool.src_len[slot] = src_len[r];
         }
+        if self.plan.int_plan().is_some() {
+            self.admit_int(pool, memory, &slots, rows, s);
+            return Ok(slots);
+        }
         // precompute cross K/V of the memory (the paper's enc-dec
         // cache): one dense per layer over all admitted rows at once.
         // Pad rows (t >= src_len[r]) are written too, exactly like the
@@ -792,6 +908,68 @@ impl Engine {
             }
         }
         Ok(slots)
+    }
+
+    /// Fully-integer prefill: re-quantize the memory once on the
+    /// canonical grid M (exact — [`encode_int`](Self::encode_int)
+    /// dequantized off the same grid), then run every cross K/V
+    /// projection as a fused requantize straight onto the u8 cache
+    /// grids.  One quantize pass, **zero** dequantize passes.
+    fn admit_int(
+        &mut self,
+        pool: &mut DecodePool,
+        memory: &[f32],
+        slots: &[usize],
+        rows: usize,
+        s: usize,
+    ) {
+        let plan = Arc::clone(&self.plan);
+        let ip = plan.int_plan().expect("admit_int without an int plan");
+        let d = plan.d_model;
+        let h = plan.n_heads;
+        let dh = plan.d_head;
+        self.iacts.mem_q.resize(rows * s * d, 0);
+        self.profiler.time(OpKind::Quantize, || {
+            gemm::quantize_s8(memory, ip.mem_grid.scale, ip.mem_grid.zero, &mut self.iacts.mem_q);
+        });
+        self.profiler.add_quantize_bytes(5 * (rows * s * d) as u64);
+        for li in 0..self.cfg.n_dec_layers {
+            let lp = &plan.dec[li];
+            let il = &ip.dec[li];
+            layers::dense_requant_u8(
+                &plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                lp.cross.k,
+                &self.iacts.mem_q,
+                rows * s,
+                &il.cross.rq_k,
+                &mut self.iacts.k_u,
+            );
+            layers::dense_requant_u8(
+                &plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                lp.cross.v,
+                &self.iacts.mem_q,
+                rows * s,
+                &il.cross.rq_v,
+                &mut self.iacts.v_u,
+            );
+            for (r, &slot) in slots.iter().enumerate() {
+                // covered by the availability check in `admit`
+                assert!(pool.cross_k[li].ensure_positions(&mut pool.pages, slot, s));
+                assert!(pool.cross_v[li].ensure_positions(&mut pool.pages, slot, s));
+                for head in 0..h {
+                    for t in 0..s {
+                        let kr = &self.iacts.k_u[(r * s + t) * d + head * dh..][..dh];
+                        let vr = &self.iacts.v_u[(r * s + t) * d + head * dh..][..dh];
+                        pool.cross_k[li].write_row_u8(&mut pool.pages, slot, head, t, kr);
+                        pool.cross_v[li].write_row_u8(&mut pool.pages, slot, head, t, vr);
+                    }
+                }
+            }
+        }
     }
 
     /// One iteration of the pool: advance the **active set** by one
@@ -856,6 +1034,13 @@ impl Engine {
                 }
             }
         });
+        if self.plan.int_plan().is_some() {
+            self.pool_step_int(pool, active, logits);
+            for &slot in active {
+                pool.pos[slot] += 1;
+            }
+            return truncated;
+        }
         self.acts.attn.resize(n * d, 0.0);
 
         for li in 0..self.cfg.n_dec_layers {
@@ -989,6 +1174,176 @@ impl Engine {
             pool.pos[slot] += 1;
         }
         truncated
+    }
+
+    /// Fully-integer decode step body: `acts.x` holds the embedded
+    /// (+PE) token rows on entry; `logits` come back in f32.  Exactly
+    /// **one** quantize pass (token rows → layer 0's block-input
+    /// grid) and **one** dequantize pass (the logits accumulator) run
+    /// per step; every sublayer in between is a fused-epilogue chain
+    /// against the u8 KV caches.
+    fn pool_step_int(&mut self, pool: &mut DecodePool, active: &[usize], logits: &mut Vec<f32>) {
+        let plan = Arc::clone(&self.plan);
+        let ip = plan.int_plan().expect("pool_step_int without an int plan");
+        let n = active.len();
+        let d = plan.d_model;
+        let h = plan.n_heads;
+        let dh = plan.d_head;
+        // the ONE f32 → i8 hop of the step
+        self.iacts.x_q.resize(n * d, 0);
+        self.profiler.time(OpKind::Quantize, || {
+            gemm::quantize_s8(
+                &self.acts.x,
+                ip.dec_entry.scale,
+                ip.dec_entry.zero,
+                &mut self.iacts.x_q,
+            );
+        });
+        self.profiler.add_quantize_bytes(5 * (n * d) as u64);
+        self.iacts.ctx_q.resize(n * d, 0);
+
+        for li in 0..self.cfg.n_dec_layers {
+            let lp = &plan.dec[li];
+            let il = &ip.dec[li];
+            // --- self attention (incremental, fused projections) ---
+            layers::dense_requant_s8(
+                &plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                lp.self_attn.q,
+                &self.iacts.x_q,
+                n,
+                &il.self_attn.rq_q,
+                &mut self.iacts.q_q,
+            );
+            layers::dense_requant_u8(
+                &plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                lp.self_attn.k,
+                &self.iacts.x_q,
+                n,
+                &il.self_attn.rq_k,
+                &mut self.iacts.k_u,
+            );
+            layers::dense_requant_u8(
+                &plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                lp.self_attn.v,
+                &self.iacts.x_q,
+                n,
+                &il.self_attn.rq_v,
+                &mut self.iacts.v_u,
+            );
+            for (i, &slot) in active.iter().enumerate() {
+                let pos = pool.pos[slot];
+                for head in 0..h {
+                    let kr = &self.iacts.k_u[i * d + head * dh..][..dh];
+                    let vr = &self.iacts.v_u[i * d + head * dh..][..dh];
+                    pool.self_k[li].write_row_u8(&mut pool.pages, slot, head, pos, kr);
+                    pool.self_v[li].write_row_u8(&mut pool.pages, slot, head, pos, vr);
+                }
+            }
+            let pos_of = &pool.pos;
+            layers::cached_attention_int(
+                &plan,
+                &mut self.attn_sc,
+                &mut self.profiler,
+                &il.self_attn,
+                lp.self_attn.qk,
+                lp.self_attn.pv,
+                &self.iacts.q_q,
+                &pool.self_k[li],
+                &pool.self_v[li],
+                &pool.pages,
+                active,
+                |slot| pos_of[slot] + 1,
+                &mut self.iacts.ctx_q,
+            );
+            layers::dense_requant_residual(
+                &plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                lp.self_attn.o,
+                &self.iacts.ctx_q,
+                il.self_attn.ctx_zero,
+                n,
+                &il.self_attn.rq_o,
+                &self.iacts.x_q,
+                &mut self.iacts.r,
+            );
+            layers::ln_int(&il.ln1, &mut self.profiler, d, &self.iacts.r, &mut self.iacts.x2_q);
+
+            // --- cross attention over the cached memory K/V ---
+            layers::dense_requant_s8(
+                &plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                lp.cross.q,
+                &self.iacts.x2_q,
+                n,
+                &il.cross.rq_q,
+                &mut self.iacts.q_q,
+            );
+            let src_len = &pool.src_len;
+            let src_cap = pool.src_cap;
+            layers::cached_attention_int(
+                &plan,
+                &mut self.attn_sc,
+                &mut self.profiler,
+                &il.cross,
+                lp.cross.qk,
+                lp.cross.pv,
+                &self.iacts.q_q,
+                &pool.cross_k[li],
+                &pool.cross_v[li],
+                &pool.pages,
+                active,
+                |slot| src_len[slot].min(src_cap),
+                &mut self.iacts.ctx_q,
+            );
+            layers::dense_requant_residual(
+                &plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                lp.cross.o,
+                &self.iacts.ctx_q,
+                il.cross.ctx_zero,
+                n,
+                &il.cross.rq_o,
+                &self.iacts.x2_q,
+                &mut self.iacts.r,
+            );
+            layers::ln_int(&il.ln2, &mut self.profiler, d, &self.iacts.r, &mut self.iacts.x_q);
+
+            // --- ffn ---
+            layers::ffn_int(
+                &plan,
+                &mut self.scratch,
+                &mut self.profiler,
+                &il.ffn,
+                &lp.ffn,
+                &self.iacts.x_q,
+                n,
+                &mut self.iacts.h_q,
+                &mut self.iacts.r,
+            );
+            // last layer's ln3 emits on the logits-input grid
+            layers::ln_int(&il.ln3, &mut self.profiler, d, &self.iacts.r, &mut self.iacts.x_q);
+        }
+        // logits: corrected int GEMM, then the step's ONE i32 → f32 hop
+        layers::dense_dequant_acc(
+            &plan,
+            &mut self.scratch,
+            &mut self.profiler,
+            plan.logits,
+            &self.iacts.x_q,
+            ip.logits_zero,
+            n,
+            &ip.logits_dequant,
+            logits,
+        );
     }
 
     /// Greedy-translate a padded batch. Returns token rows (PAD-free,

@@ -467,6 +467,40 @@ impl KvCache {
         }
     }
 
+    /// Write one already-quantized u8 row at `(slot, head, t)` — the
+    /// fully-integer admit/decode path, whose fused epilogues emit rows
+    /// directly on the cache grid (no f32, no quantize here).  Same
+    /// mapping and copy-on-write contract as [`write_row`](Self::write_row).
+    pub fn write_row_u8(
+        &mut self,
+        pool: &mut PagePool,
+        slot: usize,
+        head: usize,
+        t: usize,
+        values: &[u8],
+    ) {
+        let dh = self.geom.d_head;
+        let pp = self.geom.page_positions;
+        assert_eq!(values.len(), dh, "write_row_u8: row width");
+        assert!(t < self.positions, "write_row_u8: position {t} oob");
+        assert!(
+            matches!(self.precision, Precision::U8),
+            "write_row_u8 on an f32 cache"
+        );
+        let pi = t / pp;
+        let mut page = *self.tables[slot]
+            .get(pi)
+            .expect("write_row_u8: page not mapped (ensure_positions first)");
+        if pool.refcount(self.precision, page) > 1 {
+            page = pool.cow(self.precision, page).expect(
+                "page pool exhausted during copy-on-write (beam pools are sized at full budget)",
+            );
+            self.tables[slot][pi] = page;
+        }
+        let off = self.elem_off(page, head, t % pp);
+        pool.u8_data[off..off + dh].copy_from_slice(values);
+    }
+
     /// Read one row at `(slot, head, t)` as f32 (dequantizing if u8).
     pub fn read_row_into(
         &self,

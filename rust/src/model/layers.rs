@@ -20,12 +20,19 @@
 //! quantization makes the blocked form bit-identical to the per-head
 //! form (asserted end-to-end by `tests/golden_parity.rs`).
 //!
-//! Softmax and LayerNorm always run in FP32 (§3 of the paper).
+//! Softmax and LayerNorm run in FP32 (§3 of the paper) on the classic
+//! path; under a fully-integer plan ([`crate::model::plan::IntPlan`])
+//! the `*_int` variants below keep the whole layer chain in the
+//! integer domain — GEMM → fused requantize epilogue → fixed-point
+//! softmax / i32 LayerNorm → GEMM — with no f32 tensor in between.
 
-use crate::gemm::{self, QGemmScratch, UINT8_ZERO_POINT};
+use crate::gemm::{self, QGemmScratch, RequantParams, UINT8_ZERO_POINT};
 use crate::model::kvcache::{KvCache, PagePool};
-use crate::model::plan::{AttnPlan, CompiledPlan, FfnPlan, LnPlan, SiteId, WeightStore};
+use crate::model::plan::{
+    AttnPlan, CompiledPlan, FfnPlan, IntAttn, IntFfn, LnPlan, QWeight, SiteId, WeightStore,
+};
 use crate::model::profiler::{OpKind, Profiler};
+use crate::tensor::iops::{self, LnInt, MASKED};
 use crate::tensor::ops;
 
 /// Reusable buffers for the head-batched attention path and the
@@ -55,6 +62,23 @@ pub struct AttnScratch {
     p_q8: Vec<i8>,
     /// decode path: per-head i32 PV accumulator (`dh` wide)
     dec_acc: Vec<i32>,
+    /// ---- fully-integer path buffers ----
+    /// projected q (i8) / k,v (u8) activations, `[rows, d]`
+    q_i: Vec<i8>,
+    k_u: Vec<u8>,
+    v_u: Vec<u8>,
+    /// head-gathered integer blocks (layouts mirror qh/kht/vh)
+    qh_i: Vec<i8>,
+    kht_u: Vec<u8>,
+    vh_u: Vec<u8>,
+    /// blocked i32 scores and i8 probabilities, `[B*H, Tq, Tk]`
+    scores_i: Vec<i32>,
+    probs_i: Vec<i8>,
+    /// blocked i8 PV output `[B*H, Tq, dh]` and scattered context
+    pv_i: Vec<i8>,
+    ctx_i: Vec<i8>,
+    /// fixed-point softmax row scratch
+    e_buf: Vec<i32>,
 }
 
 /// `out[rows, n] = x[rows, k] @ W[site]` with per-site precision
@@ -85,6 +109,7 @@ pub fn dense(
             prof.time(OpKind::Quantize, || {
                 gemm::quantize_s8(x, a_scale, a_zero, &mut sc.a_q);
             });
+            prof.add_quantize_bytes(5 * (rows * k) as u64);
             sc.acc.resize(rows * n, 0);
             prof.time_site(OpKind::QuantizedMatMul, site, || {
                 if let Some(bp) = &qw.packed {
@@ -117,12 +142,23 @@ pub fn dense(
                 // never recomputed per call
                 gemm::apply_zero_corrections(rows, k, n, &sc.a_q, a_zero, &qw.colsum, &mut sc.acc);
             });
-            let s = a_scale * qw.scale;
-            prof.time(OpKind::Dequantize, || {
-                for (o, &acc) in out.iter_mut().zip(sc.acc.iter()) {
-                    *o = acc as f32 * s;
+            prof.time(OpKind::Dequantize, || match &qw.col_scales {
+                // per-channel B scales: per-column dequant multiplier
+                Some(cs) => {
+                    for (orow, arow) in out.chunks_exact_mut(n).zip(sc.acc.chunks_exact(n)) {
+                        for ((o, &acc), &sb) in orow.iter_mut().zip(arow).zip(cs) {
+                            *o = acc as f32 * (a_scale * sb);
+                        }
+                    }
+                }
+                None => {
+                    let s = a_scale * qw.scale;
+                    for (o, &acc) in out.iter_mut().zip(sc.acc.iter()) {
+                        *o = acc as f32 * s;
+                    }
                 }
             });
+            prof.add_dequantize_bytes(8 * (rows * n) as u64);
         }
         (None, WeightStore::F32(wdata)) => {
             prof.time_site(OpKind::MatMul, site, || {
@@ -199,6 +235,7 @@ pub fn full_attention(
             gemm::quantize_s8(&sc.qh, a_scale, a_zero, &mut gemm_sc.a_q);
             gemm::quantize_u8(&sc.kht, b_scale, &mut gemm_sc.b_q);
         });
+        prof.add_quantize_bytes(5 * (sc.qh.len() + sc.kht.len()) as u64);
         gemm_sc.acc.resize(blocks * tq * tk, 0);
         prof.time_site(OpKind::QuantizedMatMul, attn.qk, || {
             let (a_q, b_q, acc, pack) = (
@@ -226,6 +263,7 @@ pub fn full_attention(
                 *o = acc as f32 * s;
             }
         });
+        prof.add_dequantize_bytes(8 * sc.scores.len() as u64);
     } else {
         prof.time_site(OpKind::MatMul, attn.qk, || {
             for blk in 0..blocks {
@@ -274,6 +312,7 @@ pub fn full_attention(
             gemm::quantize_s8(&sc.scores, a_scale, a_zero, &mut gemm_sc.a_q);
             gemm::quantize_u8(&sc.vh, b_scale, &mut gemm_sc.b_q);
         });
+        prof.add_quantize_bytes(5 * (sc.scores.len() + sc.vh.len()) as u64);
         gemm_sc.acc.resize(blocks * tq * dh, 0);
         prof.time_site(OpKind::QuantizedMatMul, attn.pv, || {
             let (a_q, b_q, acc, pack) = (
@@ -301,6 +340,7 @@ pub fn full_attention(
                 *o = acc as f32 * s;
             }
         });
+        prof.add_dequantize_bytes(8 * sc.pv.len() as u64);
     } else {
         prof.time_site(OpKind::MatMul, attn.pv, || {
             for blk in 0..blocks {
@@ -410,6 +450,7 @@ pub fn cached_attention(
         prof.time(OpKind::Quantize, || {
             gemm::quantize_s8(q, sq.a.scale, sq.a.zero, &mut sc.q_q8);
         });
+        prof.add_quantize_bytes(5 * q.len() as u64);
     }
 
     for (i, &slot) in active.iter().enumerate() {
@@ -479,6 +520,7 @@ pub fn cached_attention(
             prof.time(OpKind::Quantize, || {
                 gemm::quantize_s8(&sc.dec_scores, sq.a.scale, sq.a.zero, &mut sc.p_q8);
             });
+            prof.add_quantize_bytes(5 * sc.dec_scores.len() as u64);
         }
         for head in 0..h {
             let ctx = &mut out[i * d + head * dh..][..dh];
@@ -537,4 +579,425 @@ pub fn cached_attention(
 #[inline]
 fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+// ---------------------------------------------------------------------------
+// Fully-integer layer kernels (dispatch under CompiledPlan::int_plan()).
+// ---------------------------------------------------------------------------
+
+/// The u8 weight const of a site (fully-integer plans only).
+fn site_qweight(plan: &CompiledPlan, site: SiteId) -> (&QWeight, usize, usize) {
+    let w = plan.site(site).weight.as_ref().expect("weight site");
+    match &w.store {
+        WeightStore::Quant(qw) => (qw, w.k, w.n),
+        WeightStore::F32(_) => unreachable!("int path requires quantized weights"),
+    }
+}
+
+/// Corrected i32 accumulator of `a_q[rows, k] @ W[site]` into `sc.acc`
+/// (prepacked panel when the ISA packs, unpacked u8 otherwise — same
+/// dispatch as [`dense`]).
+fn site_acc(
+    plan: &CompiledPlan,
+    sc: &mut QGemmScratch,
+    prof: &mut Profiler,
+    site: SiteId,
+    a_q: &[i8],
+    a_zero: i32,
+    rows: usize,
+) -> usize {
+    let (qw, k, n) = site_qweight(plan, site);
+    assert_eq!(a_q.len(), rows * k, "site_acc {}: a len", plan.site_name(site));
+    prof.add_site_rows(site, rows);
+    sc.acc.resize(rows * n, 0);
+    prof.time_site(OpKind::QuantizedMatMul, site, || {
+        if let Some(bp) = &qw.packed {
+            gemm::igemm_prepacked_scratch(
+                gemm::KernelChoice::Auto,
+                0,
+                rows,
+                k,
+                a_q,
+                bp,
+                &mut sc.acc,
+                &mut sc.pack.a_pack,
+            );
+        } else {
+            gemm::igemm_scratch(
+                gemm::KernelChoice::Auto,
+                0,
+                rows,
+                k,
+                n,
+                a_q,
+                &qw.data,
+                &mut sc.acc,
+                &mut sc.pack,
+            );
+        }
+        gemm::apply_zero_corrections(rows, k, n, a_q, a_zero, &qw.colsum, &mut sc.acc);
+    });
+    n
+}
+
+/// `out_q[rows, n] = requant(a_q[rows, k] @ W[site])` onto an i8 grid:
+/// the fused projection of the integer path (no f32, no i32 surface).
+pub fn dense_requant_s8(
+    plan: &CompiledPlan,
+    sc: &mut QGemmScratch,
+    prof: &mut Profiler,
+    site: SiteId,
+    a_q: &[i8],
+    rows: usize,
+    rp: &RequantParams,
+    out_q: &mut Vec<i8>,
+) {
+    let n = site_acc(plan, sc, prof, site, a_q, rp.in_zero, rows);
+    out_q.resize(rows * n, 0);
+    gemm::requant_epilogue_s8(rows, n, &sc.acc, rp, out_q);
+    prof.add_requant_bytes(5 * (rows * n) as u64);
+}
+
+/// [`dense_requant_s8`] emitting onto the u8 grid (zero point 128) —
+/// the k/v projections whose output feeds a dynamic GEMM or KV cache.
+pub fn dense_requant_u8(
+    plan: &CompiledPlan,
+    sc: &mut QGemmScratch,
+    prof: &mut Profiler,
+    site: SiteId,
+    a_q: &[i8],
+    rows: usize,
+    rp: &RequantParams,
+    out_q: &mut Vec<u8>,
+) {
+    let n = site_acc(plan, sc, prof, site, a_q, rp.in_zero, rows);
+    out_q.resize(rows * n, 0);
+    gemm::requant_epilogue_u8(rows, n, &sc.acc, rp, out_q);
+    prof.add_requant_bytes(5 * (rows * n) as u64);
+}
+
+/// Residual-producing projection: `out[rows, n] = round(acc * mult) +
+/// bias + (x_q - x_zero)` where `acc` is the corrected product of
+/// `a_q @ W[site]`.  `a_zero` is the A operand's grid zero (the
+/// zero-point correction), `rp.in_zero` the *residual* grid zero — the
+/// two grids differ (context grid vs block-input grid), which is why
+/// this composes the correction and the residual epilogue explicitly
+/// instead of reusing the fused prepacked entry.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_requant_residual(
+    plan: &CompiledPlan,
+    sc: &mut QGemmScratch,
+    prof: &mut Profiler,
+    site: SiteId,
+    a_q: &[i8],
+    a_zero: i32,
+    rows: usize,
+    rp: &RequantParams,
+    x_q: &[i8],
+    out: &mut Vec<i32>,
+) {
+    let n = site_acc(plan, sc, prof, site, a_q, a_zero, rows);
+    out.resize(rows * n, 0);
+    gemm::requant_epilogue_residual(rows, n, &sc.acc, rp, x_q, out);
+    prof.add_requant_bytes(9 * (rows * n) as u64);
+}
+
+/// Logits head of the fully-integer path: corrected int GEMM at
+/// `site`, then the decode step's single i32 → f32 hop — `out[i, j] =
+/// acc[i, j] * dq[j]` with `dq` per-channel (len `n`) or broadcast
+/// (len 1).  Logits never requantize to i8: they feed argmax / beam
+/// scoring in f32, so this is where the integer chain ends.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_dequant_acc(
+    plan: &CompiledPlan,
+    sc: &mut QGemmScratch,
+    prof: &mut Profiler,
+    site: SiteId,
+    a_q: &[i8],
+    a_zero: i32,
+    rows: usize,
+    dq: &[f32],
+    out: &mut Vec<f32>,
+) {
+    let n = site_acc(plan, sc, prof, site, a_q, a_zero, rows);
+    debug_assert!(dq.len() == n || dq.len() == 1, "dequant vector arity");
+    out.resize(rows * n, 0.0);
+    let t0 = std::time::Instant::now();
+    for i in 0..rows {
+        let acc = &sc.acc[i * n..(i + 1) * n];
+        let o = &mut out[i * n..(i + 1) * n];
+        if dq.len() == 1 {
+            let m = dq[0];
+            for (oj, &aj) in o.iter_mut().zip(acc) {
+                *oj = aj as f32 * m;
+            }
+        } else {
+            for ((oj, &aj), &m) in o.iter_mut().zip(acc).zip(dq) {
+                *oj = aj as f32 * m;
+            }
+        }
+    }
+    prof.add(OpKind::Dequantize, t0.elapsed());
+    prof.add_dequantize_bytes(8 * (rows * n) as u64);
+}
+
+/// Integer LayerNorm over the i32 residual stream, emitting i8 on the
+/// next sublayer's entry grid.
+pub fn ln_int(lni: &LnInt, prof: &mut Profiler, d: usize, r: &[i32], out: &mut Vec<i8>) {
+    out.resize(r.len(), 0);
+    let t0 = std::time::Instant::now();
+    iops::integer_layer_norm_rows(r, d, lni, out);
+    prof.add(OpKind::LayerNorm, t0.elapsed());
+}
+
+/// Fully-integer FFN block: fused h projection (bias + ReLU in the
+/// epilogue) then the y projection straight into the i32 residual
+/// stream (`out_r = requant(h @ W2) + b2' + (x_q - x_zero)`).
+#[allow(clippy::too_many_arguments)]
+pub fn ffn_int(
+    plan: &CompiledPlan,
+    sc: &mut QGemmScratch,
+    prof: &mut Profiler,
+    iffn: &IntFfn,
+    f: &FfnPlan,
+    x_q: &[i8],
+    rows: usize,
+    h_q: &mut Vec<i8>,
+    out_r: &mut Vec<i32>,
+) {
+    dense_requant_s8(plan, sc, prof, f.h, x_q, rows, &iffn.rq_h, h_q);
+    dense_requant_residual(plan, sc, prof, f.y, h_q, iffn.h_zero, rows, &iffn.rq_y, x_q, out_r);
+}
+
+/// Fully-integer head-batched self-attention (encoder / teacher
+/// forcing): the blocked structure of [`full_attention`] with every
+/// stage in the integer domain.  `x_q: [B*Tq, d]` i8 on the
+/// block-input grid; the result is the i32 residual stream
+/// `out_r = requant(ctx @ Wo) + (x_q - x_zero)`.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_int(
+    plan: &CompiledPlan,
+    gemm_sc: &mut QGemmScratch,
+    sc: &mut AttnScratch,
+    prof: &mut Profiler,
+    ia: &IntAttn,
+    attn: AttnPlan,
+    x_q: &[i8],
+    bsz: usize,
+    tq: usize,
+    kv_len: &[usize],
+    causal: bool,
+    out_r: &mut Vec<i32>,
+) {
+    let d = plan.d_model;
+    let h = plan.n_heads;
+    let dh = plan.d_head;
+    let tk = tq;
+    // fused projections: q -> i8 on the qk grid, k/v -> u8 cache grids
+    dense_requant_s8(plan, gemm_sc, prof, attn.q, x_q, bsz * tq, &ia.rq_q, &mut sc.q_i);
+    dense_requant_u8(plan, gemm_sc, prof, attn.k, x_q, bsz * tk, &ia.rq_k, &mut sc.k_u);
+    dense_requant_u8(plan, gemm_sc, prof, attn.v, x_q, bsz * tk, &ia.rq_v, &mut sc.v_u);
+
+    // gather heads once into contiguous integer blocks
+    let blocks = bsz * h;
+    sc.qh_i.resize(blocks * tq * dh, 0);
+    sc.kht_u.resize(blocks * dh * tk, 0);
+    sc.vh_u.resize(blocks * tk * dh, 0);
+    for b in 0..bsz {
+        for head in 0..h {
+            let blk = b * h + head;
+            let qb = blk * tq * dh;
+            for t in 0..tq {
+                let row = &sc.q_i[(b * tq + t) * d + head * dh..][..dh];
+                sc.qh_i[qb + t * dh..qb + (t + 1) * dh].copy_from_slice(row);
+            }
+            let kb = blk * dh * tk;
+            let vb = blk * tk * dh;
+            for t in 0..tk {
+                let krow = &sc.k_u[(b * tk + t) * d + head * dh..][..dh];
+                for c in 0..dh {
+                    sc.kht_u[kb + c * tk + t] = krow[c];
+                }
+                sc.vh_u[vb + t * dh..vb + (t + 1) * dh]
+                    .copy_from_slice(&sc.v_u[(b * tk + t) * d + head * dh..][..dh]);
+            }
+        }
+    }
+
+    // scores stay i32: corrected head-blocked products
+    sc.scores_i.resize(blocks * tq * tk, 0);
+    prof.time_site(OpKind::QuantizedMatMul, attn.qk, || {
+        let (scores, pack) = (&mut sc.scores_i, &mut gemm_sc.pack);
+        for blk in 0..blocks {
+            gemm::igemm_corrected_scratch(
+                tq,
+                dh,
+                tk,
+                &sc.qh_i[blk * tq * dh..][..tq * dh],
+                ia.qk_zero,
+                &sc.kht_u[blk * dh * tk..][..dh * tk],
+                &mut scores[blk * tq * tk..][..tq * tk],
+                pack,
+            );
+        }
+    });
+    prof.add_site_rows(attn.qk, blocks * tq);
+
+    // mask in the integer domain, then fixed-point softmax
+    sc.probs_i.resize(blocks * tq * tk, 0);
+    prof.time(OpKind::Softmax, || {
+        for b in 0..bsz {
+            let klen = kv_len[b].min(tk);
+            for head in 0..h {
+                let base = (b * h + head) * tq * tk;
+                for i in 0..tq {
+                    let row = &mut sc.scores_i[base + i * tk..][..tk];
+                    for (j, x) in row.iter_mut().enumerate() {
+                        if j >= klen || (causal && j > i) {
+                            *x = MASKED;
+                        }
+                    }
+                }
+            }
+        }
+        if !sc.scores_i.is_empty() {
+            iops::integer_softmax_rows(&sc.scores_i, tk, &ia.sm, &mut sc.e_buf, &mut sc.probs_i);
+        }
+    });
+
+    // ctx = probs @ vh (prob zero is 0), requantized onto the o grid
+    gemm_sc.acc.resize(blocks * tq * dh, 0);
+    prof.time_site(OpKind::QuantizedMatMul, attn.pv, || {
+        let (acc, pack) = (&mut gemm_sc.acc, &mut gemm_sc.pack);
+        for blk in 0..blocks {
+            gemm::igemm_corrected_scratch(
+                tq,
+                tk,
+                dh,
+                &sc.probs_i[blk * tq * tk..][..tq * tk],
+                0,
+                &sc.vh_u[blk * tk * dh..][..tk * dh],
+                &mut acc[blk * tq * dh..][..tq * dh],
+                pack,
+            );
+        }
+    });
+    prof.add_site_rows(attn.pv, blocks * tq);
+    sc.pv_i.resize(blocks * tq * dh, 0);
+    gemm::requant_epilogue_s8(blocks * tq, dh, &gemm_sc.acc, &ia.rq_ctx, &mut sc.pv_i);
+    prof.add_requant_bytes(5 * sc.pv_i.len() as u64);
+
+    // scatter heads back to [rows, d]
+    sc.ctx_i.resize(bsz * tq * d, 0);
+    for b in 0..bsz {
+        for head in 0..h {
+            let blk = b * h + head;
+            for t in 0..tq {
+                sc.ctx_i[(b * tq + t) * d + head * dh..][..dh]
+                    .copy_from_slice(&sc.pv_i[(blk * tq + t) * dh..][..dh]);
+            }
+        }
+    }
+    dense_requant_residual(
+        plan,
+        gemm_sc,
+        prof,
+        attn.o,
+        &sc.ctx_i,
+        ia.ctx_zero,
+        bsz * tq,
+        &ia.rq_o,
+        x_q,
+        out_r,
+    );
+}
+
+/// Fully-integer single-query attention against u8 paged caches: the
+/// integer-dot structure of [`cached_attention`] with the fixed-point
+/// softmax and a fused requantize of the context onto the o-site grid.
+/// `q_q: [active, d]` i8 already on the qk grid (the engine's fused q
+/// projection emits it directly); `out_q` receives the i8 context —
+/// the o projection (and its residual) runs over all active rows at
+/// once in the caller.
+#[allow(clippy::too_many_arguments)]
+pub fn cached_attention_int(
+    plan: &CompiledPlan,
+    sc: &mut AttnScratch,
+    prof: &mut Profiler,
+    ia: &IntAttn,
+    qk: SiteId,
+    pv: SiteId,
+    q_q: &[i8],
+    kcache: &KvCache,
+    vcache: &KvCache,
+    pages: &PagePool,
+    active: &[usize],
+    klen_of: impl Fn(usize) -> usize,
+    out_q: &mut [i8],
+) {
+    let d = plan.d_model;
+    let h = plan.n_heads;
+    let dh = plan.d_head;
+    debug_assert_eq!(q_q.len(), active.len() * d);
+    debug_assert_eq!(out_q.len(), active.len() * d);
+    debug_assert!(kcache.is_quantized() && vcache.is_quantized());
+
+    for (i, &slot) in active.iter().enumerate() {
+        let klen = klen_of(slot);
+        if klen == 0 {
+            out_q[i * d..(i + 1) * d].fill(0);
+            continue;
+        }
+        sc.scores_i.resize(h * klen, 0);
+        // ---- scores = q . k_t (i32), per head against the cache ----
+        for head in 0..h {
+            let qrow = &q_q[i * d + head * dh..][..dh];
+            let scores = &mut sc.scores_i[head * klen..(head + 1) * klen];
+            prof.time_site(OpKind::QuantizedMatMul, qk, || {
+                kcache.for_each_run_u8(pages, slot, head, klen, |t0, rows| {
+                    for (j, krow) in rows.chunks_exact(dh).enumerate() {
+                        let mut acc = 0i32;
+                        for c in 0..dh {
+                            acc += (qrow[c] as i32 - ia.qk_zero)
+                                * (krow[c] as i32 - UINT8_ZERO_POINT);
+                        }
+                        scores[t0 + j] = acc;
+                    }
+                });
+            });
+        }
+        prof.add_site_rows(qk, h);
+        // ---- fixed-point softmax over all heads' rows at once ----
+        sc.probs_i.resize(h * klen, 0);
+        prof.time(OpKind::Softmax, || {
+            iops::integer_softmax_rows(
+                &sc.scores_i[..h * klen],
+                klen,
+                &ia.sm,
+                &mut sc.e_buf,
+                &mut sc.probs_i[..h * klen],
+            );
+        });
+        // ---- ctx = probs @ v, requantized onto the o grid ----
+        for head in 0..h {
+            let probs = &sc.probs_i[head * klen..(head + 1) * klen];
+            let ctx = &mut out_q[i * d + head * dh..][..dh];
+            prof.time_site(OpKind::QuantizedMatMul, pv, || {
+                sc.dec_acc.resize(dh, 0);
+                sc.dec_acc.fill(0);
+                let acc = &mut sc.dec_acc;
+                vcache.for_each_run_u8(pages, slot, head, klen, |t0, rows| {
+                    for (j, vrow) in rows.chunks_exact(dh).enumerate() {
+                        let pq = probs[t0 + j] as i32;
+                        for c in 0..dh {
+                            acc[c] += pq * (vrow[c] as i32 - UINT8_ZERO_POINT);
+                        }
+                    }
+                });
+                gemm::requant_epilogue_s8(1, dh, acc, &ia.rq_ctx, ctx);
+            });
+        }
+        prof.add_site_rows(pv, h);
+        prof.add_requant_bytes(5 * d as u64);
+    }
 }

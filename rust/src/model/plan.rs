@@ -35,12 +35,19 @@
 //! only scratch + profiler state), mirroring §5.6's multi-stream
 //! serving over one immutable model.
 
-use crate::gemm::{self, PackedB};
+use crate::gemm::{self, PackedB, RequantParams, UINT8_ZERO_POINT};
 use crate::graph::ir::{transformer_graph, GraphConfig};
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
 use crate::quant::calibrate::SiteQuant;
-use crate::quant::recipe::{self, Recipe};
+use crate::quant::recipe::{self, OpDecisionKind, Recipe};
+use crate::quant::{per_channel_scales, QuantParams};
+use crate::tensor::iops::{IntSoftmax, LnInt, PROB_SCALE};
+
+/// LayerNorm epsilon shared by the f32 and integer kernels (the
+/// integer plan folds it into [`LnInt::new`] so both paths normalize
+/// against the same variance floor).
+pub const LN_EPS: f32 = 1e-6;
 
 /// Dense interned id of one MatMul site (index into the census).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -130,8 +137,24 @@ pub struct QWeight {
     pub data: Vec<u8>,
     pub packed: Option<PackedB>,
     pub scale: f32,
+    /// Per-output-channel B scales (len `n`) when the site's recipe
+    /// decision asks for per-channel weights; `None` keeps the single
+    /// per-tensor `scale`.  The fused requantize multipliers and the
+    /// f32 dequantize both honor this.
+    pub col_scales: Option<Vec<f32>>,
     /// column sums over k (zero-point correction when `a_zero != 0`)
     pub colsum: Vec<i32>,
+}
+
+impl QWeight {
+    /// The B scale of output channel `j` (per-channel or broadcast).
+    #[inline]
+    pub fn scale_at(&self, j: usize) -> f32 {
+        match &self.col_scales {
+            Some(cs) => cs[j],
+            None => self.scale,
+        }
+    }
 }
 
 /// Resolved weight storage for a weight-MatMul site: exactly one of
@@ -244,6 +267,124 @@ impl KvSpec {
     }
 }
 
+/// One attention block's fused integer dispatch: every multiplier the
+/// GEMM->epilogue->GEMM chain needs, resolved at build time.
+///
+/// Grid chaining (per-site "a" params are the canonical activation
+/// grids): the block input lives on the q-site's grid; the q
+/// projection requantizes onto the qk-site's a grid; k/v requantize
+/// onto the qk/pv `b_scale` u8 grids (= the KV-cache storage grids of
+/// [`KvSpec`]); the score accumulator feeds the fixed-point softmax;
+/// probabilities are i8 at [`PROB_SCALE`]; the pv product requantizes
+/// onto the o-site's a grid; and the o projection lands back on the
+/// block-input grid as an i32 residual.
+#[derive(Debug, Clone)]
+pub struct IntAttn {
+    /// q projection -> i8 on the qk-site a grid.
+    pub rq_q: RequantParams,
+    /// k projection -> u8 on the qk-site `b_scale` grid (cache grid).
+    pub rq_k: RequantParams,
+    /// v projection -> u8 on the pv-site `b_scale` grid (cache grid).
+    pub rq_v: RequantParams,
+    /// Zero point of the q operand (qk zero-point correction).
+    pub qk_zero: i32,
+    /// Fixed-point softmax constant: `qk_a_scale * qk_b_scale /
+    /// sqrt(d_head)` — the 1/sqrt(dh) logit scaling folds in here so
+    /// the score accumulator is consumed raw.
+    pub sm: IntSoftmax,
+    /// pv product -> i8 context on the o-site a grid (prob zero is 0,
+    /// so `in_zero` doubles as the pv correction zero).
+    pub rq_ctx: RequantParams,
+    /// Zero point of the context operand (o-projection correction).
+    pub ctx_zero: i32,
+    /// o projection -> i32 residual on the block-input grid
+    /// (`in_zero` = block-input zero, consumed by
+    /// [`gemm::requant_epilogue_residual`]).
+    pub rq_o: RequantParams,
+}
+
+/// One FFN block's fused integer dispatch: h folds bias+ReLU into the
+/// epilogue, y lands on the block-input grid as an i32 residual.
+#[derive(Debug, Clone)]
+pub struct IntFfn {
+    /// h projection (bias b1 folded, integer ReLU) -> i8 on the
+    /// y-site a grid.
+    pub rq_h: RequantParams,
+    /// Zero point of the hidden operand (y-projection correction).
+    pub h_zero: i32,
+    /// y projection (bias b2 folded) -> i32 residual on the
+    /// block-input grid.
+    pub rq_y: RequantParams,
+}
+
+/// One encoder layer's integer dispatch.  `x_zero`/`x2_zero` are the
+/// sublayer-entry grid zeros (residual reconstruction); each `LnInt`
+/// consumes the i32 residual at the entry scale and emits i8 on the
+/// next sublayer's entry grid.
+#[derive(Debug, Clone)]
+pub struct IntEncLayer {
+    pub x_zero: i32,
+    pub attn: IntAttn,
+    pub ln1: LnInt,
+    pub x2_zero: i32,
+    pub ffn: IntFfn,
+    pub ln2: LnInt,
+}
+
+/// One decoder layer's integer dispatch (self-attn -> ln1 -> cross ->
+/// ln2 -> ffn -> ln3).  The cross block's k/v requant params consume
+/// the canonical memory grid ([`IntPlan::mem_grid`]) — they are used
+/// once per admitted sequence to fill the cross KV cache.
+#[derive(Debug, Clone)]
+pub struct IntDecLayer {
+    pub x_zero: i32,
+    pub self_attn: IntAttn,
+    pub ln1: LnInt,
+    pub x2_zero: i32,
+    pub cross: IntAttn,
+    pub ln2: LnInt,
+    pub x3_zero: i32,
+    pub ffn: IntFfn,
+    pub ln3: LnInt,
+}
+
+/// The fully-integer execution plan: present only when *every* MatMul
+/// site is INT8 with a fused epilogue and *every* LayerNorm/softmax op
+/// site is flipped to its integer kernel (all-or-nothing — a single
+/// FP32 island would reintroduce the quantize/dequantize hops this
+/// plan exists to eliminate).
+///
+/// With it, the engine's integer paths run:
+///
+/// * encode: one Quantize (embed+PE onto [`IntPlan::enc_entry`]), all
+///   interior layers integer, one Dequantize (memory off
+///   [`IntPlan::mem_grid`]);
+/// * admit: one Quantize (memory onto `mem_grid`), cross K/V fill via
+///   fused u8 epilogues straight into the caches;
+/// * decode step: one Quantize (embed+PE onto [`IntPlan::dec_entry`]),
+///   all interior layers integer, one Dequantize (the logits row).
+///
+/// The memory grid is canonicalized to the `dec.0.cross.k` site's a
+/// params: memory is quantized once on that grid and every layer's
+/// cross k/v multipliers are derived against it (their per-site a
+/// params are subsumed — one grid, one Quantize).
+#[derive(Debug, Clone)]
+pub struct IntPlan {
+    /// Encoder entry grid (`enc.0.attn.q` a params).
+    pub enc_entry: QuantParams,
+    /// Canonical encoder-memory grid (`dec.0.cross.k` a params).
+    pub mem_grid: QuantParams,
+    /// Decoder entry grid (`dec.0.self.q` a params).
+    pub dec_entry: QuantParams,
+    /// Per-vocab-channel (len `vocab`) or broadcast (len 1) logits
+    /// dequantize multipliers: `logits_a_scale * b_scale_j`.
+    pub logits_dequant: Vec<f32>,
+    /// Zero point of the logits A operand (zero-point correction).
+    pub logits_zero: i32,
+    pub enc: Vec<IntEncLayer>,
+    pub dec: Vec<IntDecLayer>,
+}
+
 /// The compiled, index-addressed execution plan (see module docs).
 pub struct CompiledPlan {
     /// Per-site dispatch info, indexed by [`SiteId`].
@@ -261,6 +402,9 @@ pub struct CompiledPlan {
     pub pe: Vec<f32>,
     /// Whether the decoder self-attention KV caches store u8.
     pub int8_cache: bool,
+    /// The fully-integer dispatch plan (see [`IntPlan`]); `None` when
+    /// any site or op stays FP32 / unfused.
+    int_plan: Option<IntPlan>,
     pub d_model: usize,
     pub n_heads: usize,
     pub d_head: usize,
@@ -318,8 +462,17 @@ impl CompiledPlan {
                         let t = weights.get(&wname)?;
                         (t.data(), t.shape()[0], t.shape()[1])
                     };
+                    let per_channel = recipe
+                        .decision(name)
+                        .is_some_and(|d| d.is_per_channel());
                     let store = match &quant {
-                        Some(q) => WeightStore::Quant(quantize_weight(wdata, kk, nn, q.b_scale)),
+                        Some(q) => WeightStore::Quant(quantize_weight(
+                            wdata,
+                            kk,
+                            nn,
+                            q.b_scale,
+                            per_channel,
+                        )),
                         None => WeightStore::F32(wdata.to_vec()),
                     };
                     Some(WeightPlan {
@@ -403,6 +556,7 @@ impl CompiledPlan {
         let embed_scaled: Vec<f32> = embed.data().iter().map(|&x| x * scale).collect();
         let max_len = cfg.max_src_len.max(cfg.max_tgt_len);
         let pe = positional_encoding(max_len, d);
+        let int_plan = build_int_plan(cfg, recipe, &site_set, &sites, &enc, &dec, logits);
 
         Ok(CompiledPlan {
             sites,
@@ -414,6 +568,7 @@ impl CompiledPlan {
             embed_scaled,
             pe,
             int8_cache,
+            int_plan,
             d_model: d,
             n_heads: cfg.n_heads,
             d_head: cfg.d_head(),
@@ -452,13 +607,245 @@ impl CompiledPlan {
     pub fn site_name(&self, id: SiteId) -> &str {
         self.site_set.name(id)
     }
+
+    /// The fully-integer dispatch plan, when the recipe compiled to one
+    /// (every site fused INT8, every op site integer — see [`IntPlan`]).
+    #[inline]
+    pub fn int_plan(&self) -> Option<&IntPlan> {
+        self.int_plan.as_ref()
+    }
+}
+
+/// Whether a recipe compiles to a fully-integer plan: every MatMul
+/// site INT8 with the fused epilogue, every implied op site flipped.
+fn int_plan_eligible(recipe: &Recipe, site_set: &SiteSet, sites: &[SitePlan]) -> bool {
+    for (id, name) in site_set.iter() {
+        if sites[id.idx()].quant.is_none() {
+            return false;
+        }
+        if !recipe.decision(name).is_some_and(|d| d.is_fused()) {
+            return false;
+        }
+    }
+    recipe::op_site_names(site_set).iter().all(|op| {
+        match OpDecisionKind::for_site(op) {
+            Some(OpDecisionKind::IntegerLn) => recipe.integer_ln(op),
+            Some(OpDecisionKind::IntegerSoftmax) => recipe.integer_softmax(op),
+            None => false,
+        }
+    })
+}
+
+/// The u8 weight const of a quantized weight site (gated callers only).
+fn wq_of(sp: &SitePlan) -> &QWeight {
+    match &sp.weight {
+        Some(WeightPlan {
+            store: WeightStore::Quant(qw),
+            ..
+        }) => qw,
+        _ => unreachable!("int plan requires a quantized weight const"),
+    }
+}
+
+/// Build the fused epilogue for a weight site: A at `(sa, in_zero)`
+/// through the site's u8 weight onto the `(out_scale, out_zero)` grid,
+/// with the f32 bias folded into accumulator units.  `in_zero` is
+/// whatever the consuming epilogue's contract needs — the A zero for
+/// the plain s8/u8 fusions, the *residual* grid zero for
+/// [`gemm::requant_epilogue_residual`] (the o/y projections pass their
+/// A zero to the correction step separately).
+fn weight_requant(
+    sp: &SitePlan,
+    sa: f32,
+    in_zero: i32,
+    out_scale: f32,
+    out_zero: i32,
+    bias: Option<&[f32]>,
+    relu: bool,
+) -> RequantParams {
+    let qw = wq_of(sp);
+    let mult = match &qw.col_scales {
+        Some(cs) => cs.iter().map(|&sb| sa * sb / out_scale).collect(),
+        None => vec![sa * qw.scale / out_scale],
+    };
+    let bias = bias.map(|b| {
+        b.iter()
+            .enumerate()
+            .map(|(j, &x)| (x as f64 / (sa as f64 * qw.scale_at(j) as f64)).round() as i32)
+            .collect()
+    });
+    RequantParams {
+        in_zero,
+        mult,
+        out_zero,
+        bias,
+        relu,
+    }
+}
+
+/// Resolve one attention block's integer dispatch.  `q_in` is the
+/// block-input grid (also the residual grid); `kv_in` is the grid the
+/// k/v projections consume — the block input for self/encoder
+/// attention, the canonical memory grid for cross attention.
+fn int_attn(sites: &[SitePlan], ap: &AttnPlan, q_in: QuantParams, kv_in: QuantParams, d_head: usize) -> IntAttn {
+    let aq = |id: SiteId| sites[id.idx()].quant.as_ref().expect("gated int8").a;
+    let bscale = |id: SiteId| sites[id.idx()].quant.as_ref().expect("gated int8").b_scale;
+    let qk_a = aq(ap.qk);
+    let qk_b = bscale(ap.qk);
+    let pv_b = bscale(ap.pv);
+    let o_a = aq(ap.o);
+    IntAttn {
+        rq_q: weight_requant(
+            &sites[ap.q.idx()],
+            q_in.scale,
+            q_in.zero,
+            qk_a.scale,
+            qk_a.zero,
+            None,
+            false,
+        ),
+        // u8 epilogues pin the output zero to 128; out_zero is unused
+        rq_k: weight_requant(&sites[ap.k.idx()], kv_in.scale, kv_in.zero, qk_b, 0, None, false),
+        rq_v: weight_requant(&sites[ap.v.idx()], kv_in.scale, kv_in.zero, pv_b, 0, None, false),
+        qk_zero: qk_a.zero,
+        sm: IntSoftmax::new(qk_a.scale * qk_b / (d_head as f32).sqrt()),
+        rq_ctx: RequantParams::per_tensor(0, PROB_SCALE * pv_b / o_a.scale, o_a.zero),
+        ctx_zero: o_a.zero,
+        rq_o: weight_requant(
+            &sites[ap.o.idx()],
+            o_a.scale,
+            q_in.zero,
+            q_in.scale,
+            0,
+            None,
+            false,
+        ),
+    }
+}
+
+/// Resolve one FFN block's integer dispatch: `x_in` is the block-input
+/// (and residual) grid.
+fn int_ffn(sites: &[SitePlan], fp: &FfnPlan, x_in: QuantParams) -> IntFfn {
+    let y_a = sites[fp.y.idx()].quant.as_ref().expect("gated int8").a;
+    IntFfn {
+        rq_h: weight_requant(
+            &sites[fp.h.idx()],
+            x_in.scale,
+            x_in.zero,
+            y_a.scale,
+            y_a.zero,
+            Some(&fp.b1),
+            true,
+        ),
+        h_zero: y_a.zero,
+        rq_y: weight_requant(
+            &sites[fp.y.idx()],
+            y_a.scale,
+            x_in.zero,
+            x_in.scale,
+            0,
+            Some(&fp.b2),
+            false,
+        ),
+    }
+}
+
+/// Compile the [`IntPlan`] when the recipe is fully integer (see
+/// [`IntPlan`] docs for the grid-chaining contract).
+fn build_int_plan(
+    cfg: &ModelConfig,
+    recipe: &Recipe,
+    site_set: &SiteSet,
+    sites: &[SitePlan],
+    enc: &[EncLayerPlan],
+    dec: &[DecLayerPlan],
+    logits: SiteId,
+) -> Option<IntPlan> {
+    if enc.is_empty() || dec.is_empty() || !int_plan_eligible(recipe, site_set, sites) {
+        return None;
+    }
+    let dh = cfg.d_head();
+    let aq = |id: SiteId| sites[id.idx()].quant.as_ref().expect("gated int8").a;
+    // one canonical memory grid: every cross k/v projection consumes it
+    let mem_grid = aq(dec[0].cross.k);
+    let logits_a = aq(logits);
+
+    let mut ienc = Vec::with_capacity(enc.len());
+    for (i, l) in enc.iter().enumerate() {
+        let x = aq(l.attn.q);
+        let x2 = aq(l.ffn.h);
+        let next = match enc.get(i + 1) {
+            Some(nl) => aq(nl.attn.q),
+            None => mem_grid,
+        };
+        ienc.push(IntEncLayer {
+            x_zero: x.zero,
+            attn: int_attn(sites, &l.attn, x, x, dh),
+            ln1: LnInt::new(&l.ln1.gamma, &l.ln1.beta, x.scale, x2.scale, x2.zero, LN_EPS),
+            x2_zero: x2.zero,
+            ffn: int_ffn(sites, &l.ffn, x2),
+            ln2: LnInt::new(&l.ln2.gamma, &l.ln2.beta, x2.scale, next.scale, next.zero, LN_EPS),
+        });
+    }
+
+    let mut idec = Vec::with_capacity(dec.len());
+    for (i, l) in dec.iter().enumerate() {
+        let x1 = aq(l.self_attn.q);
+        let x2 = aq(l.cross.q);
+        let x3 = aq(l.ffn.h);
+        let next = match dec.get(i + 1) {
+            Some(nl) => aq(nl.self_attn.q),
+            None => logits_a,
+        };
+        idec.push(IntDecLayer {
+            x_zero: x1.zero,
+            self_attn: int_attn(sites, &l.self_attn, x1, x1, dh),
+            ln1: LnInt::new(&l.ln1.gamma, &l.ln1.beta, x1.scale, x2.scale, x2.zero, LN_EPS),
+            x2_zero: x2.zero,
+            cross: int_attn(sites, &l.cross, x2, mem_grid, dh),
+            ln2: LnInt::new(&l.ln2.gamma, &l.ln2.beta, x2.scale, x3.scale, x3.zero, LN_EPS),
+            x3_zero: x3.zero,
+            ffn: int_ffn(sites, &l.ffn, x3),
+            ln3: LnInt::new(&l.ln3.gamma, &l.ln3.beta, x3.scale, next.scale, next.zero, LN_EPS),
+        });
+    }
+
+    let lw = wq_of(&sites[logits.idx()]);
+    let logits_dequant = match &lw.col_scales {
+        Some(cs) => cs.iter().map(|&sb| logits_a.scale * sb).collect(),
+        None => vec![logits_a.scale * lw.scale],
+    };
+    Some(IntPlan {
+        enc_entry: aq(enc[0].attn.q),
+        mem_grid,
+        dec_entry: aq(dec[0].self_attn.q),
+        logits_dequant,
+        logits_zero: logits_a.zero,
+        enc: ienc,
+        dec: idec,
+    })
 }
 
 /// Quantize + pack one weight tensor at build time (§5.5: weights
 /// become u8 consts; the colsum is the zero-point correction operand).
-fn quantize_weight(wdata: &[f32], k: usize, n: usize, b_scale: f32) -> QWeight {
+/// With `per_channel`, each output column gets its own max-abs-derived
+/// scale (Wu §3) — the packed layout and colsum are scale-agnostic, so
+/// only the quantization grid changes.
+fn quantize_weight(wdata: &[f32], k: usize, n: usize, b_scale: f32, per_channel: bool) -> QWeight {
     let mut data = vec![0u8; wdata.len()];
-    gemm::quantize_u8(wdata, b_scale, &mut data);
+    let col_scales = if per_channel {
+        let scales = per_channel_scales(wdata, k, n);
+        for (drow, wrow) in data.chunks_exact_mut(n).zip(wdata.chunks_exact(n)) {
+            for ((d, &x), &s) in drow.iter_mut().zip(wrow).zip(&scales) {
+                let q = (x / s).round() as i32 + UINT8_ZERO_POINT;
+                *d = q.clamp(0, 255) as u8;
+            }
+        }
+        Some(scales)
+    } else {
+        gemm::quantize_u8(wdata, b_scale, &mut data);
+        None
+    };
     let packed = gemm::isa_level().packs_b().then(|| PackedB::pack(&data, k, n));
     let mut colsum = vec![0i32; n];
     for p in 0..k {
@@ -470,6 +857,7 @@ fn quantize_weight(wdata: &[f32], k: usize, n: usize, b_scale: f32) -> QWeight {
         data,
         packed,
         scale: b_scale,
+        col_scales,
         colsum,
     }
 }
@@ -612,6 +1000,95 @@ mod tests {
         let pv = plan.site_set().id("dec.0.self.pv").unwrap();
         assert_eq!(spec.self_v, plan.site(pv).quant.as_ref().map(|q| q.b_scale));
         assert!(spec.cross_k.is_some() && spec.cross_v.is_some());
+    }
+
+    #[test]
+    fn full_int_recipe_compiles_an_int_plan() {
+        use crate::model::testutil::full_int_recipe;
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 11);
+        let plan = CompiledPlan::build(&cfg, &w, &full_int_recipe(&cfg)).unwrap();
+        let ip = plan.int_plan().expect("fully-integer recipe must compile an IntPlan");
+        assert_eq!(ip.enc.len(), cfg.n_enc_layers);
+        assert_eq!(ip.dec.len(), cfg.n_dec_layers);
+        // per-channel recipe: every weight const carries column scales,
+        // so multipliers and logits dequant are per-channel too
+        for (id, name) in plan.site_set().iter() {
+            if cfg.weight_for_site(name).is_none() {
+                continue;
+            }
+            let wp = plan.site(id).weight.as_ref().unwrap();
+            let WeightStore::Quant(qw) = &wp.store else {
+                panic!("{name} must be quantized")
+            };
+            let cs = qw.col_scales.as_ref().expect("per-channel scales");
+            assert_eq!(cs.len(), wp.n, "{name}");
+            assert!(cs.iter().all(|&s| s > 0.0), "{name}");
+        }
+        assert_eq!(ip.logits_dequant.len(), cfg.vocab_size);
+        let e = &ip.enc[0];
+        assert_eq!(e.attn.rq_q.mult.len(), cfg.d_model);
+        assert!(e.attn.rq_q.bias.is_none());
+        // ffn h folds bias + ReLU; y folds bias, no ReLU
+        assert_eq!(e.ffn.rq_h.mult.len(), cfg.d_ff);
+        assert!(e.ffn.rq_h.relu && e.ffn.rq_h.bias.is_some());
+        assert!(!e.ffn.rq_y.relu && e.ffn.rq_y.bias.is_some());
+        // encoder exit chains onto the canonical memory grid, which the
+        // decoder cross k/v multipliers consume (sa = mem scale)
+        let d0 = &ip.dec[0];
+        let qw_k = match &plan.site(plan.dec[0].cross.k).weight.as_ref().unwrap().store {
+            WeightStore::Quant(qw) => qw,
+            _ => unreachable!(),
+        };
+        let kv = plan.kv_spec(0);
+        let expect = ip.mem_grid.scale * qw_k.scale_at(3) / kv.cross_k.unwrap();
+        assert!((d0.cross.rq_k.mult[3] - expect).abs() < 1e-9);
+        assert_eq!(d0.cross.rq_k.in_zero, ip.mem_grid.zero);
+    }
+
+    #[test]
+    fn unfused_or_partial_recipes_have_no_int_plan() {
+        use crate::quant::recipe::{RecipeOp, RecipeSite};
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 12);
+        // all-int8 but unfused: no int plan
+        let plan = CompiledPlan::build(&cfg, &w, &loose_recipe(&cfg)).unwrap();
+        assert!(plan.int_plan().is_none());
+        // fused sites but one op site left FP32: no int plan
+        let full = crate::model::testutil::full_int_recipe(&cfg);
+        let sites: Vec<RecipeSite> = full.iter().cloned().collect();
+        let ops: Vec<RecipeOp> = full
+            .ops_iter()
+            .filter(|op| op.site != "enc.0.ln1")
+            .cloned()
+            .collect();
+        let partial = Recipe::from_parts("partial", sites, ops);
+        let plan = CompiledPlan::build(&cfg, &w, &partial).unwrap();
+        assert!(plan.int_plan().is_none());
+    }
+
+    #[test]
+    fn per_channel_weights_roundtrip_within_column_grid() {
+        use crate::model::testutil::full_int_recipe;
+        let cfg = tiny_cfg();
+        let w = random_weights(&cfg, 13);
+        let plan = CompiledPlan::build(&cfg, &w, &full_int_recipe(&cfg)).unwrap();
+        let id = plan.site_set().id("enc.0.attn.q").unwrap();
+        let wp = plan.site(id).weight.as_ref().unwrap();
+        let WeightStore::Quant(qw) = &wp.store else {
+            panic!()
+        };
+        let raw = w.get("enc.0.attn.wq").unwrap();
+        for (p, row) in raw.data().chunks_exact(wp.n).enumerate() {
+            for (j, &x) in row.iter().enumerate() {
+                let q = qw.data[p * wp.n + j] as i32 - 128;
+                let back = q as f32 * qw.scale_at(j);
+                assert!(
+                    (x - back).abs() <= qw.scale_at(j) * 0.5 + 1e-7,
+                    "({p},{j}): {x} vs {back}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -74,6 +74,14 @@ pub struct Profiler {
     /// iteration-level-scheduling observable: with finished-slot
     /// compaction, rows per decode step shrink as slots finish
     site_rows: Vec<u64>,
+    /// bytes moved by precision-conversion passes (input + output of
+    /// each pass): f32<->int quantize/dequantize, and the fused
+    /// requantize epilogues that replace those round-trips on the
+    /// fully-integer path.  Deterministic — they depend only on the
+    /// schedule, so tests and benches can assert on them exactly.
+    quantize_bytes: u64,
+    dequantize_bytes: u64,
+    requant_bytes: u64,
 }
 
 /// RAII timing scope.
@@ -147,6 +155,42 @@ impl Profiler {
     /// Total activation rows recorded against a site.
     pub fn site_rows(&self, site: SiteId) -> u64 {
         self.site_rows.get(site.idx()).copied().unwrap_or_default()
+    }
+
+    /// Account bytes moved by an f32 -> int quantize pass.
+    #[inline]
+    pub fn add_quantize_bytes(&mut self, bytes: u64) {
+        if self.enabled {
+            self.quantize_bytes += bytes;
+        }
+    }
+
+    /// Account bytes moved by an int -> f32 dequantize pass.
+    #[inline]
+    pub fn add_dequantize_bytes(&mut self, bytes: u64) {
+        if self.enabled {
+            self.dequantize_bytes += bytes;
+        }
+    }
+
+    /// Account bytes moved by a fused requantize epilogue.
+    #[inline]
+    pub fn add_requant_bytes(&mut self, bytes: u64) {
+        if self.enabled {
+            self.requant_bytes += bytes;
+        }
+    }
+
+    pub fn quantize_bytes(&self) -> u64 {
+        self.quantize_bytes
+    }
+
+    pub fn dequantize_bytes(&self) -> u64 {
+        self.dequantize_bytes
+    }
+
+    pub fn requant_bytes(&self) -> u64 {
+        self.requant_bytes
     }
 
     pub fn site_total(&self, site: SiteId) -> Duration {
@@ -227,6 +271,9 @@ impl Profiler {
         self.site_totals.clear();
         self.site_counts.clear();
         self.site_rows.clear();
+        self.quantize_bytes = 0;
+        self.dequantize_bytes = 0;
+        self.requant_bytes = 0;
     }
 
     /// Merge another profiler's totals into this one.
@@ -253,6 +300,9 @@ impl Profiler {
         for (i, &r) in other.site_rows.iter().enumerate() {
             self.site_rows[i] += r;
         }
+        self.quantize_bytes += other.quantize_bytes;
+        self.dequantize_bytes += other.dequantize_bytes;
+        self.requant_bytes += other.requant_bytes;
     }
 }
 
@@ -348,6 +398,31 @@ mod tests {
         let mut d = Profiler::default();
         d.time_site(OpKind::MatMul, site, || {});
         assert!(d.site_breakdown().is_empty());
+    }
+
+    #[test]
+    fn conversion_bytes_accumulate_merge_and_reset() {
+        let mut p = Profiler::enabled();
+        p.add_quantize_bytes(50);
+        p.add_dequantize_bytes(80);
+        p.add_requant_bytes(45);
+        p.add_quantize_bytes(50);
+        assert_eq!(p.quantize_bytes(), 100);
+        assert_eq!(p.dequantize_bytes(), 80);
+        assert_eq!(p.requant_bytes(), 45);
+
+        let mut q = Profiler::enabled();
+        q.add_requant_bytes(5);
+        q.merge(&p);
+        assert_eq!(q.requant_bytes(), 50);
+        assert_eq!(q.quantize_bytes(), 100);
+        q.reset();
+        assert_eq!(q.quantize_bytes() + q.dequantize_bytes() + q.requant_bytes(), 0);
+
+        // disabled profiler records nothing
+        let mut d = Profiler::default();
+        d.add_quantize_bytes(10);
+        assert_eq!(d.quantize_bytes(), 0);
     }
 
     #[test]

@@ -84,14 +84,48 @@ pub fn loose_recipe(cfg: &ModelConfig) -> Recipe {
             .into_iter()
             .map(|site| RecipeSite {
                 site,
-                decision: Decision::Int8 {
-                    quant: SiteQuant {
+                decision: Decision::int8(
+                    SiteQuant {
                         a: QuantParams::symmetric(8.0),
                         b_scale: 1.0 / 127.0,
                     },
-                    mode: None,
-                },
+                    None,
+                ),
             })
             .collect(),
     )
+}
+
+/// The fully-integer variant of [`loose_recipe`]: every MatMul fused +
+/// per-channel, every LayerNorm/softmax flipped to its integer kernel.
+/// Panics (test fixture) if the op flips fail validation.
+pub fn full_int_recipe(cfg: &ModelConfig) -> Recipe {
+    let base = loose_recipe(cfg);
+    let sites = base
+        .iter()
+        .map(|rs| {
+            let mut decision = rs.decision.clone();
+            if let Decision::Int8 {
+                fused, per_channel, ..
+            } = &mut decision
+            {
+                *fused = true;
+                *per_channel = true;
+            }
+            RecipeSite {
+                site: rs.site.clone(),
+                decision,
+            }
+        })
+        .collect();
+    let census = crate::model::plan::SiteSet::new(cfg);
+    let ops = crate::quant::recipe::op_site_names(&census)
+        .into_iter()
+        .map(|site| {
+            let kind = crate::quant::recipe::OpDecisionKind::for_site(&site)
+                .expect("op census site must imply a kind");
+            crate::quant::recipe::RecipeOp { site, kind }
+        })
+        .collect();
+    Recipe::from_parts("full-int", sites, ops)
 }

@@ -22,8 +22,8 @@ pub mod scheme;
 pub use calibrate::{CalibrationMode, SiteCalibration, SiteTable};
 pub use classify::TensorClass;
 pub use histogram::Histogram;
-pub use recipe::{Decision, Recipe, RecipeBuilder, RecipeSite};
-pub use scheme::QuantParams;
+pub use recipe::{op_site_names, Decision, OpDecisionKind, Recipe, RecipeBuilder, RecipeOp, RecipeSite};
+pub use scheme::{per_channel_scales, QuantParams};
 
 /// Histogram resolution (mirrors python common.HIST_BINS).
 pub const HIST_BINS: usize = 2048;

@@ -52,10 +52,29 @@ pub enum Decision {
         /// from (`None` for explicitly supplied params).  Carried so
         /// `recipe diff` can report mode changes, not just raw scales.
         mode: Option<CalibrationMode>,
+        /// `RequantFused`: the site's i32 accumulator requantizes
+        /// directly onto the next consumer's integer grid (no f32
+        /// round-trip) when the surrounding sites permit it.
+        fused: bool,
+        /// `PerChannel`: the weight B operand uses per-output-channel
+        /// symmetric scales resolved from the actual weight columns at
+        /// plan-build time (ignored for weightless dynamic sites, whose
+        /// B operand is an activation with a single scale).
+        per_channel: bool,
     },
 }
 
 impl Decision {
+    /// Plain INT8 decision (no fusion / per-channel flags).
+    pub fn int8(quant: SiteQuant, mode: Option<CalibrationMode>) -> Decision {
+        Decision::Int8 {
+            quant,
+            mode,
+            fused: false,
+            per_channel: false,
+        }
+    }
+
     /// The engine-facing dispatch info (`None` = FP32).
     pub fn quant(&self) -> Option<SiteQuant> {
         match self {
@@ -67,22 +86,138 @@ impl Decision {
     pub fn is_int8(&self) -> bool {
         matches!(self, Decision::Int8 { .. })
     }
+
+    /// Whether the `RequantFused` kind is set (always false for FP32).
+    pub fn is_fused(&self) -> bool {
+        matches!(self, Decision::Int8 { fused: true, .. })
+    }
+
+    /// Whether the `PerChannel` kind is set (always false for FP32).
+    pub fn is_per_channel(&self) -> bool {
+        matches!(
+            self,
+            Decision::Int8 {
+                per_channel: true,
+                ..
+            }
+        )
+    }
 }
 
 impl fmt::Display for Decision {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             Decision::Fp32 => write!(f, "fp32"),
-            Decision::Int8 { quant, mode } => write!(
-                f,
-                "int8[{}] a={}@{} b={}",
-                mode.map(|m| m.as_str()).unwrap_or("explicit"),
-                quant.a.scale,
-                quant.a.zero,
-                quant.b_scale,
-            ),
+            Decision::Int8 {
+                quant,
+                mode,
+                fused,
+                per_channel,
+            } => {
+                write!(
+                    f,
+                    "int8[{}] a={}@{} b={}",
+                    mode.map(|m| m.as_str()).unwrap_or("explicit"),
+                    quant.a.scale,
+                    quant.a.zero,
+                    quant.b_scale,
+                )?;
+                if *fused {
+                    write!(f, " fused")?;
+                }
+                if *per_channel {
+                    write!(f, " per-channel")?;
+                }
+                Ok(())
+            }
         }
     }
+}
+
+/// The decision kinds that attach to *op* sites (LayerNorm / softmax
+/// instances) rather than MatMul sites: `IntegerLn` switches a
+/// LayerNorm to the i32-domain kernel, `IntegerSoftmax` a softmax to
+/// the fixed-point LUT kernel.  An op site absent from the recipe stays
+/// FP32 (ops are additive, unlike the exhaustive MatMul census).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpDecisionKind {
+    IntegerLn,
+    IntegerSoftmax,
+}
+
+impl OpDecisionKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OpDecisionKind::IntegerLn => "integer_ln",
+            OpDecisionKind::IntegerSoftmax => "integer_softmax",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<OpDecisionKind> {
+        match s {
+            "integer_ln" => Some(OpDecisionKind::IntegerLn),
+            "integer_softmax" => Some(OpDecisionKind::IntegerSoftmax),
+            _ => None,
+        }
+    }
+
+    /// The kind an op-site name implies: LayerNorm sites end in
+    /// `.ln<N>`, softmax sites in `.softmax`.
+    pub fn for_site(site: &str) -> Option<OpDecisionKind> {
+        if site.ends_with(".softmax") {
+            Some(OpDecisionKind::IntegerSoftmax)
+        } else if site
+            .rsplit('.')
+            .next()
+            .is_some_and(|last| last.len() >= 3 && last.starts_with("ln"))
+        {
+            Some(OpDecisionKind::IntegerLn)
+        } else {
+            None
+        }
+    }
+}
+
+/// One op-site row of a recipe: an op site flipped to its integer
+/// kernel (absence = FP32).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecipeOp {
+    pub site: String,
+    pub kind: OpDecisionKind,
+}
+
+/// The op-site census implied by a MatMul [`SiteSet`]: every LayerNorm
+/// (`enc.i.ln1`, `dec.i.ln3`, ...) and every attention softmax
+/// (`enc.i.attn.softmax`, `dec.i.self.softmax`, `dec.i.cross.softmax`),
+/// derived from the layer structure the MatMul census already encodes.
+pub fn op_site_names(sites: &SiteSet) -> Vec<String> {
+    let mut enc = 0usize;
+    let mut dec = 0usize;
+    for (_, n) in sites.iter() {
+        if let Some(rest) = n.strip_prefix("enc.") {
+            if let Some(i) = rest.split('.').next().and_then(|s| s.parse::<usize>().ok()) {
+                enc = enc.max(i + 1);
+            }
+        } else if let Some(rest) = n.strip_prefix("dec.") {
+            if let Some(i) = rest.split('.').next().and_then(|s| s.parse::<usize>().ok()) {
+                dec = dec.max(i + 1);
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(enc * 3 + dec * 5);
+    for i in 0..enc {
+        out.push(format!("enc.{i}.attn.softmax"));
+        out.push(format!("enc.{i}.ln1"));
+        out.push(format!("enc.{i}.ln2"));
+    }
+    for i in 0..dec {
+        out.push(format!("dec.{i}.self.softmax"));
+        out.push(format!("dec.{i}.cross.softmax"));
+        out.push(format!("dec.{i}.ln1"));
+        out.push(format!("dec.{i}.ln2"));
+        out.push(format!("dec.{i}.ln3"));
+    }
+    out
 }
 
 /// One row of a recipe: a MatMul site and its decision.
@@ -101,6 +236,9 @@ pub struct Recipe {
     /// back to the content hash).
     pub name: String,
     sites: Vec<RecipeSite>,
+    /// Op sites flipped to their integer kernels (`IntegerLn` /
+    /// `IntegerSoftmax`); an op site absent here stays FP32.
+    ops: Vec<RecipeOp>,
 }
 
 impl Recipe {
@@ -111,6 +249,16 @@ impl Recipe {
         Recipe {
             name: name.to_string(),
             sites,
+            ops: Vec::new(),
+        }
+    }
+
+    /// [`Recipe::from_sites`] with explicit op decisions.
+    pub fn from_parts(name: &str, sites: Vec<RecipeSite>, ops: Vec<RecipeOp>) -> Recipe {
+        Recipe {
+            name: name.to_string(),
+            sites,
+            ops,
         }
     }
 
@@ -125,6 +273,7 @@ impl Recipe {
                     decision: Decision::Fp32,
                 })
                 .collect(),
+            ops: Vec::new(),
         }
     }
 
@@ -153,10 +302,32 @@ impl Recipe {
         self.sites.iter().filter(|rs| rs.decision.is_int8()).count()
     }
 
+    /// Op decisions (integer LN/softmax flips) in recipe order.
+    pub fn ops_iter(&self) -> impl Iterator<Item = &RecipeOp> + '_ {
+        self.ops.iter()
+    }
+
+    /// Whether this LayerNorm op site runs the integer kernel.
+    pub fn integer_ln(&self, site: &str) -> bool {
+        self.ops
+            .iter()
+            .any(|op| op.kind == OpDecisionKind::IntegerLn && op.site == site)
+    }
+
+    /// Whether this softmax op site runs the fixed-point kernel.
+    pub fn integer_softmax(&self, site: &str) -> bool {
+        self.ops
+            .iter()
+            .any(|op| op.kind == OpDecisionKind::IntegerSoftmax && op.site == site)
+    }
+
     /// Validate against the model's site census: every recipe site must
     /// exist in the census, no duplicates, and every census site must
     /// have a decision.  All three are hard errors — a recipe that
-    /// disagrees with the model never reaches the engine.
+    /// disagrees with the model never reaches the engine.  Op decisions
+    /// validate against the implied op census (unknown site, duplicate,
+    /// or a kind that contradicts the site name are hard errors), but
+    /// completeness is not required: an absent op site is FP32.
     pub fn validate(&self, sites: &SiteSet) -> anyhow::Result<()> {
         let mut seen = std::collections::BTreeSet::new();
         for rs in &self.sites {
@@ -182,13 +353,43 @@ impl Recipe {
                 name
             );
         }
+        let op_census = op_site_names(sites);
+        let mut op_seen = std::collections::BTreeSet::new();
+        for op in &self.ops {
+            anyhow::ensure!(
+                op_census.iter().any(|n| *n == op.site),
+                "recipe '{}': unknown op site '{}' (not in the model's {}-op census)",
+                self.id(),
+                op.site,
+                op_census.len()
+            );
+            anyhow::ensure!(
+                op_seen.insert(op.site.as_str()),
+                "recipe '{}': duplicate op decision for site '{}'",
+                self.id(),
+                op.site
+            );
+            anyhow::ensure!(
+                OpDecisionKind::for_site(&op.site) == Some(op.kind),
+                "recipe '{}': op site '{}' cannot carry kind '{}'",
+                self.id(),
+                op.site,
+                op.kind.as_str()
+            );
+        }
         Ok(())
     }
 
     /// FNV-1a hash of the serialized decisions (name excluded, so
-    /// renaming a recipe does not change its content identity).
+    /// renaming a recipe does not change its content identity).  Op
+    /// decisions contribute only when present, so the hash of every
+    /// pre-existing MatMul-only recipe is unchanged.
     pub fn content_hash(&self) -> u64 {
-        crate::util::fnv1a(self.sites_json().to_string().bytes())
+        let mut text = self.sites_json().to_string();
+        if !self.ops.is_empty() {
+            text.push_str(&self.ops_json().to_string());
+        }
+        crate::util::fnv1a(text.bytes())
     }
 
     /// Recipe identity for labels and metrics rows: the name, or a
@@ -218,13 +419,27 @@ impl Recipe {
                             Json::from(if rs.decision.is_int8() { "int8" } else { "fp32" }),
                         ),
                     ];
-                    if let Decision::Int8 { quant, mode } = &rs.decision {
+                    if let Decision::Int8 {
+                        quant,
+                        mode,
+                        fused,
+                        per_channel,
+                    } = &rs.decision
+                    {
                         if let Some(m) = mode {
                             pairs.push(("mode", Json::from(m.as_str())));
                         }
                         pairs.push(("a_scale", Json::Num(quant.a.scale as f64)));
                         pairs.push(("a_zero", Json::Num(quant.a.zero as f64)));
                         pairs.push(("b_scale", Json::Num(quant.b_scale as f64)));
+                        // emitted only when set, so v1 recipes serialize
+                        // (and content-hash) byte-identically
+                        if *fused {
+                            pairs.push(("fused", Json::Bool(true)));
+                        }
+                        if *per_channel {
+                            pairs.push(("per_channel", Json::Bool(true)));
+                        }
                     }
                     obj(&pairs)
                 })
@@ -232,17 +447,49 @@ impl Recipe {
         )
     }
 
+    fn ops_json(&self) -> Json {
+        Json::Arr(
+            self.ops
+                .iter()
+                .map(|op| {
+                    obj(&[
+                        ("site", Json::from(op.site.as_str())),
+                        ("kind", Json::from(op.kind.as_str())),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Whether any of the PR's integer-path decision kinds are present
+    /// (drives the serialized version: extended recipes are v2, plain
+    /// MatMul-precision recipes stay v1 for older readers).
+    fn has_integer_kinds(&self) -> bool {
+        !self.ops.is_empty()
+            || self
+                .sites
+                .iter()
+                .any(|rs| rs.decision.is_fused() || rs.decision.is_per_channel())
+    }
+
     pub fn to_json(&self) -> Json {
-        obj(&[
-            ("version", Json::Num(1.0)),
+        let mut pairs = vec![
+            (
+                "version",
+                Json::Num(if self.has_integer_kinds() { 2.0 } else { 1.0 }),
+            ),
             ("name", Json::from(self.name.as_str())),
             ("sites", self.sites_json()),
-        ])
+        ];
+        if !self.ops.is_empty() {
+            pairs.push(("ops", self.ops_json()));
+        }
+        obj(&pairs)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Recipe> {
         if let Some(v) = j.get("version").and_then(Json::as_usize) {
-            anyhow::ensure!(v == 1, "recipe.json: unsupported version {v}");
+            anyhow::ensure!(v == 1 || v == 2, "recipe.json: unsupported version {v}");
         }
         let name = j
             .get("name")
@@ -278,6 +525,8 @@ impl Recipe {
                             anyhow::anyhow!("recipe.json: site '{site}' has unknown mode '{s}'")
                         })?),
                     };
+                    // v1 files simply lack these keys -> both false
+                    let flag = |k: &str| sj.get(k).and_then(Json::as_bool).unwrap_or(false);
                     Decision::Int8 {
                         quant: SiteQuant {
                             a: QuantParams {
@@ -287,6 +536,8 @@ impl Recipe {
                             b_scale: f("b_scale")? as f32,
                         },
                         mode,
+                        fused: flag("fused"),
+                        per_channel: flag("per_channel"),
                     }
                 }
                 other => anyhow::bail!(
@@ -296,7 +547,24 @@ impl Recipe {
             };
             sites.push(RecipeSite { site, decision });
         }
-        Ok(Recipe { name, sites })
+        let mut ops = Vec::new();
+        if let Some(ops_j) = j.get("ops").and_then(Json::as_arr) {
+            for (i, oj) in ops_j.iter().enumerate() {
+                let site = oj
+                    .get("site")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("recipe.json: ops[{i}] missing 'site'"))?
+                    .to_string();
+                let kind_s = oj.get("kind").and_then(Json::as_str).ok_or_else(|| {
+                    anyhow::anyhow!("recipe.json: op site '{site}' missing 'kind'")
+                })?;
+                let kind = OpDecisionKind::from_str(kind_s).ok_or_else(|| {
+                    anyhow::anyhow!("recipe.json: op site '{site}' has unknown kind '{kind_s}'")
+                })?;
+                ops.push(RecipeOp { site, kind });
+            }
+        }
+        Ok(Recipe { name, sites, ops })
     }
 
     pub fn load(path: &Path) -> anyhow::Result<Recipe> {
@@ -314,9 +582,21 @@ impl Recipe {
     // diff
     // ----------------------------------------------------------------
 
-    /// Sites whose decision differs between two recipes, in census
-    /// order.  `left`/`right` are `None` where one recipe has no entry
-    /// for the site at all (census mismatch).
+    /// Op decision kind for a site, if the recipe flips it.
+    fn op_kind(&self, site: &str) -> Option<OpDecisionKind> {
+        self.ops
+            .iter()
+            .find(|op| op.site == site)
+            .map(|op| op.kind)
+    }
+
+    /// Sites whose decision differs between two recipes, sorted by
+    /// `(site, kind)` so the output is deterministic whatever order the
+    /// recipes' rows came in (census order on the left used to leak
+    /// through and shuffle one-sided rows to the tail).  `left`/`right`
+    /// are `None` where one recipe has no entry for the MatMul site at
+    /// all (census mismatch); for op rows absence means the FP32 kernel,
+    /// so the absent side reads `"fp32"` instead.
     pub fn diff(&self, other: &Recipe) -> Vec<RecipeDiff> {
         let mut out = Vec::new();
         for rs in &self.sites {
@@ -324,11 +604,13 @@ impl Recipe {
                 Some(d) if *d == rs.decision => {}
                 Some(d) => out.push(RecipeDiff {
                     site: rs.site.clone(),
+                    kind: "precision",
                     left: Some(rs.decision.to_string()),
                     right: Some(d.to_string()),
                 }),
                 None => out.push(RecipeDiff {
                     site: rs.site.clone(),
+                    kind: "precision",
                     left: Some(rs.decision.to_string()),
                     right: None,
                 }),
@@ -338,11 +620,33 @@ impl Recipe {
             if self.decision(&rs.site).is_none() {
                 out.push(RecipeDiff {
                     site: rs.site.clone(),
+                    kind: "precision",
                     left: None,
                     right: Some(rs.decision.to_string()),
                 });
             }
         }
+        for op in &self.ops {
+            if other.op_kind(&op.site) != Some(op.kind) {
+                out.push(RecipeDiff {
+                    site: op.site.clone(),
+                    kind: op.kind.as_str(),
+                    left: Some(op.kind.as_str().to_string()),
+                    right: Some("fp32".to_string()),
+                });
+            }
+        }
+        for op in &other.ops {
+            if self.op_kind(&op.site) != Some(op.kind) {
+                out.push(RecipeDiff {
+                    site: op.site.clone(),
+                    kind: op.kind.as_str(),
+                    left: Some("fp32".to_string()),
+                    right: Some(op.kind.as_str().to_string()),
+                });
+            }
+        }
+        out.sort_by(|a, b| (a.site.as_str(), a.kind).cmp(&(b.site.as_str(), b.kind)));
         out
     }
 }
@@ -351,6 +655,9 @@ impl Recipe {
 #[derive(Debug, Clone, PartialEq)]
 pub struct RecipeDiff {
     pub site: String,
+    /// What differs: `"precision"` for MatMul rows, the op kind
+    /// (`"integer_ln"` / `"integer_softmax"`) for op rows.
+    pub kind: &'static str,
     /// Decision summary on the left recipe (`None` = site absent).
     pub left: Option<String>,
     /// Decision summary on the right recipe (`None` = site absent).
@@ -416,6 +723,12 @@ pub struct RecipeBuilder<'a> {
     default_mode: CalibrationMode,
     quantize_sparse: bool,
     overrides: Vec<(String, Override)>,
+    /// `RequantFused` selectors: matching INT8 sites get `fused: true`.
+    fused: Vec<String>,
+    /// `PerChannel` selectors: matching INT8 sites get `per_channel: true`.
+    per_channel: Vec<String>,
+    /// `IntegerLn` / `IntegerSoftmax` selectors against the op census.
+    op_flips: Vec<(String, OpDecisionKind)>,
 }
 
 impl<'a> RecipeBuilder<'a> {
@@ -427,6 +740,9 @@ impl<'a> RecipeBuilder<'a> {
             default_mode,
             quantize_sparse: false,
             overrides: Vec::new(),
+            fused: Vec::new(),
+            per_channel: Vec::new(),
+            op_flips: Vec::new(),
         }
     }
 
@@ -467,6 +783,50 @@ impl<'a> RecipeBuilder<'a> {
         self
     }
 
+    /// `RequantFused`: INT8 sites matching `selector` requantize their
+    /// i32 accumulator straight onto the consumer's integer grid (no
+    /// f32 round-trip).  Sites that end up FP32 are unaffected.
+    pub fn requant_fused(mut self, selector: &str) -> Self {
+        self.fused.push(selector.to_string());
+        self
+    }
+
+    /// `PerChannel`: INT8 sites matching `selector` use per-output-
+    /// channel B scales resolved from the weights at plan build.
+    /// Weightless dynamic sites (qk/pv) matching the glob keep their
+    /// single activation scale — the flag is meaningful only where a
+    /// weight tensor exists, so `*` stays usable.
+    pub fn per_channel(mut self, selector: &str) -> Self {
+        self.per_channel.push(selector.to_string());
+        self
+    }
+
+    /// `IntegerLn`: LayerNorm op sites matching `selector` run the
+    /// i32-domain fixed-point kernel.
+    pub fn integer_ln(mut self, selector: &str) -> Self {
+        self.op_flips
+            .push((selector.to_string(), OpDecisionKind::IntegerLn));
+        self
+    }
+
+    /// `IntegerSoftmax`: softmax op sites matching `selector` run the
+    /// fixed-point LUT kernel.
+    pub fn integer_softmax(mut self, selector: &str) -> Self {
+        self.op_flips
+            .push((selector.to_string(), OpDecisionKind::IntegerSoftmax));
+        self
+    }
+
+    /// The fully-integer configuration: fuse every requantize, resolve
+    /// per-channel weight scales everywhere, and flip every LayerNorm
+    /// and softmax to its integer kernel.
+    pub fn fully_integer(self) -> Self {
+        self.requant_fused("*")
+            .per_channel("*")
+            .integer_ln("*")
+            .integer_softmax("*")
+    }
+
     pub fn build(self) -> anyhow::Result<Recipe> {
         for (sel, _) in &self.overrides {
             anyhow::ensure!(
@@ -475,14 +835,29 @@ impl<'a> RecipeBuilder<'a> {
                 self.sites.len()
             );
         }
+        for sel in self.fused.iter().chain(&self.per_channel) {
+            anyhow::ensure!(
+                self.sites.iter().any(|(_, n)| glob_match(sel, n)),
+                "recipe selector '{sel}' matches no MatMul site in the {}-site census",
+                self.sites.len()
+            );
+        }
+        let op_census = op_site_names(self.sites);
+        for (sel, kind) in &self.op_flips {
+            anyhow::ensure!(
+                op_census
+                    .iter()
+                    .any(|n| OpDecisionKind::for_site(n) == Some(*kind) && glob_match(sel, n)),
+                "recipe selector '{sel}' matches no {} op site in the {}-op census",
+                kind.as_str(),
+                op_census.len()
+            );
+        }
         let mut out = Vec::with_capacity(self.sites.len());
         for (_, name) in self.sites.iter() {
             let mut decision =
                 match derive_site(self.table, name, self.default_mode, self.quantize_sparse) {
-                    Some(q) => Decision::Int8 {
-                        quant: q,
-                        mode: Some(self.default_mode),
-                    },
+                    Some(q) => Decision::int8(q, Some(self.default_mode)),
                     None => Decision::Fp32,
                 };
             for (sel, ov) in &self.overrides {
@@ -499,33 +874,59 @@ impl<'a> RecipeBuilder<'a> {
                                 m.as_str()
                             )
                         })?;
-                        Decision::Int8 {
-                            quant: q,
-                            mode: Some(*m),
-                        }
+                        Decision::int8(q, Some(*m))
                     }
-                    Override::Params(q) => Decision::Int8 {
-                        quant: q.clone(),
-                        mode: None,
-                    },
+                    Override::Params(q) => Decision::int8(q.clone(), None),
                 };
+            }
+            if let Decision::Int8 {
+                fused, per_channel, ..
+            } = &mut decision
+            {
+                *fused = self.fused.iter().any(|sel| glob_match(sel, name));
+                *per_channel = self.per_channel.iter().any(|sel| glob_match(sel, name));
             }
             out.push(RecipeSite {
                 site: name.to_string(),
                 decision,
             });
         }
+        // op flips resolve in op-census order, one row per flipped site
+        let mut ops = Vec::new();
+        for op_site in &op_census {
+            let kind = match OpDecisionKind::for_site(op_site) {
+                Some(k) => k,
+                None => continue,
+            };
+            if self
+                .op_flips
+                .iter()
+                .any(|(sel, k)| *k == kind && glob_match(sel, op_site))
+            {
+                ops.push(RecipeOp {
+                    site: op_site.clone(),
+                    kind,
+                });
+            }
+        }
+        let customized = !self.overrides.is_empty()
+            || self.quantize_sparse
+            || !self.fused.is_empty()
+            || !self.per_channel.is_empty()
+            || !self.op_flips.is_empty();
         let name = match self.name {
             Some(name) => name,
             // unnamed + uncustomized: the well-known default identity;
             // unnamed + customized: anonymous, so Recipe::id falls back
             // to the content hash instead of impersonating the default
-            None if self.overrides.is_empty() && !self.quantize_sparse => {
-                format!("int8-{}", self.default_mode.as_str())
-            }
+            None if !customized => format!("int8-{}", self.default_mode.as_str()),
             None => String::new(),
         };
-        let recipe = Recipe { name, sites: out };
+        let recipe = Recipe {
+            name,
+            sites: out,
+            ops,
+        };
         recipe.validate(self.sites)?;
         Ok(recipe)
     }
@@ -809,5 +1210,219 @@ mod tests {
         r.validate(&sites).unwrap();
         assert_eq!(r.int8_site_count(), 0);
         assert_eq!(r.id(), "fp32");
+    }
+
+    #[test]
+    fn op_census_follows_layer_structure() {
+        // tiny_cfg is 1 encoder + 1 decoder layer
+        let names = op_site_names(&census());
+        assert_eq!(
+            names,
+            vec![
+                "enc.0.attn.softmax",
+                "enc.0.ln1",
+                "enc.0.ln2",
+                "dec.0.self.softmax",
+                "dec.0.cross.softmax",
+                "dec.0.ln1",
+                "dec.0.ln2",
+                "dec.0.ln3",
+            ]
+        );
+        for n in &names {
+            let k = OpDecisionKind::for_site(n).expect("census site must imply a kind");
+            if n.ends_with(".softmax") {
+                assert_eq!(k, OpDecisionKind::IntegerSoftmax);
+            } else {
+                assert_eq!(k, OpDecisionKind::IntegerLn);
+            }
+        }
+    }
+
+    #[test]
+    fn fully_integer_flips_everything() {
+        let t = table();
+        let sites = census();
+        let r = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .quantize_sparse(true)
+            .fully_integer()
+            .name("full-int")
+            .build()
+            .unwrap();
+        r.validate(&sites).unwrap();
+        for rs in r.iter() {
+            assert!(rs.decision.is_fused(), "{} not fused", rs.site);
+            assert!(rs.decision.is_per_channel(), "{} not per-channel", rs.site);
+        }
+        let op_census = op_site_names(&sites);
+        assert_eq!(r.ops_iter().count(), op_census.len());
+        assert!(r.integer_ln("enc.0.ln1"));
+        assert!(r.integer_ln("dec.0.ln3"));
+        assert!(r.integer_softmax("dec.0.cross.softmax"));
+        assert!(!r.integer_softmax("enc.0.ln1")); // kind mismatch
+    }
+
+    #[test]
+    fn integer_kind_selectors_validate_against_op_census() {
+        let t = table();
+        let sites = census();
+        // a softmax glob that only matches LN sites is a hard error
+        let err = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .integer_softmax("*.ln1")
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("matches no integer_softmax op site"), "{err}");
+        let err = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .integer_ln("enc.9.*")
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("matches no integer_ln op site"), "{err}");
+        let err = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .requant_fused("enc.9.*")
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("matches no MatMul site"), "{err}");
+        // scoped flips only touch their glob
+        let r = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .integer_ln("dec.*")
+            .requant_fused("enc.*")
+            .build()
+            .unwrap();
+        assert!(r.integer_ln("dec.0.ln1") && !r.integer_ln("enc.0.ln1"));
+        assert!(r.decision("enc.0.attn.q").unwrap().is_fused());
+        assert!(!r.decision("dec.0.self.q").unwrap().is_fused());
+    }
+
+    #[test]
+    fn validation_rejects_bad_op_rows() {
+        let sites = census();
+        let base = Recipe::fp32(&sites);
+        // unknown op site
+        let r = Recipe::from_parts(
+            "x",
+            base.sites.clone(),
+            vec![RecipeOp {
+                site: "enc.7.ln1".to_string(),
+                kind: OpDecisionKind::IntegerLn,
+            }],
+        );
+        let err = r.validate(&sites).unwrap_err();
+        assert!(err.to_string().contains("unknown op site"), "{err}");
+        // duplicate op site
+        let dup = RecipeOp {
+            site: "enc.0.ln1".to_string(),
+            kind: OpDecisionKind::IntegerLn,
+        };
+        let r = Recipe::from_parts("x", base.sites.clone(), vec![dup.clone(), dup]);
+        let err = r.validate(&sites).unwrap_err();
+        assert!(err.to_string().contains("duplicate op decision"), "{err}");
+        // kind contradicting the site name
+        let r = Recipe::from_parts(
+            "x",
+            base.sites.clone(),
+            vec![RecipeOp {
+                site: "enc.0.ln1".to_string(),
+                kind: OpDecisionKind::IntegerSoftmax,
+            }],
+        );
+        let err = r.validate(&sites).unwrap_err();
+        assert!(err.to_string().contains("cannot carry kind"), "{err}");
+    }
+
+    #[test]
+    fn v2_json_round_trip_with_flags_and_ops() {
+        let t = table();
+        let sites = census();
+        let r = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .quantize_sparse(true)
+            .fully_integer()
+            .name("full-int")
+            .build()
+            .unwrap();
+        let j = r.to_json();
+        assert_eq!(j.get("version").and_then(Json::as_usize), Some(2));
+        let back = Recipe::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(r, back);
+        assert_eq!(r.content_hash(), back.content_hash());
+        back.validate(&sites).unwrap();
+        // a plain recipe still serializes as v1 with no flag keys
+        let plain = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .build()
+            .unwrap();
+        let pj = plain.to_json();
+        assert_eq!(pj.get("version").and_then(Json::as_usize), Some(1));
+        let text = pj.to_string();
+        assert!(!text.contains("fused") && !text.contains("ops"), "{text}");
+    }
+
+    #[test]
+    fn content_hash_tracks_integer_kinds() {
+        let t = table();
+        let sites = census();
+        let plain = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .build()
+            .unwrap();
+        let fused = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .requant_fused("*")
+            .build()
+            .unwrap();
+        let with_ops = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .integer_ln("*")
+            .build()
+            .unwrap();
+        assert_ne!(plain.content_hash(), fused.content_hash());
+        assert_ne!(plain.content_hash(), with_ops.content_hash());
+        assert_ne!(fused.content_hash(), with_ops.content_hash());
+    }
+
+    #[test]
+    fn diff_is_sorted_by_site_then_kind() {
+        let t = table();
+        let sites = census();
+        // left: integer ops everywhere; right: plain, with one precision
+        // change so both row kinds appear
+        let a = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .integer_ln("*")
+            .integer_softmax("*")
+            .build()
+            .unwrap();
+        let b = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .force_fp32("enc.0.attn.q")
+            .build()
+            .unwrap();
+        let d = a.diff(&b);
+        // every op flip plus the one precision change
+        assert_eq!(d.len(), op_site_names(&sites).len() + 1);
+        let keys: Vec<(String, &str)> =
+            d.iter().map(|r| (r.site.clone(), r.kind)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted, "diff rows must come sorted by (site, kind)");
+        // pin the exact leading rows: BTree order is deterministic
+        assert_eq!(d[0].site, "dec.0.cross.softmax");
+        assert_eq!(d[0].kind, "integer_softmax");
+        assert_eq!(d[0].left.as_deref(), Some("integer_softmax"));
+        assert_eq!(d[0].right.as_deref(), Some("fp32"));
+        let prec = d.iter().find(|r| r.kind == "precision").unwrap();
+        assert_eq!(prec.site, "enc.0.attn.q");
+        assert!(prec.left.as_deref().unwrap().starts_with("int8"));
+        assert_eq!(prec.right.as_deref(), Some("fp32"));
+        // symmetric comparison flips sides, not order
+        let d2 = b.diff(&a);
+        assert_eq!(d2.len(), d.len());
+        assert_eq!(d2[0].left.as_deref(), Some("fp32"));
+        assert_eq!(d2[0].right.as_deref(), Some("integer_softmax"));
+    }
+
+    #[test]
+    fn display_marks_fused_and_per_channel() {
+        let t = table();
+        let sites = census();
+        let r = RecipeBuilder::new(&t, &sites, CalibrationMode::Symmetric)
+            .fully_integer()
+            .build()
+            .unwrap();
+        let s = r.decision("enc.0.attn.q").unwrap().to_string();
+        assert!(s.contains(" fused") && s.contains(" per-channel"), "{s}");
     }
 }

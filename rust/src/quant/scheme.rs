@@ -57,10 +57,54 @@ impl QuantParams {
     }
 }
 
+/// Per-output-channel symmetric scales for a `[k, n]` weight: one
+/// max-abs-derived scale per column (Wu, "Learning Accurate Integer
+/// Transformer Machine-Translation Models" §3 — per-column grids keep
+/// narrow channels from being crushed by one wide outlier column).
+///
+/// Each scale maps the column's `[-maxabs, maxabs]` onto `[-127, 127]`
+/// of the u8 grid (zero point 128), exactly like the per-tensor
+/// `b_scale` but resolved per channel.  The fused requantize epilogue
+/// consumes these as its per-channel combined multiplier.
+pub fn per_channel_scales(w: &[f32], k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(w.len(), k * n, "per_channel_scales shape");
+    let mut maxabs = vec![0.0f32; n];
+    for row in w.chunks_exact(n) {
+        for (m, &x) in maxabs.iter_mut().zip(row) {
+            *m = m.max(x.abs());
+        }
+    }
+    maxabs
+        .into_iter()
+        .map(|m| m.max(f32::MIN_POSITIVE) / INT8_MAX)
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::prop::check;
+
+    #[test]
+    fn per_channel_scales_cover_each_column() {
+        // column maxima map to 127 exactly; a zero column stays positive
+        let w = vec![
+            1.0f32, -0.02, 0.0, //
+            -2.0, 0.01, 0.0, //
+        ];
+        let s = per_channel_scales(&w, 2, 3);
+        assert_eq!(s.len(), 3);
+        assert!((s[0] - 2.0 / INT8_MAX).abs() < 1e-7);
+        assert!((s[1] - 0.02 / INT8_MAX).abs() < 1e-9);
+        assert!(s[2] > 0.0, "zero column must keep a positive scale");
+        // every element must round-trip inside the u8 grid
+        for (p, row) in w.chunks_exact(3).enumerate() {
+            for (j, &x) in row.iter().enumerate() {
+                let q = (x / s[j]).round();
+                assert!(q.abs() <= 127.0, "({p},{j}) out of range");
+            }
+        }
+    }
 
     #[test]
     fn symmetric_zero_is_exact() {

@@ -1,0 +1,348 @@
+//! Fixed-point softmax and i32-domain LayerNorm: the non-MatMul glue
+//! ops the paper left in FP32 (§3), made integer so the INT8 path never
+//! has to dequantize between GEMMs.
+//!
+//! Both ops consume raw i32 values whose *scale is known statically*
+//! (a GEMM accumulator at `sa * sb`, or the residual stream at the
+//! layer's activation scale) and emit i8 directly on the next
+//! consumer's grid.  They are property-tested against the f32
+//! references in [`super::ops`] with bounded error, not bit parity —
+//! the f32 ops are the semantic pins ("Towards Fully 8-bit Integer
+//! Inference for the Transformer Model", Lin et al., has the same
+//! contract for its L1-norm/LUT replacements).
+//!
+//! ## Softmax
+//!
+//! Logit `x_j = acc_j * s` for a per-site constant `s`, so the stable
+//! form `exp(x_j - max)` becomes `exp(-(max - acc_j) * s)` over
+//! *non-negative integer* differences.  `s` is folded into a Q24
+//! multiplier at plan time; `exp(-t)` is one shared 512-entry Q15 LUT
+//! over `t in [0, 16)` (beyond 16 the true value is < 1.2e-7 — below
+//! half a Q15 ulp); normalization is an integer division producing i8
+//! probabilities at the fixed scale [`PROB_SCALE`] (zero point 0).
+//!
+//! ## LayerNorm
+//!
+//! Row statistics come from exact `i64` sums of the i32 residual (the
+//! per-row `1/sqrt` is two f64 scalar ops per *row*, never per
+//! element); the per-element work is a fixed-point chain: center in
+//! Q16, scale by the row's Q30 inverse-stddev, apply the per-channel
+//! Q16 multiplier `gamma_j / s_out`, add `round(beta_j / s_out)` and
+//! the output zero point.  The activation scale cancels out of the
+//! normalized value, so only the `eps` floor needs rescaling into
+//! integer units.
+
+use std::sync::OnceLock;
+
+/// Sentinel for masked attention scores (padding / causal): treated as
+/// probability zero and never selected as the row max unless the whole
+/// row is masked (which the attention layouts preclude).
+pub const MASKED: i32 = i32::MIN;
+
+/// Scale of the i8 probabilities [`integer_softmax_rows`] emits
+/// (zero point 0): probabilities lie in `[0, 1]`, so the grid is fixed
+/// rather than calibrated.
+pub const PROB_SCALE: f32 = 1.0 / 127.0;
+
+const EXP_LUT_SIZE: usize = 512;
+/// log2 of LUT entries per unit of `t` (32/unit -> span `[0, 16)`).
+const EXP_STEP_BITS: u32 = 5;
+/// Q16 index shift: `t_q16 >> 11` selects the entry.
+const EXP_IDX_SHIFT: u32 = 16 - EXP_STEP_BITS;
+/// Saturation cutoff in Q16 (`t >= 16.0` -> 0).
+const EXP_T_CUT: i64 = (EXP_LUT_SIZE as i64) << EXP_IDX_SHIFT;
+
+/// Shared `exp(-t)` table, Q15 midpoint samples.
+fn exp_lut() -> &'static [u16; EXP_LUT_SIZE] {
+    static LUT: OnceLock<[u16; EXP_LUT_SIZE]> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [0u16; EXP_LUT_SIZE];
+        let step = 1.0 / (1u64 << EXP_STEP_BITS) as f64;
+        for (i, e) in t.iter_mut().enumerate() {
+            let mid = (i as f64 + 0.5) * step;
+            *e = ((-mid).exp() * 32768.0).round() as u16;
+        }
+        t
+    })
+}
+
+/// Per-site softmax constant: the accumulator-to-logit scale
+/// (`qk_a_scale * qk_b_scale / sqrt(d_head)`) as a Q24 fixed-point
+/// multiplier, resolved once in `CompiledPlan`.
+#[derive(Debug, Clone, Copy)]
+pub struct IntSoftmax {
+    /// `round(acc_scale * 2^24)`, floored at 1 so coarse accumulator
+    /// grids never collapse the distribution to uniform.
+    pub mult_q24: i64,
+}
+
+impl IntSoftmax {
+    pub fn new(acc_scale: f32) -> Self {
+        let m = (acc_scale as f64 * (1i64 << 24) as f64).round() as i64;
+        IntSoftmax { mult_q24: m.max(1) }
+    }
+}
+
+/// Fixed-point softmax over rows of `cols` i32 scores (logit = score *
+/// `sm` scale), emitting i8 probabilities at [`PROB_SCALE`].  Masked
+/// entries ([`MASKED`]) get probability 0.  `e_buf` is caller-owned
+/// scratch (one row of Q15 exponentials).
+pub fn integer_softmax_rows(
+    scores: &[i32],
+    cols: usize,
+    sm: &IntSoftmax,
+    e_buf: &mut Vec<i32>,
+    out: &mut [i8],
+) {
+    assert!(cols > 0 && scores.len() % cols == 0, "softmax row shape");
+    assert_eq!(scores.len(), out.len());
+    let lut = exp_lut();
+    e_buf.resize(cols, 0);
+    for (row, orow) in scores.chunks(cols).zip(out.chunks_mut(cols)) {
+        let max = row.iter().copied().max().expect("cols > 0");
+        let mut sum = 0i64;
+        for (e, &x) in e_buf.iter_mut().zip(row) {
+            *e = if x == MASKED {
+                0
+            } else {
+                let t_q16 = ((max as i64 - x as i64) * sm.mult_q24) >> 8;
+                if t_q16 >= EXP_T_CUT {
+                    0
+                } else {
+                    lut[(t_q16 >> EXP_IDX_SHIFT) as usize] as i32
+                }
+            };
+            sum += *e as i64;
+        }
+        if sum == 0 {
+            // fully-masked row (defensive): emit the zero distribution
+            orow.fill(0);
+            continue;
+        }
+        for (o, &e) in orow.iter_mut().zip(e_buf.iter()) {
+            *o = ((e as i64 * 127 + sum / 2) / sum) as i8;
+        }
+    }
+}
+
+/// Per-site integer LayerNorm constants, resolved once in
+/// `CompiledPlan` from the FP32 gamma/beta, the residual activation
+/// scale `sx`, and the output grid `(s_out, out_zero)`.
+#[derive(Debug, Clone, Default)]
+pub struct LnInt {
+    /// `round(gamma_j / s_out * 2^16)` — per-channel Q16 multiplier.
+    pub gq: Vec<i64>,
+    /// `round(beta_j / s_out)` — per-channel offset on the output grid.
+    pub bq: Vec<i32>,
+    /// Output grid zero point.
+    pub out_zero: i32,
+    /// `eps / sx^2`: the variance floor rescaled into integer units
+    /// (the activation scale cancels out of the normalized value).
+    pub eps_r: f64,
+}
+
+impl LnInt {
+    pub fn new(
+        gamma: &[f32],
+        beta: &[f32],
+        sx: f32,
+        out_scale: f32,
+        out_zero: i32,
+        eps: f32,
+    ) -> Self {
+        assert_eq!(gamma.len(), beta.len());
+        let so = out_scale as f64;
+        LnInt {
+            gq: gamma
+                .iter()
+                .map(|&g| (g as f64 / so * 65536.0).round() as i64)
+                .collect(),
+            bq: beta.iter().map(|&b| (b as f64 / so).round() as i32).collect(),
+            out_zero,
+            eps_r: eps as f64 / (sx as f64 * sx as f64),
+        }
+    }
+}
+
+/// i32-domain LayerNorm over rows of `cols` integers at a common
+/// activation scale, emitting i8 on the output grid described by `lni`.
+///
+/// Statistics are exact (i64 sums, resolved to two f64 scalars per
+/// row); the per-element chain is pure integer: center in Q16, multiply
+/// by the Q30 row inverse-stddev, apply the Q16 channel multiplier,
+/// round once onto the output grid.  Residual magnitudes are bounded by
+/// `|r_j| <= 2^25` (any realistic activation/scale pair) so every i64
+/// intermediate has headroom: the centered deviation obeys
+/// `|dev_j| <= sqrt(cols * var)`, making `|dev_q16 * rstd_q30| <=
+/// sqrt(cols) * 2^46`.
+pub fn integer_layer_norm_rows(r: &[i32], cols: usize, lni: &LnInt, out: &mut [i8]) {
+    assert!(cols > 0 && r.len() % cols == 0, "layernorm row shape");
+    assert_eq!(r.len(), out.len());
+    assert_eq!(lni.gq.len(), cols, "gamma width");
+    assert_eq!(lni.bq.len(), cols, "beta width");
+    for (row, orow) in r.chunks(cols).zip(out.chunks_mut(cols)) {
+        let mut sum = 0i64;
+        let mut sumsq = 0i64;
+        for &x in row {
+            let x = x as i64;
+            sum += x;
+            sumsq += x * x;
+        }
+        let mean = sum as f64 / cols as f64;
+        let var = (sumsq as f64 / cols as f64 - mean * mean).max(0.0);
+        let inv = 1.0 / (var + lni.eps_r).sqrt();
+        let mean_q16 = (mean * 65536.0).round() as i64;
+        let rstd_q30 = (inv * (1i64 << 30) as f64).round() as i64;
+        for ((o, &x), (&g, &b)) in orow
+            .iter_mut()
+            .zip(row)
+            .zip(lni.gq.iter().zip(lni.bq.iter()))
+        {
+            let dev_q16 = ((x as i64) << 16) - mean_q16;
+            let u_q14 = (dev_q16 * rstd_q30 + (1i64 << 31)) >> 32;
+            let scaled = (u_q14 * g + (1i64 << 29)) >> 30;
+            let q = scaled as i32 + b + lni.out_zero;
+            *o = q.clamp(-128, 127) as i8;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ops::{layer_norm_rows, softmax_rows};
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn single_element_row_is_certainty() {
+        let sm = IntSoftmax::new(0.01);
+        let mut e = Vec::new();
+        let mut out = vec![0i8; 3];
+        integer_softmax_rows(&[500, -20, 0], 1, &sm, &mut e, &mut out);
+        assert_eq!(out, vec![127i8; 3]);
+    }
+
+    #[test]
+    fn all_equal_scores_are_uniform() {
+        let sm = IntSoftmax::new(0.004);
+        let mut e = Vec::new();
+        let mut out = vec![0i8; 4];
+        integer_softmax_rows(&[77, 77, 77, 77], 4, &sm, &mut e, &mut out);
+        for &p in &out {
+            assert!((p as f32 * PROB_SCALE - 0.25).abs() < 0.01, "{out:?}");
+        }
+    }
+
+    #[test]
+    fn masked_entries_get_zero_probability() {
+        let sm = IntSoftmax::new(0.01);
+        let mut e = Vec::new();
+        let mut out = vec![0i8; 4];
+        integer_softmax_rows(&[100, MASKED, 100, MASKED], 4, &sm, &mut e, &mut out);
+        assert_eq!(out[1], 0);
+        assert_eq!(out[3], 0);
+        assert!((out[0] as f32 * PROB_SCALE - 0.5).abs() < 0.01);
+        // defensive: a fully-masked row is the zero distribution
+        integer_softmax_rows(&[MASKED; 4], 4, &sm, &mut e, &mut out);
+        assert_eq!(out, vec![0i8; 4]);
+    }
+
+    /// The satellite contract: the integer softmax tracks the f32
+    /// reference within bounded per-element and probability-mass error.
+    #[test]
+    fn integer_softmax_tracks_f32_reference() {
+        check("int softmax ~ f32 softmax", 0x50F7, 64, |rng, case| {
+            let cols = match case % 4 {
+                0 => 1,
+                1 => 2,
+                _ => rng.range(3, 96) as usize,
+            };
+            let rows = rng.range(1, 3) as usize;
+            // logits within +-8: the regime attention actually produces
+            let acc_scale = 0.0004 + (rng.f64() as f32) * 0.01;
+            let lim = (8.0 / acc_scale) as i64;
+            let scores: Vec<i32> = (0..rows * cols)
+                .map(|_| (rng.range(0, (2 * lim) as u64) as i64 - lim) as i32)
+                .collect();
+            let sm = IntSoftmax::new(acc_scale);
+            let mut e = Vec::new();
+            let mut got = vec![0i8; scores.len()];
+            integer_softmax_rows(&scores, cols, &sm, &mut e, &mut got);
+            let mut want: Vec<f32> = scores.iter().map(|&s| s as f32 * acc_scale).collect();
+            softmax_rows(&mut want, cols);
+            for r in 0..rows {
+                let mut mass = 0.0f32;
+                for c in 0..cols {
+                    let p = got[r * cols + c] as f32 * PROB_SCALE;
+                    mass += p;
+                    let d = (p - want[r * cols + c]).abs();
+                    if d > 0.05 {
+                        return Err(format!("p err {d} at ({r},{c}) cols={cols}"));
+                    }
+                }
+                if (mass - 1.0).abs() > 0.05 {
+                    return Err(format!("mass {mass} row {r} cols={cols}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ln_all_equal_row_emits_beta() {
+        // var = 0: normalized is exactly 0, output = beta on the grid
+        let gamma = vec![1.3f32, -0.5, 2.0];
+        let beta = vec![0.12f32, -0.3, 0.0];
+        let (sx, so, zo) = (0.05f32, 0.01f32, 3);
+        let lni = LnInt::new(&gamma, &beta, sx, so, zo, 1e-6);
+        let mut out = vec![0i8; 3];
+        integer_layer_norm_rows(&[42, 42, 42], 3, &lni, &mut out);
+        for (j, &o) in out.iter().enumerate() {
+            let want = ((beta[j] / so).round() as i32 + zo).clamp(-128, 127) as i8;
+            assert_eq!(o, want, "channel {j}");
+        }
+    }
+
+    /// The satellite contract for LayerNorm: bounded error against the
+    /// f32 reference (half an output quantum of rounding + fixed-point
+    /// slack), including the single-column degenerate shape.
+    #[test]
+    fn integer_layernorm_tracks_f32_reference() {
+        check("int layernorm ~ f32 layernorm", 0x1417, 64, |rng, case| {
+            let cols = match case % 4 {
+                0 => 1,
+                _ => rng.range(2, 128) as usize,
+            };
+            let rows = rng.range(1, 3) as usize;
+            let sx = 0.01 + (rng.f64() as f32) * 0.1;
+            let so = 0.01 + (rng.f64() as f32) * 0.05;
+            let zo = rng.range(0, 8) as i32 - 4;
+            let gamma: Vec<f32> = (0..cols).map(|_| (rng.f64() as f32) * 3.0 - 1.5).collect();
+            let beta: Vec<f32> = (0..cols).map(|_| (rng.f64() as f32) * 1.0 - 0.5).collect();
+            let r: Vec<i32> = (0..rows * cols)
+                .map(|_| rng.range(0, 600) as i32 - 300)
+                .collect();
+            let lni = LnInt::new(&gamma, &beta, sx, so, zo, 1e-6);
+            let mut got = vec![0i8; r.len()];
+            integer_layer_norm_rows(&r, cols, &lni, &mut got);
+            let mut want: Vec<f32> = r.iter().map(|&x| x as f32 * sx).collect();
+            for row in want.chunks_mut(cols) {
+                layer_norm_rows(row, cols, &gamma, &beta, 1e-6);
+            }
+            // rounding to the output grid (0.5*so), the Q16 beta grid
+            // (0.5*so), and fixed-point slack
+            let tol = so * 1.1 + 0.01;
+            for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                // both sides clamp to the representable range
+                let w_clamped = w
+                    .min((127 - zo) as f32 * so)
+                    .max((-128 - zo) as f32 * so);
+                let d = ((g as i32 - zo) as f32 * so - w_clamped).abs();
+                if d > tol {
+                    return Err(format!("ln err {d} (tol {tol}) at {i} cols={cols}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -9,6 +9,7 @@
 //! keeps the inference engine's inner loops transparent to profile.
 
 pub mod gather;
+pub mod iops;
 pub mod ops;
 
 use std::fmt;

@@ -146,6 +146,64 @@ mod tests {
         assert_close(&d, &[-1.0, 3.0], 1e-2);
     }
 
+    // -- edge cases shared as the reference contract the integer
+    //    variants in `tensor::iops` are property-tested against --
+
+    #[test]
+    fn softmax_single_column_rows_are_certainty() {
+        // cols = 1: every row is the degenerate distribution [1.0],
+        // whatever the logit (including extreme ones)
+        let mut d = vec![-1e9f32, 0.0, 1e9, 42.0];
+        softmax_rows(&mut d, 1);
+        assert_eq!(d, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn softmax_all_equal_logits_are_uniform() {
+        // ties must split exactly: exp(0) == 1 for every entry, and the
+        // normalizer is the column count
+        for cols in [2usize, 3, 7] {
+            let mut d = vec![5.5f32; cols * 2];
+            softmax_rows(&mut d, cols);
+            for &p in &d {
+                assert_eq!(p, 1.0 / cols as f32, "cols={cols}");
+            }
+        }
+    }
+
+    #[test]
+    fn layernorm_single_column_rows_collapse_to_beta() {
+        // cols = 1: variance is identically 0, the normalized value is
+        // 0/sqrt(eps) = 0, so the output is exactly beta
+        let mut d = vec![3.0f32, -7.0, 0.0];
+        layer_norm_rows(&mut d, 1, &[2.0], &[0.25], 1e-6);
+        assert_eq!(d, vec![0.25; 3]);
+    }
+
+    #[test]
+    fn layernorm_all_equal_row_emits_beta() {
+        let mut d = vec![9.0f32; 4];
+        let beta = [0.5f32, -0.5, 0.0, 2.0];
+        layer_norm_rows(&mut d, 4, &[1.0; 4], &beta, 1e-6);
+        for (x, b) in d.iter().zip(&beta) {
+            assert!((x - b).abs() < 1e-3, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn layernorm_denormal_scale_gamma_stays_finite() {
+        // gamma at the edge of f32 denormals must neither produce NaN
+        // nor infinities — the output just collapses toward beta
+        let tiny = f32::MIN_POSITIVE; // smallest normal
+        let denormal = tiny / 8.0; // subnormal
+        let mut d = vec![1.0f32, 2.0, 3.0, 4.0];
+        layer_norm_rows(&mut d, 4, &[denormal; 4], &[0.125; 4], 1e-6);
+        for &x in &d {
+            assert!(x.is_finite(), "{d:?}");
+            assert!((x - 0.125).abs() < 1e-4, "{d:?}");
+        }
+    }
+
     #[test]
     fn relu_clamps() {
         let mut d = vec![-1.0, 0.0, 2.0];

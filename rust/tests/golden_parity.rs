@@ -1098,10 +1098,7 @@ fn to_recipe(cfg: &ModelConfig, plan: &Plan) -> Recipe {
             .into_iter()
             .map(|site| {
                 let decision = match plan.get(&site).cloned().flatten() {
-                    Some(q) => Decision::Int8 {
-                        quant: q,
-                        mode: None,
-                    },
+                    Some(q) => Decision::int8(q, None),
                     None => Decision::Fp32,
                 };
                 RecipeSite { site, decision }

@@ -1,0 +1,131 @@
+//! End-to-end tests of the fully-integer inference path.
+//!
+//! With every MatMul site fused (+ per-channel) and every
+//! LayerNorm/softmax flipped to its integer kernel, the engine must
+//! (a) still translate under both greedy and beam decode, (b) track
+//! the FP32 engine loosely, and (c) touch f32 **exactly once** on the
+//! way into each phase and once on the way out — asserted via the
+//! profiler's pass counts and conversion-byte counters, which is the
+//! "zero interior quantize/dequantize hops" acceptance gate.
+
+use quantnmt::model::beam::{translate_beam, BeamConfig};
+use quantnmt::model::profiler::{OpKind, Profiler};
+use quantnmt::model::testutil::{full_int_recipe, loose_recipe, random_weights, tiny_cfg};
+use quantnmt::model::Engine;
+use quantnmt::specials::BOS_ID;
+
+fn int_engine(seed: u64) -> Engine {
+    let cfg = tiny_cfg();
+    let recipe = full_int_recipe(&cfg);
+    Engine::with_recipe(cfg.clone(), random_weights(&cfg, seed), &recipe).unwrap()
+}
+
+fn sources() -> Vec<Vec<u32>> {
+    vec![vec![3, 4, 5, 6], vec![7, 8, 9], vec![10, 11]]
+}
+
+/// (Quantize passes, Dequantize passes) since the last reset.
+fn hops(eng: &Engine) -> (u64, u64) {
+    let q = eng.profiler.count(OpKind::Quantize);
+    let dq = eng.profiler.count(OpKind::Dequantize);
+    (q, dq)
+}
+
+/// Encode: one Quantize in, one Dequantize out (the memory).
+/// Admit: one Quantize, zero Dequantize — cross K/V go straight to u8.
+/// Each decode step: one Quantize (token rows), one Dequantize
+/// (logits).  Anything above these budgets is an interior FP32 island.
+#[test]
+fn fully_integer_phases_hit_the_conversion_budget() {
+    let mut eng = int_engine(7);
+    let compiled_int = eng.plan().int_plan().is_some();
+    assert!(compiled_int, "full-int recipe must compile an int plan");
+    eng.profiler = Profiler::enabled();
+
+    let src = sources();
+    let (memory, src_len, s) = eng.encode(&src);
+    assert_eq!(hops(&eng), (1, 1), "encode: one hop in, one hop out");
+    let interior = eng.profiler.requant_bytes();
+    assert!(interior > 0, "encode: fused requantize epilogues must run");
+
+    eng.profiler.reset();
+    let mut pool = eng.new_pool(src.len(), 8, s);
+    let active = eng.admit(&mut pool, &memory, &src_len, s).unwrap();
+    assert_eq!(hops(&eng), (1, 0), "admit: quantize onto M only, no dequantize");
+
+    let tokens = vec![BOS_ID; active.len()];
+    let mut logits = Vec::new();
+    for step in 0..3 {
+        eng.profiler.reset();
+        let truncated = eng.pool_step(&mut pool, &active, &tokens, &mut logits);
+        assert!(truncated.is_empty());
+        assert_eq!(hops(&eng), (1, 1), "step {step}: token rows in, logits out");
+        let rq = eng.profiler.requant_bytes();
+        assert!(rq > 0, "step {step}: fused epilogues ran");
+        assert_eq!(logits.len(), active.len() * eng.cfg.vocab_size);
+        assert!(logits.iter().all(|v| v.is_finite()), "step {step}: finite logits");
+    }
+}
+
+/// The unfused int8 recipe keeps the per-site hop structure: no int
+/// plan compiles and the encoder pays a dequantize per quantized site.
+#[test]
+fn unfused_engine_keeps_per_site_hops() {
+    let cfg = tiny_cfg();
+    let mut eng =
+        Engine::with_recipe(cfg.clone(), random_weights(&cfg, 7), &loose_recipe(&cfg)).unwrap();
+    assert!(eng.plan().int_plan().is_none());
+    eng.profiler = Profiler::enabled();
+    let _ = eng.encode(&sources());
+    let (_, dq) = hops(&eng);
+    assert!(dq > 1, "mixed path dequantizes per site, got {dq}");
+}
+
+#[test]
+fn fully_integer_greedy_runs_and_is_deterministic() {
+    let out_a = int_engine(7).translate_greedy(&sources(), 8);
+    let out_b = int_engine(7).translate_greedy(&sources(), 8);
+    assert_eq!(out_a.len(), 3);
+    assert_eq!(out_a, out_b, "integer decode must be run-to-run deterministic");
+    for row in &out_a {
+        assert!(row.len() <= 8);
+    }
+}
+
+#[test]
+fn fully_integer_beam_runs_end_to_end() {
+    let mut eng = int_engine(7);
+    let bc = BeamConfig {
+        beam: 2,
+        max_len: 8,
+        alpha: 0.6,
+    };
+    let res = translate_beam(&mut eng, &sources(), bc);
+    assert_eq!(res.translations.len(), 3);
+    for row in &res.translations {
+        assert!(row.len() <= 8);
+    }
+}
+
+/// Loose agreement with FP32: the fixture grids are coarse (symmetric
+/// ±8 activations), so this is a sanity band, not a parity check —
+/// it catches wrong multipliers / zero points, which shift the output
+/// by whole units, not by quantization noise.
+#[test]
+fn fully_integer_encoder_tracks_fp32_loosely() {
+    let cfg = tiny_cfg();
+    let w = random_weights(&cfg, 7);
+    let recipe = full_int_recipe(&cfg);
+    let mut fint = Engine::with_recipe(cfg.clone(), w.clone(), &recipe).unwrap();
+    let mut ffp = Engine::fp32(cfg, w).unwrap();
+    let src = sources();
+    let (mi, _, _) = fint.encode(&src);
+    let (mf, _, _) = ffp.encode(&src);
+    assert_eq!(mi.len(), mf.len());
+    let mut sum = 0.0f64;
+    for (a, b) in mi.iter().zip(&mf) {
+        sum += (a - b).abs() as f64;
+    }
+    let mad = sum / mi.len() as f64;
+    assert!(mad < 0.5, "integer encoder diverged from fp32: mad={mad}");
+}
