@@ -59,7 +59,7 @@ fn main() -> anyhow::Result<()> {
             .map(|i| {
                 let mut src = gen::token_seq(&mut rng, model_cfg.max_src_len - 1, 16);
                 src.push(EOS_ID);
-                TranslateRequest { id: i, src }
+                TranslateRequest::new(i, src)
             })
             .collect::<Vec<_>>()
     };

@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
     let ds = svc.dataset()?;
     let limit = args.get_usize("limit", ds.test.len()).min(ds.test.len());
     let streams = args.get_usize("streams", 2);
-    let policy = PolicyKind::parse_or(args.get("policy"), PolicyKind::BinPack);
+    let policy = PolicyKind::parse_or(args.get("policy"), PolicyKind::BinPack)?;
     let token_budget = args.get_usize("token-budget", DEFAULT_TOKEN_BUDGET);
     let pairs = &ds.test[..limit];
     println!(

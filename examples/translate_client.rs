@@ -1,0 +1,78 @@
+//! Minimal streaming client for `quantnmt serve --listen ADDR`: POSTs
+//! one token-id source to `/v1/translate` and prints SSE token events
+//! as they arrive, demonstrating the wire protocol (and, with
+//! `--cancel-after N`, mid-stream cancellation via `/v1/cancel`).
+//!
+//! Flags:
+//! * `--addr HOST:PORT`   server address (default 127.0.0.1:7070)
+//! * `--tenant NAME`      tenant to submit as (default tenant if absent)
+//! * `--src "5 9 12 7"`   whitespace-separated source token ids
+//!                        (EOS appended if missing; default demo source)
+//! * `--cancel-after N`   cancel the stream after N token events
+//!
+//! ```bash
+//! quantnmt serve --listen 127.0.0.1:7070 &
+//! cargo run --release --example translate_client -- --src "5 9 12 7"
+//! ```
+
+use std::io::Write;
+
+use quantnmt::coordinator::net::{self, ClientEvent};
+use quantnmt::specials::EOS_ID;
+use quantnmt::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let addr = args.get_or("addr", "127.0.0.1:7070");
+    let tenant = args.get("tenant");
+    let cancel_after = args.get_usize("cancel-after", usize::MAX);
+    let parse_src = |s: &str| -> anyhow::Result<Vec<u32>> {
+        s.split_whitespace()
+            .map(|t| {
+                t.parse::<u32>()
+                    .map_err(|_| anyhow::anyhow!("bad token id '{t}' in --src"))
+            })
+            .collect()
+    };
+    let mut src = match args.get("src") {
+        Some(s) => parse_src(s)?,
+        None => vec![5, 9, 12, 7],
+    };
+    if src.last() != Some(&EOS_ID) {
+        src.push(EOS_ID);
+    }
+
+    let mut stream = net::open_translate(addr, &src, tenant)?;
+    println!("queued as request {} on http://{addr}", stream.id);
+    let mut streamed = 0usize;
+    loop {
+        match stream.next_event()? {
+            ClientEvent::Token(t) => {
+                streamed += 1;
+                print!("{t} ");
+                std::io::stdout().flush().ok();
+                if streamed == cancel_after {
+                    net::cancel(addr, stream.id)?;
+                }
+            }
+            ClientEvent::Done(r) => {
+                println!();
+                println!(
+                    "done: {} tokens  done_seq {}  queue {:.1}ms  total {:.1}ms{}",
+                    r.out.len(),
+                    r.done_seq,
+                    r.queue_secs * 1e3,
+                    r.total_secs * 1e3,
+                    if r.truncated { "  (truncated)" } else { "" }
+                );
+                break;
+            }
+            ClientEvent::Cancelled => {
+                println!();
+                println!("cancelled after {streamed} streamed tokens");
+                break;
+            }
+        }
+    }
+    Ok(())
+}

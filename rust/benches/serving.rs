@@ -103,6 +103,76 @@ fn main() -> anyhow::Result<()> {
         }
         println!();
     }
+
+    // ---- loopback HTTP/SSE rung: the same Poisson trace through the
+    // socket front end vs in-process submission — every delta is the
+    // wire (HTTP parse + SSE framing + one connection thread per
+    // request), never the scheduler, which is continuous in both.
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    let http_n = if quick { 64.min(n) } else { 256.min(n) };
+    let http_rate = if quick { 100.0 } else { 200.0 };
+    let offsets = poisson_offsets(0x5EE7, http_n, http_rate);
+    let base_reqs = TranslateRequest::from_pairs(&ds.test[..http_n]);
+    let srcs: Vec<Vec<u32>> = base_reqs.iter().map(|r| r.src.clone()).collect();
+    println!("loopback HTTP/SSE vs in-process ({http_n} requests, Poisson {http_rate:.0}/s):");
+    for &shards in shard_counts {
+        let cfg = ServerConfig {
+            backend: int8.clone(),
+            shards,
+            max_wait: Duration::from_millis(20),
+            token_budget: 1024,
+            max_batch_rows: 64,
+            slots: 64,
+            queue_capacity: 4096,
+            pin_cores: false,
+            max_decode_len: 56,
+            scheduler: Scheduler::Continuous,
+            ..Default::default()
+        };
+        let reqs = base_reqs.clone();
+        let (metrics, _, _) = svc.serve(&cfg, |client| replay_trace(client, reqs, &offsets))?;
+        println!("  {shards} shard(s)  in-process     {}", metrics.row());
+
+        let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = std::thread::scope(|s| -> anyhow::Result<_> {
+            let server = {
+                let stop = Arc::clone(&stop);
+                let cfg = &cfg;
+                let svc = &svc;
+                s.spawn(move || svc.serve_net(cfg, listener, stop))
+            };
+            let start = std::time::Instant::now();
+            let clients: Vec<_> = srcs
+                .iter()
+                .zip(&offsets)
+                .map(|(src, off)| {
+                    let addr = &addr;
+                    let due = start + *off;
+                    s.spawn(move || {
+                        if let Some(w) = due.checked_duration_since(std::time::Instant::now()) {
+                            std::thread::sleep(w);
+                        }
+                        quantnmt::coordinator::net::translate_blocking(addr, src, None)
+                    })
+                })
+                .collect();
+            let mut done = 0usize;
+            for c in clients {
+                if c.join().expect("client thread").is_ok() {
+                    done += 1;
+                }
+            }
+            stop.store(true, Ordering::Release);
+            let (metrics, _) = server.join().expect("server thread")?;
+            assert_eq!(done, http_n, "loopback rung lost responses");
+            Ok(metrics)
+        })?;
+        println!("  {shards} shard(s)  loopback HTTP  {}", metrics.row());
+    }
+    println!();
     println!("regenerate the EXPERIMENTS.md online tables with: cargo bench --bench serving");
     Ok(())
 }

@@ -122,10 +122,16 @@ pub struct ServerMetrics {
     /// requests rejected at admission by backpressure (queue full or
     /// closing) — retryable load, distinct from `shed_oversize`
     pub shed: usize,
-    /// requests rejected as unservable: empty, or longer than the
+    /// requests rejected as unservable: empty, longer than the
     /// backend can decode (at admission, or — continuous scheduler —
-    /// by a shard at splice time).  Not load: a retry would shed again
+    /// by a shard at splice time), or naming an unknown tenant.  Not
+    /// load: a retry would shed again
     pub shed_oversize: usize,
+    /// requests rejected by a per-tenant token-rate limit — the
+    /// tenant's own budget, not server backpressure
+    pub shed_rate: usize,
+    /// admitted requests purged by cancellation (never answered)
+    pub cancelled: usize,
     /// dynamic batches formed
     pub batches: usize,
     /// real (non-pad) tokens processed
@@ -167,6 +173,50 @@ pub struct ServerMetrics {
     /// per-shard page-pool high-water mark as a fraction of the budget
     /// (continuous only; 1.0 means the shard ran into its cap)
     pub shard_page_high: Vec<f64>,
+    /// per-tenant accounting, one row per tenant in roster order —
+    /// empty on single-tenant runs, so their reports are unchanged
+    pub tenants: Vec<TenantMetrics>,
+}
+
+/// One tenant's slice of a serving run: admission outcomes, latency
+/// and the completion-order evidence that weighted-fair dequeue
+/// honored its configured share (under saturation a heavier tenant's
+/// requests finish earlier, so its mean `done_seq` ordinal is lower).
+#[derive(Debug, Clone)]
+pub struct TenantMetrics {
+    pub name: String,
+    /// configured weighted-fair share
+    pub weight: f64,
+    /// requests admitted past this tenant's gates
+    pub accepted: usize,
+    /// requests shed by backpressure while this tenant submitted
+    pub shed: usize,
+    /// requests shed by this tenant's token-rate limit
+    pub shed_rate: usize,
+    /// requests completed (answered) for this tenant
+    pub requests: usize,
+    /// enqueue -> done, this tenant's requests only
+    pub total_latency: LatencyStats,
+    /// mean global completion ordinal of this tenant's responses
+    pub mean_done_seq: f64,
+}
+
+impl TenantMetrics {
+    /// Table row for the per-tenant serving summary.
+    pub fn row(&self) -> String {
+        format!(
+            "  tenant {:16} w{:<4.1} {:>6} done  p50 {:>7.1}ms  p99 {:>7.1}ms  \
+             mean done_seq {:>8.1}  shed {:>4} (+{} rate)",
+            self.name,
+            self.weight,
+            self.requests,
+            self.total_latency.p50() * 1e3,
+            self.total_latency.p99() * 1e3,
+            self.mean_done_seq,
+            self.shed,
+            self.shed_rate,
+        )
+    }
 }
 
 impl ServerMetrics {
@@ -193,14 +243,15 @@ impl ServerMetrics {
         self.requests as f64 / self.batches as f64
     }
 
-    /// Fraction of offered requests shed for any reason (backpressure
-    /// or unservable).
+    /// Fraction of offered requests shed for any reason (backpressure,
+    /// unservable, or a tenant's rate limit).
     pub fn shed_ratio(&self) -> f64 {
-        let offered = self.requests + self.shed + self.shed_oversize;
+        let dropped = self.shed + self.shed_oversize + self.shed_rate;
+        let offered = self.requests + dropped;
         if offered == 0 {
             return 0.0;
         }
-        (self.shed + self.shed_oversize) as f64 / offered as f64
+        dropped as f64 / offered as f64
     }
 
     /// Aggregate slot-occupancy across shards (mean of the per-shard
@@ -229,8 +280,12 @@ impl ServerMetrics {
     }
 
     /// Table row for the serving reports (one row per offered load).
+    /// Rate-limit sheds and cancellations are appended only when they
+    /// happened, and per-tenant rows ([`TenantMetrics::row`]) only on
+    /// multi-tenant runs — a single-tenant run's row is byte-identical
+    /// to the pre-tenancy format.
     pub fn row(&self) -> String {
-        format!(
+        let mut row = format!(
             "{:40} {:>8.1} req/s  p50 {:>7.1}ms  p90 {:>7.1}ms  p99 {:>7.1}ms  \
              queue p50 {:>6.1}ms  ttft p50 {:>6.1}ms  itl p50 {:>5.2}ms  \
              fill {:>5.1}%  occ {:>5.1}%  pages {:>5.1}% (hi {:>5.1}%)  \
@@ -249,7 +304,18 @@ impl ServerMetrics {
             self.page_high() * 100.0,
             self.mean_batch_rows(),
             self.shed_ratio() * 100.0,
-        )
+        );
+        if self.shed_rate > 0 {
+            row.push_str(&format!("  rate-shed {}", self.shed_rate));
+        }
+        if self.cancelled > 0 {
+            row.push_str(&format!("  cancelled {}", self.cancelled));
+        }
+        for t in &self.tenants {
+            row.push('\n');
+            row.push_str(&t.row());
+        }
+        row
     }
 }
 
@@ -315,6 +381,8 @@ mod tests {
             requests,
             shed,
             shed_oversize: 0,
+            shed_rate: 0,
+            cancelled: 0,
             batches,
             tokens: 800,
             padded_tokens: 1000,
@@ -329,6 +397,7 @@ mod tests {
             shard_fill: Vec::new(),
             shard_page_fill: Vec::new(),
             shard_page_high: Vec::new(),
+            tenants: Vec::new(),
         }
     }
 
@@ -376,6 +445,48 @@ mod tests {
         m.shed_oversize = 4;
         // 90 served + 6 backpressure + 4 unservable = 100 offered
         assert!((m.shed_ratio() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_appends_rate_shed_cancels_and_tenant_rows_only_when_present() {
+        let base = server_metrics(90, 0, 9).row();
+        assert!(!base.contains("rate-shed") && !base.contains("cancelled"), "{base}");
+        assert!(!base.contains('\n'), "single tenant stays a single line");
+
+        let mut m = server_metrics(90, 0, 9);
+        m.shed_rate = 3;
+        m.cancelled = 2;
+        m.tenants = vec![
+            TenantMetrics {
+                name: "gold".into(),
+                weight: 4.0,
+                accepted: 60,
+                shed: 0,
+                shed_rate: 0,
+                requests: 60,
+                total_latency: LatencyStats::default(),
+                mean_done_seq: 10.0,
+            },
+            TenantMetrics {
+                name: "bronze".into(),
+                weight: 1.0,
+                accepted: 30,
+                shed: 5,
+                shed_rate: 3,
+                requests: 30,
+                total_latency: LatencyStats::default(),
+                mean_done_seq: 40.0,
+            },
+        ];
+        let row = m.row();
+        assert!(row.contains("rate-shed 3"), "{row}");
+        assert!(row.contains("cancelled 2"), "{row}");
+        assert!(row.contains("tenant gold"), "{row}");
+        assert!(row.contains("tenant bronze"), "{row}");
+        assert!(row.contains("(+3 rate)"), "{row}");
+        assert_eq!(row.lines().count(), 3, "one summary line + one per tenant");
+        // rate sheds count against the offered total
+        assert!((m.shed_ratio() - 3.0 / 93.0).abs() < 1e-12);
     }
 
     #[test]

@@ -8,14 +8,21 @@
 //!
 //! * [`service`] — [`service::Service`]: configuration + offline corpus
 //!   runs;
-//! * [`server`]  — the online request path: bounded admission,
-//!   latency-aware dynamic batching, shard pool;
+//! * [`server`]  — the online request path: tenant-aware bounded
+//!   admission, latency-aware dynamic batching, shard pool, per-token
+//!   emission and cancellation;
+//! * [`net`]     — the wire: hand-rolled HTTP/1.1 + SSE token streaming
+//!   over the continuous scheduler, with a loopback client;
 //! * [`metrics`] — latency/throughput accounting for both paths.
 
 pub mod metrics;
+pub mod net;
 pub mod server;
 pub mod service;
 
-pub use metrics::{LatencyStats, RunMetrics, ServerMetrics};
-pub use server::{Scheduler, ServerClient, ServerConfig, TranslateRequest, TranslateResponse};
+pub use metrics::{LatencyStats, RunMetrics, ServerMetrics, TenantMetrics};
+pub use server::{
+    NullSink, Scheduler, ServerClient, ServerConfig, TenantId, TenantSet, TenantSpec, TokenSink,
+    TranslateRequest, TranslateResponse, DEFAULT_TENANT,
+};
 pub use service::{Backend, Service, ServiceConfig};

@@ -1,0 +1,608 @@
+//! Network front end: a hand-rolled HTTP/1.1 + SSE server over the
+//! continuous scheduler, plus the matching loopback client.
+//!
+//! The serving stack ends here: `coordinator::server` speaks Rust
+//! closures, this module puts a wire protocol on it — `std::net` only,
+//! thread-per-connection, request parsing hand-rolled like the
+//! hand-rolled JSON (`util::json`).  No new dependencies.
+//!
+//! ## Wire format
+//!
+//! `POST /v1/translate` with a JSON body:
+//!
+//! ```text
+//! {"src": [31, 7, 2], "tenant": "gold"}     // tenant optional
+//! ```
+//!
+//! On admission the server answers `200` with an SSE stream
+//! (`Content-Type: text/event-stream`, one request per connection):
+//!
+//! ```text
+//! event: queued      data: {"id": 17}
+//! event: token       data: {"t": 4093}        // one per decoded token,
+//! event: token       data: {"t": 11}          // the iteration it decodes
+//! event: done        data: {"id": 17, "out": [4093, 11], "done_seq": 3,
+//!                           "truncated": false, "queue_secs": ..,
+//!                           "total_secs": .., "tenant": 0}
+//! ```
+//!
+//! Tokens are forwarded straight off the shard loop's [`TokenSink`]
+//! hook, so the stream exposes exactly the TTFT/inter-token behavior
+//! [`ServerMetrics`] measures.  Rejections are plain HTTP: `429` shed
+//! (queue full or the tenant's rate limit), `413` unservable source,
+//! `400` malformed body or unknown tenant, `404` anything else.
+//!
+//! ## Cancellation
+//!
+//! Two paths into [`ServerClient::cancel`]:
+//! * `POST /v1/cancel` with `{"id": 17}` — explicit; the stream ends
+//!   with `event: cancelled`;
+//! * client disconnect — the connection thread's next SSE write fails,
+//!   and it cancels its own request.
+//!
+//! Either way the mark is purged wherever the request lives (admission
+//! queue, splice backlog, or an occupied KV slot — slot and pages free
+//! the same iteration, GEMM rows drop immediately).  The shard loop
+//! never blocks on a dead client: events go through an **unbounded**
+//! channel owned by the connection thread, so `on_token` is a
+//! non-blocking send whoever is (or isn't) reading.
+//!
+//! ## Drain
+//!
+//! [`run`] accepts connections until its stop flag flips, then returns
+//! from the drive closure — [`serve_continuous_with_sink`] closes
+//! admission, flushes the batcher, and finishes every in-flight slot.
+//! Each open stream receives its `done` event during that drain, and
+//! `run` joins every connection thread before reporting the final
+//! metrics: no admitted request is ever dropped by shutdown.
+//!
+//! [`serve_continuous_with_sink`]: crate::coordinator::server::serve_continuous_with_sink
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::server::{
+    serve_continuous_with_sink, ServerClient, ServerConfig, TenantId, TokenSink, TranslateRequest,
+    TranslateResponse, DEFAULT_TENANT,
+};
+use crate::model::Engine;
+use crate::util::json::{obj, Json};
+
+// ---------------------------------------------------------------------------
+// the SSE sink: shard loop -> per-connection channels
+// ---------------------------------------------------------------------------
+
+/// One event heading down a request's SSE stream.
+enum SseEvent {
+    Token(u32),
+    /// the full response, pre-serialized (built under the done lock so
+    /// `done_seq` is already final)
+    Done(String),
+    Cancelled,
+}
+
+/// Registry of live streams: request id -> that connection's channel.
+/// Entries are registered *before* the request is submitted (so a
+/// completion can never race past an unregistered stream) and removed
+/// when the terminal event is sent or the connection gives up.
+#[derive(Default)]
+struct StreamRegistry {
+    streams: Mutex<HashMap<usize, Sender<SseEvent>>>,
+}
+
+impl StreamRegistry {
+    fn register(&self, id: usize, tx: Sender<SseEvent>) {
+        self.streams.lock().unwrap().insert(id, tx);
+    }
+
+    fn unregister(&self, id: usize) {
+        self.streams.lock().unwrap().remove(&id);
+    }
+
+    /// Send an event to stream `id`; `terminal` also unregisters it.
+    /// A missing entry (disconnected client already unregistered) or a
+    /// dropped receiver is fine — the serving side never blocks or
+    /// fails on a dead consumer.
+    fn send(&self, id: usize, ev: SseEvent, terminal: bool) {
+        let mut g = self.streams.lock().unwrap();
+        if let Some(tx) = g.get(&id) {
+            let _ = tx.send(ev);
+            if terminal {
+                g.remove(&id);
+            }
+        }
+    }
+}
+
+/// The [`TokenSink`] the HTTP server plugs into the shard loops:
+/// forwards every event to the owning connection's unbounded channel.
+struct SseSink {
+    registry: Arc<StreamRegistry>,
+}
+
+impl TokenSink for SseSink {
+    fn on_token(&self, id: usize, _tenant: TenantId, token: u32) {
+        self.registry.send(id, SseEvent::Token(token), false);
+    }
+
+    fn on_done(&self, resp: &TranslateResponse) {
+        let ev = SseEvent::Done(response_json(resp));
+        self.registry.send(resp.id, ev, true);
+    }
+
+    fn on_cancelled(&self, id: usize) {
+        self.registry.send(id, SseEvent::Cancelled, true);
+    }
+}
+
+/// Serialize a completed response for the `done` event / blocking API.
+fn response_json(r: &TranslateResponse) -> String {
+    obj(&[
+        ("id", r.id.into()),
+        ("out", r.out.clone().into()),
+        ("done_seq", r.done_seq.into()),
+        ("truncated", r.truncated.into()),
+        ("queue_secs", r.queue_secs.into()),
+        ("total_secs", r.total_secs.into()),
+        ("tenant", r.tenant.into()),
+    ])
+    .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// the server
+// ---------------------------------------------------------------------------
+
+/// Shared state every connection thread needs.
+struct NetShared {
+    registry: Arc<StreamRegistry>,
+    /// server-assigned request ids (the wire protocol does not trust
+    /// clients to pick unique ids)
+    next_id: AtomicUsize,
+    tenants: crate::coordinator::server::TenantSet,
+    max_src_len: Option<usize>,
+}
+
+/// Serve HTTP/SSE traffic over the continuous scheduler until `stop`
+/// flips, then drain gracefully and return the final metrics plus
+/// every completed response.  `listener` is accepted non-blocking on
+/// the drive thread; each connection gets its own thread holding a
+/// clone of the [`ServerClient`], all joined before this returns.
+pub fn run<F>(
+    cfg: &ServerConfig,
+    make_engine: F,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+) -> anyhow::Result<(ServerMetrics, Vec<TranslateResponse>)>
+where
+    F: Fn(usize) -> Engine + Sync,
+{
+    listener.set_nonblocking(true)?;
+    let registry = Arc::new(StreamRegistry::default());
+    let sink = SseSink {
+        registry: registry.clone(),
+    };
+    let shared = Arc::new(NetShared {
+        registry,
+        next_id: AtomicUsize::new(0),
+        tenants: cfg.tenants.clone(),
+        max_src_len: cfg.max_src_len,
+    });
+    let (metrics, responses, handles) =
+        serve_continuous_with_sink(cfg, &sink, make_engine, |client| {
+            let mut handles = Vec::new();
+            while !stop.load(Ordering::Acquire) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let client = client.clone();
+                        let shared = shared.clone();
+                        handles.push(std::thread::spawn(move || {
+                            handle_connection(stream, client, shared)
+                        }));
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(2)),
+                }
+            }
+            handles
+        });
+    // graceful drain already happened inside serve (admission closed,
+    // slots finished, done events sent); now flush the streams — every
+    // connection thread drains its buffered events and exits
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok((metrics, responses))
+}
+
+/// One parsed HTTP request (the slice of HTTP/1.1 this server speaks:
+/// request line, headers, Content-Length body).
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: String,
+}
+
+fn read_request(reader: &mut BufReader<TcpStream>) -> std::io::Result<Option<HttpRequest>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None); // peer closed without a request
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let path = parts.next().unwrap_or_default().to_string();
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            return Ok(None);
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+    Ok(Some(HttpRequest {
+        method,
+        path,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    }))
+}
+
+fn write_http(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+fn write_sse_event(stream: &mut TcpStream, event: &str, data: &str) -> std::io::Result<()> {
+    write!(stream, "event: {event}\ndata: {data}\n\n")
+}
+
+/// Serve one connection: parse the request, route it, and — for a
+/// translate — pump the SSE stream until the terminal event.  A failed
+/// socket write mid-stream means the client is gone: the thread cancels
+/// its own request and unregisters, so the shard reclaims the slot and
+/// nothing downstream ever waits on this connection again.
+fn handle_connection(stream: TcpStream, client: ServerClient, shared: Arc<NetShared>) {
+    stream.set_nodelay(true).ok();
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut stream = stream;
+    let req = match read_request(&mut reader) {
+        Ok(Some(r)) => r,
+        _ => return,
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/translate") => handle_translate(&mut stream, &req.body, client, &shared),
+        ("POST", "/v1/cancel") => {
+            let parsed = Json::parse(&req.body).ok();
+            let id = parsed.and_then(|j| j.get("id").and_then(Json::as_usize));
+            match id {
+                Some(id) => {
+                    client.cancel(id);
+                    write_http(&mut stream, 200, "OK", r#"{"ok": true}"#).ok();
+                }
+                None => {
+                    write_http(&mut stream, 400, "Bad Request", r#"{"error": "need an id"}"#).ok();
+                }
+            }
+        }
+        _ => {
+            write_http(&mut stream, 404, "Not Found", r#"{"error": "unknown route"}"#).ok();
+        }
+    }
+}
+
+fn handle_translate(stream: &mut TcpStream, body: &str, client: ServerClient, shared: &NetShared) {
+    let parsed = Json::parse(body).ok();
+    let src = parsed.as_ref().and_then(|j| j.get("src").and_then(Json::as_u32_vec));
+    let src = match src {
+        Some(s) => s,
+        None => {
+            write_http(stream, 400, "Bad Request", r#"{"error": "need a src token array"}"#).ok();
+            return;
+        }
+    };
+    let tenant = match parsed.as_ref().and_then(|j| j.get("tenant").and_then(Json::as_str)) {
+        None => DEFAULT_TENANT,
+        Some(name) => match shared.tenants.id_of(name) {
+            Some(id) => id,
+            None => {
+                let msg = format!("{{\"error\": \"unknown tenant '{name}'\"}}");
+                write_http(stream, 400, "Bad Request", &msg).ok();
+                return;
+            }
+        },
+    };
+    // unservable sources answered up front with a real status code —
+    // admission would shed them under shed_oversize with no response
+    if src.is_empty() || shared.max_src_len.is_some_and(|cap| src.len() > cap) {
+        write_http(stream, 413, "Payload Too Large", r#"{"error": "unservable source"}"#).ok();
+        return;
+    }
+    let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+    // register before submitting: a request that completes between
+    // submit and register would otherwise emit into the void
+    let (tx, rx): (Sender<SseEvent>, Receiver<SseEvent>) = channel();
+    shared.registry.register(id, tx);
+    if !client.submit_request(TranslateRequest::new(id, src).with_tenant(tenant)) {
+        shared.registry.unregister(id);
+        write_http(stream, 429, "Too Many Requests", r#"{"error": "shed"}"#).ok();
+        return;
+    }
+    // admitted: the response is an SSE stream from here on
+    let header = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-store\r\nConnection: close\r\n\r\n";
+    let mut opened = stream.write_all(header.as_bytes());
+    if opened.is_ok() {
+        opened = write_sse_event(stream, "queued", &format!("{{\"id\": {id}}}"));
+    }
+    if opened.is_err() {
+        // client vanished before the stream even started
+        client.cancel(id);
+        shared.registry.unregister(id);
+        return;
+    }
+    loop {
+        match rx.recv() {
+            Ok(SseEvent::Token(t)) => {
+                if write_sse_event(stream, "token", &format!("{{\"t\": {t}}}")).is_err() {
+                    // disconnect mid-stream: reclaim the slot, stop
+                    // consuming.  The sink's sends to this channel stay
+                    // non-blocking either way.
+                    client.cancel(id);
+                    shared.registry.unregister(id);
+                    return;
+                }
+            }
+            Ok(SseEvent::Done(json)) => {
+                write_sse_event(stream, "done", &json).ok();
+                return;
+            }
+            Ok(SseEvent::Cancelled) => {
+                write_sse_event(stream, "cancelled", &format!("{{\"id\": {id}}}")).ok();
+                return;
+            }
+            // server shut down without a terminal event for us: only
+            // possible if the serve scope is tearing down abnormally
+            Err(_) => return,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the loopback client
+// ---------------------------------------------------------------------------
+
+/// A completed translation as observed over the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamedResponse {
+    pub id: usize,
+    pub out: Vec<u32>,
+    /// `token` events observed before `done` (must equal `out.len()`)
+    pub tokens_streamed: usize,
+    pub done_seq: usize,
+    pub truncated: bool,
+    pub queue_secs: f64,
+    pub total_secs: f64,
+    pub tenant: TenantId,
+}
+
+/// One event read off a [`TranslateStream`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientEvent {
+    Token(u32),
+    Done(StreamedResponse),
+    Cancelled,
+}
+
+/// An open SSE translation stream (the client half of
+/// `POST /v1/translate`).
+pub struct TranslateStream {
+    reader: BufReader<TcpStream>,
+    /// server-assigned request id (from the `queued` event) — what
+    /// `POST /v1/cancel` wants
+    pub id: usize,
+    tokens: usize,
+    out: Vec<u32>,
+}
+
+/// Read one SSE frame (`event:` + `data:` lines up to a blank line).
+fn read_sse_frame(reader: &mut BufReader<TcpStream>) -> anyhow::Result<(String, String)> {
+    let mut event = String::new();
+    let mut data = String::new();
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("connection closed mid-stream");
+        }
+        let line = line.trim_end();
+        if line.is_empty() {
+            if event.is_empty() {
+                continue; // stray blank line between frames
+            }
+            return Ok((event, data));
+        }
+        if let Some(v) = line.strip_prefix("event:") {
+            event = v.trim().to_string();
+        } else if let Some(v) = line.strip_prefix("data:") {
+            data = v.trim().to_string();
+        }
+    }
+}
+
+fn parse_streamed_response(data: &str, tokens: usize) -> anyhow::Result<StreamedResponse> {
+    let j = Json::parse(data)?;
+    let field = |k: &str| {
+        j.get(k)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("done event missing '{k}': {data}"))
+    };
+    Ok(StreamedResponse {
+        id: field("id")?.as_usize().unwrap_or(0),
+        out: field("out")?.as_u32_vec().unwrap_or_default(),
+        tokens_streamed: tokens,
+        done_seq: field("done_seq")?.as_usize().unwrap_or(0),
+        truncated: field("truncated")?.as_bool().unwrap_or(false),
+        queue_secs: field("queue_secs")?.as_f64().unwrap_or(0.0),
+        total_secs: field("total_secs")?.as_f64().unwrap_or(0.0),
+        tenant: field("tenant")?.as_usize().unwrap_or(0),
+    })
+}
+
+impl TranslateStream {
+    /// Next event on the stream ([`ClientEvent::Done`] and
+    /// [`ClientEvent::Cancelled`] are terminal).
+    pub fn next_event(&mut self) -> anyhow::Result<ClientEvent> {
+        let (event, data) = read_sse_frame(&mut self.reader)?;
+        match event.as_str() {
+            "token" => {
+                let j = Json::parse(&data)?;
+                let t = j
+                    .get("t")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("malformed token event: {data}"))?;
+                let t = t as u32;
+                self.tokens += 1;
+                self.out.push(t);
+                Ok(ClientEvent::Token(t))
+            }
+            "done" => {
+                let resp = parse_streamed_response(&data, self.tokens)?;
+                anyhow::ensure!(
+                    resp.out == self.out || self.tokens == 0,
+                    "streamed tokens disagree with the done payload"
+                );
+                Ok(ClientEvent::Done(resp))
+            }
+            "cancelled" => Ok(ClientEvent::Cancelled),
+            other => anyhow::bail!("unexpected SSE event '{other}'"),
+        }
+    }
+
+    /// Drain the stream to its terminal event; errors if the request
+    /// was cancelled instead of completed.
+    pub fn finish(mut self) -> anyhow::Result<StreamedResponse> {
+        loop {
+            match self.next_event()? {
+                ClientEvent::Token(_) => {}
+                ClientEvent::Done(r) => return Ok(r),
+                ClientEvent::Cancelled => anyhow::bail!("request {} was cancelled", self.id),
+            }
+        }
+    }
+}
+
+/// Open a translation stream: connect, POST the request, read the
+/// HTTP status and the `queued` event.  Non-200 statuses come back as
+/// errors carrying the status code (`429` shed, `413` unservable,
+/// `400` malformed).
+pub fn open_translate(
+    addr: &str,
+    src: &[u32],
+    tenant: Option<&str>,
+) -> anyhow::Result<TranslateStream> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    let mut fields = vec![("src", Json::from(src.to_vec()))];
+    if let Some(t) = tenant {
+        fields.push(("tenant", t.into()));
+    }
+    let body = obj(&fields).to_string();
+    write!(
+        stream,
+        "POST /v1/translate HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("malformed status line: {status_line:?}"))?;
+    // headers (and, for error statuses, the JSON body) end the reply
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            break;
+        }
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    if status != 200 {
+        let mut body = vec![0u8; content_len];
+        reader.read_exact(&mut body).ok();
+        anyhow::bail!("HTTP {status}: {}", String::from_utf8_lossy(&body).trim());
+    }
+    let (event, data) = read_sse_frame(&mut reader)?;
+    anyhow::ensure!(event == "queued", "expected queued, got '{event}'");
+    let queued = Json::parse(&data)?;
+    let id = queued
+        .get("id")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("malformed queued event: {data}"))?;
+    Ok(TranslateStream {
+        reader,
+        id,
+        tokens: 0,
+        out: Vec::new(),
+    })
+}
+
+/// Submit and wait: open a stream and drain it to completion.
+pub fn translate_blocking(
+    addr: &str,
+    src: &[u32],
+    tenant: Option<&str>,
+) -> anyhow::Result<StreamedResponse> {
+    open_translate(addr, src, tenant)?.finish()
+}
+
+/// Cancel request `id` (idempotent; completion may win the race).
+pub fn cancel(addr: &str, id: usize) -> anyhow::Result<()> {
+    let mut stream = TcpStream::connect(addr)?;
+    let body = format!("{{\"id\": {id}}}");
+    write!(
+        stream,
+        "POST /v1/cancel HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply)?;
+    anyhow::ensure!(reply.contains("200"), "cancel failed: {reply:?}");
+    Ok(())
+}

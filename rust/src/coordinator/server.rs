@@ -1,5 +1,6 @@
 //! Online serving: latency-aware dynamic batching over the INT8 engine,
-//! with two decode schedulers.
+//! with two decode schedulers, tenant-aware admission and mid-decode
+//! cancellation.
 //!
 //! `Service::run` consumes a whole corpus up front — the offline
 //! throughput path behind every Fig 6/8 number.  This module adds the
@@ -7,14 +8,19 @@
 //!
 //! ```text
 //! submit() -> [AdmissionQueue]  -> [BatchFormer] -> [BatchQueue] -> shard 0 (Engine)
-//!   bounded, sheds when full       closes a batch     bounded        shard 1 (Engine)
-//!                                  on token budget                   ...
-//!                                  or max-wait deadline
+//!   per-tenant weighted-fair      closes a batch     bounded        shard 1 (Engine)
+//!   queues; sheds when full       on token budget                   ...
+//!   or over the tenant's          or max-wait deadline
+//!   token-rate limit
 //! ```
 //!
 //! * [`AdmissionQueue`] — bounded request queue; `try_admit` never
 //!   blocks the caller and *sheds* (rejects) when full, so overload
-//!   degrades by dropping requests instead of ballooning memory;
+//!   degrades by dropping requests instead of ballooning memory.  It
+//!   holds one FIFO per [`TenantSpec`]: dequeue is **weighted-fair**
+//!   (stride scheduling over source-token cost), and each tenant may
+//!   carry a token-bucket rate limit that sheds — under its own
+//!   counter — before the shared queue is ever touched;
 //! * [`BatchFormer`] — the dynamic batcher: an open batch accepts
 //!   requests under the same padded-token admission rule as the offline
 //!   policies ([`fits_budget`]) and is dispatched at the latest
@@ -35,21 +41,39 @@
 //!   long ones instead of waiting for a batch drain; with identical
 //!   arrival order both schedulers produce bit-identical per-request
 //!   translations (decode math is row-wise — asserted in
-//!   `tests/serving_integration.rs`).
+//!   `tests/serving_integration.rs`);
+//! * [`TokenSink`] — the per-token emission hook: the continuous shard
+//!   loop reports every decoded token the iteration it is produced
+//!   (plus completion and cancellation), which is what
+//!   `coordinator::net` turns into SSE frames on a live socket;
+//! * [`ServerClient::cancel`] — mid-decode cancellation: a cancelled
+//!   request is purged wherever it currently lives (admission queue,
+//!   splice backlog, or an occupied KV slot).  A slot purge rides the
+//!   existing finish/recycle path ([`DecodePool::cancel`]), so the
+//!   slot's pages free immediately and the next iteration's compacted
+//!   active set simply omits the row — cancelled work costs zero GEMM
+//!   rows from the next step on.
 //!
 //! Per-request latency is recorded in two stages (enqueue -> batch
 //! close, enqueue -> done) and aggregated into
 //! [`ServerMetrics`] p50/p90/p99 histograms; the continuous scheduler
 //! additionally observes time-to-first-token, inter-token gaps and
-//! per-shard slot occupancy.  [`poisson_offsets`] + [`replay_trace`]
-//! generate and replay synthetic open-loop arrival traces
-//! (`examples/serve_online.rs`, `benches/serving.rs`).
+//! per-shard slot occupancy.  Multi-tenant runs additionally report
+//! per-tenant accepted/shed/latency rows ([`TenantMetrics`]).
+//! [`poisson_offsets`] + [`replay_trace`] generate and replay synthetic
+//! open-loop arrival traces (`examples/serve_online.rs`,
+//! `benches/serving.rs`).
+//!
+//! [`DecodePool::cancel`]: crate::model::engine::DecodePool::cancel
+//! [`TenantMetrics`]: crate::coordinator::metrics::TenantMetrics
 
-use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::collections::{HashSet, VecDeque};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::metrics::{LatencyStats, ServerMetrics};
+use crate::coordinator::metrics::{LatencyStats, ServerMetrics, TenantMetrics};
 use crate::coordinator::service::{Backend, DEFAULT_TOKEN_BUDGET};
 use crate::data::dataset::Pair;
 use crate::model::Engine;
@@ -59,6 +83,7 @@ use crate::pipeline::policy::fits_budget;
 use crate::pipeline::queue::BatchQueue;
 use crate::specials::{BOS_ID, EOS_ID};
 use crate::tensor::ops;
+use crate::util::json::Json;
 use crate::util::rng::SplitMix64;
 
 /// Which decode scheduler the server runs (`serve --scheduler`).
@@ -81,17 +106,184 @@ impl Scheduler {
         }
     }
 
-    /// Parse a CLI value, falling back (with a note) on unknown text.
-    pub fn parse_or(s: Option<&str>, default: Scheduler) -> Scheduler {
+    /// Parse a CLI value: `None` (flag absent) keeps `default`; any
+    /// unknown spelling is a **hard error** listing the valid choices.
+    /// A typo must not silently change which scheduler serves traffic.
+    pub fn parse_or(s: Option<&str>, default: Scheduler) -> anyhow::Result<Scheduler> {
         match s {
-            None => default,
-            Some("batch") => Scheduler::Batch,
-            Some("continuous") | Some("cont") => Scheduler::Continuous,
-            Some(other) => {
-                eprintln!("unknown scheduler '{other}', using {}", default.as_str());
-                default
+            None => Ok(default),
+            Some("batch") => Ok(Scheduler::Batch),
+            Some("continuous") | Some("cont") => Ok(Scheduler::Continuous),
+            Some(other) => anyhow::bail!(
+                "unknown scheduler '{other}' (valid: batch, continuous|cont)"
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tenancy
+// ---------------------------------------------------------------------------
+
+/// Index of a tenant in the server's [`TenantSet`].  Requests carry one
+/// ([`TranslateRequest::tenant`]); single-tenant setups leave it at
+/// [`DEFAULT_TENANT`].
+pub type TenantId = usize;
+
+/// The tenant every request belongs to unless it says otherwise: the
+/// first (often only) entry of the [`TenantSet`].
+pub const DEFAULT_TENANT: TenantId = 0;
+
+/// One admission tenant: a named priority class with a weighted share
+/// of the dequeue bandwidth and an optional token-rate limit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// weighted-fair share.  Dequeue is stride-scheduled: popping a
+    /// request advances its tenant's virtual time by
+    /// `source_tokens / weight`, and the non-empty tenant with the
+    /// smallest virtual time is served next — so under saturation a
+    /// tenant with twice the weight drains twice the tokens.
+    pub weight: f64,
+    /// steady-state admission rate in **source tokens per second**
+    /// (token bucket); `None` = unlimited.  Refused requests are shed
+    /// under the tenant's `shed_rate` counter, distinct from
+    /// backpressure shed.
+    pub rate_tokens_per_sec: Option<f64>,
+    /// token-bucket depth (burst allowance, in source tokens).  Must
+    /// cover the longest single request the tenant may send — a request
+    /// costlier than the whole bucket can never be admitted.
+    pub burst_tokens: f64,
+}
+
+impl TenantSpec {
+    pub fn new(name: &str, weight: f64) -> Self {
+        TenantSpec {
+            name: name.to_string(),
+            weight,
+            rate_tokens_per_sec: None,
+            burst_tokens: 0.0,
+        }
+    }
+
+    /// Attach a token-bucket rate limit (tokens/second, bucket depth).
+    pub fn with_rate(mut self, rate: f64, burst: f64) -> Self {
+        self.rate_tokens_per_sec = Some(rate);
+        self.burst_tokens = burst;
+        self
+    }
+}
+
+/// The server's tenant roster: tenant ids are indices into this set,
+/// and the first entry is the [`DEFAULT_TENANT`].  Loaded from JSON by
+/// `serve --tenants FILE`; defaults to one unlimited tenant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSet {
+    specs: Vec<TenantSpec>,
+}
+
+impl Default for TenantSet {
+    fn default() -> Self {
+        TenantSet::single()
+    }
+}
+
+impl TenantSet {
+    /// The single-tenant default: one unlimited, weight-1 tenant named
+    /// `default` — every pre-tenancy caller's behavior, unchanged.
+    pub fn single() -> Self {
+        TenantSet {
+            specs: vec![TenantSpec::new("default", 1.0)],
+        }
+    }
+
+    /// Validate and build a roster.  Names must be unique and
+    /// non-empty, weights positive and finite, rates (when set)
+    /// positive with a positive bucket.
+    pub fn new(specs: Vec<TenantSpec>) -> anyhow::Result<Self> {
+        anyhow::ensure!(!specs.is_empty(), "tenant set must name at least one tenant");
+        let mut seen = HashSet::new();
+        for t in &specs {
+            anyhow::ensure!(!t.name.is_empty(), "tenant names must be non-empty");
+            anyhow::ensure!(seen.insert(t.name.clone()), "duplicate tenant '{}'", t.name);
+            anyhow::ensure!(
+                t.weight.is_finite() && t.weight > 0.0,
+                "tenant '{}': weight must be positive and finite, got {}",
+                t.name,
+                t.weight
+            );
+            if let Some(r) = t.rate_tokens_per_sec {
+                anyhow::ensure!(
+                    r.is_finite() && r > 0.0,
+                    "tenant '{}': rate must be positive, got {r}",
+                    t.name
+                );
+                anyhow::ensure!(
+                    t.burst_tokens.is_finite() && t.burst_tokens > 0.0,
+                    "tenant '{}': a rate limit needs a positive burst_tokens bucket",
+                    t.name
+                );
             }
         }
+        Ok(TenantSet { specs })
+    }
+
+    /// Load a roster from JSON: either a bare array of tenant objects
+    /// or `{"tenants": [...]}`.  Per tenant: `name` (required),
+    /// `weight` (default 1), `rate_tokens_per_sec` (optional),
+    /// `burst_tokens` (default = one second of the rate).
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let j = Json::parse_file(path)?;
+        let arr = match (&j, j.get("tenants")) {
+            (Json::Arr(a), _) => a.as_slice(),
+            (_, Some(t)) => t.as_arr().ok_or_else(|| {
+                anyhow::anyhow!("{}: \"tenants\" must be an array", path.display())
+            })?,
+            _ => anyhow::bail!(
+                "{}: expected a tenant array or an object with a \"tenants\" array",
+                path.display()
+            ),
+        };
+        let mut specs = Vec::with_capacity(arr.len());
+        for t in arr {
+            let name = t
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("{}: tenant entry needs a name", path.display()))?;
+            let rate = t.get("rate_tokens_per_sec").and_then(Json::as_f64);
+            specs.push(TenantSpec {
+                name: name.to_string(),
+                weight: t.get("weight").and_then(Json::as_f64).unwrap_or(1.0),
+                rate_tokens_per_sec: rate,
+                burst_tokens: t
+                    .get("burst_tokens")
+                    .and_then(Json::as_f64)
+                    .unwrap_or_else(|| rate.unwrap_or(0.0)),
+            });
+        }
+        TenantSet::new(specs)
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn get(&self, id: TenantId) -> &TenantSpec {
+        &self.specs[id]
+    }
+
+    /// Resolve a tenant name to its id (the wire protocol speaks names,
+    /// the queues speak indices).
+    pub fn id_of(&self, name: &str) -> Option<TenantId> {
+        self.specs.iter().position(|t| t.name == name)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &TenantSpec> {
+        self.specs.iter()
     }
 }
 
@@ -110,7 +302,8 @@ pub struct ServerConfig {
     pub token_budget: usize,
     /// row cap per dynamic batch (AOT buckets are compiled per row count)
     pub max_batch_rows: usize,
-    /// admission-queue bound: requests beyond this are shed
+    /// admission-queue bound (total across tenants): requests beyond
+    /// this are shed
     pub queue_capacity: usize,
     /// longest source (in tokens) admission accepts; longer requests
     /// are shed rather than allowed to crash a shard downstream.
@@ -144,6 +337,9 @@ pub struct ServerConfig {
     /// default capped by `QUANTNMT_GEMM_THREADS`, flops-gated so
     /// decode-sized calls stay single-threaded)
     pub gemm_threads: usize,
+    /// admission tenants (`serve --tenants FILE`); the single-tenant
+    /// default preserves pre-tenancy behavior exactly
+    pub tenants: TenantSet,
 }
 
 impl Default for ServerConfig {
@@ -164,6 +360,7 @@ impl Default for ServerConfig {
             slots: 0,
             kv_budget_mb: None,
             gemm_threads: 0,
+            tenants: TenantSet::single(),
         }
     }
 }
@@ -185,13 +382,19 @@ impl ServerConfig {
                 None => format!(" cont s{}", self.pool_capacity()),
             },
         };
+        let tenants = if self.tenants.len() > 1 {
+            format!(" {}tenants", self.tenants.len())
+        } else {
+            String::new()
+        };
         format!(
-            "online {} {}sh wait{}ms tb{}{}",
+            "online {} {}sh wait{}ms tb{}{}{}",
             self.backend.label(),
             self.shards.max(1),
             self.max_wait.as_millis(),
             self.token_budget,
             sched,
+            tenants,
         )
     }
 }
@@ -200,23 +403,52 @@ impl ServerConfig {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TranslateRequest {
     /// caller-chosen identity, echoed in the response (corpus index in
-    /// the replay harnesses)
+    /// the replay harnesses; a server-assigned ordinal on the HTTP path)
     pub id: usize,
     pub src: Vec<u32>,
+    /// admission tenant (index into the server's [`TenantSet`]);
+    /// [`DEFAULT_TENANT`] unless the caller says otherwise
+    pub tenant: TenantId,
 }
 
 impl TranslateRequest {
+    /// A request for the default tenant (the pre-tenancy constructor).
+    pub fn new(id: usize, src: Vec<u32>) -> Self {
+        TranslateRequest {
+            id,
+            src,
+            tenant: DEFAULT_TENANT,
+        }
+    }
+
+    pub fn with_tenant(mut self, tenant: TenantId) -> Self {
+        self.tenant = tenant;
+        self
+    }
+
     /// One request per corpus pair, ids = slice indices — the replay
     /// harnesses' convention (CLI `serve`, `examples/serve_online.rs`,
-    /// `benches/serving.rs`).
+    /// `benches/serving.rs`).  All requests belong to the default
+    /// tenant; see [`from_pairs_round_robin`](Self::from_pairs_round_robin)
+    /// for a deterministic multi-tenant trace.
     pub fn from_pairs(pairs: &[Pair]) -> Vec<TranslateRequest> {
         pairs
             .iter()
             .enumerate()
-            .map(|(i, p)| TranslateRequest {
-                id: i,
-                src: p.src.clone(),
-            })
+            .map(|(i, p)| TranslateRequest::new(i, p.src.clone()))
+            .collect()
+    }
+
+    /// Like [`from_pairs`](Self::from_pairs), but request `i` belongs
+    /// to tenant `i % tenants` — the deterministic multi-tenant replay
+    /// convention, so a fixed trace exercises every tenant's queue
+    /// identically across runs.
+    pub fn from_pairs_round_robin(pairs: &[Pair], tenants: usize) -> Vec<TranslateRequest> {
+        let n = tenants.max(1);
+        pairs
+            .iter()
+            .enumerate()
+            .map(|(i, p)| TranslateRequest::new(i, p.src.clone()).with_tenant(i % n))
             .collect()
     }
 }
@@ -225,6 +457,8 @@ impl TranslateRequest {
 #[derive(Debug, Clone)]
 pub struct TranslateResponse {
     pub id: usize,
+    /// the tenant the request was admitted under
+    pub tenant: TenantId,
     pub out: Vec<u32>,
     /// enqueue -> batch close: time spent waiting in the dynamic batcher
     pub queue_secs: f64,
@@ -256,23 +490,54 @@ pub struct FormedBatch {
     pub batch: Batch,
     /// per-row enqueue instants (parallel to `batch.indices`)
     enqueued: Vec<Instant>,
+    /// per-row tenants (parallel to `batch.indices`)
+    tenants: Vec<TenantId>,
     /// when the batcher sealed this batch
     closed_at: Instant,
 }
 
 // ---------------------------------------------------------------------------
-// admission queue
+// admission queue (tenant-aware)
 // ---------------------------------------------------------------------------
 
-struct AdmissionInner {
+/// One tenant's admission state: its FIFO, stride-scheduling virtual
+/// time, token bucket and shed/accepted counters.
+struct TenantQueue {
     items: VecDeque<Pending>,
-    closed: bool,
+    /// stride virtual time: advanced by `cost / weight` per dequeue;
+    /// clamped up to the global virtual clock when the tenant goes from
+    /// empty to non-empty, so an idle tenant cannot bank priority
+    vtime: f64,
     accepted: u64,
     shed: u64,
+    /// shed by this tenant's token-rate limit (policy, not load)
+    shed_rate: u64,
+    /// token bucket (source tokens); only meaningful with a rate limit
+    bucket: f64,
+    last_refill: Instant,
+}
+
+struct AdmissionInner {
+    queues: Vec<TenantQueue>,
+    /// total queued across tenants (the `capacity` bound)
+    queued: usize,
+    /// global virtual clock = max vtime ever dequeued at
+    vclock: f64,
+    closed: bool,
     shed_oversize: u64,
 }
 
-/// Bounded request queue with non-blocking, load-shedding admission.
+/// Per-tenant admission counters snapshot (accepted, shed, shed_rate).
+pub(crate) struct TenantCounters {
+    pub accepted: u64,
+    pub shed: u64,
+    pub shed_rate: u64,
+}
+
+/// Bounded request queue with non-blocking, load-shedding admission and
+/// per-tenant weighted-fair dequeue (see the module docs' pipeline
+/// diagram).  One FIFO per tenant; the batcher pops from the non-empty
+/// tenant with the smallest stride virtual time.
 pub struct AdmissionQueue {
     inner: Mutex<AdmissionInner>,
     not_empty: Condvar,
@@ -280,6 +545,7 @@ pub struct AdmissionQueue {
     /// longest admissible source; over-long (or empty) requests are
     /// shed here instead of panicking a shard downstream
     max_src_len: Option<usize>,
+    tenants: TenantSet,
 }
 
 enum Popped {
@@ -289,49 +555,117 @@ enum Popped {
 }
 
 impl AdmissionQueue {
-    fn new(capacity: usize, max_src_len: Option<usize>) -> Self {
-        AdmissionQueue {
-            inner: Mutex::new(AdmissionInner {
+    fn new(capacity: usize, max_src_len: Option<usize>, tenants: TenantSet) -> Self {
+        let now = Instant::now();
+        let queues = tenants
+            .iter()
+            .map(|t| TenantQueue {
                 items: VecDeque::new(),
-                closed: false,
+                vtime: 0.0,
                 accepted: 0,
                 shed: 0,
+                shed_rate: 0,
+                // buckets start full: a fresh server admits a burst up
+                // to the configured depth
+                bucket: t.burst_tokens,
+                last_refill: now,
+            })
+            .collect();
+        AdmissionQueue {
+            inner: Mutex::new(AdmissionInner {
+                queues,
+                queued: 0,
+                vclock: 0.0,
+                closed: false,
                 shed_oversize: 0,
             }),
             not_empty: Condvar::new(),
             capacity: capacity.max(1),
             max_src_len,
+            tenants,
         }
     }
 
     /// Admit a request, or shed it (returning `false`) when the queue
-    /// is at capacity or closed, or the request is malformed (empty, or
-    /// longer than the backend can decode).  Never blocks the caller.
+    /// is at capacity or closed, the tenant is over its rate limit, or
+    /// the request is malformed (empty, longer than the backend can
+    /// decode, or naming an unknown tenant).  Never blocks the caller.
     ///
     /// Malformed requests count under `shed_oversize`, not `shed`: they
     /// can *never* be served, however idle the server is, so lumping
     /// them into the backpressure counter would make overload look
     /// worse than it is (and a retry storm of oversized requests look
-    /// like load).
+    /// like load).  Rate-limit sheds likewise get their own per-tenant
+    /// counter: they are policy, not pressure.
     fn try_admit(&self, req: TranslateRequest) -> bool {
-        let malformed =
-            req.src.is_empty() || self.max_src_len.is_some_and(|cap| req.src.len() > cap);
+        let malformed = req.src.is_empty()
+            || self.max_src_len.is_some_and(|cap| req.src.len() > cap)
+            || req.tenant >= self.tenants.len();
+        let now = Instant::now();
         let mut g = self.inner.lock().unwrap();
         if malformed {
             g.shed_oversize += 1;
             return false;
         }
-        if g.closed || g.items.len() >= self.capacity {
-            g.shed += 1;
+        // backpressure first: a full queue sheds without charging the
+        // tenant's token bucket (the request consumed no service)
+        if g.closed || g.queued >= self.capacity {
+            g.queues[req.tenant].shed += 1;
             return false;
         }
-        g.items.push_back(Pending {
-            req,
-            enqueued: Instant::now(),
-        });
-        g.accepted += 1;
+        let spec = self.tenants.get(req.tenant);
+        if let Some(rate) = spec.rate_tokens_per_sec {
+            let t = &mut g.queues[req.tenant];
+            let dt = now.saturating_duration_since(t.last_refill).as_secs_f64();
+            t.bucket = (t.bucket + rate * dt).min(spec.burst_tokens);
+            t.last_refill = now;
+            let cost = req.src.len() as f64;
+            if t.bucket < cost {
+                t.shed_rate += 1;
+                return false;
+            }
+            t.bucket -= cost;
+        }
+        let vclock = g.vclock;
+        let t = &mut g.queues[req.tenant];
+        if t.items.is_empty() {
+            // rejoin at the global clock: stride credit does not accrue
+            // while idle, or a long-idle tenant would monopolize the
+            // batcher the moment it wakes
+            t.vtime = t.vtime.max(vclock);
+        }
+        t.items.push_back(Pending { req, enqueued: now });
+        t.accepted += 1;
+        g.queued += 1;
         self.not_empty.notify_one();
         true
+    }
+
+    /// Weighted-fair dequeue: pop from the non-empty tenant with the
+    /// smallest virtual time (ties to the lower tenant id), then
+    /// advance that tenant's clock by `source_tokens / weight`.
+    fn pop_fair(&self, g: &mut AdmissionInner) -> Option<Pending> {
+        if g.queued == 0 {
+            return None;
+        }
+        let mut best: Option<usize> = None;
+        for (i, t) in g.queues.iter().enumerate() {
+            if t.items.is_empty() {
+                continue;
+            }
+            match best {
+                Some(b) if g.queues[b].vtime <= t.vtime => {}
+                _ => best = Some(i),
+            }
+        }
+        let i = best?;
+        let t = &mut g.queues[i];
+        let p = t.items.pop_front().expect("best tenant is non-empty");
+        let cost = p.req.src.len().max(1) as f64;
+        t.vtime += cost / self.tenants.get(i).weight;
+        g.vclock = g.vclock.max(t.vtime);
+        g.queued -= 1;
+        Some(p)
     }
 
     fn close(&self) {
@@ -341,17 +675,37 @@ impl AdmissionQueue {
     }
 
     fn shed(&self) -> u64 {
-        self.inner.lock().unwrap().shed
+        self.inner.lock().unwrap().queues.iter().map(|t| t.shed).sum()
     }
 
-    /// Requests shed for being unservable (empty / over-long), as
-    /// opposed to shed by backpressure.
+    /// Requests shed for being unservable (empty / over-long / unknown
+    /// tenant), as opposed to shed by backpressure.
     fn shed_oversize(&self) -> u64 {
         self.inner.lock().unwrap().shed_oversize
     }
 
+    /// Requests shed by per-tenant token-rate limits.
+    fn shed_rate(&self) -> u64 {
+        self.inner.lock().unwrap().queues.iter().map(|t| t.shed_rate).sum()
+    }
+
     fn accepted(&self) -> u64 {
-        self.inner.lock().unwrap().accepted
+        self.inner.lock().unwrap().queues.iter().map(|t| t.accepted).sum()
+    }
+
+    /// Per-tenant counter snapshot, indexed by [`TenantId`].
+    pub(crate) fn tenant_counters(&self) -> Vec<TenantCounters> {
+        self.inner
+            .lock()
+            .unwrap()
+            .queues
+            .iter()
+            .map(|t| TenantCounters {
+                accepted: t.accepted,
+                shed: t.shed,
+                shed_rate: t.shed_rate,
+            })
+            .collect()
     }
 
     /// Batcher-side pop: wait for the next request, the deadline
@@ -359,7 +713,7 @@ impl AdmissionQueue {
     fn pop_until(&self, deadline: Option<Instant>) -> Popped {
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(p) = g.items.pop_front() {
+            if let Some(p) = self.pop_fair(&mut g) {
                 return Popped::Item(p);
             }
             if g.closed {
@@ -383,7 +737,7 @@ impl AdmissionQueue {
                     if res.timed_out() {
                         // one last drain check: an item pushed in the
                         // wake-to-lock window beats the deadline
-                        if let Some(p) = g.items.pop_front() {
+                        if let Some(p) = self.pop_fair(&mut g) {
                             return Popped::Item(p);
                         }
                         if g.closed {
@@ -497,36 +851,172 @@ impl BatchFormer {
         let mut indices = Vec::with_capacity(pend.len());
         let mut rows = Vec::with_capacity(pend.len());
         let mut enqueued = Vec::with_capacity(pend.len());
+        let mut tenants = Vec::with_capacity(pend.len());
         for p in pend {
             indices.push(p.req.id);
             rows.push(p.req.src);
             enqueued.push(p.enqueued);
+            tenants.push(p.req.tenant);
         }
         Some(FormedBatch {
             batch: pad_rows(id, indices, rows),
             enqueued,
+            tenants,
             closed_at: Instant::now(),
         })
     }
 }
 
 // ---------------------------------------------------------------------------
+// cancellation
+// ---------------------------------------------------------------------------
+
+/// Pending cancellation marks, shared between the client handle and
+/// every serving stage.  `cancel` only *marks* an id; the purge happens
+/// at the next point the request passes through — the batcher's pop,
+/// a continuous shard's backlog scan, or an occupied KV slot (which is
+/// recycled on the spot via [`DecodePool::cancel`], freeing its pages
+/// and dropping its GEMM rows from the next iteration's active set).
+/// A mark for an id that already completed (or was never submitted) is
+/// discarded harmlessly — completion wins the race.
+///
+/// The `marks` atomic makes the no-cancellations fast path free: every
+/// per-row check is one relaxed load until the first `cancel` ever
+/// lands.
+///
+/// Under the **batch-synchronous** scheduler a row that already made it
+/// into a formed batch still decodes (the shard closure is opaque), but
+/// its response is suppressed and counted cancelled at emit time; only
+/// the continuous scheduler reclaims the compute itself.
+///
+/// [`DecodePool::cancel`]: crate::model::engine::DecodePool::cancel
+pub struct CancelSet {
+    marked: Mutex<HashSet<usize>>,
+    /// total `cancel` calls ever (0 = fast path: nothing ever marked)
+    marks: AtomicU64,
+    /// marks actually purged (the served-side cancelled count)
+    purged: AtomicU64,
+}
+
+impl CancelSet {
+    fn new() -> Self {
+        CancelSet {
+            marked: Mutex::new(HashSet::new()),
+            marks: AtomicU64::new(0),
+            purged: AtomicU64::new(0),
+        }
+    }
+
+    /// Mark a request id for cancellation (idempotent).
+    fn cancel(&self, id: usize) {
+        let mut g = self.marked.lock().unwrap();
+        g.insert(id);
+        // incremented under the lock so a scanner that observes the new
+        // count is guaranteed to observe the inserted id too
+        self.marks.fetch_add(1, Ordering::Release);
+    }
+
+    /// Monotonic mark counter: a stage that remembers the last value it
+    /// saw can skip scanning entirely until a new cancel lands.
+    fn version(&self) -> u64 {
+        self.marks.load(Ordering::Acquire)
+    }
+
+    /// Consume a mark: `true` exactly once per cancelled id, at the
+    /// stage that actually purges the request.
+    fn take(&self, id: usize) -> bool {
+        if self.marks.load(Ordering::Acquire) == 0 {
+            return false;
+        }
+        if self.marked.lock().unwrap().remove(&id) {
+            self.purged.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    /// Drop a mark without counting it (the request completed first).
+    fn discard(&self, id: usize) {
+        if self.marks.load(Ordering::Acquire) != 0 {
+            self.marked.lock().unwrap().remove(&id);
+        }
+    }
+
+    fn purged(&self) -> u64 {
+        self.purged.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the per-token emission hook
+// ---------------------------------------------------------------------------
+
+/// Observer for per-request serving events — the seam `coordinator::net`
+/// streams SSE frames through.  Implementations must be cheap and
+/// non-blocking: `on_token` runs inside the continuous shard loop's
+/// iteration (send to an unbounded channel, never a socket write), so a
+/// slow or dead consumer must never stall decode.
+///
+/// Default methods are no-ops; [`NullSink`] is the no-streaming server.
+pub trait TokenSink: Sync {
+    /// One decoded (non-EOS) token for request `id`, emitted the
+    /// iteration it was produced.  Continuous scheduler only: the
+    /// batch-synchronous shard closure is opaque and emits nothing
+    /// until completion.
+    fn on_token(&self, id: usize, tenant: TenantId, token: u32) {
+        let _ = (id, tenant, token);
+    }
+
+    /// The request completed; called under the done-sink lock, so
+    /// `resp.done_seq` ordering and `on_done` ordering agree.
+    fn on_done(&self, resp: &TranslateResponse) {
+        let _ = resp;
+    }
+
+    /// The request was purged by cancellation and will never produce a
+    /// response.
+    fn on_cancelled(&self, id: usize) {
+        let _ = id;
+    }
+}
+
+/// A [`TokenSink`] that drops every event (the in-process serving path).
+pub struct NullSink;
+
+impl TokenSink for NullSink {}
+
+// ---------------------------------------------------------------------------
 // the server
 // ---------------------------------------------------------------------------
 
-/// Caller-side handle: submit requests while the shard pool runs.
-pub struct ServerClient<'a> {
-    admission: &'a AdmissionQueue,
+/// Caller-side handle: submit (and cancel) requests while the shard
+/// pool runs.  Cheaply cloneable and `'static` — connection threads on
+/// the HTTP path each hold their own clone, outliving the serve scope's
+/// borrows.
+#[derive(Clone)]
+pub struct ServerClient {
+    admission: Arc<AdmissionQueue>,
+    cancels: Arc<CancelSet>,
 }
 
-impl ServerClient<'_> {
-    /// Submit one request; `false` means it was shed (backpressure).
+impl ServerClient {
+    /// Submit one request for the default tenant; `false` means it was
+    /// shed (backpressure, rate limit, or malformed).
     pub fn submit(&self, id: usize, src: Vec<u32>) -> bool {
-        self.submit_request(TranslateRequest { id, src })
+        self.submit_request(TranslateRequest::new(id, src))
     }
 
     pub fn submit_request(&self, req: TranslateRequest) -> bool {
         self.admission.try_admit(req)
+    }
+
+    /// Mark request `id` for cancellation.  Idempotent and racy by
+    /// design: if the request completes before the mark is seen, the
+    /// response is delivered and the mark is discarded.  Under the
+    /// continuous scheduler a mid-decode cancel frees the request's KV
+    /// slot and pages the same iteration the mark is observed.
+    pub fn cancel(&self, id: usize) {
+        self.cancels.cancel(id);
     }
 
     /// Requests shed so far (backpressure: queue full or closed).
@@ -534,16 +1024,33 @@ impl ServerClient<'_> {
         self.admission.shed()
     }
 
-    /// Requests shed so far for being unservable (empty or longer than
-    /// the backend's source cap) — distinct from backpressure `shed`.
+    /// Requests shed so far for being unservable (empty, longer than
+    /// the backend's source cap, or naming an unknown tenant) —
+    /// distinct from backpressure `shed`.
     pub fn shed_oversize(&self) -> u64 {
         self.admission.shed_oversize()
+    }
+
+    /// Requests shed so far by per-tenant token-rate limits.
+    pub fn shed_rate(&self) -> u64 {
+        self.admission.shed_rate()
     }
 
     /// Requests admitted so far.
     pub fn accepted(&self) -> u64 {
         self.admission.accepted()
     }
+}
+
+/// Everything a serving stage needs besides its own state: the
+/// dispatch queue, the shared latency ledgers, the cancellation marks
+/// and the streaming sink.
+#[derive(Clone, Copy)]
+struct ShardEnv<'a> {
+    dispatch: &'a BatchQueue<FormedBatch>,
+    book: &'a LatencyBook,
+    cancels: &'a CancelSet,
+    sink: &'a dyn TokenSink,
 }
 
 /// Per-shard accumulation (identical shape to the offline
@@ -601,6 +1108,16 @@ impl ShardStats {
     }
 }
 
+/// One completed row heading into [`LatencyBook::emit_all`].
+struct DoneRow {
+    id: usize,
+    tenant: TenantId,
+    out: Vec<u32>,
+    enqueued: Instant,
+    closed_at: Instant,
+    truncated: bool,
+}
+
 /// The shared latency ledgers + completed-response sink both shard
 /// loops write into.  `emit_all` assigns the global completion ordinal
 /// ([`TranslateResponse::done_seq`]) under the sink lock.
@@ -619,29 +1136,38 @@ impl LatencyBook {
     /// ledger lock, however many rows the caller finished at once (a
     /// whole drained batch, or one iteration's finished slots).
     /// `closed_at` rides per row because continuous slots may come from
-    /// different prefill batches.
+    /// different prefill batches.  Each row also discards any lingering
+    /// cancellation mark (completion won the race) and is reported to
+    /// the streaming sink under the done lock, so `done_seq` order and
+    /// `on_done` order agree.
     fn emit_all(
         &self,
-        rows: impl IntoIterator<Item = (usize, Vec<u32>, Instant, Instant, bool)>,
+        rows: impl IntoIterator<Item = DoneRow>,
         now: Instant,
+        cancels: &CancelSet,
+        sink: &dyn TokenSink,
     ) {
         let mut ql = self.queue.lock().unwrap();
         let mut tl = self.total.lock().unwrap();
         let mut d = self.done.lock().unwrap();
-        for (id, out, enqueued, closed_at, truncated) in rows {
-            let total = now.saturating_duration_since(enqueued);
-            let queued = closed_at.saturating_duration_since(enqueued);
+        for row in rows {
+            cancels.discard(row.id);
+            let total = now.saturating_duration_since(row.enqueued);
+            let queued = row.closed_at.saturating_duration_since(row.enqueued);
             ql.record(queued);
             tl.record(total);
             let done_seq = d.len();
-            d.push(TranslateResponse {
-                id,
-                out,
+            let resp = TranslateResponse {
+                id: row.id,
+                tenant: row.tenant,
+                out: row.out,
                 queue_secs: queued.as_secs_f64(),
                 total_secs: total.as_secs_f64(),
                 done_seq,
-                truncated,
-            });
+                truncated: row.truncated,
+            };
+            sink.on_done(&resp);
+            d.push(resp);
         }
     }
 
@@ -653,20 +1179,58 @@ impl LatencyBook {
         shards: usize,
         wall: f64,
         shard_stats: &[ShardStats],
-        shed: usize,
-        shed_oversize: usize,
+        admission: &AdmissionQueue,
+        cancelled: usize,
     ) -> (ServerMetrics, Vec<TranslateResponse>) {
         let mut responses = self.done.into_inner().unwrap();
         responses.sort_by_key(|r| r.id);
         let busy: f64 = shard_stats.iter().map(|s| s.busy_secs).sum();
         let continuous = shard_stats.iter().any(|s| s.pool_capacity > 0);
+        let counters = admission.tenant_counters();
+        // per-tenant rows only when tenancy is actually in play: the
+        // single-tenant default keeps every report byte-identical to
+        // the pre-tenancy output
+        let tenants: Vec<TenantMetrics> = if cfg.tenants.len() > 1 {
+            cfg.tenants
+                .iter()
+                .enumerate()
+                .map(|(tid, spec)| {
+                    let mut total_latency = LatencyStats::default();
+                    let mut requests = 0usize;
+                    let mut seq_sum = 0usize;
+                    for r in responses.iter().filter(|r| r.tenant == tid) {
+                        total_latency.record(Duration::from_secs_f64(r.total_secs));
+                        requests += 1;
+                        seq_sum += r.done_seq;
+                    }
+                    TenantMetrics {
+                        name: spec.name.clone(),
+                        weight: spec.weight,
+                        accepted: counters[tid].accepted as usize,
+                        shed: counters[tid].shed as usize,
+                        shed_rate: counters[tid].shed_rate as usize,
+                        requests,
+                        total_latency,
+                        mean_done_seq: if requests > 0 {
+                            seq_sum as f64 / requests as f64
+                        } else {
+                            0.0
+                        },
+                    }
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         let metrics = ServerMetrics {
             config: cfg.label(),
             shards,
             requests: shard_stats.iter().map(|s| s.requests).sum(),
-            shed,
-            shed_oversize: shed_oversize
+            shed: counters.iter().map(|c| c.shed as usize).sum(),
+            shed_oversize: admission.shed_oversize() as usize
                 + shard_stats.iter().map(|s| s.shed_oversize).sum::<usize>(),
+            shed_rate: counters.iter().map(|c| c.shed_rate as usize).sum(),
+            cancelled,
             batches: shard_stats.iter().map(|s| s.batches).sum(),
             tokens: shard_stats.iter().map(|s| s.tokens).sum(),
             padded_tokens: shard_stats.iter().map(|s| s.padded_tokens).sum(),
@@ -697,39 +1261,41 @@ impl LatencyBook {
             } else {
                 Vec::new()
             },
+            tenants,
         };
         (metrics, responses)
     }
 }
 
 /// The dynamic-batcher stage shared by both schedulers: admission
-/// queue -> token-budget/deadline batches -> dispatch queue.  A failed
-/// push means a panicking shard closed the queue early (see
-/// [`CloseQueueOnDrop`]): the batch is dropped while the panic
-/// propagates, so latency is only ever recorded for batches a shard
-/// actually executed.
-fn batcher_loop(
-    admission: &AdmissionQueue,
-    dispatch: &BatchQueue<FormedBatch>,
-    mut former: BatchFormer,
-) {
+/// queue -> token-budget/deadline batches -> dispatch queue.  A popped
+/// request whose cancellation mark is pending is purged right here —
+/// it never costs a batch row.  A failed push means a panicking shard
+/// closed the queue early (see [`CloseQueueOnDrop`]): the batch is
+/// dropped while the panic propagates, so latency is only ever
+/// recorded for batches a shard actually executed.
+fn batcher_loop(admission: &AdmissionQueue, env: &ShardEnv<'_>, mut former: BatchFormer) {
     // closes dispatch on exit — normal (drained) or panic
-    let _guard = CloseQueueOnDrop(dispatch);
+    let _guard = CloseQueueOnDrop(env.dispatch);
     loop {
         match admission.pop_until(former.deadline()) {
             Popped::Item(p) => {
+                if env.cancels.take(p.req.id) {
+                    env.sink.on_cancelled(p.req.id);
+                    continue;
+                }
                 if let Some(fb) = former.offer(p.req, p.enqueued) {
-                    let _ = dispatch.push(fb);
+                    let _ = env.dispatch.push(fb);
                 }
             }
             Popped::TimedOut => {
                 if let Some(fb) = former.flush() {
-                    let _ = dispatch.push(fb);
+                    let _ = env.dispatch.push(fb);
                 }
             }
             Popped::Closed => {
                 if let Some(fb) = former.flush() {
-                    let _ = dispatch.push(fb);
+                    let _ = env.dispatch.push(fb);
                 }
                 break;
             }
@@ -762,9 +1328,17 @@ impl Drop for CloseAdmissionOnDrop<'_> {
 
 /// The orchestration skeleton shared by both schedulers: admission
 /// queue + dynamic batcher + `cfg.shards` worker threads running
-/// `worker(shard_id, dispatch, book)` (called on the worker's own
-/// thread, after core affinity is set), with the close-on-drop panic
-/// backstops and the drive/join/metrics protocol.
+/// `worker(shard_id, env)` (called on the worker's own thread, after
+/// core affinity is set), with the close-on-drop panic backstops and
+/// the drive/join/metrics protocol.  `sink` observes per-token,
+/// completion and cancellation events ([`TokenSink`]).
+///
+/// Graceful drain is this protocol's normal exit: when `drive`
+/// returns, admission closes (no new requests), the batcher flushes
+/// its open batch and exits, each shard drains its dispatch queue,
+/// backlog and live slots to completion, and only then are the final
+/// metrics assembled — every admitted request is answered (or
+/// explicitly cancelled), never dropped.
 ///
 /// Panic safety: if anything on the coordinator thread panics (the
 /// drive closure, a join unwrap), both queues are closed during unwind
@@ -774,15 +1348,21 @@ impl Drop for CloseAdmissionOnDrop<'_> {
 /// down.  On the normal path the guards' repeat closes are no-ops.
 fn serve_with<W, D, R>(
     cfg: &ServerConfig,
+    sink: &dyn TokenSink,
     worker: W,
     drive: D,
 ) -> (ServerMetrics, Vec<TranslateResponse>, R)
 where
-    W: Fn(usize, &BatchQueue<FormedBatch>, &LatencyBook) -> ShardStats + Sync,
-    D: FnOnce(&ServerClient<'_>) -> R,
+    W: Fn(usize, ShardEnv<'_>) -> ShardStats + Sync,
+    D: FnOnce(&ServerClient) -> R,
 {
     let shards = cfg.shards.max(1);
-    let admission = AdmissionQueue::new(cfg.queue_capacity, cfg.max_src_len);
+    let admission = Arc::new(AdmissionQueue::new(
+        cfg.queue_capacity,
+        cfg.max_src_len,
+        cfg.tenants.clone(),
+    ));
+    let cancels = Arc::new(CancelSet::new());
     let dispatch: BatchQueue<FormedBatch> = BatchQueue::new(shards * 2);
     let book = LatencyBook::default();
     let partitions = core_partition(num_cpus(), shards);
@@ -790,36 +1370,46 @@ where
     let t0 = Instant::now();
 
     let (drive_out, shard_stats) = crossbeam_utils::thread::scope(|scope| {
-        let _admission_guard = CloseAdmissionOnDrop(&admission);
+        let _admission_guard = CloseAdmissionOnDrop(admission.as_ref());
         let _dispatch_guard = CloseQueueOnDrop(&dispatch);
 
         // shard workers: consume formed batches until the queue closes
         let mut handles = Vec::new();
         for shard_id in 0..shards {
-            let dispatch = &dispatch;
-            let book = &book;
+            let env = ShardEnv {
+                dispatch: &dispatch,
+                book: &book,
+                cancels: cancels.as_ref(),
+                sink,
+            };
             let worker = &worker;
             let cores = partitions[shard_id % partitions.len()].clone();
             handles.push(scope.spawn(move |_| {
-                let _guard = CloseQueueOnDrop(dispatch);
+                let _guard = CloseQueueOnDrop(env.dispatch);
                 if pin_cores {
                     set_affinity(&cores);
                 }
-                worker(shard_id, dispatch, book)
+                worker(shard_id, env)
             }));
         }
 
         // the batcher: admission queue -> dynamic batches -> dispatch
         let batcher = {
-            let admission = &admission;
-            let dispatch = &dispatch;
+            let admission = admission.as_ref();
+            let env = ShardEnv {
+                dispatch: &dispatch,
+                book: &book,
+                cancels: cancels.as_ref(),
+                sink,
+            };
             let former = BatchFormer::new(cfg.token_budget, cfg.max_batch_rows, cfg.max_wait);
-            scope.spawn(move |_| batcher_loop(admission, dispatch, former))
+            scope.spawn(move |_| batcher_loop(admission, &env, former))
         };
 
         // the outside world, on the calling thread
         let client = ServerClient {
-            admission: &admission,
+            admission: admission.clone(),
+            cancels: cancels.clone(),
         };
         let out = drive(&client);
         admission.close();
@@ -835,22 +1425,19 @@ where
         shards,
         wall,
         &shard_stats,
-        admission.shed() as usize,
-        admission.shed_oversize() as usize,
+        admission.as_ref(),
+        cancels.purged() as usize,
     );
     (metrics, responses, drive_out)
 }
 
-/// Run an online server: a dynamic batcher plus `cfg.shards` worker
-/// streams, each owning the translate function `factory` builds for it
-/// (an `Engine` or a PJRT executable — the same [`StreamFactory`]
-/// contract as the offline parallel runner).
-///
-/// `drive` runs on the calling thread with a [`ServerClient`] and
-/// represents the outside world submitting requests; when it returns,
-/// admission closes, the queues drain, the shards join, and the
-/// completed responses (sorted by request id) are returned with the
-/// run's [`ServerMetrics`].
+/// Run an online server with **batch-synchronous** shards: `cfg.shards`
+/// worker threads pop formed batches off a shared dispatch queue, each
+/// owning its own translate closure built by `factory` (one engine or
+/// executable per shard, exactly like the offline parallel runner).
+/// `drive` runs on the calling thread with a [`ServerClient`]; when it
+/// returns, the server drains gracefully (admission closes, in-flight
+/// batches finish, metrics are finalized).
 pub fn serve<F, D, R>(
     cfg: &ServerConfig,
     factory: F,
@@ -858,14 +1445,31 @@ pub fn serve<F, D, R>(
 ) -> (ServerMetrics, Vec<TranslateResponse>, R)
 where
     F: StreamFactory,
-    D: FnOnce(&ServerClient<'_>) -> R,
+    D: FnOnce(&ServerClient) -> R,
+{
+    serve_with_sink(cfg, &NullSink, factory, drive)
+}
+
+/// [`serve`] with an explicit [`TokenSink`].  The batch-synchronous
+/// scheduler emits no per-token events (the shard closure is opaque);
+/// the sink still observes completions and cancellations.
+pub fn serve_with_sink<F, D, R>(
+    cfg: &ServerConfig,
+    sink: &dyn TokenSink,
+    factory: F,
+    drive: D,
+) -> (ServerMetrics, Vec<TranslateResponse>, R)
+where
+    F: StreamFactory,
+    D: FnOnce(&ServerClient) -> R,
 {
     serve_with(
         cfg,
-        |shard_id, dispatch, book| {
+        sink,
+        |shard_id, env| {
             let mut translate = factory.make(shard_id);
             let mut stats = ShardStats::default();
-            while let Some(fb) = dispatch.pop() {
+            while let Some(fb) = env.dispatch.pop() {
                 let bt = Instant::now();
                 let outs = translate(&fb.batch);
                 assert_eq!(
@@ -874,21 +1478,41 @@ where
                     "translate must return one output row per batch row"
                 );
                 let exec = bt.elapsed();
-                book.batch.lock().unwrap().record(exec);
+                env.book.batch.lock().unwrap().record(exec);
                 stats.batches += 1;
                 stats.requests += fb.batch.len();
                 stats.tokens += fb.batch.tokens;
                 stats.padded_tokens += fb.batch.padded_tokens();
                 stats.busy_secs += exec.as_secs_f64();
                 let now = Instant::now();
-                let rows = fb
+                // a row cancelled after its batch formed still decoded
+                // (the closure is opaque mid-batch) but its response is
+                // suppressed here and the purge counted; everything
+                // else ships as usual
+                let mut rows = Vec::with_capacity(outs.len());
+                for (((&id, &tenant), &enq), out) in fb
                     .batch
                     .indices
                     .iter()
+                    .zip(&fb.tenants)
                     .zip(&fb.enqueued)
                     .zip(outs)
-                    .map(|((&id, &enq), out)| (id, out, enq, fb.closed_at, false));
-                book.emit_all(rows, now);
+                {
+                    if env.cancels.take(id) {
+                        stats.requests -= 1;
+                        env.sink.on_cancelled(id);
+                        continue;
+                    }
+                    rows.push(DoneRow {
+                        id,
+                        tenant,
+                        out,
+                        enqueued: enq,
+                        closed_at: fb.closed_at,
+                        truncated: false,
+                    });
+                }
+                env.book.emit_all(rows, now, env.cancels, env.sink);
             }
             stats
         },
@@ -903,6 +1527,7 @@ where
 /// One occupied slot's request context in a continuous shard.
 struct SlotCtx {
     id: usize,
+    tenant: TenantId,
     enqueued: Instant,
     /// when the batcher sealed the request's prefill batch
     closed_at: Instant,
@@ -919,6 +1544,7 @@ struct SlotCtx {
 /// backlog one at a time, each gated on free pages.
 struct PendingRow {
     id: usize,
+    tenant: TenantId,
     enqueued: Instant,
     closed_at: Instant,
     /// this row's `[s, d_model]` slice of the prefill batch's memory
@@ -929,13 +1555,22 @@ struct PendingRow {
 }
 
 /// The iteration-level shard loop: encode every claimed batch into the
-/// splice backlog, admit backlog rows while the pool has free slots
-/// *and free KV pages*, step the active set once, emit + recycle
-/// finished slots, repeat.  Blocks on the dispatch queue only while
-/// completely idle; mid-flight it polls with
+/// splice backlog, purge pending cancellations, admit backlog rows
+/// while the pool has free slots *and free KV pages*, step the active
+/// set once, emit + recycle finished slots, repeat.  Blocks on the
+/// dispatch queue only while completely idle; mid-flight it polls with
 /// [`BatchQueue::try_pop_if`], claiming a batch **only if the whole
 /// batch is admissible right now** — a batch this shard would just park
 /// in its backlog stays queued for an idle peer instead.
+///
+/// Every decoded token is reported to the [`TokenSink`] the iteration
+/// it is produced — the hook `coordinator::net` streams SSE frames
+/// through.  The cancellation scan is version-gated (one atomic load
+/// per iteration while no cancel is pending): a cancelled backlog row
+/// is dropped before it ever takes a slot, and a cancelled *active*
+/// slot is recycled on the spot via [`DecodePool::cancel`] — its pages
+/// return to the free pool and the next iteration's compacted active
+/// set simply omits the row.
 ///
 /// Capacity failures are serving events here, never panics: an
 /// unservable row ([`AdmitError::is_permanent`]) is shed with its own
@@ -943,11 +1578,13 @@ struct PendingRow {
 /// recycles capacity, and a slot the pool force-finishes mid-decode
 /// (page budget exhausted, or `t_max`) ships its partial output flagged
 /// [`TranslateResponse::truncated`].
+///
+/// [`AdmitError::is_permanent`]: crate::model::engine::AdmitError::is_permanent
+/// [`DecodePool::cancel`]: crate::model::engine::DecodePool::cancel
 fn continuous_shard_loop(
     engine: &mut Engine,
     cfg: &ServerConfig,
-    dispatch: &BatchQueue<FormedBatch>,
-    book: &LatencyBook,
+    env: &ShardEnv<'_>,
 ) -> ShardStats {
     // a zero decode cap yields empty outputs without stepping, exactly
     // like `translate_greedy` (parity with the batch scheduler); the
@@ -972,6 +1609,9 @@ fn continuous_shard_loop(
     let mut active: Vec<usize> = Vec::new();
     let mut tokens: Vec<u32> = Vec::new();
     let mut logits = Vec::new();
+    // last CancelSet version this shard scanned at: the no-cancel fast
+    // path is one atomic load per iteration
+    let mut cancel_seen = 0u64;
     // per-iteration sample buffers so the shared ledgers are locked
     // once per iteration, never across the argmax scan
     let mut ttft_samples: Vec<Duration> = Vec::new();
@@ -989,14 +1629,14 @@ fn continuous_shard_loop(
             let fb = if active.is_empty() && backlog.is_empty() {
                 // idle shard: block until work arrives or the queue
                 // closes-and-drains
-                match dispatch.pop() {
+                match env.dispatch.pop() {
                     Some(fb) => fb,
                     None => break 'run,
                 }
             } else {
                 // mid-flight: claim a batch only when this shard could
                 // admit all of it right now (free slots and pages)
-                match dispatch.try_pop_if(|fb| {
+                match env.dispatch.try_pop_if(|fb| {
                     backlog.is_empty() && pool.can_admit(fb.batch.len(), fb.batch.max_len)
                 }) {
                     Some(fb) => fb,
@@ -1009,13 +1649,22 @@ fn continuous_shard_loop(
             stats.padded_tokens += fb.batch.padded_tokens();
             if t_max == 0 {
                 let now = Instant::now();
-                let rows = fb
+                let rows: Vec<DoneRow> = fb
                     .batch
                     .indices
                     .iter()
+                    .zip(&fb.tenants)
                     .zip(&fb.enqueued)
-                    .map(|(&id, &enq)| (id, Vec::new(), enq, fb.closed_at, false));
-                book.emit_all(rows, now);
+                    .map(|((&id, &tenant), &enq)| DoneRow {
+                        id,
+                        tenant,
+                        out: Vec::new(),
+                        enqueued: enq,
+                        closed_at: fb.closed_at,
+                        truncated: false,
+                    })
+                    .collect();
+                env.book.emit_all(rows, now, env.cancels, env.sink);
                 continue;
             }
             // encode at batch level: prefill sees exactly the rows the
@@ -1029,12 +1678,49 @@ fn continuous_shard_loop(
             for (r, (&id, &enq)) in fb.batch.indices.iter().zip(&fb.enqueued).enumerate() {
                 backlog.push_back(PendingRow {
                     id,
+                    tenant: fb.tenants[r],
                     enqueued: enq,
                     closed_at: fb.closed_at,
                     memory: memory[r * row_elems..(r + 1) * row_elems].to_vec(),
                     src_len: src_len[r],
                     s,
                 });
+            }
+        }
+
+        // cancellation scan (version-gated: free until a cancel lands).
+        // A backlog row is purged before it ever takes a slot; an
+        // active slot is recycled immediately — pages free now, and the
+        // compacted active set below never carries the row again
+        let v = env.cancels.version();
+        if v != cancel_seen {
+            cancel_seen = v;
+            backlog.retain(|p| {
+                if env.cancels.take(p.id) {
+                    stats.requests -= 1;
+                    env.sink.on_cancelled(p.id);
+                    false
+                } else {
+                    true
+                }
+            });
+            let mut j = 0usize;
+            while j < active.len() {
+                let slot = active[j];
+                let id = ctx[slot].as_ref().expect("active slot has context").id;
+                if env.cancels.take(id) {
+                    pool.cancel(slot);
+                    ctx[slot] = None;
+                    // swap_remove keeps active/tokens parallel; row
+                    // order only permutes logits rows, never a row's
+                    // own math
+                    active.swap_remove(j);
+                    tokens.swap_remove(j);
+                    stats.requests -= 1;
+                    env.sink.on_cancelled(id);
+                } else {
+                    j += 1;
+                }
             }
         }
 
@@ -1046,6 +1732,7 @@ fn continuous_shard_loop(
                     let p = backlog.pop_front().unwrap();
                     ctx[slot] = Some(SlotCtx {
                         id: p.id,
+                        tenant: p.tenant,
                         enqueued: p.enqueued,
                         closed_at: p.closed_at,
                         last_emit: Instant::now(),
@@ -1082,7 +1769,7 @@ fn continuous_shard_loop(
         let truncated = engine.pool_step(&mut pool, &active, &tokens, &mut logits);
         let now = Instant::now();
         let exec = now.saturating_duration_since(bt);
-        book.batch.lock().unwrap().record(exec);
+        env.book.batch.lock().unwrap().record(exec);
         stats.busy_secs += exec.as_secs_f64();
         stats.steps += 1;
         stats.occupied_slot_steps += active.len();
@@ -1113,6 +1800,8 @@ fn continuous_shard_loop(
             li += 1;
             if next != EOS_ID {
                 c.out.push(next);
+                // stream the token the iteration it was produced
+                env.sink.on_token(c.id, c.tenant, next);
             }
             if next == EOS_ID || pool.pos(slot) >= t_max {
                 // finish: recycle the slot (and its pages) now, emit
@@ -1128,22 +1817,29 @@ fn continuous_shard_loop(
         active = keep;
         tokens = keep_tokens;
         if !ttft_samples.is_empty() {
-            let mut g = book.ttft.lock().unwrap();
+            let mut g = env.book.ttft.lock().unwrap();
             for d in ttft_samples.drain(..) {
                 g.record(d);
             }
         }
         if !itl_samples.is_empty() {
-            let mut g = book.itl.lock().unwrap();
+            let mut g = env.book.itl.lock().unwrap();
             for d in itl_samples.drain(..) {
                 g.record(d);
             }
         }
-        book.emit_all(
-            finished
-                .drain(..)
-                .map(|(c, trunc)| (c.id, c.out, c.enqueued, c.closed_at, trunc)),
+        env.book.emit_all(
+            finished.drain(..).map(|(c, trunc)| DoneRow {
+                id: c.id,
+                tenant: c.tenant,
+                out: c.out,
+                enqueued: c.enqueued,
+                closed_at: c.closed_at,
+                truncated: trunc,
+            }),
             now,
+            env.cancels,
+            env.sink,
         );
     }
     stats.page_high_water = pool.page_stats().high_water;
@@ -1171,13 +1867,30 @@ pub fn serve_continuous<F, D, R>(
 ) -> (ServerMetrics, Vec<TranslateResponse>, R)
 where
     F: Fn(usize) -> Engine + Sync,
-    D: FnOnce(&ServerClient<'_>) -> R,
+    D: FnOnce(&ServerClient) -> R,
+{
+    serve_continuous_with_sink(cfg, &NullSink, make_engine, drive)
+}
+
+/// [`serve_continuous`] with an explicit [`TokenSink`]: every decoded
+/// token, completion and cancellation is reported as it happens — the
+/// entry point `coordinator::net` builds its SSE streams on.
+pub fn serve_continuous_with_sink<F, D, R>(
+    cfg: &ServerConfig,
+    sink: &dyn TokenSink,
+    make_engine: F,
+    drive: D,
+) -> (ServerMetrics, Vec<TranslateResponse>, R)
+where
+    F: Fn(usize) -> Engine + Sync,
+    D: FnOnce(&ServerClient) -> R,
 {
     serve_with(
         cfg,
-        |shard_id, dispatch, book| {
+        sink,
+        |shard_id, env| {
             let mut engine = make_engine(shard_id);
-            continuous_shard_loop(&mut engine, cfg, dispatch, book)
+            continuous_shard_loop(&mut engine, cfg, &env)
         },
         drive,
     )
@@ -1205,9 +1918,13 @@ pub fn poisson_offsets(seed: u64, n: usize, rate: f64) -> Vec<Duration> {
 
 /// Replay `reqs` open-loop against the server: request `i` is submitted
 /// `offsets[i]` after the replay starts, regardless of completions
-/// (shed requests are *not* retried).  Returns (submitted, shed).
+/// (shed requests are *not* retried).  Requests carry their own tenant
+/// ids ([`TranslateRequest::with_tenant`] /
+/// [`TranslateRequest::from_pairs_round_robin`]), so one trace can
+/// deterministically replay multi-tenant load.  Returns
+/// (submitted, shed).
 pub fn replay_trace(
-    client: &ServerClient<'_>,
+    client: &ServerClient,
     reqs: Vec<TranslateRequest>,
     offsets: &[Duration],
 ) -> (usize, usize) {
@@ -1233,10 +1950,7 @@ mod tests {
     use super::*;
 
     fn req(id: usize, len: usize) -> TranslateRequest {
-        TranslateRequest {
-            id,
-            src: vec![3; len],
-        }
+        TranslateRequest::new(id, vec![3; len])
     }
 
     /// Stub shard: echo the (padded) source rows back.
@@ -1333,8 +2047,18 @@ mod tests {
     }
 
     #[test]
+    fn former_carries_tenants_through_flush() {
+        let mut f = BatchFormer::new(1024, 8, Duration::from_secs(1));
+        let now = Instant::now();
+        f.offer(req(0, 4), now);
+        f.offer(req(1, 4).with_tenant(3), now);
+        let fb = f.flush().expect("open batch");
+        assert_eq!(fb.tenants, vec![DEFAULT_TENANT, 3]);
+    }
+
+    #[test]
     fn admission_sheds_at_capacity() {
-        let q = AdmissionQueue::new(2, None);
+        let q = AdmissionQueue::new(2, None, TenantSet::single());
         assert!(q.try_admit(req(0, 4)));
         assert!(q.try_admit(req(1, 4)));
         assert!(!q.try_admit(req(2, 4)), "third must shed");
@@ -1348,15 +2072,16 @@ mod tests {
     fn admission_sheds_malformed_requests() {
         // a malformed request must be shed, never panic a shard — and
         // under its own counter: it is unservable, not backpressure
-        let q = AdmissionQueue::new(8, Some(10));
+        let q = AdmissionQueue::new(8, Some(10), TenantSet::single());
         assert!(q.try_admit(req(0, 10)), "at the cap is fine");
         assert!(!q.try_admit(req(1, 11)), "over-long must shed");
         assert!(!q.try_admit(req(2, 0)), "empty must shed");
+        assert!(!q.try_admit(req(3, 4).with_tenant(9)), "unknown tenant sheds");
         assert_eq!(q.accepted(), 1);
-        assert_eq!(q.shed_oversize(), 2);
+        assert_eq!(q.shed_oversize(), 3);
         assert_eq!(q.shed(), 0, "no backpressure happened");
-        // with no cap, only emptiness is malformed
-        let q = AdmissionQueue::new(8, None);
+        // with no cap, only emptiness / unknown tenancy is malformed
+        let q = AdmissionQueue::new(8, None, TenantSet::single());
         assert!(q.try_admit(req(0, 10_000)));
         assert!(!q.try_admit(req(1, 0)));
         assert_eq!(q.shed_oversize(), 1);
@@ -1380,7 +2105,7 @@ mod tests {
 
     #[test]
     fn admission_pop_times_out_then_drains() {
-        let q = AdmissionQueue::new(8, None);
+        let q = AdmissionQueue::new(8, None, TenantSet::single());
         let deadline = Some(Instant::now() + Duration::from_millis(10));
         match q.pop_until(deadline) {
             Popped::TimedOut => {}
@@ -1396,6 +2121,149 @@ mod tests {
             Popped::Closed => {}
             _ => panic!("drained closed queue reports Closed"),
         }
+    }
+
+    fn two_tier_tenants() -> TenantSet {
+        TenantSet::new(vec![
+            TenantSpec::new("gold", 4.0),
+            TenantSpec::new("bronze", 1.0),
+        ])
+        .unwrap()
+    }
+
+    /// Drain a queue synchronously and return the tenant id of each pop
+    /// in order.
+    fn drain_tenants(q: &AdmissionQueue) -> Vec<TenantId> {
+        q.close();
+        let mut order = Vec::new();
+        loop {
+            match q.pop_until(None) {
+                Popped::Item(p) => order.push(p.req.tenant),
+                Popped::Closed => break,
+                Popped::TimedOut => unreachable!("deadline is None"),
+            }
+        }
+        order
+    }
+
+    #[test]
+    fn weighted_fair_dequeue_follows_stride_shares() {
+        // gold weight 4, bronze weight 1, every request costs 4 source
+        // tokens: strides are exactly 1.0 and 4.0 (both exact in f64),
+        // so the stride schedule is deterministic.  Gold vtimes after
+        // each pop: 1,2,3,... bronze: 4,8,12,...  Ties break toward the
+        // lower tenant index (gold).
+        let q = AdmissionQueue::new(64, None, two_tier_tenants());
+        for i in 0..8 {
+            assert!(q.try_admit(req(i, 4).with_tenant(0)));
+            assert!(q.try_admit(req(100 + i, 4).with_tenant(1)));
+        }
+        let order = drain_tenants(&q);
+        // per stride scheduling: gold pops at vtime 1..8 (8 pops),
+        // bronze at 4,8 interleave while gold lasts, then bronze drains
+        assert_eq!(
+            order,
+            vec![0, 1, 0, 0, 0, 0, 1, 0, 0, 0, 1, 1, 1, 1, 1, 1],
+            "stride schedule: gold takes ~4x the slots while both are backlogged"
+        );
+        // under saturation the first half of the schedule is dominated
+        // by gold: 4:1 share by construction
+        let gold_in_first_half = order[..8].iter().filter(|&&t| t == 0).count();
+        assert_eq!(gold_in_first_half, 6);
+    }
+
+    #[test]
+    fn idle_tenant_rejoins_at_the_global_clock() {
+        // equal weights; tenant 1 is idle while tenant 0 pops 4
+        // requests (vclock advances to 16).  When tenant 1 then joins
+        // it must NOT replay its banked idle time: its vtime clamps to
+        // the global clock, so service alternates from here on instead
+        // of tenant 1 monopolizing the queue.
+        let tenants = TenantSet::new(vec![
+            TenantSpec::new("a", 1.0),
+            TenantSpec::new("b", 1.0),
+        ])
+        .unwrap();
+        let q = AdmissionQueue::new(64, None, tenants);
+        for i in 0..4 {
+            assert!(q.try_admit(req(i, 4).with_tenant(0)));
+        }
+        // drain the 4 (tenant 1 still idle)
+        for _ in 0..4 {
+            match q.pop_until(None) {
+                Popped::Item(p) => assert_eq!(p.req.tenant, 0),
+                _ => panic!("queued item expected"),
+            }
+        }
+        // now both tenants enqueue 2 each: without the rejoin clamp
+        // tenant 1 (vtime 0) would pop both of its requests first
+        for i in 0..2 {
+            assert!(q.try_admit(req(10 + i, 4).with_tenant(0)));
+            assert!(q.try_admit(req(20 + i, 4).with_tenant(1)));
+        }
+        let order = drain_tenants(&q);
+        assert_eq!(order, vec![0, 1, 0, 1], "rejoin clamps to the vclock");
+    }
+
+    #[test]
+    fn rate_limited_tenant_sheds_with_its_own_counter() {
+        // rate 10 tok/s, burst 20: two 10-token requests drain the
+        // bucket instantly, the third sheds under shed_rate (the
+        // elapsed wall time between calls refills ~nothing)
+        let tenants = TenantSet::new(vec![
+            TenantSpec::new("limited", 1.0).with_rate(10.0, 20.0)
+        ])
+        .unwrap();
+        let q = AdmissionQueue::new(64, None, tenants);
+        assert!(q.try_admit(req(0, 10)));
+        assert!(q.try_admit(req(1, 10)));
+        assert!(!q.try_admit(req(2, 10)), "bucket is empty");
+        assert_eq!(q.accepted(), 2);
+        assert_eq!(q.shed_rate(), 1);
+        assert_eq!(q.shed(), 0, "rate shed is not backpressure shed");
+        assert_eq!(q.shed_oversize(), 0);
+    }
+
+    #[test]
+    fn tenant_set_loads_from_json() {
+        let path = std::env::temp_dir().join(format!("tenants-{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            r#"{"tenants": [
+                {"name": "gold", "weight": 4.0, "rate_tokens_per_sec": 100.0, "burst_tokens": 200.0},
+                {"name": "bronze"}
+            ]}"#,
+        )
+        .unwrap();
+        let set = TenantSet::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.get(0).name, "gold");
+        assert_eq!(set.get(0).weight, 4.0);
+        assert_eq!(set.get(0).rate_tokens_per_sec, Some(100.0));
+        assert_eq!(set.get(0).burst_tokens, 200.0);
+        assert_eq!(set.get(1).name, "bronze");
+        assert_eq!(set.get(1).weight, 1.0, "weight defaults to 1");
+        assert_eq!(set.get(1).rate_tokens_per_sec, None);
+        assert_eq!(set.id_of("bronze"), Some(1));
+        assert_eq!(set.id_of("nope"), None);
+    }
+
+    #[test]
+    fn tenant_set_rejects_bad_specs() {
+        assert!(TenantSet::new(vec![]).is_err(), "empty set");
+        assert!(
+            TenantSet::new(vec![TenantSpec::new("a", 0.0)]).is_err(),
+            "non-positive weight"
+        );
+        assert!(
+            TenantSet::new(vec![TenantSpec::new("a", 1.0), TenantSpec::new("a", 1.0)]).is_err(),
+            "duplicate name"
+        );
+        assert!(
+            TenantSet::new(vec![TenantSpec::new("a", 1.0).with_rate(10.0, 0.0)]).is_err(),
+            "rate without burst can never admit"
+        );
     }
 
     #[test]
@@ -1416,6 +2284,7 @@ mod tests {
         assert_eq!(responses.len(), 100);
         for (i, r) in responses.iter().enumerate() {
             assert_eq!(r.id, i, "responses sorted by request id");
+            assert_eq!(r.tenant, DEFAULT_TENANT);
             // echoed rows are padded to their batch max; the real
             // prefix must match the submitted source
             assert_eq!(&r.out[..1 + i % 7], &vec![3 + (i as u32 % 5); 1 + i % 7][..]);
@@ -1425,6 +2294,7 @@ mod tests {
         assert_eq!(metrics.queue_latency.count(), 100);
         assert_eq!(metrics.total_latency.count(), 100);
         assert!(metrics.fill_ratio() > 0.0 && metrics.fill_ratio() <= 1.0);
+        assert!(metrics.tenants.is_empty(), "single tenant reports no tenant rows");
     }
 
     #[test]
@@ -1501,17 +2371,23 @@ mod tests {
 
     #[test]
     fn scheduler_parses_and_labels() {
-        assert_eq!(Scheduler::parse_or(None, Scheduler::Batch), Scheduler::Batch);
         assert_eq!(
-            Scheduler::parse_or(Some("continuous"), Scheduler::Batch),
+            Scheduler::parse_or(None, Scheduler::Batch).unwrap(),
+            Scheduler::Batch
+        );
+        assert_eq!(
+            Scheduler::parse_or(Some("continuous"), Scheduler::Batch).unwrap(),
             Scheduler::Continuous
         );
-        assert_eq!(Scheduler::parse_or(Some("cont"), Scheduler::Batch), Scheduler::Continuous);
         assert_eq!(
-            Scheduler::parse_or(Some("zzz"), Scheduler::Batch),
-            Scheduler::Batch,
-            "unknown scheduler falls back"
+            Scheduler::parse_or(Some("cont"), Scheduler::Batch).unwrap(),
+            Scheduler::Continuous
         );
+        let err = Scheduler::parse_or(Some("zzz"), Scheduler::Batch)
+            .expect_err("unknown scheduler is a hard error");
+        let msg = err.to_string();
+        assert!(msg.contains("zzz"), "{msg}");
+        assert!(msg.contains("batch") && msg.contains("continuous"), "{msg}");
         let batch = echo_cfg().label();
         let cont = ServerConfig {
             scheduler: Scheduler::Continuous,
@@ -1544,6 +2420,66 @@ mod tests {
         let mut seqs: Vec<usize> = responses.iter().map(|r| r.done_seq).collect();
         seqs.sort_unstable();
         assert_eq!(seqs, (0..20).collect::<Vec<_>>(), "done_seq is a permutation");
+    }
+
+    #[test]
+    fn cancelled_requests_are_purged_not_answered() {
+        use crate::model::testutil::{random_weights, tiny_cfg};
+        let model_cfg = tiny_cfg();
+        let weights = random_weights(&model_cfg, 0xCA9C);
+        let cfg = ServerConfig {
+            shards: 1,
+            max_wait: Duration::from_millis(2),
+            token_budget: 32,
+            max_batch_rows: 4,
+            slots: 8,
+            queue_capacity: 1024,
+            max_decode_len: 8,
+            scheduler: Scheduler::Continuous,
+            ..Default::default()
+        };
+        let factory = |_id: usize| Engine::fp32(model_cfg.clone(), weights.clone()).unwrap();
+        let (metrics, responses, ()) = serve_continuous(&cfg, factory, |client| {
+            // mark id 5 cancelled before it is even submitted: the
+            // purge is then deterministic (the batcher pop sees the
+            // mark no matter how the threads interleave)
+            client.cancel(5);
+            for i in 0..10 {
+                assert!(client.submit(i, vec![3 + (i as u32 % 5), 4, 2]));
+            }
+        });
+        assert_eq!(metrics.cancelled, 1, "exactly one purge counted");
+        assert_eq!(metrics.requests, 9);
+        assert_eq!(responses.len(), 9);
+        assert!(
+            responses.iter().all(|r| r.id != 5),
+            "cancelled request must not be answered"
+        );
+    }
+
+    #[test]
+    fn multi_tenant_replay_carries_tenant_ids() {
+        let cfg = ServerConfig {
+            tenants: two_tier_tenants(),
+            ..echo_cfg()
+        };
+        let (metrics, responses, ()) = serve(&cfg, echo_factory, |client| {
+            for i in 0..20 {
+                assert!(client
+                    .submit_request(TranslateRequest::new(i, vec![4; 4]).with_tenant(i % 2)));
+            }
+        });
+        assert_eq!(responses.len(), 20);
+        for r in &responses {
+            assert_eq!(r.tenant, r.id % 2, "responses carry their tenant id");
+        }
+        assert_eq!(metrics.tenants.len(), 2, "one metrics row per tenant");
+        assert_eq!(metrics.tenants[0].name, "gold");
+        assert_eq!(metrics.tenants[0].requests, 10);
+        assert_eq!(metrics.tenants[1].requests, 10);
+        assert_eq!(metrics.tenants[0].accepted, 10);
+        assert_eq!(metrics.tenants[1].shed, 0);
+        assert!(cfg.label().contains("2tenants"), "{}", cfg.label());
     }
 
     #[test]
@@ -1648,5 +2584,23 @@ mod tests {
         assert_eq!(submitted + shed, 40);
         assert_eq!(metrics.requests, submitted);
         assert_eq!(responses.len(), submitted);
+    }
+
+    #[test]
+    fn round_robin_requests_cycle_tenants() {
+        let pair = Pair {
+            src: vec![3, 4],
+            ref_ids: vec![5],
+            n_words: 2,
+            text: String::new(),
+        };
+        let pairs = vec![pair.clone(), pair.clone(), pair];
+        let reqs = TranslateRequest::from_pairs_round_robin(&pairs, 2);
+        assert_eq!(
+            reqs.iter().map(|r| r.tenant).collect::<Vec<_>>(),
+            vec![0, 1, 0]
+        );
+        let reqs = TranslateRequest::from_pairs(&pairs);
+        assert!(reqs.iter().all(|r| r.tenant == DEFAULT_TENANT));
     }
 }

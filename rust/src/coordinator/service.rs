@@ -376,7 +376,7 @@ impl Service {
         drive: D,
     ) -> anyhow::Result<(ServerMetrics, Vec<TranslateResponse>, R)>
     where
-        D: FnOnce(&ServerClient<'_>) -> R,
+        D: FnOnce(&ServerClient) -> R,
     {
         use crate::coordinator::server::Scheduler;
         crate::gemm::set_gemm_threads(cfg.gemm_threads);
@@ -471,6 +471,45 @@ impl Service {
                 Ok(server::serve(&cfg, factory, drive))
             }
         }
+    }
+
+    /// Serve HTTP/SSE traffic on `listener` until `stop` flips — the
+    /// `serve --listen ADDR` path ([`crate::coordinator::net::run`]).
+    ///
+    /// Network serving streams tokens, so it requires an engine
+    /// backend under the continuous scheduler: that is the only path
+    /// with a per-token emission hook (the PJRT runtime executes fused
+    /// whole-sequence graphs and could stream nothing until the end).
+    /// The source cap is clamped to the model's `max_src_len` exactly
+    /// like [`serve`](Self::serve), so an over-long request gets an
+    /// HTTP 413, never a shard panic.
+    pub fn serve_net(
+        &self,
+        cfg: &ServerConfig,
+        listener: std::net::TcpListener,
+        stop: Arc<std::sync::atomic::AtomicBool>,
+    ) -> anyhow::Result<(ServerMetrics, Vec<TranslateResponse>)> {
+        use crate::coordinator::server::Scheduler;
+        anyhow::ensure!(
+            matches!(cfg.backend, Backend::EngineF32 | Backend::EngineRecipe(_)),
+            "serve --listen needs an engine backend (token streaming \
+             hooks the continuous shard loop); \
+             use --backend engine-fp32/engine-int8"
+        );
+        anyhow::ensure!(
+            cfg.scheduler == Scheduler::Continuous,
+            "serve --listen needs --scheduler continuous \
+             (tokens stream as the slot pool decodes them)"
+        );
+        crate::gemm::set_gemm_threads(cfg.gemm_threads);
+        let src_cap = cfg.max_src_len.unwrap_or(usize::MAX);
+        let cfg = ServerConfig {
+            max_src_len: Some(src_cap.min(self.model_cfg.max_src_len)),
+            ..cfg.clone()
+        };
+        let plan = self.compile_plan(&cfg.backend)?;
+        let factory = |_id: usize| Engine::from_compiled(self.model_cfg.clone(), plan.clone());
+        crate::coordinator::net::run(&cfg, factory, listener, stop)
     }
 }
 
@@ -583,7 +622,7 @@ mod tests {
             slots: 16,
             ..base.clone()
         };
-        let submit_all = |client: &ServerClient<'_>| {
+        let submit_all = |client: &ServerClient| {
             for (i, p) in pairs.iter().enumerate() {
                 assert!(client.submit(i, p.src.clone()), "shed row {i}");
             }

@@ -48,6 +48,15 @@
 //! outruns the budget mid-decode is force-finished with its response
 //! flagged truncated, never a panic).
 //!
+//! Network front end: `serve --listen ADDR` binds the hand-rolled
+//! HTTP/1.1 + SSE server instead of replaying a trace (implies
+//! `--scheduler continuous`); `--serve-secs N` accepts connections for
+//! N seconds (default 30) then drains gracefully; `--tenants FILE`
+//! loads a tenant spec (JSON array of `{"name", "weight",
+//! "rate_tokens_per_sec", "burst_tokens"}`) enabling weighted-fair
+//! admission and per-tenant token rate limits — without it every
+//! request lands on a single default tenant.
+//!
 //! `recipe derive` flags: `--synthetic` (deterministic synthetic
 //! calibration table, no artifacts needed), `--mode M` (default mode),
 //! `--quantize-sparse`, `--int8 "SEL=MODE,SEL"` (re-derive matched
@@ -69,7 +78,7 @@
 
 use quantnmt::coordinator::server::{poisson_offsets, replay_trace, TranslateRequest};
 use quantnmt::coordinator::service::DEFAULT_TOKEN_BUDGET;
-use quantnmt::coordinator::{Backend, Scheduler, ServerConfig, Service, ServiceConfig};
+use quantnmt::coordinator::{Backend, Scheduler, ServerConfig, Service, ServiceConfig, TenantSet};
 use quantnmt::data::sorting::SortOrder;
 use quantnmt::model::plan::SiteSet;
 use quantnmt::model::ModelConfig;
@@ -82,9 +91,11 @@ use quantnmt::util::cli::Args;
 use std::path::Path;
 use std::time::Duration;
 
-fn parse_mode(args: &Args) -> CalibrationMode {
-    CalibrationMode::from_str(args.get_or("mode", "symmetric"))
-        .unwrap_or(CalibrationMode::Symmetric)
+fn parse_mode(args: &Args) -> anyhow::Result<CalibrationMode> {
+    let m = args.get_or("mode", "symmetric");
+    CalibrationMode::from_str(m).ok_or_else(|| {
+        anyhow::anyhow!("unknown --mode '{m}' (valid: naive|symmetric|independent|conjugate)")
+    })
 }
 
 /// Resolve the backend: an explicit `--recipe recipe.json` wins,
@@ -96,24 +107,21 @@ fn parse_backend(args: &Args, svc: &Service) -> anyhow::Result<Backend> {
         recipe.validate(&SiteSet::new(&svc.model_cfg))?;
         return Ok(Backend::recipe(recipe));
     }
-    let mode = parse_mode(args);
-    Ok(match args.get_or("backend", "engine-int8") {
+    let mode = parse_mode(args)?;
+    let choices = ["engine-fp32", "engine-int8", "pjrt-fp32", "pjrt-int8"];
+    Ok(match args.get_choice("backend", &choices, "engine-int8")? {
         "engine-fp32" => Backend::EngineF32,
-        "engine-int8" => svc.int8_backend(mode)?,
         "pjrt-fp32" => Backend::Runtime(RtPrecision::Fp32),
         "pjrt-int8" => Backend::Runtime(RtPrecision::Int8),
-        other => {
-            eprintln!("unknown backend '{other}', using engine-int8");
-            svc.int8_backend(mode)?
-        }
+        _ => svc.int8_backend(mode)?,
     })
 }
 
 fn parse_config(args: &Args, svc: &Service) -> anyhow::Result<ServiceConfig> {
-    let policy = PolicyKind::parse_or(args.get("policy"), PolicyKind::FixedCount);
+    let policy = PolicyKind::parse_or(args.get("policy"), PolicyKind::FixedCount)?;
     Ok(ServiceConfig {
         backend: parse_backend(args, svc)?,
-        sort: match args.get_or("sort", "tokens") {
+        sort: match args.get_choice("sort", &["unsorted", "words", "tokens"], "tokens")? {
             "unsorted" => SortOrder::Unsorted,
             "words" => SortOrder::Words,
             _ => SortOrder::Tokens,
@@ -212,7 +220,7 @@ fn parse_server_config(args: &Args, svc: &Service) -> anyhow::Result<ServerConfi
         max_src_len: None,
         pin_cores: !args.flag("no-pin"),
         max_decode_len: args.get_usize("max-len", 56),
-        scheduler: Scheduler::parse_or(args.get("scheduler"), Scheduler::Batch),
+        scheduler: Scheduler::parse_or(args.get("scheduler"), Scheduler::Batch)?,
         slots: args.get_usize("slots", 0),
         // 0 = unset: worst-case KV sizing (allocation can never fail)
         kv_budget_mb: match args.get_usize("kv-budget-mb", 0) {
@@ -220,17 +228,30 @@ fn parse_server_config(args: &Args, svc: &Service) -> anyhow::Result<ServerConfi
             mb => Some(mb),
         },
         gemm_threads: args.get_usize("gemm-threads", 0),
+        tenants: match args.get("tenants") {
+            Some(path) => TenantSet::load(Path::new(path))?,
+            None => TenantSet::single(),
+        },
     })
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let svc = open_service(args)?;
     let cfg = parse_server_config(args, &svc)?;
+    if let Some(addr) = args.get("listen") {
+        return cmd_serve_net(args, &svc, cfg, addr);
+    }
     let ds = svc.dataset()?;
     let limit = args.get_usize("limit", 512).min(ds.test.len());
     let rate = args.get_f64("rate", 100.0);
     let seed = args.get_usize("seed", 0x5EED) as u64;
-    let reqs = TranslateRequest::from_pairs(&ds.test[..limit]);
+    // with a multi-tenant spec the replay cycles requests through the
+    // tenants so the weighted-fair/rate-limit path actually exercises
+    let reqs = if cfg.tenants.len() > 1 {
+        TranslateRequest::from_pairs_round_robin(&ds.test[..limit], cfg.tenants.len())
+    } else {
+        TranslateRequest::from_pairs(&ds.test[..limit])
+    };
     let offsets = poisson_offsets(seed, reqs.len(), rate);
     println!(
         "replaying {} requests at {:.0} req/s (Poisson, seed {seed}) through {}",
@@ -283,6 +304,49 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             page_highs.join(" "),
         );
     }
+    Ok(())
+}
+
+/// `serve --listen ADDR`: bind the HTTP/SSE front end instead of
+/// replaying an in-process trace.  Runs until `--serve-secs N` elapses
+/// (default 30), then drains gracefully — every admitted request is
+/// answered before the summary prints.
+fn cmd_serve_net(
+    args: &Args,
+    svc: &Service,
+    mut cfg: ServerConfig,
+    addr: &str,
+) -> anyhow::Result<()> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    // token streaming needs iteration-level scheduling; only an
+    // explicit --scheduler batch (rejected downstream) overrides this
+    if args.get("scheduler").is_none() {
+        cfg.scheduler = Scheduler::Continuous;
+    }
+    let listener = std::net::TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let secs = args.get_f64("serve-secs", 30.0);
+    println!("listening on http://{local} ({}) for {secs:.0}s", cfg.label());
+    let stop = Arc::new(AtomicBool::new(false));
+    {
+        let stop = Arc::clone(&stop);
+        // detached timer: the accept loop polls the flag; process exit
+        // reaps the thread if serve_net errors out early
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_secs_f64(secs));
+            stop.store(true, Ordering::Release);
+        });
+    }
+    let (metrics, responses) = svc.serve_net(&cfg, listener, stop)?;
+    println!("{}", metrics.row());
+    let truncated = responses.iter().filter(|r| r.truncated).count();
+    println!(
+        "served {} responses  cancelled {}  truncated {truncated}  wall {:.2}s",
+        responses.len(),
+        metrics.cancelled,
+        metrics.wall_secs
+    );
     Ok(())
 }
 
@@ -390,7 +454,7 @@ fn cmd_recipe(args: &Args) -> anyhow::Result<()> {
     let sub = args.positional.get(1).map(String::as_str).unwrap_or("");
     match sub {
         "derive" => {
-            let mode = parse_mode(args);
+            let mode = parse_mode(args)?;
             let (table, model_cfg) = if args.flag("synthetic") {
                 let cfg = ModelConfig::default();
                 let seed = args.get_usize("seed", 0xC0DE) as u64;

@@ -378,6 +378,17 @@ impl DecodePool {
         self.free.push(slot);
     }
 
+    /// Cancel a mid-decode slot: identical to [`finish`](Self::finish)
+    /// — every KV page the slot maps returns to the free pool and the
+    /// slot rejoins the free list immediately — the name records
+    /// *why*: the request was abandoned (client disconnect or explicit
+    /// cancel), not completed.  The caller simply drops the slot from
+    /// its active set, so the next iteration's compacted GEMM never
+    /// carries the row.
+    pub fn cancel(&mut self, slot: usize) {
+        self.finish(slot);
+    }
+
     /// Beam reorder across **all** caches: `slot s = old beam_src[s]`
     /// (the §5.3 GatherNd), with the per-slot bookkeeping (position,
     /// source length) following the permutation.  All slots must be

@@ -67,17 +67,13 @@ impl PolicyKind {
 
     /// Parse an optional `--policy` value (the one CLI entry point, so
     /// every binary accepts the same names and aliases): `None` means
-    /// the flag was absent; unknown values warn on stderr and fall
-    /// back to `default`.
-    pub fn parse_or(s: Option<&str>, default: PolicyKind) -> PolicyKind {
+    /// the flag was absent and yields `default`; unknown values are a
+    /// hard error listing the valid names.
+    pub fn parse_or(s: Option<&str>, default: PolicyKind) -> anyhow::Result<PolicyKind> {
         match s {
-            None => default,
-            Some(v) => PolicyKind::from_str(v).unwrap_or_else(|| {
-                eprintln!(
-                    "unknown policy '{v}' (choices: fixed|token-budget|bin-pack), using {}",
-                    default.as_str()
-                );
-                default
+            None => Ok(default),
+            Some(v) => PolicyKind::from_str(v).ok_or_else(|| {
+                anyhow::anyhow!("unknown policy '{v}' (valid: fixed|token-budget|bin-pack)")
             }),
         }
     }
@@ -315,12 +311,15 @@ mod tests {
     }
 
     #[test]
-    fn parse_or_accepts_aliases_and_falls_back() {
+    fn parse_or_accepts_aliases_and_rejects_unknown_names() {
         let d = PolicyKind::FixedCount;
-        assert_eq!(PolicyKind::parse_or(None, d), d);
-        assert_eq!(PolicyKind::parse_or(Some("budget"), d), PolicyKind::TokenBudget);
-        assert_eq!(PolicyKind::parse_or(Some("binpack"), d), PolicyKind::BinPack);
-        assert_eq!(PolicyKind::parse_or(Some("zig-zag"), d), d);
+        assert_eq!(PolicyKind::parse_or(None, d).unwrap(), d);
+        assert_eq!(PolicyKind::parse_or(Some("budget"), d).unwrap(), PolicyKind::TokenBudget);
+        assert_eq!(PolicyKind::parse_or(Some("binpack"), d).unwrap(), PolicyKind::BinPack);
+        let err = PolicyKind::parse_or(Some("zig-zag"), d);
+        let msg = err.expect_err("must reject").to_string();
+        assert!(msg.contains("unknown policy 'zig-zag'"));
+        assert!(msg.contains("fixed|token-budget|bin-pack"));
     }
 
     #[test]

@@ -66,20 +66,22 @@ impl Args {
             .unwrap_or(default)
     }
 
-    /// Value of `--name` constrained to `allowed`; unknown values warn
-    /// on stderr and fall back to `default` (used for enum-like flags
-    /// such as `--policy fixed|token-budget|bin-pack`).
-    pub fn get_choice<'a>(&'a self, name: &str, allowed: &[&'a str], default: &'a str) -> &'a str {
+    /// Value of `--name` constrained to `allowed`; a missing flag yields
+    /// `default`, but an unknown value is a hard error listing the valid
+    /// choices (used for enum-like flags such as
+    /// `--policy fixed|token-budget|bin-pack`).
+    pub fn get_choice<'a>(
+        &'a self,
+        name: &str,
+        allowed: &[&'a str],
+        default: &'a str,
+    ) -> anyhow::Result<&'a str> {
         match self.get(name) {
-            None => default,
+            None => Ok(default),
             Some(v) => match allowed.iter().copied().find(|&a| a == v) {
-                Some(a) => a,
+                Some(a) => Ok(a),
                 None => {
-                    eprintln!(
-                        "unknown --{name} '{v}' (choices: {}), using {default}",
-                        allowed.join("|")
-                    );
-                    default
+                    anyhow::bail!("unknown --{name} '{v}' (valid: {})", allowed.join("|"))
                 }
             },
         }
@@ -129,12 +131,20 @@ mod tests {
     fn choice_flags() {
         let allowed = ["fixed", "token-budget", "bin-pack"];
         let a = parse("--policy bin-pack --token-budget 1024");
-        assert_eq!(a.get_choice("policy", &allowed, "fixed"), "bin-pack");
+        assert_eq!(a.get_choice("policy", &allowed, "fixed").unwrap(), "bin-pack");
         assert_eq!(a.get_usize("token-budget", 512), 1024);
-        // missing and unknown values fall back to the default
-        let b = parse("--policy zig-zag");
-        assert_eq!(b.get_choice("policy", &allowed, "fixed"), "fixed");
+        // a missing flag yields the default
         let c = parse("");
-        assert_eq!(c.get_choice("policy", &allowed, "fixed"), "fixed");
+        assert_eq!(c.get_choice("policy", &allowed, "fixed").unwrap(), "fixed");
+    }
+
+    #[test]
+    fn unknown_choice_is_a_hard_error() {
+        let allowed = ["fixed", "token-budget", "bin-pack"];
+        let b = parse("--policy zig-zag");
+        let err = b.get_choice("policy", &allowed, "fixed");
+        let msg = err.expect_err("must reject").to_string();
+        assert!(msg.contains("unknown --policy 'zig-zag'"));
+        assert!(msg.contains("fixed|token-budget|bin-pack"));
     }
 }

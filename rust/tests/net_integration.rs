@@ -1,0 +1,365 @@
+//! Integration tests for the network front end (`coordinator::net`) —
+//! no artifacts required: synthetic models behind a loopback listener.
+//!
+//! The ISSUE acceptance criteria live here:
+//! * **wire parity**: for a fixed trace, HTTP/SSE-streamed outputs are
+//!   bit-identical to the in-process `serve_continuous` path;
+//! * **cancellation frees everything**: an engine-level proof that
+//!   cancelling a mid-flight slot releases all its KV pages and drops
+//!   its rows from the compacted GEMMs, plus a server-level proof that
+//!   `POST /v1/cancel` purges the request (counted, never answered);
+//! * **disconnect tolerance**: a client that vanishes mid-stream never
+//!   blocks the shard loop — later requests still complete;
+//! * **weighted fairness + graceful drain**: under saturation the
+//!   higher-weight tenant's completion ordinals dominate, and shutdown
+//!   answers every admitted request first.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use quantnmt::coordinator::net::{self, ClientEvent};
+use quantnmt::coordinator::server;
+use quantnmt::coordinator::{
+    Backend, Scheduler, ServerConfig, ServerMetrics, TenantSet, TenantSpec, TranslateResponse,
+};
+use quantnmt::model::engine::DecodePool;
+use quantnmt::model::testutil::{random_weights, tiny_cfg};
+use quantnmt::model::{Engine, ModelConfig, Profiler, SiteSet, Weights};
+use quantnmt::specials::{BOS_ID, EOS_ID};
+use quantnmt::util::prop::gen;
+use quantnmt::util::rng::SplitMix64;
+
+/// Random sources that fit `model_cfg` (content tokens + EOS).
+fn srcs_for(model_cfg: &ModelConfig, seed: u64, n: usize) -> Vec<Vec<u32>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut s = gen::token_seq(&mut rng, model_cfg.max_src_len - 1, 12);
+            s.push(EOS_ID);
+            s
+        })
+        .collect()
+}
+
+/// A deeper synthetic model than `tiny_cfg` so decodes span
+/// milliseconds — cancellation and saturation tests get wide windows.
+fn slow_cfg() -> ModelConfig {
+    ModelConfig {
+        vocab_size: 32,
+        d_model: 32,
+        n_heads: 4,
+        d_ff: 64,
+        n_enc_layers: 2,
+        n_dec_layers: 2,
+        max_src_len: 16,
+        max_tgt_len: 64,
+    }
+}
+
+/// Bind a loopback listener, run `net::run` on a scoped thread, hand
+/// the address to `body`, then stop and drain.  The stop flag is set
+/// even when `body` errors, so a failing assertion can never deadlock
+/// the scope on the accept loop.
+fn with_server<T>(
+    cfg: &ServerConfig,
+    model_cfg: &ModelConfig,
+    weights: &Weights,
+    body: impl FnOnce(&str) -> anyhow::Result<T>,
+) -> (ServerMetrics, Vec<TranslateResponse>, T) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let factory = |_id: usize| Engine::fp32(model_cfg.clone(), weights.clone()).expect("engine");
+    std::thread::scope(|s| {
+        let server = {
+            let stop = Arc::clone(&stop);
+            s.spawn(move || net::run(cfg, factory, listener, stop))
+        };
+        let result = body(&addr);
+        stop.store(true, Ordering::Release);
+        let (metrics, responses) = server.join().expect("server thread").expect("serve_net");
+        (metrics, responses, result.expect("client body"))
+    })
+}
+
+#[test]
+fn http_streamed_outputs_match_in_process_serving() {
+    // wire parity: the HTTP/SSE path adds framing and threads, never
+    // tokens — a fixed trace must come back bit-identical to the
+    // in-process continuous scheduler (which is itself bit-identical
+    // to isolated greedy decodes; see serving_integration.rs)
+    let model_cfg = tiny_cfg();
+    let weights = random_weights(&model_cfg, 0x9E7);
+    let srcs = srcs_for(&model_cfg, 0x7ACE, 12);
+    let cfg = ServerConfig {
+        backend: Backend::EngineF32,
+        shards: 2,
+        max_wait: Duration::from_millis(2),
+        token_budget: 48,
+        max_batch_rows: 4,
+        slots: 8,
+        queue_capacity: 256,
+        pin_cores: false,
+        max_decode_len: 8,
+        scheduler: Scheduler::Continuous,
+        ..Default::default()
+    };
+
+    let factory = |_id: usize| Engine::fp32(model_cfg.clone(), weights.clone()).expect("engine");
+    let (_, inproc, ()) = server::serve_continuous(&cfg, factory, |client| {
+        for (i, s) in srcs.iter().enumerate() {
+            assert!(client.submit(i, s.clone()), "in-process shed request {i}");
+        }
+    });
+    assert_eq!(inproc.len(), srcs.len());
+
+    let (metrics, over_http, streamed) = with_server(&cfg, &model_cfg, &weights, |addr| {
+        // sequential submission makes the server-assigned ids 0..n in
+        // order, so responses line up with `inproc` by construction
+        let mut got = Vec::new();
+        for s in &srcs {
+            got.push(net::translate_blocking(addr, s, None)?);
+        }
+        Ok(got)
+    });
+    assert_eq!(streamed.len(), srcs.len());
+    assert_eq!(over_http.len(), srcs.len());
+    assert_eq!(metrics.requests, srcs.len());
+    assert_eq!(metrics.shed + metrics.shed_oversize + metrics.shed_rate, 0);
+    for (i, (r, want)) in streamed.iter().zip(&inproc).enumerate() {
+        assert_eq!(r.id, i, "sequential submission must get sequential ids");
+        assert_eq!(r.out, want.out, "request {i}: wire and in-process diverge");
+        assert_eq!(r.truncated, want.truncated, "request {i}: truncated flag");
+        assert_eq!(r.tokens_streamed, r.out.len(), "request {i}: token events");
+    }
+    // the server's own response ledger agrees with what was streamed
+    for (r, resp) in streamed.iter().zip(&over_http) {
+        assert_eq!((r.id, &r.out), (resp.id, &resp.out));
+    }
+}
+
+#[test]
+fn cancelling_a_slot_frees_pages_and_drops_gemm_rows() {
+    // engine-level cancellation accounting: pages return to the free
+    // pool immediately and the next step's compacted GEMMs carry
+    // strictly fewer activation rows — the cancelled row vanishes from
+    // the profiler's per-site row counts
+    let cfg = tiny_cfg();
+    let weights = random_weights(&cfg, 0xCA9C);
+    let mut eng = Engine::fp32(cfg.clone(), weights).unwrap();
+    let src = vec![vec![5, 9, 3, EOS_ID], vec![5, 9, 3, EOS_ID]];
+    let (memory, src_len, s) = eng.encode(&src);
+    let mut pool = eng.new_pool(2, 8, s);
+    assert_eq!(pool.page_stats().used, 0, "fresh pool starts empty");
+    let slots = eng.admit(&mut pool, &memory, &src_len, s).unwrap();
+    let used_two = pool.page_stats().used;
+    assert!(used_two > 0, "two admitted rows must hold pages");
+
+    let sites = SiteSet::new(&cfg);
+    let step_rows = |eng: &mut Engine, pool: &mut DecodePool, active: &[usize]| -> u64 {
+        eng.profiler.reset();
+        let tokens = vec![BOS_ID; active.len()];
+        let mut logits = Vec::new();
+        let truncated = eng.pool_step(pool, active, &tokens, &mut logits);
+        assert!(truncated.is_empty());
+        let mut rows = 0u64;
+        for (id, _) in sites.iter() {
+            rows += eng.profiler.site_rows(id);
+        }
+        rows
+    };
+    eng.profiler = Profiler::enabled();
+    let rows_two = step_rows(&mut eng, &mut pool, &slots);
+    assert!(rows_two > 0, "profiler must see GEMM rows");
+
+    // cancel slot 0 mid-decode: its pages free NOW, not at drain
+    pool.cancel(slots[0]);
+    let used_one = pool.page_stats().used;
+    assert!(used_one < used_two, "cancel must release the slot's pages");
+    let rows_one = step_rows(&mut eng, &mut pool, &slots[1..]);
+    assert!(
+        rows_one < rows_two,
+        "compacted step must carry strictly fewer rows ({rows_one} vs {rows_two})"
+    );
+    // steady state: the cancelled row never reappears
+    assert_eq!(step_rows(&mut eng, &mut pool, &slots[1..]), rows_one);
+
+    pool.cancel(slots[1]);
+    assert_eq!(pool.page_stats().used, 0, "all pages back in the free pool");
+    assert!(pool.is_idle(), "every slot recycled");
+}
+
+#[test]
+fn http_cancel_purges_the_request_and_counts_it() {
+    // server-level cancellation: POST /v1/cancel against an in-flight
+    // stream yields a `cancelled` event; the request is never answered
+    // and the purge is counted once.  A keeps the pool busy so B's
+    // decode is slow; losing the (tiny) race to a full decode retries.
+    let model_cfg = slow_cfg();
+    let weights = random_weights(&model_cfg, 0x0FF);
+    let srcs = srcs_for(&model_cfg, 0xD06, 8);
+    let mut solo = Engine::fp32(model_cfg.clone(), weights.clone()).unwrap();
+    let long = srcs
+        .iter()
+        .max_by_key(|s| solo.translate_greedy(&[(*s).clone()], 48)[0].len())
+        .cloned()
+        .expect("non-empty corpus");
+    let cfg = ServerConfig {
+        backend: Backend::EngineF32,
+        shards: 1,
+        max_wait: Duration::from_millis(2),
+        token_budget: 64,
+        max_batch_rows: 4,
+        slots: 4,
+        queue_capacity: 64,
+        pin_cores: false,
+        max_decode_len: 48,
+        scheduler: Scheduler::Continuous,
+        ..Default::default()
+    };
+    let (metrics, responses, cancelled_id) = with_server(&cfg, &model_cfg, &weights, |addr| {
+        for _attempt in 0..5 {
+            let a = net::open_translate(addr, &long, None)?;
+            let mut b = net::open_translate(addr, &long, None)?;
+            net::cancel(addr, b.id)?;
+            let b_cancelled = loop {
+                match b.next_event()? {
+                    ClientEvent::Cancelled => break true,
+                    ClientEvent::Done(_) => break false,
+                    ClientEvent::Token(_) => {}
+                }
+            };
+            let b_id = b.id;
+            let _ = a.finish()?;
+            if b_cancelled {
+                return Ok(b_id);
+            }
+        }
+        anyhow::bail!("cancel lost the race on every attempt");
+    });
+    assert_eq!(metrics.cancelled, 1, "exactly one purge recorded");
+    assert!(
+        responses.iter().all(|r| r.id != cancelled_id),
+        "a cancelled request must never be answered"
+    );
+    assert!(!responses.is_empty(), "the busy-keeper requests completed");
+}
+
+#[test]
+fn disconnected_stream_never_blocks_the_shard_loop() {
+    // a client that vanishes mid-stream must not wedge the shard: the
+    // sink writes into an unbounded channel and the connection thread
+    // auto-cancels on write failure, so later requests still complete
+    let model_cfg = slow_cfg();
+    let weights = random_weights(&model_cfg, 0xD15C);
+    let srcs = srcs_for(&model_cfg, 0x0DD, 7);
+    let cfg = ServerConfig {
+        backend: Backend::EngineF32,
+        shards: 1,
+        max_wait: Duration::from_millis(2),
+        token_budget: 64,
+        max_batch_rows: 4,
+        slots: 2,
+        queue_capacity: 64,
+        pin_cores: false,
+        max_decode_len: 32,
+        scheduler: Scheduler::Continuous,
+        ..Default::default()
+    };
+    let (metrics, responses, ()) = with_server(&cfg, &model_cfg, &weights, |addr| {
+        let dropped = net::open_translate(addr, &srcs[0], None)?;
+        drop(dropped); // vanish without reading a single token
+        for s in &srcs[1..] {
+            let r = net::translate_blocking(addr, s, None)?;
+            assert_eq!(r.tokens_streamed, r.out.len());
+        }
+        Ok(())
+    });
+    // the dropped request either finished before its first failed
+    // write (answered) or was auto-cancelled (purged) — never both,
+    // never neither, and never at the cost of the other six
+    assert_eq!(
+        responses.len() + metrics.cancelled,
+        srcs.len(),
+        "answered {} + purged {} must cover all {} requests",
+        responses.len(),
+        metrics.cancelled,
+        srcs.len()
+    );
+    assert!(responses.len() >= srcs.len() - 1, "later requests all completed");
+}
+
+#[test]
+fn weighted_fair_tenants_dominate_done_seq_over_http() {
+    // acceptance (c): under saturation (one slow shard, deep queue)
+    // the w8 tenant's completion ordinals must dominate the w1
+    // tenant's — and graceful drain answers every admitted request
+    let model_cfg = slow_cfg();
+    let weights = random_weights(&model_cfg, 0xFA12);
+    let per_tenant = 12usize;
+    let srcs = srcs_for(&model_cfg, 0x60D, 2 * per_tenant);
+    let specs = vec![TenantSpec::new("gold", 8.0), TenantSpec::new("bronze", 1.0)];
+    let tenants = TenantSet::new(specs).unwrap();
+    let cfg = ServerConfig {
+        backend: Backend::EngineF32,
+        shards: 1,
+        max_wait: Duration::from_millis(2),
+        token_budget: 32,
+        max_batch_rows: 2,
+        slots: 2,
+        queue_capacity: 256,
+        pin_cores: false,
+        max_decode_len: 16,
+        scheduler: Scheduler::Continuous,
+        tenants,
+        ..Default::default()
+    };
+    let (metrics, responses, seqs) = with_server(&cfg, &model_cfg, &weights, |addr| {
+        // an unknown tenant is a hard 400, not a silent default
+        let unknown = net::open_translate(addr, &srcs[0], Some("nosuch"));
+        anyhow::ensure!(unknown.is_err(), "unknown tenant must be rejected");
+        // 2×12 concurrent clients saturate the single slow shard
+        std::thread::scope(|s| -> anyhow::Result<Vec<(usize, usize)>> {
+            let handles: Vec<_> = srcs
+                .iter()
+                .enumerate()
+                .map(|(i, src)| {
+                    let name = if i % 2 == 0 { "gold" } else { "bronze" };
+                    s.spawn(move || net::translate_blocking(addr, src, Some(name)))
+                })
+                .collect();
+            let mut seqs = Vec::new();
+            for (i, h) in handles.into_iter().enumerate() {
+                let r = h.join().expect("client thread")?;
+                seqs.push((i % 2, r.done_seq));
+            }
+            Ok(seqs)
+        })
+    });
+    // graceful drain: every admitted request was answered
+    assert_eq!(responses.len(), 2 * per_tenant);
+    assert_eq!(metrics.requests, 2 * per_tenant);
+    assert_eq!(metrics.shed + metrics.shed_oversize + metrics.shed_rate, 0);
+    // per-tenant accounting made it into the summary
+    assert_eq!(metrics.tenants.len(), 2);
+    for t in &metrics.tenants {
+        assert_eq!(t.accepted, per_tenant, "tenant {}", t.name);
+        assert_eq!(t.requests, per_tenant, "tenant {}", t.name);
+    }
+    // dominance: mean completion ordinal of gold strictly beats bronze
+    let mean = |tenant: usize| -> f64 {
+        let picked: Vec<f64> = seqs
+            .iter()
+            .filter(|(t, _)| *t == tenant)
+            .map(|(_, d)| *d as f64)
+            .collect();
+        picked.iter().sum::<f64>() / picked.len() as f64
+    };
+    let (gold, bronze) = (mean(0), mean(1));
+    assert!(
+        gold < bronze,
+        "w8 tenant must finish earlier on average (gold {gold:.1} vs bronze {bronze:.1})"
+    );
+}

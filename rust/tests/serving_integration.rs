@@ -64,10 +64,7 @@ fn former_respects_budget_and_row_cap_for_any_request_stream() {
         for id in 0..n {
             let len = rng.range(1, 40) as usize;
             total_tokens += len;
-            let req = TranslateRequest {
-                id,
-                src: vec![3; len],
-            };
+            let req = TranslateRequest::new(id, vec![3; len]);
             if let Some(fb) = f.offer(req, now) {
                 closed.push(fb);
             }
@@ -249,7 +246,7 @@ fn continuous_and_batch_schedulers_are_bit_identical() {
         max_decode_len: 8,
         ..Default::default()
     };
-    let submit_all = |client: &server::ServerClient<'_>| {
+    let submit_all = |client: &server::ServerClient| {
         for (i, s) in srcs.iter().enumerate() {
             assert!(client.submit(i, s.clone()), "shed request {i}");
         }
@@ -470,7 +467,7 @@ fn length_capped_responses_are_flagged_truncated() {
         scheduler: Scheduler::Continuous,
         ..Default::default()
     };
-    let submit_all = |client: &server::ServerClient<'_>| {
+    let submit_all = |client: &server::ServerClient| {
         for (i, s) in srcs.iter().enumerate() {
             assert!(client.submit(i, s.clone()), "shed request {i}");
         }
@@ -527,7 +524,7 @@ fn kv_budget_serving_matches_dense_and_reports_page_occupancy() {
         scheduler: Scheduler::Continuous,
         ..Default::default()
     };
-    let submit_all = |client: &server::ServerClient<'_>| {
+    let submit_all = |client: &server::ServerClient| {
         for (i, s) in srcs.iter().enumerate() {
             assert!(client.submit(i, s.clone()), "shed request {i}");
         }
