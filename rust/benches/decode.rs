@@ -8,7 +8,11 @@
 //! artifacts — and prints:
 //!
 //! * per-token decode latency (best of N reps) for FP32, mixed INT8
-//!   and fully-integer (`int8-fused`) engines at slots = 1 and 8;
+//!   and fully-integer (`int8-fused`) engines at slots = 1, 4 and 8,
+//!   each under both GEMM dispatch paths — the persistent worker pool
+//!   (`pool`) and the `--gemm-pool off` scoped-spawn fallback
+//!   (`scoped`) — so the decode-throughput win from pooled dispatch is
+//!   measured, not asserted;
 //! * deterministic dispatch counts per token (Quantize /
 //!   QuantizedMatMul / MatMul invocations from the profiler);
 //! * f32↔int conversion **bytes per token** (quantize / dequantize /
@@ -134,8 +138,8 @@ fn main() -> anyhow::Result<()> {
         cfg.d_model, cfg.n_heads, cfg.n_enc_layers, cfg.n_dec_layers
     );
     println!(
-        "{:12} {:>6} {:>14} {:>10} {:>10} {:>8}",
-        "engine", "slots", "us/token", "Quantize", "QMatMul", "MatMul"
+        "{:12} {:>6} {:>9} {:>14} {:>10} {:>10} {:>8}",
+        "engine", "slots", "dispatch", "us/token", "Quantize", "QMatMul", "MatMul"
     );
     let engines = ["fp32", "int8", "int8-fused"];
     let mk_engine = |kind: &str| -> anyhow::Result<Engine> {
@@ -145,33 +149,45 @@ fn main() -> anyhow::Result<()> {
             _ => Engine::with_recipe(cfg.clone(), w.clone(), &full_int_recipe(&cfg))?,
         })
     };
+    // (dispatch-mode label, pool mode): the pooled default vs the
+    // per-call scoped-spawn fallback.  Dispatch counts are identical
+    // across the pair — only wall time may differ — so the profiled
+    // step runs once, under pooled dispatch.
+    let dispatch_modes =
+        [("pool", quantnmt::gemm::PoolMode::Auto), ("scoped", quantnmt::gemm::PoolMode::Off)];
     let mut records: Vec<Json> = Vec::new();
     let mut traffic: Vec<(String, usize, Profiler)> = Vec::new();
-    for slots in [1usize, 8] {
+    for slots in [1usize, 4, 8] {
         for kind in engines {
             let mut eng = mk_engine(kind)?;
-            let us = per_token_us(&mut eng, slots, steps, reps);
             let p = profiled_step(&mut eng, slots, 8);
-            println!(
-                "{:12} {:>6} {:>14.1} {:>10} {:>10} {:>8}",
-                kind,
-                slots,
-                us,
-                p.count(OpKind::Quantize),
-                p.count(OpKind::QuantizedMatMul),
-                p.count(OpKind::MatMul)
-            );
-            records.push(obj(&[
-                ("engine", kind.into()),
-                ("slots", slots.into()),
-                ("us_per_token", us.into()),
-                ("quantize_count", (p.count(OpKind::Quantize) as f64).into()),
-                ("dequantize_count", (p.count(OpKind::Dequantize) as f64).into()),
-                ("qmatmul_count", (p.count(OpKind::QuantizedMatMul) as f64).into()),
-                ("quantize_bytes", (p.quantize_bytes() as f64).into()),
-                ("dequantize_bytes", (p.dequantize_bytes() as f64).into()),
-                ("requant_bytes", (p.requant_bytes() as f64).into()),
-            ]));
+            for (dispatch, mode) in dispatch_modes {
+                quantnmt::gemm::set_gemm_pool(mode);
+                let us = per_token_us(&mut eng, slots, steps, reps);
+                println!(
+                    "{:12} {:>6} {:>9} {:>14.1} {:>10} {:>10} {:>8}",
+                    kind,
+                    slots,
+                    dispatch,
+                    us,
+                    p.count(OpKind::Quantize),
+                    p.count(OpKind::QuantizedMatMul),
+                    p.count(OpKind::MatMul)
+                );
+                records.push(obj(&[
+                    ("engine", kind.into()),
+                    ("slots", slots.into()),
+                    ("dispatch", dispatch.into()),
+                    ("us_per_token", us.into()),
+                    ("quantize_count", (p.count(OpKind::Quantize) as f64).into()),
+                    ("dequantize_count", (p.count(OpKind::Dequantize) as f64).into()),
+                    ("qmatmul_count", (p.count(OpKind::QuantizedMatMul) as f64).into()),
+                    ("quantize_bytes", (p.quantize_bytes() as f64).into()),
+                    ("dequantize_bytes", (p.dequantize_bytes() as f64).into()),
+                    ("requant_bytes", (p.requant_bytes() as f64).into()),
+                ]));
+            }
+            quantnmt::gemm::set_gemm_pool(quantnmt::gemm::PoolMode::Auto);
             traffic.push((kind.to_string(), slots, p));
         }
     }
@@ -214,7 +230,7 @@ fn main() -> anyhow::Result<()> {
     int8.profiler = Profiler::enabled();
     let src = source_batch(&cfg, 8, 16);
     int8.translate_greedy(&src, steps.min(24));
-    println!("\ntop MatMul sites by GEMM wall time (int8, slots=8):");
+    println!("\ntop MatMul sites by GEMM wall time (int8, slots=8, pooled dispatch):");
     for (site, total, calls) in int8.profiler.site_breakdown().into_iter().take(8) {
         println!(
             "  {:16} {:>10.3}ms over {:>5} calls",

@@ -17,6 +17,12 @@
 //! pack crossover (`AUTO_PACK_MIN_ROWS` / `AUTO_PACK_MIN_MN`) so the
 //! threshold can be re-derived from data.
 //!
+//! Two pool sweeps document the persistent-worker dispatch layer:
+//! a spawn-vs-pool dispatch-latency microbench (the m=1 decode shape,
+//! where dispatch cost is the whole story) and a pooled parallelism
+//! crossover sweep re-deriving `PAR_FLOPS_MIN_POOLED` from data — both
+//! land in `BENCH_pool.json`.
+//!
 //! Machine-readable results land in `BENCH_gemm.json` (one record per
 //! shape x kernel x thread-count: median ns + speedup vs FP32).
 //!
@@ -297,6 +303,128 @@ fn crossover_sweep(b: &Bench, out: &mut Vec<Json>) {
     }
 }
 
+/// Spawn-vs-pool dispatch latency on the m=1 decode shape: the GEMM is
+/// tiny, so the measured gap between the parallel paths and the inline
+/// baseline is almost pure dispatch cost.  The issue's acceptance bar:
+/// pooled dispatch >= 10x cheaper than scoped spawn+join here.
+fn dispatch_overhead_bench(b: &Bench, out: &mut Vec<Json>) {
+    let (m, k, n) = (1usize, 512usize, 512usize);
+    let mut rng = SplitMix64::new(17);
+    let ai: Vec<i8> = (0..m * k).map(|_| rng.next_u64() as i8).collect();
+    let bi: Vec<u8> = (0..k * n).map(|_| rng.next_u64() as u8).collect();
+    let mut ci = vec![0i32; m * n];
+    println!("\n== dispatch overhead: m={m} k={k} n={n} (explicit 4 threads) ==");
+    let mut time_mode = |label: &str, mode: gemm::PoolMode, threads: usize| {
+        gemm::set_gemm_pool(mode);
+        let t = b
+            .run(label, || {
+                igemm_with_threads(
+                    KernelChoice::Auto,
+                    threads,
+                    m,
+                    k,
+                    n,
+                    black_box(&ai),
+                    black_box(&bi),
+                    &mut ci,
+                );
+                black_box(&ci);
+            })
+            .median;
+        println!("  {label:<12} {:>9.2}us", t * 1e6);
+        t
+    };
+    let t_inline = time_mode("inline", gemm::PoolMode::Auto, 1);
+    let t_pool = time_mode("pool", gemm::PoolMode::Auto, 4);
+    let t_scoped = time_mode("scoped-spawn", gemm::PoolMode::Off, 4);
+    gemm::set_gemm_pool(gemm::PoolMode::Auto);
+    // dispatch cost ~= parallel time minus the inline compute floor
+    let d_pool = (t_pool - t_inline).max(0.0);
+    let d_scoped = (t_scoped - t_inline).max(0.0);
+    let ratio = if d_pool > 0.0 { d_scoped / d_pool } else { f64::INFINITY };
+    println!(
+        "  dispatch overhead: scoped {:.2}us vs pooled {:.2}us ({ratio:.1}x; target >= 10x)",
+        d_scoped * 1e6,
+        d_pool * 1e6
+    );
+    out.push(obj(&[
+        ("m", m.into()),
+        ("k", k.into()),
+        ("n", n.into()),
+        ("threads", 4usize.into()),
+        ("inline_ns", (t_inline * 1e9).into()),
+        ("pool_ns", (t_pool * 1e9).into()),
+        ("scoped_ns", (t_scoped * 1e9).into()),
+        ("dispatch_pool_ns", (d_pool * 1e9).into()),
+        ("dispatch_scoped_ns", (d_scoped * 1e9).into()),
+        ("scoped_over_pool", ratio.into()),
+    ]));
+}
+
+/// Re-derive the pooled parallelism crossover from data: for each
+/// shape, 1 thread vs 4 pooled lanes.  The smallest flop count where
+/// pooled-parallel wins is where `PAR_FLOPS_MIN_POOLED` should sit
+/// (override with `QUANTNMT_GEMM_PAR_MIN` when this machine disagrees
+/// with the constant).
+fn pool_crossover_sweep(b: &Bench, out: &mut Vec<Json>) {
+    println!(
+        "\n== pooled parallel crossover (current PAR_FLOPS_MIN_POOLED = {}, scoped {}) ==",
+        gemm::PAR_FLOPS_MIN_POOLED,
+        gemm::PAR_FLOPS_MIN
+    );
+    gemm::set_gemm_pool(gemm::PoolMode::Auto);
+    let mut rng = SplitMix64::new(23);
+    for &(m, k, n) in &[
+        (1usize, 128usize, 128usize), // 32k flops: below the crossover
+        (1, 256, 256),                // 131k = the crossover constant
+        (1, 512, 512),                // 0.5M: the decode logits-ish shape
+        (4, 512, 512),                // 2M: slots=4 decode step
+        (8, 512, 1024),               // 8M: above even the scoped bar
+    ] {
+        let ai: Vec<i8> = (0..m * k).map(|_| rng.next_u64() as i8).collect();
+        let bi: Vec<u8> = (0..k * n).map(|_| rng.next_u64() as u8).collect();
+        let mut ci = vec![0i32; m * n];
+        let mut run_at = |label: &str, threads: usize| {
+            b.run(label, || {
+                igemm_with_threads(
+                    KernelChoice::Auto,
+                    threads,
+                    m,
+                    k,
+                    n,
+                    black_box(&ai),
+                    black_box(&bi),
+                    &mut ci,
+                );
+                black_box(&ci);
+            })
+            .median
+        };
+        let t1 = run_at("pool-x1", 1);
+        let t4 = run_at("pool-x4", 4);
+        let flops = 2 * m * k * n;
+        let parallel_wins = t4 < t1;
+        let auto_parallel = flops >= gemm::PAR_FLOPS_MIN_POOLED;
+        println!(
+            "m={m:<2} k={k:<4} n={n:<5} flops {flops:>9}  x1 {:>9.1}us  x4 {:>9.1}us  \
+             ratio {:>5.2}x  parallel_wins={parallel_wins}  auto_parallel={auto_parallel}",
+            t1 * 1e6,
+            t4 * 1e6,
+            t1 / t4
+        );
+        out.push(obj(&[
+            ("m", m.into()),
+            ("k", k.into()),
+            ("n", n.into()),
+            ("flops", flops.into()),
+            ("x1_ns", (t1 * 1e9).into()),
+            ("x4_pooled_ns", (t4 * 1e9).into()),
+            ("parallel_wins", parallel_wins.into()),
+            ("auto_parallel", auto_parallel.into()),
+        ]));
+    }
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let b = if quick { Bench::quick() } else { Bench::default() };
@@ -336,6 +464,22 @@ fn main() {
 
     let mut crossover = Vec::new();
     crossover_sweep(&b, &mut crossover);
+
+    let mut dispatch = Vec::new();
+    dispatch_overhead_bench(&b, &mut dispatch);
+    let mut pool_crossover = Vec::new();
+    pool_crossover_sweep(&b, &mut pool_crossover);
+    let pool_doc = obj(&[
+        ("isa", gemm::isa_level().as_str().into()),
+        ("pool_lanes", gemm::gemm_pool_lanes().into()),
+        ("quick", quick.into()),
+        ("dispatch", Json::Arr(dispatch)),
+        ("crossover", Json::Arr(pool_crossover)),
+    ]);
+    match std::fs::write("BENCH_pool.json", format!("{pool_doc}\n")) {
+        Ok(()) => println!("wrote BENCH_pool.json"),
+        Err(e) => eprintln!("could not write BENCH_pool.json: {e}"),
+    }
 
     println!("\nsummary: square avg {avg_a:.2}x, model-shape avg {avg_b:.2}x");
 

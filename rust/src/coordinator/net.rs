@@ -173,7 +173,9 @@ struct NetShared {
 /// flips, then drain gracefully and return the final metrics plus
 /// every completed response.  `listener` is accepted non-blocking on
 /// the drive thread; each connection gets its own thread holding a
-/// clone of the [`ServerClient`], all joined before this returns.
+/// clone of the [`ServerClient`].  Finished threads are reaped as the
+/// loop accepts; whatever is still running is joined before this
+/// returns.
 pub fn run<F>(
     cfg: &ServerConfig,
     make_engine: F,
@@ -200,6 +202,14 @@ where
             while !stop.load(Ordering::Acquire) {
                 match listener.accept() {
                     Ok((stream, _peer)) => {
+                        // reap finished connection threads as we go —
+                        // a long-lived server would otherwise grow this
+                        // Vec (and keep every exited thread's handle)
+                        // until shutdown.  Dropping a finished handle
+                        // just detaches an already-exited thread, so
+                        // this never stalls the accept loop; handles
+                        // still live at shutdown are joined below.
+                        handles.retain(|h: &std::thread::JoinHandle<_>| !h.is_finished());
                         let client = client.clone();
                         let shared = shared.clone();
                         handles.push(std::thread::spawn(move || {

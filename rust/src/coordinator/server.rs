@@ -334,9 +334,15 @@ pub struct ServerConfig {
     /// sizing (allocation can never fail).
     pub kv_budget_mb: Option<usize>,
     /// worker threads per GEMM (`--gemm-threads`); 0 = auto (process
-    /// default capped by `QUANTNMT_GEMM_THREADS`, flops-gated so
-    /// decode-sized calls stay single-threaded)
+    /// default capped by `QUANTNMT_GEMM_THREADS`, flops-gated so calls
+    /// too small to pay dispatch stay single-threaded)
     pub gemm_threads: usize,
+    /// persistent GEMM worker pool (`--gemm-pool`).  The pool is one
+    /// process-wide team: all shards share its lanes (submit is
+    /// non-blocking, losers run inline), so `shards x gemm_threads`
+    /// never oversubscribes the machine the way per-shard scoped
+    /// spawns could.  `Off` restores the per-call spawn path.
+    pub gemm_pool: crate::gemm::PoolMode,
     /// admission tenants (`serve --tenants FILE`); the single-tenant
     /// default preserves pre-tenancy behavior exactly
     pub tenants: TenantSet,
@@ -360,6 +366,7 @@ impl Default for ServerConfig {
             slots: 0,
             kv_budget_mb: None,
             gemm_threads: 0,
+            gemm_pool: crate::gemm::PoolMode::Auto,
             tenants: TenantSet::single(),
         }
     }

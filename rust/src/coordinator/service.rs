@@ -80,9 +80,13 @@ pub struct ServiceConfig {
     pub pin_cores: bool,
     pub max_decode_len: usize,
     /// worker threads per GEMM (`--gemm-threads`); 0 = auto (process
-    /// default capped by `QUANTNMT_GEMM_THREADS`, flops-gated so
-    /// decode-sized calls stay single-threaded)
+    /// default capped by `QUANTNMT_GEMM_THREADS`, flops-gated so calls
+    /// too small to pay dispatch stay single-threaded)
     pub gemm_threads: usize,
+    /// persistent GEMM worker pool (`--gemm-pool`): `Auto` sizes to the
+    /// thread budget, `Lanes(n)` caps it, `Off` falls back to per-call
+    /// scoped spawns (and the much higher parallel crossover)
+    pub gemm_pool: crate::gemm::PoolMode,
 }
 
 impl Default for ServiceConfig {
@@ -102,6 +106,7 @@ impl Default for ServiceConfig {
             pin_cores: true,
             max_decode_len: 56,
             gemm_threads: 0,
+            gemm_pool: crate::gemm::PoolMode::Auto,
         }
     }
 }
@@ -255,6 +260,7 @@ impl Service {
         cfg: &ServiceConfig,
     ) -> anyhow::Result<(RunMetrics, Vec<Vec<u32>>)> {
         crate::gemm::set_gemm_threads(cfg.gemm_threads);
+        crate::gemm::set_gemm_pool(cfg.gemm_pool);
         let order = sort_indices(pairs, cfg.sort);
         let batches = cfg.make_policy().pack(pairs, &order);
         let latencies = Mutex::new(LatencyStats::default());
@@ -380,6 +386,7 @@ impl Service {
     {
         use crate::coordinator::server::Scheduler;
         crate::gemm::set_gemm_threads(cfg.gemm_threads);
+        crate::gemm::set_gemm_pool(cfg.gemm_pool);
         let max_len = cfg.max_decode_len;
         match &cfg.backend {
             Backend::EngineF32 | Backend::EngineRecipe(_) => {
@@ -502,6 +509,7 @@ impl Service {
              (tokens stream as the slot pool decodes them)"
         );
         crate::gemm::set_gemm_threads(cfg.gemm_threads);
+        crate::gemm::set_gemm_pool(cfg.gemm_pool);
         let src_cap = cfg.max_src_len.unwrap_or(usize::MAX);
         let cfg = ServerConfig {
             max_src_len: Some(src_cap.min(self.model_cfg.max_src_len)),

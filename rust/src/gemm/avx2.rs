@@ -76,7 +76,48 @@ pub unsafe fn igemm_avx2_tiled(
     j0: usize,
     j1: usize,
 ) {
+    tiled_rect(m, apack, bp, cbase, 0, m, j0, j1)
+}
+
+/// Row-stripe twin of [`igemm_avx2_tiled`]: rows `[i0, i1)` over the
+/// full column range, for tall-skinny shapes (`dispatch::run_rows`).
+/// The A panel ([`pack_a`]) is indexed by absolute row, so a row
+/// sub-range needs no repacking; row grouping never changes any
+/// element's k-summation order, so the output is bit-identical to the
+/// column-striped and single-threaded paths.
+///
+/// # Safety
+/// As [`igemm_avx2_tiled`], with concurrent callers writing disjoint
+/// `[i0, i1)` row ranges instead.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn igemm_avx2_tiled_rows(
+    m: usize,
+    apack: &[i32],
+    bp: &PackedB,
+    cbase: *mut i32,
+    i0: usize,
+    i1: usize,
+) {
+    tiled_rect(m, apack, bp, cbase, i0, i1, 0, bp.n)
+}
+
+/// Shared macro-loop over the `[i0, i1) x [j0, j1)` output rectangle.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tiled_rect(
+    m: usize,
+    apack: &[i32],
+    bp: &PackedB,
+    cbase: *mut i32,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+) {
     debug_assert_eq!(apack.len(), bp.kp * m * 2);
+    debug_assert!(i1 <= m);
     debug_assert!(j1 <= bp.n);
     let kp = bp.kp;
     let mut jc = j0;
@@ -86,9 +127,9 @@ pub unsafe fn igemm_avx2_tiled(
         loop {
             let kq = (kp - pc).min(KC_QUADS);
             let first = pc == 0;
-            let mut i = 0;
-            while i < m {
-                let mr = (m - i).min(MR);
+            let mut i = i0;
+            while i < i1 {
+                let mr = (i1 - i).min(MR);
                 let mut jt = jc;
                 while jt < jl {
                     match mr {
@@ -196,6 +237,18 @@ pub unsafe fn igemm_avx2_tiled(
     unreachable!("avx2_available() is false on this arch")
 }
 
+#[cfg(not(target_arch = "x86_64"))]
+pub unsafe fn igemm_avx2_tiled_rows(
+    _m: usize,
+    _apack: &[i32],
+    _bp: &PackedB,
+    _cbase: *mut i32,
+    _i0: usize,
+    _i1: usize,
+) {
+    unreachable!("avx2_available() is false on this arch")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,6 +299,28 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn avx2_tiled_rows_match_full_run() {
+        if !avx2_available() {
+            return;
+        }
+        // row-striped execution (uneven split, MR-misaligned boundary)
+        // must be bit-identical to one full-range call
+        let (m, k, n) = (23, 37, 21);
+        let a: Vec<i8> = (0..m * k).map(|i| (i as i32 * 11 % 251 - 125) as i8).collect();
+        let b: Vec<u8> = (0..k * n).map(|i| (i * 23 % 256) as u8).collect();
+        let bp = PackedB::pack(&b, k, n);
+        let mut ap = Vec::new();
+        pack_a(&a, m, k, &mut ap);
+        let mut want = vec![0i32; m * n];
+        unsafe { igemm_avx2_tiled(m, &ap, &bp, want.as_mut_ptr(), 0, n) };
+        let mut c = vec![0i32; m * n];
+        for (i0, i1) in [(0usize, 3usize), (3, 14), (14, 23)] {
+            unsafe { igemm_avx2_tiled_rows(m, &ap, &bp, c.as_mut_ptr(), i0, i1) };
+        }
+        assert_eq!(c, want);
     }
 
     #[test]

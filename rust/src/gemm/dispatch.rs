@@ -1,5 +1,5 @@
 //! Runtime kernel dispatch: the ISA ladder, GEMM worker-thread sizing,
-//! and the column-stripe partitioner shared by the int8 and f32 GEMMs.
+//! and the stripe partitioner shared by the int8 and f32 GEMMs.
 //!
 //! The paper's kernel (§5.2, MKL `s8 x u8 -> s32`) picks its code path
 //! by CPU capability and matrix shape; this module is our equivalent of
@@ -15,18 +15,25 @@
 //!   count for the parallel macro-loop, settable from
 //!   `ServiceConfig`/`ServerConfig` (CLI `--gemm-threads`) or the
 //!   `QUANTNMT_GEMM_THREADS` environment variable.
-//! * [`run_cols`] — partitions the output columns `[0, n)` into
-//!   [`STRIPE_ALIGN`]-aligned stripes and runs one worker per stripe on
-//!   a crossbeam scoped pool.
+//! * [`run_cols`] / [`run_rows`] — partition the output columns (or,
+//!   for tall-skinny shapes, the output rows) into aligned stripes and
+//!   fan them out on the persistent worker pool ([`super::pool`]); when
+//!   the pool is disabled (`--gemm-pool off`) they fall back to the old
+//!   per-call crossbeam scoped spawn.
+//! * [`plan_partition`] — the shape-aware axis + worker-count decision,
+//!   gated by the dispatch-cost crossover ([`PAR_FLOPS_MIN_POOLED`] on
+//!   the pooled path, the much higher [`PAR_FLOPS_MIN`] when each call
+//!   pays a spawn).
 //!
-//! **Determinism invariant**: stripes write *disjoint* column ranges of
-//! C and every kernel keeps the per-element k-summation order fixed, so
-//! results are bit-identical for every thread count (integer kernels
-//! are exact anyway; the f32 kernel's per-element order never depends
-//! on the column partition).  `tests` in `gemm::igemm` assert this
-//! across the kernel x thread-count cross product.
+//! **Determinism invariant**: stripes write *disjoint* column (or row)
+//! ranges of C and every kernel keeps the per-element k-summation order
+//! fixed, so results are bit-identical for every thread count, stripe
+//! axis, and dispatch path (integer kernels are exact anyway; the f32
+//! kernel's per-element order never depends on the output partition).
+//! `tests` in `gemm::igemm` and `tests/pool_parity.rs` assert this
+//! across the kernel x packing x thread-count x dispatch-path grid.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 /// The instruction-set ladder the int8 GEMM dispatches over.
@@ -155,15 +162,47 @@ pub fn gemm_threads() -> usize {
     })
 }
 
-/// Minimum MAC count (`2*m*k*n` flops) before auto threading engages.
-/// Below this the scoped-thread spawn costs more than the GEMM: an
-/// m == 1 decode step (`2*1*512*512 ≈ 0.5M`) never pays thread
-/// overhead, while every batch>=8 prefill shape clears the bar.
+/// Minimum flop count (`2*m*k*n`) before auto threading engages on the
+/// **scoped-spawn** fallback path (`--gemm-pool off`).  Below this the
+/// per-call thread spawn costs more than the GEMM: an m == 1 decode
+/// step (`2*1*512*512 ≈ 0.5M`) never pays spawn overhead, while every
+/// batch>=8 prefill shape clears the bar.
 pub const PAR_FLOPS_MIN: usize = 1 << 22;
+
+/// Minimum flop count before auto threading engages on the **pooled**
+/// path.  With spawn/join amortized by the persistent worker pool,
+/// dispatch costs a few atomics + an unpark (~1 µs worst case vs
+/// ~40 µs for a scoped spawn+join; `benches/gemm.rs` `dispatch` rows,
+/// EXPERIMENTS.md "Dispatch overhead"), so the crossover drops ~32x
+/// and decode-shape GEMMs (m = active slots, the per-token logits
+/// dense m=slots x n=vocab above all) actually go parallel.  Derived
+/// from the `pool-crossover` sweep in `benches/gemm.rs`; override with
+/// `QUANTNMT_GEMM_PAR_MIN` when re-tuning for different hardware.
+pub const PAR_FLOPS_MIN_POOLED: usize = 1 << 17;
+
+/// The active auto-threading crossover: the `QUANTNMT_GEMM_PAR_MIN`
+/// override if set, else pooled/scoped per the current dispatch path.
+fn par_flops_min() -> usize {
+    static ENV: OnceLock<Option<usize>> = OnceLock::new();
+    let env = *ENV.get_or_init(|| {
+        std::env::var("QUANTNMT_GEMM_PAR_MIN").ok().and_then(|s| s.parse::<usize>().ok())
+    });
+    env.unwrap_or(if super::pool::enabled() { PAR_FLOPS_MIN_POOLED } else { PAR_FLOPS_MIN })
+}
 
 /// Column-stripe alignment: a full 2-vector column group of the widest
 /// kernel (32 i32 lanes), so no stripe boundary ever splits a store.
 pub const STRIPE_ALIGN: usize = 32;
+
+/// Row-stripe alignment: the f32 and AVX2 micro-kernels walk rows in
+/// groups of 4; aligning stripe boundaries keeps full groups together
+/// (row grouping never changes any element's summation order, so this
+/// is a throughput choice, not a correctness one).
+pub const ROW_STRIPE_ALIGN: usize = 4;
+
+/// Minimum rows per row stripe before the row axis is worth choosing —
+/// below this the per-stripe A-panel/loop overhead beats the win.
+pub const ROW_STRIPE_MIN: usize = 8;
 
 /// On-the-fly pack crossover for Auto dispatch: packing B costs one
 /// O(k*n) pass, amortized over the m x n output tile.  Measured in
@@ -181,58 +220,153 @@ pub fn pack_pays(m: usize, n: usize) -> bool {
     m >= AUTO_PACK_MIN_ROWS && m * n >= AUTO_PACK_MIN_MN
 }
 
-/// Resolve the worker count for one GEMM call.  `requested == 0` means
-/// auto: the global [`gemm_threads`] setting, gated by
-/// [`PAR_FLOPS_MIN`] so small/decode GEMMs stay single-threaded.  An
-/// explicit `requested` (tests, benches) is honored regardless of
-/// shape, clamped to the number of stripes.
-pub(crate) fn effective_threads(requested: usize, m: usize, k: usize, n: usize) -> usize {
-    let t = if requested == 0 {
-        let auto = gemm_threads();
-        let macs = 2 * m.saturating_mul(k).saturating_mul(n);
-        if auto <= 1 || macs < PAR_FLOPS_MIN {
-            1
-        } else {
-            auto
-        }
+/// The dispatch-cost gate without any stripe clamp: `requested == 0`
+/// means auto — the global [`gemm_threads`] setting, gated by the
+/// active crossover ([`par_flops_min`]) so GEMMs too small to pay
+/// dispatch stay single-threaded.  An explicit `requested` (tests,
+/// benches) is honored regardless of shape.
+fn gated_threads(requested: usize, m: usize, k: usize, n: usize) -> usize {
+    if requested != 0 {
+        return requested;
+    }
+    let auto = gemm_threads();
+    let flops = 2 * m.saturating_mul(k).saturating_mul(n);
+    if auto <= 1 || flops < par_flops_min() {
+        1
     } else {
-        requested
-    };
-    t.clamp(1, n.div_ceil(STRIPE_ALIGN).max(1))
+        auto
+    }
 }
 
-/// Partition `[0, n)` into up to `stripes` column ranges, each a
-/// multiple of [`STRIPE_ALIGN`] wide except the last.
-pub(crate) fn stripe_ranges(n: usize, stripes: usize) -> Vec<(usize, usize)> {
-    let stripes = stripes.max(1);
-    let width = n.div_ceil(stripes).div_ceil(STRIPE_ALIGN) * STRIPE_ALIGN;
+/// Resolve the worker count for one column-striped GEMM call:
+/// [`gated_threads`] clamped to the number of column stripes.
+pub(crate) fn effective_threads(requested: usize, m: usize, k: usize, n: usize) -> usize {
+    gated_threads(requested, m, k, n).clamp(1, n.div_ceil(STRIPE_ALIGN).max(1))
+}
+
+/// The stripe axis + worker count chosen for one `m x n` output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Partition {
+    /// fan out over column stripes (`run_cols`); 1 means run inline
+    Cols(usize),
+    /// fan out over row stripes (`run_rows`) — tall-skinny shapes only
+    Rows(usize),
+}
+
+/// Shape-aware parallelism plan for one GEMM call.  Columns are the
+/// default axis (SIMD stores never split, B panel locality).  The row
+/// axis is chosen only for tall-skinny outputs (m ≫ n) where `[0, n)`
+/// has too few [`STRIPE_ALIGN`]-wide stripes to feed the requested
+/// workers — e.g. a prefill attention-score block, or m=256 x n=24.
+/// Both axes partition *disjoint output ranges* and never touch any
+/// element's k-summation order, so the choice is invisible in the bits.
+pub(crate) fn plan_partition(requested: usize, m: usize, k: usize, n: usize) -> Partition {
+    let want = gated_threads(requested, m, k, n);
+    if want <= 1 {
+        return Partition::Cols(1);
+    }
+    let col_stripes = n.div_ceil(STRIPE_ALIGN).max(1);
+    if col_stripes < want && m > n && m >= want * ROW_STRIPE_MIN {
+        Partition::Rows(want.min(m.div_ceil(ROW_STRIPE_MIN)))
+    } else {
+        Partition::Cols(effective_threads(requested, m, k, n))
+    }
+}
+
+/// Stripe width for partitioning `[0, len)` into up to `stripes`
+/// ranges, each a multiple of `align` wide (except the last).  Shared
+/// by [`stripe_ranges`], the scoped fallback and the pool so every
+/// dispatch path produces the identical partition.
+pub(crate) fn stripe_width(len: usize, stripes: usize, align: usize) -> usize {
+    len.div_ceil(stripes.max(1)).div_ceil(align).max(1) * align
+}
+
+/// Partition `[0, len)` into up to `stripes` ranges of `align`-multiple
+/// width (see [`stripe_width`]).
+pub(crate) fn stripe_ranges_with(len: usize, stripes: usize, align: usize) -> Vec<(usize, usize)> {
+    let width = stripe_width(len, stripes, align);
     let mut out = Vec::new();
     let mut j0 = 0;
-    while j0 < n {
-        let j1 = (j0 + width).min(n);
+    while j0 < len {
+        let j1 = (j0 + width).min(len);
         out.push((j0, j1));
         j0 = j1;
     }
     out
 }
 
-/// Run `f(j0, j1)` over the column stripes of `[0, n)`, one scoped
-/// worker per stripe (the first stripe runs on the calling thread).
+/// Partition `[0, n)` into up to `stripes` column ranges, each a
+/// multiple of [`STRIPE_ALIGN`] wide except the last.
+pub(crate) fn stripe_ranges(n: usize, stripes: usize) -> Vec<(usize, usize)> {
+    stripe_ranges_with(n, stripes, STRIPE_ALIGN)
+}
+
+static OVERSUBSCRIBE_WARNED: AtomicBool = AtomicBool::new(false);
+
+/// Satellite of the pool design: an explicit thread request larger than
+/// the pool (e.g. `QUANTNMT_GEMM_THREADS=8` against a 4-lane pool) is
+/// clamped, not silently granted extra scoped threads — logged once so
+/// A/B runs don't chase phantom parallelism.
+fn warn_oversubscribed(requested: usize, lanes: usize) {
+    if !OVERSUBSCRIBE_WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!(
+            "quantnmt: {requested} GEMM threads requested but the worker pool has {lanes} \
+             lane(s); clamping (resize with --gemm-pool / QUANTNMT_GEMM_POOL)"
+        );
+    }
+}
+
+/// Run `f(j0, j1)` over the column stripes of `[0, n)`.
 ///
 /// Callers pass a closure writing **disjoint** column ranges of C via a
 /// [`SendPtr`]; with the per-element summation order fixed inside each
-/// kernel, the output is bit-identical for every `threads` value.
+/// kernel, the output is bit-identical for every `threads` value and
+/// both dispatch paths (pooled / scoped).
 pub(crate) fn run_cols<F>(threads: usize, n: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
 {
-    if threads <= 1 {
-        f(0, n);
+    run_striped(threads, n, STRIPE_ALIGN, f)
+}
+
+/// Row-axis twin of [`run_cols`]: `f(i0, i1)` over row stripes of
+/// `[0, m)`, for tall-skinny shapes where the column axis can't feed
+/// the workers (see [`plan_partition`]).
+pub(crate) fn run_rows<F>(threads: usize, m: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    run_striped(threads, m, ROW_STRIPE_ALIGN, f)
+}
+
+/// Fan `f` out over aligned stripes of `[0, len)`: on the persistent
+/// pool when enabled (clamping `threads` to the pool width), else one
+/// scoped thread per stripe with the first stripe on the caller.
+fn run_striped<F>(threads: usize, len: usize, align: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if threads <= 1 || len == 0 {
+        f(0, len);
         return;
     }
-    let ranges = stripe_ranges(n, threads);
+    if let Some(pool) = super::pool::get() {
+        let lanes = pool.lanes();
+        if threads > lanes {
+            warn_oversubscribed(threads, lanes);
+        }
+        let t = threads.min(lanes);
+        if t <= 1 {
+            f(0, len);
+        } else {
+            pool.run(t, len, align, &f);
+        }
+        return;
+    }
+    // --gemm-pool off: the legacy per-call scoped spawn.
+    let ranges = stripe_ranges_with(len, threads, align);
     if ranges.len() <= 1 {
-        f(0, n);
+        f(0, len);
         return;
     }
     crossbeam_utils::thread::scope(|scope| {
@@ -245,12 +379,13 @@ where
     .expect("gemm worker thread panicked");
 }
 
-/// Raw mutable base pointer that may cross scoped-thread boundaries.
+/// Raw mutable base pointer that may cross worker-thread boundaries.
 ///
 /// Safety contract: every worker receiving a copy writes a disjoint
-/// region (the [`run_cols`] column stripes), and the pointee outlives
-/// the scope (guaranteed by `crossbeam_utils::thread::scope` joining
-/// before the caller's borrow ends).
+/// region (the [`run_cols`] / [`run_rows`] stripes), and the pointee
+/// outlives the dispatch (the pool retires a job before `run` returns;
+/// `crossbeam_utils::thread::scope` joins before the caller's borrow
+/// ends on the fallback path).
 #[derive(Clone, Copy)]
 pub(crate) struct SendPtr<T>(pub *mut T);
 
@@ -303,12 +438,56 @@ mod tests {
     }
 
     #[test]
-    fn effective_threads_gates_small_shapes() {
-        // auto: decode-sized GEMM never threads
-        assert_eq!(effective_threads(0, 1, 512, 512), 1);
+    fn effective_threads_gates_by_dispatch_cost() {
+        // tiny shapes never thread on either dispatch path
+        assert_eq!(effective_threads(0, 1, 64, 64), 1);
         // explicit request is honored but clamped to stripe count
         assert_eq!(effective_threads(4, 1, 8, 33), 2);
         assert_eq!(effective_threads(2, 1, 8, 8), 1);
+        // the decode logits shape (m=1, k=512, n=512, ~0.5M flops):
+        // parallel under pooled dispatch, single-threaded when every
+        // call pays a scoped spawn (QUANTNMT_GEMM_PAR_MIN overrides
+        // both, so only assert when it's unset)
+        if std::env::var("QUANTNMT_GEMM_PAR_MIN").is_err() {
+            let t = effective_threads(0, 1, 512, 512);
+            if !super::super::pool::enabled() {
+                assert_eq!(t, 1, "scoped path keeps the spawn-cost crossover");
+            } else if gemm_threads() > 1 {
+                assert!(t > 1, "pooled path should parallelize decode shapes");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_partition_picks_axis_by_shape() {
+        // wide output: column stripes, clamped to the stripe count
+        assert_eq!(plan_partition(4, 8, 64, 512), Partition::Cols(4));
+        assert_eq!(plan_partition(4, 1, 8, 33), Partition::Cols(2));
+        // tall-skinny: too few column stripes, plenty of rows
+        assert_eq!(plan_partition(4, 256, 64, 24), Partition::Rows(4));
+        // tall but with enough columns: stays on the column axis
+        assert_eq!(plan_partition(4, 256, 64, 256), Partition::Cols(4));
+        // tall-skinny but too few rows per worker: columns win
+        assert_eq!(plan_partition(4, 16, 64, 24), Partition::Cols(1));
+        // narrow output with just enough rows for two workers
+        assert_eq!(plan_partition(2, 64, 64, 16), Partition::Rows(2));
+        // gated-off small shapes run inline regardless of axis
+        assert_eq!(plan_partition(0, 2, 4, 4), Partition::Cols(1));
+    }
+
+    #[test]
+    fn stripe_ranges_with_align_covers() {
+        for (len, t, align) in [(100usize, 4usize, 4usize), (7, 3, 1), (256, 4, 32), (9, 4, 4)] {
+            let r = stripe_ranges_with(len, t, align);
+            assert_eq!(r.first().unwrap().0, 0);
+            assert_eq!(r.last().unwrap().1, len);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+            for &(a, b) in &r[..r.len() - 1] {
+                assert_eq!((b - a) % align, 0, "({len},{t},{align})");
+            }
+        }
     }
 
     #[test]

@@ -25,7 +25,7 @@
 //! * [`quantized_matmul`] — full f32 -> int8 -> f32 path matching
 //!   `python/compile/kernels/ref.py::fake_quant_matmul_ref`
 
-use super::dispatch::{effective_threads, pack_pays, run_cols, SendPtr};
+use super::dispatch::{pack_pays, plan_partition, run_cols, run_rows, Partition, SendPtr};
 use super::pack::PackedB;
 use super::{IsaLevel, UINT8_ZERO_POINT};
 
@@ -176,12 +176,17 @@ pub fn igemm_scratch(
     match resolve_tier(choice, m, n, false) {
         Tier::Portable => {
             c.fill(0);
-            let t = effective_threads(threads, m, k, n);
             let cp = SendPtr(c.as_mut_ptr());
-            run_cols(t, n, |j0, j1| {
-                // SAFETY: stripes write disjoint columns of c.
-                unsafe { portable_cols(m, k, n, a, b, cp.0, j0, j1) }
-            });
+            match plan_partition(threads, m, k, n) {
+                Partition::Cols(t) => run_cols(t, n, |j0, j1| {
+                    // SAFETY: stripes write disjoint columns of c.
+                    unsafe { portable_cols(m, k, n, a, b, cp.0, j0, j1) }
+                }),
+                Partition::Rows(t) => run_rows(t, m, |i0, i1| {
+                    // SAFETY: stripes write disjoint rows of c.
+                    unsafe { portable_rows(k, n, a, b, cp.0, i0, i1) }
+                }),
+            }
         }
         tier => {
             ws.b_pack.pack_into(b, k, n);
@@ -222,7 +227,9 @@ pub fn igemm_prepacked_scratch(
 }
 
 /// Shared macro-loop over a packed panel: pack A for the tier, then fan
-/// the tiled kernel out over column stripes.
+/// the tiled kernel out over column stripes (or row stripes for
+/// tall-skinny shapes — the quad-major A panels index rows absolutely,
+/// so both axes read the same panel).
 fn packed_tier(
     tier: Tier,
     threads: usize,
@@ -234,33 +241,51 @@ fn packed_tier(
     c: &mut [i32],
 ) {
     let n = bp.n;
-    let t = effective_threads(threads, m, k, n);
+    let part = plan_partition(threads, m, k, n);
     let cp = SendPtr(c.as_mut_ptr());
     match tier {
         Tier::Portable => {
             // scalar tier over the packed layout (e.g. forced Portable
             // against a prepacked weight, or QUANTNMT_ISA=scalar)
             c.fill(0);
-            run_cols(t, n, |j0, j1| {
-                // SAFETY: stripes write disjoint columns of c.
-                unsafe { super::pack::igemm_packed_scalar(m, k, a, bp, cp.0, j0, j1) }
-            });
+            match part {
+                Partition::Cols(t) => run_cols(t, n, |j0, j1| {
+                    // SAFETY: stripes write disjoint columns of c.
+                    unsafe { super::pack::igemm_packed_scalar(m, k, a, bp, cp.0, j0, j1) }
+                }),
+                Partition::Rows(t) => run_rows(t, m, |i0, i1| {
+                    // SAFETY: stripes write disjoint rows of c.
+                    unsafe { super::pack::igemm_packed_scalar_rows(m, k, a, bp, cp.0, i0, i1) }
+                }),
+            }
         }
         Tier::Avx2 => {
             super::avx2::pack_a(a, m, k, a_pack);
             let ap: &[i32] = a_pack;
-            run_cols(t, n, |j0, j1| {
-                // SAFETY: AVX2 asserted by resolve_tier; disjoint stripes.
-                unsafe { super::avx2::igemm_avx2_tiled(m, ap, bp, cp.0, j0, j1) }
-            });
+            match part {
+                Partition::Cols(t) => run_cols(t, n, |j0, j1| {
+                    // SAFETY: AVX2 asserted by resolve_tier; disjoint stripes.
+                    unsafe { super::avx2::igemm_avx2_tiled(m, ap, bp, cp.0, j0, j1) }
+                }),
+                Partition::Rows(t) => run_rows(t, m, |i0, i1| {
+                    // SAFETY: AVX2 asserted by resolve_tier; disjoint row stripes.
+                    unsafe { super::avx2::igemm_avx2_tiled_rows(m, ap, bp, cp.0, i0, i1) }
+                }),
+            }
         }
         Tier::Vnni => {
             super::vnni::pack_a(a, m, k, a_pack);
             let ap: &[i32] = a_pack;
-            run_cols(t, n, |j0, j1| {
-                // SAFETY: VNNI asserted by resolve_tier; disjoint stripes.
-                unsafe { super::vnni::igemm_vnni_tiled(m, ap, bp, cp.0, j0, j1) }
-            });
+            match part {
+                Partition::Cols(t) => run_cols(t, n, |j0, j1| {
+                    // SAFETY: VNNI asserted by resolve_tier; disjoint stripes.
+                    unsafe { super::vnni::igemm_vnni_tiled(m, ap, bp, cp.0, j0, j1) }
+                }),
+                Partition::Rows(t) => run_rows(t, m, |i0, i1| {
+                    // SAFETY: VNNI asserted by resolve_tier; disjoint row stripes.
+                    unsafe { super::vnni::igemm_vnni_tiled_rows(m, ap, bp, cp.0, i0, i1) }
+                }),
+            }
         }
     }
 }
@@ -305,6 +330,40 @@ unsafe fn portable_cols(
             for ic in (0..m).step_by(MC) {
                 let mb = MC.min(m - ic);
                 block(k, n, a, b, cbase, ic, pc, jc, mb, kb, nb);
+            }
+        }
+        jc += nb;
+    }
+}
+
+/// Row-stripe twin of [`portable_cols`]: rows `[i0, i1)` over the full
+/// column range, for tall-skinny shapes (`dispatch::run_rows`).  The
+/// k-block order (and so every element's summation order) is identical
+/// to [`portable_cols`], so any row partition is bit-identical to the
+/// single-range call.
+///
+/// # Safety
+/// `cbase` must point at an `m * n` i32 buffer; concurrent callers must
+/// write disjoint `[i0, i1)` row ranges.
+unsafe fn portable_rows(
+    k: usize,
+    n: usize,
+    a: &[i8],
+    b: &[u8],
+    cbase: *mut i32,
+    i0: usize,
+    i1: usize,
+) {
+    let mut jc = 0;
+    while jc < n {
+        let nb = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kb = KC.min(k - pc);
+            let mut ic = i0;
+            while ic < i1 {
+                let mb = MC.min(i1 - ic);
+                block(k, n, a, b, cbase, ic, pc, jc, mb, kb, nb);
+                ic += mb;
             }
         }
         jc += nb;
@@ -718,6 +777,43 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Tall-skinny shapes (m >> n) take the row-stripe partition axis
+    /// (`dispatch::plan_partition` -> `Partition::Rows`); row stripes
+    /// must stay bit-identical to the single-threaded column path for
+    /// every kernel tier, packed and prepacked alike.
+    #[test]
+    fn row_stripe_partition_matches_single_thread() {
+        let mut choices = vec![KernelChoice::Portable];
+        if super::super::dispatch::avx2_available() {
+            choices.push(KernelChoice::Avx2);
+        }
+        if super::super::vnni::vnni_available() {
+            choices.push(KernelChoice::Vnni);
+        }
+        // n < STRIPE_ALIGN so only one column stripe exists; m large
+        // enough (and flops past the crossover) that plan_partition
+        // flips to Rows when threads > 1.
+        for &(m, k, n) in &[(256usize, 384usize, 24usize), (129, 100, 7), (64, 33, 3)] {
+            let a: Vec<i8> = (0..m * k).map(|i| (i as i32 * 31 % 251 - 125) as i8).collect();
+            let b: Vec<u8> = (0..k * n).map(|i| (i * 17 % 256) as u8).collect();
+            let mut want = vec![0i32; m * n];
+            igemm_with_threads(KernelChoice::Portable, 1, m, k, n, &a, &b, &mut want);
+            let bp = PackedB::pack(&b, k, n);
+            let mut apack = Vec::new();
+            let mut c = vec![0i32; m * n];
+            for &choice in &choices {
+                for threads in [2usize, 4] {
+                    c.fill(-1);
+                    igemm_with_threads(choice, threads, m, k, n, &a, &b, &mut c);
+                    assert_eq!(c, want, "{choice:?} t={threads} packed ({m},{k},{n})");
+                    c.fill(-1);
+                    igemm_prepacked_scratch(choice, threads, m, k, &a, &bp, &mut c, &mut apack);
+                    assert_eq!(c, want, "{choice:?} t={threads} prepacked ({m},{k},{n})");
+                }
+            }
+        }
     }
 
     #[test]

@@ -17,10 +17,17 @@
 //!   panel ([`PackedB`]) and all bit-identical;
 //! * zero-point corrected entry points matching `kernels/ref.py`.
 //!
-//! Large GEMMs fan out over disjoint output-column stripes on a scoped
-//! thread pool (`--gemm-threads` / `QUANTNMT_GEMM_THREADS`), gated by a
-//! flops threshold so decode-sized calls stay single-threaded; results
-//! are bit-identical for every thread count.
+//! Large GEMMs fan out over disjoint output stripes — columns by
+//! default, rows for tall-skinny shapes — on the persistent [`pool`]
+//! worker team (`--gemm-pool` / `QUANTNMT_GEMM_POOL`; thread budget
+//! from `--gemm-threads` / `QUANTNMT_GEMM_THREADS`), with a scoped
+//! spawn fallback when the pool is disabled.  The near-zero dispatch
+//! cost of the pool lets the parallel crossover sit ~32x lower
+//! (`PAR_FLOPS_MIN_POOLED`), so decode-shape GEMMs (m = a few slots,
+//! n = vocab) go parallel too.  Stripes own disjoint output ranges and
+//! never change any element's k-summation order, so results are
+//! bit-identical for every thread count, partition axis, and dispatch
+//! path.
 //!
 //! `rust/benches/gemm.rs` regenerates Fig 3a (square sizes) and Fig 3b
 //! (the Transformer's actual shapes) from these kernels across the
@@ -30,14 +37,17 @@ pub mod avx2;
 mod dispatch;
 mod igemm;
 mod pack;
+mod pool;
 mod requant;
 mod sgemm;
 pub mod vnni;
 
 pub use dispatch::{
     avx2_available, detect_isa, gemm_threads, isa_level, parse_isa, set_gemm_threads, IsaLevel,
-    AUTO_PACK_MIN_MN, AUTO_PACK_MIN_ROWS, DEFAULT_MAX_THREADS, PAR_FLOPS_MIN, STRIPE_ALIGN,
+    AUTO_PACK_MIN_MN, AUTO_PACK_MIN_ROWS, DEFAULT_MAX_THREADS, PAR_FLOPS_MIN,
+    PAR_FLOPS_MIN_POOLED, ROW_STRIPE_ALIGN, ROW_STRIPE_MIN, STRIPE_ALIGN,
 };
+pub use pool::{gemm_pool_lanes, parse_pool_mode, set_gemm_pool, PoolMode};
 pub use igemm::{
     apply_zero_corrections, dequantize_s8, igemm, igemm_corrected, igemm_corrected_scratch,
     igemm_portable, igemm_prepacked, igemm_prepacked_scratch, igemm_scratch, igemm_with,

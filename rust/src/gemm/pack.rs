@@ -84,11 +84,48 @@ pub(crate) unsafe fn igemm_packed_scalar(
     j0: usize,
     j1: usize,
 ) {
+    packed_scalar_rect(m, k, a, bp, cbase, 0, m, j0, j1)
+}
+
+/// Row-stripe twin of [`igemm_packed_scalar`]: rows `[i0, i1)` over the
+/// full column range, for tall-skinny shapes (`dispatch::run_rows`).
+/// Rows are fully independent here, so any row partition is trivially
+/// bit-identical to the single-range call.
+///
+/// # Safety
+/// As [`igemm_packed_scalar`], with concurrent callers writing disjoint
+/// `[i0, i1)` row ranges instead.
+pub(crate) unsafe fn igemm_packed_scalar_rows(
+    m: usize,
+    k: usize,
+    a: &[i8],
+    bp: &PackedB,
+    cbase: *mut i32,
+    i0: usize,
+    i1: usize,
+) {
+    packed_scalar_rect(m, k, a, bp, cbase, i0, i1, 0, bp.n)
+}
+
+/// Shared loop over the `[i0, i1) x [j0, j1)` output rectangle.
+#[allow(clippy::too_many_arguments)]
+unsafe fn packed_scalar_rect(
+    m: usize,
+    k: usize,
+    a: &[i8],
+    bp: &PackedB,
+    cbase: *mut i32,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+) {
     let n = bp.n;
     let np = bp.np;
     debug_assert_eq!(a.len(), m * k);
+    debug_assert!(i1 <= m);
     debug_assert!(j1 <= n);
-    for i in 0..m {
+    for i in i0..i1 {
         let arow = &a[i * k..(i + 1) * k];
         // SAFETY: rows are disjoint and [j0, j1) is this worker's stripe.
         let crow = std::slice::from_raw_parts_mut(cbase.add(i * n + j0), j1 - j0);
@@ -151,6 +188,21 @@ mod tests {
         assert!(bp.data.capacity() >= first_len);
         let fresh = PackedB::pack(&b2, 5, 3);
         assert_eq!(bp.data, fresh.data);
+    }
+
+    #[test]
+    fn packed_scalar_rows_match_cols() {
+        let (m, k, n) = (11, 10, 21);
+        let a: Vec<i8> = (0..m * k).map(|i| (i as i32 * 7 % 251 - 125) as i8).collect();
+        let b: Vec<u8> = (0..k * n).map(|i| (i * 13 % 256) as u8).collect();
+        let bp = PackedB::pack(&b, k, n);
+        let mut want = vec![0i32; m * n];
+        unsafe { igemm_packed_scalar(m, k, &a, &bp, want.as_mut_ptr(), 0, n) };
+        let mut c = vec![0i32; m * n];
+        for (i0, i1) in [(0usize, 4usize), (4, 9), (9, 11)] {
+            unsafe { igemm_packed_scalar_rows(m, k, &a, &bp, c.as_mut_ptr(), i0, i1) };
+        }
+        assert_eq!(c, want);
     }
 
     #[test]

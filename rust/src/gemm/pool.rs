@@ -1,0 +1,485 @@
+//! Persistent GEMM worker pool: amortized parallel dispatch.
+//!
+//! The scoped path (`dispatch::run_striped`'s fallback) re-spawns OS
+//! threads on every parallel GEMM call; the old `PAR_FLOPS_MIN` gate
+//! documents the consequence — spawn+join costs more than the GEMM
+//! below ~4M flops, so decode-shape calls (m = active slots) never
+//! went parallel.  This module keeps one process-wide team of workers
+//! alive instead, so fanning a macro-loop out costs a few atomic
+//! operations (plus an unpark when a worker has gone idle), and the
+//! crossover drops by ~32x (`dispatch::PAR_FLOPS_MIN_POOLED`).
+//!
+//! # Protocol
+//!
+//! One job slot lives in [`Shared`]; callers serialize on a submit
+//! mutex (never blocking: a contended caller runs the GEMM inline
+//! single-stripe, which the determinism contract makes bit-identical).
+//! Publishing a job is lock-free from the workers' side:
+//!
+//! 1. the caller writes the [`Job`] fields (stripe geometry + an
+//!    erased closure pointer), then Release-stores the stripe count
+//!    into `remaining` — the broadcast;
+//! 2. anyone (worker or caller) claims a stripe with
+//!    `remaining.fetch_sub(1)`; a positive result is a valid claim and
+//!    orders the job-field reads after the publish.  A stale worker
+//!    that lost the race gets a non-positive result and touches
+//!    nothing — job fields are only ever read behind a successful
+//!    claim, so a finished job's closure can never be dereferenced;
+//! 3. every claim increments `done` exactly once (panics in a stripe
+//!    are caught, flagged, and re-thrown on the *caller*, mirroring
+//!    the scoped path); the caller retires the job only when
+//!    `done == total`, so the closure outlives every reader.
+//!
+//! The caller always enters the claim loop itself, so a job completes
+//! even if every worker is parked, busy, or was never spawned — the
+//! pool cannot deadlock a GEMM.  Idle workers spin briefly
+//! ([`Backoff`]) then park; the parked flag and the `remaining` check
+//! on both sides are SeqCst so a publish and a park can never miss
+//! each other.
+//!
+//! # Determinism
+//!
+//! The pool partitions `[0, len)` with the same width arithmetic as
+//! [`super::dispatch::stripe_ranges`], workers write disjoint stripes,
+//! and every kernel keeps its per-element summation order fixed — so
+//! results are bit-identical to the scoped and single-threaded paths
+//! for any pool size and any claim interleaving (stripe *ownership* is
+//! racy; stripe *content* is not).
+//!
+//! # Sizing
+//!
+//! `--gemm-pool N` / `QUANTNMT_GEMM_POOL` cap the pool at N lanes
+//! (workers + the calling thread); `off` disables it entirely and
+//! parallel GEMMs fall back to the scoped path.  [`PoolMode::Auto`]
+//! sizes to [`super::gemm_threads`] at first use.  The pool is the
+//! single thread budget for the whole process: serving shards in
+//! `coordinator::server` share it instead of multiplying
+//! `--gemm-threads` by the shard count.
+
+use std::cell::UnsafeCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicIsize, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crossbeam_utils::sync::{Parker, Unparker};
+use crossbeam_utils::Backoff;
+
+/// Pool sizing mode, resolved from `--gemm-pool` / `QUANTNMT_GEMM_POOL`
+/// (see [`set_gemm_pool`] / [`parse_pool_mode`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PoolMode {
+    /// Size the pool to [`super::gemm_threads`] at first use.
+    #[default]
+    Auto,
+    /// Disable the pool: parallel GEMMs use the scoped-spawn fallback.
+    Off,
+    /// Cap the pool at `n` lanes (workers + the calling thread).
+    Lanes(usize),
+}
+
+/// Parse a `--gemm-pool` / `QUANTNMT_GEMM_POOL` value: `off` (or `0`)
+/// disables the pool, `auto` defers to [`super::gemm_threads`], and a
+/// positive integer caps the lane count.
+pub fn parse_pool_mode(s: &str) -> Option<PoolMode> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "off" | "none" => Some(PoolMode::Off),
+        "auto" | "" => Some(PoolMode::Auto),
+        t => t.parse::<usize>().ok().map(|n| {
+            if n == 0 {
+                PoolMode::Off
+            } else {
+                PoolMode::Lanes(n)
+            }
+        }),
+    }
+}
+
+const MODE_AUTO: isize = -1;
+const MODE_OFF: isize = 0;
+/// `isize::MIN` marks "no override set" (fall through to the env var).
+static MODE_OVERRIDE: AtomicIsize = AtomicIsize::new(isize::MIN);
+
+fn encode(mode: PoolMode) -> isize {
+    match mode {
+        PoolMode::Auto => MODE_AUTO,
+        PoolMode::Off => MODE_OFF,
+        PoolMode::Lanes(n) => n as isize,
+    }
+}
+
+/// Set the process-wide pool mode (CLI `--gemm-pool`, or tests/benches
+/// A/B-ing dispatch paths).  Workers are spawned lazily at the first
+/// parallel GEMM; once spawned the team never grows, so a `Lanes` cap
+/// larger than the built pool clamps to it, a smaller cap narrows it,
+/// and `Off` falls back to the scoped path from the next call on.
+pub fn set_gemm_pool(mode: PoolMode) {
+    MODE_OVERRIDE.store(encode(mode), Ordering::Relaxed);
+}
+
+fn env_mode() -> isize {
+    static ENV: OnceLock<isize> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("QUANTNMT_GEMM_POOL") {
+        Ok(v) => match parse_pool_mode(&v) {
+            Some(m) => encode(m),
+            None => {
+                eprintln!("QUANTNMT_GEMM_POOL='{v}' not recognized (want off|auto|N); using auto");
+                MODE_AUTO
+            }
+        },
+        Err(_) => MODE_AUTO,
+    })
+}
+
+fn mode_now() -> isize {
+    let o = MODE_OVERRIDE.load(Ordering::Relaxed);
+    if o != isize::MIN {
+        o
+    } else {
+        env_mode()
+    }
+}
+
+/// Whether pooled dispatch is currently enabled (drives the parallel
+/// crossover choice in `dispatch::par_flops_min`).
+pub(crate) fn enabled() -> bool {
+    mode_now() != MODE_OFF
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+/// The process pool, spawning it on first use — or `None` when the
+/// mode is `off` (callers fall back to scoped spawn).
+pub(crate) fn get() -> Option<&'static Pool> {
+    let m = mode_now();
+    if m == MODE_OFF {
+        return None;
+    }
+    Some(POOL.get_or_init(|| {
+        let lanes = if m > 0 {
+            m as usize
+        } else {
+            super::dispatch::gemm_threads()
+        };
+        Pool::new(lanes.max(1))
+    }))
+}
+
+/// Current pool width in lanes (workers + caller); `0` when disabled.
+/// Spawns the pool if the first to ask — meant for logs and benches.
+pub fn gemm_pool_lanes() -> usize {
+    get().map_or(0, |p| p.lanes())
+}
+
+/// An erased stripe job: geometry plus a type-erased `Fn(usize, usize)`
+/// borrowed from the submitting caller's stack.  Only read behind a
+/// successful stripe claim (see module docs), which is what makes the
+/// borrow sound.
+#[derive(Clone, Copy)]
+struct Job {
+    len: usize,
+    width: usize,
+    total: usize,
+    data: *const (),
+    call: unsafe fn(*const (), usize, usize),
+}
+
+/// Placeholder for the idle slot; never invoked (claims are impossible
+/// while `remaining <= 0`).
+unsafe fn noop_call(_: *const (), _: usize, _: usize) {}
+
+impl Job {
+    const fn idle() -> Job {
+        Job { len: 0, width: 1, total: 0, data: std::ptr::null(), call: noop_call }
+    }
+}
+
+unsafe fn call_thunk<F: Fn(usize, usize) + Sync>(data: *const (), s0: usize, s1: usize) {
+    (*(data as *const F))(s0, s1)
+}
+
+/// One worker's park state: the flag is the SeqCst half of the
+/// publish/park handshake, the unparker the wake handle.
+struct ParkSlot {
+    flag: AtomicBool,
+    unparker: Unparker,
+}
+
+/// State shared between the submitting caller and every worker.
+struct Shared {
+    /// Claim countdown: `> 0` while stripes are unclaimed; the
+    /// publish broadcast and the claim ticket in one atomic.
+    remaining: AtomicIsize,
+    /// Completed-stripe count; the job retires at `done == total`.
+    done: AtomicUsize,
+    /// A stripe panicked (re-thrown on the caller after the join).
+    panicked: AtomicBool,
+    /// The job slot.  Written only by the submit-lock holder while
+    /// `remaining <= 0` and `done == total`; read (copied) only behind
+    /// a successful claim — never concurrently with a write.
+    job: UnsafeCell<Job>,
+    parked: Vec<ParkSlot>,
+}
+
+// SAFETY: the raw pointers in `job` are only dereferenced between a
+// successful claim and the matching `done` increment, both inside the
+// submitting caller's borrow of the closure (module docs, "Protocol").
+unsafe impl Send for Shared {}
+unsafe impl Sync for Shared {}
+
+/// Claim and run stripes of the current job until none remain.  Shared
+/// by workers and the submitting caller; panics inside a stripe are
+/// caught and flagged so `done` always reaches `total` and the caller
+/// can never hang on a dead worker.
+fn drain_claims(sh: &Shared) {
+    loop {
+        let c = sh.remaining.fetch_sub(1, Ordering::AcqRel);
+        if c <= 0 {
+            return;
+        }
+        // A positive ticket orders these reads after the publish, and
+        // the caller can't retire the job before our `done` increment.
+        let job = unsafe { *sh.job.get() };
+        let idx = job.total - c as usize;
+        let s0 = idx * job.width;
+        let s1 = (s0 + job.width).min(job.len);
+        let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, s0, s1) })).is_ok();
+        if !ok {
+            sh.panicked.store(true, Ordering::Relaxed);
+        }
+        sh.done.fetch_add(1, Ordering::Release);
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>, idx: usize, parker: Parker) {
+    let backoff = Backoff::new();
+    loop {
+        if sh.remaining.load(Ordering::Acquire) > 0 {
+            drain_claims(&sh);
+            backoff.reset();
+            continue;
+        }
+        if backoff.is_completed() {
+            // Spin budget exhausted: park.  Flag-then-check against the
+            // publisher's store-then-swap (both SeqCst) guarantees one
+            // side sees the other, so a publish can't be missed; a
+            // stale unpark token at worst costs one extra loop turn.
+            let slot = &sh.parked[idx];
+            slot.flag.store(true, Ordering::SeqCst);
+            if sh.remaining.load(Ordering::SeqCst) <= 0 {
+                parker.park();
+            }
+            slot.flag.store(false, Ordering::SeqCst);
+            backoff.reset();
+        } else {
+            backoff.snooze();
+        }
+    }
+}
+
+/// The persistent worker team (see module docs).
+pub(crate) struct Pool {
+    shared: Arc<Shared>,
+    /// Lanes the team was built with (workers spawned = built - 1).
+    built: usize,
+    /// Serializes submitters; contended callers run inline instead of
+    /// blocking, so no GEMM ever waits on another caller's GEMM.
+    submit: Mutex<()>,
+}
+
+impl Pool {
+    fn new(lanes: usize) -> Pool {
+        let workers = lanes.saturating_sub(1);
+        let mut parked = Vec::with_capacity(workers);
+        let mut parkers = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let p = Parker::new();
+            parked.push(ParkSlot { flag: AtomicBool::new(false), unparker: p.unparker().clone() });
+            parkers.push(p);
+        }
+        let shared = Arc::new(Shared {
+            remaining: AtomicIsize::new(0),
+            done: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            job: UnsafeCell::new(Job::idle()),
+            parked,
+        });
+        let mut built = 1;
+        for (idx, parker) in parkers.into_iter().enumerate() {
+            let sh = Arc::clone(&shared);
+            let spawned = std::thread::Builder::new()
+                .name(format!("quantnmt-gemm-{idx}"))
+                .spawn(move || worker_loop(sh, idx, parker));
+            match spawned {
+                Ok(_) => built += 1,
+                // Out of threads: a narrower pool is still correct
+                // (the caller claims whatever workers don't).
+                Err(e) => {
+                    eprintln!("quantnmt: gemm pool worker spawn failed ({e}); running {built} lanes");
+                    break;
+                }
+            }
+        }
+        Pool { shared, built, submit: Mutex::new(()) }
+    }
+
+    /// Effective lane count: the built width, narrowed by a smaller
+    /// runtime `Lanes` cap (the team never grows after spawn).
+    pub(crate) fn lanes(&self) -> usize {
+        let m = mode_now();
+        if m > 0 {
+            self.built.min(m as usize).max(1)
+        } else {
+            self.built
+        }
+    }
+
+    /// Run `f` over `[0, len)` split into up to `stripes` ranges of
+    /// `align`-multiple width (same partition as
+    /// `dispatch::stripe_ranges`), claimed by the pool team and the
+    /// calling thread.  Returns only when every stripe has run, so `f`
+    /// may borrow from the caller's stack.
+    pub(crate) fn run<F>(&self, stripes: usize, len: usize, align: usize, f: &F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        let width = super::dispatch::stripe_width(len, stripes, align);
+        let total = len.div_ceil(width);
+        if total <= 1 {
+            f(0, len);
+            return;
+        }
+        let guard = match self.submit.try_lock() {
+            Ok(g) => g,
+            // Another caller owns the team right now; inline is
+            // bit-identical (determinism contract) and never blocks.
+            Err(_) => {
+                f(0, len);
+                return;
+            }
+        };
+        let sh = &*self.shared;
+        // SAFETY: we hold the submit lock and the previous job retired
+        // (`done == total` observed by its submitter), so no claim can
+        // read the slot concurrently with this write.
+        unsafe {
+            *sh.job.get() =
+                Job { len, width, total, data: f as *const F as *const (), call: call_thunk::<F> };
+        }
+        sh.panicked.store(false, Ordering::Relaxed);
+        sh.done.store(0, Ordering::Relaxed);
+        // The broadcast: claims are valid from here on.
+        sh.remaining.store(total as isize, Ordering::SeqCst);
+        let mut wake = total - 1;
+        for slot in &sh.parked {
+            if wake == 0 {
+                break;
+            }
+            if slot.flag.swap(false, Ordering::SeqCst) {
+                slot.unparker.unpark();
+                wake -= 1;
+            }
+        }
+        // Participate: the job completes even with zero live workers.
+        drain_claims(sh);
+        let backoff = Backoff::new();
+        while sh.done.load(Ordering::Acquire) != total {
+            backoff.snooze();
+        }
+        let poisoned = sh.panicked.load(Ordering::Relaxed);
+        drop(guard);
+        if poisoned {
+            panic!("gemm pool worker panicked");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn parse_pool_mode_values() {
+        assert_eq!(parse_pool_mode("off"), Some(PoolMode::Off));
+        assert_eq!(parse_pool_mode("0"), Some(PoolMode::Off));
+        assert_eq!(parse_pool_mode("auto"), Some(PoolMode::Auto));
+        assert_eq!(parse_pool_mode(" 4 "), Some(PoolMode::Lanes(4)));
+        assert_eq!(parse_pool_mode("banana"), None);
+    }
+
+    #[test]
+    fn pool_run_covers_every_stripe_once() {
+        let Some(pool) = get() else {
+            return; // QUANTNMT_GEMM_POOL=off rerun: scoped path covered elsewhere
+        };
+        for (len, stripes, align) in
+            [(100usize, 4usize, 32usize), (33, 2, 32), (256, 4, 4), (7, 4, 1), (1024, 3, 32)]
+        {
+            let hits: Vec<AtomicU32> = (0..len).map(|_| AtomicU32::new(0)).collect();
+            pool.run(stripes, len, align, &|s0: usize, s1: usize| {
+                for h in &hits[s0..s1] {
+                    h.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "({len},{stripes},{align})"
+            );
+        }
+    }
+
+    #[test]
+    fn pool_reuse_many_jobs_stays_correct() {
+        let Some(pool) = get() else {
+            return;
+        };
+        // many small jobs back to back: exercises park/unpark cycling
+        for round in 0..200usize {
+            let len = 32 + (round % 7) * 33;
+            let sum = AtomicUsize::new(0);
+            pool.run(4, len, 1, &|s0: usize, s1: usize| {
+                sum.fetch_add((s0..s1).sum::<usize>(), Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), len * (len - 1) / 2, "round {round}");
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_never_deadlock() {
+        let Some(pool) = get() else {
+            return;
+        };
+        // several caller threads race the submit lock; losers must run
+        // inline and every caller must get the right answer
+        crossbeam_utils::thread::scope(|scope| {
+            for t in 0..4usize {
+                scope.spawn(move |_| {
+                    for round in 0..50usize {
+                        let len = 64 + t * 17 + round % 5;
+                        let sum = AtomicUsize::new(0);
+                        pool.run(4, len, 1, &|s0: usize, s1: usize| {
+                            sum.fetch_add((s0..s1).sum::<usize>(), Ordering::Relaxed);
+                        });
+                        assert_eq!(sum.load(Ordering::Relaxed), len * (len - 1) / 2);
+                    }
+                });
+            }
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn lanes_respect_runtime_cap() {
+        let Some(pool) = get() else {
+            return;
+        };
+        let built = pool.built;
+        assert_eq!(pool.lanes(), built);
+        set_gemm_pool(PoolMode::Lanes(1));
+        assert_eq!(pool.lanes(), 1);
+        set_gemm_pool(PoolMode::Lanes(built + 8));
+        assert_eq!(pool.lanes(), built, "a larger cap clamps to the built team");
+        set_gemm_pool(PoolMode::Auto);
+        assert_eq!(pool.lanes(), built);
+    }
+}

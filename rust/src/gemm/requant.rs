@@ -23,7 +23,11 @@
 //! The epilogue itself is deterministic scalar math applied after the
 //! tiled kernels, so `igemm_requant` output is bit-identical across
 //! Portable/AVX2/VNNI and any thread count — exactly the parity
-//! contract the raw accumulator already satisfies.
+//! contract the raw accumulator already satisfies.  The GEMM inside
+//! every entry point funnels through `igemm_scratch` /
+//! `igemm_prepacked_scratch`, so fused calls ride the persistent
+//! worker pool (`super::pool`) automatically; `tests/pool_parity.rs`
+//! pins the pooled-vs-scoped parity of the fused path explicitly.
 
 use super::igemm::{apply_zero_corrections, igemm_prepacked_scratch, igemm_scratch};
 use super::pack::PackedB;

@@ -8,13 +8,15 @@
 //!   auto-vectorizes the inner `n` loop into AVX FMAs;
 //! * `C` is accumulated in place, so callers must zero it (the public
 //!   entry points do);
-//! * [`sgemm_threads`] fans the macro-loop out over disjoint
-//!   output-column stripes.  Each C element's k-summation order (K
-//!   blocks ascending, rows within a block ascending) never depends on
-//!   the column partition, so even in f32 the result is bit-identical
-//!   for every thread count.
+//! * [`sgemm_threads`] fans the macro-loop out over disjoint output
+//!   stripes — columns by default, rows for tall-skinny shapes
+//!   (`dispatch::plan_partition`).  Each C element's k-summation order
+//!   (K blocks ascending, rows within a block ascending) never depends
+//!   on the partition axis, so even in f32 the result is bit-identical
+//!   for every thread count, and for the pooled vs scoped dispatch
+//!   paths alike.
 
-use super::dispatch::{effective_threads, run_cols, SendPtr};
+use super::dispatch::{plan_partition, run_cols, run_rows, Partition, SendPtr};
 
 const MC: usize = 64; // rows of A per block
 const KC: usize = 256; // depth per block
@@ -43,12 +45,17 @@ pub fn sgemm_threads(
     if m == 0 || k == 0 || n == 0 {
         return;
     }
-    let t = effective_threads(threads, m, k, n);
     let cp = SendPtr(c.as_mut_ptr());
-    run_cols(t, n, |j0, j1| {
-        // SAFETY: stripes write disjoint columns of c.
-        unsafe { sgemm_cols(m, k, n, a, b, cp.0, j0, j1) }
-    });
+    match plan_partition(threads, m, k, n) {
+        Partition::Cols(t) => run_cols(t, n, |j0, j1| {
+            // SAFETY: stripes write disjoint columns of c.
+            unsafe { sgemm_cols(m, k, n, a, b, cp.0, j0, j1) }
+        }),
+        Partition::Rows(t) => run_rows(t, m, |i0, i1| {
+            // SAFETY: stripes write disjoint rows of c.
+            unsafe { sgemm_rows(k, n, a, b, cp.0, i0, i1) }
+        }),
+    }
 }
 
 /// Blocked macro-loop restricted to output columns `[j0, j1)`.
@@ -74,6 +81,40 @@ unsafe fn sgemm_cols(
             for ic in (0..m).step_by(MC) {
                 let mb = MC.min(m - ic);
                 block(k, n, a, b, cbase, ic, pc, jc, mb, kb, nb);
+            }
+        }
+        jc += nb;
+    }
+}
+
+/// Row-stripe twin of [`sgemm_cols`]: rows `[i0, i1)` over the full
+/// column range, for tall-skinny shapes (`dispatch::run_rows`).  The
+/// k-block order seen by any element is the same as in [`sgemm_cols`]
+/// (`pc` ascending, rows within a block ascending), so row partitions
+/// are bit-identical to the single-range call even in f32.
+///
+/// # Safety
+/// `cbase` must point at an `m * n` f32 buffer; concurrent callers must
+/// write disjoint `[i0, i1)` row ranges.
+unsafe fn sgemm_rows(
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    cbase: *mut f32,
+    i0: usize,
+    i1: usize,
+) {
+    let mut jc = 0;
+    while jc < n {
+        let nb = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kb = KC.min(k - pc);
+            let mut ic = i0;
+            while ic < i1 {
+                let mb = MC.min(i1 - ic);
+                block(k, n, a, b, cbase, ic, pc, jc, mb, kb, nb);
+                ic += mb;
             }
         }
         jc += nb;
@@ -200,9 +241,13 @@ mod tests {
         use crate::util::prop::{check, gen};
         check("sgemm threaded==single", 0xF32F, 32, |rng, case| {
             let (dm, dk, dn) = gen::gemm_dims(rng, 90);
-            let (m, k, mut n) = (dm, dk, dn);
+            let (mut m, k, mut n) = (dm, dk, dn);
             if case % 3 == 0 {
                 n = (n / 32) * 32 + 1 + (n % 31); // straddle a stripe edge
+            } else if case % 3 == 1 {
+                // tall-skinny: force the row-stripe partition axis
+                m = m * 4 + 64;
+                n = (n % 24) + 1;
             }
             let mut a = vec![0.0f32; m * k];
             let mut b = vec![0.0f32; k * n];

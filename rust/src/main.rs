@@ -30,8 +30,11 @@
 //! (padded-token budget per batch for the budget policies and the
 //! online batcher), `--serial`, `--no-pin`, `--limit N`,
 //! `--gemm-threads N` (worker threads per GEMM; 0 = auto, flops-gated
-//! so decode-sized calls stay single-threaded; see also
-//! `QUANTNMT_GEMM_THREADS` / `QUANTNMT_ISA`).
+//! so calls too small to pay dispatch stay single-threaded; see also
+//! `QUANTNMT_GEMM_THREADS` / `QUANTNMT_ISA`), `--gemm-pool off|auto|N`
+//! (persistent GEMM worker pool: `auto` sizes to the thread budget,
+//! `N` caps the lane count, `off` falls back to per-call scoped
+//! spawns; see also `QUANTNMT_GEMM_POOL`).
 //!
 //! `serve` flags: `--shards N` (worker streams), `--max-wait-ms MS`
 //! (batching deadline), `--token-budget N`, `--batch N` (row cap),
@@ -117,6 +120,17 @@ fn parse_backend(args: &Args, svc: &Service) -> anyhow::Result<Backend> {
     })
 }
 
+/// `--gemm-pool off|auto|N` — persistent GEMM worker-pool sizing
+/// (absent flag = `Auto`, deferring to `QUANTNMT_GEMM_POOL` / the
+/// thread budget).
+fn parse_gemm_pool(args: &Args) -> anyhow::Result<quantnmt::gemm::PoolMode> {
+    match args.get("gemm-pool") {
+        None => Ok(quantnmt::gemm::PoolMode::Auto),
+        Some(v) => quantnmt::gemm::parse_pool_mode(v)
+            .ok_or_else(|| anyhow::anyhow!("unknown --gemm-pool '{v}' (valid: off|auto|N)")),
+    }
+}
+
 fn parse_config(args: &Args, svc: &Service) -> anyhow::Result<ServiceConfig> {
     let policy = PolicyKind::parse_or(args.get("policy"), PolicyKind::FixedCount)?;
     Ok(ServiceConfig {
@@ -134,6 +148,7 @@ fn parse_config(args: &Args, svc: &Service) -> anyhow::Result<ServiceConfig> {
         pin_cores: !args.flag("no-pin"),
         max_decode_len: args.get_usize("max-len", 56),
         gemm_threads: args.get_usize("gemm-threads", 0),
+        gemm_pool: parse_gemm_pool(args)?,
     })
 }
 
@@ -228,6 +243,7 @@ fn parse_server_config(args: &Args, svc: &Service) -> anyhow::Result<ServerConfi
             mb => Some(mb),
         },
         gemm_threads: args.get_usize("gemm-threads", 0),
+        gemm_pool: parse_gemm_pool(args)?,
         tenants: match args.get("tenants") {
             Some(path) => TenantSet::load(Path::new(path))?,
             None => TenantSet::single(),

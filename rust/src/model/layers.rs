@@ -597,6 +597,13 @@ fn site_qweight(plan: &CompiledPlan, site: SiteId) -> (&QWeight, usize, usize) {
 /// Corrected i32 accumulator of `a_q[rows, k] @ W[site]` into `sc.acc`
 /// (prepacked panel when the ISA packs, unpacked u8 otherwise — same
 /// dispatch as [`dense`]).
+///
+/// `threads = 0` (auto) lets `gemm::dispatch` size the fan-out per
+/// call: with the persistent worker pool enabled (the default), even
+/// decode-step shapes (`rows` = active slots, most visibly the
+/// `rows x vocab` logits head) clear the pooled crossover and go
+/// parallel; with `--gemm-pool off` they stay single-threaded behind
+/// the scoped-spawn crossover, exactly as before the pool existed.
 fn site_acc(
     plan: &CompiledPlan,
     sc: &mut QGemmScratch,

@@ -1,0 +1,179 @@
+//! Pool parity: pooled dispatch must be **bit-identical** to the
+//! scoped-spawn fallback and the single-threaded reference.
+//!
+//! The persistent GEMM worker pool (`gemm::pool`) changes *where*
+//! stripes run, never *what* they compute: stripes own disjoint output
+//! ranges and every kernel keeps its per-element k-summation order
+//! fixed, so the dispatch path must be invisible in the bits.  This
+//! suite pins that contract across the full grid the issue asks for —
+//! kernel choice x {on-the-fly packed, prepacked, requant-fused} x
+//! pool widths {1, 2, 4} x {pooled, `PoolMode::Off` scoped fallback} —
+//! plus a many-caller stress run over the shared pool.
+//!
+//! `set_gemm_pool` flips process-global state while the test harness
+//! runs other threads; that is safe *because of* the contract under
+//! test — every mode produces identical bytes, so a concurrent test
+//! observing a flipped mode still sees correct results.  (CI also
+//! reruns the whole suite under `QUANTNMT_GEMM_POOL=4` and `=off`.)
+
+use quantnmt::gemm::{
+    self, igemm_prepacked_scratch, igemm_requant_prepacked_s8, igemm_requant_s8,
+    igemm_with_threads, set_gemm_pool, KernelChoice, PackScratch, PackedB, PoolMode,
+    RequantParams,
+};
+use quantnmt::util::rng::SplitMix64;
+
+/// Kernel choices runnable on this host (Auto included so the resolved
+/// default is always in the parity set).
+fn host_choices() -> Vec<KernelChoice> {
+    let mut v = vec![KernelChoice::Auto, KernelChoice::Portable];
+    if gemm::avx2_available() {
+        v.push(KernelChoice::Avx2);
+    }
+    if gemm::detect_isa() == gemm::IsaLevel::Avx512Vnni {
+        v.push(KernelChoice::Vnni);
+    }
+    v
+}
+
+/// The rotating edge-shape schedule shared with the unit parity props:
+/// m == 1 (decode), ragged n % 32 (partial stripe / masked store),
+/// k % 4 (padded A-quad tail), tall-skinny (row-stripe axis), and an
+/// unconstrained shape.
+fn case_shape(rng: &mut SplitMix64, case: usize) -> (usize, usize, usize) {
+    let m = rng.range(1, 48) as usize;
+    let k = rng.range(1, 80) as usize;
+    let n = rng.range(1, 80) as usize;
+    match case % 5 {
+        0 => (1, k, n),
+        1 => (m, k, (n / 32) * 32 + 1 + (n % 31)),
+        2 => (m, (k / 4) * 4 + 1 + (k % 3), n),
+        3 => (96 + m * 4, k, 1 + n % 20), // tall-skinny: rows axis
+        _ => (m, k, n),
+    }
+}
+
+fn rand_operands(rng: &mut SplitMix64, m: usize, k: usize, n: usize) -> (Vec<i8>, Vec<u8>) {
+    let a: Vec<i8> = (0..m * k).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+    let b: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+    (a, b)
+}
+
+/// The dispatch modes under test.  `Lanes(1)` degenerates to inline
+/// execution, `Lanes(2)`/`Lanes(4)` exercise 2- and 4-wide pooled
+/// claims (clamped to the built team on narrow machines — still a
+/// valid parity point), `Off` is the scoped-spawn fallback.
+const MODES: [PoolMode; 5] = [
+    PoolMode::Auto,
+    PoolMode::Lanes(1),
+    PoolMode::Lanes(2),
+    PoolMode::Lanes(4),
+    PoolMode::Off,
+];
+
+#[test]
+fn pooled_scoped_and_single_thread_bit_parity() {
+    let choices = host_choices();
+    let mut rng = SplitMix64::new(0xB17_0F_9001);
+    for case in 0..20usize {
+        let (m, k, n) = case_shape(&mut rng, case);
+        let (a, b) = rand_operands(&mut rng, m, k, n);
+        // reference: single-threaded portable (threads = 1 never
+        // dispatches, whatever the pool mode)
+        let mut want = vec![0i32; m * n];
+        igemm_with_threads(KernelChoice::Portable, 1, m, k, n, &a, &b, &mut want);
+        let bp = PackedB::pack(&b, k, n);
+        let mut apack = Vec::new();
+        let mut c = vec![0i32; m * n];
+        for &mode in &MODES {
+            set_gemm_pool(mode);
+            for &choice in &choices {
+                for threads in [1usize, 2, 4] {
+                    c.fill(-1);
+                    igemm_with_threads(choice, threads, m, k, n, &a, &b, &mut c);
+                    assert_eq!(c, want, "{mode:?} {choice:?} t={threads} packed ({m},{k},{n})");
+                    c.fill(-1);
+                    igemm_prepacked_scratch(choice, threads, m, k, &a, &bp, &mut c, &mut apack);
+                    assert_eq!(c, want, "{mode:?} {choice:?} t={threads} prepacked ({m},{k},{n})");
+                }
+            }
+        }
+        set_gemm_pool(PoolMode::Auto);
+    }
+}
+
+#[test]
+fn requant_fused_bit_parity_across_modes() {
+    let choices = host_choices();
+    let mut rng = SplitMix64::new(0xF0_5ED);
+    for case in 0..10usize {
+        let (m, k, n) = case_shape(&mut rng, case);
+        let (a, b) = rand_operands(&mut rng, m, k, n);
+        let rp = RequantParams {
+            in_zero: if case % 2 == 0 { 0 } else { 3 },
+            mult: (0..n).map(|j| 0.002 + (j % 7) as f32 * 0.001).collect(),
+            out_zero: -2,
+            bias: Some((0..n).map(|j| (j as i32 % 9) * 100 - 400).collect()),
+            relu: case % 3 == 0,
+        };
+        let bp = PackedB::pack(&b, k, n);
+        let colsum: Vec<i32> =
+            (0..n).map(|j| (0..k).map(|p| b[p * n + j] as i32).sum()).collect();
+        // reference: single-threaded portable fused call
+        let mut want = vec![0i8; m * n];
+        let (mut acc, mut ws) = (Vec::new(), PackScratch::default());
+        igemm_requant_s8(
+            KernelChoice::Portable, 1, m, k, n, &a, &b, &rp, &mut want, &mut acc, &mut ws,
+        );
+        let mut out = vec![0i8; m * n];
+        let mut a_pack = Vec::new();
+        for &mode in &MODES {
+            set_gemm_pool(mode);
+            for &choice in &choices {
+                for threads in [1usize, 2, 4] {
+                    out.fill(-1);
+                    igemm_requant_s8(
+                        choice, threads, m, k, n, &a, &b, &rp, &mut out, &mut acc, &mut ws,
+                    );
+                    assert_eq!(out, want, "{mode:?} {choice:?} t={threads} fused ({m},{k},{n})");
+                    out.fill(-1);
+                    igemm_requant_prepacked_s8(
+                        choice, threads, m, k, &a, &bp, &colsum, &rp, &mut out, &mut acc,
+                        &mut a_pack,
+                    );
+                    assert_eq!(
+                        out, want,
+                        "{mode:?} {choice:?} t={threads} fused prepacked ({m},{k},{n})"
+                    );
+                }
+            }
+        }
+        set_gemm_pool(PoolMode::Auto);
+    }
+}
+
+/// Many small GEMMs submitted from several caller threads at once: the
+/// submit lock's try-lock discipline means losers run inline, so this
+/// must neither deadlock nor corrupt a single byte.
+#[test]
+fn pool_stress_many_callers_many_small_gemms() {
+    set_gemm_pool(PoolMode::Auto);
+    std::thread::scope(|scope| {
+        for t in 0..4usize {
+            scope.spawn(move || {
+                let mut rng = SplitMix64::new(0xC0FFEE + t as u64);
+                for round in 0..60usize {
+                    let (m, k, n) = case_shape(&mut rng, round + t);
+                    let (a, b) = rand_operands(&mut rng, m, k, n);
+                    let mut want = vec![0i32; m * n];
+                    igemm_with_threads(KernelChoice::Portable, 1, m, k, n, &a, &b, &mut want);
+                    let mut c = vec![0i32; m * n];
+                    // explicit threads=4 forces the dispatch layer in
+                    // even for sub-crossover shapes
+                    igemm_with_threads(KernelChoice::Auto, 4, m, k, n, &a, &b, &mut c);
+                    assert_eq!(c, want, "caller {t} round {round} ({m},{k},{n})");
+                }
+            });
+        }
+    });
+}
